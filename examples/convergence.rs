@@ -1,0 +1,39 @@
+//! Fig. 1 driver: convergence of the gradient-projection solver on the
+//! paper's 4-job instance, printed as an iteration table and written to
+//! results/fig1_convergence.csv.  When artifacts are present the same
+//! trace is pulled from the AOT-compiled JAX module and diffed against
+//! the rust solver.
+//!
+//!     cargo run --release --example convergence
+
+use std::path::Path;
+
+use specsim::figures::{fig1, Scale};
+
+fn main() -> Result<(), String> {
+    fig1::run(Path::new("results"), "artifacts", Scale::full())?;
+    // print a compact view of the trace
+    let trace = fig1::rust_trace();
+    println!("\niter   c_l1     c_l2     c_l3     c_l4");
+    for k in [0usize, 1, 2, 5, 10, 20, 50, 100, 200, trace.len() - 1] {
+        let c = &trace[k];
+        println!(
+            "{k:>4}  {:>6.3}  {:>6.3}  {:>6.3}  {:>6.3}",
+            c[0], c[1], c[2], c[3]
+        );
+    }
+    match fig1::pjrt_trace("artifacts") {
+        Ok(pjrt) => {
+            let (a, b) = (trace.last().unwrap(), pjrt.last().unwrap());
+            println!("\npjrt final:  [{:.3}, {:.3}, {:.3}, {:.3}]", b[0], b[1], b[2], b[3]);
+            let max_diff = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f64, f64::max);
+            println!("max |rust - pjrt| at convergence: {max_diff:.4}");
+        }
+        Err(e) => println!("\n(pjrt trace unavailable: {e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! End-to-end driver (Fig. 2): the paper's lightly loaded experiment —
+//! SCA and SDA against the Mantri baseline on the full multi-job workload,
+//! producing the flowtime/resource CMFs and the headline "~60% lower mean
+//! flowtime" comparison.  Results are recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example lightly_loaded            # full scale
+//!     SPECSIM_SCALE=0.1 cargo run --release --example lightly_loaded
+//!
+//! Full scale matches the paper: M = 3000, lambda = 6, horizon 1500,
+//! 3 seeds (~27000 jobs).  Requires `make artifacts` for the PJRT path
+//! (falls back to the pure-rust solver with a warning otherwise).
+
+use std::path::Path;
+
+use specsim::figures::{fig2, Scale};
+
+fn main() -> Result<(), String> {
+    let scale = std::env::var("SPECSIM_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(Scale)
+        .unwrap_or(Scale::full());
+    println!("running Fig. 2 at scale {} (SPECSIM_SCALE to change)\n", scale.0);
+    fig2::run(Path::new("results"), "artifacts", scale)?;
+    println!("\nCSV series: results/fig2a_flowtime_cmf.csv, results/fig2b_resource_cmf.csv");
+    Ok(())
+}

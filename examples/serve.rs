@@ -1,0 +1,73 @@
+//! Live-serving demo: spin up the coordinator master (own thread, paced
+//! scheduling slots, watermark backpressure) and drive it with a bursty
+//! Poisson client — the deployable face of the library.  Python is nowhere
+//! on this path; with artifacts built, SCA's P2 solves go through PJRT.
+//!
+//!     cargo run --release --example serve
+
+use std::time::Duration;
+
+use specsim::config::SimConfig;
+use specsim::coordinator::backpressure::Backpressure;
+use specsim::coordinator::master::{Master, Submission};
+use specsim::scheduler::SchedulerKind;
+use specsim::stats::Pcg64;
+
+fn main() -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    cfg.machines = 128;
+    cfg.horizon = f64::INFINITY;
+    cfg.scheduler = SchedulerKind::Sda;
+    cfg.use_runtime = false;
+
+    let mut master = Master::new(cfg);
+    master.tick = Duration::from_millis(1); // 1 ms of wall time per slot
+    master.backpressure = Backpressure::from_capacity(128, 4.0, 12.0);
+    let metrics = master.metrics.clone();
+    let handle = master.spawn()?;
+
+    println!("master up: 128 machines, SDA policy, 1ms slots");
+    let mut rng = Pcg64::new(7, 0);
+    let (mut accepted, mut throttled, mut rejected) = (0u32, 0u32, 0u32);
+    // two phases: steady trickle, then a burst that trips backpressure
+    for phase in 0..2 {
+        let (jobs, pause_ms) = if phase == 0 { (150, 2.0) } else { (400, 0.05) };
+        for _ in 0..jobs {
+            std::thread::sleep(Duration::from_secs_f64(
+                rng.exponential(1000.0 / pause_ms) ,
+            ));
+            let sub = Submission {
+                num_tasks: rng.uniform_u64(1, 40) as u32,
+                mean_duration: rng.uniform_f64(1.0, 4.0),
+                alpha: 2.0,
+            };
+            match handle.submit(sub)? {
+                specsim::coordinator::master::SubmitResult::Accepted { throttled: t, .. } => {
+                    accepted += 1;
+                    throttled += t as u32;
+                }
+                specsim::coordinator::master::SubmitResult::Rejected => rejected += 1,
+            }
+        }
+        println!(
+            "phase {phase}: accepted={accepted} throttled={throttled} rejected={rejected} \
+             queued_tasks={} busy={}",
+            metrics.gauge("queued_tasks").get(),
+            metrics.gauge("busy_machines").get()
+        );
+    }
+    println!("draining...");
+    let report = handle.shutdown()?;
+    println!(
+        "completed {} jobs over {} slots; utilization {:.3}; rejected {}",
+        report.completed.len(),
+        report.slots,
+        report.utilization,
+        report.rejected
+    );
+    let mean_flow = report.completed.iter().map(|r| r.flowtime).sum::<f64>()
+        / report.completed.len().max(1) as f64;
+    println!("mean flowtime: {mean_flow:.2} virtual time units");
+    println!("\n--- final metrics ---\n{}", metrics.render());
+    Ok(())
+}

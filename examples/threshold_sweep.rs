@@ -1,0 +1,35 @@
+//! Cutoff-threshold driver (Sec. III-B): compute lambda^U analytically and
+//! sweep the arrival rate across it, showing blanket cloning flip from a
+//! win to a loss — the boundary between the SCA/SDA regime and the ESE
+//! regime.
+//!
+//!     cargo run --release --example threshold_sweep
+
+use std::path::Path;
+
+use specsim::analysis::threshold;
+use specsim::figures::{threshold as fig, Scale};
+
+fn main() -> Result<(), String> {
+    // the paper's cluster
+    let rep = threshold::cutoff_lambda(3000, 50.5, 2.5, 2.0);
+    println!("paper set-up (M=3000, E[m]=50.5, E[s]=2.5, alpha=2):");
+    println!("  omega stability bound (Thm 1) = {:.4}", rep.omega_stability);
+    println!("  omega cutoff                  = {:.4}", rep.omega_cutoff);
+    println!("  lambda^U                      = {:.2} jobs/unit", rep.lambda_cutoff);
+    println!(
+        "  -> lambda=6 (Fig 2) is LIGHTLY loaded; lambda=30/40 (Fig 6) HEAVILY loaded\n"
+    );
+    // alpha > 2: the cutoff moves inside the stable region
+    for alpha in [2.5, 3.0, 4.0] {
+        let r = threshold::cutoff_lambda(3000, 50.5, 2.5, alpha);
+        println!(
+            "alpha={alpha}: omega_cutoff={:.4} (stability {:.4}) lambda^U={:.2}",
+            r.omega_cutoff, r.omega_stability, r.lambda_cutoff
+        );
+    }
+    println!();
+    fig::run(Path::new("results"), "artifacts", Scale(0.5))?;
+    println!("\nCSVs: results/threshold_analytic.csv, results/threshold_empirical.csv");
+    Ok(())
+}

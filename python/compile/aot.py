@@ -1,0 +1,170 @@
+# Emit HLO text (NOT .serialize()) — jax >= 0.5 writes HloModuleProto with
+# 64-bit instruction ids which the runtime's xla_extension 0.5.1 rejects
+# (`proto.id() <= INT_MAX`); the HLO *text* parser reassigns ids and
+# round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+"""AOT compile path: lower every L2 entry point to artifacts/*.hlo.txt.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Writes one HLO text file per entry point plus manifest.json describing the
+exact input/output shapes and the static grids the rust runtime needs to
+interpret the outputs.  `make artifacts` invokes this once; nothing in this
+package is imported at run time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import grids
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    CRITICAL: print with ``print_large_constants`` — the default printer
+    elides arrays beyond a handful of elements as ``constant({...})``, which
+    the 0.5.1 text parser silently reads as zeros (the quadrature weight
+    vectors and clone-count grids are baked-in constants).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8's metadata carries source_end_line/column attributes the 0.5.1
+    # text parser rejects; drop metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived the printer"
+    return text
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """name -> (fn, example_args, manifest entry)."""
+    B, S, C, K = grids.B, grids.S, model.SDA_C, grids.P2_ITERS
+    batch = [_f32(B), _f32(B), _f32(B), _f32(B)]
+
+    def p2_solver(mu, m, age, mask, params):
+        return model.p2_solve(mu, m, age, mask, params)
+
+    def p2_trace(mu, m, age, mask, params):
+        return model.p2_solve_traced(mu, m, age, mask, params)
+
+    def sigma_curve(params):
+        return model.sigma_curve(params)
+
+    def sda_opt(params):
+        return model.sda_opt(params)
+
+    return {
+        "p2_solver": (
+            p2_solver,
+            batch + [_f32(4)],
+            {
+                "inputs": [
+                    {"name": "mu", "shape": [B]},
+                    {"name": "m", "shape": [B]},
+                    {"name": "age", "shape": [B]},
+                    {"name": "mask", "shape": [B]},
+                    {"name": "params(n_avail,gamma,r,alpha)", "shape": [4]},
+                ],
+                "outputs": [
+                    {"name": "c_star", "shape": [B]},
+                    {"name": "nu", "shape": []},
+                    {"name": "obj", "shape": []},
+                ],
+            },
+        ),
+        "p2_trace": (
+            p2_trace,
+            batch + [_f32(4)],
+            {
+                "inputs": [
+                    {"name": "mu", "shape": [B]},
+                    {"name": "m", "shape": [B]},
+                    {"name": "age", "shape": [B]},
+                    {"name": "mask", "shape": [B]},
+                    {"name": "params(n_avail,gamma,r,alpha)", "shape": [4]},
+                ],
+                "outputs": [
+                    {"name": "c_trace", "shape": [K, B]},
+                    {"name": "nu_trace", "shape": [K]},
+                ],
+            },
+        ),
+        "sigma_curve": (
+            sigma_curve,
+            [_f32(1)],
+            {
+                "inputs": [{"name": "params(alpha)", "shape": [1]}],
+                "outputs": [
+                    {"name": "sigma_grid", "shape": [S]},
+                    {"name": "e_resource", "shape": [S]},
+                ],
+            },
+        ),
+        "sda_opt": (
+            sda_opt,
+            [_f32(2)],
+            {
+                "inputs": [{"name": "params(alpha,s)", "shape": [2]}],
+                "outputs": [
+                    {"name": "tau", "shape": [S, C]},
+                    {"name": "resource", "shape": [S, C]},
+                ],
+            },
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single entry point")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "statics": {
+            "batch": grids.B,
+            "c_grid": {"lo": 1.0, "hi": grids.C_MAX, "n": grids.G},
+            "sigma_grid": {"lo": grids.SIGMA_LO, "hi": grids.SIGMA_HI, "n": grids.S},
+            "sda_c_max": model.SDA_C,
+            "p2_iters": grids.P2_ITERS,
+            "etas": list(model.ETAS),
+        },
+        "artifacts": {},
+    }
+    for name, (fn, example, entry) in entry_points().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = f"{name}.hlo.txt"
+        manifest["artifacts"][name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

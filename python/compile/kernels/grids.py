@@ -1,0 +1,85 @@
+"""Shared quadrature grids for the Pallas kernels and the jnp oracle.
+
+All expectation integrals in the paper reduce, after normalizing task
+durations by the Pareto scale (``t = mu * u``) or by the mean (``E[x] = 1``),
+to integrals of smooth survival-power integrands over ``[0, inf)`` with
+polynomial tails.  We evaluate them with trapezoid quadrature on log-spaced
+grids; the change of variables ``u = exp(x)`` folds the Jacobian into the
+weights so kernels only ever do an elementwise stage followed by a weighted
+reduction.
+
+The grid shapes here are the *static* shapes baked into the AOT artifacts —
+rust never re-derives them; it reads artifacts/manifest.json.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --- static shapes baked into the AOT artifacts -------------------------
+B = 64  # P2 batch: max pending jobs solved per scheduling slot
+G = 64  # candidate clone-count grid size (c in [1, C_MAX])
+T = 1024  # outer quadrature grid (flowtime / tau integrals)
+TE = 512  # outer t-grid for the ESE resource integral
+V = 128  # inner asktime grid for the ESE resource integral
+S = 128  # sigma grid size
+C_MAX = 16.0  # upper end of the clone-count grid
+SIGMA_LO, SIGMA_HI = 0.05, 6.0
+P2_ITERS = 250  # dual gradient-projection iterations (fixed, unrolled by scan)
+
+
+def c_grid() -> np.ndarray:
+    """Candidate clone counts: [1, C_MAX], G points (first point exactly 1)."""
+    return np.linspace(1.0, C_MAX, G, dtype=np.float32)
+
+
+def sigma_grid() -> np.ndarray:
+    """Straggler-threshold multipliers sigma, (0, 6]."""
+    return np.linspace(SIGMA_LO, SIGMA_HI, S, dtype=np.float32)
+
+
+def log_trap(lo: float, hi: float, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Log-spaced nodes ``u`` on [lo, hi] and trapezoid weights for
+    ``integral g(u) du`` (Jacobian folded in): returns (u, w) with
+    ``sum(w * g(u)) ~ integral_lo^hi g``."""
+    x = np.linspace(np.log(lo), np.log(hi), n)
+    u = np.exp(x)
+    dx = x[1] - x[0]
+    wx = np.full(n, dx)
+    wx[0] *= 0.5
+    wx[-1] *= 0.5
+    return u.astype(np.float32), (wx * u).astype(np.float32)
+
+
+def flow_grid() -> tuple[np.ndarray, np.ndarray]:
+    """Grid for the normalized flowtime integral
+    ``I(beta, m) = 1 + integral_1^inf (1 - (1 - u^-beta)^m) du``.
+
+    Tail beyond U contributes ~ m * U^(1-beta) / (beta-1); with beta >= 2
+    and m <= 1e4, U = 1e7 keeps it < 1e-3 absolute.
+    """
+    return log_trap(1.0, 1.0e7, T)
+
+
+def tau_grid() -> tuple[np.ndarray, np.ndarray]:
+    """Grid for the SDA tau integral over t in (0, inf) (unit-mean Pareto).
+
+    The integrand is bounded by 1 and supported essentially on
+    [mu*(1-s), ~1e5]; mu >= 1/2 for alpha >= 2 wait-free lower bound 1e-3."""
+    return log_trap(1.0e-3, 1.0e5, T)
+
+
+def ese_t_grid() -> tuple[np.ndarray, np.ndarray]:
+    """Outer grid over task durations t for the ESE resource integral
+    (unit-mean Pareto; mu = (alpha-1)/alpha >= 1/4 for alpha in [4/3, inf))."""
+    return log_trap(1.0e-2, 1.0e5, TE)
+
+
+def unit_trap(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Linear nodes/weights on [0, 1] for the inner asktime integral."""
+    v = np.linspace(0.0, 1.0, n)
+    dv = v[1] - v[0]
+    w = np.full(n, dv)
+    w[0] *= 0.5
+    w[-1] *= 0.5
+    return v.astype(np.float32), w.astype(np.float32)

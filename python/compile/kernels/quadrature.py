@@ -1,0 +1,209 @@
+"""L1 Pallas kernels: batched survival-power quadrature.
+
+Every expectation the paper's optimizers need reduces to quadrature of
+survival-power integrands on a shared normalized grid (see grids.py).  The
+kernels below implement those reductions as Pallas kernels:
+
+  elementwise stage (pow/exp/log1p in VMEM)  ->  weighted reduction (matvec)
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and this whole package only runs at build time.  The
+BlockSpec structure is nevertheless written the way a real TPU lowering
+wants it — tile over the batch axis, keep the quadrature grid resident in
+VMEM, reduce against a broadcast weight vector (DESIGN.md §2).
+
+Correctness oracle: ``ref.py``; pytest asserts allclose on every kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import grids
+
+# batch-axis block sizes (VMEM budget math in DESIGN.md §2)
+B_BLK = 8  # flowtime kernel: [B_BLK, G, T] f32 tile ~= 4 MiB
+S_BLK = 8  # sigma kernels:   [S_BLK, TE, V] f32 tile ~= 2 MiB
+
+_INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls
+
+
+# ---------------------------------------------------------------------------
+# flowtime table kernel
+# ---------------------------------------------------------------------------
+
+
+def _flowtime_kernel(m_ref, beta_ref, logu_ref, w_ref, out_ref):
+    """out[b, g] = 1 + sum_t w_t * (1 - (1 - u_t^-beta_g)^m_b)."""
+    m = m_ref[...]  # [B_BLK]
+    beta = beta_ref[...]  # [G]
+    logu = logu_ref[...]  # [T]
+    w = w_ref[...]  # [T]
+    # survival of the per-task min at t = mu * u: p[g, t] = u^-beta
+    logp = -beta[:, None] * logu[None, :]  # [G, T] (<= 0)
+    p = jnp.exp(logp)
+    # stable 1 - (1-p)^m: -expm1(m * log1p(-p)); log1p(-1) = -inf is exact.
+    base = jnp.log1p(-jnp.minimum(p, 1.0))  # [G, T]
+    integ = -jnp.expm1(m[:, None, None] * base[None, :, :])  # [B_BLK, G, T]
+    out_ref[...] = 1.0 + jax.lax.dot_general(
+        integ.reshape(-1, integ.shape[-1]),
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(m.shape[0], beta.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def flowtime_table(m, beta):
+    """Pallas version of ref.flowtime_table: [B],[G] -> [B,G]."""
+    u, w = grids.flow_grid()
+    logu = jnp.log(jnp.asarray(u))
+    w = jnp.asarray(w)
+    b, g, t = m.shape[0], beta.shape[0], logu.shape[0]
+    assert b % B_BLK == 0, f"batch {b} must be a multiple of {B_BLK}"
+    return pl.pallas_call(
+        _flowtime_kernel,
+        grid=(b // B_BLK,),
+        in_specs=[
+            pl.BlockSpec((B_BLK,), lambda i: (i,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((B_BLK, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g), jnp.float32),
+        interpret=_INTERPRET,
+    )(m, beta, logu, w)
+
+
+# ---------------------------------------------------------------------------
+# SDA tau kernel:  tau[s, c] = c * int_0^inf S(t)^(c-1) S(max(t/(1-s), L))/S(L) dt
+# ---------------------------------------------------------------------------
+
+
+def _sda_tau_kernel(sigma_ref, c_ref, scal_ref, t_ref, w_ref, out_ref):
+    sigma = sigma_ref[...]  # [S_BLK]
+    c = c_ref[...]  # [C]
+    alpha = scal_ref[0]
+    s = scal_ref[1]
+    t = t_ref[...]  # [T]
+    w = w_ref[...]  # [T]
+    mu = (alpha - 1.0) / alpha
+    logmu = jnp.log(mu)
+    L = jnp.maximum(mu, sigma / (1.0 - s))  # [S_BLK]
+    log_sl = alpha * (logmu - jnp.log(L))  # log S(L) (L >= mu)
+    # log survival of a fresh copy at t:  min(0, alpha*(log mu - log t))
+    log_sf = jnp.minimum(0.0, alpha * (logmu - jnp.log(t)))  # [T]
+    pow_fresh = jnp.exp((c[:, None] - 1.0) * log_sf[None, :])  # [C, T]
+    targ = jnp.maximum(t[None, :] / (1.0 - s), L[:, None])  # [S_BLK, T]
+    sf_orig = jnp.exp(
+        jnp.minimum(0.0, alpha * (logmu - jnp.log(targ))) - log_sl[:, None]
+    )  # [S_BLK, T]
+    prod = sf_orig[:, None, :] * pow_fresh[None, :, :]  # [S_BLK, C, T]
+    tail = jax.lax.dot_general(
+        prod.reshape(-1, prod.shape[-1]),
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(sigma.shape[0], c.shape[0])
+    out_ref[...] = c[None, :] * tail
+
+
+def sda_tau(alpha, s, sigma, c):
+    """Pallas version of ref.sda_tau: scalars + [S],[C] -> [S,C]."""
+    t, w = grids.tau_grid()
+    t, w = jnp.asarray(t), jnp.asarray(w)
+    ns, nc, nt = sigma.shape[0], c.shape[0], t.shape[0]
+    assert ns % S_BLK == 0, f"sigma grid {ns} must be a multiple of {S_BLK}"
+    scal = jnp.stack([jnp.asarray(alpha, jnp.float32), jnp.asarray(s, jnp.float32)])
+    return pl.pallas_call(
+        _sda_tau_kernel,
+        grid=(ns // S_BLK,),
+        in_specs=[
+            pl.BlockSpec((S_BLK,), lambda i: (i,)),
+            pl.BlockSpec((nc,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((nt,), lambda i: (0,)),
+            pl.BlockSpec((nt,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((S_BLK, nc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ns, nc), jnp.float32),
+        interpret=_INTERPRET,
+    )(sigma, c, scal, t, w)
+
+
+# ---------------------------------------------------------------------------
+# ESE resource kernel: double quadrature over (t, asktime) per sigma
+# ---------------------------------------------------------------------------
+
+
+def _ese_kernel(sigma_ref, scal_ref, t_ref, wt_ref, v_ref, wv_ref, out_ref):
+    sigma = sigma_ref[...]  # [S_BLK]
+    alpha = scal_ref[0]
+    t = t_ref[...]  # [TE]
+    wt = wt_ref[...]  # [TE]
+    v = v_ref[...]  # [V]
+    wv = wv_ref[...]  # [V]
+    mu = (alpha - 1.0) / alpha
+    logmu = jnp.log(mu)
+
+    # term1: E[x; x <= max(sigma, mu)] closed form
+    L1 = jnp.maximum(sigma, mu)
+    sl1 = jnp.exp(alpha * (logmu - jnp.log(L1)))
+    term1 = jnp.where(sigma >= mu, 1.0 - L1 * sl1 * alpha / (alpha - 1.0), 0.0)
+
+    # term2 inner: for x = t > L1, asktime A = (t - sigma) * v
+    span = jnp.maximum(t[None, :] - sigma[:, None], 0.0)  # [S_BLK, TE]
+    x_ask = span[:, :, None] * v[None, None, :]  # [S_BLK, TE, V]
+    rem = jnp.maximum(t[None, :, None] - x_ask, 0.0)
+    # E[min(rem, t_new)] closed form (integral of survival):
+    head = jnp.minimum(rem, mu)
+    tail = (mu / (alpha - 1.0)) * -jnp.expm1(
+        (alpha - 1.0) * (logmu - jnp.log(jnp.maximum(rem, mu)))
+    )
+    inner = x_ask + 2.0 * (head + tail)  # [S_BLK, TE, V]
+    inner_int = jax.lax.dot_general(
+        inner.reshape(-1, inner.shape[-1]),
+        wv,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(span.shape)  # [S_BLK, TE]
+    cond = sigma[:, None] + (span / t[None, :]) * inner_int
+    logf = jnp.log(alpha) + alpha * logmu - (alpha + 1.0) * jnp.log(t)  # [TE]
+    f = jnp.exp(logf)[None, :] * (t[None, :] > L1[:, None])
+    term2 = jax.lax.dot_general(
+        cond * f,
+        wt,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = term1 + term2
+
+
+def ese_resource(alpha, sigma):
+    """Pallas version of ref.ese_resource: scalar alpha + [S] -> [S]."""
+    t, wt = grids.ese_t_grid()
+    v, wv = grids.unit_trap(grids.V)
+    t, wt, v, wv = map(jnp.asarray, (t, wt, v, wv))
+    ns = sigma.shape[0]
+    assert ns % S_BLK == 0
+    scal = jnp.stack([jnp.asarray(alpha, jnp.float32)])
+    return pl.pallas_call(
+        _ese_kernel,
+        grid=(ns // S_BLK,),
+        in_specs=[
+            pl.BlockSpec((S_BLK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((t.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((t.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((v.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((v.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((S_BLK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ns,), jnp.float32),
+        interpret=_INTERPRET,
+    )(sigma, scal, t, wt, v, wv)

@@ -1,0 +1,217 @@
+"""Pure-jnp oracle for every L1 kernel — the CORE correctness signal.
+
+Each function here computes exactly what the corresponding Pallas kernel in
+``quadrature.py`` computes, with the same grids, but written as plain
+vectorized jnp.  pytest asserts kernel-vs-ref allclose; the model layer
+(``model.py``) can also be built against the oracle (``use_pallas=False``)
+to isolate kernel bugs from model bugs.
+
+Paper mapping (Xu & Lau 2014):
+  * ``flowtime_table``  — E[max_j min_k t_jk] under Pareto, Eq.(11)-(12)
+  * ``emin_coeff``      — E[min of c Pareto copies] / mu, Sec. III-B
+  * ``sda_tau``         — E[c * d | straggler detected], Eq.(26)
+  * ``sda_resource``    — per-task resource objective of P3, Eq.(21)-(28)
+  * ``ese_resource``    — E[R_j^i] of the ESE analysis, Eq.(30)-(33)
+  * ``p2_score_table`` / ``p2_dual_step`` — gradient projection, Sec. IV-A
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import grids
+
+_NEG = -1.0e30  # score mask value
+
+
+# ---------------------------------------------------------------------------
+# survival helpers (Pareto(mu, alpha): S(t) = min(1, (mu/t)^alpha))
+# ---------------------------------------------------------------------------
+
+
+def pareto_sf(t, mu, alpha):
+    """Pareto survival function, elementwise, safe at t <= mu and t = 0."""
+    t = jnp.maximum(t, 1e-30)
+    return jnp.minimum(1.0, jnp.exp(alpha * (jnp.log(mu) - jnp.log(t))))
+
+
+def survival_power(p, k):
+    """(1 - (1 - p)^k) computed stably for p in [0, 1], k >= 0."""
+    # log1p(-p) -> -inf at p=1; k * -inf -> -inf; -expm1(-inf) -> 1.  exact.
+    return -jnp.expm1(k * jnp.log1p(-jnp.minimum(p, 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# flowtime table: I(beta, m) = E[max of m mins] / mu  (normalized)
+# ---------------------------------------------------------------------------
+
+
+def flowtime_table(m, beta):
+    """Normalized expected job span E[d]/mu (Eq.11-12).
+
+    Args:
+      m:    [B]  number of tasks per job (float, >= 1)
+      beta: [G]  alpha * c for each candidate clone count c (> 1)
+
+    Returns:
+      I: [B, G] with E[max_{j<=m} min_{k<=c} t_jk] = mu * I(alpha*c, m).
+    """
+    u, w = grids.flow_grid()  # [T], [T]
+    u, w = jnp.asarray(u), jnp.asarray(w)
+    # p[g, t] = u_t^(-beta_g): survival of the per-task min at t = mu*u.
+    p = jnp.exp(-beta[:, None] * jnp.log(u)[None, :])  # [G, T]
+    integ = survival_power(p[None, :, :], m[:, None, None])  # [B, G, T]
+    return 1.0 + jnp.einsum("bgt,t->bg", integ, w)
+
+
+def emin_coeff(beta):
+    """E[min of c Pareto(mu, alpha) copies]/mu = beta/(beta-1), beta = alpha*c."""
+    return beta / (beta - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# SDA (P3): tau and the per-task resource objective
+# ---------------------------------------------------------------------------
+
+
+def sda_tau(alpha, s, sigma, c):
+    """E[c * d | straggler detected] for unit-mean Pareto tasks (Eq.26).
+
+    d = min((1-s) * t1, min of c-1 fresh copies), conditioned on the
+    detection event (1-s) * t1 > sigma * E[x] (E[x] = 1).
+
+    Args:
+      alpha: scalar heavy-tail order (> 1)
+      s:     scalar detection fraction in (0, 1)
+      sigma: [S] threshold multipliers
+      c:     [C] total copy counts (>= 1; c = 1 means no duplicate)
+
+    Returns: tau [S, C]
+    """
+    mu = (alpha - 1.0) / alpha  # unit mean
+    t, w = grids.tau_grid()
+    t, w = jnp.asarray(t), jnp.asarray(w)
+    L = jnp.maximum(mu, sigma / (1.0 - s))  # [S]
+    s_l = pareto_sf(L, mu, alpha)  # [S]
+    # P(d > t) = S(t)^(c-1) * S(max(t/(1-s), L)) / S(L)
+    sf_fresh = pareto_sf(t, mu, alpha)  # [T]
+    pow_fresh = jnp.exp(
+        (c[:, None] - 1.0) * jnp.log(jnp.maximum(sf_fresh, 1e-38))[None, :]
+    )  # [C, T]
+    sf_orig = (
+        pareto_sf(jnp.maximum(t[None, :] / (1.0 - s), L[:, None]), mu, alpha)
+        / s_l[:, None]
+    )  # [S, T]
+    tail = jnp.einsum("st,ct,t->sc", sf_orig, pow_fresh, w)  # [S, C]
+    return c[None, :] * tail
+
+
+def sda_resource(alpha, s, sigma, c):
+    """Unconditional per-task resource E[R] (unit-mean Pareto), Eq.(21).
+
+    R = t1 when no straggler is detected; R = s*t1 + c*d when one is:
+      E[R] = s*E[t1] + (1-s)*E[t1; t1 <= L] + P(t1 > L) * tau(c, sigma).
+
+    Returns [S, C].
+    """
+    mu = (alpha - 1.0) / alpha
+    L = jnp.maximum(mu, sigma / (1.0 - s))
+    s_l = pareto_sf(L, mu, alpha)
+    # E[t1; t1 > L] = L * S(L) * alpha/(alpha-1) for L >= mu
+    e_tail = L * s_l * alpha / (alpha - 1.0)
+    e_head = 1.0 - e_tail
+    tau = sda_tau(alpha, s, sigma, c)
+    return s + (1.0 - s) * e_head[:, None] + s_l[:, None] * tau
+
+
+# ---------------------------------------------------------------------------
+# ESE heavy-load analysis: E[R](sigma) per Eq.(30)-(33)
+# ---------------------------------------------------------------------------
+
+
+def emin_fresh(tau, mu, alpha):
+    """E[min(tau, t_new)] = integral_0^tau S(w) dw for Pareto(mu, alpha)."""
+    tau = jnp.maximum(tau, 0.0)
+    head = jnp.minimum(tau, mu)
+    tail = (mu / (alpha - 1.0)) * -jnp.expm1(
+        (alpha - 1.0) * (jnp.log(mu) - jnp.log(jnp.maximum(tau, mu)))
+    )
+    return head + tail
+
+
+def ese_resource(alpha, sigma):
+    """E[R]/E[x] of a single task under the ESE asktime model (Fig. 4).
+
+    Unit-mean Pareto; a running task of (hidden) duration t is checked at an
+    asktime uniform on [0, t]; a duplicate is launched if the remaining time
+    t - A exceeds sigma * E[x] (Eq.30-33).
+
+    Returns: [S]
+    """
+    mu = (alpha - 1.0) / alpha
+    t, wt = grids.ese_t_grid()
+    v, wv = grids.unit_trap(grids.V)
+    t, wt, v, wv = map(jnp.asarray, (t, wt, v, wv))
+    sig = jnp.asarray(sigma)
+
+    # term1: tasks with x <= sigma never duplicate: E[x; x <= sigma]
+    # (E[x; x <= L] = 1 - L*S(L)*alpha/(alpha-1) for L >= mu, 0 for L < mu)
+    L1 = jnp.maximum(sig, mu)
+    term1 = jnp.where(
+        sig >= mu,
+        1.0 - L1 * pareto_sf(L1, mu, alpha) * alpha / (alpha - 1.0),
+        0.0,
+    )
+
+    # term2: tasks with x = t > max(sigma, mu):
+    #   E[R | x=t] = sigma + ((t-sigma)/t) * int_0^1 [(t-sigma)v
+    #                + 2*emin_fresh(t - (t-sigma)v)] dv       (Eq.32-33)
+    span = jnp.maximum(t[None, :] - sig[:, None], 0.0)  # [S, T]
+    x_ask = span[:, :, None] * v[None, None, :]  # [S, T, V]
+    rem = t[None, :, None] - x_ask  # duration left when duplicated
+    inner = x_ask + 2.0 * emin_fresh(rem, mu, alpha)  # [S, T, V]
+    inner_int = jnp.einsum("stv,v->st", inner, wv)  # [S, T]
+    cond = sig[:, None] + (span / t[None, :]) * inner_int  # [S, T]
+    # density f(t) = alpha * mu^alpha * t^-(alpha+1), support t >= mu
+    logf = jnp.log(alpha) + alpha * jnp.log(mu) - (alpha + 1.0) * jnp.log(t)
+    f = jnp.exp(logf)[None, :] * (t[None, :] > L1[:, None])  # [S, T]
+    term2 = jnp.einsum("st,st,t->s", cond, f, wt)
+    return term1 + term2
+
+
+# ---------------------------------------------------------------------------
+# P2 dual machinery (gradient projection, Sec. IV-A)
+# ---------------------------------------------------------------------------
+
+
+def p2_score_table(mu, m, age, gamma, alpha, cg):
+    """Static part A[b, g] of the dual objective.
+
+    With U = -E[t] (the paper's worked special case):
+      A[b,g] = -(mu_b * I(alpha*c_g, m_b) + age_b)
+               - gamma * m_b * c_g * mu_b * beta_g/(beta_g - 1).
+    """
+    beta = alpha * cg  # [G]
+    flow = flowtime_table(m, beta)  # [B, G]
+    e_min = emin_coeff(beta)[None, :]  # [1, G]
+    return -(mu[:, None] * flow + age[:, None]) - gamma * (
+        m[:, None] * cg[None, :] * mu[:, None] * e_min
+    )
+
+
+def p2_dual_step(state, table, m, mask, n_avail, r, cg, etas):
+    """One gradient-projection iteration (the paper's update equations).
+
+    state = (nu, xi[B], h[B]);  returns (new_state, c[B]).
+    """
+    nu, xi, h = state
+    eta1, eta2, eta3 = etas
+    price = (nu * m + xi - h)[:, None] * cg[None, :]  # [B, G]
+    score = table - price
+    score = jnp.where(cg[None, :] <= r, score, _NEG)
+    idx = jnp.argmax(score, axis=1)
+    c = cg[idx] * mask  # inactive rows contribute 0
+    nu = jnp.maximum(0.0, nu + eta1 * (jnp.sum(m * c) - n_avail))
+    xi = jnp.maximum(0.0, xi + eta2 * (c - r) * mask)
+    h = jnp.maximum(0.0, h + eta3 * (1.0 - c) * mask)
+    return (nu, xi, h), c

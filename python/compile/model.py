@@ -1,0 +1,131 @@
+# L2: the paper's optimization computations as jax functions, calling the
+# L1 Pallas kernels.  These are the compute graphs that aot.py lowers to
+# HLO text; the rust coordinator executes them via PJRT at run time.
+#
+# Entry points (shapes are the static ones from kernels/grids.py):
+#   p2_solve        — Sec. IV-A gradient projection for P2 (SCA's hot path)
+#   p2_solve_traced — same, emitting the full dual iterate trace (Fig. 1)
+#   sigma_curve     — Eq.(30)-(33) E[R](sigma) curve (Fig. 4, ESE's sigma*)
+#   sda_opt         — Eq.(26)-(28) tau and E[R] tables (SDA's c*, sigma*)
+"""JAX model layer (build-time only; never imported at run time)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import grids, quadrature, ref
+
+# Oracle/kernel switch: the lowered artifact uses the Pallas kernels; the
+# pytest suite also evaluates against the oracle to isolate kernel bugs.
+_KERNELS = {
+    True: quadrature,
+    False: ref,
+}
+
+ETAS = (0.2, 0.3, 0.4)  # paper's Fig.1 step sizes eta_1..3
+SDA_C = 8  # SDA candidate copy counts 1..8
+
+
+def _p2_table(mu, m, age, gamma, alpha, use_pallas=True):
+    """Static dual-objective table A[b, g] (ref.p2_score_table, kernel-backed)."""
+    k = _KERNELS[use_pallas]
+    cg = jnp.asarray(grids.c_grid())
+    beta = alpha * cg
+    m = jnp.maximum(m, 1.0)  # padded rows carry m = 0; keep the table finite
+    flow = k.flowtime_table(m, beta)  # [B, G]
+    e_min = ref.emin_coeff(beta)[None, :]
+    table = -(mu[:, None] * flow + age[:, None]) - gamma * (
+        m[:, None] * cg[None, :] * mu[:, None] * e_min
+    )
+    return table, cg
+
+
+def _p2_scan(table, cg, m, mask, n_avail, r, iters):
+    """Run the gradient projection for a fixed number of iterations.
+
+    The capacity subgradient sum(m*c) - N is O(N), so eta_1 is scaled by
+    1/N to keep the price increment per iteration O(eta_1); the paper's
+    Matlab experiment uses raw steps on a 100-machine slot, which is the
+    same magnitude.  Primal recovery uses the tail-averaged multipliers
+    (ergodic iterate of the subgradient method).
+    """
+    eta1, eta2, eta3 = ETAS
+    etas = (eta1 / jnp.maximum(n_avail, 1.0), eta2, eta3)
+
+    def step(state, _):
+        state, c = ref.p2_dual_step(state, table, m, mask, n_avail, r, cg, etas)
+        return state, (c, state[0], state[1], state[2])
+
+    b = m.shape[0]
+    init = (jnp.float32(0.1), jnp.full((b,), 0.1), jnp.full((b,), 0.1))
+    state, (c_tr, nu_tr, xi_tr, h_tr) = jax.lax.scan(step, init, None, length=iters)
+    # tail-average the duals over the last half of the run
+    half = iters // 2
+    nu_bar = jnp.mean(nu_tr[half:], axis=0)
+    xi_bar = jnp.mean(xi_tr[half:], axis=0)
+    h_bar = jnp.mean(h_tr[half:], axis=0)
+    return (nu_bar, xi_bar, h_bar), c_tr, nu_tr
+
+
+def p2_solve(mu, m, age, mask, params, use_pallas=True):
+    """Solve P2 for one scheduling slot.
+
+    Args:
+      mu, m, age, mask: [B] job batch (Pareto scale, task count, current age
+        l - a_i, active mask in {0,1}); padded rows have mask 0.
+      params: [4] = (n_avail, gamma, r, alpha).
+
+    Returns (c_star [B], nu [], obj []): continuous per-task clone counts
+    (rust rounds + repairs), final capacity price, primal objective value.
+    """
+    n_avail, gamma, r, alpha = params[0], params[1], params[2], params[3]
+    table, cg = _p2_table(mu, m, age, gamma, alpha, use_pallas)
+    state, _, _ = _p2_scan(table, cg, m, mask, n_avail, r, grids.P2_ITERS)
+    # primal point from the final multipliers
+    nu, xi, h = state
+    score = table - (nu * m + xi - h)[:, None] * cg[None, :]
+    score = jnp.where(cg[None, :] <= r, score, -1.0e30)
+    idx = jnp.argmax(score, axis=1)
+    c = cg[idx] * mask
+    obj = jnp.sum(jnp.take_along_axis(table, idx[:, None], axis=1)[:, 0] * mask)
+    return c, nu, obj
+
+
+def p2_solve_traced(mu, m, age, mask, params, use_pallas=True):
+    """p2_solve variant emitting the full iterate trace (Fig. 1)."""
+    n_avail, gamma, r, alpha = params[0], params[1], params[2], params[3]
+    table, cg = _p2_table(mu, m, age, gamma, alpha, use_pallas)
+    _, c_trace, nu_trace = _p2_scan(table, cg, m, mask, n_avail, r, grids.P2_ITERS)
+    # Cesaro-averaged primal iterates: the convergent sequence Fig.1 plots
+    k = jnp.arange(1, c_trace.shape[0] + 1, dtype=jnp.float32)[:, None]
+    c_bar = jnp.cumsum(c_trace, axis=0) / k
+    return c_bar, nu_trace
+
+
+def sigma_curve(params, use_pallas=True):
+    """E[R](sigma)/E[x] over the static sigma grid; params = [1] = (alpha,)."""
+    k = _KERNELS[use_pallas]
+    sg = jnp.asarray(grids.sigma_grid())
+    return (sg, k.ese_resource(params[0], sg))
+
+
+def sda_opt(params, use_pallas=True):
+    """SDA tables: params = [2] = (alpha, s).
+
+    Returns (tau [S, C], resource [S, C]) over the static sigma grid and
+    c in {1..SDA_C}; rust extracts c*(sigma) = argmin_c tau and
+    sigma* = argmin_sigma resource[., c*(sigma)] (Theorem 3 verification).
+    """
+    alpha, s = params[0], params[1]
+    sg = jnp.asarray(grids.sigma_grid())
+    cc = jnp.arange(1, SDA_C + 1, dtype=jnp.float32)
+    k = _KERNELS[use_pallas]
+    tau = k.sda_tau(alpha, s, sg, cc)
+    mu = (alpha - 1.0) / alpha
+    L = jnp.maximum(mu, sg / (1.0 - s))
+    s_l = ref.pareto_sf(L, mu, alpha)
+    e_tail = L * s_l * alpha / (alpha - 1.0)
+    e_head = 1.0 - e_tail
+    resource = s + (1.0 - s) * e_head[:, None] + s_l[:, None] * tau
+    return tau, resource

@@ -1,0 +1,202 @@
+# pytest: Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+"""Kernel-level tests: exact closed forms, Monte Carlo ground truth, and
+kernel-vs-oracle agreement (including hypothesis sweeps over shapes/params).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import grids, quadrature, ref
+
+RNG = np.random.default_rng(20140213)
+
+
+def f32(x):
+    return jnp.asarray(np.asarray(x, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# flowtime table
+# ---------------------------------------------------------------------------
+
+
+class TestFlowtime:
+    def test_m1_is_emin(self):
+        """m=1: E[max of 1 min] = E[min of c] = beta/(beta-1) exactly."""
+        beta = f32([1.5, 2.0, 4.0, 8.0, 16.0])
+        got = ref.flowtime_table(f32([1.0]), beta)[0]
+        np.testing.assert_allclose(got, beta / (beta - 1.0), rtol=1e-3)
+
+    def test_m2_beta2_exact(self):
+        """E[max of 2 Pareto(1,2)] = 8/3 by direct integration."""
+        got = float(ref.flowtime_table(f32([2.0]), f32([2.0]))[0, 0])
+        assert abs(got - 8.0 / 3.0) < 2e-4
+
+    def test_monte_carlo(self):
+        """Quadrature matches simulation for a mid-sized job."""
+        m, beta = 20, 4.0
+        samp = (RNG.pareto(beta, size=(200_000, m)) + 1.0).max(axis=1)
+        got = float(ref.flowtime_table(f32([m]), f32([beta]))[0, 0])
+        assert abs(got - samp.mean()) < 3.0 * samp.std() / np.sqrt(len(samp)) + 5e-3
+
+    def test_monotone_decreasing_in_c(self):
+        """More clones -> shorter expected span (cloning helps)."""
+        beta = 2.0 * f32(grids.c_grid())
+        row = np.asarray(ref.flowtime_table(f32([50.0]), beta))[0]
+        assert np.all(np.diff(row) < 0)
+
+    def test_monotone_increasing_in_m(self):
+        """More tasks -> longer expected span (max order statistic)."""
+        col = np.asarray(ref.flowtime_table(f32([1, 10, 100, 1000]), f32([4.0])))[:, 0]
+        assert np.all(np.diff(col) > 0)
+
+    def test_kernel_matches_ref(self):
+        m = f32(RNG.integers(1, 101, grids.B))
+        beta = 2.0 * f32(grids.c_grid())
+        a = np.asarray(ref.flowtime_table(m, beta))
+        b = np.asarray(quadrature.flowtime_table(m, beta))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        alpha=st.floats(1.3, 6.0),
+        m_lo=st.integers(1, 5000),
+        seed=st.integers(0, 2**31),
+    )
+    def test_kernel_matches_ref_hypothesis(self, alpha, m_lo, seed):
+        rng = np.random.default_rng(seed)
+        m = f32(rng.integers(m_lo, m_lo + 100, grids.B))
+        beta = alpha * f32(grids.c_grid())
+        a = np.asarray(ref.flowtime_table(m, beta))
+        b = np.asarray(quadrature.flowtime_table(m, beta))
+        assert np.isfinite(a).all()
+        assert (a >= 1.0 - 1e-5).all()
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestEminCoeff:
+    def test_closed_form(self):
+        np.testing.assert_allclose(
+            ref.emin_coeff(f32([2.0, 4.0])), [2.0, 4.0 / 3.0], rtol=1e-6
+        )
+
+    def test_decreasing(self):
+        beta = 2.0 * f32(grids.c_grid())
+        coeff = np.asarray(ref.emin_coeff(beta))
+        assert np.all(np.diff(coeff) < 0)
+
+
+# ---------------------------------------------------------------------------
+# SDA tau / resource (P3, Theorem 3)
+# ---------------------------------------------------------------------------
+
+
+class TestSdaTau:
+    def test_c1_closed_form(self):
+        """tau(1, sigma) = (1-s) * L * alpha/(alpha-1): no duplicate launched."""
+        alpha, s = 2.0, 0.2
+        sg = f32([0.5, 1.0, 2.0, 4.0])
+        tau = np.asarray(ref.sda_tau(alpha, s, sg, f32([1.0])))[:, 0]
+        mu = (alpha - 1.0) / alpha
+        L = np.maximum(mu, np.asarray(sg) / (1.0 - s))
+        np.testing.assert_allclose(tau, (1 - s) * L * alpha / (alpha - 1), rtol=2e-3)
+
+    def test_monte_carlo_c2(self):
+        alpha, s, sigma = 2.0, 0.2, 1.0
+        mu = 0.5
+        L = max(mu, sigma / (1 - s))
+        t1 = (RNG.pareto(alpha, 600_000) + 1) * mu
+        t1 = t1[t1 > L][:100_000]
+        y = (RNG.pareto(alpha, len(t1)) + 1) * mu
+        mc = (2 * np.minimum((1 - s) * t1, y)).mean()
+        got = float(ref.sda_tau(alpha, s, f32([sigma]), f32([2.0]))[0, 0])
+        assert abs(got - mc) < 0.02
+
+    def test_theorem3_c_star_is_2(self):
+        """Under Pareto, duplicating exactly once minimizes tau for sigma > 1."""
+        sg = f32(grids.sigma_grid())
+        cc = f32(np.arange(1, 9))
+        tau = np.asarray(ref.sda_tau(2.0, 0.1, sg, cc))
+        sel = np.asarray(sg) > 1.0
+        assert (np.argmin(tau[sel], axis=1) == 1).all()  # index 1 <-> c = 2
+
+    def test_theorem3_sigma_star(self):
+        """sigma* ~ 1 + sqrt(2)/2 ~ 1.707 for alpha = 2, independent of s."""
+        sg = f32(grids.sigma_grid())
+        cc = f32(np.arange(1, 9))
+        for s in (0.1, 0.3):
+            er = np.asarray(ref.sda_resource(2.0, s, sg, cc))
+            tau = np.asarray(ref.sda_tau(2.0, s, sg, cc))
+            picked = er[np.arange(len(sg)), np.argmin(tau, axis=1)]
+            sigma_star = float(np.asarray(sg)[np.argmin(picked)])
+            assert abs(sigma_star - (1 + np.sqrt(2) / 2)) < 0.1
+
+    def test_kernel_matches_ref(self):
+        sg = f32(grids.sigma_grid())
+        cc = f32(np.arange(1, 9))
+        for alpha, s in [(2.0, 0.1), (3.0, 0.25), (1.5, 0.4)]:
+            a = np.asarray(ref.sda_tau(alpha, s, sg, cc))
+            b = np.asarray(quadrature.sda_tau(alpha, s, sg, cc))
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(alpha=st.floats(1.3, 5.0), s=st.floats(0.05, 0.6))
+    def test_kernel_matches_ref_hypothesis(self, alpha, s):
+        sg = f32(grids.sigma_grid())
+        cc = f32(np.arange(1, 9))
+        a = np.asarray(ref.sda_tau(alpha, s, sg, cc))
+        b = np.asarray(quadrature.sda_tau(alpha, s, sg, cc))
+        assert np.isfinite(a).all() and (a > 0).all()
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ESE resource curve (Eq.30-33, Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+class TestEseResource:
+    def test_large_sigma_no_speculation(self):
+        """sigma -> inf: nothing is duplicated, E[R] -> E[x] = 1."""
+        got = float(ref.ese_resource(2.0, f32([50.0]))[0])
+        assert abs(got - 1.0) < 0.02
+
+    def test_monte_carlo(self):
+        alpha, sigma, mu = 2.0, 1.7, 0.5
+        x = (RNG.pareto(alpha, 1_000_000) + 1) * mu
+        ask = RNG.uniform(0, x)
+        t_new = (RNG.pareto(alpha, len(x)) + 1) * mu
+        dup = (x - ask) > sigma
+        r = np.where(dup, ask + 2 * np.minimum(x - ask, t_new), x)
+        got = float(ref.ese_resource(alpha, f32([sigma]))[0])
+        assert abs(got - r.mean()) < 0.01
+
+    def test_optimum_location(self):
+        """Fig. 4: sigma* in [1.6, 2.1] for alpha in {2..5}, and the gain
+        shrinks as alpha grows."""
+        sg = f32(grids.sigma_grid())
+        gains = []
+        for alpha in (2.0, 3.0, 4.0, 5.0):
+            er = np.asarray(ref.ese_resource(alpha, sg))
+            i = int(np.argmin(er))
+            assert 1.5 <= float(np.asarray(sg)[i]) <= 2.2, alpha
+            gains.append(1.0 - er[i])
+        assert all(a > b for a, b in zip(gains, gains[1:]))
+
+    def test_kernel_matches_ref(self):
+        sg = f32(grids.sigma_grid())
+        for alpha in (2.0, 3.0, 4.5):
+            a = np.asarray(ref.ese_resource(alpha, sg))
+            b = np.asarray(quadrature.ese_resource(alpha, sg))
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(alpha=st.floats(1.4, 6.0))
+    def test_kernel_matches_ref_hypothesis(self, alpha):
+        sg = f32(grids.sigma_grid())
+        a = np.asarray(ref.ese_resource(alpha, sg))
+        b = np.asarray(quadrature.ese_resource(alpha, sg))
+        assert np.isfinite(a).all()
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,141 @@
+"""Model-level tests: P2 gradient projection behaviour, pallas-vs-oracle
+agreement of the full lowered graphs, and the Fig. 1 convergence scenario.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import grids, ref
+
+
+def f32(x):
+    return jnp.asarray(np.asarray(x, dtype=np.float32))
+
+
+def make_batch(mus, ms, n_avail, gamma=0.01, r=8.0, alpha=2.0, ages=None):
+    B = grids.B
+    mu = np.zeros(B, np.float32)
+    m = np.zeros(B, np.float32)
+    age = np.zeros(B, np.float32)
+    mask = np.zeros(B, np.float32)
+    mu[: len(mus)] = mus
+    m[: len(ms)] = ms
+    if ages is not None:
+        age[: len(ages)] = ages
+    mask[: len(mus)] = 1.0
+    params = np.array([n_avail, gamma, r, alpha], np.float32)
+    return tuple(map(f32, (mu, m, age, mask, params)))
+
+
+FIG1 = make_batch([1, 2, 1, 2], [10, 20, 5, 10], 100.0)
+
+
+class TestP2Solve:
+    def test_fig1_converges(self):
+        """Fig. 1 scenario: the averaged iterates settle to a fixed point."""
+        c_bar, nu_tr = model.p2_solve_traced(*FIG1, use_pallas=False)
+        c_bar = np.asarray(c_bar)
+        tail_delta = np.abs(c_bar[-1, :4] - c_bar[-40, :4]).max()
+        assert tail_delta < 0.05
+        assert np.isfinite(np.asarray(nu_tr)).all()
+
+    def test_fig1_capacity(self):
+        """Converged allocation respects the capacity constraint (approx)."""
+        c, nu, obj = model.p2_solve(*FIG1, use_pallas=False)
+        used = float(jnp.sum(c * FIG1[1] * FIG1[3]))
+        assert used <= 100.0 * 1.05
+        assert float(nu) >= 0.0
+        assert np.isfinite(float(obj))
+
+    def test_fig1_beats_no_cloning(self):
+        """The optimized allocation has higher utility than c = 1."""
+        mu, m, age, mask, params = FIG1
+        table, cg = model._p2_table(mu, m, age, params[1], params[3], False)
+        c, _, _ = model.p2_solve(*FIG1, use_pallas=False)
+        idx = np.abs(np.asarray(cg)[None, :] - np.asarray(c)[:, None]).argmin(1)
+        msk = np.asarray(mask).astype(bool)
+        opt = np.asarray(table)[np.arange(grids.B), idx][msk].sum()
+        base = np.asarray(table)[:, 0][msk].sum()
+        assert opt > base
+
+    def test_ample_capacity_hits_r(self):
+        """With far more machines than tasks, every job clones up to r."""
+        batch = make_batch([1.0], [4], 4000.0, gamma=1e-4, r=8.0)
+        c, nu, _ = model.p2_solve(*batch, use_pallas=False)
+        assert float(c[0]) >= 7.5
+        assert float(nu) < 1e-3
+
+    def test_expensive_resource_stays_low(self):
+        """With a huge gamma, cloning is not worth it: c stays at 1."""
+        batch = make_batch([1.0, 2.0], [10, 10], 1000.0, gamma=100.0)
+        c, _, _ = model.p2_solve(*batch, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(c[:2]), 1.0, atol=1e-6)
+
+    def test_masked_rows_zero(self):
+        c, _, _ = model.p2_solve(*FIG1, use_pallas=False)
+        assert (np.asarray(c[4:]) == 0.0).all()
+
+    def test_pallas_matches_oracle(self):
+        c_a, nu_a, obj_a = model.p2_solve(*FIG1, use_pallas=True)
+        c_b, nu_b, obj_b = model.p2_solve(*FIG1, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(c_a), np.asarray(c_b), atol=1e-4)
+        assert abs(float(nu_a) - float(nu_b)) < 1e-4
+        assert abs(float(obj_a) - float(obj_b)) < 1e-2
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        njobs=st.integers(1, grids.B),
+        headroom=st.floats(1.05, 5.0),
+        gamma=st.floats(0.001, 0.1),
+        seed=st.integers(0, 2**31),
+    )
+    def test_feasibility_hypothesis(self, njobs, headroom, gamma, seed):
+        rng = np.random.default_rng(seed)
+        mus = rng.uniform(0.5, 2.0, njobs)
+        ms = rng.integers(1, 101, njobs)
+        # Algorithm 1 only solves P2 when sum(m_i) < N(l); respect that.
+        n_avail = float(ms.sum()) * headroom
+        batch = make_batch(mus, ms, n_avail, gamma=gamma)
+        c, nu, obj = model.p2_solve(*batch, use_pallas=False)
+        c = np.asarray(c)
+        assert np.isfinite(c).all()
+        # bounds: active rows in [1, r], padded rows 0
+        assert (c[:njobs] >= 1.0 - 1e-5).all() and (c[:njobs] <= 8.0 + 1e-5).all()
+        # approximate complementary slackness: if the price settled at ~0,
+        # capacity is not binding; otherwise usage is within 10% of N
+        used = float((c[:njobs] * ms).sum())
+        if float(nu) > 1e-3:
+            assert used <= n_avail * 1.10
+
+
+class TestSigmaCurve:
+    def test_pallas_matches_oracle(self):
+        sg_a, er_a = model.sigma_curve(f32([2.0]), use_pallas=True)
+        sg_b, er_b = model.sigma_curve(f32([2.0]), use_pallas=False)
+        np.testing.assert_allclose(np.asarray(er_a), np.asarray(er_b), atol=2e-4)
+        np.testing.assert_allclose(np.asarray(sg_a), np.asarray(sg_b))
+
+    def test_grid_matches_statics(self):
+        sg, _ = model.sigma_curve(f32([2.0]), use_pallas=False)
+        np.testing.assert_allclose(np.asarray(sg), grids.sigma_grid())
+
+
+class TestSdaOpt:
+    def test_tables_shape_and_theorem3(self):
+        tau, er = model.sda_opt(f32([2.0, 0.1]), use_pallas=False)
+        tau, er = np.asarray(tau), np.asarray(er)
+        assert tau.shape == (grids.S, model.SDA_C)
+        sg = grids.sigma_grid()
+        sel = sg > 1.0
+        assert (np.argmin(tau[sel], axis=1) == 1).all()
+        picked = er[np.arange(len(sg)), np.argmin(tau, axis=1)]
+        assert abs(float(sg[np.argmin(picked)]) - 1.707) < 0.1
+
+    def test_pallas_matches_oracle(self):
+        a = model.sda_opt(f32([2.0, 0.1]), use_pallas=True)
+        b = model.sda_opt(f32([2.0, 0.1]), use_pallas=False)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-4)

@@ -1,0 +1,116 @@
+//! Component micro-benchmarks (`cargo bench --bench components`): the hot
+//! paths of each layer — simulator event throughput, P2 solver latency
+//! (rust and PJRT), quadrature kernels, RNG, event queue, machine pool.
+//! These numbers anchor EXPERIMENTS.md §Perf.
+
+use specsim::cluster::generator::generate;
+use specsim::cluster::sim::Simulator;
+use specsim::config::{SimConfig, WorkloadConfig};
+use specsim::opt::gradient::{GradientSolver, P2Job, P2Problem};
+use specsim::opt::pareto_math;
+use specsim::runtime::solver::PjrtP2;
+use specsim::scheduler::sca::P2Backend;
+use specsim::scheduler::{self, SchedulerKind};
+use specsim::stats::{Pareto, Pcg64};
+use specsim::util::bench::run;
+
+fn batch_problem(b: usize) -> P2Problem {
+    let jobs: Vec<P2Job> = (0..b)
+        .map(|i| P2Job {
+            mu: 1.0 + (i % 3) as f64 * 0.5,
+            m: 5.0 + (i % 20) as f64,
+            age: (i % 7) as f64,
+        })
+        .collect();
+    let total: f64 = jobs.iter().map(|j| j.m).sum();
+    P2Problem { jobs, n_avail: total * 2.0, gamma: 0.01, r: 8.0, alpha: 2.0 }
+}
+
+fn sim_events(kind: SchedulerKind, machines: usize, lambda: f64, horizon: f64) -> (u64, f64) {
+    let mut cfg = SimConfig::default();
+    cfg.machines = machines;
+    cfg.horizon = horizon;
+    cfg.use_runtime = false;
+    cfg.scheduler = kind;
+    let wl = WorkloadConfig::paper(lambda);
+    let workload = generate(&wl, cfg.horizon, 1);
+    let tasks: u64 = workload.specs.iter().map(|s| s.num_tasks as u64).sum();
+    let sched = scheduler::build(&cfg, &wl).unwrap();
+    let t0 = std::time::Instant::now();
+    let res = Simulator::new(cfg, workload, sched).run();
+    let dt = t0.elapsed().as_secs_f64();
+    (tasks + res.speculative_launches, dt)
+}
+
+fn main() {
+    println!("== L3: simulator throughput ==");
+    for (kind, label) in [
+        (SchedulerKind::Naive, "naive"),
+        (SchedulerKind::Sda, "sda"),
+        (SchedulerKind::Ese, "ese"),
+        (SchedulerKind::Sca, "sca(rust)"),
+        (SchedulerKind::Mantri, "mantri"),
+    ] {
+        let (copies, dt) = sim_events(kind, 1000, 2.0, 500.0);
+        println!(
+            "{label:<12} {copies:>8} task-copies in {dt:>7.3}s  -> {:>10.0} copies/s",
+            copies as f64 / dt
+        );
+    }
+    println!("\n== L3: P2 solver latency (per scheduling slot) ==");
+    let mut solver = GradientSolver::default();
+    let p64 = batch_problem(64);
+    run("rust gradient, B=64 (cold cache)", 0, 1, || {
+        GradientSolver::default().solve(&p64).c.len()
+    });
+    run("rust gradient, B=64 (warm cache)", 2, 20, || {
+        solver.solve(&p64).c.len()
+    });
+    let p8 = batch_problem(8);
+    run("rust gradient, B=8 (warm cache)", 2, 50, || solver.solve(&p8).c.len());
+    match PjrtP2::load("artifacts") {
+        Ok(mut pjrt) => {
+            run("pjrt p2_solver, B=64", 2, 20, || pjrt.solve(&p64).len());
+            run("pjrt p2_solver, B=8", 2, 20, || pjrt.solve(&p8).len());
+        }
+        Err(e) => println!("pjrt p2_solver: SKIP ({e})"),
+    }
+    println!("\n== L1-math twins: quadrature ==");
+    run("flow_integral (1024-pt)", 10, 200, || {
+        pareto_math::flow_integral(4.0, 50.0)
+    });
+    run("ese_resource (512x128)", 2, 20, || pareto_math::ese_resource(2.0, 1.7));
+    run("sda_tau", 5, 100, || pareto_math::sda_tau(2.0, 0.1, 1.7, 2.0));
+
+    println!("\n== substrates ==");
+    let mut rng = Pcg64::new(1, 0);
+    run("pcg64 1e6 samples", 2, 20, || {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    });
+    let pareto = Pareto::new(1.0, 2.0);
+    run("pareto 1e6 samples", 2, 10, || {
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += pareto.sample(&mut rng);
+        }
+        acc
+    });
+    run("event queue 1e5 push+pop", 2, 20, || {
+        let mut q = specsim::cluster::event::EventQueue::new();
+        for i in 0..100_000u32 {
+            q.push(
+                (i % 977) as f64,
+                specsim::cluster::event::Event::Arrival(specsim::cluster::job::JobId(i)),
+            );
+        }
+        let mut n = 0;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+}

@@ -1,0 +1,40 @@
+//! Per-figure benchmark harness (`cargo bench --bench figures`): runs every
+//! paper-figure driver at a reduced scale, timing each and printing the
+//! same rows/series the paper reports.  The full-scale regeneration is
+//! `make figures` / `specsim figure all`.
+
+use std::path::Path;
+use std::time::Instant;
+
+use specsim::figures::{self, Scale};
+
+fn main() {
+    let out = Path::new("results/bench");
+    let artifacts = "artifacts";
+    let scale = Scale(0.1);
+    println!("== figure regeneration at scale {} ==\n", scale.0);
+    let figs: [(&str, fn(&Path, &str, Scale) -> Result<(), String>); 7] = [
+        ("fig1_convergence", figures::fig1::run),
+        ("fig2_lightly_loaded", figures::fig2::run),
+        ("fig3_sda_sigma", figures::fig3::run),
+        ("fig4_sigma_curves", figures::fig4::run),
+        ("fig5_single_job", figures::fig5::run),
+        ("fig6_heavily_loaded", figures::fig6::run),
+        ("threshold", figures::threshold::run),
+    ];
+    let mut timings = Vec::new();
+    for (name, f) in figs {
+        let t0 = Instant::now();
+        if let Err(e) = f(out, artifacts, scale) {
+            println!("{name}: FAILED ({e})");
+            continue;
+        }
+        let dt = t0.elapsed();
+        timings.push((name, dt));
+        println!("-- {name}: {dt:?}\n");
+    }
+    println!("== timing summary ==");
+    for (name, dt) in &timings {
+        println!("{name:<24} {dt:?}");
+    }
+}

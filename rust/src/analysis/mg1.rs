@@ -1,0 +1,66 @@
+//! M/G/1 mean delay (Pollaczek-Khinchine), Eq. (1): the per-machine task
+//! queue model each computing node is approximated by.
+
+/// Mean time-in-system `W = lambda E[s^2] / (2 (1 - lambda E[s])) + E[s]`.
+/// Returns `f64::INFINITY` when unstable (`lambda * E[s] >= 1`) or when the
+/// service second moment is infinite (Pareto with alpha <= 2).
+pub fn mean_delay(lambda: f64, es: f64, es2: f64) -> f64 {
+    assert!(lambda >= 0.0 && es > 0.0);
+    let rho = lambda * es;
+    if rho >= 1.0 || !es2.is_finite() {
+        return f64::INFINITY;
+    }
+    lambda * es2 / (2.0 * (1.0 - rho)) + es
+}
+
+/// Utilization `rho = lambda * E[s]`.
+pub fn utilization(lambda: f64, es: f64) -> f64 {
+    lambda * es
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{Pcg64};
+
+    #[test]
+    fn md1_closed_form() {
+        // deterministic service: W = rho*Es/(2(1-rho)) + Es
+        let (lambda, es) = (0.5, 1.0);
+        let w = mean_delay(lambda, es, es * es);
+        assert!((w - (0.25 / 0.5 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mm1_closed_form() {
+        // exponential service: E[s^2] = 2/mu^2, W = 1/(mu - lambda)
+        let (lambda, mu) = (0.6, 1.0);
+        let w = mean_delay(lambda, 1.0 / mu, 2.0 / (mu * mu));
+        assert!((w - 1.0 / (mu - lambda)).abs() < 1e-9, "{w}");
+    }
+
+    #[test]
+    fn unstable_is_infinite() {
+        assert!(mean_delay(1.1, 1.0, 1.0).is_infinite());
+        assert!(mean_delay(0.5, 1.0, f64::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn mm1_matches_simulation() {
+        // quick event simulation of an M/M/1 queue
+        let (lambda, mu) = (0.5, 1.0);
+        let mut rng = Pcg64::new(11, 0);
+        let (mut clock, mut server_free, mut total, mut n) = (0.0, 0.0f64, 0.0, 0u64);
+        for _ in 0..200_000 {
+            clock += rng.exponential(lambda);
+            let start = clock.max(server_free);
+            let svc = rng.exponential(mu);
+            server_free = start + svc;
+            total += server_free - clock;
+            n += 1;
+        }
+        let sim = total / n as f64;
+        let w = mean_delay(lambda, 1.0 / mu, 2.0 / (mu * mu));
+        assert!((sim - w).abs() / w < 0.05, "sim {sim} vs analytic {w}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Queueing analysis behind Sec. III: the M/G/1 task-delay model and the
+//! lightly/heavily loaded cutoff threshold lambda^U.
+
+pub mod mg1;
+pub mod threshold;
+
+pub use threshold::{cutoff_lambda, cutoff_omega, CutoffReport};

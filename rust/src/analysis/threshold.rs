@@ -1,0 +1,153 @@
+//! The cutoff workload threshold (Sec. III-B): the arrival rate lambda^U
+//! below which cloning-based speculation beats no-speculation, separating
+//! the lightly loaded (SCA/SDA) and heavily loaded (ESE) regimes.
+//!
+//! Per-machine model: tasks arrive at rate lambda_m = lambda E[m]/M.
+//! Without speculation each machine is M/G/1 with Pareto(mu, alpha) service
+//! (Eq. 1).  With 2-copy cloning, arrivals double and service becomes the
+//! min of two copies, Pareto(mu, 2 alpha) — Eq. (3) in the paper, which the
+//! test below re-derives from raw Pollaczek-Khinchine.
+//!
+//! omega = lambda E[m] E[s] / M is the offered utilization; the threshold
+//! is the largest omega with W_t^c(omega) < W_t(omega), intersected with
+//! the Theorem-1 stability bound omega < (2 alpha - 1)/(4 (alpha - 1)).
+
+use super::mg1;
+
+/// Everything the threshold computation derives, for reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct CutoffReport {
+    /// Theorem 1 stability bound on omega for 2-copy cloning.
+    pub omega_stability: f64,
+    /// Largest omega where cloning strictly reduces mean task delay.
+    pub omega_cutoff: f64,
+    /// lambda^U for the given cluster (Eq. 5).
+    pub lambda_cutoff: f64,
+}
+
+/// Mean task delay without speculation at offered utilization omega
+/// (infinite for alpha <= 2: Pareto second moment diverges, so cloning
+/// wins at any stable load).
+pub fn delay_no_spec(omega: f64, es: f64, alpha: f64) -> f64 {
+    let mu = es * (alpha - 1.0) / alpha;
+    let es2 = if alpha <= 2.0 {
+        f64::INFINITY
+    } else {
+        mu * mu * alpha / (alpha - 2.0)
+    };
+    mg1::mean_delay(omega / es, es, es2)
+}
+
+/// Mean task delay with 2-copy cloning at offered utilization omega —
+/// Eq. (3).  Arrival rate doubles; service is Pareto(mu, 2 alpha).
+pub fn delay_cloned(omega: f64, es: f64, alpha: f64) -> f64 {
+    let mu = es * (alpha - 1.0) / alpha;
+    let beta = 2.0 * alpha;
+    let es_c = mu * beta / (beta - 1.0);
+    let es2_c = mu * mu * beta / (beta - 2.0);
+    mg1::mean_delay(2.0 * omega / es, es_c, es2_c)
+}
+
+/// Theorem 1 bound: omega < (2 alpha - 1) / (4 (alpha - 1)).
+pub fn omega_stability(alpha: f64) -> f64 {
+    (2.0 * alpha - 1.0) / (4.0 * (alpha - 1.0))
+}
+
+/// Largest omega in (0, stability) where cloning strictly wins, found by
+/// bisection on the continuous difference W_t - W_t^c.
+pub fn cutoff_omega(es: f64, alpha: f64) -> f64 {
+    let hi = omega_stability(alpha) - 1e-9;
+    let wins = |om: f64| delay_cloned(om, es, alpha) < delay_no_spec(om, es, alpha);
+    if wins(hi) {
+        return hi; // cloning wins across the whole stable range
+    }
+    let (mut lo, mut hi) = (1e-9, hi);
+    debug_assert!(wins(lo), "cloning must win at vanishing load");
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if wins(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Eq. (5): lambda^U = omega^U * M / (E[m] E[s]).
+pub fn cutoff_lambda(machines: usize, mean_tasks: f64, es: f64, alpha: f64) -> CutoffReport {
+    let omega_cutoff = cutoff_omega(es, alpha);
+    CutoffReport {
+        omega_stability: omega_stability(alpha),
+        omega_cutoff,
+        lambda_cutoff: omega_cutoff * machines as f64 / (mean_tasks * es),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_matches_paper_formula() {
+        // the paper's closed form for W_t^c, cross-checked against our
+        // raw Pollaczek-Khinchine composition
+        let (es, alpha) = (2.5, 3.0);
+        for omega in [0.1, 0.3, 0.5] {
+            let a = alpha;
+            let num = omega * (a - 1.0) * (1.0 - 4.0 * a * a + 4.0 * a) / (a * (2.0 * a - 1.0))
+                + 2.0 * (a - 1.0);
+            let den = 2.0 * a - 1.0 - 4.0 * omega * (a - 1.0);
+            let paper = es * num / den;
+            let ours = delay_cloned(omega, es, alpha);
+            assert!((paper - ours).abs() / ours < 1e-9, "omega={omega}: {paper} vs {ours}");
+        }
+    }
+
+    #[test]
+    fn theorem1_bound() {
+        assert!((omega_stability(2.0) - 0.75).abs() < 1e-12);
+        // utilization with 2 copies at the bound equals 1
+        let alpha = 2.0;
+        let es = 1.0;
+        let om = omega_stability(alpha);
+        let mu = es * (alpha - 1.0) / alpha;
+        let es_c = mu * 2.0 * alpha / (2.0 * alpha - 1.0);
+        assert!((2.0 * om / es * es_c - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha2_cloning_always_wins_when_stable() {
+        // infinite variance without cloning: the cutoff is the stability bound
+        let r = cutoff_lambda(3000, 50.5, 2.5, 2.0);
+        assert!((r.omega_cutoff - r.omega_stability).abs() < 1e-6);
+        // paper set-up: lambda^U = 0.75 * 3000 / (50.5 * 2.5) ~ 17.8:
+        // lambda = 6 is lightly loaded, lambda in {30, 40} heavily loaded
+        assert!((r.lambda_cutoff - 17.82).abs() < 0.1, "{}", r.lambda_cutoff);
+    }
+
+    #[test]
+    fn light_tail_has_interior_cutoff() {
+        // for alpha > 2 + enough load, monitoring-free cloning stops paying
+        let r = cutoff_lambda(100, 10.0, 1.0, 4.0);
+        assert!(r.omega_cutoff < r.omega_stability);
+        assert!(r.omega_cutoff > 0.0);
+        // below the cutoff cloning wins, above it loses
+        let es = 1.0;
+        let om = r.omega_cutoff;
+        assert!(delay_cloned(om * 0.9, es, 4.0) < delay_no_spec(om * 0.9, es, 4.0));
+        assert!(delay_cloned(om * 1.05, es, 4.0) > delay_no_spec(om * 1.05, es, 4.0));
+    }
+
+    #[test]
+    fn delay_monotone_in_load() {
+        let es = 1.0;
+        let mut prev = 0.0;
+        for i in 1..7 {
+            let om = i as f64 * 0.1;
+            let w = delay_cloned(om, es, 2.0);
+            assert!(w > prev);
+            prev = w;
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Discrete-event queue.  Events are ordered by time (then by a sequence
+//! number so simultaneous events process in insertion order, keeping runs
+//! deterministic).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::job::{JobId, TaskRef};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// A job joins the master queue.
+    Arrival(JobId),
+    /// A task copy reaches the end of its sampled duration.
+    CopyFinish { task: TaskRef, copy: u32 },
+    /// A first copy crosses the detection fraction s_i: its true remaining
+    /// time becomes visible to the scheduler (straggler checkpoint).
+    Checkpoint { task: TaskRef, copy: u32 },
+    /// Slot boundary: the scheduler makes its slotted decisions.
+    SlotTick,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of timestamped events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, event: Event) {
+        debug_assert!(time.is_finite(), "event at non-finite time: {event:?}");
+        self.seq += 1;
+        self.heap.push(Entry { time, seq: self.seq, event });
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::SlotTick);
+        q.push(1.0, Event::Arrival(JobId(1)));
+        q.push(2.0, Event::Arrival(JobId(2)));
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Arrival(JobId(10)));
+        q.push(1.0, Event::Arrival(JobId(20)));
+        match (q.pop().unwrap().1, q.pop().unwrap().1) {
+            (Event::Arrival(a), Event::Arrival(b)) => {
+                assert_eq!(a, JobId(10));
+                assert_eq!(b, JobId(20));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(5.0, Event::SlotTick);
+        q.push(4.0, Event::SlotTick);
+        assert_eq!(q.peek_time(), Some(4.0));
+        assert_eq!(q.pop().unwrap().0, 4.0);
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,134 @@
+//! Workload generators.  First-copy durations are pre-sampled here so every
+//! scheduling policy replays the identical workload (see `sim.rs`).
+
+use crate::config::WorkloadConfig;
+use crate::stats::{Pareto, Pcg64};
+
+use super::job::{JobId, JobSpec};
+use super::sim::Workload;
+use super::trace;
+
+/// Generate the workload described by `cfg` over `[0, horizon]`.
+pub fn generate(cfg: &WorkloadConfig, horizon: f64, seed: u64) -> Workload {
+    match cfg {
+        WorkloadConfig::Poisson { lambda, m_lo, m_hi, mean_lo, mean_hi, alpha } => {
+            poisson(*lambda, *m_lo, *m_hi, *mean_lo, *mean_hi, *alpha, horizon, seed)
+        }
+        WorkloadConfig::SingleJob { tasks, mean, alpha } => single_job(*tasks, *mean, *alpha, seed),
+        WorkloadConfig::Trace { path } => {
+            trace::load(path).unwrap_or_else(|e| panic!("trace {path}: {e}"))
+        }
+    }
+}
+
+/// The paper's multi-job workload (Sec. IV-C): Poisson arrivals at rate
+/// lambda, m ~ U{m_lo..m_hi}, per-job mean duration ~ U[mean_lo, mean_hi],
+/// task durations Pareto(alpha) with that mean.
+#[allow(clippy::too_many_arguments)]
+fn poisson(
+    lambda: f64,
+    m_lo: u32,
+    m_hi: u32,
+    mean_lo: f64,
+    mean_hi: f64,
+    alpha: f64,
+    horizon: f64,
+    seed: u64,
+) -> Workload {
+    let mut arr_rng = Pcg64::new(seed, 101);
+    let mut job_rng = Pcg64::new(seed, 202);
+    let mut dur_rng = Pcg64::new(seed, 303);
+    let mut specs = Vec::new();
+    let mut first_durations = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += arr_rng.exponential(lambda);
+        if t > horizon {
+            break;
+        }
+        let id = JobId(specs.len() as u32);
+        let m = job_rng.uniform_u64(m_lo as u64, m_hi as u64) as u32;
+        let mean = job_rng.uniform_f64(mean_lo, mean_hi);
+        let dist = Pareto::from_mean(mean, alpha);
+        first_durations.push((0..m).map(|_| dist.sample(&mut dur_rng)).collect());
+        specs.push(JobSpec { id, arrival: t, dist, num_tasks: m });
+    }
+    Workload { specs, first_durations }
+}
+
+/// The Fig. 5 workload: a single job arriving at t = 0.
+fn single_job(tasks: u32, mean: f64, alpha: f64, seed: u64) -> Workload {
+    let mut dur_rng = Pcg64::new(seed, 303);
+    let dist = Pareto::from_mean(mean, alpha);
+    let first = (0..tasks).map(|_| dist.sample(&mut dur_rng)).collect();
+    Workload {
+        specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: tasks }],
+        first_durations: vec![first],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let wl = generate(&WorkloadConfig::paper(6.0), 1000.0, 42);
+        let n = wl.specs.len() as f64;
+        assert!((n / 1000.0 - 6.0).abs() < 0.5, "rate {}", n / 1000.0);
+        // arrivals ordered, ids dense
+        for (i, s) in wl.specs.iter().enumerate() {
+            assert_eq!(s.id.0 as usize, i);
+        }
+        for w in wl.specs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn task_counts_in_range() {
+        let wl = generate(&WorkloadConfig::paper(6.0), 200.0, 1);
+        for s in &wl.specs {
+            assert!((1..=100).contains(&s.num_tasks));
+            let mean = s.dist.mean();
+            assert!((1.0..=4.0).contains(&mean), "mean {mean}");
+        }
+    }
+
+    #[test]
+    fn durations_match_spec_count() {
+        let wl = generate(&WorkloadConfig::paper(3.0), 100.0, 9);
+        assert_eq!(wl.specs.len(), wl.first_durations.len());
+        for (s, d) in wl.specs.iter().zip(&wl.first_durations) {
+            assert_eq!(s.num_tasks as usize, d.len());
+            for &x in d {
+                assert!(x >= s.dist.mu);
+            }
+        }
+    }
+
+    #[test]
+    fn single_job_shape() {
+        let wl = generate(
+            &WorkloadConfig::SingleJob { tasks: 100, mean: 1.0, alpha: 2.0 },
+            10.0,
+            5,
+        );
+        assert_eq!(wl.specs.len(), 1);
+        assert_eq!(wl.specs[0].num_tasks, 100);
+        assert_eq!(wl.specs[0].arrival, 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&WorkloadConfig::paper(6.0), 100.0, 7);
+        let b = generate(&WorkloadConfig::paper(6.0), 100.0, 7);
+        assert_eq!(a.specs.len(), b.specs.len());
+        assert_eq!(a.first_durations, b.first_durations);
+        let c = generate(&WorkloadConfig::paper(6.0), 100.0, 8);
+        assert_ne!(
+            a.specs.iter().map(|s| s.arrival).collect::<Vec<_>>(),
+            c.specs.iter().map(|s| s.arrival).collect::<Vec<_>>()
+        );
+    }
+}

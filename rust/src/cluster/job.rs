@@ -1,0 +1,187 @@
+//! Jobs, tasks and task copies — the state machines the simulator drives.
+//!
+//! A job `J_i` arrives with `m_i` tasks; each task may run several copies
+//! (clones or straggler backups); a task completes when its first copy
+//! finishes, at which point sibling copies are killed and their machines
+//! freed.  A job completes when all its tasks have (Sec. III).
+
+use crate::stats::Pareto;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u32);
+
+/// Task address: (job, index within job).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskRef {
+    pub job: JobId,
+    pub task: u32,
+}
+
+/// Immutable description of an arriving job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub arrival: f64,
+    /// Task-duration distribution (common to all the job's tasks, Sec. III).
+    pub dist: Pareto,
+    pub num_tasks: u32,
+}
+
+impl JobSpec {
+    /// Total expected workload m_i * E[x^i] — the SRPT ordering key.
+    pub fn workload(&self) -> f64 {
+        self.num_tasks as f64 * self.dist.mean()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    /// In chi(l): no task has been launched yet.
+    Queued,
+    /// At least one task launched, not all finished.
+    Running,
+    Done,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CopyPhase {
+    Running,
+    Finished,
+    Killed,
+}
+
+/// One execution attempt of a task on one machine.
+#[derive(Clone, Copy, Debug)]
+pub struct CopyState {
+    pub machine: u32,
+    pub start: f64,
+    /// True duration (hidden from schedulers until the detection checkpoint).
+    pub duration: f64,
+    pub phase: CopyPhase,
+    /// Set once the copy has executed `detect_frac` of its work: the
+    /// scheduler now knows the true remaining time (the paper's monitoring
+    /// model, Eq. 18-19).
+    pub revealed: bool,
+}
+
+impl CopyState {
+    pub fn elapsed(&self, now: f64) -> f64 {
+        (now - self.start).max(0.0)
+    }
+
+    /// True remaining time (simulator-side knowledge).
+    pub fn true_remaining(&self, now: f64) -> f64 {
+        (self.duration - self.elapsed(now)).max(0.0)
+    }
+}
+
+/// Mutable per-task state.
+#[derive(Clone, Debug, Default)]
+pub struct TaskState {
+    pub copies: Vec<CopyState>,
+    pub done: bool,
+    /// Completion time, once done.
+    pub finish: Option<f64>,
+}
+
+impl TaskState {
+    pub fn launched(&self) -> bool {
+        !self.copies.is_empty()
+    }
+
+    pub fn running_copies(&self) -> usize {
+        self.copies.iter().filter(|c| c.phase == CopyPhase::Running).count()
+    }
+}
+
+/// Mutable per-job state.
+#[derive(Clone, Debug)]
+pub struct JobState {
+    pub spec: JobSpec,
+    pub phase: JobPhase,
+    pub tasks: Vec<TaskState>,
+    /// Index of the first task with no copies yet (tasks launch in order).
+    pub next_unlaunched: u32,
+    /// Tasks not yet completed.
+    pub unfinished: u32,
+    /// Time the first task was launched (w_i in the paper).
+    pub first_sched: Option<f64>,
+    pub finish: Option<f64>,
+    /// Machine-time consumed by all copies (resource, before gamma scaling).
+    pub machine_time: f64,
+}
+
+impl JobState {
+    pub fn new(spec: JobSpec) -> Self {
+        let n = spec.num_tasks as usize;
+        JobState {
+            phase: JobPhase::Queued,
+            tasks: vec![TaskState::default(); n],
+            next_unlaunched: 0,
+            unfinished: spec.num_tasks,
+            first_sched: None,
+            finish: None,
+            machine_time: 0.0,
+            spec,
+        }
+    }
+
+    /// Tasks that still need a first copy.
+    pub fn unlaunched(&self) -> u32 {
+        self.spec.num_tasks - self.next_unlaunched
+    }
+
+    /// Remaining workload (#unfinished tasks * E[x]) — the priority key of
+    /// the smallest-remaining-first levels in SCA/SDA/ESE.
+    pub fn remaining_workload(&self) -> f64 {
+        self.unfinished as f64 * self.spec.dist.mean()
+    }
+
+    pub fn flowtime(&self) -> Option<f64> {
+        self.finish.map(|f| f - self.spec.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: u32, m: u32) -> JobSpec {
+        JobSpec {
+            id: JobId(id),
+            arrival: 1.0,
+            dist: Pareto::from_mean(2.0, 2.0),
+            num_tasks: m,
+        }
+    }
+
+    #[test]
+    fn new_job_is_queued() {
+        let j = JobState::new(spec(0, 5));
+        assert_eq!(j.phase, JobPhase::Queued);
+        assert_eq!(j.unfinished, 5);
+        assert_eq!(j.unlaunched(), 5);
+        assert!(j.flowtime().is_none());
+    }
+
+    #[test]
+    fn workload_key() {
+        let j = JobState::new(spec(0, 10));
+        assert!((j.spec.workload() - 20.0).abs() < 1e-12);
+        assert!((j.remaining_workload() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn copy_elapsed_remaining() {
+        let c = CopyState {
+            machine: 0,
+            start: 2.0,
+            duration: 5.0,
+            phase: CopyPhase::Running,
+            revealed: false,
+        };
+        assert_eq!(c.elapsed(4.0), 2.0);
+        assert_eq!(c.true_remaining(4.0), 3.0);
+        assert_eq!(c.true_remaining(100.0), 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Homogeneous machine pool.  Each machine holds at most one task copy at a
+//! time (the paper's model); allocation is O(1) via a free-list stack.
+
+use super::job::TaskRef;
+
+/// What a busy machine is running.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub task: TaskRef,
+    pub copy: u32,
+}
+
+/// Fixed-size pool of identical machines.
+#[derive(Clone, Debug)]
+pub struct MachinePool {
+    free: Vec<u32>,
+    busy: Vec<Option<Assignment>>, // indexed by machine id
+}
+
+impl MachinePool {
+    pub fn new(n: usize) -> Self {
+        MachinePool {
+            // LIFO free-list; reversed so machine 0 is allocated first
+            free: (0..n as u32).rev().collect(),
+            busy: vec![None; n],
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.busy.len()
+    }
+
+    /// N(l): machines currently idle.
+    #[inline]
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+
+    #[inline]
+    pub fn busy_count(&self) -> usize {
+        self.busy.len() - self.free.len()
+    }
+
+    /// Allocate an idle machine for a task copy.
+    #[inline]
+    pub fn alloc(&mut self, asg: Assignment) -> Option<u32> {
+        let id = self.free.pop()?;
+        debug_assert!(self.busy[id as usize].is_none());
+        self.busy[id as usize] = Some(asg);
+        Some(id)
+    }
+
+    /// Release a machine back to the pool.
+    #[inline]
+    pub fn release(&mut self, id: u32) {
+        debug_assert!(self.busy[id as usize].is_some(), "double free of machine {id}");
+        self.busy[id as usize] = None;
+        self.free.push(id);
+    }
+
+    /// What machine `id` is running, if anything.
+    #[inline]
+    pub fn assignment(&self, id: u32) -> Option<Assignment> {
+        self.busy[id as usize]
+    }
+
+    /// Iterate over (machine, assignment) for all busy machines.
+    pub fn busy_iter(&self) -> impl Iterator<Item = (u32, Assignment)> + '_ {
+        self.busy
+            .iter()
+            .enumerate()
+            .filter_map(|(i, a)| a.map(|a| (i as u32, a)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::job::{JobId, TaskRef};
+
+    fn tref(j: u32, t: u32) -> TaskRef {
+        TaskRef { job: JobId(j), task: t }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = MachinePool::new(3);
+        assert_eq!(p.idle(), 3);
+        let a = p.alloc(Assignment { task: tref(0, 0), copy: 0 }).unwrap();
+        let b = p.alloc(Assignment { task: tref(0, 1), copy: 0 }).unwrap();
+        assert_eq!(p.idle(), 1);
+        assert_ne!(a, b);
+        p.release(a);
+        assert_eq!(p.idle(), 2);
+        assert!(p.assignment(a).is_none());
+        assert_eq!(p.assignment(b).unwrap().task, tref(0, 1));
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = MachinePool::new(1);
+        assert!(p.alloc(Assignment { task: tref(0, 0), copy: 0 }).is_some());
+        assert!(p.alloc(Assignment { task: tref(0, 1), copy: 0 }).is_none());
+    }
+
+    #[test]
+    fn busy_iter_lists_all() {
+        let mut p = MachinePool::new(4);
+        p.alloc(Assignment { task: tref(1, 0), copy: 0 }).unwrap();
+        p.alloc(Assignment { task: tref(1, 1), copy: 1 }).unwrap();
+        assert_eq!(p.busy_iter().count(), 2);
+        assert_eq!(p.busy_count(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn double_free_panics_in_debug() {
+        let mut p = MachinePool::new(2);
+        let a = p.alloc(Assignment { task: tref(0, 0), copy: 0 }).unwrap();
+        p.release(a);
+        p.release(a);
+    }
+}

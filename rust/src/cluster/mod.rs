@@ -1,0 +1,16 @@
+//! The MapReduce-like cluster substrate: machines, jobs/tasks/copies, the
+//! discrete-event simulator with slotted scheduling, workload generators and
+//! trace I/O.
+
+pub mod event;
+pub mod generator;
+pub mod job;
+pub mod machine;
+pub mod sim;
+pub mod trace;
+
+pub use event::{Event, EventQueue};
+pub use generator::generate;
+pub use job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskRef, TaskState};
+pub use machine::MachinePool;
+pub use sim::{Cluster, SimResult, Simulator};

@@ -1,0 +1,609 @@
+//! The discrete-event cluster simulator with slotted scheduling decisions.
+//!
+//! Model (Sec. III): jobs arrive at a master queue; scheduling decisions are
+//! made at slot boundaries; task copies occupy one machine each and complete
+//! at their sampled Pareto duration; a task completes when its first copy
+//! does (siblings are killed and their machines freed); the scheduler learns
+//! a copy's true remaining time only after the copy has executed the
+//! detection fraction `s_i` of its work (Eq. 18-19).
+//!
+//! First-copy durations are **pre-sampled by the generator** so that every
+//! scheduling policy sees the identical workload; backup-copy durations are
+//! drawn i.i.d. from the job's own RNG stream at launch time.
+
+use std::collections::BTreeSet;
+
+use crate::config::SimConfig;
+use crate::metrics::JobRecord;
+use crate::scheduler::Scheduler;
+use crate::stats::{Cdf, Pcg64};
+
+use super::event::{Event, EventQueue};
+use super::job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskRef};
+use super::machine::{Assignment, MachinePool};
+
+/// Pre-sampled workload: the job specs plus the first-copy duration of every
+/// task (policy-independent).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub specs: Vec<JobSpec>,
+    pub first_durations: Vec<Vec<f64>>,
+}
+
+/// Everything the scheduler can see and touch.  Scheduler hooks receive
+/// `&mut Cluster`; the event loop lives in [`Simulator`].
+pub struct Cluster {
+    pub cfg: SimConfig,
+    pub clock: f64,
+    pub machines: MachinePool,
+    pub jobs: Vec<JobState>,
+    /// chi(l): arrived jobs with no task launched yet.
+    pub queued: BTreeSet<JobId>,
+    /// R(l): jobs with at least one launched task, not yet finished.
+    pub running: BTreeSet<JobId>,
+    pub(crate) events: EventQueue,
+    first_durations: Vec<Vec<f64>>,
+    job_rngs: Vec<Pcg64>,
+    /// Machine-time consumed so far across all jobs (utilization numerator).
+    pub total_machine_time: f64,
+    /// Copies beyond the first launched per task (speculation volume).
+    pub speculative_launches: u64,
+    /// Currently-running backup copies (LATE's speculativeCap accounting).
+    pub outstanding_backups: usize,
+    pub completed: Vec<JobRecord>,
+    pub incomplete: u64,
+}
+
+impl Cluster {
+    fn new(cfg: SimConfig, workload: Workload, seed_stream: u64) -> Self {
+        let mut root = Pcg64::new(cfg.seed, seed_stream);
+        let job_rngs = workload
+            .specs
+            .iter()
+            .map(|s| root.split(s.id.0 as u64 + 1))
+            .collect();
+        let jobs = workload.specs.into_iter().map(JobState::new).collect();
+        Cluster {
+            machines: MachinePool::new(cfg.machines),
+            cfg,
+            clock: 0.0,
+            jobs,
+            queued: BTreeSet::new(),
+            running: BTreeSet::new(),
+            events: EventQueue::new(),
+            first_durations: workload.first_durations,
+            job_rngs,
+            total_machine_time: 0.0,
+            speculative_launches: 0,
+            outstanding_backups: 0,
+            completed: Vec::new(),
+            incomplete: 0,
+        }
+    }
+
+    /// Construct an empty cluster for live (coordinator-driven) operation.
+    pub fn new_live(cfg: SimConfig) -> Self {
+        Cluster::new(cfg, Workload { specs: Vec::new(), first_durations: Vec::new() }, 0x11fe)
+    }
+
+    /// Live mode: admit a job now.  Task first-copy durations are sampled
+    /// immediately from the cluster RNG (there is no pre-generated trace).
+    pub fn add_job(&mut self, mean_duration: f64, alpha: f64, num_tasks: u32) -> JobId {
+        let id = JobId(self.jobs.len() as u32);
+        let dist = crate::stats::Pareto::from_mean(mean_duration, alpha);
+        let mut rng = Pcg64::new(self.cfg.seed ^ 0xadd0b, id.0 as u64 + 1);
+        let durs: Vec<f64> = (0..num_tasks).map(|_| dist.sample(&mut rng)).collect();
+        self.first_durations.push(durs);
+        self.job_rngs.push(rng.split(7));
+        self.jobs.push(JobState::new(JobSpec {
+            id,
+            arrival: self.clock,
+            dist,
+            num_tasks,
+        }));
+        self.queued.insert(id);
+        id
+    }
+
+    /// Live mode: process all pending events up to (and including) time `t`
+    /// and advance the clock to `t`.  Slot decisions are the caller's job.
+    pub fn advance_to(&mut self, t: f64, sched: &mut dyn Scheduler) {
+        while let Some(et) = self.events.peek_time() {
+            if et > t {
+                break;
+            }
+            let (time, event) = self.events.pop().unwrap();
+            self.clock = time;
+            match event {
+                Event::Arrival(id) => {
+                    self.queued.insert(id);
+                }
+                Event::CopyFinish { task, copy } => self.copy_finished(task, copy),
+                Event::Checkpoint { task, copy } => {
+                    let tstate = &mut self.jobs[task.job.0 as usize].tasks[task.task as usize];
+                    if !tstate.done && tstate.copies[copy as usize].phase == CopyPhase::Running {
+                        tstate.copies[copy as usize].revealed = true;
+                        sched.on_reveal(self, task);
+                    }
+                }
+                Event::SlotTick => {}
+            }
+        }
+        self.clock = t;
+    }
+
+    /// Total queued (unlaunched) tasks — the backpressure signal.
+    pub fn queued_tasks(&self) -> usize {
+        self.queued
+            .iter()
+            .map(|id| self.job(*id).spec.num_tasks as usize)
+            .sum()
+    }
+
+    // ----- queries -------------------------------------------------------
+
+    /// N(l): idle machines.
+    #[inline]
+    pub fn idle(&self) -> usize {
+        self.machines.idle()
+    }
+
+    pub fn job(&self, id: JobId) -> &JobState {
+        &self.jobs[id.0 as usize]
+    }
+
+    pub fn task(&self, t: TaskRef) -> &super::job::TaskState {
+        &self.jobs[t.job.0 as usize].tasks[t.task as usize]
+    }
+
+    /// chi(l) sorted by increasing total workload (SCA/SDA/ESE level 3).
+    pub fn chi_sorted(&self) -> Vec<JobId> {
+        let mut v: Vec<JobId> = self.queued.iter().copied().collect();
+        v.sort_by(|a, b| {
+            self.job(*a)
+                .spec
+                .workload()
+                .partial_cmp(&self.job(*b).spec.workload())
+                .unwrap()
+        });
+        v
+    }
+
+    /// Running jobs with unlaunched tasks, smallest remaining workload first
+    /// (SCA/SDA/ESE level 2).
+    pub fn running_needing_tasks(&self) -> Vec<JobId> {
+        let mut v: Vec<JobId> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|id| self.job(*id).unlaunched() > 0)
+            .collect();
+        v.sort_by(|a, b| {
+            self.job(*a)
+                .remaining_workload()
+                .partial_cmp(&self.job(*b).remaining_workload())
+                .unwrap()
+        });
+        v
+    }
+
+    /// Estimated remaining time of a running task: the minimum over running
+    /// copies of (true remaining if revealed, conditional mean otherwise).
+    pub fn est_remaining(&self, t: TaskRef) -> f64 {
+        let job = self.job(t.job);
+        let task = &job.tasks[t.task as usize];
+        let now = self.clock;
+        task.copies
+            .iter()
+            .filter(|c| c.phase == CopyPhase::Running)
+            .map(|c| {
+                if c.revealed {
+                    c.true_remaining(now)
+                } else {
+                    job.spec.dist.mean_remaining(c.elapsed(now))
+                }
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Blind estimate of remaining time: conditional mean given elapsed
+    /// only, never the revealed truth.  This is all a scheduler *without*
+    /// the paper's s_i-checkpoint instrumentation (i.e. the Mantri/LATE
+    /// baselines) can know; the paper's own algorithms get `est_remaining`.
+    pub fn est_remaining_blind(&self, t: TaskRef) -> f64 {
+        let job = self.job(t.job);
+        let task = &job.tasks[t.task as usize];
+        let now = self.clock;
+        task.copies
+            .iter()
+            .filter(|c| c.phase == CopyPhase::Running)
+            .map(|c| job.spec.dist.mean_remaining(c.elapsed(now)))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// P(t_rem > a) for the *oldest* running copy of a task — the Mantri
+    /// estimator.  Uses the conditional Pareto survival before the copy's
+    /// checkpoint and the revealed truth (0/1) after.
+    pub fn prob_remaining_exceeds(&self, t: TaskRef, a: f64) -> f64 {
+        let job = self.job(t.job);
+        let task = &job.tasks[t.task as usize];
+        let now = self.clock;
+        task.copies
+            .iter()
+            .filter(|c| c.phase == CopyPhase::Running)
+            .map(|c| {
+                if c.revealed {
+                    if c.true_remaining(now) > a {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                } else {
+                    job.spec.dist.sf_remaining(c.elapsed(now), a)
+                }
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Blind version of [`Self::prob_remaining_exceeds`]: conditional Pareto
+    /// survival from elapsed time only (no checkpoint knowledge).
+    pub fn prob_remaining_exceeds_blind(&self, t: TaskRef, a: f64) -> f64 {
+        let job = self.job(t.job);
+        let task = &job.tasks[t.task as usize];
+        let now = self.clock;
+        task.copies
+            .iter()
+            .filter(|c| c.phase == CopyPhase::Running)
+            .map(|c| job.spec.dist.sf_remaining(c.elapsed(now), a))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    // ----- mutations -----------------------------------------------------
+
+    /// Launch one copy of `t` on an idle machine.  The first copy of a task
+    /// uses the pre-sampled duration; backups draw from the job's stream.
+    /// Returns false when no machine is idle, the task is done, or the copy
+    /// cap r_max is reached.
+    pub fn launch_copy(&mut self, t: TaskRef) -> bool {
+        let now = self.clock;
+        let ji = t.job.0 as usize;
+        let detect_frac = self.cfg.detect_frac;
+        let r_max = self.cfg.r_max as usize;
+        if self.jobs[ji].tasks[t.task as usize].done {
+            return false;
+        }
+        if self.jobs[ji].tasks[t.task as usize].copies.len() >= r_max {
+            return false;
+        }
+        let n_copies = self.jobs[ji].tasks[t.task as usize].copies.len();
+        let duration = if n_copies == 0 {
+            self.first_durations[ji][t.task as usize]
+        } else {
+            self.jobs[ji].spec.dist.sample(&mut self.job_rngs[ji])
+        };
+        let copy_idx = n_copies as u32;
+        let Some(machine) = self.machines.alloc(Assignment { task: t, copy: copy_idx }) else {
+            return false;
+        };
+        let job = &mut self.jobs[ji];
+        job.tasks[t.task as usize].copies.push(CopyState {
+            machine,
+            start: now,
+            duration,
+            phase: CopyPhase::Running,
+            revealed: false,
+        });
+        self.events.push(now + duration, Event::CopyFinish { task: t, copy: copy_idx });
+        // detection checkpoint on the first copy only (the paper monitors
+        // the original; backups are already speculation)
+        if copy_idx == 0 {
+            self.events
+                .push(now + detect_frac * duration, Event::Checkpoint { task: t, copy: 0 });
+            if t.task >= job.next_unlaunched {
+                job.next_unlaunched = t.task + 1;
+            }
+        } else {
+            self.speculative_launches += 1;
+            self.outstanding_backups += 1;
+        }
+        if job.phase == JobPhase::Queued {
+            job.phase = JobPhase::Running;
+            job.first_sched = Some(now);
+            self.queued.remove(&t.job);
+            self.running.insert(t.job);
+        }
+        true
+    }
+
+    /// Launch first copies for up to `limit` unlaunched tasks of a job
+    /// (level-2/3 scheduling).  Returns how many were launched.
+    pub fn launch_unlaunched(&mut self, id: JobId, limit: usize) -> usize {
+        let mut launched = 0;
+        while launched < limit {
+            let next = self.jobs[id.0 as usize].next_unlaunched;
+            if next >= self.jobs[id.0 as usize].spec.num_tasks {
+                break;
+            }
+            if !self.launch_copy(TaskRef { job: id, task: next }) {
+                break;
+            }
+            launched += 1;
+        }
+        launched
+    }
+
+    /// Launch every task of a queued job with `copies` copies each (the SCA
+    /// cloning branch).  Stops early if machines run out.
+    pub fn launch_job_cloned(&mut self, id: JobId, copies: u32) -> usize {
+        let m = self.jobs[id.0 as usize].spec.num_tasks;
+        let mut launched = 0;
+        for task in 0..m {
+            let t = TaskRef { job: id, task };
+            for _ in 0..copies.max(1) {
+                if !self.launch_copy(t) {
+                    return launched;
+                }
+                launched += 1;
+            }
+        }
+        launched
+    }
+
+    /// Kill a running copy (Mantri's restart ablation); frees its machine.
+    pub fn kill_copy(&mut self, t: TaskRef, copy: u32) {
+        let now = self.clock;
+        let job = &mut self.jobs[t.job.0 as usize];
+        let c = &mut job.tasks[t.task as usize].copies[copy as usize];
+        if c.phase != CopyPhase::Running {
+            return;
+        }
+        c.phase = CopyPhase::Killed;
+        let used = c.elapsed(now).min(c.duration);
+        job.machine_time += used;
+        self.total_machine_time += used;
+        if copy > 0 {
+            self.outstanding_backups -= 1;
+        }
+        self.machines.release(c.machine);
+    }
+
+    /// Handle a copy completing at the current clock.
+    fn copy_finished(&mut self, t: TaskRef, copy: u32) {
+        let now = self.clock;
+        let record_jobs = self.cfg.record_jobs;
+        let gamma = self.cfg.gamma;
+        let ji = t.job.0 as usize;
+        {
+            let job = &mut self.jobs[ji];
+            let task = &mut job.tasks[t.task as usize];
+            if task.done || task.copies[copy as usize].phase != CopyPhase::Running {
+                return; // stale event (sibling finished first / copy killed)
+            }
+            task.copies[copy as usize].phase = CopyPhase::Finished;
+            let dur = task.copies[copy as usize].duration;
+            job.machine_time += dur;
+            self.total_machine_time += dur;
+            task.done = true;
+            task.finish = Some(now);
+        }
+        self.machines
+            .release(self.jobs[ji].tasks[t.task as usize].copies[copy as usize].machine);
+        if copy > 0 {
+            self.outstanding_backups -= 1;
+        }
+        // kill sibling copies and free their machines
+        let n = self.jobs[ji].tasks[t.task as usize].copies.len();
+        for k in 0..n as u32 {
+            if k != copy {
+                self.kill_copy(t, k);
+            }
+        }
+        let job = &mut self.jobs[ji];
+        job.unfinished -= 1;
+        if job.unfinished == 0 {
+            job.phase = JobPhase::Done;
+            job.finish = Some(now);
+            self.running.remove(&t.job);
+            if record_jobs {
+                self.completed.push(JobRecord {
+                    job: t.job.0,
+                    arrival: job.spec.arrival,
+                    num_tasks: job.spec.num_tasks,
+                    mean_duration: job.spec.dist.mean(),
+                    finish: now,
+                    flowtime: now - job.spec.arrival,
+                    resource: gamma * job.machine_time,
+                    wait: job.first_sched.unwrap_or(now) - job.spec.arrival,
+                });
+            }
+        }
+    }
+}
+
+/// Aggregated output of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub scheduler: &'static str,
+    pub completed: Vec<JobRecord>,
+    pub incomplete: u64,
+    pub total_machine_time: f64,
+    pub speculative_launches: u64,
+    /// Machine-time / (M * horizon).
+    pub utilization: f64,
+    pub horizon: f64,
+}
+
+impl SimResult {
+    pub fn flowtime_cdf(&self) -> Cdf {
+        let mut c = Cdf::new();
+        c.extend(self.completed.iter().map(|r| r.flowtime));
+        c
+    }
+
+    pub fn resource_cdf(&self) -> Cdf {
+        let mut c = Cdf::new();
+        c.extend(self.completed.iter().map(|r| r.resource));
+        c
+    }
+
+    pub fn mean_flowtime(&self) -> f64 {
+        self.flowtime_cdf().mean()
+    }
+
+    pub fn mean_resource(&self) -> f64 {
+        self.resource_cdf().mean()
+    }
+
+    /// The paper's fairness metric: job utility minus resource consumption,
+    /// with U = -flowtime.
+    pub fn mean_net_utility(&self) -> f64 {
+        if self.completed.is_empty() {
+            return f64::NAN;
+        }
+        self.completed
+            .iter()
+            .map(|r| -r.flowtime - r.resource)
+            .sum::<f64>()
+            / self.completed.len() as f64
+    }
+}
+
+/// Drives the event loop: arrivals, copy completions, checkpoints, slots.
+pub struct Simulator {
+    pub cluster: Cluster,
+    scheduler: Box<dyn Scheduler>,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig, workload: Workload, scheduler: Box<dyn Scheduler>) -> Self {
+        let mut cluster = Cluster::new(cfg, workload, 0x5eed);
+        for (i, job) in cluster.jobs.iter().enumerate() {
+            let t = job.spec.arrival;
+            cluster.events.push(t, Event::Arrival(JobId(i as u32)));
+        }
+        cluster.events.push(0.0, Event::SlotTick);
+        Simulator { cluster, scheduler }
+    }
+
+    /// Run to the horizon and aggregate.
+    pub fn run(mut self) -> SimResult {
+        let horizon = self.cluster.cfg.horizon;
+        let slot_dt = self.cluster.cfg.slot_dt;
+        while let Some((time, event)) = self.cluster.events.pop() {
+            if time > horizon {
+                break;
+            }
+            self.cluster.clock = time;
+            match event {
+                Event::Arrival(id) => {
+                    self.cluster.queued.insert(id);
+                }
+                Event::CopyFinish { task, copy } => {
+                    self.cluster.copy_finished(task, copy);
+                }
+                Event::Checkpoint { task, copy } => {
+                    let ji = task.job.0 as usize;
+                    let tstate = &mut self.cluster.jobs[ji].tasks[task.task as usize];
+                    if !tstate.done
+                        && tstate.copies[copy as usize].phase == CopyPhase::Running
+                    {
+                        tstate.copies[copy as usize].revealed = true;
+                        self.scheduler.on_reveal(&mut self.cluster, task);
+                    }
+                }
+                Event::SlotTick => {
+                    self.scheduler.on_slot(&mut self.cluster);
+                    let next = time + slot_dt;
+                    if next <= horizon {
+                        self.cluster.events.push(next, Event::SlotTick);
+                    }
+                }
+            }
+        }
+        let cl = self.cluster;
+        let incomplete = cl
+            .jobs
+            .iter()
+            .filter(|j| j.spec.arrival <= horizon && j.phase != JobPhase::Done)
+            .count() as u64;
+        SimResult {
+            scheduler: self.scheduler.name(),
+            utilization: cl.total_machine_time / (cl.machines.total() as f64 * horizon),
+            completed: cl.completed,
+            incomplete,
+            total_machine_time: cl.total_machine_time,
+            speculative_launches: cl.speculative_launches,
+            horizon,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::generator;
+    use crate::config::WorkloadConfig;
+    use crate::scheduler;
+
+    fn small_cfg() -> SimConfig {
+        SimConfig {
+            machines: 50,
+            horizon: 200.0,
+            seed: 7,
+            ..SimConfig::default()
+        }
+    }
+
+    fn run_with(kind: scheduler::SchedulerKind) -> SimResult {
+        let mut cfg = small_cfg();
+        cfg.scheduler = kind;
+        let wl = generator::generate(
+            &WorkloadConfig::Poisson {
+                lambda: 0.3,
+                m_lo: 1,
+                m_hi: 10,
+                mean_lo: 1.0,
+                mean_hi: 2.0,
+                alpha: 2.0,
+            },
+            cfg.horizon,
+            cfg.seed,
+        );
+        let sched = scheduler::build(&cfg, &WorkloadConfig::paper(0.3)).unwrap();
+        Simulator::new(cfg, wl, sched).run()
+    }
+
+    #[test]
+    fn naive_completes_jobs() {
+        let res = run_with(scheduler::SchedulerKind::Naive);
+        assert!(res.completed.len() > 20, "completed {}", res.completed.len());
+        for r in &res.completed {
+            assert!(r.flowtime > 0.0);
+            assert!(r.resource > 0.0);
+            assert!(r.finish <= res.horizon);
+        }
+    }
+
+    #[test]
+    fn machine_accounting_conserves() {
+        let res = run_with(scheduler::SchedulerKind::Naive);
+        // utilization must be a sane fraction
+        assert!(res.utilization > 0.0 && res.utilization < 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_with(scheduler::SchedulerKind::Naive);
+        let b = run_with(scheduler::SchedulerKind::Naive);
+        assert_eq!(a.completed.len(), b.completed.len());
+        assert_eq!(a.total_machine_time, b.total_machine_time);
+    }
+
+    #[test]
+    fn speculation_counts_only_for_cloners() {
+        let naive = run_with(scheduler::SchedulerKind::Naive);
+        assert_eq!(naive.speculative_launches, 0);
+        let clone = run_with(scheduler::SchedulerKind::CloneAll);
+        assert!(clone.speculative_launches > 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Workload trace I/O: CSV with one row per job plus its pre-sampled
+//! first-copy durations.  Lets a generated workload be frozen to disk and
+//! replayed exactly (e.g. to diff schedulers out-of-process, or to feed the
+//! end-to-end example a fixed "production" trace).
+//!
+//! Format (header line, then one line per job):
+//!   job,arrival,mu,alpha,num_tasks,durations...
+//! where `durations...` is `num_tasks` semicolon-separated floats.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::stats::Pareto;
+
+use super::job::{JobId, JobSpec};
+use super::sim::Workload;
+
+pub const HEADER: &str = "job,arrival,mu,alpha,num_tasks,durations";
+
+/// Serialize a workload to the trace format.
+pub fn to_string(wl: &Workload) -> String {
+    let mut out = String::with_capacity(wl.specs.len() * 64);
+    out.push_str(HEADER);
+    out.push('\n');
+    for (spec, durs) in wl.specs.iter().zip(&wl.first_durations) {
+        let _ = write!(
+            out,
+            "{},{},{},{},{},",
+            spec.id.0, spec.arrival, spec.dist.mu, spec.dist.alpha, spec.num_tasks
+        );
+        for (i, d) in durs.iter().enumerate() {
+            if i > 0 {
+                out.push(';');
+            }
+            let _ = write!(out, "{d}");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse the trace format.
+pub fn from_string(text: &str) -> Result<Workload, String> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h.trim() == HEADER => {}
+        other => return Err(format!("bad header: {other:?}")),
+    }
+    let mut specs = Vec::new();
+    let mut first_durations = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.splitn(6, ',').collect();
+        if fields.len() != 6 {
+            return Err(format!("line {}: expected 6 fields", lineno + 2));
+        }
+        let parse = |s: &str| -> Result<f64, String> {
+            s.parse().map_err(|e| format!("line {}: {e}", lineno + 2))
+        };
+        let id: u32 = fields[0]
+            .parse()
+            .map_err(|e| format!("line {}: {e}", lineno + 2))?;
+        let arrival = parse(fields[1])?;
+        let mu = parse(fields[2])?;
+        let alpha = parse(fields[3])?;
+        let num_tasks: u32 = fields[4]
+            .parse()
+            .map_err(|e| format!("line {}: {e}", lineno + 2))?;
+        let durs: Result<Vec<f64>, String> = fields[5].split(';').map(parse).collect();
+        let durs = durs?;
+        if durs.len() != num_tasks as usize {
+            return Err(format!(
+                "line {}: {} durations for {} tasks",
+                lineno + 2,
+                durs.len(),
+                num_tasks
+            ));
+        }
+        if id as usize != specs.len() {
+            return Err(format!("line {}: non-dense job id {id}", lineno + 2));
+        }
+        specs.push(JobSpec {
+            id: JobId(id),
+            arrival,
+            dist: Pareto::new(mu, alpha),
+            num_tasks,
+        });
+        first_durations.push(durs);
+    }
+    Ok(Workload { specs, first_durations })
+}
+
+pub fn save(wl: &Workload, path: impl AsRef<Path>) -> Result<(), String> {
+    fs::write(path.as_ref(), to_string(wl)).map_err(|e| e.to_string())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Workload, String> {
+    from_string(&fs::read_to_string(path.as_ref()).map_err(|e| e.to_string())?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::generator::generate;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn roundtrip() {
+        let wl = generate(&WorkloadConfig::paper(2.0), 50.0, 3);
+        let text = to_string(&wl);
+        let back = from_string(&text).unwrap();
+        assert_eq!(wl.specs.len(), back.specs.len());
+        for (a, b) in wl.specs.iter().zip(&back.specs) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.dist, b.dist);
+            assert_eq!(a.num_tasks, b.num_tasks);
+        }
+        assert_eq!(wl.first_durations, back.first_durations);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(from_string("nope\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duration_mismatch() {
+        let text = format!("{HEADER}\n0,0.0,1.0,2.0,3,1.5;2.5\n");
+        assert!(from_string(&text).unwrap_err().contains("durations"));
+    }
+
+    #[test]
+    fn rejects_non_dense_ids() {
+        let text = format!("{HEADER}\n5,0.0,1.0,2.0,1,1.5\n");
+        assert!(from_string(&text).unwrap_err().contains("non-dense"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let wl = generate(&WorkloadConfig::paper(1.0), 20.0, 4);
+        let dir = std::env::temp_dir().join("specsim_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wl.csv");
+        save(&wl, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.specs.len(), wl.specs.len());
+    }
+}

@@ -1,0 +1,310 @@
+//! Typed configuration for the cluster, workload and schedulers.
+//!
+//! Everything the paper's evaluation varies is a field here; `SimConfig`
+//! deserializes from TOML (see `examples/*.toml` usage in the README) and
+//! the CLI builds it from flags.  Defaults reproduce the paper's Sec. IV-C
+//! simulation set-up.
+
+use crate::scheduler::SchedulerKind;
+use crate::util::toml_lite;
+
+/// Cluster + policy configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Number of machines M (paper: 3000 for the multi-job experiments).
+    pub machines: usize,
+    /// Simulation horizon in time units (paper: 1500).
+    pub horizon: f64,
+    /// Scheduling-slot length (the paper's slotted decision model).
+    pub slot_dt: f64,
+    /// RNG seed; every entity derives an independent stream from it.
+    pub seed: u64,
+    /// Resource cost per unit machine-time (paper: gamma = 0.01).
+    pub gamma: f64,
+    /// Fraction of work a copy must complete before the scheduler learns its
+    /// true remaining time (the paper's s_i monitoring model, Sec. V).
+    pub detect_frac: f64,
+    /// Maximum copies per task r (paper: 8 in Fig. 1).
+    pub r_max: u32,
+    /// Straggler threshold multiplier sigma; `None` = derive the optimum
+    /// from the analysis (Theorem 3 / Eq. 30-33).
+    pub sigma: Option<f64>,
+    /// Which speculative-execution policy to run.
+    pub scheduler: SchedulerKind,
+    /// ESE small-job gate: m_i < eta_small * N(l)/|chi(l)| (paper: 0.1).
+    pub eta_small: f64,
+    /// ESE small-job gate: E[x] < xi_small (paper: 1.0).
+    pub xi_small: f64,
+    /// CloneAll in strict mode (always `copies` clones; see Sec. III).
+    pub clone_strict: bool,
+    /// Mantri duplicate rule P(t_rem > 2 t_new) > delta (paper: 0.25).
+    pub mantri_delta: f64,
+    /// Also kill never-ending originals under Mantri (paper mentions Mantri
+    /// may terminate tasks; off by default, ablation flag).
+    pub mantri_kill: bool,
+    /// Mantri job ordering: false = FIFO (Dryad's stock scheduler — the
+    /// weak baseline the paper's Fig. 2 numbers imply), true = the same
+    /// SRPT levels the paper's algorithms use (the like-for-like baseline
+    /// its Fig. 6 numbers imply; ESE is "an extension of Mantri").
+    pub mantri_srpt: bool,
+    /// LATE: cap on outstanding speculative copies as a fraction of M.
+    pub late_speculative_cap: f64,
+    /// LATE: slow-task progress-rate percentile threshold.
+    pub late_slow_percentile: f64,
+    /// Use the PJRT runtime artifacts for SCA's P2 solve when available
+    /// (falls back to the pure-rust solver otherwise).
+    pub use_runtime: bool,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+    /// Cap on jobs per P2 batch (must match the artifact batch dimension).
+    pub p2_batch: usize,
+    /// Collect a per-job record stream (disable for huge sweeps).
+    pub record_jobs: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            machines: 3000,
+            horizon: 1500.0,
+            slot_dt: 1.0,
+            seed: 1,
+            gamma: 0.01,
+            detect_frac: 0.1,
+            r_max: 8,
+            sigma: None,
+            scheduler: SchedulerKind::Naive,
+            eta_small: 0.1,
+            xi_small: 1.0,
+            clone_strict: false,
+            mantri_delta: 0.25,
+            mantri_kill: false,
+            mantri_srpt: false,
+            late_speculative_cap: 0.1,
+            late_slow_percentile: 0.25,
+            use_runtime: true,
+            artifacts_dir: "artifacts".to_string(),
+            p2_batch: 64,
+            record_jobs: true,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Validate invariants; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.machines == 0 {
+            errs.push("machines must be > 0".to_string());
+        }
+        if !(self.horizon > 0.0) {
+            errs.push("horizon must be > 0".to_string());
+        }
+        if !(self.slot_dt > 0.0) {
+            errs.push("slot_dt must be > 0".to_string());
+        }
+        if !(0.0 < self.detect_frac && self.detect_frac < 1.0) {
+            errs.push("detect_frac must be in (0,1)".to_string());
+        }
+        if self.r_max < 1 {
+            errs.push("r_max must be >= 1".to_string());
+        }
+        if let Some(s) = self.sigma {
+            if !(s > 0.0) {
+                errs.push("sigma must be > 0".to_string());
+            }
+        }
+        if self.gamma < 0.0 {
+            errs.push("gamma must be >= 0".to_string());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Parse from the TOML subset (see `util::toml_lite`); unknown keys are
+    /// rejected so typos fail loudly, missing keys keep their defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = toml_lite::Doc::parse(text)?;
+        let mut cfg = SimConfig::default();
+        for key in doc.keys() {
+            match key {
+                "machines" => cfg.machines = doc.i64(key).ok_or("machines: int")? as usize,
+                "horizon" => cfg.horizon = doc.f64(key).ok_or("horizon: float")?,
+                "slot_dt" => cfg.slot_dt = doc.f64(key).ok_or("slot_dt: float")?,
+                "seed" => cfg.seed = doc.i64(key).ok_or("seed: int")? as u64,
+                "gamma" => cfg.gamma = doc.f64(key).ok_or("gamma: float")?,
+                "detect_frac" => cfg.detect_frac = doc.f64(key).ok_or("detect_frac: float")?,
+                "r_max" => cfg.r_max = doc.i64(key).ok_or("r_max: int")? as u32,
+                "sigma" => cfg.sigma = Some(doc.f64(key).ok_or("sigma: float")?),
+                "scheduler" => {
+                    cfg.scheduler = doc
+                        .str(key)
+                        .ok_or("scheduler: string")?
+                        .parse()
+                        .map_err(|e: String| e)?
+                }
+                "eta_small" => cfg.eta_small = doc.f64(key).ok_or("eta_small: float")?,
+                "xi_small" => cfg.xi_small = doc.f64(key).ok_or("xi_small: float")?,
+                "clone_strict" => cfg.clone_strict = doc.bool(key).ok_or("clone_strict: bool")?,
+                "mantri_delta" => cfg.mantri_delta = doc.f64(key).ok_or("mantri_delta: float")?,
+                "mantri_kill" => cfg.mantri_kill = doc.bool(key).ok_or("mantri_kill: bool")?,
+                "mantri_srpt" => cfg.mantri_srpt = doc.bool(key).ok_or("mantri_srpt: bool")?,
+                "late_speculative_cap" => {
+                    cfg.late_speculative_cap = doc.f64(key).ok_or("late_speculative_cap: float")?
+                }
+                "late_slow_percentile" => {
+                    cfg.late_slow_percentile = doc.f64(key).ok_or("late_slow_percentile: float")?
+                }
+                "use_runtime" => cfg.use_runtime = doc.bool(key).ok_or("use_runtime: bool")?,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = doc.str(key).ok_or("artifacts_dir: string")?.to_string()
+                }
+                "p2_batch" => cfg.p2_batch = doc.i64(key).ok_or("p2_batch: int")? as usize,
+                "record_jobs" => cfg.record_jobs = doc.bool(key).ok_or("record_jobs: bool")?,
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Emit the TOML subset (round-trips through `from_toml`).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        use std::fmt::Write as _;
+        let _ = writeln!(s, "machines = {}", self.machines);
+        let _ = writeln!(s, "horizon = {:?}", self.horizon);
+        let _ = writeln!(s, "slot_dt = {:?}", self.slot_dt);
+        let _ = writeln!(s, "seed = {}", self.seed);
+        let _ = writeln!(s, "gamma = {:?}", self.gamma);
+        let _ = writeln!(s, "detect_frac = {:?}", self.detect_frac);
+        let _ = writeln!(s, "r_max = {}", self.r_max);
+        if let Some(sig) = self.sigma {
+            let _ = writeln!(s, "sigma = {sig:?}");
+        }
+        let _ = writeln!(s, "scheduler = \"{}\"", self.scheduler.as_str());
+        let _ = writeln!(s, "eta_small = {:?}", self.eta_small);
+        let _ = writeln!(s, "xi_small = {:?}", self.xi_small);
+        let _ = writeln!(s, "clone_strict = {}", self.clone_strict);
+        let _ = writeln!(s, "mantri_delta = {:?}", self.mantri_delta);
+        let _ = writeln!(s, "mantri_kill = {}", self.mantri_kill);
+        let _ = writeln!(s, "mantri_srpt = {}", self.mantri_srpt);
+        let _ = writeln!(s, "late_speculative_cap = {:?}", self.late_speculative_cap);
+        let _ = writeln!(s, "late_slow_percentile = {:?}", self.late_slow_percentile);
+        let _ = writeln!(s, "use_runtime = {}", self.use_runtime);
+        let _ = writeln!(s, "artifacts_dir = \"{}\"", self.artifacts_dir);
+        let _ = writeln!(s, "p2_batch = {}", self.p2_batch);
+        let _ = writeln!(s, "record_jobs = {}", self.record_jobs);
+        s
+    }
+}
+
+/// What arrives at the cluster.
+#[derive(Clone, Debug)]
+pub enum WorkloadConfig {
+    /// The paper's multi-job workload: Poisson(lambda) arrivals, task count
+    /// ~ U{m_lo..m_hi}, per-job expected duration ~ U[mean_lo, mean_hi],
+    /// Pareto(alpha) durations.
+    Poisson {
+        lambda: f64,
+        m_lo: u32,
+        m_hi: u32,
+        mean_lo: f64,
+        mean_hi: f64,
+        alpha: f64,
+    },
+    /// The Fig. 5 workload: one job with `tasks` tasks.
+    SingleJob { tasks: u32, mean: f64, alpha: f64 },
+    /// Replay a recorded trace (see `cluster::trace`).
+    Trace { path: String },
+}
+
+impl WorkloadConfig {
+    /// The paper's Sec. IV-C settings with a caller-chosen arrival rate.
+    pub fn paper(lambda: f64) -> Self {
+        WorkloadConfig::Poisson {
+            lambda,
+            m_lo: 1,
+            m_hi: 100,
+            mean_lo: 1.0,
+            mean_hi: 4.0,
+            alpha: 2.0,
+        }
+    }
+
+    /// Mean tasks per job E[m_i].
+    pub fn mean_tasks(&self) -> f64 {
+        match self {
+            WorkloadConfig::Poisson { m_lo, m_hi, .. } => 0.5 * (*m_lo as f64 + *m_hi as f64),
+            WorkloadConfig::SingleJob { tasks, .. } => *tasks as f64,
+            WorkloadConfig::Trace { .. } => f64::NAN,
+        }
+    }
+
+    /// Mean task duration E[s].
+    pub fn mean_duration(&self) -> f64 {
+        match self {
+            WorkloadConfig::Poisson { mean_lo, mean_hi, .. } => 0.5 * (mean_lo + mean_hi),
+            WorkloadConfig::SingleJob { mean, .. } => *mean,
+            WorkloadConfig::Trace { .. } => f64::NAN,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut c = SimConfig::default();
+        c.machines = 0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.detect_frac = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.sigma = Some(-1.0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut cfg = SimConfig::default();
+        cfg.sigma = Some(1.7);
+        cfg.scheduler = SchedulerKind::Ese;
+        let text = cfg.to_toml();
+        let back = SimConfig::from_toml(&text).unwrap();
+        assert_eq!(back.machines, cfg.machines);
+        assert_eq!(back.scheduler, cfg.scheduler);
+        assert_eq!(back.sigma, cfg.sigma);
+        assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SimConfig::from_toml("machinez = 5").is_err());
+    }
+
+    #[test]
+    fn toml_partial_uses_defaults() {
+        let cfg = SimConfig::from_toml("machines = 100\nhorizon = 50.0").unwrap();
+        assert_eq!(cfg.machines, 100);
+        assert_eq!(cfg.slot_dt, 1.0);
+    }
+
+    #[test]
+    fn paper_workload_moments() {
+        let w = WorkloadConfig::paper(6.0);
+        assert!((w.mean_tasks() - 50.5).abs() < 1e-12);
+        assert!((w.mean_duration() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,78 @@
+//! Admission control for the live master: bound the queued backlog so a
+//! heavily loaded cluster sheds load at the front door instead of growing
+//! an unbounded queue (the streaming-orchestrator counterpart of the
+//! paper's "heavily loaded regime").
+
+/// Admission decision for one submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Admit,
+    /// Over the high watermark: reject outright.
+    Reject,
+    /// Between watermarks: admit but signal the client to slow down.
+    Throttle,
+}
+
+/// Watermark-based backpressure on queued *tasks* (not jobs: a single
+/// 100-task job is 100 machines of demand).
+#[derive(Clone, Copy, Debug)]
+pub struct Backpressure {
+    /// Start throttling above this many queued tasks.
+    pub low_watermark: usize,
+    /// Reject above this many queued tasks.
+    pub high_watermark: usize,
+}
+
+impl Backpressure {
+    pub fn new(low_watermark: usize, high_watermark: usize) -> Self {
+        assert!(low_watermark <= high_watermark);
+        Backpressure { low_watermark, high_watermark }
+    }
+
+    /// Size the watermarks from cluster capacity: low = `low_slots` x M,
+    /// high = `high_slots` x M.
+    pub fn from_capacity(machines: usize, low_slots: f64, high_slots: f64) -> Self {
+        Backpressure::new(
+            (machines as f64 * low_slots) as usize,
+            (machines as f64 * high_slots) as usize,
+        )
+    }
+
+    pub fn admit(&self, queued_tasks: usize, incoming_tasks: usize) -> Admission {
+        let after = queued_tasks + incoming_tasks;
+        if after > self.high_watermark {
+            Admission::Reject
+        } else if after > self.low_watermark {
+            Admission::Throttle
+        } else {
+            Admission::Admit
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watermark_bands() {
+        let bp = Backpressure::new(10, 20);
+        assert_eq!(bp.admit(0, 5), Admission::Admit);
+        assert_eq!(bp.admit(8, 5), Admission::Throttle);
+        assert_eq!(bp.admit(18, 5), Admission::Reject);
+        assert_eq!(bp.admit(10, 0), Admission::Admit); // boundary inclusive
+    }
+
+    #[test]
+    fn from_capacity() {
+        let bp = Backpressure::from_capacity(100, 2.0, 5.0);
+        assert_eq!(bp.low_watermark, 200);
+        assert_eq!(bp.high_watermark, 500);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inverted_watermarks_panic() {
+        Backpressure::new(10, 5);
+    }
+}

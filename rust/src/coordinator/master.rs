@@ -1,0 +1,241 @@
+//! The live master: a dedicated OS thread that owns the cluster + scheduler
+//! and drives them in paced real time (one scheduling slot per tick),
+//! accepting job submissions over a channel with watermark backpressure —
+//! the deployable counterpart of the batch simulator.
+//!
+//! Python never appears here: SCA's P2 solve goes through the PJRT runtime
+//! (or the rust fallback) exactly as in the batch path.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::cluster::job::JobId;
+use crate::cluster::sim::Cluster;
+use crate::config::{SimConfig, WorkloadConfig};
+use crate::metrics::JobRecord;
+use crate::scheduler::{self, Scheduler};
+
+use super::backpressure::{Admission, Backpressure};
+use super::metrics::MetricsRegistry;
+
+/// A live job submission.
+#[derive(Clone, Copy, Debug)]
+pub struct Submission {
+    pub num_tasks: u32,
+    pub mean_duration: f64,
+    pub alpha: f64,
+}
+
+/// Reply to a submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitResult {
+    Accepted { job: JobId, throttled: bool },
+    Rejected,
+}
+
+impl SubmitResult {
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, SubmitResult::Accepted { .. })
+    }
+}
+
+enum Msg {
+    Submit(Submission, mpsc::Sender<SubmitResult>),
+    Shutdown,
+}
+
+/// Final report when the master drains.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub completed: Vec<JobRecord>,
+    pub rejected: u64,
+    pub slots: u64,
+    pub utilization: f64,
+}
+
+/// Client handle: submit jobs, then shut down and collect the report.
+pub struct MasterHandle {
+    tx: mpsc::Sender<Msg>,
+    join: thread::JoinHandle<Report>,
+}
+
+impl MasterHandle {
+    /// Submit a job; blocks until the master replies (sub-millisecond).
+    pub fn submit(&self, sub: Submission) -> Result<SubmitResult, String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(sub, tx))
+            .map_err(|_| "master gone".to_string())?;
+        rx.recv().map_err(|_| "master dropped reply".to_string())
+    }
+
+    /// Stop accepting work, let the cluster drain, and return the report.
+    pub fn shutdown(self) -> Result<Report, String> {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.join.join().map_err(|_| "master panicked".to_string())
+    }
+}
+
+/// The master configuration + spawner.
+pub struct Master {
+    cfg: SimConfig,
+    /// Wall-clock duration of one scheduling slot.
+    pub tick: Duration,
+    /// Max slots to run after shutdown while draining in-flight jobs.
+    pub drain_slots: u64,
+    pub backpressure: Backpressure,
+    pub metrics: MetricsRegistry,
+}
+
+impl Master {
+    pub fn new(cfg: SimConfig) -> Self {
+        let backpressure = Backpressure::from_capacity(cfg.machines, 4.0, 16.0);
+        Master {
+            cfg,
+            tick: Duration::from_millis(5),
+            drain_slots: 5000,
+            backpressure,
+            metrics: MetricsRegistry::new(),
+        }
+    }
+
+    /// Spawn the master loop on its own thread; returns the handle.  The
+    /// scheduler is constructed *inside* the thread (SCA's PJRT executor is
+    /// thread-pinned).
+    pub fn spawn(self) -> Result<MasterHandle, String> {
+        // validate the scheduler config up-front so spawn fails loudly
+        scheduler::build(&self.cfg, &WorkloadConfig::paper(1.0))?;
+        let (tx, rx) = mpsc::channel();
+        let join = thread::Builder::new()
+            .name("specsim-master".into())
+            .spawn(move || {
+                let sched = scheduler::build(&self.cfg, &WorkloadConfig::paper(1.0))
+                    .expect("scheduler build validated before spawn");
+                run_loop(self, sched, rx)
+            })
+            .map_err(|e| e.to_string())?;
+        Ok(MasterHandle { tx, join })
+    }
+}
+
+fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Msg>) -> Report {
+    let slot_dt = master.cfg.slot_dt;
+    let mut cluster = Cluster::new_live(master.cfg);
+    let metrics = master.metrics.clone();
+    let jobs_in = metrics.counter("jobs_submitted");
+    let jobs_done = metrics.counter("jobs_completed");
+    let jobs_rejected = metrics.counter("jobs_rejected");
+    let q_depth = metrics.gauge("queued_tasks");
+    let busy = metrics.gauge("busy_machines");
+    let mut slots: u64 = 0;
+    let mut draining = false;
+    let mut drain_left = master.drain_slots;
+    let mut next_tick = Instant::now() + master.tick;
+    loop {
+        // serve submissions until the next slot boundary
+        while !draining {
+            let now = Instant::now();
+            if now >= next_tick {
+                break;
+            }
+            match rx.recv_timeout(next_tick - now) {
+                Ok(Msg::Submit(sub, reply)) => {
+                    let admission = master
+                        .backpressure
+                        .admit(cluster.queued_tasks(), sub.num_tasks as usize);
+                    let result = if admission == Admission::Reject {
+                        jobs_rejected.inc();
+                        SubmitResult::Rejected
+                    } else {
+                        jobs_in.inc();
+                        let job = cluster.add_job(sub.mean_duration, sub.alpha, sub.num_tasks);
+                        SubmitResult::Accepted { job, throttled: admission == Admission::Throttle }
+                    };
+                    let _ = reply.send(result);
+                }
+                Ok(Msg::Shutdown) => draining = true,
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => draining = true,
+            }
+        }
+        // slot boundary
+        next_tick += master.tick;
+        let now = cluster.clock + slot_dt;
+        cluster.advance_to(now, sched.as_mut());
+        sched.on_slot(&mut cluster);
+        slots += 1;
+        jobs_done.add(cluster.completed.len() as u64 - jobs_done.get());
+        q_depth.set(cluster.queued_tasks() as i64);
+        busy.set(cluster.machines.busy_count() as i64);
+        if draining {
+            let drained = cluster.running.is_empty() && cluster.queued.is_empty();
+            if drained || drain_left == 0 {
+                return Report {
+                    utilization: cluster.total_machine_time
+                        / (cluster.machines.total() as f64 * cluster.clock.max(1e-9)),
+                    completed: std::mem::take(&mut cluster.completed),
+                    rejected: jobs_rejected.get(),
+                    slots,
+                };
+            }
+            drain_left -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(machines: usize) -> SimConfig {
+        let mut c = SimConfig::default();
+        c.machines = machines;
+        c.horizon = f64::INFINITY;
+        c.use_runtime = false;
+        c.scheduler = crate::scheduler::SchedulerKind::Sda;
+        c
+    }
+
+    #[test]
+    fn submits_complete_and_drain() {
+        let mut master = Master::new(cfg(64));
+        master.tick = Duration::from_micros(200);
+        let metrics = master.metrics.clone();
+        let handle = master.spawn().unwrap();
+        for _ in 0..20 {
+            let r = handle
+                .submit(Submission { num_tasks: 5, mean_duration: 1.0, alpha: 2.0 })
+                .unwrap();
+            assert!(r.is_accepted());
+        }
+        let report = handle.shutdown().unwrap();
+        assert_eq!(report.completed.len(), 20, "all jobs drain");
+        assert_eq!(report.rejected, 0);
+        assert!(report.utilization > 0.0);
+        assert_eq!(metrics.counter("jobs_submitted").get(), 20);
+        for r in &report.completed {
+            assert!(r.flowtime > 0.0);
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_floods() {
+        let mut master = Master::new(cfg(4));
+        master.tick = Duration::from_millis(50); // slow slots: queue builds up
+        master.backpressure = Backpressure::new(8, 16);
+        let handle = master.spawn().unwrap();
+        let mut rejected = 0;
+        for _ in 0..40 {
+            match handle
+                .submit(Submission { num_tasks: 4, mean_duration: 5.0, alpha: 2.0 })
+                .unwrap()
+            {
+                SubmitResult::Rejected => rejected += 1,
+                SubmitResult::Accepted { .. } => {}
+            }
+        }
+        assert!(rejected > 0, "flood must trip the high watermark");
+        let _ = handle.shutdown();
+    }
+}

@@ -1,0 +1,121 @@
+//! Lightweight metrics registry for the live master: atomic counters and
+//! gauges with a Prometheus-style text exposition (no external deps).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared registry handle.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+}
+
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = self.inner.counters.lock().unwrap();
+        Counter(map.entry(name.to_string()).or_default().clone())
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut map = self.inner.gauges.lock().unwrap();
+        Gauge(map.entry(name.to_string()).or_default().clone())
+    }
+
+    /// Prometheus-style text exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "# TYPE {name} counter\n{name} {}\n",
+                v.load(Ordering::Relaxed)
+            ));
+        }
+        for (name, v) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "# TYPE {name} gauge\n{name} {}\n",
+                v.load(Ordering::Relaxed)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("jobs_completed");
+        c.inc();
+        c.add(4);
+        assert_eq!(reg.counter("jobs_completed").get(), 5);
+    }
+
+    #[test]
+    fn gauges_set() {
+        let reg = MetricsRegistry::new();
+        reg.gauge("queue_depth").set(42);
+        assert_eq!(reg.gauge("queue_depth").get(), 42);
+        reg.gauge("queue_depth").set(-1);
+        assert_eq!(reg.gauge("queue_depth").get(), -1);
+    }
+
+    #[test]
+    fn render_lists_everything() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").inc();
+        reg.gauge("b").set(2);
+        let text = reg.render();
+        assert!(text.contains("a 1"));
+        assert!(text.contains("b 2"));
+        assert!(text.contains("# TYPE a counter"));
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let reg = MetricsRegistry::new();
+        let reg2 = reg.clone();
+        reg.counter("x").inc();
+        assert_eq!(reg2.counter("x").get(), 1);
+    }
+}

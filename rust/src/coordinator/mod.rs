@@ -1,0 +1,13 @@
+//! Async streaming coordinator (the deployable L3 front-end): a tokio-based
+//! master that accepts live job submissions, applies admission control, and
+//! drives the same scheduler/cluster machinery the simulator exercises.
+
+pub mod backpressure;
+pub mod master;
+pub mod metrics;
+pub mod router;
+
+pub use backpressure::Backpressure;
+pub use master::{Master, MasterHandle, Submission};
+pub use metrics::MetricsRegistry;
+pub use router::Router;

@@ -1,0 +1,107 @@
+//! Placement policies for task copies.  The paper's cluster is homogeneous
+//! so placement cannot change completion times; the router exists so the
+//! live master (and future heterogeneous extensions) has a seam: it decides
+//! *which* idle machine a copy lands on and enforces anti-affinity between
+//! copies of the same task (a backup on the original's machine is useless).
+
+use crate::cluster::job::TaskRef;
+use crate::stats::Pcg64;
+
+/// Placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Pop the free-list (the simulator's default; fastest).
+    FirstFree,
+    /// Uniform over idle machines (the paper's "randomly chosen").
+    Random,
+    /// Cycle through machine ids (spreads load for live dashboards).
+    RoundRobin,
+}
+
+/// Chooses among idle machine ids.
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: Policy,
+    rng: Pcg64,
+    next: usize,
+}
+
+impl Router {
+    pub fn new(policy: Policy, seed: u64) -> Self {
+        Router { policy, rng: Pcg64::new(seed, 0x7011), next: 0 }
+    }
+
+    /// Pick an index into `idle` (a slice of idle machine ids) for a copy of
+    /// `task`, avoiding `exclude` (machines already running copies of it)
+    /// when possible.
+    pub fn pick(&mut self, idle: &[u32], exclude: &[u32], _task: TaskRef) -> Option<usize> {
+        if idle.is_empty() {
+            return None;
+        }
+        let viable: Vec<usize> = (0..idle.len())
+            .filter(|&i| !exclude.contains(&idle[i]))
+            .collect();
+        let pool: &[usize] = if viable.is_empty() {
+            // anti-affinity impossible; fall back to any idle machine
+            return Some(match self.policy {
+                Policy::FirstFree => idle.len() - 1,
+                Policy::Random => self.rng.uniform_u64(0, idle.len() as u64 - 1) as usize,
+                Policy::RoundRobin => {
+                    self.next = (self.next + 1) % idle.len();
+                    self.next
+                }
+            });
+        } else {
+            &viable
+        };
+        Some(match self.policy {
+            Policy::FirstFree => pool[pool.len() - 1],
+            Policy::Random => pool[self.rng.uniform_u64(0, pool.len() as u64 - 1) as usize],
+            Policy::RoundRobin => {
+                self.next = (self.next + 1) % pool.len();
+                pool[self.next]
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::job::JobId;
+
+    fn t() -> TaskRef {
+        TaskRef { job: JobId(0), task: 0 }
+    }
+
+    #[test]
+    fn empty_pool_none() {
+        let mut r = Router::new(Policy::Random, 1);
+        assert_eq!(r.pick(&[], &[], t()), None);
+    }
+
+    #[test]
+    fn respects_anti_affinity() {
+        let mut r = Router::new(Policy::Random, 1);
+        let idle = [1, 2, 3];
+        for _ in 0..100 {
+            let i = r.pick(&idle, &[2], t()).unwrap();
+            assert_ne!(idle[i], 2);
+        }
+    }
+
+    #[test]
+    fn falls_back_when_all_excluded() {
+        let mut r = Router::new(Policy::FirstFree, 1);
+        let idle = [5];
+        assert!(r.pick(&idle, &[5], t()).is_some());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(Policy::RoundRobin, 1);
+        let idle = [1, 2, 3];
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(&idle, &[], t()).unwrap()).collect();
+        assert_eq!(picks, vec![1, 2, 0, 1, 2, 0]);
+    }
+}

@@ -1,0 +1,54 @@
+//! Fig. 3: SDA sensitivity to the detection threshold sigma_i — the
+//! theoretical optimum 1 + sqrt(2)/2 ~ 1.707 (alpha = 2) should minimize
+//! both flowtime and resource; smaller sigma over-clones, larger sigma
+//! speculates too late.
+
+use std::path::Path;
+
+use crate::metrics::report::{self, SummaryRow};
+use crate::scheduler::SchedulerKind;
+
+use super::fig2::{config, run_seeds};
+use super::Scale;
+
+pub const SIGMAS: [f64; 5] = [1.2, 1.707, 2.2, 3.0, 4.0];
+
+pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), String> {
+    let (mut cfg, wl) = config(scale);
+    cfg.artifacts_dir = artifacts_dir.to_string();
+    cfg.scheduler = SchedulerKind::Sda;
+    let seeds = [1u64, 2];
+    let mut rows = Vec::new();
+    let mut series = vec![
+        ("mean_flowtime".to_string(), Vec::new()),
+        ("mean_resource".to_string(), Vec::new()),
+    ];
+    for sigma in SIGMAS {
+        cfg.sigma = Some(sigma);
+        let res = run_seeds(&cfg, &wl, &seeds);
+        let row = SummaryRow::from_result(&res);
+        series[0].1.push((sigma, row.mean_flowtime));
+        series[1].1.push((sigma, row.mean_resource));
+        rows.push(row);
+    }
+    report::write_file(out_dir.join("fig3_sda_sigma.csv"), &report::xy_csv(&series))
+        .map_err(|e| e.to_string())?;
+    println!("fig3 (SDA sigma sweep, paper optimum ~1.707):");
+    for (sigma, row) in SIGMAS.iter().zip(&rows) {
+        println!(
+            "  sigma={sigma:<6} mean_flowtime={:.3} mean_resource={:.4}",
+            row.mean_flowtime, row.mean_resource
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_grid_includes_theorem3_optimum() {
+        assert!(SIGMAS.iter().any(|s| (s - 1.707).abs() < 1e-9));
+    }
+}

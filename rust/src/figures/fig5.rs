@@ -1,0 +1,101 @@
+//! Fig. 5: single-job experiment — one 10000-task job on 100 machines,
+//! E[x] = 1, ESE vs the no-backup naive baseline, sweeping sigma.  The
+//! empirical optimum should match the Fig. 4 analysis (~1.7 at alpha = 2)
+//! and the ESE advantage should fade as alpha grows.
+
+use std::path::Path;
+
+use crate::cluster::generator::generate;
+use crate::cluster::sim::Simulator;
+use crate::config::{SimConfig, WorkloadConfig};
+use crate::metrics::report;
+use crate::scheduler::{self, SchedulerKind};
+
+use super::Scale;
+
+pub fn config(scale: Scale) -> (SimConfig, WorkloadConfig) {
+    let mut cfg = SimConfig::default();
+    cfg.machines = 100;
+    cfg.horizon = 1.0e4; // run the single job to completion
+    cfg.slot_dt = 1.0;
+    let tasks = (10_000.0 * scale.0).max(200.0) as u32;
+    (cfg, WorkloadConfig::SingleJob { tasks, mean: 1.0, alpha: 2.0 })
+}
+
+/// (total resource, job flowtime) averaged over `seeds` runs.
+fn measure(
+    cfg: &SimConfig,
+    wl: &WorkloadConfig,
+    kind: SchedulerKind,
+    sigma: Option<f64>,
+    seeds: u64,
+) -> (f64, f64) {
+    let (mut res_acc, mut flow_acc) = (0.0, 0.0);
+    for seed in 0..seeds {
+        let mut c = cfg.clone();
+        c.scheduler = kind;
+        c.sigma = sigma;
+        c.seed = seed + 1;
+        let workload = generate(wl, c.horizon, c.seed);
+        let sched = scheduler::build(&c, wl).expect("build");
+        let r = Simulator::new(c, workload, sched).run();
+        // single job: total resource + its flowtime
+        res_acc += r.total_machine_time * cfg.gamma;
+        flow_acc += r
+            .completed
+            .first()
+            .map(|j| j.flowtime)
+            .unwrap_or(cfg.horizon);
+    }
+    (res_acc / seeds as f64, flow_acc / seeds as f64)
+}
+
+pub fn run(out_dir: &Path, _artifacts_dir: &str, scale: Scale) -> Result<(), String> {
+    let (cfg, wl) = config(scale);
+    // paper: 50 runs per point; scale that down with the workload
+    let seeds = ((50.0 * scale.0) as u64).clamp(3, 50);
+    let sigmas: Vec<f64> = (1..=12).map(|i| i as f64 * 0.5).collect();
+    let mut series = Vec::new();
+    println!("fig5 (single job, {} tasks, M = {}, {seeds} runs/point):", match wl {
+        WorkloadConfig::SingleJob { tasks, .. } => tasks,
+        _ => unreachable!(),
+    }, cfg.machines);
+    for alpha in [2.0f64, 3.0, 4.0] {
+        let wl_a = match wl {
+            WorkloadConfig::SingleJob { tasks, mean, .. } => {
+                WorkloadConfig::SingleJob { tasks, mean, alpha }
+            }
+            _ => unreachable!(),
+        };
+        let (naive_res, naive_flow) = measure(&cfg, &wl_a, SchedulerKind::Naive, None, seeds);
+        let mut res_pts = Vec::new();
+        let mut flow_pts = Vec::new();
+        let (mut best_sigma, mut best_res) = (0.0, f64::INFINITY);
+        for &sigma in &sigmas {
+            let (r, f) = measure(&cfg, &wl_a, SchedulerKind::Ese, Some(sigma), seeds);
+            res_pts.push((sigma, r));
+            flow_pts.push((sigma, f));
+            if r < best_res {
+                best_res = r;
+                best_sigma = sigma;
+            }
+        }
+        println!(
+            "  alpha={alpha}: empirical sigma* = {best_sigma:.2} (analysis: ~1.7-2.0), \
+             ESE res {best_res:.2} vs naive {naive_res:.2}, naive flow {naive_flow:.2}"
+        );
+        series.push((format!("ese_resource_alpha{alpha}"), res_pts));
+        series.push((format!("ese_flowtime_alpha{alpha}"), flow_pts));
+        series.push((
+            format!("naive_resource_alpha{alpha}"),
+            sigmas.iter().map(|&s| (s, naive_res)).collect(),
+        ));
+        series.push((
+            format!("naive_flowtime_alpha{alpha}"),
+            sigmas.iter().map(|&s| (s, naive_flow)).collect(),
+        ));
+    }
+    report::write_file(out_dir.join("fig5_single_job.csv"), &report::xy_csv(&series))
+        .map_err(|e| e.to_string())?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! One driver per paper figure (see DESIGN.md §5).  Shared by the CLI
+//! (`specsim figure <id>`), the examples, and `cargo bench`.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod threshold;
+
+use std::path::Path;
+
+/// Scale factor for quick runs: 1.0 reproduces the paper's full set-up,
+/// smaller values shrink horizon/machines proportionally (benches use it).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    pub fn full() -> Self {
+        Scale(1.0)
+    }
+    pub fn horizon(&self, full: f64) -> f64 {
+        (full * self.0).max(20.0)
+    }
+    pub fn machines(&self, full: usize) -> usize {
+        ((full as f64 * self.0) as usize).max(20)
+    }
+}
+
+/// Run every figure driver, writing CSVs under `out_dir`.
+pub fn run_all(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), String> {
+    fig1::run(out_dir, artifacts_dir, scale)?;
+    fig2::run(out_dir, artifacts_dir, scale)?;
+    fig3::run(out_dir, artifacts_dir, scale)?;
+    fig4::run(out_dir, artifacts_dir, scale)?;
+    fig5::run(out_dir, artifacts_dir, scale)?;
+    fig6::run(out_dir, artifacts_dir, scale)?;
+    threshold::run(out_dir, artifacts_dir, scale)?;
+    Ok(())
+}

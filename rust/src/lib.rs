@@ -1,0 +1,44 @@
+//! # specsim — speculative execution for MapReduce-like clusters
+//!
+//! Production-quality reproduction of *Optimization for Speculative Execution
+//! of Multiple Jobs in a MapReduce-like Cluster* (Xu & Lau, 2014).
+//!
+//! The crate is organised as the paper's system is:
+//!
+//! * [`stats`] — random-variate substrate: seeded PCG64 streams, the Pareto
+//!   task-duration model, empirical CDF/summary accounting.
+//! * [`cluster`] — the MapReduce-like cluster: machines, jobs/tasks/copies,
+//!   a discrete-event simulator with slotted scheduling decisions, workload
+//!   generators and trace I/O.
+//! * [`scheduler`] — the seven speculative-execution policies: the paper's
+//!   SCA (Algorithm 1), SDA (Sec. V), ESE (Algorithm 2) and the baselines
+//!   they are evaluated against (naive, blind cloning, Mantri, LATE).
+//! * [`opt`] — the optimization machinery: Pareto order-statistic math,
+//!   the P2 gradient-projection solver, the P3/Theorem-3 solution and the
+//!   ESE sigma* analysis (Eq. 30–33).
+//! * [`analysis`] — M/G/1 task-delay model and the lightly/heavily loaded
+//!   cutoff threshold `lambda^U` (Sec. III-B).
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); python never runs on the request path.
+//! * [`coordinator`] — async (tokio) streaming master: submission channel,
+//!   slot loop, routing, backpressure and metrics export.
+//! * [`metrics`] — per-job flowtime/resource accounting and the per-figure
+//!   report writers used by the benchmark harness.
+//! * [`figures`] — one driver per paper figure (Fig. 1–6 + the threshold
+//!   experiment), shared by the CLI, the examples and `cargo bench`.
+
+pub mod analysis;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod metrics;
+pub mod opt;
+pub mod runtime;
+pub mod scheduler;
+pub mod stats;
+pub mod util;
+
+pub use config::{SimConfig, WorkloadConfig};
+pub use cluster::sim::{SimResult, Simulator};
+pub use scheduler::SchedulerKind;

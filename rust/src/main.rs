@@ -1,0 +1,202 @@
+//! `specsim` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   simulate   run one scheduler on one workload, print the summary
+//!   compare    run several schedulers on the identical workload
+//!   figure     regenerate a paper figure's data series (fig1..fig6,
+//!              threshold, or `all`)
+//!   threshold  print the analytic cutoff lambda^U for a cluster
+//!   trace      generate a workload trace CSV
+//!   serve      run the live master and feed it a Poisson client
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use specsim::cluster::generator::generate;
+use specsim::cluster::sim::Simulator;
+use specsim::cluster::trace;
+use specsim::config::{SimConfig, WorkloadConfig};
+use specsim::coordinator::master::{Master, Submission};
+use specsim::figures::{self, Scale};
+use specsim::metrics::report::{self, SummaryRow};
+use specsim::scheduler::{self, SchedulerKind};
+use specsim::stats::Pcg64;
+use specsim::util::cli::Args;
+
+const USAGE: &str = "specsim — speculative execution for MapReduce-like clusters (Xu & Lau 2014)
+
+USAGE: specsim <command> [flags]
+
+COMMANDS
+  simulate   --scheduler <kind> [--machines N] [--horizon T] [--lambda L]
+             [--seed S] [--sigma X] [--config file.toml]
+             [--artifacts-dir DIR] [--no-runtime]
+  compare    [--schedulers a,b,c] [same flags as simulate]
+  figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|all>
+             [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
+  threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
+  trace      --out FILE [--lambda L] [--horizon T] [--seed S]
+  serve      [--machines N] [--rate R] [--jobs J] [--scheduler kind]
+             [--artifacts-dir DIR]
+
+scheduler kinds: naive clone_all mantri late sca sda ese";
+
+fn build_common(args: &Args) -> Result<(SimConfig, WorkloadConfig), String> {
+    let mut cfg = match args.str("config") {
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| e.to_string())?;
+            SimConfig::from_toml(&text)?
+        }
+        None => {
+            let mut c = SimConfig::default();
+            c.machines = args.usize("machines", 3000)?;
+            c.horizon = args.f64("horizon", 1500.0)?;
+            c
+        }
+    };
+    cfg.seed = args.u64("seed", cfg.seed)?;
+    if let Some(sigma) = args.f64_opt("sigma")? {
+        cfg.sigma = Some(sigma);
+    }
+    cfg.artifacts_dir = args.string("artifacts-dir", &cfg.artifacts_dir);
+    if args.has("no-runtime") {
+        cfg.use_runtime = false;
+    }
+    cfg.validate()?;
+    let lambda = args.f64("lambda", 6.0)?;
+    Ok((cfg, WorkloadConfig::paper(lambda)))
+}
+
+fn run_one(cfg: &SimConfig, wl: &WorkloadConfig, kind: SchedulerKind) -> Result<SummaryRow, String> {
+    let mut c = cfg.clone();
+    c.scheduler = kind;
+    let workload = generate(wl, c.horizon, c.seed);
+    let sched = scheduler::build(&c, wl)?;
+    let res = Simulator::new(c, workload, sched).run();
+    Ok(SummaryRow::from_result(&res))
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(rest, &["no-runtime", "help"])?;
+    if args.has("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "simulate" => {
+            let (cfg, wl) = build_common(&args)?;
+            let kind: SchedulerKind = args.string("scheduler", "sca").parse()?;
+            let row = run_one(&cfg, &wl, kind)?;
+            print!("{}", report::summary_table(&[row]));
+        }
+        "compare" => {
+            let (cfg, wl) = build_common(&args)?;
+            let kinds: Vec<SchedulerKind> = args
+                .string("schedulers", "sca,sda,ese,mantri,naive")
+                .split(',')
+                .map(|s| s.trim().parse())
+                .collect::<Result<_, _>>()?;
+            let mut rows = Vec::new();
+            for kind in kinds {
+                rows.push(run_one(&cfg, &wl, kind)?);
+            }
+            print!("{}", report::summary_table(&rows));
+        }
+        "figure" => {
+            let id = args
+                .positional()
+                .first()
+                .ok_or("figure: which one? (fig1..fig6, threshold, all)")?
+                .clone();
+            let out_dir = PathBuf::from(args.string("out-dir", "results"));
+            let artifacts_dir = args.string("artifacts-dir", "artifacts");
+            let scale = Scale(args.f64("scale", 1.0)?);
+            match id.as_str() {
+                "fig1" => figures::fig1::run(&out_dir, &artifacts_dir, scale)?,
+                "fig2" => figures::fig2::run(&out_dir, &artifacts_dir, scale)?,
+                "fig3" => figures::fig3::run(&out_dir, &artifacts_dir, scale)?,
+                "fig4" => figures::fig4::run(&out_dir, &artifacts_dir, scale)?,
+                "fig5" => figures::fig5::run(&out_dir, &artifacts_dir, scale)?,
+                "fig6" => figures::fig6::run(&out_dir, &artifacts_dir, scale)?,
+                "threshold" => figures::threshold::run(&out_dir, &artifacts_dir, scale)?,
+                "all" => figures::run_all(&out_dir, &artifacts_dir, scale)?,
+                other => return Err(format!("unknown figure '{other}'")),
+            }
+            println!("wrote series under {}", out_dir.display());
+        }
+        "threshold" => {
+            let rep = specsim::analysis::threshold::cutoff_lambda(
+                args.usize("machines", 3000)?,
+                args.f64("mean-tasks", 50.5)?,
+                args.f64("mean-duration", 2.5)?,
+                args.f64("alpha", 2.0)?,
+            );
+            println!(
+                "omega_stability = {:.4}\nomega_cutoff    = {:.4}\nlambda^U        = {:.3} jobs/unit",
+                rep.omega_stability, rep.omega_cutoff, rep.lambda_cutoff
+            );
+        }
+        "trace" => {
+            let out = PathBuf::from(args.str("out").ok_or("trace: --out FILE required")?);
+            let wl = generate(
+                &WorkloadConfig::paper(args.f64("lambda", 6.0)?),
+                args.f64("horizon", 100.0)?,
+                args.u64("seed", 1)?,
+            );
+            trace::save(&wl, &out)?;
+            println!("wrote {} jobs to {}", wl.specs.len(), out.display());
+        }
+        "serve" => {
+            let mut cfg = SimConfig::default();
+            cfg.machines = args.usize("machines", 200)?;
+            cfg.horizon = f64::INFINITY;
+            cfg.scheduler = args.string("scheduler", "sda").parse()?;
+            cfg.artifacts_dir = args.string("artifacts-dir", "artifacts");
+            if args.has("no-runtime") {
+                cfg.use_runtime = false;
+            }
+            let rate = args.f64("rate", 50.0)?;
+            let jobs = args.u64("jobs", 500)?;
+            let master = Master::new(cfg);
+            let metrics = master.metrics.clone();
+            let handle = master.spawn()?;
+            let mut rng = Pcg64::new(42, 0);
+            let mut accepted = 0u64;
+            for _ in 0..jobs {
+                std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+                let sub = Submission {
+                    num_tasks: rng.uniform_u64(1, 100) as u32,
+                    mean_duration: rng.uniform_f64(1.0, 4.0),
+                    alpha: 2.0,
+                };
+                if handle.submit(sub)?.is_accepted() {
+                    accepted += 1;
+                }
+            }
+            let report = handle.shutdown()?;
+            println!(
+                "submitted {jobs}, accepted {accepted}, completed {}",
+                report.completed.len()
+            );
+            let mean_flow = report.completed.iter().map(|r| r.flowtime).sum::<f64>()
+                / report.completed.len().max(1) as f64;
+            println!("mean flowtime (virtual units): {mean_flow:.3}");
+            println!("--- metrics ---\n{}", metrics.render());
+        }
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => return Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Per-job metrics and the report writers behind the figure harness.
+
+pub mod report;
+
+/// One completed job's accounting (the unit every paper CMF is built from).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobRecord {
+    pub job: u32,
+    pub arrival: f64,
+    pub num_tasks: u32,
+    pub mean_duration: f64,
+    pub finish: f64,
+    /// finish - arrival (Definition 1).
+    pub flowtime: f64,
+    /// gamma * total machine-time over all copies.
+    pub resource: f64,
+    /// Queueing delay: first task launch - arrival (w_i - a_i).
+    pub wait: f64,
+}
+
+impl JobRecord {
+    /// The paper's combined metric: utility (-flowtime) minus resource.
+    pub fn net_utility(&self) -> f64 {
+        -self.flowtime - self.resource
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_utility() {
+        let r = JobRecord {
+            job: 0,
+            arrival: 1.0,
+            num_tasks: 2,
+            mean_duration: 1.0,
+            finish: 4.0,
+            flowtime: 3.0,
+            resource: 0.5,
+            wait: 1.0,
+        };
+        assert!((r.net_utility() + 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,151 @@
+//! Report writers: pretty summary tables for the terminal and CSV series
+//! for the per-figure output files under `results/`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::cluster::sim::SimResult;
+use crate::stats::Cdf;
+
+/// Headline comparison row for one scheduler run.
+#[derive(Clone, Debug)]
+pub struct SummaryRow {
+    pub scheduler: &'static str,
+    pub jobs: usize,
+    pub mean_flowtime: f64,
+    pub p80_flowtime: f64,
+    pub p90_flowtime: f64,
+    pub mean_resource: f64,
+    pub p80_resource: f64,
+    pub mean_net_utility: f64,
+    pub utilization: f64,
+    pub speculative_launches: u64,
+}
+
+impl SummaryRow {
+    pub fn from_result(res: &SimResult) -> Self {
+        let mut ft = res.flowtime_cdf();
+        let mut rs = res.resource_cdf();
+        SummaryRow {
+            scheduler: res.scheduler,
+            jobs: res.completed.len(),
+            mean_flowtime: ft.mean(),
+            p80_flowtime: ft.quantile(0.8),
+            p90_flowtime: ft.quantile(0.9),
+            mean_resource: rs.mean(),
+            p80_resource: rs.quantile(0.8),
+            mean_net_utility: res.mean_net_utility(),
+            utilization: res.utilization,
+            speculative_launches: res.speculative_launches,
+        }
+    }
+}
+
+/// Render rows as an aligned terminal table (paper-style comparison).
+pub fn summary_table(rows: &[SummaryRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<10} {:>7} {:>9} {:>8} {:>8} {:>9} {:>8} {:>10} {:>6} {:>8}",
+        "scheduler",
+        "jobs",
+        "mean_ft",
+        "p80_ft",
+        "p90_ft",
+        "mean_res",
+        "p80_res",
+        "net_util",
+        "util",
+        "backups"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<10} {:>7} {:>9.3} {:>8.2} {:>8.2} {:>9.3} {:>8.2} {:>10.3} {:>6.3} {:>8}",
+            r.scheduler,
+            r.jobs,
+            r.mean_flowtime,
+            r.p80_flowtime,
+            r.p90_flowtime,
+            r.mean_resource,
+            r.p80_resource,
+            r.mean_net_utility,
+            r.utilization,
+            r.speculative_launches
+        );
+    }
+    out
+}
+
+/// CSV with one CMF series per labelled sample set (the paper's Fig. 2/6
+/// panels).  Columns: label,x,cmf.
+pub fn cmf_csv(series: &mut [(&str, Cdf)], points: usize) -> String {
+    let mut out = String::from("label,x,cmf\n");
+    for (label, cdf) in series.iter_mut() {
+        for (x, f) in cdf.cmf_series(points) {
+            let _ = writeln!(out, "{label},{x},{f}");
+        }
+    }
+    out
+}
+
+/// Simple labelled (x, y) series CSV: label,x,y.
+pub fn xy_csv(series: &[(String, Vec<(f64, f64)>)]) -> String {
+    let mut out = String::from("label,x,y\n");
+    for (label, pts) in series {
+        for (x, y) in pts {
+            let _ = writeln!(out, "{label},{x},{y}");
+        }
+    }
+    out
+}
+
+pub fn write_file(path: impl AsRef<Path>, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = vec![SummaryRow {
+            scheduler: "sca",
+            jobs: 10,
+            mean_flowtime: 1.5,
+            p80_flowtime: 2.0,
+            p90_flowtime: 3.0,
+            mean_resource: 0.5,
+            p80_resource: 0.7,
+            mean_net_utility: -2.0,
+            utilization: 0.4,
+            speculative_launches: 12,
+        }];
+        let t = summary_table(&rows);
+        assert!(t.contains("sca"));
+        assert_eq!(t.lines().count(), 2);
+    }
+
+    #[test]
+    fn xy_csv_format() {
+        let s = xy_csv(&[("a".into(), vec![(1.0, 2.0), (3.0, 4.0)])]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "label,x,y");
+        assert_eq!(lines[1], "a,1,2");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn cmf_csv_format() {
+        let mut c = Cdf::new();
+        c.extend([1.0, 2.0, 3.0]);
+        let s = cmf_csv(&mut [("x", c)], 3);
+        assert!(s.starts_with("label,x,cmf\n"));
+        assert!(s.lines().count() > 3);
+    }
+}

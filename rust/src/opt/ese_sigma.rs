@@ -1,0 +1,99 @@
+//! ESE analysis (Sec. VI-B): the optimal duplicate threshold sigma* from
+//! Eq. (30)-(33), and the Eq. (29) small-job cloning objective used by
+//! Algorithm 2's third level.
+
+use super::pareto_math::{emin_coeff, ese_resource, flow_integral};
+
+/// sigma* = argmin_sigma E[R](sigma) for the given heavy-tail order
+/// (Fig. 4: ~1.7-1.9 at alpha = 2, approaching ~2 for larger alpha).
+pub fn sigma_star(alpha: f64) -> f64 {
+    let mut best = (1.0, f64::INFINITY);
+    for i in 1..=120 {
+        let sigma = i as f64 * 0.05;
+        let v = ese_resource(alpha, sigma);
+        if v < best.1 {
+            best = (sigma, v);
+        }
+    }
+    // local refinement
+    let (mut s, mut v) = best;
+    let mut step = 0.025;
+    for _ in 0..8 {
+        for cand in [s - step, s + step] {
+            if cand > 0.0 {
+                let cv = ese_resource(alpha, cand);
+                if cv < v {
+                    s = cand;
+                    v = cv;
+                }
+            }
+        }
+        step *= 0.5;
+    }
+    s
+}
+
+/// Eq. (29): optimal clone count for one small job scheduled in isolation —
+/// argmax_c U(E[t], m) - gamma sum_j c E[t_j] with U = -E[t], capped so the
+/// job's clones fit the idle machines.
+pub fn small_job_clones(
+    mu: f64,
+    m: f64,
+    gamma: f64,
+    alpha: f64,
+    r: u32,
+    n_avail: f64,
+) -> u32 {
+    let fit = (n_avail / m.max(1.0)).floor();
+    let cap = (r as f64).min(fit).max(1.0) as u32;
+    let mut best = (1u32, f64::NEG_INFINITY);
+    for c in 1..=cap {
+        let beta = alpha * c as f64;
+        let obj = -(mu * flow_integral(beta, m)) - gamma * m * c as f64 * mu * emin_coeff(beta);
+        if obj > best.1 {
+            best = (c, obj);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_star_alpha2_near_paper() {
+        let s = sigma_star(2.0);
+        assert!((1.5..=2.0).contains(&s), "sigma* = {s}");
+    }
+
+    #[test]
+    fn sigma_star_flattens_toward_2() {
+        for alpha in [3.0, 4.0, 5.0] {
+            let s = sigma_star(alpha);
+            assert!((1.6..=2.2).contains(&s), "alpha={alpha}: {s}");
+        }
+    }
+
+    #[test]
+    fn small_job_clones_more_when_cheap() {
+        let many = small_job_clones(0.5, 5.0, 1e-4, 2.0, 8, 1000.0);
+        let few = small_job_clones(0.5, 5.0, 10.0, 2.0, 8, 1000.0);
+        assert!(many > few, "{many} vs {few}");
+        assert_eq!(few, 1);
+    }
+
+    #[test]
+    fn small_job_clones_respects_capacity() {
+        // 5 tasks, 12 idle machines -> at most 2 copies each
+        let c = small_job_clones(0.5, 5.0, 1e-4, 2.0, 8, 12.0);
+        assert!(c <= 2, "c = {c}");
+        assert!(c >= 1);
+    }
+
+    #[test]
+    fn small_job_clones_capped_at_r() {
+        let c = small_job_clones(0.5, 2.0, 1e-6, 2.0, 4, 1e6);
+        assert_eq!(c, 4);
+    }
+}

@@ -1,0 +1,369 @@
+//! Pure-rust gradient-projection solver for P2 (Sec. IV-A) — the exact twin
+//! of the AOT-compiled JAX graph (`python/compile/model.py::p2_solve`), used
+//! as the runtime fallback and as the cross-check in integration tests.
+//!
+//! Dual updates (the paper's algorithm, with the capacity step scaled by
+//! 1/N to keep the price increment O(eta1)):
+//!   c_i    <- argmax_c  A_i(c) - (nu m_i + xi_i - h_i) c       (grid argmax)
+//!   nu     <- [nu + eta1/N (sum_i m_i c_i - N)]+
+//!   xi_i   <- [xi_i + eta2 (c_i - r)]+
+//!   h_i    <- [h_i + eta3 (1 - c_i)]+
+//! with A_i(c) = -(mu_i I(alpha c, m_i) + age_i) - gamma m_i c mu_i E_min(c)
+//! and primal recovery from the tail-averaged multipliers.
+
+use std::collections::HashMap;
+
+use super::pareto_math::{emin_coeff, flow_integral};
+
+/// The paper's Fig. 1 step sizes.
+pub const ETAS: (f64, f64, f64) = (0.2, 0.3, 0.4);
+
+/// One pending job in a P2 batch.
+#[derive(Clone, Copy, Debug)]
+pub struct P2Job {
+    /// Pareto scale of the task-duration distribution.
+    pub mu: f64,
+    /// Number of tasks m_i.
+    pub m: f64,
+    /// Current queueing age l - a_i (constant in c; kept for the objective).
+    pub age: f64,
+}
+
+/// A P2 instance for one scheduling slot.
+#[derive(Clone, Debug)]
+pub struct P2Problem {
+    pub jobs: Vec<P2Job>,
+    /// Idle machines N(l).
+    pub n_avail: f64,
+    pub gamma: f64,
+    /// Per-task copy cap r.
+    pub r: f64,
+    /// Common heavy-tail order.
+    pub alpha: f64,
+}
+
+/// Solver output: continuous clone counts (round with
+/// [`super::p2::round_and_repair`]), the capacity price, and the primal
+/// objective value at the recovered point.
+#[derive(Clone, Debug)]
+pub struct P2Solution {
+    pub c: Vec<f64>,
+    pub nu: f64,
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+/// Grid-argmax gradient-projection solver.
+#[derive(Clone, Debug)]
+pub struct GradientSolver {
+    /// Candidate clone grid (must start at 1.0).
+    pub c_grid: Vec<f64>,
+    pub iters: usize,
+    /// Cache of the normalized flow integrals I(alpha c_g, m) keyed by
+    /// (alpha bits, integer m): the quadrature is the solve's only
+    /// expensive step and m is a small integer in practice.
+    flow_cache: HashMap<(u64, u32), Vec<f64>>,
+}
+
+impl Default for GradientSolver {
+    fn default() -> Self {
+        // mirror of python/compile/kernels/grids.py: [1, 16], 64 points
+        let n = 64;
+        let c_grid = (0..n)
+            .map(|i| 1.0 + 15.0 * i as f64 / (n - 1) as f64)
+            .collect();
+        GradientSolver { c_grid, iters: 400, flow_cache: HashMap::new() }
+    }
+}
+
+impl GradientSolver {
+    /// I(alpha c_g, m) over the grid, cached for integral m.
+    fn flow_row(&mut self, alpha: f64, m: f64) -> Vec<f64> {
+        let mi = m.round();
+        let cacheable = (m - mi).abs() < 1e-9 && mi >= 1.0 && mi <= 1e6;
+        if cacheable {
+            let key = (alpha.to_bits(), mi as u32);
+            if let Some(row) = self.flow_cache.get(&key) {
+                return row.clone();
+            }
+            let row: Vec<f64> = self
+                .c_grid
+                .iter()
+                .map(|&c| flow_integral(alpha * c, mi))
+                .collect();
+            self.flow_cache.insert(key, row.clone());
+            row
+        } else {
+            self.c_grid
+                .iter()
+                .map(|&c| flow_integral(alpha * c, m.max(1.0)))
+                .collect()
+        }
+    }
+
+    /// Precompute A[b][g] for the batch.
+    fn table(&mut self, p: &P2Problem) -> Vec<Vec<f64>> {
+        let jobs = p.jobs.clone();
+        jobs.iter()
+            .map(|j| {
+                let m = j.m.max(1.0);
+                let flow = self.flow_row(p.alpha, m);
+                self.c_grid
+                    .iter()
+                    .zip(&flow)
+                    .map(|(&c, &fi)| {
+                        let beta = p.alpha * c;
+                        -(j.mu * fi + j.age) - p.gamma * m * c * j.mu * emin_coeff(beta)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn argmax_row(&self, row: &[f64], price: f64, r: f64) -> usize {
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for (g, (&a, &c)) in row.iter().zip(&self.c_grid).enumerate() {
+            if c > r {
+                break; // grid is ascending; beyond r is infeasible
+            }
+            let v = a - price * c;
+            if v > best_v {
+                best_v = v;
+                best = g;
+            }
+        }
+        best
+    }
+
+    /// Warm-started hill-climb argmax: the score row `A(c) - price*c` is
+    /// concave in c (Lemma 1), so from the previous iteration's optimum we
+    /// only walk until the score stops improving — O(moved) instead of
+    /// O(G) per job per dual iteration (EXPERIMENTS.md §Perf).
+    #[inline]
+    fn argmax_row_from(&self, row: &[f64], price: f64, g_max: usize, start: usize) -> usize {
+        let score = |g: usize| row[g] - price * self.c_grid[g];
+        let mut g = start.min(g_max);
+        let mut s = score(g);
+        // try ascending
+        while g + 1 <= g_max {
+            let s_next = score(g + 1);
+            if s_next > s {
+                g += 1;
+                s = s_next;
+            } else {
+                break;
+            }
+        }
+        // try descending (only one direction can improve under concavity)
+        while g > 0 {
+            let s_prev = score(g - 1);
+            if s_prev > s {
+                g -= 1;
+                s = s_prev;
+            } else {
+                break;
+            }
+        }
+        g
+    }
+
+    /// Largest grid index with c <= r.
+    fn g_max(&self, r: f64) -> usize {
+        match self.c_grid.iter().rposition(|&c| c <= r) {
+            Some(g) => g,
+            None => 0,
+        }
+    }
+
+    /// Run the solver.  `trace`, when non-empty on return, holds the
+    /// Cesaro-averaged primal iterates (what Fig. 1 plots).
+    ///
+    /// Early termination (hot-path optimization, EXPERIMENTS.md §Perf):
+    /// once the primal point has not moved for `STABLE_PATIENCE` straight
+    /// iterations (a fixed point of the dual dynamics on the grid) the
+    /// remaining iterations cannot change anything — stop.  Tracing runs
+    /// disable this so Fig. 1 shows the full trajectory.
+    pub fn solve_traced(&mut self, p: &P2Problem, trace: Option<&mut Vec<Vec<f64>>>) -> P2Solution {
+        const STABLE_PATIENCE: usize = 40;
+        const MIN_ITERS: usize = 80;
+        let b = p.jobs.len();
+        let table = self.table(p);
+        let (eta1, eta2, eta3) = ETAS;
+        let eta1 = eta1 / p.n_avail.max(1.0);
+        let mut nu = 0.1;
+        let mut xi = vec![0.1; b];
+        let mut h = vec![0.1; b];
+        let mut c = vec![1.0; b];
+        let mut g_cur = vec![0usize; b];
+        let g_max = self.g_max(p.r);
+        // dual histories (flat, preallocated): primal recovery averages the
+        // tail half of however many iterations actually ran
+        let mut nu_h = Vec::with_capacity(self.iters);
+        let mut xi_h = vec![0.0f64; self.iters * b];
+        let mut h_h = vec![0.0f64; self.iters * b];
+        let mut c_sum = vec![0.0; b];
+        let mut local_trace = Vec::new();
+        let want_trace = trace.is_some();
+        let mut stable = 0usize;
+        let mut ran = 0usize;
+        for k in 0..self.iters {
+            ran = k + 1;
+            let mut used = 0.0;
+            let mut moved = false;
+            for i in 0..b {
+                let price = nu * p.jobs[i].m + xi[i] - h[i];
+                let g = self.argmax_row_from(&table[i], price, g_max, g_cur[i]);
+                moved |= g != g_cur[i];
+                g_cur[i] = g;
+                c[i] = self.c_grid[g];
+                used += p.jobs[i].m * c[i];
+            }
+            nu = (nu + eta1 * (used - p.n_avail)).max(0.0);
+            for i in 0..b {
+                xi[i] = (xi[i] + eta2 * (c[i] - p.r)).max(0.0);
+                h[i] = (h[i] + eta3 * (1.0 - c[i])).max(0.0);
+            }
+            nu_h.push(nu);
+            xi_h[k * b..(k + 1) * b].copy_from_slice(&xi);
+            h_h[k * b..(k + 1) * b].copy_from_slice(&h);
+            if want_trace {
+                for i in 0..b {
+                    c_sum[i] += c[i];
+                }
+                local_trace
+                    .push(c_sum.iter().map(|s| s / (k + 1) as f64).collect::<Vec<f64>>());
+            } else {
+                stable = if moved { 0 } else { stable + 1 };
+                if stable >= STABLE_PATIENCE && ran >= MIN_ITERS {
+                    break;
+                }
+            }
+        }
+        // primal recovery from tail-averaged duals
+        let half = ran / 2;
+        let n_acc = (ran - half) as f64;
+        let nu_bar = nu_h[half..].iter().sum::<f64>() / n_acc;
+        let mut objective = 0.0;
+        for i in 0..b {
+            let mut xi_bar = 0.0;
+            let mut h_bar = 0.0;
+            for k in half..ran {
+                xi_bar += xi_h[k * b + i];
+                h_bar += h_h[k * b + i];
+            }
+            let price = nu_bar * p.jobs[i].m + xi_bar / n_acc - h_bar / n_acc;
+            let g = self.argmax_row(&table[i], price, p.r);
+            c[i] = self.c_grid[g];
+            objective += table[i][g];
+        }
+        if let Some(t) = trace {
+            *t = local_trace;
+        }
+        P2Solution { c, nu: nu_bar, objective, iterations: ran }
+    }
+
+    pub fn solve(&mut self, p: &P2Problem) -> P2Solution {
+        self.solve_traced(p, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 1 instance.
+    pub fn fig1_problem() -> P2Problem {
+        P2Problem {
+            jobs: vec![
+                P2Job { mu: 1.0, m: 10.0, age: 0.0 },
+                P2Job { mu: 2.0, m: 20.0, age: 0.0 },
+                P2Job { mu: 1.0, m: 5.0, age: 0.0 },
+                P2Job { mu: 2.0, m: 10.0, age: 0.0 },
+            ],
+            n_avail: 100.0,
+            gamma: 0.01,
+            r: 8.0,
+            alpha: 2.0,
+        }
+    }
+
+    #[test]
+    fn fig1_converges_and_feasible() {
+        let mut solver = GradientSolver::default();
+        let mut trace = Vec::new();
+        let sol = solver.solve_traced(&fig1_problem(), Some(&mut trace));
+        let p = fig1_problem();
+        let used: f64 = sol.c.iter().zip(&p.jobs).map(|(c, j)| c * j.m).sum();
+        assert!(used <= p.n_avail * 1.05, "used {used}");
+        assert!(sol.nu > 0.0, "capacity should be binding");
+        // averaged iterates settle
+        let last = &trace[trace.len() - 1];
+        let prev = &trace[trace.len() - 40];
+        for (a, b) in last.iter().zip(prev) {
+            assert!((a - b).abs() < 0.05);
+        }
+        for &c in &sol.c {
+            assert!((1.0..=8.0).contains(&c));
+        }
+    }
+
+    #[test]
+    fn matches_jax_solver_fig1() {
+        // pinned against python/compile/model.py::p2_solve on the same
+        // instance (c* = [1.952, 2.190, 2.190, 2.429], nu = 0.0779)
+        let sol = GradientSolver::default().solve(&fig1_problem());
+        let want = [1.952, 2.190, 2.190, 2.429];
+        for (got, want) in sol.c.iter().zip(want) {
+            assert!((got - want).abs() < 0.25, "{:?} vs {want:?}", sol.c);
+        }
+        assert!((sol.nu - 0.0779).abs() < 0.03, "nu={}", sol.nu);
+    }
+
+    #[test]
+    fn ample_capacity_maxes_out() {
+        let p = P2Problem {
+            jobs: vec![P2Job { mu: 1.0, m: 4.0, age: 0.0 }],
+            n_avail: 4000.0,
+            gamma: 1e-4,
+            r: 8.0,
+            alpha: 2.0,
+        };
+        let sol = GradientSolver::default().solve(&p);
+        assert!(sol.c[0] >= 7.5, "c={:?}", sol.c);
+    }
+
+    #[test]
+    fn expensive_resource_disables_cloning() {
+        let p = P2Problem {
+            jobs: vec![P2Job { mu: 1.0, m: 10.0, age: 0.0 }],
+            n_avail: 1000.0,
+            gamma: 100.0,
+            r: 8.0,
+            alpha: 2.0,
+        };
+        let sol = GradientSolver::default().solve(&p);
+        assert_eq!(sol.c[0], 1.0);
+    }
+
+    #[test]
+    fn age_does_not_change_allocation() {
+        // age is constant in c: same argmax, shifted objective
+        let mut p = fig1_problem();
+        let a = GradientSolver::default().solve(&p);
+        for j in &mut p.jobs {
+            j.age = 5.0;
+        }
+        let b = GradientSolver::default().solve(&p);
+        assert_eq!(a.c, b.c);
+        assert!(b.objective < a.objective);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let p = P2Problem { jobs: vec![], n_avail: 10.0, gamma: 0.01, r: 8.0, alpha: 2.0 };
+        let sol = GradientSolver::default().solve(&p);
+        assert!(sol.c.is_empty());
+        assert_eq!(sol.objective, 0.0);
+    }
+}

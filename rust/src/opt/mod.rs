@@ -1,0 +1,19 @@
+//! The paper's optimization machinery.
+//!
+//! * [`pareto_math`] — order-statistic expectations under Pareto durations
+//!   (the same quadrature the Pallas kernels compute, in f64).
+//! * [`gradient`] — the Sec. IV-A gradient-projection solver for P2
+//!   (pure-rust twin of the AOT artifact; also the runtime fallback).
+//! * [`p2`] — P2 problem assembly, integer rounding + capacity repair.
+//! * [`p3`] — the SDA solution: c*(sigma) and sigma* (Eq. 26-28, Thm. 3).
+//! * [`ese_sigma`] — the ESE analysis E[R](sigma) (Eq. 30-33) and the
+//!   single-job cloning objective of Eq. 29.
+
+pub mod ese_sigma;
+pub mod gradient;
+pub mod p2;
+pub mod p3;
+pub mod pareto_math;
+
+pub use gradient::{GradientSolver, P2Problem, P2Solution};
+pub use p2::round_and_repair;

@@ -1,0 +1,113 @@
+//! P2 post-processing: turn the solver's continuous clone counts into an
+//! integer, capacity-feasible assignment.
+//!
+//! The solver (rust fallback or PJRT artifact) returns c in [1, r] per job;
+//! the cluster needs integers with sum_i m_i c_i <= N(l).  We round to the
+//! nearest integer, then shed copies (largest c first) while over capacity.
+//!
+//! Deliberately NO greedy filling of spare capacity: the optimizer already
+//! balanced flowtime gain against the resource term, and pushing every job
+//! to r whenever machines are idle drives sustained utilization past 1
+//! (util grows ~ c^2/(2c-1) under Pareto min-of-c service) — the regression
+//! that motivated this note showed SCA *losing* to Mantri that way.
+
+/// Round + repair.  `m[i]` is each job's task count; returns integer copy
+/// counts in [1, r] with `sum m_i c_i <= n_avail` (when feasible at c = 1;
+/// otherwise everything is clamped to 1 and the caller's SRPT branch should
+/// have been taken instead).
+pub fn round_and_repair(c: &[f64], m: &[f64], n_avail: f64, r: u32) -> Vec<u32> {
+    assert_eq!(c.len(), m.len());
+    let mut ci: Vec<u32> = c
+        .iter()
+        .map(|&x| (x.round().max(1.0) as u32).min(r))
+        .collect();
+    let used = |ci: &[u32]| -> f64 {
+        ci.iter().zip(m).map(|(&c, &mi)| c as f64 * mi).sum()
+    };
+    // shed copies while infeasible
+    while used(&ci) > n_avail {
+        // largest c first; among ties, the biggest m sheds the most
+        let Some(i) = (0..ci.len())
+            .filter(|&i| ci[i] > 1)
+            .max_by(|&a, &b| {
+                ci[a]
+                    .cmp(&ci[b])
+                    .then(m[a].partial_cmp(&m[b]).unwrap())
+            })
+        else {
+            break; // all at 1: infeasible even without cloning
+        };
+        ci[i] -= 1;
+    }
+    ci
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_capacity() {
+        let c = [3.7, 2.2, 5.9];
+        let m = [10.0, 20.0, 5.0];
+        let ci = round_and_repair(&c, &m, 100.0, 8);
+        let used: f64 = ci.iter().zip(&m).map(|(&c, &mi)| c as f64 * mi).sum();
+        assert!(used <= 100.0, "used {used}, ci {ci:?}");
+        for &c in &ci {
+            assert!((1..=8).contains(&c));
+        }
+    }
+
+    #[test]
+    fn no_greedy_fill_beyond_solution() {
+        // spare capacity does NOT inflate the optimizer's answer
+        let ci = round_and_repair(&[1.2], &[10.0], 85.0, 8);
+        assert_eq!(ci, vec![1]);
+        let ci = round_and_repair(&[3.6], &[10.0], 85.0, 8);
+        assert_eq!(ci, vec![4]);
+    }
+
+    #[test]
+    fn all_at_one_when_tight() {
+        let ci = round_and_repair(&[4.0, 4.0], &[30.0, 30.0], 60.0, 8);
+        assert_eq!(ci, vec![1, 1]);
+    }
+
+    #[test]
+    fn infeasible_even_at_one_stays_one() {
+        let ci = round_and_repair(&[2.0], &[100.0], 50.0, 8);
+        assert_eq!(ci, vec![1]);
+    }
+
+    #[test]
+    fn empty() {
+        assert!(round_and_repair(&[], &[], 10.0, 8).is_empty());
+    }
+
+    #[test]
+    fn caps_at_r() {
+        let ci = round_and_repair(&[9.9], &[1.0], 1000.0, 8);
+        assert_eq!(ci, vec![8]);
+    }
+
+    /// Property test (hand-rolled: proptest is unavailable offline): for
+    /// random instances feasible at c = 1, repair always fits capacity and
+    /// keeps every count in [1, r].
+    #[test]
+    fn prop_feasible_and_bounded() {
+        let mut rng = crate::stats::Pcg64::new(0xbeef, 0);
+        for case in 0..500 {
+            let njobs = rng.uniform_u64(1, 40) as usize;
+            let c: Vec<f64> = (0..njobs).map(|_| rng.uniform_f64(1.0, 8.0)).collect();
+            let m: Vec<f64> = (0..njobs).map(|_| rng.uniform_f64(1.0, 100.0)).collect();
+            let headroom = rng.uniform_f64(1.0, 4.0);
+            let n = m.iter().sum::<f64>() * headroom;
+            let ci = round_and_repair(&c, &m, n, 8);
+            let used: f64 = ci.iter().zip(&m).map(|(&c, &mi)| c as f64 * mi).sum();
+            assert!(used <= n + 1e-9, "case {case}: used {used} > {n}");
+            for &x in &ci {
+                assert!((1..=8).contains(&x), "case {case}: c = {x}");
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! The SDA solution of P3 (Sec. V-A): the optimal number of copies once a
+//! straggler is detected, c*(sigma) via Eq. 27, and the optimal detection
+//! threshold sigma* via Eq. 28.
+//!
+//! Theorem 3: under Pareto durations c* = 2 (one backup) and sigma* depends
+//! only on the heavy-tail order alpha — for alpha = 2 it is 1 + sqrt(2)/2.
+//! The solver below computes both *numerically* from the same expectations,
+//! so the theorem is continuously re-verified by the test suite (and by a
+//! debug assertion at scheduler construction).
+
+use super::pareto_math::{sda_resource, sda_tau};
+
+/// Numerical solution of P3 for one job class.
+#[derive(Clone, Copy, Debug)]
+pub struct SdaPolicy {
+    /// Detection threshold multiplier: straggler iff t_rem > sigma * E[x].
+    pub sigma: f64,
+    /// Total copies for a detected straggler (incl. the original).
+    pub c_star: u32,
+    /// Expected per-task resource (unit-mean) at the optimum.
+    pub expected_resource: f64,
+}
+
+/// c*(sigma) = argmin_c tau(c, sigma) over c in {1..r} (Eq. 27).
+pub fn c_star(alpha: f64, s: f64, sigma: f64, r: u32) -> u32 {
+    let mut best = 1;
+    let mut best_v = f64::INFINITY;
+    for c in 1..=r {
+        let v = sda_tau(alpha, s, sigma, c as f64);
+        if v < best_v {
+            best_v = v;
+            best = c;
+        }
+    }
+    best
+}
+
+/// sigma* = argmin_sigma E[R | c = c*(sigma)] (Eq. 28), grid-searched over
+/// (0, 6] with local refinement.
+pub fn solve(alpha: f64, s: f64, r: u32) -> SdaPolicy {
+    let coarse: Vec<f64> = (1..=120).map(|i| i as f64 * 0.05).collect();
+    let eval = |sigma: f64| {
+        let c = c_star(alpha, s, sigma, r);
+        (sda_resource(alpha, s, sigma, c as f64), c)
+    };
+    let (mut best_sigma, mut best) = (coarse[0], eval(coarse[0]));
+    for &sig in &coarse[1..] {
+        let v = eval(sig);
+        if v.0 < best.0 {
+            best = v;
+            best_sigma = sig;
+        }
+    }
+    // local refinement around the coarse optimum
+    for k in 1..=20 {
+        let step = 0.045 * k as f64 / 20.0;
+        for sig in [best_sigma - step, best_sigma + step] {
+            if sig > 0.0 {
+                let v = eval(sig);
+                if v.0 < best.0 {
+                    best = v;
+                    best_sigma = sig;
+                }
+            }
+        }
+    }
+    SdaPolicy { sigma: best_sigma, c_star: best.1, expected_resource: best.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem3_alpha2() {
+        let pol = solve(2.0, 0.1, 8);
+        assert_eq!(pol.c_star, 2, "Theorem 3: one backup copy");
+        assert!(
+            (pol.sigma - (1.0 + 0.5 * 2.0f64.sqrt())).abs() < 0.08,
+            "sigma* = {} vs 1.707",
+            pol.sigma
+        );
+        assert!(pol.expected_resource < 1.0, "speculation saves resource");
+    }
+
+    #[test]
+    fn sigma_star_independent_of_s() {
+        let a = solve(2.0, 0.1, 8);
+        let b = solve(2.0, 0.35, 8);
+        assert!((a.sigma - b.sigma).abs() < 0.06, "{} vs {}", a.sigma, b.sigma);
+    }
+
+    #[test]
+    fn sigma_star_grows_with_alpha() {
+        let s2 = solve(2.0, 0.1, 8).sigma;
+        let s3 = solve(3.0, 0.1, 8).sigma;
+        assert!(s3 > s2, "{s3} vs {s2}");
+        assert!((1.5..2.3).contains(&s3));
+    }
+
+    #[test]
+    fn c_star_small_sigma_still_small() {
+        // even aggressive thresholds never want more than 2 copies under
+        // Pareto (the increasing-tau part of Theorem 3)
+        for sigma in [1.1, 1.5, 2.0, 3.0] {
+            assert!(c_star(2.0, 0.1, sigma, 8) <= 2);
+        }
+    }
+}

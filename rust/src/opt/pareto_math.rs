@@ -1,0 +1,272 @@
+//! Order-statistic expectations under Pareto task durations — the f64 twin
+//! of `python/compile/kernels/ref.py` (same integrals, same log-trapezoid
+//! quadrature), used by the pure-rust P2/P3 solvers and unit-tested against
+//! closed forms.
+//!
+//! Normalizations:
+//! * `flow_integral(beta, m)`  = E[max of m mins] / mu with beta = alpha*c.
+//! * `emin_coeff(beta)`        = E[min of c copies] / mu = beta/(beta-1).
+//! * `sda_tau`, `sda_resource` and `ese_resource` are per-task expectations
+//!   for a **unit-mean** Pareto (scale by E[x] at the call site).
+
+/// Log-spaced trapezoid nodes/weights for `integral_{lo}^{hi} g(u) du`.
+pub fn log_trap(lo: f64, hi: f64, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let (llo, lhi) = (lo.ln(), hi.ln());
+    let dx = (lhi - llo) / (n - 1) as f64;
+    let mut u = Vec::with_capacity(n);
+    let mut w = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = llo + dx * i as f64;
+        let ui = x.exp();
+        let wi = if i == 0 || i == n - 1 { 0.5 * dx } else { dx };
+        u.push(ui);
+        w.push(wi * ui);
+    }
+    (u, w)
+}
+
+/// `I(beta, m) = 1 + integral_1^inf (1 - (1 - u^-beta)^m) du`:
+/// normalized expected job span E[max_{j<=m} min_{k<=c}]/mu, beta = alpha*c.
+///
+/// Hot path for the P2 solver's table build — the (log u, weight) grid is
+/// computed once per process (EXPERIMENTS.md §Perf).
+pub fn flow_integral(beta: f64, m: f64) -> f64 {
+    use std::sync::OnceLock;
+    static GRID: OnceLock<(Vec<f64>, Vec<f64>)> = OnceLock::new();
+    let (lnu, w) = GRID.get_or_init(|| {
+        let (u, w) = log_trap(1.0, 1.0e7, 1024);
+        (u.iter().map(|x| x.ln()).collect(), w)
+    });
+    debug_assert!(beta > 1.0, "need alpha*c > 1 for a finite mean");
+    let mut acc = 1.0;
+    for (lui, wi) in lnu.iter().zip(w) {
+        // stable 1 - (1-p)^m with p = u^-beta
+        let p = (-beta * lui).exp().min(1.0);
+        let integrand = -f64::exp_m1(m * f64::ln_1p(-p));
+        acc += wi * integrand;
+    }
+    acc
+}
+
+/// E[min of c copies] / mu = beta / (beta - 1), beta = alpha*c.
+#[inline]
+pub fn emin_coeff(beta: f64) -> f64 {
+    beta / (beta - 1.0)
+}
+
+/// Unit-mean Pareto survival: S(t) = min(1, (mu/t)^alpha), mu = (a-1)/a.
+#[inline]
+fn unit_sf(t: f64, alpha: f64) -> f64 {
+    let mu = (alpha - 1.0) / alpha;
+    if t <= mu {
+        1.0
+    } else {
+        (mu / t).powf(alpha)
+    }
+}
+
+/// `tau(c, sigma) = E[c * d | straggler detected]` for a unit-mean Pareto
+/// (Eq. 26): d = min((1-s) t1, min of c-1 fresh copies) conditioned on
+/// (1-s) t1 > sigma.
+pub fn sda_tau(alpha: f64, s: f64, sigma: f64, c: f64) -> f64 {
+    let mu = (alpha - 1.0) / alpha;
+    let big_l = (sigma / (1.0 - s)).max(mu);
+    let sf_l = unit_sf(big_l, alpha);
+    let (t, w) = log_trap(1.0e-3, 1.0e5, 1024);
+    let mut acc = 0.0;
+    for (ti, wi) in t.iter().zip(&w) {
+        let fresh = unit_sf(*ti, alpha).powf(c - 1.0);
+        let orig = unit_sf((ti / (1.0 - s)).max(big_l), alpha) / sf_l;
+        acc += wi * fresh * orig;
+    }
+    c * acc
+}
+
+/// Unconditional per-task resource E[R] for the SDA model (Eq. 21):
+/// R = t1 if no straggler, s*t1 + c*d otherwise.  Unit-mean Pareto.
+pub fn sda_resource(alpha: f64, s: f64, sigma: f64, c: f64) -> f64 {
+    let mu = (alpha - 1.0) / alpha;
+    let big_l = (sigma / (1.0 - s)).max(mu);
+    let sf_l = unit_sf(big_l, alpha);
+    // E[t1; t1 > L] = L * S(L) * alpha/(alpha-1)
+    let e_tail = big_l * sf_l * alpha / (alpha - 1.0);
+    let e_head = 1.0 - e_tail;
+    s + (1.0 - s) * e_head + sf_l * sda_tau(alpha, s, sigma, c)
+}
+
+/// E[min(cap, x_new)] for a unit-mean Pareto = integral_0^cap S.
+fn emin_fresh(cap: f64, alpha: f64) -> f64 {
+    let mu = (alpha - 1.0) / alpha;
+    if cap <= 0.0 {
+        return 0.0;
+    }
+    if cap <= mu {
+        return cap;
+    }
+    mu + mu / (alpha - 1.0) * (1.0 - (mu / cap).powf(alpha - 1.0))
+}
+
+/// `E[R](sigma) / E[x]` for the ESE asktime model (Eq. 30-33, Fig. 4).
+pub fn ese_resource(alpha: f64, sigma: f64) -> f64 {
+    let mu = (alpha - 1.0) / alpha;
+    let l1 = sigma.max(mu);
+    // term1: E[x; x <= sigma] (0 when sigma < mu)
+    let term1 = if sigma >= mu {
+        1.0 - l1 * unit_sf(l1, alpha) * alpha / (alpha - 1.0)
+    } else {
+        0.0
+    };
+    // term2: for x = t > l1, asktime uniform on [0, t]
+    let (t, wt) = log_trap(1.0e-2, 1.0e5, 512);
+    let nv = 128usize;
+    let dv = 1.0 / (nv - 1) as f64;
+    let mut term2 = 0.0;
+    for (ti, wti) in t.iter().zip(&wt) {
+        if *ti <= l1 {
+            continue;
+        }
+        let span = ti - sigma;
+        // inner integral over v in [0,1], x_ask = span * v
+        let mut inner = 0.0;
+        for k in 0..nv {
+            let v = k as f64 * dv;
+            let wv = if k == 0 || k == nv - 1 { 0.5 * dv } else { dv };
+            let x_ask = span * v;
+            let rem = ti - x_ask;
+            inner += wv * (x_ask + 2.0 * emin_fresh(rem, alpha));
+        }
+        let cond = sigma + span / ti * inner;
+        let f = alpha * mu.powf(alpha) * ti.powf(-alpha - 1.0);
+        term2 += wti * cond * f;
+    }
+    term1 + term2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{Pareto, Pcg64};
+
+    #[test]
+    fn flow_integral_m1_closed_form() {
+        for beta in [1.5, 2.0, 4.0, 8.0] {
+            let got = flow_integral(beta, 1.0);
+            let want = beta / (beta - 1.0);
+            assert!((got - want).abs() / want < 1e-3, "beta={beta}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn flow_integral_m2_beta2_exact() {
+        // E[max of 2 Pareto(1,2)] = 8/3
+        let got = flow_integral(2.0, 2.0);
+        assert!((got - 8.0 / 3.0).abs() < 2e-3, "{got}");
+    }
+
+    #[test]
+    fn flow_integral_monotone() {
+        let mut prev = f64::INFINITY;
+        for c in [1.0, 2.0, 4.0, 8.0] {
+            let v = flow_integral(2.0 * c, 50.0);
+            assert!(v < prev);
+            prev = v;
+        }
+        assert!(flow_integral(4.0, 100.0) > flow_integral(4.0, 10.0));
+    }
+
+    #[test]
+    fn sda_tau_c1_closed_form() {
+        let (alpha, s) = (2.0, 0.2);
+        for sigma in [0.5f64, 1.0, 2.0] {
+            let mu = 0.5f64;
+            let l = (sigma / (1.0 - s)).max(mu);
+            let want = (1.0 - s) * l * alpha / (alpha - 1.0);
+            let got = sda_tau(alpha, s, sigma, 1.0);
+            assert!((got - want).abs() / want < 2e-3, "sigma={sigma}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sda_resource_large_sigma_is_mean() {
+        // sigma -> inf: never duplicate, E[R] -> E[x] = 1
+        let got = sda_resource(2.0, 0.1, 50.0, 2.0);
+        assert!((got - 1.0).abs() < 0.01, "{got}");
+    }
+
+    #[test]
+    fn theorem3_c_star_2_and_sigma_star() {
+        // c = 2 minimizes tau for sigma > 1 (alpha = 2) and the optimal
+        // sigma sits near 1 + sqrt(2)/2 = 1.707 independent of s
+        for s in [0.1, 0.3] {
+            for sigma in [1.2, 1.7, 2.5] {
+                let t2 = sda_tau(2.0, s, sigma, 2.0);
+                for c in [1.0, 3.0, 4.0, 8.0] {
+                    assert!(t2 < sda_tau(2.0, s, sigma, c), "sigma={sigma} c={c}");
+                }
+            }
+            let best = (0..110)
+                .map(|i| 0.5 + i as f64 * 0.05)
+                .min_by(|a, b| {
+                    sda_resource(2.0, s, *a, 2.0)
+                        .partial_cmp(&sda_resource(2.0, s, *b, 2.0))
+                        .unwrap()
+                })
+                .unwrap();
+            assert!((best - 1.707).abs() < 0.1, "s={s}: sigma*={best}");
+        }
+    }
+
+    #[test]
+    fn ese_resource_matches_monte_carlo() {
+        let (alpha, sigma) = (2.0, 1.7);
+        let p = Pareto::from_mean(1.0, alpha);
+        let mut rng = Pcg64::new(99, 0);
+        let n = 400_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let x = p.sample(&mut rng);
+            let ask = rng.uniform_f64(0.0, x);
+            let r = if x - ask > sigma {
+                let t_new = p.sample(&mut rng);
+                ask + 2.0 * (x - ask).min(t_new)
+            } else {
+                x
+            };
+            acc += r;
+        }
+        let mc = acc / n as f64;
+        let got = ese_resource(alpha, sigma);
+        assert!((got - mc).abs() < 0.02, "quad {got} vs mc {mc}");
+    }
+
+    #[test]
+    fn ese_sigma_star_fig4() {
+        // Fig. 4: minimum in [1.5, 2.2]; improvement shrinks with alpha
+        let mut gains = Vec::new();
+        for alpha in [2.0, 3.0, 4.0, 5.0] {
+            let (mut best_s, mut best_v) = (0.0, f64::INFINITY);
+            for i in 1..120 {
+                let sig = i as f64 * 0.05;
+                let v = ese_resource(alpha, sig);
+                if v < best_v {
+                    best_v = v;
+                    best_s = sig;
+                }
+            }
+            assert!((1.5..=2.2).contains(&best_s), "alpha={alpha}: sigma*={best_s}");
+            gains.push(1.0 - best_v);
+        }
+        for w in gains.windows(2) {
+            assert!(w[0] > w[1], "gain should shrink with alpha: {gains:?}");
+        }
+    }
+
+    #[test]
+    fn matches_python_oracle_spot_values() {
+        // cross-language pin: values computed by compile/kernels/ref.py
+        assert!((flow_integral(2.0, 20.0) - 7.9763).abs() < 0.03);
+        assert!((flow_integral(4.0, 20.0) - 2.6036).abs() < 0.01);
+        assert!((sda_tau(2.0, 0.2, 1.0, 2.0) - 1.6647).abs() < 0.01);
+        assert!((ese_resource(2.0, 1.7) - 0.9570).abs() < 0.005);
+    }
+}

@@ -1,0 +1,214 @@
+//! Artifact discovery: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) so the runtime knows the exact shapes and the
+//! static grids baked into each HLO module.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub file: String,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GridSpec {
+    pub lo: f64,
+    pub hi: f64,
+    pub n: usize,
+}
+
+impl GridSpec {
+    /// Materialize the (linear) grid.
+    pub fn values(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|i| self.lo + (self.hi - self.lo) * i as f64 / (self.n - 1) as f64)
+            .collect()
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<Self, String> {
+        Ok(GridSpec {
+            lo: j.get("lo").and_then(Json::as_f64).ok_or(format!("{what}.lo"))?,
+            hi: j.get("hi").and_then(Json::as_f64).ok_or(format!("{what}.hi"))?,
+            n: j.get("n").and_then(Json::as_usize).ok_or(format!("{what}.n"))?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Statics {
+    pub batch: usize,
+    pub c_grid: GridSpec,
+    pub sigma_grid: GridSpec,
+    pub sda_c_max: usize,
+    pub p2_iters: usize,
+    pub etas: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub statics: Statics,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    dir: PathBuf,
+}
+
+fn tensor_specs(j: &Json, what: &str) -> Result<Vec<TensorSpec>, String> {
+    j.as_arr()
+        .ok_or(format!("{what}: array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or(format!("{what}.name"))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or(format!("{what}.shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or(format!("{what}.shape: int")))
+                    .collect::<Result<_, _>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text)?;
+        let s = j.get("statics").ok_or("manifest: statics")?;
+        let statics = Statics {
+            batch: s.get("batch").and_then(Json::as_usize).ok_or("statics.batch")?,
+            c_grid: GridSpec::from_json(s.get("c_grid").ok_or("statics.c_grid")?, "c_grid")?,
+            sigma_grid: GridSpec::from_json(
+                s.get("sigma_grid").ok_or("statics.sigma_grid")?,
+                "sigma_grid",
+            )?,
+            sda_c_max: s
+                .get("sda_c_max")
+                .and_then(Json::as_usize)
+                .ok_or("statics.sda_c_max")?,
+            p2_iters: s
+                .get("p2_iters")
+                .and_then(Json::as_usize)
+                .ok_or("statics.p2_iters")?,
+            etas: s
+                .get("etas")
+                .and_then(Json::as_arr)
+                .ok_or("statics.etas")?
+                .iter()
+                .map(|e| e.as_f64().ok_or("statics.etas: num".to_string()))
+                .collect::<Result<_, _>>()?,
+        };
+        let mut artifacts = HashMap::new();
+        for (name, entry) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("manifest: artifacts")?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    inputs: tensor_specs(entry.get("inputs").ok_or("inputs")?, "inputs")?,
+                    outputs: tensor_specs(entry.get("outputs").ok_or("outputs")?, "outputs")?,
+                    file: entry
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or("file")?
+                        .to_string(),
+                },
+            );
+        }
+        Ok(Manifest { statics, artifacts, dir })
+    }
+
+    /// Absolute path of a named artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf, String> {
+        let entry = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest"))?;
+        let p = self.dir.join(&entry.file);
+        if !p.exists() {
+            return Err(format!("{} missing (run `make artifacts`)", p.display()));
+        }
+        Ok(p)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+            "statics": {
+                "batch": 64,
+                "c_grid": {"lo": 1.0, "hi": 16.0, "n": 64},
+                "sigma_grid": {"lo": 0.05, "hi": 6.0, "n": 128},
+                "sda_c_max": 8,
+                "p2_iters": 400,
+                "etas": [0.2, 0.3, 0.4]
+            },
+            "artifacts": {
+                "p2_solver": {
+                    "inputs": [{"name": "mu", "shape": [64]}],
+                    "outputs": [{"name": "c_star", "shape": [64]}],
+                    "file": "p2_solver.hlo.txt"
+                }
+            }
+        }"#;
+        fs::write(dir.join("manifest.json"), manifest).unwrap();
+        fs::write(dir.join("p2_solver.hlo.txt"), "HloModule fake").unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join("specsim_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.statics.batch, 64);
+        assert_eq!(m.statics.c_grid.values().len(), 64);
+        assert!((m.statics.c_grid.values()[0] - 1.0).abs() < 1e-12);
+        assert_eq!(m.statics.etas, vec![0.2, 0.3, 0.4]);
+        let e = m.entry("p2_solver").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![64]);
+        assert!(m.hlo_path("p2_solver").is_ok());
+        assert!(m.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/definitely/not/here").is_err());
+    }
+
+    #[test]
+    fn grid_values_endpoints() {
+        let g = GridSpec { lo: 1.0, hi: 16.0, n: 64 };
+        let v = g.values();
+        assert!((v[0] - 1.0).abs() < 1e-12);
+        assert!((v[63] - 16.0).abs() < 1e-12);
+        assert!(v.windows(2).all(|w| w[1] > w[0]));
+    }
+}

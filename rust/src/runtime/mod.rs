@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from the rust hot path.
+//! Python runs only at build time (`make artifacts`); after that the binary
+//! is self-contained.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod solver;
+
+pub use artifacts::Manifest;
+pub use pjrt::PjrtExecutor;
+pub use solver::PjrtP2;

@@ -1,0 +1,109 @@
+//! Thin wrapper over the `xla` crate: one shared CPU PJRT client, one
+//! compiled executable per artifact, f32-tensor in / f32-tensor out.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see python/compile/aot.py).
+
+use std::cell::RefCell;
+use std::path::Path;
+
+thread_local! {
+    // One PJRT CPU client per thread: the xla crate's client is Rc-based
+    // (not Send/Sync), and each executable stays on the thread that
+    // compiled it.  Every thread that touches the runtime pays the client
+    // construction once.
+    static CLIENT: RefCell<Option<Result<xla::PjRtClient, String>>> = const { RefCell::new(None) };
+}
+
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T, String>) -> Result<T, String> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let client = slot
+            .get_or_insert_with(|| xla::PjRtClient::cpu().map_err(|e| e.to_string()));
+        match client {
+            Ok(c) => f(c),
+            Err(e) => Err(e.clone()),
+        }
+    })
+}
+
+/// A compiled HLO module plus its I/O shapes.
+pub struct PjrtExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shapes (row-major dims) in argument order.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shapes in tuple order.
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+impl PjrtExecutor {
+    /// Load + compile an HLO text file.
+    pub fn load(
+        path: impl AsRef<Path>,
+        input_shapes: Vec<Vec<usize>>,
+        output_shapes: Vec<Vec<usize>>,
+    ) -> Result<Self, String> {
+        let proto = xla::HloModuleProto::from_text_file(path.as_ref())
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|client| client.compile(&comp).map_err(|e| e.to_string()))?;
+        Ok(PjrtExecutor { exe, input_shapes, output_shapes })
+    }
+
+    /// Execute with flat f32 buffers (one per input, row-major).  Returns
+    /// one flat f32 buffer per tuple output.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(format!(
+                "expected {} inputs, got {}",
+                self.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.input_shapes) {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            if buf.len() != n {
+                return Err(format!("input length {} != shape {:?}", buf.len(), shape));
+            }
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = lit.reshape(&dims).map_err(|e| e.to_string())?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| e.to_string())?[0][0]
+            .to_literal_sync()
+            .map_err(|e| e.to_string())?;
+        // jax lowers with return_tuple=True: the root is always a tuple
+        let parts = result.to_tuple().map_err(|e| e.to_string())?;
+        if parts.len() != self.output_shapes.len() {
+            return Err(format!(
+                "expected {} outputs, got {}",
+                self.output_shapes.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| e.to_string()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Executor integration tests live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts` to have run).  Here we only check error
+    // paths that need no artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_file_errors() {
+        let r = PjrtExecutor::load("/no/such/file.hlo.txt", vec![], vec![]);
+        assert!(r.is_err());
+    }
+}

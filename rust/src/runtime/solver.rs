@@ -1,0 +1,120 @@
+//! The P2 backend that runs the AOT-compiled JAX/Pallas solver on the SCA
+//! hot path, plus loaders for the analysis artifacts (sigma curve, SDA
+//! tables) used by the figure harness.
+
+use crate::opt::gradient::P2Problem;
+use crate::scheduler::sca::P2Backend;
+
+use super::artifacts::Manifest;
+use super::pjrt::PjrtExecutor;
+
+/// PJRT-backed P2 solver (artifact `p2_solver`).
+pub struct PjrtP2 {
+    exec: PjrtExecutor,
+    batch: usize,
+    /// Executions performed (diagnostics/benching).
+    pub calls: u64,
+}
+
+impl PjrtP2 {
+    pub fn load(artifacts_dir: &str) -> Result<Self, String> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let batch = manifest.statics.batch;
+        let entry = manifest
+            .entry("p2_solver")
+            .ok_or("p2_solver not in manifest")?;
+        let exec = PjrtExecutor::load(
+            manifest.hlo_path("p2_solver")?,
+            entry.inputs.iter().map(|t| t.shape.clone()).collect(),
+            entry.outputs.iter().map(|t| t.shape.clone()).collect(),
+        )?;
+        Ok(PjrtP2 { exec, batch, calls: 0 })
+    }
+}
+
+impl P2Backend for PjrtP2 {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn solve(&mut self, p: &P2Problem) -> Vec<f64> {
+        let b = self.batch;
+        assert!(p.jobs.len() <= b, "batch overflow: {} > {b}", p.jobs.len());
+        let mut mu = vec![0.0f32; b];
+        let mut m = vec![0.0f32; b];
+        let mut age = vec![0.0f32; b];
+        let mut mask = vec![0.0f32; b];
+        for (i, j) in p.jobs.iter().enumerate() {
+            mu[i] = j.mu as f32;
+            m[i] = j.m as f32;
+            age[i] = j.age as f32;
+            mask[i] = 1.0;
+        }
+        let params = vec![
+            p.n_avail as f32,
+            p.gamma as f32,
+            p.r as f32,
+            p.alpha as f32,
+        ];
+        match self.exec.run(&[mu, m, age, mask, params]) {
+            Ok(outs) => {
+                self.calls += 1;
+                outs[0][..p.jobs.len()].iter().map(|&c| c as f64).collect()
+            }
+            Err(e) => {
+                // never take the cluster down over a solver hiccup: degrade
+                // to no cloning for this slot
+                eprintln!("pjrt p2 solve failed ({e}); degrading to c = 1");
+                vec![1.0; p.jobs.len()]
+            }
+        }
+    }
+}
+
+/// The Fig. 4 sigma curve from the `sigma_curve` artifact:
+/// returns (sigma_grid, E[R]/E[x]).
+pub fn sigma_curve(artifacts_dir: &str, alpha: f64) -> Result<(Vec<f64>, Vec<f64>), String> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let entry = manifest
+        .entry("sigma_curve")
+        .ok_or("sigma_curve not in manifest")?;
+    let exec = PjrtExecutor::load(
+        manifest.hlo_path("sigma_curve")?,
+        entry.inputs.iter().map(|t| t.shape.clone()).collect(),
+        entry.outputs.iter().map(|t| t.shape.clone()).collect(),
+    )?;
+    let outs = exec.run(&[vec![alpha as f32]])?;
+    Ok((
+        outs[0].iter().map(|&x| x as f64).collect(),
+        outs[1].iter().map(|&x| x as f64).collect(),
+    ))
+}
+
+/// The SDA tables from the `sda_opt` artifact: (tau[S][C], resource[S][C])
+/// flattened row-major plus the sigma grid from the manifest statics.
+pub fn sda_tables(
+    artifacts_dir: &str,
+    alpha: f64,
+    s: f64,
+) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, usize), String> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let entry = manifest.entry("sda_opt").ok_or("sda_opt not in manifest")?;
+    let exec = PjrtExecutor::load(
+        manifest.hlo_path("sda_opt")?,
+        entry.inputs.iter().map(|t| t.shape.clone()).collect(),
+        entry.outputs.iter().map(|t| t.shape.clone()).collect(),
+    )?;
+    let outs = exec.run(&[vec![alpha as f32, s as f32]])?;
+    let sigma = manifest.statics.sigma_grid.values();
+    let c_max = manifest.statics.sda_c_max;
+    Ok((
+        sigma,
+        outs[0].iter().map(|&x| x as f64).collect(),
+        outs[1].iter().map(|&x| x as f64).collect(),
+        c_max,
+    ))
+}

@@ -1,0 +1,169 @@
+//! Enhanced Speculative Execution (Algorithm 2, Sec. VI) — the heavy-load
+//! policy: Mantri-style slot-gated backups with the analysis-derived
+//! threshold sigma* (Eq. 30-33), plus opportunistic cloning of *small* jobs
+//! (interactive, latency-sensitive) via the Eq. 29 objective.
+//!
+//! Per slot:
+//! 1. D(l) = single-copy running tasks with t_rem > sigma * E[x], sorted by
+//!    decreasing t_rem; one backup each while machines remain;
+//! 2. unassigned tasks of running jobs, smallest remaining workload first;
+//! 3. queued jobs smallest workload first; a job with
+//!    `m < eta * N(l)/|chi(l)|` and `E[x] < xi` is cloned with the Eq. 29
+//!    optimal count, everything else gets single copies.
+
+use crate::cluster::job::{CopyPhase, TaskRef};
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+use crate::opt::ese_sigma;
+
+use super::{srpt, Scheduler};
+
+pub struct Ese {
+    pub sigma: f64,
+    eta: f64,
+    xi: f64,
+    gamma: f64,
+    r_max: u32,
+    alpha: f64,
+    /// Diagnostics.
+    pub backups: u64,
+    pub small_jobs_cloned: u64,
+}
+
+impl Ese {
+    pub fn new(cfg: &SimConfig, alpha: f64) -> Self {
+        let sigma = cfg.sigma.unwrap_or_else(|| ese_sigma::sigma_star(alpha));
+        Ese {
+            sigma,
+            eta: cfg.eta_small,
+            xi: cfg.xi_small,
+            gamma: cfg.gamma,
+            r_max: cfg.r_max,
+            alpha,
+            backups: 0,
+            small_jobs_cloned: 0,
+        }
+    }
+}
+
+impl Scheduler for Ese {
+    fn name(&self) -> &'static str {
+        "ese"
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster) {
+        // 1. backup candidates D(l), longest estimated remaining first
+        let mut d = Vec::new();
+        for id in cl.running.iter() {
+            let job = cl.job(*id);
+            let threshold = self.sigma * job.spec.dist.mean();
+            for (ti, task) in job.tasks.iter().enumerate() {
+                if task.done || task.copies.len() != 1 {
+                    continue;
+                }
+                if task.copies[0].phase != CopyPhase::Running {
+                    continue;
+                }
+                let t = TaskRef { job: *id, task: ti as u32 };
+                let rem = cl.est_remaining(t);
+                if rem > threshold {
+                    d.push((rem, t));
+                }
+            }
+        }
+        d.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for (_, t) in d {
+            if cl.idle() == 0 {
+                return;
+            }
+            if cl.launch_copy(t) {
+                self.backups += 1;
+            }
+        }
+        // 2. remaining tasks of running jobs
+        srpt::schedule_running(cl);
+        if cl.idle() == 0 {
+            return;
+        }
+        // 3. queued jobs; clone the small ones per Eq. 29
+        let chi = cl.chi_sorted();
+        let chi_len = chi.len().max(1) as f64;
+        for id in chi {
+            let idle = cl.idle();
+            if idle == 0 {
+                return;
+            }
+            let job = cl.job(id);
+            let m = job.spec.num_tasks as f64;
+            let mean = job.spec.dist.mean();
+            let small = m < self.eta * idle as f64 / chi_len && mean < self.xi;
+            if small {
+                let c = ese_sigma::small_job_clones(
+                    job.spec.dist.mu,
+                    m,
+                    self.gamma,
+                    self.alpha,
+                    self.r_max,
+                    idle as f64,
+                );
+                if c > 1 {
+                    self.small_jobs_cloned += 1;
+                }
+                cl.launch_job_cloned(id, c);
+            } else {
+                cl.launch_unlaunched(id, idle);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::generator::generate;
+    use crate::cluster::sim::Simulator;
+    use crate::config::{SimConfig, WorkloadConfig};
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.machines = 300;
+        c.horizon = 300.0;
+        c.scheduler = crate::scheduler::SchedulerKind::Ese;
+        c
+    }
+
+    #[test]
+    fn derives_sigma_from_analysis() {
+        let e = super::Ese::new(&cfg(), 2.0);
+        assert!((1.5..=2.0).contains(&e.sigma), "sigma = {}", e.sigma);
+    }
+
+    #[test]
+    fn heavy_load_still_completes_jobs() {
+        let c = cfg();
+        // heavy relative to 300 machines
+        let wl = generate(&WorkloadConfig::paper(4.0), c.horizon, 5);
+        let sched = crate::scheduler::build(&c, &WorkloadConfig::paper(4.0)).unwrap();
+        let res = Simulator::new(c, wl, sched).run();
+        assert!(!res.completed.is_empty());
+        assert!(res.speculative_launches > 0);
+    }
+
+    #[test]
+    fn beats_mantri_under_heavy_load() {
+        let mut c = cfg();
+        c.mantri_srpt = true; // like-for-like baseline (see fig6.rs)
+        let wl = generate(&WorkloadConfig::paper(4.0), c.horizon, 5);
+        let sched = crate::scheduler::build(&c, &WorkloadConfig::paper(4.0)).unwrap();
+        let ese = Simulator::new(c.clone(), wl.clone(), sched).run();
+        c.scheduler = crate::scheduler::SchedulerKind::Mantri;
+        let sched = crate::scheduler::build(&c, &WorkloadConfig::paper(4.0)).unwrap();
+        let mantri = Simulator::new(c, wl, sched).run();
+        // the paper's headline: lower flowtime at comparable resource
+        assert!(
+            ese.mean_flowtime() <= mantri.mean_flowtime() * 1.05,
+            "ese {} vs mantri {}",
+            ese.mean_flowtime(),
+            mantri.mean_flowtime()
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Berkeley LATE (Longest Approximate Time to End, Sec. II): speculate on
+//! tasks whose progress *rate* falls below the slowTaskThreshold percentile,
+//! choosing the longest-remaining first, subject to a cluster-wide cap on
+//! outstanding speculative copies (speculativeCap).
+
+use crate::cluster::job::{CopyPhase, TaskRef};
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+
+use super::{srpt, Scheduler};
+
+pub struct Late {
+    speculative_cap: f64,
+    slow_percentile: f64,
+}
+
+impl Late {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Late {
+            speculative_cap: cfg.late_speculative_cap,
+            slow_percentile: cfg.late_slow_percentile,
+        }
+    }
+
+    /// Estimated progress rate of a task's primary copy, from elapsed time
+    /// only (blind — LATE has no access to the paper's s_i-checkpoint
+    /// instrumentation; see mantri.rs).
+    fn progress_rate(cl: &Cluster, t: TaskRef) -> Option<(f64, f64)> {
+        let job = cl.job(t.job);
+        let task = &job.tasks[t.task as usize];
+        let c = task.copies.first()?;
+        if c.phase != CopyPhase::Running {
+            return None;
+        }
+        let elapsed = c.elapsed(cl.clock);
+        if elapsed <= 0.0 {
+            return None;
+        }
+        let rem = job.spec.dist.mean_remaining(elapsed);
+        Some((1.0 / (elapsed + rem), rem))
+    }
+}
+
+impl Scheduler for Late {
+    fn name(&self) -> &'static str {
+        "late"
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster) {
+        // gather progress rates of all single-copy running tasks
+        let mut rates = Vec::new();
+        for id in cl.running.iter() {
+            let job = cl.job(*id);
+            for (ti, task) in job.tasks.iter().enumerate() {
+                if task.done || task.copies.len() != 1 {
+                    continue;
+                }
+                let t = TaskRef { job: *id, task: ti as u32 };
+                if let Some((rate, rem)) = Self::progress_rate(cl, t) {
+                    rates.push((rate, rem, t));
+                }
+            }
+        }
+        if !rates.is_empty() {
+            // slowTaskThreshold: the `slow_percentile` quantile of rates
+            let mut sorted: Vec<f64> = rates.iter().map(|(r, _, _)| *r).collect();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((sorted.len() as f64 * self.slow_percentile) as usize)
+                .min(sorted.len() - 1);
+            let threshold = sorted[idx];
+            let cap = (self.speculative_cap * cl.machines.total() as f64) as usize;
+            // longest remaining first among the slow ones
+            let mut cands: Vec<(f64, TaskRef)> = rates
+                .into_iter()
+                .filter(|(r, _, _)| *r < threshold)
+                .map(|(_, rem, t)| (rem, t))
+                .collect();
+            cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            for (_, t) in cands {
+                if cl.idle() == 0 || cl.outstanding_backups >= cap {
+                    break;
+                }
+                cl.launch_copy(t);
+            }
+        }
+        // FIFO job ordering: Hadoop's stock scheduler (see mantri.rs)
+        srpt::schedule_running_fifo(cl);
+        srpt::schedule_queued_fifo(cl);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::generator::generate;
+    use crate::cluster::sim::Simulator;
+    use crate::config::{SimConfig, WorkloadConfig};
+
+    #[test]
+    fn speculates_under_cap() {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 200;
+        cfg.horizon = 300.0;
+        cfg.scheduler = crate::scheduler::SchedulerKind::Late;
+        let wl = generate(&WorkloadConfig::paper(1.0), cfg.horizon, 5);
+        let sched = crate::scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let res = Simulator::new(cfg, wl, sched).run();
+        assert!(res.speculative_launches > 0);
+        assert!(!res.completed.is_empty());
+    }
+
+    #[test]
+    fn zero_cap_disables_speculation() {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 200;
+        cfg.horizon = 200.0;
+        cfg.late_speculative_cap = 0.0;
+        cfg.scheduler = crate::scheduler::SchedulerKind::Late;
+        let wl = generate(&WorkloadConfig::paper(1.0), cfg.horizon, 5);
+        let sched = crate::scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let res = Simulator::new(cfg, wl, sched).run();
+        assert_eq!(res.speculative_launches, 0);
+    }
+}

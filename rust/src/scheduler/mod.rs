@@ -1,0 +1,143 @@
+//! Speculative-execution policies.
+//!
+//! All seven schedulers share the same slotted hook structure (the paper's
+//! decision model) so the comparison isolates the *speculation policy*:
+//!
+//! * [`naive`]     — no speculation (the Fig. 5 "no backup" baseline).
+//! * [`clone_all`] — Sec. III generalized cloning (>= 2 copies per task).
+//! * [`mantri`]    — Microsoft Mantri's rule `P(t_rem > 2 t_new) > delta`.
+//! * [`late`]      — Berkeley LATE (progress rate + speculativeCap).
+//! * [`sca`]       — Smart Cloning Algorithm (Algorithm 1, P2 solver).
+//! * [`sda`]       — Straggler Detection Algorithm (Sec. V, Theorem 3).
+//! * [`ese`]       — Enhanced Speculative Execution (Algorithm 2).
+
+pub mod clone_all;
+pub mod ese;
+pub mod late;
+pub mod mantri;
+pub mod naive;
+pub mod sca;
+pub mod sda;
+pub mod srpt;
+
+use std::str::FromStr;
+
+use crate::cluster::job::TaskRef;
+use crate::cluster::sim::Cluster;
+use crate::config::{SimConfig, WorkloadConfig};
+
+/// A speculative-execution policy driven by the simulator.
+/// Not `Send`: SCA may hold a thread-pinned PJRT executor; the live master
+/// therefore constructs its scheduler on its own thread.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    /// Slot-boundary decisions (the paper's slotted model).
+    fn on_slot(&mut self, cl: &mut Cluster);
+    /// A first copy crossed its detection checkpoint: its true remaining
+    /// time just became visible (SDA acts here; others ignore it).
+    fn on_reveal(&mut self, _cl: &mut Cluster, _t: TaskRef) {}
+}
+
+/// Which policy to run (CLI/TOML selectable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Naive,
+    CloneAll,
+    Mantri,
+    Late,
+    Sca,
+    Sda,
+    Ese,
+}
+
+impl SchedulerKind {
+    pub fn all() -> [SchedulerKind; 7] {
+        [
+            SchedulerKind::Naive,
+            SchedulerKind::CloneAll,
+            SchedulerKind::Mantri,
+            SchedulerKind::Late,
+            SchedulerKind::Sca,
+            SchedulerKind::Sda,
+            SchedulerKind::Ese,
+        ]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedulerKind::Naive => "naive",
+            SchedulerKind::CloneAll => "clone_all",
+            SchedulerKind::Mantri => "mantri",
+            SchedulerKind::Late => "late",
+            SchedulerKind::Sca => "sca",
+            SchedulerKind::Sda => "sda",
+            SchedulerKind::Ese => "ese",
+        }
+    }
+}
+
+impl FromStr for SchedulerKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        SchedulerKind::all()
+            .into_iter()
+            .find(|k| k.as_str() == s)
+            .ok_or_else(|| {
+                format!(
+                    "unknown scheduler '{s}' (expected one of: {})",
+                    SchedulerKind::all().map(|k| k.as_str()).join(", ")
+                )
+            })
+    }
+}
+
+/// Instantiate the configured scheduler.  `workload` supplies the common
+/// heavy-tail order for the policies that derive their thresholds from the
+/// analysis (SDA's Theorem 3, ESE's Eq. 30-33).
+pub fn build(
+    cfg: &SimConfig,
+    workload: &WorkloadConfig,
+) -> Result<Box<dyn Scheduler>, String> {
+    let alpha = match workload {
+        WorkloadConfig::Poisson { alpha, .. } | WorkloadConfig::SingleJob { alpha, .. } => *alpha,
+        WorkloadConfig::Trace { .. } => 2.0,
+    };
+    Ok(match cfg.scheduler {
+        SchedulerKind::Naive => Box::new(naive::Naive),
+        SchedulerKind::CloneAll => {
+            Box::new(clone_all::CloneAll { copies: 2, strict: cfg.clone_strict })
+        }
+        SchedulerKind::Mantri => Box::new(mantri::Mantri::new(cfg)),
+        SchedulerKind::Late => Box::new(late::Late::new(cfg)),
+        SchedulerKind::Sca => Box::new(sca::Sca::new(cfg)?),
+        SchedulerKind::Sda => Box::new(sda::Sda::new(cfg, alpha)),
+        SchedulerKind::Ese => Box::new(ese::Ese::new(cfg, alpha)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_all_kinds() {
+        let mut cfg = SimConfig::default();
+        cfg.use_runtime = false; // no artifacts needed in unit tests
+        let wl = WorkloadConfig::paper(6.0);
+        for kind in SchedulerKind::all() {
+            cfg.scheduler = kind;
+            let s = build(&cfg, &wl).unwrap();
+            assert_eq!(s.name(), kind.as_str());
+        }
+    }
+
+    #[test]
+    fn kind_str_roundtrip() {
+        for kind in SchedulerKind::all() {
+            let back: SchedulerKind = kind.as_str().parse().unwrap();
+            assert_eq!(kind, back);
+        }
+        assert!("bogus".parse::<SchedulerKind>().is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! No speculation at all: one copy per task, SRPT-ordered levels 2/3.
+//! This is the "without backup" baseline of Fig. 5 and the service model
+//! behind the no-speculation M/G/1 delay W_t (Eq. 1).
+
+use crate::cluster::sim::Cluster;
+
+use super::{srpt, Scheduler};
+
+pub struct Naive;
+
+impl Scheduler for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster) {
+        srpt::schedule_running(cl);
+        srpt::schedule_queued_single(cl);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::generator::generate;
+    use crate::cluster::sim::Simulator;
+    use crate::config::{SimConfig, WorkloadConfig};
+
+    #[test]
+    fn never_launches_backups() {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 60;
+        cfg.horizon = 300.0;
+        let wl = generate(&WorkloadConfig::paper(0.5), cfg.horizon, 5);
+        let res = Simulator::new(cfg, wl, Box::new(super::Naive)).run();
+        assert_eq!(res.speculative_launches, 0);
+        assert!(!res.completed.is_empty());
+    }
+}

@@ -1,0 +1,209 @@
+//! Smart Cloning Algorithm (Algorithm 1, Sec. IV-B).
+//!
+//! At each slot:
+//! 1. schedule the unassigned tasks of running jobs, fewest remaining first;
+//! 2. if every queued job fits (`sum m_i < N(l)`), solve P2 for the batch
+//!    and launch each job with its optimized clone count;
+//! 3. otherwise fall back to smallest-workload-first single-copy scheduling.
+//!
+//! The P2 solve goes through a [`P2Backend`]: the PJRT executor running the
+//! AOT-compiled JAX/Pallas artifact on the hot path, or the pure-rust
+//! gradient-projection twin when artifacts are unavailable.
+
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+use crate::opt::gradient::{GradientSolver, P2Job, P2Problem};
+use crate::opt::p2::round_and_repair;
+
+use super::{srpt, Scheduler};
+
+/// Anything that can solve a P2 batch (continuous clone counts).
+/// Not `Send`: the PJRT backend is thread-pinned (see `runtime::pjrt`).
+pub trait P2Backend {
+    fn backend_name(&self) -> &'static str;
+    fn solve(&mut self, p: &P2Problem) -> Vec<f64>;
+    /// Largest batch the backend accepts (the AOT artifact has a static
+    /// batch dimension; the rust solver is unbounded).
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+}
+
+impl P2Backend for GradientSolver {
+    fn backend_name(&self) -> &'static str {
+        "rust-gradient"
+    }
+    fn solve(&mut self, p: &P2Problem) -> Vec<f64> {
+        GradientSolver::solve(self, p).c
+    }
+}
+
+pub struct Sca {
+    backend: Box<dyn P2Backend>,
+    gamma: f64,
+    r_max: u32,
+    /// Batch cap (min of backend capacity and cfg.p2_batch).
+    batch: usize,
+    /// Counters exposed for diagnostics / perf accounting.
+    pub p2_solves: u64,
+    pub p2_jobs_solved: u64,
+}
+
+impl Sca {
+    pub fn new(cfg: &SimConfig) -> Result<Self, String> {
+        let backend: Box<dyn P2Backend> = if cfg.use_runtime {
+            match crate::runtime::solver::PjrtP2::load(&cfg.artifacts_dir) {
+                Ok(exec) => Box::new(exec),
+                Err(e) => {
+                    eprintln!(
+                        "sca: PJRT runtime unavailable ({e}); using the pure-rust solver"
+                    );
+                    Box::new(GradientSolver::default())
+                }
+            }
+        } else {
+            Box::new(GradientSolver::default())
+        };
+        let batch = cfg.p2_batch.min(backend.max_batch());
+        Ok(Sca {
+            backend,
+            gamma: cfg.gamma,
+            r_max: cfg.r_max,
+            batch,
+            p2_solves: 0,
+            p2_jobs_solved: 0,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.backend_name()
+    }
+
+    /// Solve P2 for (a prefix of) the queued jobs and launch the clones.
+    fn clone_by_p2(&mut self, cl: &mut Cluster, chi: &[crate::cluster::job::JobId]) {
+        let n_avail = cl.idle() as f64;
+        // the artifact batch is static: solve the `batch` smallest-workload
+        // jobs through the backend, single-launch any overflow
+        let (solved, overflow) = chi.split_at(chi.len().min(self.batch));
+        let jobs: Vec<P2Job> = solved
+            .iter()
+            .map(|id| {
+                let j = cl.job(*id);
+                P2Job {
+                    mu: j.spec.dist.mu,
+                    m: j.spec.num_tasks as f64,
+                    age: cl.clock - j.spec.arrival,
+                }
+            })
+            .collect();
+        let alpha = solved
+            .first()
+            .map(|id| cl.job(*id).spec.dist.alpha)
+            .unwrap_or(2.0);
+        let problem = P2Problem {
+            jobs: jobs.clone(),
+            n_avail,
+            gamma: self.gamma,
+            r: self.r_max as f64,
+            alpha,
+        };
+        let c = self.backend.solve(&problem);
+        self.p2_solves += 1;
+        self.p2_jobs_solved += jobs.len() as u64;
+        let m: Vec<f64> = jobs.iter().map(|j| j.m).collect();
+        let ci = round_and_repair(&c, &m, n_avail, self.r_max);
+        for (id, copies) in solved.iter().zip(ci) {
+            if cl.idle() == 0 {
+                break;
+            }
+            cl.launch_job_cloned(*id, copies);
+        }
+        for id in overflow {
+            if cl.idle() == 0 {
+                break;
+            }
+            let idle = cl.idle();
+            cl.launch_unlaunched(*id, idle);
+        }
+    }
+}
+
+impl Scheduler for Sca {
+    fn name(&self) -> &'static str {
+        "sca"
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster) {
+        // 1. remaining tasks of running jobs, fewest remaining first
+        srpt::schedule_running(cl);
+        if cl.idle() == 0 {
+            return;
+        }
+        let chi = cl.chi_sorted();
+        if chi.is_empty() {
+            return;
+        }
+        let total_tasks: u64 = chi
+            .iter()
+            .map(|id| cl.job(*id).spec.num_tasks as u64)
+            .sum();
+        if (total_tasks as usize) < cl.idle() {
+            // 2. room to clone: optimize
+            self.clone_by_p2(cl, &chi);
+        } else {
+            // 3. tight: smallest workload first, one copy per task
+            srpt::schedule_queued_single(cl);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::generator::generate;
+    use crate::cluster::sim::Simulator;
+    use crate::config::{SimConfig, WorkloadConfig};
+
+    fn cfg(machines: usize, horizon: f64) -> SimConfig {
+        let mut c = SimConfig::default();
+        c.machines = machines;
+        c.horizon = horizon;
+        c.use_runtime = false;
+        c.scheduler = crate::scheduler::SchedulerKind::Sca;
+        c
+    }
+
+    #[test]
+    fn clones_in_light_load() {
+        let cfg = cfg(2000, 200.0);
+        let wl = generate(&WorkloadConfig::paper(0.5), cfg.horizon, 5);
+        let sched = crate::scheduler::build(&cfg, &WorkloadConfig::paper(0.5)).unwrap();
+        let res = Simulator::new(cfg, wl, sched).run();
+        assert!(res.speculative_launches > 0, "SCA should clone in light load");
+        assert!(!res.completed.is_empty());
+    }
+
+    #[test]
+    fn degrades_to_srpt_when_tight() {
+        let cfg = cfg(30, 300.0);
+        let wl = generate(&WorkloadConfig::paper(1.0), cfg.horizon, 5);
+        let sched = crate::scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let res = Simulator::new(cfg, wl, sched).run();
+        // under severe pressure SCA behaves like SRPT: few/no clones
+        assert!(!res.completed.is_empty());
+    }
+
+    #[test]
+    fn beats_naive_in_light_load() {
+        let c = cfg(2000, 300.0);
+        let wl = generate(&WorkloadConfig::paper(0.5), c.horizon, 7);
+        let sched = crate::scheduler::build(&c, &WorkloadConfig::paper(0.5)).unwrap();
+        let sca = Simulator::new(c.clone(), wl.clone(), sched).run();
+        let naive = Simulator::new(c, wl, Box::new(crate::scheduler::naive::Naive)).run();
+        assert!(
+            sca.mean_flowtime() < naive.mean_flowtime(),
+            "sca {} vs naive {}",
+            sca.mean_flowtime(),
+            naive.mean_flowtime()
+        );
+    }
+}

@@ -1,0 +1,125 @@
+//! Straggler Detection Algorithm (Sec. V-B).
+//!
+//! Level 1 (event-driven, not slot-gated): when a task's first copy crosses
+//! its detection checkpoint and the revealed remaining time exceeds
+//! `sigma * E[x]`, launch `c* - 1` backups immediately on idle machines.
+//! Theorem 3 gives c* = 2 under Pareto; we *compute* c* and sigma* from P3
+//! (Eq. 27-28) at construction and debug-assert the theorem.
+//!
+//! Levels 2/3 (slotted): the shared smallest-remaining / smallest-workload
+//! SRPT ordering, one copy per task.
+
+use crate::cluster::job::TaskRef;
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+use crate::opt::p3;
+
+use super::{srpt, Scheduler};
+
+pub struct Sda {
+    /// Detection threshold multiplier (sigma_i).
+    pub sigma: f64,
+    /// Copies (incl. original) a detected straggler should end up with.
+    pub c_star: u32,
+    /// Stragglers detected / backups actually launched (diagnostics).
+    pub detected: u64,
+    pub backups: u64,
+}
+
+impl Sda {
+    pub fn new(cfg: &SimConfig, alpha: f64) -> Self {
+        let policy = p3::solve(alpha, cfg.detect_frac, cfg.r_max);
+        let sigma = cfg.sigma.unwrap_or(policy.sigma);
+        // Theorem 3: one backup is optimal under Pareto
+        debug_assert_eq!(policy.c_star, 2, "Theorem 3 violated: c* = {}", policy.c_star);
+        Sda { sigma, c_star: policy.c_star, detected: 0, backups: 0 }
+    }
+}
+
+impl Scheduler for Sda {
+    fn name(&self) -> &'static str {
+        "sda"
+    }
+
+    fn on_reveal(&mut self, cl: &mut Cluster, t: TaskRef) {
+        let job = cl.job(t.job);
+        let task = &job.tasks[t.task as usize];
+        // only the original triggers detection, and only once
+        if task.copies.len() != 1 {
+            return;
+        }
+        let copy = &task.copies[0];
+        let remaining = copy.true_remaining(cl.clock);
+        if remaining > self.sigma * job.spec.dist.mean() {
+            self.detected += 1;
+            for _ in 1..self.c_star {
+                if cl.idle() == 0 {
+                    break;
+                }
+                if cl.launch_copy(t) {
+                    self.backups += 1;
+                }
+            }
+        }
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster) {
+        srpt::schedule_running(cl);
+        srpt::schedule_queued_single(cl);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::generator::generate;
+    use crate::cluster::sim::Simulator;
+    use crate::config::{SimConfig, WorkloadConfig};
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.machines = 300;
+        c.horizon = 300.0;
+        c.scheduler = crate::scheduler::SchedulerKind::Sda;
+        c
+    }
+
+    #[test]
+    fn derives_theorem3_policy() {
+        let s = super::Sda::new(&cfg(), 2.0);
+        assert_eq!(s.c_star, 2);
+        assert!((s.sigma - 1.707).abs() < 0.08, "sigma = {}", s.sigma);
+    }
+
+    #[test]
+    fn sigma_override_respected() {
+        let mut c = cfg();
+        c.sigma = Some(3.0);
+        let s = super::Sda::new(&c, 2.0);
+        assert_eq!(s.sigma, 3.0);
+    }
+
+    #[test]
+    fn speculates_and_completes() {
+        let c = cfg();
+        let wl = generate(&WorkloadConfig::paper(1.0), c.horizon, 5);
+        let sched = crate::scheduler::build(&c, &WorkloadConfig::paper(1.0)).unwrap();
+        let res = Simulator::new(c, wl, sched).run();
+        assert!(res.speculative_launches > 0);
+        assert!(!res.completed.is_empty());
+    }
+
+    #[test]
+    fn beats_naive_flowtime() {
+        let c = cfg();
+        let wl = generate(&WorkloadConfig::paper(1.0), c.horizon, 5);
+        let sched = crate::scheduler::build(&c, &WorkloadConfig::paper(1.0)).unwrap();
+        let sda = Simulator::new(c.clone(), wl.clone(), sched).run();
+        let naive = Simulator::new(c, wl, Box::new(crate::scheduler::naive::Naive)).run();
+        assert!(
+            sda.mean_flowtime() < naive.mean_flowtime(),
+            "sda {} vs naive {}",
+            sda.mean_flowtime(),
+            naive.mean_flowtime()
+        );
+    }
+}

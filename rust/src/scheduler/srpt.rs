@@ -1,0 +1,152 @@
+//! Shared scheduling levels (Sec. IV-B / V-B / VI-A): every policy schedules
+//! (2) the remaining tasks of begun jobs smallest-remaining-workload first,
+//! then (3) the queued jobs smallest-workload first — the SRPT-flavoured
+//! ordering the paper adopts throughout.
+
+use crate::cluster::sim::Cluster;
+
+/// Level 2: launch first copies for unlaunched tasks of running jobs,
+/// smallest remaining workload first.  Returns copies launched.
+pub fn schedule_running(cl: &mut Cluster) -> usize {
+    let mut launched = 0;
+    if cl.idle() == 0 {
+        return 0;
+    }
+    for id in cl.running_needing_tasks() {
+        let idle = cl.idle();
+        if idle == 0 {
+            break;
+        }
+        launched += cl.launch_unlaunched(id, idle);
+    }
+    launched
+}
+
+/// Level 3: launch queued jobs (one copy per task) smallest total workload
+/// first.  Jobs may be partially launched when machines run out; the rest
+/// is picked up by level 2 at the next slot.  Returns copies launched.
+pub fn schedule_queued_single(cl: &mut Cluster) -> usize {
+    let mut launched = 0;
+    if cl.idle() == 0 {
+        return 0;
+    }
+    for id in cl.chi_sorted() {
+        let idle = cl.idle();
+        if idle == 0 {
+            break;
+        }
+        launched += cl.launch_unlaunched(id, idle);
+    }
+    launched
+}
+
+/// FIFO variants for the Mantri/LATE baselines: Hadoop's and Dryad's stock
+/// job schedulers ran jobs in arrival order, not SRPT — the paper's
+/// algorithms layer the smallest-remaining orderings *on top of* their
+/// speculation policies, so the baselines must not silently inherit them.
+pub fn schedule_running_fifo(cl: &mut Cluster) -> usize {
+    let mut launched = 0;
+    if cl.idle() == 0 {
+        return 0;
+    }
+    // BTreeSet<JobId> iterates in id order == arrival order
+    let ids: Vec<_> = cl
+        .running
+        .iter()
+        .copied()
+        .filter(|id| cl.job(*id).unlaunched() > 0)
+        .collect();
+    for id in ids {
+        let idle = cl.idle();
+        if idle == 0 {
+            break;
+        }
+        launched += cl.launch_unlaunched(id, idle);
+    }
+    launched
+}
+
+/// FIFO level 3 (arrival order).
+pub fn schedule_queued_fifo(cl: &mut Cluster) -> usize {
+    let mut launched = 0;
+    if cl.idle() == 0 {
+        return 0;
+    }
+    let ids: Vec<_> = cl.queued.iter().copied().collect();
+    for id in ids {
+        let idle = cl.idle();
+        if idle == 0 {
+            break;
+        }
+        launched += cl.launch_unlaunched(id, idle);
+    }
+    launched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::generator::generate;
+    use crate::cluster::job::JobPhase;
+    use crate::cluster::sim::{Cluster, Simulator};
+    use crate::config::{SimConfig, WorkloadConfig};
+    use crate::scheduler::naive::Naive;
+
+    fn cluster_with(machines: usize, lambda: f64, horizon: f64) -> Cluster {
+        let mut cfg = SimConfig::default();
+        cfg.machines = machines;
+        cfg.horizon = horizon;
+        let wl = generate(&WorkloadConfig::paper(lambda), horizon, 3);
+        // build a simulator just to construct the cluster consistently
+        let sim = Simulator::new(cfg, wl, Box::new(Naive));
+        sim.cluster
+    }
+
+    #[test]
+    fn queued_jobs_fill_idle_machines() {
+        let mut cl = cluster_with(100, 2.0, 50.0);
+        // force all arrivals into the queue "now"
+        let ids: Vec<_> = (0..cl.jobs.len() as u32)
+            .map(crate::cluster::job::JobId)
+            .collect();
+        for id in &ids[..4.min(ids.len())] {
+            cl.queued.insert(*id);
+        }
+        let launched = schedule_queued_single(&mut cl);
+        assert!(launched > 0);
+        assert_eq!(launched, 100 - cl.idle());
+    }
+
+    #[test]
+    fn smallest_workload_first() {
+        // ample machines: ~2 * 50 * 50.5 ~ 5000 tasks << 40000 machines
+        let mut cl = cluster_with(40_000, 2.0, 50.0);
+        let ids: Vec<_> = (0..cl.jobs.len() as u32)
+            .map(crate::cluster::job::JobId)
+            .collect();
+        for id in &ids {
+            cl.queued.insert(*id);
+        }
+        schedule_queued_single(&mut cl);
+        // with ample machines everything launches
+        for j in &cl.jobs {
+            assert_eq!(j.phase, JobPhase::Running);
+            assert_eq!(j.unlaunched(), 0);
+        }
+    }
+
+    #[test]
+    fn level2_picks_up_partial_jobs() {
+        let mut cl = cluster_with(5, 1.0, 60.0);
+        let id = crate::cluster::job::JobId(0);
+        cl.queued.insert(id);
+        schedule_queued_single(&mut cl);
+        if cl.jobs[0].spec.num_tasks > 5 {
+            assert!(cl.jobs[0].unlaunched() > 0);
+            assert_eq!(cl.idle(), 0);
+            // free a machine artificially by completing nothing: level 2 on a
+            // fresh slot with idle 0 launches nothing
+            assert_eq!(schedule_running(&mut cl), 0);
+        }
+    }
+}

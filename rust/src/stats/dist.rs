@@ -1,0 +1,109 @@
+//! Generic duration distributions.  The paper's evaluation is pure Pareto,
+//! but the generator and the estimator plumbing are distribution-agnostic so
+//! the ablation benches can swap tails.
+
+use super::pareto::Pareto;
+use super::rng::Pcg64;
+
+/// A positive random variable a task duration can be drawn from.
+pub trait Distribution {
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+    fn mean(&self) -> f64;
+    /// Survival function P(x > t).
+    fn sf(&self, t: f64) -> f64;
+}
+
+impl Distribution for Pareto {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        Pareto::sample(self, rng)
+    }
+    fn mean(&self) -> f64 {
+        Pareto::mean(self)
+    }
+    fn sf(&self, t: f64) -> f64 {
+        Pareto::sf(self, t)
+    }
+}
+
+/// Uniform on [lo, hi].
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(lo <= hi);
+        Uniform { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        rng.uniform_f64(self.lo, self.hi)
+    }
+    fn mean(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+    fn sf(&self, t: f64) -> f64 {
+        if t <= self.lo {
+            1.0
+        } else if t >= self.hi {
+            0.0
+        } else {
+            (self.hi - t) / (self.hi - self.lo)
+        }
+    }
+}
+
+/// Exponential with the given rate.
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Distribution for Exponential {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        rng.exponential(self.rate)
+    }
+    fn mean(&self) -> f64 {
+        1.0 / self.rate
+    }
+    fn sf(&self, t: f64) -> f64 {
+        (-self.rate * t.max(0.0)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_mean_and_sf() {
+        let u = Uniform::new(1.0, 4.0);
+        assert_eq!(u.mean(), 2.5);
+        assert_eq!(u.sf(0.0), 1.0);
+        assert_eq!(u.sf(4.0), 0.0);
+        assert!((u.sf(2.5) - 0.5).abs() < 1e-12);
+        let mut rng = Pcg64::new(5, 0);
+        for _ in 0..1000 {
+            let x = u.sample(&mut rng);
+            assert!((1.0..=4.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn exponential_sf() {
+        let e = Exponential { rate: 2.0 };
+        assert!((e.sf(0.5) - (-1.0f64).exp()).abs() < 1e-12);
+        assert_eq!(e.mean(), 0.5);
+    }
+
+    #[test]
+    fn pareto_through_trait() {
+        let p: &dyn Distribution = &Pareto::new(1.0, 2.0);
+        assert!((p.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(p.sf(0.5), 1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Random-variate substrate: seeded RNG streams, task-duration
+//! distributions, and streaming summary statistics.
+
+pub mod dist;
+pub mod pareto;
+pub mod rng;
+pub mod summary;
+
+pub use dist::{Distribution, Exponential, Uniform};
+pub use pareto::Pareto;
+pub use rng::Pcg64;
+pub use summary::{Cdf, Summary};

@@ -1,0 +1,193 @@
+//! The paper's task-duration model: Pareto(mu, alpha) with
+//! `F(t) = 1 - (mu/t)^alpha` for `t >= mu` (Sec. III-B).
+//!
+//! Everything a scheduler may legitimately know about a task's duration —
+//! the distribution, conditional remaining-time statistics, the order
+//! statistics used by the optimizers — lives here.
+
+use super::rng::Pcg64;
+
+/// Pareto distribution parameterized by scale `mu` and heavy-tail order
+/// `alpha` (the paper uses `alpha = 2` throughout its evaluation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pareto {
+    pub mu: f64,
+    pub alpha: f64,
+}
+
+impl Pareto {
+    pub fn new(mu: f64, alpha: f64) -> Self {
+        assert!(mu > 0.0 && alpha > 1.0, "need mu > 0, alpha > 1 (finite mean)");
+        Pareto { mu, alpha }
+    }
+
+    /// Construct from a target mean: `mu = mean * (alpha - 1) / alpha`.
+    pub fn from_mean(mean: f64, alpha: f64) -> Self {
+        Pareto::new(mean * (alpha - 1.0) / alpha, alpha)
+    }
+
+    /// E[x] = mu * alpha / (alpha - 1).
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        self.mu * self.alpha / (self.alpha - 1.0)
+    }
+
+    /// E[x^2] (infinite for alpha <= 2).
+    #[inline]
+    pub fn second_moment(&self) -> f64 {
+        if self.alpha <= 2.0 {
+            f64::INFINITY
+        } else {
+            self.mu * self.mu * self.alpha / (self.alpha - 2.0)
+        }
+    }
+
+    /// Survival function P(x > t), defined on all of [0, inf).
+    #[inline]
+    pub fn sf(&self, t: f64) -> f64 {
+        if t <= self.mu {
+            1.0
+        } else {
+            (self.mu / t).powf(self.alpha)
+        }
+    }
+
+    /// CDF.
+    #[inline]
+    pub fn cdf(&self, t: f64) -> f64 {
+        1.0 - self.sf(t)
+    }
+
+    /// Inverse-CDF sampling.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        // x = mu * U^(-1/alpha), U in (0, 1]
+        self.mu * rng.next_f64_open().powf(-1.0 / self.alpha)
+    }
+
+    /// P(x > e + a | x > e): probability the remaining time exceeds `a`
+    /// given `e` units have elapsed.  This is the estimator Mantri-style
+    /// rules use before the true duration is revealed.
+    #[inline]
+    pub fn sf_remaining(&self, elapsed: f64, a: f64) -> f64 {
+        self.sf(elapsed + a) / self.sf(elapsed)
+    }
+
+    /// E[x - e | x > e]: conditional expected remaining time.
+    #[inline]
+    pub fn mean_remaining(&self, elapsed: f64) -> f64 {
+        // E[x | x > e] = max(e, mu) * alpha / (alpha - 1)
+        elapsed.max(self.mu) * self.alpha / (self.alpha - 1.0) - elapsed
+    }
+
+    /// Distribution of the minimum of `c` i.i.d. copies: Pareto(mu, c*alpha).
+    #[inline]
+    pub fn min_of(&self, c: f64) -> Pareto {
+        Pareto { mu: self.mu, alpha: self.alpha * c }
+    }
+
+    /// E[min of c copies] = mu * c*alpha / (c*alpha - 1)  (Sec. III-B).
+    #[inline]
+    pub fn mean_min_of(&self, c: f64) -> f64 {
+        let beta = self.alpha * c;
+        self.mu * beta / (beta - 1.0)
+    }
+
+    /// E[min(x, cap)] = integral_0^cap S(t) dt.
+    #[inline]
+    pub fn mean_capped(&self, cap: f64) -> f64 {
+        if cap <= self.mu {
+            return cap.max(0.0);
+        }
+        let a = self.alpha;
+        self.mu + self.mu / (a - 1.0) * (1.0 - (self.mu / cap).powf(a - 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg64 {
+        Pcg64::new(20140213, 0)
+    }
+
+    #[test]
+    fn mean_matches_samples() {
+        let p = Pareto::new(1.0, 2.0);
+        let mut r = rng();
+        let n = 400_000;
+        let mean: f64 = (0..n).map(|_| p.sample(&mut r)).sum::<f64>() / n as f64;
+        // alpha=2 has infinite variance: loose tolerance
+        assert!((mean - p.mean()).abs() < 0.05, "mean={mean} vs {}", p.mean());
+    }
+
+    #[test]
+    fn from_mean_roundtrip() {
+        let p = Pareto::from_mean(2.5, 2.0);
+        assert!((p.mean() - 2.5).abs() < 1e-12);
+        assert!((p.mu - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sf_cdf_consistency() {
+        let p = Pareto::new(1.5, 2.5);
+        for t in [0.0, 1.0, 1.5, 2.0, 10.0, 1e6] {
+            assert!((p.sf(t) + p.cdf(t) - 1.0).abs() < 1e-12);
+        }
+        assert_eq!(p.sf(0.5), 1.0); // below scale: certain survival
+    }
+
+    #[test]
+    fn samples_above_scale() {
+        let p = Pareto::new(2.0, 3.0);
+        let mut r = rng();
+        for _ in 0..10_000 {
+            assert!(p.sample(&mut r) >= p.mu);
+        }
+    }
+
+    #[test]
+    fn min_of_matches_simulation() {
+        let p = Pareto::new(1.0, 2.0);
+        let mut r = rng();
+        let n = 200_000;
+        let mean: f64 = (0..n)
+            .map(|_| p.sample(&mut r).min(p.sample(&mut r)))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - p.mean_min_of(2.0)).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn mean_remaining_memory() {
+        let p = Pareto::new(1.0, 2.0);
+        // for e >= mu: E[x - e | x > e] = e/(alpha-1) = e (alpha = 2)
+        assert!((p.mean_remaining(3.0) - 3.0).abs() < 1e-12);
+        // below the scale the task is guaranteed to last until mu at least
+        assert!(p.mean_remaining(0.0) >= p.mean() - 1e-12);
+    }
+
+    #[test]
+    fn sf_remaining_heavy_tail_grows() {
+        // heavy tail: the longer a task has run, the likelier it keeps running
+        let p = Pareto::new(1.0, 2.0);
+        let a = 2.0;
+        assert!(p.sf_remaining(5.0, a) > p.sf_remaining(2.0, a));
+    }
+
+    #[test]
+    fn mean_capped_limits() {
+        let p = Pareto::new(1.0, 2.0);
+        assert!((p.mean_capped(1e9) - p.mean()).abs() < 1e-3);
+        assert!((p.mean_capped(0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(p.mean_capped(-1.0), 0.0);
+    }
+
+    #[test]
+    fn second_moment() {
+        assert!(Pareto::new(1.0, 2.0).second_moment().is_infinite());
+        let p = Pareto::new(1.0, 3.0);
+        assert!((p.second_moment() - 3.0).abs() < 1e-12);
+    }
+}

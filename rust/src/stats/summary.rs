@@ -1,0 +1,196 @@
+//! Streaming summaries and empirical CDFs — the accounting behind every
+//! figure in the paper (all of Fig. 2/3/5/6 are CMFs of per-job metrics).
+
+/// Streaming mean/variance/extremes (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { f64::NAN } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Empirical distribution over a recorded sample: quantiles, CDF evaluation,
+/// and the fixed-grid CMF series the figure harness prints.
+#[derive(Clone, Debug, Default)]
+pub struct Cdf {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Cdf {
+    pub fn new() -> Self {
+        Cdf { values: Vec::new(), sorted: true }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.values.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        self.values.extend(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// q in [0, 1]; linear interpolation between order statistics.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        self.ensure_sorted();
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let pos = q * (self.values.len() - 1) as f64;
+        let i = pos.floor() as usize;
+        let frac = pos - i as f64;
+        if i + 1 < self.values.len() {
+            self.values[i] * (1.0 - frac) + self.values[i + 1] * frac
+        } else {
+            self.values[i]
+        }
+    }
+
+    /// P(X <= t).
+    pub fn fraction_leq(&mut self, t: f64) -> f64 {
+        self.ensure_sorted();
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let k = self.values.partition_point(|&v| v <= t);
+        k as f64 / self.values.len() as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// (x, F(x)) series on an `n`-point grid over [0, max] — the CMF the
+    /// paper plots.
+    pub fn cmf_series(&mut self, n: usize) -> Vec<(f64, f64)> {
+        self.ensure_sorted();
+        if self.values.is_empty() {
+            return Vec::new();
+        }
+        let hi = *self.values.last().unwrap();
+        (0..=n)
+            .map(|i| {
+                // note: hi * (i/n) so the last grid point is exactly hi
+                let x = hi * (i as f64 / n as f64);
+                (x, self.fraction_leq_sorted(x))
+            })
+            .collect()
+    }
+
+    fn fraction_leq_sorted(&self, t: f64) -> f64 {
+        let k = self.values.partition_point(|&v| v <= t);
+        k as f64 / self.values.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn cdf_quantiles() {
+        let mut c = Cdf::new();
+        c.extend((1..=100).map(|i| i as f64));
+        assert!((c.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((c.quantile(1.0) - 100.0).abs() < 1e-12);
+        assert!((c.quantile(0.5) - 50.5).abs() < 1e-9);
+        assert!((c.fraction_leq(80.0) - 0.8).abs() < 1e-12);
+        assert!((c.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_unsorted_input() {
+        let mut c = Cdf::new();
+        c.extend([5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert!((c.quantile(0.5) - 3.0).abs() < 1e-12);
+        assert!((c.fraction_leq(2.5) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cmf_series_monotone() {
+        let mut c = Cdf::new();
+        c.extend((0..1000).map(|i| (i as f64).sqrt()));
+        let series = c.cmf_series(50);
+        assert_eq!(series.len(), 51);
+        for w in series.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].0 >= w[0].0);
+        }
+        assert!((series.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,78 @@
+//! Micro-bench harness (criterion is unavailable offline): warm-up + timed
+//! iterations with mean/median/min reporting and a simple guard against
+//! dead-code elimination.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<4} mean={:>12?} median={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters.max(1);
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: samples[samples.len() / 2],
+        min: samples[0],
+    }
+}
+
+/// Run + print; returns the measurement for programmatic checks.
+pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Measurement {
+    let m = bench(name, warmup, iters, f);
+    println!("{}", m.report());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(m.iters, 5);
+        assert!(m.min <= m.median && m.median <= m.mean * 5);
+    }
+
+    #[test]
+    fn ordering_of_stats() {
+        let mut x = 0u64;
+        let m = bench("sum", 0, 9, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.min <= m.median);
+    }
+}

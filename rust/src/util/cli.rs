@@ -1,0 +1,133 @@
+//! Tiny CLI flag parser: `--flag value`, `--flag=value`, bare `--switch`,
+//! and positional arguments, with typed accessors and a generated usage
+//! line.  Enough for the `specsim` subcommands without external deps.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// `known_switches` lists flags that take no value.
+    pub fn parse(
+        argv: &[String],
+        known_switches: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("--{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn string(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&argv("fig2 --machines 300 --scale=0.5 --no-runtime"), &["no-runtime"])
+            .unwrap();
+        assert_eq!(a.positional(), &["fig2".to_string()]);
+        assert_eq!(a.usize("machines", 0).unwrap(), 300);
+        assert_eq!(a.f64("scale", 1.0).unwrap(), 0.5);
+        assert!(a.has("no-runtime"));
+        assert!(!a.has("other"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(""), &[]).unwrap();
+        assert_eq!(a.f64("lambda", 6.0).unwrap(), 6.0);
+        assert_eq!(a.string("out", "results"), "results");
+        assert_eq!(a.f64_opt("sigma").unwrap(), None);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("--machines"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("--lambda abc"), &[]).unwrap();
+        assert!(a.f64("lambda", 1.0).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates for functionality the offline build cannot pull from
+//! crates.io: a JSON reader (artifact manifests), a TOML-subset reader
+//! (config files), a CLI flag parser, and a micro-bench timing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod toml_lite;
+
+pub use json::Json;

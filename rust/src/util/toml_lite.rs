@@ -1,0 +1,175 @@
+//! A TOML subset sufficient for specsim config files: `key = value` pairs,
+//! `[table]` headers (one level), strings, integers, floats, booleans and
+//! comments.  No arrays-of-tables, no multi-line strings, no dotted keys.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: top-level keys plus `table.key` entries.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (n, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad table header", n + 1))?;
+                prefix = format!("{}.", name.trim());
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", n + 1))?;
+            let key = format!("{prefix}{}", k.trim());
+            entries.insert(key, parse_value(v.trim(), n + 1)?);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+    pub fn i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, String> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {line}: unterminated string"))?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("line {line}: cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_shape() {
+        let doc = Doc::parse(
+            r#"
+            # cluster
+            machines = 3000
+            horizon = 1500.0
+            scheduler = "sca"   # policy
+            use_runtime = true
+
+            [workload]
+            lambda = 6.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64("machines"), Some(3000));
+        assert_eq!(doc.f64("horizon"), Some(1500.0));
+        assert_eq!(doc.str("scheduler"), Some("sca"));
+        assert_eq!(doc.bool("use_runtime"), Some(true));
+        assert_eq!(doc.f64("workload.lambda"), Some(6.0));
+    }
+
+    #[test]
+    fn int_as_f64() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Doc::parse("no equals here").is_err());
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("x = ???").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = Doc::parse(r#"x = "a#b" # real comment"#).unwrap();
+        assert_eq!(doc.str("x"), Some("a#b"));
+    }
+}

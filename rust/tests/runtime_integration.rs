@@ -1,0 +1,177 @@
+//! Integration tests over the PJRT runtime + real artifacts.
+//!
+//! These need `make artifacts` to have been run; each test skips (with a
+//! loud message) when artifacts are absent so `cargo test` stays green on a
+//! fresh checkout, while `make test` always exercises the real path.
+
+use specsim::opt::gradient::{GradientSolver, P2Job, P2Problem};
+use specsim::opt::pareto_math;
+use specsim::runtime::solver::{sda_tables, sigma_curve, PjrtP2};
+use specsim::runtime::Manifest;
+use specsim::scheduler::sca::P2Backend;
+
+const DIR: &str = "artifacts";
+
+fn artifacts_present() -> bool {
+    if Manifest::load(DIR).is_ok() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts` for runtime coverage");
+        false
+    }
+}
+
+fn fig1_problem() -> P2Problem {
+    P2Problem {
+        jobs: vec![
+            P2Job { mu: 1.0, m: 10.0, age: 0.0 },
+            P2Job { mu: 2.0, m: 20.0, age: 0.0 },
+            P2Job { mu: 1.0, m: 5.0, age: 0.0 },
+            P2Job { mu: 2.0, m: 10.0, age: 0.0 },
+        ],
+        n_avail: 100.0,
+        gamma: 0.01,
+        r: 8.0,
+        alpha: 2.0,
+    }
+}
+
+#[test]
+fn manifest_describes_all_artifacts() {
+    if !artifacts_present() {
+        return;
+    }
+    let m = Manifest::load(DIR).unwrap();
+    for name in ["p2_solver", "p2_trace", "sigma_curve", "sda_opt"] {
+        assert!(m.entry(name).is_some(), "{name} missing from manifest");
+        assert!(m.hlo_path(name).is_ok(), "{name} HLO file missing");
+    }
+    assert_eq!(m.statics.c_grid.n, 64);
+}
+
+#[test]
+fn pjrt_p2_matches_rust_solver_on_fig1() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut pjrt = PjrtP2::load(DIR).expect("load p2_solver artifact");
+    let p = fig1_problem();
+    let c_pjrt = pjrt.solve(&p);
+    let c_rust = GradientSolver::default().solve(&p).c;
+    assert_eq!(c_pjrt.len(), 4);
+    for (a, b) in c_pjrt.iter().zip(&c_rust) {
+        assert!(
+            (a - b).abs() < 0.5,
+            "pjrt {c_pjrt:?} vs rust {c_rust:?} diverge"
+        );
+    }
+    // feasibility of the continuous solution
+    let used: f64 = c_pjrt.iter().zip(&p.jobs).map(|(c, j)| c * j.m).sum();
+    assert!(used <= p.n_avail * 1.10, "used {used}");
+    assert_eq!(pjrt.calls, 1);
+}
+
+#[test]
+fn pjrt_p2_handles_single_job_and_full_batch() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut pjrt = PjrtP2::load(DIR).expect("load");
+    // single job
+    let p1 = P2Problem {
+        jobs: vec![P2Job { mu: 1.0, m: 4.0, age: 2.0 }],
+        n_avail: 400.0,
+        gamma: 1e-3,
+        r: 8.0,
+        alpha: 2.0,
+    };
+    let c = pjrt.solve(&p1);
+    assert_eq!(c.len(), 1);
+    assert!(c[0] >= 7.0, "ample capacity should clone aggressively: {c:?}");
+    // full batch
+    let jobs: Vec<P2Job> = (0..pjrt.max_batch())
+        .map(|i| P2Job { mu: 1.0 + (i % 3) as f64 * 0.5, m: 5.0 + (i % 20) as f64, age: 0.0 })
+        .collect();
+    let total: f64 = jobs.iter().map(|j| j.m).sum();
+    let p = P2Problem { jobs, n_avail: total * 2.0, gamma: 0.01, r: 8.0, alpha: 2.0 };
+    let c = pjrt.solve(&p);
+    assert_eq!(c.len(), pjrt.max_batch());
+    for &x in &c {
+        assert!((1.0..=8.0).contains(&x), "c = {x}");
+    }
+}
+
+#[test]
+fn sigma_curve_artifact_matches_rust_quadrature() {
+    if !artifacts_present() {
+        return;
+    }
+    for alpha in [2.0, 3.5] {
+        let (sg, er) = sigma_curve(DIR, alpha).expect("sigma_curve artifact");
+        assert_eq!(sg.len(), er.len());
+        for (s, v) in sg.iter().zip(&er).step_by(8) {
+            let rust = pareto_math::ese_resource(alpha, *s);
+            assert!(
+                (v - rust).abs() < 5e-3,
+                "alpha={alpha} sigma={s}: pjrt {v} vs rust {rust}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sda_tables_artifact_reproduces_theorem3() {
+    if !artifacts_present() {
+        return;
+    }
+    let (sigma, tau, resource, c_max) = sda_tables(DIR, 2.0, 0.1).expect("sda_opt artifact");
+    let s_n = sigma.len();
+    assert_eq!(tau.len(), s_n * c_max);
+    assert_eq!(resource.len(), s_n * c_max);
+    // c* = 2 for sigma > 1 (Theorem 3); sigma* ~ 1.707
+    let mut best = (0usize, f64::INFINITY);
+    for (i, &s) in sigma.iter().enumerate() {
+        let row = &tau[i * c_max..(i + 1) * c_max];
+        let cstar = row
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if s > 1.0 {
+            assert_eq!(cstar, 1, "sigma={s}: c* should be 2 (index 1)");
+        }
+        let r = resource[i * c_max + cstar];
+        if r < best.1 {
+            best = (i, r);
+        }
+    }
+    assert!(
+        (sigma[best.0] - 1.707).abs() < 0.1,
+        "sigma* = {} vs 1.707",
+        sigma[best.0]
+    );
+}
+
+#[test]
+fn sca_uses_pjrt_backend_end_to_end() {
+    if !artifacts_present() {
+        return;
+    }
+    use specsim::cluster::generator::generate;
+    use specsim::cluster::sim::Simulator;
+    use specsim::config::{SimConfig, WorkloadConfig};
+
+    let mut cfg = SimConfig::default();
+    cfg.machines = 500;
+    cfg.horizon = 60.0;
+    cfg.use_runtime = true;
+    cfg.artifacts_dir = DIR.to_string();
+    cfg.scheduler = specsim::scheduler::SchedulerKind::Sca;
+    let wl = WorkloadConfig::paper(0.5);
+    let workload = generate(&wl, cfg.horizon, 1);
+    let sched = specsim::scheduler::build(&cfg, &wl).unwrap();
+    let res = Simulator::new(cfg, workload, sched).run();
+    assert!(!res.completed.is_empty());
+    assert!(res.speculative_launches > 0, "SCA via PJRT should clone");
+}

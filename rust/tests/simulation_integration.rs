@@ -1,0 +1,181 @@
+//! End-to-end simulation integration tests: the paper's qualitative claims
+//! at reduced scale, cross-scheduler invariants, and trace replay.
+
+use specsim::cluster::generator::generate;
+use specsim::cluster::sim::{SimResult, Simulator};
+use specsim::cluster::trace;
+use specsim::config::{SimConfig, WorkloadConfig};
+use specsim::scheduler::{self, SchedulerKind};
+
+fn cfg(machines: usize, horizon: f64) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.machines = machines;
+    c.horizon = horizon;
+    c.use_runtime = false; // pure-rust everywhere: no artifact dependency
+    c
+}
+
+fn run(cfg: &SimConfig, wl: &WorkloadConfig, kind: SchedulerKind, seed: u64) -> SimResult {
+    let mut c = cfg.clone();
+    c.scheduler = kind;
+    c.seed = seed;
+    let workload = generate(wl, c.horizon, seed);
+    let sched = scheduler::build(&c, wl).unwrap();
+    Simulator::new(c, workload, sched).run()
+}
+
+/// Paper Fig. 2 shape at 1/3 scale: SCA beats Mantri on mean flowtime by a
+/// wide margin in the lightly loaded regime, SDA by a smaller one.
+///
+/// Note on magnitudes: the paper reports ~60% for both SCA and SDA against
+/// its Mantri baseline, whose CMF is close to no-speculation (80% of jobs
+/// within ~17 units).  Our Mantri implements the published rule with exact
+/// remaining times after the detection checkpoint, making it a much
+/// stronger baseline — so the reproduced gaps are ~45-50% (SCA) and ~5-15%
+/// (SDA).  See EXPERIMENTS.md for the full discussion.
+///
+/// Scale matters for SCA: the P2 cloning branch needs `sum m_i < N(l)` to
+/// engage; tiny clusters starve it (single-copy fallbacks reintroduce the
+/// Pareto tail), so this test runs M = 1000.
+#[test]
+fn lightly_loaded_sca_sda_beat_mantri() {
+    let cfg = cfg(1000, 300.0);
+    let wl = WorkloadConfig::paper(2.0); // same omega as the paper's lambda=6 @ M=3000
+    let mantri = run(&cfg, &wl, SchedulerKind::Mantri, 1);
+    let sca = run(&cfg, &wl, SchedulerKind::Sca, 1);
+    let sda = run(&cfg, &wl, SchedulerKind::Sda, 1);
+    assert!(mantri.completed.len() > 300);
+    let (m, s, d) = (mantri.mean_flowtime(), sca.mean_flowtime(), sda.mean_flowtime());
+    assert!(s < m * 0.7, "sca {s} vs mantri {m}: expected a deep cut");
+    assert!(d < m * 0.97, "sda {d} vs mantri {m}");
+    // and SCA pays more resource than Mantri for that speed (paper Fig. 2b)
+    assert!(sca.mean_resource() > mantri.mean_resource() * 1.2);
+}
+
+/// Paper Fig. 6 shape: under heavy load ESE beats Mantri on flowtime at
+/// comparable resource.
+#[test]
+fn heavily_loaded_ese_beats_mantri() {
+    let mut c = cfg(300, 400.0);
+    c.sigma = Some(1.7);
+    c.mantri_srpt = true; // like-for-like baseline (see fig6.rs)
+    let wl = WorkloadConfig::paper(4.0); // same omega as lambda=40 @ M=3000
+    let mantri = run(&c, &wl, SchedulerKind::Mantri, 1);
+    let ese = run(&c, &wl, SchedulerKind::Ese, 1);
+    let (m, e) = (mantri.mean_flowtime(), ese.mean_flowtime());
+    assert!(e < m, "ese {e} vs mantri {m}");
+    let (mr, er) = (mantri.mean_resource(), ese.mean_resource());
+    assert!(
+        (er / mr - 1.0).abs() < 0.35,
+        "resource should be comparable: ese {er} vs mantri {mr}"
+    );
+}
+
+/// Every scheduler on the same workload: conservation invariants hold.
+#[test]
+fn all_schedulers_conserve() {
+    let cfg = cfg(150, 200.0);
+    let wl = WorkloadConfig::paper(0.8);
+    for kind in SchedulerKind::all() {
+        let res = run(&cfg, &wl, kind, 3);
+        assert!(!res.completed.is_empty(), "{kind:?} completed nothing");
+        assert!(res.utilization > 0.0 && res.utilization <= 1.0, "{kind:?}");
+        for r in &res.completed {
+            assert!(r.flowtime > 0.0, "{kind:?}: non-positive flowtime");
+            assert!(r.resource > 0.0, "{kind:?}: free lunch");
+            assert!(r.finish <= res.horizon + 1e-9, "{kind:?}: late record");
+            // a job cannot consume less than one pass over its tasks at the
+            // Pareto scale (gamma * m * mu lower-bounds resource)
+            let floor = 0.01 * r.num_tasks as f64 * r.mean_duration * 0.5;
+            assert!(r.resource >= floor * 0.99, "{kind:?}: resource {r:?}");
+        }
+    }
+}
+
+/// The speculation hierarchy: naive launches no backups; everything else
+/// launches at least some under a straggler-prone workload.
+#[test]
+fn speculation_volume_ordering() {
+    let cfg = cfg(400, 300.0);
+    let wl = WorkloadConfig::paper(0.5);
+    let naive = run(&cfg, &wl, SchedulerKind::Naive, 5);
+    let sda = run(&cfg, &wl, SchedulerKind::Sda, 5);
+    let clone_all = run(&cfg, &wl, SchedulerKind::CloneAll, 5);
+    assert_eq!(naive.speculative_launches, 0);
+    assert!(sda.speculative_launches > 0);
+    // blanket cloning speculates far more than detection-based SDA
+    assert!(clone_all.speculative_launches > 5 * sda.speculative_launches);
+}
+
+/// Trace replay: identical workload -> identical result.
+#[test]
+fn trace_replay_is_deterministic() {
+    let c = cfg(100, 100.0);
+    let wl = WorkloadConfig::paper(0.5);
+    let workload = generate(&wl, c.horizon, 9);
+    let dir = std::env::temp_dir().join("specsim_replay_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("wl.csv");
+    trace::save(&workload, &path).unwrap();
+
+    let direct = {
+        let mut cc = c.clone();
+        cc.scheduler = SchedulerKind::Sda;
+        let sched = scheduler::build(&cc, &wl).unwrap();
+        Simulator::new(cc, workload, sched).run()
+    };
+    let replayed = {
+        let mut cc = c.clone();
+        cc.scheduler = SchedulerKind::Sda;
+        let wl2 = WorkloadConfig::Trace { path: path.to_string_lossy().into_owned() };
+        let workload2 = generate(&wl2, c.horizon, 9);
+        let sched = scheduler::build(&cc, &wl2).unwrap();
+        Simulator::new(cc, workload2, sched).run()
+    };
+    assert_eq!(direct.completed.len(), replayed.completed.len());
+    for (a, b) in direct.completed.iter().zip(&replayed.completed) {
+        assert_eq!(a.job, b.job);
+        assert!((a.flowtime - b.flowtime).abs() < 1e-9);
+        assert!((a.resource - b.resource).abs() < 1e-9);
+    }
+}
+
+/// Fig. 5 shape: for a single huge job, ESE at sigma ~ 1.7 uses less
+/// resource than no-backup, and a too-small sigma wastes resource.
+#[test]
+fn single_job_sigma_shape() {
+    let mut c = cfg(100, 10_000.0);
+    let wl = WorkloadConfig::SingleJob { tasks: 2000, mean: 1.0, alpha: 2.0 };
+    let naive = run(&c, &wl, SchedulerKind::Naive, 2);
+    c.sigma = Some(1.7);
+    let ese_opt = run(&c, &wl, SchedulerKind::Ese, 2);
+    c.sigma = Some(0.3);
+    let ese_tiny = run(&c, &wl, SchedulerKind::Ese, 2);
+    let n = naive.total_machine_time;
+    let opt = ese_opt.total_machine_time;
+    let tiny = ese_tiny.total_machine_time;
+    assert!(opt < n, "ESE@1.7 should save resource: {opt} vs naive {n}");
+    assert!(tiny > opt, "sigma=0.3 over-speculates: {tiny} vs {opt}");
+    // and the job finishes sooner with speculation
+    assert!(
+        ese_opt.completed[0].flowtime < naive.completed[0].flowtime,
+        "flowtime should improve"
+    );
+}
+
+/// Slot-granularity ablation: finer slots must not break anything and
+/// should not change the qualitative ordering.
+#[test]
+fn slot_dt_ablation_stable() {
+    let wl = WorkloadConfig::paper(0.5);
+    let mut means = Vec::new();
+    for dt in [0.5, 1.0, 2.0] {
+        let mut c = cfg(200, 150.0);
+        c.slot_dt = dt;
+        let res = run(&c, &wl, SchedulerKind::Sda, 4);
+        assert!(!res.completed.is_empty());
+        means.push(res.mean_flowtime());
+    }
+    // coarser slots wait longer to schedule: flowtime weakly increases
+    assert!(means[0] <= means[2] * 1.5, "{means:?}");
+}
