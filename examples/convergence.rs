@@ -11,7 +11,7 @@ use std::path::Path;
 use specsim::figures::{fig1, Scale};
 
 fn main() -> Result<(), String> {
-    fig1::run(Path::new("results"), "artifacts", Scale::full())?;
+    fig1::run(Path::new("results"), "artifacts", Scale::full(), 0)?;
     // print a compact view of the trace
     let trace = fig1::rust_trace();
     println!("\niter   c_l1     c_l2     c_l3     c_l4");

@@ -4,19 +4,28 @@
 //!
 //!     cargo run --release --example heavily_loaded
 //!     SPECSIM_SCALE=0.1 cargo run --release --example heavily_loaded
+//!     SPECSIM_THREADS=1 cargo run --release --example heavily_loaded
+//!
+//! The experiment is a declarative spec: 2 policies x 2 arrival rates x
+//! 3 seeds, run in parallel on the experiment engine.
 
 use std::path::Path;
 
+use specsim::experiment::Runner;
 use specsim::figures::{fig6, Scale};
+use specsim::util::env_or;
 
 fn main() -> Result<(), String> {
-    let scale = std::env::var("SPECSIM_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .map(Scale)
-        .unwrap_or(Scale::full());
-    println!("running Fig. 6 at scale {} (SPECSIM_SCALE to change)\n", scale.0);
-    fig6::run(Path::new("results"), "artifacts", scale)?;
+    let scale = Scale(env_or("SPECSIM_SCALE", 1.0));
+    let mut spec = fig6::spec(scale);
+    spec.threads = env_or("SPECSIM_THREADS", 0);
+    println!(
+        "running Fig. 6 at scale {} — {} grid cells (SPECSIM_SCALE / SPECSIM_THREADS to change)\n",
+        scale.0,
+        spec.cell_count()
+    );
+    let sweep = Runner::run(&spec)?;
+    fig6::write_outputs(&sweep, Path::new("results"))?;
     println!("\nCSV series under results/fig6*_cmf_lambda{{30,40}}.csv");
     Ok(())
 }

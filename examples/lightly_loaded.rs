@@ -5,23 +5,31 @@
 //!
 //!     cargo run --release --example lightly_loaded            # full scale
 //!     SPECSIM_SCALE=0.1 cargo run --release --example lightly_loaded
+//!     SPECSIM_THREADS=1 cargo run --release --example lightly_loaded
 //!
 //! Full scale matches the paper: M = 3000, lambda = 6, horizon 1500,
-//! 3 seeds (~27000 jobs).  Requires `make artifacts` for the PJRT path
-//! (falls back to the pure-rust solver with a warning otherwise).
+//! 3 seeds (~27000 jobs).  The experiment is a declarative spec — the grid
+//! (3 policies x 3 seeds) runs on the parallel engine, one worker per core
+//! unless SPECSIM_THREADS pins it.  Requires `make artifacts` for the PJRT
+//! path (falls back to the pure-rust solver with a warning otherwise).
 
 use std::path::Path;
 
+use specsim::experiment::Runner;
 use specsim::figures::{fig2, Scale};
+use specsim::util::env_or;
 
 fn main() -> Result<(), String> {
-    let scale = std::env::var("SPECSIM_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .map(Scale)
-        .unwrap_or(Scale::full());
-    println!("running Fig. 2 at scale {} (SPECSIM_SCALE to change)\n", scale.0);
-    fig2::run(Path::new("results"), "artifacts", scale)?;
+    let scale = Scale(env_or("SPECSIM_SCALE", 1.0));
+    let mut spec = fig2::spec(scale);
+    spec.threads = env_or("SPECSIM_THREADS", 0);
+    println!(
+        "running Fig. 2 at scale {} — {} grid cells (SPECSIM_SCALE / SPECSIM_THREADS to change)\n",
+        scale.0,
+        spec.cell_count()
+    );
+    let sweep = Runner::run(&spec)?;
+    fig2::write_outputs(&sweep, Path::new("results"))?;
     println!("\nCSV series: results/fig2a_flowtime_cmf.csv, results/fig2b_resource_cmf.csv");
     Ok(())
 }

@@ -1,9 +1,11 @@
 //! Cutoff-threshold driver (Sec. III-B): compute lambda^U analytically and
 //! sweep the arrival rate across it, showing blanket cloning flip from a
 //! win to a loss — the boundary between the SCA/SDA regime and the ESE
-//! regime.
+//! regime.  The empirical sweep is an `ExperimentSpec` grid (2 policies x
+//! 5 load fractions) run on the parallel engine.
 //!
 //!     cargo run --release --example threshold_sweep
+//!     SPECSIM_THREADS=1 cargo run --release --example threshold_sweep
 
 use std::path::Path;
 
@@ -29,7 +31,8 @@ fn main() -> Result<(), String> {
         );
     }
     println!();
-    fig::run(Path::new("results"), "artifacts", Scale(0.5))?;
+    let threads = specsim::util::env_or("SPECSIM_THREADS", 0);
+    fig::run(Path::new("results"), "artifacts", Scale(0.5), threads)?;
     println!("\nCSVs: results/threshold_analytic.csv, results/threshold_empirical.csv");
     Ok(())
 }

@@ -1,12 +1,13 @@
 //! Ablation benches (`cargo bench --bench ablation`): the design choices
 //! DESIGN.md §6 calls out — slot granularity, detection fraction s_i,
 //! Mantri's kill rule, the small-job cloning gate in ESE, and the P2 batch
-//! cap — each swept on a fixed workload with the figure-style summary.
+//! cap — each declared as an `ExperimentSpec` whose policy axis is the
+//! swept knob (a patched variant per value) and run on the parallel
+//! engine, all values of one sweep concurrently.
 
-use specsim::cluster::generator::generate;
-use specsim::cluster::sim::{SimResult, Simulator};
 use specsim::config::{SimConfig, WorkloadConfig};
-use specsim::scheduler::{self, SchedulerKind};
+use specsim::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
+use specsim::scheduler::SchedulerKind;
 
 fn base_cfg() -> SimConfig {
     let mut c = SimConfig::default();
@@ -16,86 +17,135 @@ fn base_cfg() -> SimConfig {
     c
 }
 
-fn run(cfg: &SimConfig, wl: &WorkloadConfig) -> SimResult {
-    let workload = generate(wl, cfg.horizon, cfg.seed);
-    let sched = scheduler::build(cfg, wl).unwrap();
-    Simulator::new(cfg.clone(), workload, sched).run()
-}
-
-fn row(label: &str, res: &SimResult) {
-    println!(
-        "{label:<28} mean_ft={:>7.3} mean_res={:>7.4} backups={:>7} util={:.3}",
-        res.mean_flowtime(),
-        res.mean_resource(),
-        res.speculative_launches,
-        res.utilization
-    );
+/// Run one knob sweep: each `(label, variant)` pair is a policy-axis point
+/// on the shared workload.
+fn sweep(title: &str, wl: &WorkloadConfig, policies: Vec<PolicyVariant>) {
+    println!("== {title} ==");
+    let mut spec = ExperimentSpec::new(title, base_cfg());
+    spec.policies = policies;
+    spec.loads = vec![LoadPoint::new("fixed", f64::NAN, wl.clone())];
+    let sweep = match Runner::run(&spec) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("  FAILED ({e})");
+            return;
+        }
+    };
+    for (pi, (label, _)) in sweep.policies.iter().enumerate() {
+        let res = sweep.merged(pi, 0);
+        println!(
+            "{label:<28} mean_ft={:>7.3} mean_res={:>7.4} backups={:>7} util={:.3}",
+            res.mean_flowtime(),
+            res.mean_resource(),
+            res.speculative_launches,
+            res.utilization
+        );
+    }
 }
 
 fn main() {
     let light = WorkloadConfig::paper(0.8);
     let heavy = WorkloadConfig::paper(5.0);
 
-    println!("== slot granularity (SDA, light load) ==");
-    for dt in [0.25, 0.5, 1.0, 2.0, 4.0] {
-        let mut c = base_cfg();
-        c.scheduler = SchedulerKind::Sda;
-        c.slot_dt = dt;
-        row(&format!("slot_dt={dt}"), &run(&c, &light));
-    }
+    sweep(
+        "slot granularity (SDA, light load)",
+        &light,
+        [0.25, 0.5, 1.0, 2.0, 4.0]
+            .into_iter()
+            .map(|dt| {
+                PolicyVariant::patched(format!("slot_dt={dt}"), SchedulerKind::Sda, move |c| {
+                    c.slot_dt = dt
+                })
+                .at_x(dt)
+            })
+            .collect(),
+    );
 
-    println!("\n== detection fraction s_i (SDA, light load) ==");
-    for s in [0.05, 0.1, 0.2, 0.4, 0.6] {
-        let mut c = base_cfg();
-        c.scheduler = SchedulerKind::Sda;
-        c.detect_frac = s;
-        row(&format!("detect_frac={s}"), &run(&c, &light));
-    }
+    sweep(
+        "detection fraction s_i (SDA, light load)",
+        &light,
+        [0.05, 0.1, 0.2, 0.4, 0.6]
+            .into_iter()
+            .map(|s| {
+                PolicyVariant::patched(format!("detect_frac={s}"), SchedulerKind::Sda, move |c| {
+                    c.detect_frac = s
+                })
+                .at_x(s)
+            })
+            .collect(),
+    );
 
-    println!("\n== Mantri kill rule (heavy load) ==");
-    println!("(expected no-op here: with the blind estimator, duplication at");
-    println!(" e > 2E[x] always fires before kill-eligibility at e > 3E[x] —");
-    println!(" measured 0 kill-eligible occurrences; the rule only matters");
-    println!(" when the cluster stays saturated for >E[x] at a stretch)");
-    for kill in [false, true] {
-        let mut c = base_cfg();
-        c.scheduler = SchedulerKind::Mantri;
-        c.mantri_kill = kill;
-        row(&format!("mantri_kill={kill}"), &run(&c, &heavy));
-    }
+    println!("\n(Mantri kill rule: expected no-op here — with the blind estimator,");
+    println!(" duplication at e > 2E[x] always fires before kill-eligibility at");
+    println!(" e > 3E[x]; the rule only matters when the cluster stays saturated");
+    println!(" for >E[x] at a stretch)");
+    sweep(
+        "Mantri kill rule (heavy load)",
+        &heavy,
+        [false, true]
+            .into_iter()
+            .map(|kill| {
+                PolicyVariant::patched(
+                    format!("mantri_kill={kill}"),
+                    SchedulerKind::Mantri,
+                    move |c| c.mantri_kill = kill,
+                )
+            })
+            .collect(),
+    );
 
-    println!("\n== ESE small-job cloning gate (heavy load) ==");
-    println!("(at full saturation level 3 sees idle ~ 0, so the gate rarely");
-    println!(" fires — its benefit shows at moderate overload, cf. fig6 @30)");
-    for eta in [0.0, 0.05, 0.1, 0.2, 0.4] {
-        let mut c = base_cfg();
-        c.scheduler = SchedulerKind::Ese;
-        c.sigma = Some(1.7);
-        c.eta_small = eta;
-        row(&format!("eta_small={eta}"), &run(&c, &heavy));
-    }
+    println!("\n(ESE small-job gate: at full saturation level 3 sees idle ~ 0, so");
+    println!(" the gate rarely fires — its benefit shows at moderate overload,");
+    println!(" cf. fig6 @30)");
+    sweep(
+        "ESE small-job cloning gate (heavy load)",
+        &heavy,
+        [0.0, 0.05, 0.1, 0.2, 0.4]
+            .into_iter()
+            .map(|eta| {
+                PolicyVariant::patched(format!("eta_small={eta}"), SchedulerKind::Ese, move |c| {
+                    c.sigma = Some(1.7);
+                    c.eta_small = eta;
+                })
+                .at_x(eta)
+            })
+            .collect(),
+    );
 
-    println!("\n== ESE sigma (heavy load; analysis optimum ~1.7) ==");
-    for sigma in [1.0, 1.7, 2.5, 4.0] {
-        let mut c = base_cfg();
-        c.scheduler = SchedulerKind::Ese;
-        c.sigma = Some(sigma);
-        row(&format!("sigma={sigma}"), &run(&c, &heavy));
-    }
+    sweep(
+        "ESE sigma (heavy load; analysis optimum ~1.7)",
+        &heavy,
+        [1.0, 1.7, 2.5, 4.0]
+            .into_iter()
+            .map(|sigma| PolicyVariant::with_sigma(SchedulerKind::Ese, sigma))
+            .collect(),
+    );
 
-    println!("\n== SCA P2 batch cap (light load) ==");
-    for batch in [8, 16, 32, 64] {
-        let mut c = base_cfg();
-        c.scheduler = SchedulerKind::Sca;
-        c.p2_batch = batch;
-        row(&format!("p2_batch={batch}"), &run(&c, &light));
-    }
+    sweep(
+        "SCA P2 batch cap (light load)",
+        &light,
+        [8usize, 16, 32, 64]
+            .into_iter()
+            .map(|batch| {
+                PolicyVariant::patched(format!("p2_batch={batch}"), SchedulerKind::Sca, move |c| {
+                    c.p2_batch = batch
+                })
+                .at_x(batch as f64)
+            })
+            .collect(),
+    );
 
-    println!("\n== LATE speculative cap (light load) ==");
-    for cap in [0.02, 0.1, 0.3] {
-        let mut c = base_cfg();
-        c.scheduler = SchedulerKind::Late;
-        c.late_speculative_cap = cap;
-        row(&format!("late_cap={cap}"), &run(&c, &light));
-    }
+    sweep(
+        "LATE speculative cap (light load)",
+        &light,
+        [0.02, 0.1, 0.3]
+            .into_iter()
+            .map(|cap| {
+                PolicyVariant::patched(format!("late_cap={cap}"), SchedulerKind::Late, move |c| {
+                    c.late_speculative_cap = cap
+                })
+                .at_x(cap)
+            })
+            .collect(),
+    );
 }

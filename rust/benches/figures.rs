@@ -1,6 +1,8 @@
 //! Per-figure benchmark harness (`cargo bench --bench figures`): runs every
 //! paper-figure driver at a reduced scale, timing each and printing the
-//! same rows/series the paper reports.  The full-scale regeneration is
+//! same rows/series the paper reports.  Every driver routes through the
+//! parallel experiment engine; set SPECSIM_BENCH_THREADS to compare worker
+//! counts (default: one per core).  The full-scale regeneration is
 //! `make figures` / `specsim figure all`.
 
 use std::path::Path;
@@ -12,8 +14,13 @@ fn main() {
     let out = Path::new("results/bench");
     let artifacts = "artifacts";
     let scale = Scale(0.1);
-    println!("== figure regeneration at scale {} ==\n", scale.0);
-    let figs: [(&str, fn(&Path, &str, Scale) -> Result<(), String>); 7] = [
+    let threads: usize = specsim::util::env_or("SPECSIM_BENCH_THREADS", 0);
+    println!(
+        "== figure regeneration at scale {} ({} workers) ==\n",
+        scale.0,
+        if threads == 0 { "per-core".to_string() } else { threads.to_string() }
+    );
+    let figs: [(&str, fn(&Path, &str, Scale, usize) -> Result<(), String>); 7] = [
         ("fig1_convergence", figures::fig1::run),
         ("fig2_lightly_loaded", figures::fig2::run),
         ("fig3_sda_sigma", figures::fig3::run),
@@ -25,7 +32,7 @@ fn main() {
     let mut timings = Vec::new();
     for (name, f) in figs {
         let t0 = Instant::now();
-        if let Err(e) = f(out, artifacts, scale) {
+        if let Err(e) = f(out, artifacts, scale, threads) {
             println!("{name}: FAILED ({e})");
             continue;
         }

@@ -14,11 +14,156 @@ pub fn generate(cfg: &WorkloadConfig, horizon: f64, seed: u64) -> Workload {
         WorkloadConfig::Poisson { lambda, m_lo, m_hi, mean_lo, mean_hi, alpha } => {
             poisson(*lambda, *m_lo, *m_hi, *mean_lo, *mean_hi, *alpha, horizon, seed)
         }
+        WorkloadConfig::Bursty {
+            lambda,
+            burst,
+            on_frac,
+            cycle,
+            m_lo,
+            m_hi,
+            mean_lo,
+            mean_hi,
+            alpha,
+        } => bursty(
+            Mmpp::from_mean(*lambda, *burst, *on_frac, *cycle),
+            *m_lo,
+            *m_hi,
+            *mean_lo,
+            *mean_hi,
+            *alpha,
+            horizon,
+            seed,
+        ),
         WorkloadConfig::SingleJob { tasks, mean, alpha } => single_job(*tasks, *mean, *alpha, seed),
         WorkloadConfig::Trace { path } => {
             trace::load(path).unwrap_or_else(|e| panic!("trace {path}: {e}"))
         }
     }
+}
+
+/// Pooled maximum-likelihood estimate of the Pareto tail index from a
+/// workload's pre-sampled first-copy durations, using each job's own scale
+/// `mu`: `alpha_hat = N / sum ln(d / mu)`.  Used to derive SDA/ESE
+/// thresholds when the workload is a replayed trace rather than a
+/// parametric model.  Clamped to a sane range; defaults to the paper's
+/// alpha = 2 when the trace is empty or degenerate.
+pub fn estimate_alpha(wl: &Workload) -> f64 {
+    let mut n = 0u64;
+    let mut log_sum = 0.0;
+    for (spec, durs) in wl.specs.iter().zip(&wl.first_durations) {
+        for &d in durs {
+            // only samples strictly above the scale carry tail information;
+            // counting d <= mu (possible in hand-edited traces) would bias
+            // the estimate upward
+            if spec.dist.mu > 0.0 && d > spec.dist.mu {
+                log_sum += (d / spec.dist.mu).ln();
+                n += 1;
+            }
+        }
+    }
+    if n == 0 || log_sum <= 0.0 {
+        return 2.0;
+    }
+    (n as f64 / log_sum).clamp(1.1, 10.0)
+}
+
+/// Resolved 2-state MMPP parameters (rates + mean dwell times).
+#[derive(Clone, Copy, Debug)]
+pub struct Mmpp {
+    pub rate_on: f64,
+    pub rate_off: f64,
+    pub dwell_on: f64,
+    pub dwell_off: f64,
+}
+
+impl Mmpp {
+    /// Derive ON/OFF rates from the long-run mean rate `lambda`, the ON
+    /// multiplier `burst >= 1`, the stationary ON fraction and the mean
+    /// cycle length: `rate_on = burst * lambda` and `rate_off` chosen so
+    /// the stationary mean is exactly `lambda` (clamped at 0 when
+    /// `burst * on_frac` approaches 1 — the fully-bursty limit).
+    pub fn from_mean(lambda: f64, burst: f64, on_frac: f64, cycle: f64) -> Mmpp {
+        assert!(lambda > 0.0 && burst >= 1.0 && cycle > 0.0, "bad MMPP parameters");
+        assert!(0.0 < on_frac && on_frac < 1.0, "on_frac must be in (0,1)");
+        // beyond burst * on_frac = 1 the OFF rate would have to be negative
+        // and the realized mean would silently exceed lambda — reject it
+        // (the CLI validates the same bound with a friendlier error)
+        assert!(
+            burst * on_frac <= 1.0 + 1e-9,
+            "burst * on_frac = {} > 1: requested mean rate unreachable",
+            burst * on_frac
+        );
+        let rate_on = burst * lambda;
+        let rate_off = (lambda * (1.0 - burst * on_frac) / (1.0 - on_frac)).max(0.0);
+        Mmpp {
+            rate_on,
+            rate_off,
+            dwell_on: on_frac * cycle,
+            dwell_off: (1.0 - on_frac) * cycle,
+        }
+    }
+
+    /// Stationary mean arrival rate.
+    pub fn mean_rate(&self) -> f64 {
+        let pi_on = self.dwell_on / (self.dwell_on + self.dwell_off);
+        self.rate_on * pi_on + self.rate_off * (1.0 - pi_on)
+    }
+}
+
+/// Bursty multi-job workload: the paper's job mix arriving as a 2-state
+/// MMPP.  State dwell times and arrival gaps come from independent streams
+/// so the burst structure is stable across job-mix changes.
+#[allow(clippy::too_many_arguments)]
+fn bursty(
+    mmpp: Mmpp,
+    m_lo: u32,
+    m_hi: u32,
+    mean_lo: f64,
+    mean_hi: f64,
+    alpha: f64,
+    horizon: f64,
+    seed: u64,
+) -> Workload {
+    let mut arr_rng = Pcg64::new(seed, 101);
+    let mut job_rng = Pcg64::new(seed, 202);
+    let mut dur_rng = Pcg64::new(seed, 303);
+    let mut state_rng = Pcg64::new(seed, 404);
+    let mut specs = Vec::new();
+    let mut first_durations = Vec::new();
+    let mut t = 0.0;
+    let mut on = true;
+    let mut phase_end = state_rng.exponential(1.0 / mmpp.dwell_on);
+    loop {
+        let rate = if on { mmpp.rate_on } else { mmpp.rate_off };
+        let candidate = if rate > 0.0 {
+            t + arr_rng.exponential(rate)
+        } else {
+            f64::INFINITY
+        };
+        if candidate > phase_end {
+            // no arrival before the state flips; restart from the boundary
+            // (valid by memorylessness of the exponential gap)
+            t = phase_end;
+            if t > horizon {
+                break;
+            }
+            on = !on;
+            let dwell = if on { mmpp.dwell_on } else { mmpp.dwell_off };
+            phase_end = t + state_rng.exponential(1.0 / dwell);
+            continue;
+        }
+        t = candidate;
+        if t > horizon {
+            break;
+        }
+        let id = JobId(specs.len() as u32);
+        let m = job_rng.uniform_u64(m_lo as u64, m_hi as u64) as u32;
+        let mean = job_rng.uniform_f64(mean_lo, mean_hi);
+        let dist = Pareto::from_mean(mean, alpha);
+        first_durations.push((0..m).map(|_| dist.sample(&mut dur_rng)).collect());
+        specs.push(JobSpec { id, arrival: t, dist, num_tasks: m });
+    }
+    Workload { specs, first_durations }
 }
 
 /// The paper's multi-job workload (Sec. IV-C): Poisson arrivals at rate
@@ -130,5 +275,82 @@ mod tests {
             a.specs.iter().map(|s| s.arrival).collect::<Vec<_>>(),
             c.specs.iter().map(|s| s.arrival).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn mmpp_rates_preserve_mean() {
+        let m = Mmpp::from_mean(6.0, 3.0, 0.25, 40.0);
+        assert!((m.rate_on - 18.0).abs() < 1e-12);
+        assert!((m.mean_rate() - 6.0).abs() < 1e-12);
+        // fully-bursty limit: all arrivals in the ON state
+        let m = Mmpp::from_mean(6.0, 4.0, 0.25, 40.0);
+        assert_eq!(m.rate_off, 0.0);
+    }
+
+    #[test]
+    fn bursty_long_run_rate_matches_lambda() {
+        let wl = generate(&WorkloadConfig::bursty_paper(6.0, 3.0), 4000.0, 11);
+        let rate = wl.specs.len() as f64 / 4000.0;
+        // MMPP counts are overdispersed, so the band is wider than the
+        // Poisson test's — ~2.5 sigma at this horizon
+        assert!((rate - 6.0).abs() < 1.0, "rate {rate}");
+        for w in wl.specs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, s) in wl.specs.iter().enumerate() {
+            assert_eq!(s.id.0 as usize, i);
+        }
+    }
+
+    #[test]
+    fn bursty_is_deterministic_and_burstier_than_poisson() {
+        let cfg = WorkloadConfig::bursty_paper(6.0, 4.0);
+        let a = generate(&cfg, 500.0, 3);
+        let b = generate(&cfg, 500.0, 3);
+        assert_eq!(a.first_durations, b.first_durations);
+        // index-of-dispersion check on 10-unit bins: MMPP counts must be
+        // overdispersed relative to Poisson (variance/mean > 1)
+        let dispersion = |wl: &Workload| {
+            let mut bins = vec![0.0f64; 50];
+            for s in &wl.specs {
+                let i = (s.arrival / 10.0) as usize;
+                if i < bins.len() {
+                    bins[i] += 1.0;
+                }
+            }
+            let mean = bins.iter().sum::<f64>() / bins.len() as f64;
+            let var =
+                bins.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / bins.len() as f64;
+            var / mean
+        };
+        let poisson = generate(&WorkloadConfig::paper(6.0), 500.0, 3);
+        assert!(
+            dispersion(&a) > 1.5 * dispersion(&poisson),
+            "bursty {} vs poisson {}",
+            dispersion(&a),
+            dispersion(&poisson)
+        );
+    }
+
+    #[test]
+    fn alpha_estimate_recovers_generator_alpha() {
+        for alpha in [1.5f64, 2.0, 3.0] {
+            let wl = generate(
+                &WorkloadConfig::Poisson {
+                    lambda: 4.0,
+                    m_lo: 50,
+                    m_hi: 100,
+                    mean_lo: 1.0,
+                    mean_hi: 4.0,
+                    alpha,
+                },
+                400.0,
+                5,
+            );
+            let est = estimate_alpha(&wl);
+            assert!((est - alpha).abs() < 0.1, "alpha {alpha}: estimated {est}");
+        }
+        // degenerate workload falls back to the paper's default
+        assert_eq!(estimate_alpha(&Workload { specs: vec![], first_durations: vec![] }), 2.0);
     }
 }

@@ -1,7 +1,73 @@
-//! Homogeneous machine pool.  Each machine holds at most one task copy at a
-//! time (the paper's model); allocation is O(1) via a free-list stack.
+//! Machine pool.  Each machine holds at most one task copy at a time (the
+//! paper's model); allocation is O(1) via a free-list stack.
+//!
+//! The pool is homogeneous by default (every machine at speed 1.0, the
+//! paper's set-up) but can be built from [`MachineClass`]es with per-class
+//! speed factors: a copy's wall-clock duration on a host is its sampled
+//! work amount divided by the host's speed (`Cluster::launch_copy`).
 
 use super::job::TaskRef;
+
+/// A group of identical machines within a (possibly heterogeneous) cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MachineClass {
+    /// How many machines of this class.
+    pub count: usize,
+    /// Speed factor: wall-clock duration = sampled work / speed.  1.0 is
+    /// the paper's homogeneous baseline; 0.5 models stragglers-by-hardware.
+    pub speed: f64,
+}
+
+impl MachineClass {
+    pub fn new(count: usize, speed: f64) -> Self {
+        MachineClass { count, speed }
+    }
+}
+
+/// Parse a cluster scenario spec: comma-separated `COUNTxSPEED` groups,
+/// e.g. `"2000x1.0,1000x0.5"`.  Bare `COUNT` means speed 1.0.
+pub fn parse_classes(s: &str) -> Result<Vec<MachineClass>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (count_s, speed_s) = match part.split_once('x') {
+            Some((c, v)) => (c, v),
+            None => (part, "1.0"),
+        };
+        let count: usize = count_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("machine class '{part}': bad count '{count_s}'"))?;
+        let speed: f64 = speed_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("machine class '{part}': bad speed '{speed_s}'"))?;
+        if count == 0 {
+            return Err(format!("machine class '{part}': count must be > 0"));
+        }
+        if !(speed > 0.0) {
+            return Err(format!("machine class '{part}': speed must be > 0"));
+        }
+        out.push(MachineClass { count, speed });
+    }
+    if out.is_empty() {
+        return Err("machine classes: empty spec".to_string());
+    }
+    Ok(out)
+}
+
+/// Render classes back to the `COUNTxSPEED,...` spec (round-trips through
+/// [`parse_classes`]).
+pub fn format_classes(classes: &[MachineClass]) -> String {
+    classes
+        .iter()
+        .map(|c| format!("{}x{:?}", c.count, c.speed))
+        .collect::<Vec<_>>()
+        .join(",")
+}
 
 /// What a busy machine is running.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -10,20 +76,40 @@ pub struct Assignment {
     pub copy: u32,
 }
 
-/// Fixed-size pool of identical machines.
+/// Fixed-size pool of machines with per-machine speed factors.
 #[derive(Clone, Debug)]
 pub struct MachinePool {
     free: Vec<u32>,
     busy: Vec<Option<Assignment>>, // indexed by machine id
+    speeds: Vec<f64>,              // indexed by machine id
 }
 
 impl MachinePool {
+    /// Homogeneous pool (every machine at speed 1.0, the paper's model).
     pub fn new(n: usize) -> Self {
+        MachinePool::with_classes(&[MachineClass { count: n, speed: 1.0 }])
+    }
+
+    /// Heterogeneous pool: machines are laid out class by class, so class 0
+    /// occupies ids `0..classes[0].count` and is allocated first.
+    pub fn with_classes(classes: &[MachineClass]) -> Self {
+        let n: usize = classes.iter().map(|c| c.count).sum();
+        let mut speeds = Vec::with_capacity(n);
+        for c in classes {
+            speeds.extend(std::iter::repeat(c.speed).take(c.count));
+        }
         MachinePool {
             // LIFO free-list; reversed so machine 0 is allocated first
             free: (0..n as u32).rev().collect(),
             busy: vec![None; n],
+            speeds,
         }
+    }
+
+    /// Speed factor of machine `id`.
+    #[inline]
+    pub fn speed(&self, id: u32) -> f64 {
+        self.speeds[id as usize]
     }
 
     pub fn total(&self) -> usize {
@@ -120,5 +206,57 @@ mod tests {
         let a = p.alloc(Assignment { task: tref(0, 0), copy: 0 }).unwrap();
         p.release(a);
         p.release(a);
+    }
+
+    #[test]
+    fn homogeneous_pool_is_speed_one() {
+        let p = MachinePool::new(3);
+        for id in 0..3 {
+            assert_eq!(p.speed(id), 1.0);
+        }
+    }
+
+    #[test]
+    fn class_layout_orders_speeds() {
+        let p = MachinePool::with_classes(&[
+            MachineClass::new(2, 2.0),
+            MachineClass::new(3, 0.5),
+        ]);
+        assert_eq!(p.total(), 5);
+        assert_eq!(p.idle(), 5);
+        assert_eq!(p.speed(0), 2.0);
+        assert_eq!(p.speed(1), 2.0);
+        assert_eq!(p.speed(2), 0.5);
+        assert_eq!(p.speed(4), 0.5);
+    }
+
+    #[test]
+    fn first_class_allocated_first() {
+        let mut p = MachinePool::with_classes(&[
+            MachineClass::new(1, 4.0),
+            MachineClass::new(1, 1.0),
+        ]);
+        let a = p.alloc(Assignment { task: tref(0, 0), copy: 0 }).unwrap();
+        assert_eq!(a, 0);
+        assert_eq!(p.speed(a), 4.0);
+    }
+
+    #[test]
+    fn classes_spec_roundtrip() {
+        let classes = parse_classes("2000x1.0,1000x0.5").unwrap();
+        assert_eq!(classes, vec![MachineClass::new(2000, 1.0), MachineClass::new(1000, 0.5)]);
+        let back = parse_classes(&format_classes(&classes)).unwrap();
+        assert_eq!(back, classes);
+        // bare count defaults to speed 1.0
+        assert_eq!(parse_classes("50").unwrap(), vec![MachineClass::new(50, 1.0)]);
+    }
+
+    #[test]
+    fn classes_spec_rejects_bad_input() {
+        assert!(parse_classes("").is_err());
+        assert!(parse_classes("0x1.0").is_err());
+        assert!(parse_classes("10x0").is_err());
+        assert!(parse_classes("abcx1.0").is_err());
+        assert!(parse_classes("10xfast").is_err());
     }
 }

@@ -12,5 +12,5 @@ pub mod trace;
 pub use event::{Event, EventQueue};
 pub use generator::generate;
 pub use job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskRef, TaskState};
-pub use machine::MachinePool;
+pub use machine::{MachineClass, MachinePool};
 pub use sim::{Cluster, SimResult, Simulator};

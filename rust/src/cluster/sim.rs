@@ -63,8 +63,13 @@ impl Cluster {
             .map(|s| root.split(s.id.0 as u64 + 1))
             .collect();
         let jobs = workload.specs.into_iter().map(JobState::new).collect();
+        let machines = if cfg.machine_classes.is_empty() {
+            MachinePool::new(cfg.machines)
+        } else {
+            MachinePool::with_classes(&cfg.machine_classes)
+        };
         Cluster {
-            machines: MachinePool::new(cfg.machines),
+            machines,
             cfg,
             clock: 0.0,
             jobs,
@@ -163,8 +168,7 @@ impl Cluster {
             self.job(*a)
                 .spec
                 .workload()
-                .partial_cmp(&self.job(*b).spec.workload())
-                .unwrap()
+                .total_cmp(&self.job(*b).spec.workload())
         });
         v
     }
@@ -181,8 +185,7 @@ impl Cluster {
         v.sort_by(|a, b| {
             self.job(*a)
                 .remaining_workload()
-                .partial_cmp(&self.job(*b).remaining_workload())
-                .unwrap()
+                .total_cmp(&self.job(*b).remaining_workload())
         });
         v
     }
@@ -276,7 +279,7 @@ impl Cluster {
             return false;
         }
         let n_copies = self.jobs[ji].tasks[t.task as usize].copies.len();
-        let duration = if n_copies == 0 {
+        let work = if n_copies == 0 {
             self.first_durations[ji][t.task as usize]
         } else {
             self.jobs[ji].spec.dist.sample(&mut self.job_rngs[ji])
@@ -285,6 +288,9 @@ impl Cluster {
         let Some(machine) = self.machines.alloc(Assignment { task: t, copy: copy_idx }) else {
             return false;
         };
+        // sampled durations are work amounts; wall-clock scales by the
+        // host's speed (1.0 everywhere in the paper's homogeneous cluster)
+        let duration = work / self.machines.speed(machine);
         let job = &mut self.jobs[ji];
         job.tasks[t.task as usize].copies.push(CopyState {
             machine,
@@ -605,5 +611,46 @@ mod tests {
         assert_eq!(naive.speculative_launches, 0);
         let clone = run_with(scheduler::SchedulerKind::CloneAll);
         assert!(clone.speculative_launches > 0);
+    }
+
+    #[test]
+    fn machine_speed_scales_copy_durations() {
+        use crate::cluster::machine::MachineClass;
+        // identical single-job workload on a speed-1 and a speed-2 cluster:
+        // with one machine per task and no queueing, every copy's wall-clock
+        // (and hence the job's flowtime) halves exactly
+        let run_at = |speed: f64| {
+            let mut cfg = small_cfg();
+            cfg.horizon = 5000.0;
+            cfg.set_machine_classes(vec![MachineClass::new(50, speed)]);
+            let wl = generator::generate(
+                &WorkloadConfig::SingleJob { tasks: 50, mean: 1.0, alpha: 2.0 },
+                cfg.horizon,
+                cfg.seed,
+            );
+            let sched = scheduler::build(&cfg, &WorkloadConfig::paper(0.3)).unwrap();
+            Simulator::new(cfg, wl, sched).run()
+        };
+        let slow = run_at(1.0);
+        let fast = run_at(2.0);
+        assert_eq!(slow.completed.len(), 1);
+        assert_eq!(fast.completed.len(), 1);
+        let (s, f) = (slow.completed[0].flowtime, fast.completed[0].flowtime);
+        assert!(
+            (f - s / 2.0).abs() < cfg_slot_slack(),
+            "fast flowtime {f} vs half of slow {s}"
+        );
+        assert!(
+            (fast.total_machine_time - slow.total_machine_time / 2.0).abs() < 1e-6,
+            "machine time should halve: {} vs {}",
+            fast.total_machine_time,
+            slow.total_machine_time
+        );
+    }
+
+    /// Flowtimes include up-to-one-slot launch quantization; durations halve
+    /// exactly, so the tolerance is just numerical.
+    fn cfg_slot_slack() -> f64 {
+        1e-9
     }
 }

@@ -5,6 +5,7 @@
 //! the CLI builds it from flags.  Defaults reproduce the paper's Sec. IV-C
 //! simulation set-up.
 
+use crate::cluster::machine::{self, MachineClass};
 use crate::scheduler::SchedulerKind;
 use crate::util::toml_lite;
 
@@ -13,6 +14,11 @@ use crate::util::toml_lite;
 pub struct SimConfig {
     /// Number of machines M (paper: 3000 for the multi-job experiments).
     pub machines: usize,
+    /// Heterogeneous cluster scenario: machine classes with speed factors
+    /// (see `cluster::machine`).  Empty = the paper's homogeneous cluster of
+    /// `machines` speed-1.0 hosts.  When non-empty, class counts must sum to
+    /// `machines`.
+    pub machine_classes: Vec<MachineClass>,
     /// Simulation horizon in time units (paper: 1500).
     pub horizon: f64,
     /// Scheduling-slot length (the paper's slotted decision model).
@@ -66,6 +72,7 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
             machines: 3000,
+            machine_classes: Vec::new(),
             horizon: 1500.0,
             slot_dt: 1.0,
             seed: 1,
@@ -97,6 +104,23 @@ impl SimConfig {
         if self.machines == 0 {
             errs.push("machines must be > 0".to_string());
         }
+        if !self.machine_classes.is_empty() {
+            let total: usize = self.machine_classes.iter().map(|c| c.count).sum();
+            if total != self.machines {
+                errs.push(format!(
+                    "machine_classes counts sum to {total} but machines = {}",
+                    self.machines
+                ));
+            }
+            for c in &self.machine_classes {
+                if c.count == 0 {
+                    errs.push("machine class count must be > 0".to_string());
+                }
+                if !(c.speed > 0.0) {
+                    errs.push("machine class speed must be > 0".to_string());
+                }
+            }
+        }
         if !(self.horizon > 0.0) {
             errs.push("horizon must be > 0".to_string());
         }
@@ -124,14 +148,26 @@ impl SimConfig {
         }
     }
 
+    /// Install a heterogeneous cluster scenario, deriving `machines` from
+    /// the class counts so the two stay consistent.
+    pub fn set_machine_classes(&mut self, classes: Vec<MachineClass>) {
+        self.machines = classes.iter().map(|c| c.count).sum();
+        self.machine_classes = classes;
+    }
+
     /// Parse from the TOML subset (see `util::toml_lite`); unknown keys are
     /// rejected so typos fail loudly, missing keys keep their defaults.
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let doc = toml_lite::Doc::parse(text)?;
         let mut cfg = SimConfig::default();
+        let machines_explicit = doc.get("machines").is_some();
         for key in doc.keys() {
             match key {
                 "machines" => cfg.machines = doc.i64(key).ok_or("machines: int")? as usize,
+                "machine_classes" => {
+                    cfg.machine_classes =
+                        machine::parse_classes(doc.str(key).ok_or("machine_classes: string")?)?
+                }
                 "horizon" => cfg.horizon = doc.f64(key).ok_or("horizon: float")?,
                 "slot_dt" => cfg.slot_dt = doc.f64(key).ok_or("slot_dt: float")?,
                 "seed" => cfg.seed = doc.i64(key).ok_or("seed: int")? as u64,
@@ -167,6 +203,12 @@ impl SimConfig {
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
+        // like the CLI, derive the machine count from the class layout when
+        // only machine_classes is given (an explicit machines key must agree
+        // — validate() checks that)
+        if !cfg.machine_classes.is_empty() && !machines_explicit {
+            cfg.machines = cfg.machine_classes.iter().map(|c| c.count).sum();
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -176,6 +218,13 @@ impl SimConfig {
         let mut s = String::new();
         use std::fmt::Write as _;
         let _ = writeln!(s, "machines = {}", self.machines);
+        if !self.machine_classes.is_empty() {
+            let _ = writeln!(
+                s,
+                "machine_classes = \"{}\"",
+                machine::format_classes(&self.machine_classes)
+            );
+        }
         let _ = writeln!(s, "horizon = {:?}", self.horizon);
         let _ = writeln!(s, "slot_dt = {:?}", self.slot_dt);
         let _ = writeln!(s, "seed = {}", self.seed);
@@ -216,6 +265,25 @@ pub enum WorkloadConfig {
         mean_hi: f64,
         alpha: f64,
     },
+    /// Bursty arrivals: a 2-state MMPP (Markov-modulated Poisson process)
+    /// alternating between an ON state at rate `burst * lambda` and a
+    /// quieter OFF state, with exponential dwell times.  `lambda` is the
+    /// long-run mean arrival rate, `on_frac` the stationary fraction of
+    /// time spent ON, and `cycle` the mean ON+OFF cycle length.  The job
+    /// mix (task counts, durations) matches the Poisson workload, so only
+    /// the arrival correlation changes — the regime Anselmi & Walton show
+    /// shifts where speculation pays off.
+    Bursty {
+        lambda: f64,
+        burst: f64,
+        on_frac: f64,
+        cycle: f64,
+        m_lo: u32,
+        m_hi: u32,
+        mean_lo: f64,
+        mean_hi: f64,
+        alpha: f64,
+    },
     /// The Fig. 5 workload: one job with `tasks` tasks.
     SingleJob { tasks: u32, mean: f64, alpha: f64 },
     /// Replay a recorded trace (see `cluster::trace`).
@@ -235,10 +303,30 @@ impl WorkloadConfig {
         }
     }
 
+    /// The paper's job mix with bursty (MMPP) instead of Poisson arrivals.
+    /// `burst` is the ON-state rate multiplier; the defaults (ON a quarter
+    /// of the time, 40-unit cycles) keep tens of cycles inside the paper's
+    /// 1500-unit horizon.  Requires `burst * on_frac <= 1` so the OFF rate
+    /// stays non-negative.
+    pub fn bursty_paper(lambda: f64, burst: f64) -> Self {
+        WorkloadConfig::Bursty {
+            lambda,
+            burst,
+            on_frac: 0.25,
+            cycle: 40.0,
+            m_lo: 1,
+            m_hi: 100,
+            mean_lo: 1.0,
+            mean_hi: 4.0,
+            alpha: 2.0,
+        }
+    }
+
     /// Mean tasks per job E[m_i].
     pub fn mean_tasks(&self) -> f64 {
         match self {
-            WorkloadConfig::Poisson { m_lo, m_hi, .. } => 0.5 * (*m_lo as f64 + *m_hi as f64),
+            WorkloadConfig::Poisson { m_lo, m_hi, .. }
+            | WorkloadConfig::Bursty { m_lo, m_hi, .. } => 0.5 * (*m_lo as f64 + *m_hi as f64),
             WorkloadConfig::SingleJob { tasks, .. } => *tasks as f64,
             WorkloadConfig::Trace { .. } => f64::NAN,
         }
@@ -247,7 +335,8 @@ impl WorkloadConfig {
     /// Mean task duration E[s].
     pub fn mean_duration(&self) -> f64 {
         match self {
-            WorkloadConfig::Poisson { mean_lo, mean_hi, .. } => 0.5 * (mean_lo + mean_hi),
+            WorkloadConfig::Poisson { mean_lo, mean_hi, .. }
+            | WorkloadConfig::Bursty { mean_lo, mean_hi, .. } => 0.5 * (mean_lo + mean_hi),
             WorkloadConfig::SingleJob { mean, .. } => *mean,
             WorkloadConfig::Trace { .. } => f64::NAN,
         }
@@ -306,5 +395,38 @@ mod tests {
         let w = WorkloadConfig::paper(6.0);
         assert!((w.mean_tasks() - 50.5).abs() < 1e-12);
         assert!((w.mean_duration() - 2.5).abs() < 1e-12);
+        // same job mix under bursty arrivals
+        let b = WorkloadConfig::bursty_paper(6.0, 3.0);
+        assert!((b.mean_tasks() - 50.5).abs() < 1e-12);
+        assert!((b.mean_duration() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn machine_classes_validate_and_roundtrip() {
+        let mut cfg = SimConfig::default();
+        cfg.set_machine_classes(vec![
+            MachineClass::new(2000, 1.0),
+            MachineClass::new(1000, 0.5),
+        ]);
+        assert_eq!(cfg.machines, 3000);
+        cfg.validate().unwrap();
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.machine_classes, cfg.machine_classes);
+        // mismatched counts are rejected
+        cfg.machines = 10;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn toml_machine_classes_alone_derive_machines() {
+        let cfg = SimConfig::from_toml("machine_classes = \"100x1.0,50x0.5\"").unwrap();
+        assert_eq!(cfg.machines, 150);
+        // an explicit machines key must agree with the class counts
+        assert!(
+            SimConfig::from_toml("machines = 3000\nmachine_classes = \"100x1.0\"").is_err()
+        );
+        let cfg =
+            SimConfig::from_toml("machines = 100\nmachine_classes = \"100x1.0\"").unwrap();
+        assert_eq!(cfg.machines, 100);
     }
 }

@@ -1,0 +1,30 @@
+//! The parallel experiment engine: declarative scenario sweeps over
+//! scheduler x load x seed grids on a chosen cluster scenario.
+//!
+//! The paper's headline results are all sweeps, and every later scaling PR
+//! wants to run bigger ones; this module gives them one shape:
+//!
+//! * [`ExperimentSpec`] declares the grid — [`PolicyVariant`]s (scheduler
+//!   kind + optional config patch), [`LoadPoint`]s (labelled workloads),
+//!   replication seeds, and a [`ClusterScenario`] (homogeneous or
+//!   heterogeneous machine classes).
+//! * [`Runner`] executes the grid across `std::thread::scope` workers.
+//!   Schedulers are constructed *inside* each worker (the `Scheduler`
+//!   trait is `!Send`; SCA can pin a PJRT executor to its thread), and
+//!   each `(load, seed)` workload is pre-sampled exactly once and shared
+//!   read-only by every policy — so results are byte-identical whatever
+//!   the worker count.
+//! * [`SweepResult`] is the collected table, in spec order;
+//!   `metrics::report::sweep_csv` serializes it, and its series helpers
+//!   feed the existing `xy_csv`/`cmf_csv` shapes.
+//!
+//! All figure drivers, the sweep benches and the CLI `compare`/`sweep`
+//! commands route through here.
+
+pub mod result;
+pub mod runner;
+pub mod spec;
+
+pub use result::{CellResult, SweepResult};
+pub use runner::{resolve_threads, run_parallel, Runner};
+pub use spec::{ClusterScenario, ConfigPatch, ExperimentSpec, LoadPoint, PolicyVariant};

@@ -1,0 +1,154 @@
+//! The collected grid: one [`SimResult`] per cell, in a fixed
+//! policy-major order, plus seed-pooling and series helpers.
+//! `metrics::report::sweep_csv` serializes the table to the repo's
+//! label/x/y CSV shapes.
+
+use crate::cluster::sim::SimResult;
+use crate::config::SimConfig;
+
+use super::spec::ExperimentSpec;
+
+/// One grid cell's outcome.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Index into [`SweepResult::policies`].
+    pub policy: usize,
+    /// Index into [`SweepResult::loads`].
+    pub load: usize,
+    pub seed: u64,
+    pub result: SimResult,
+}
+
+/// All cells of one sweep.  Cells are ordered policy-major, then load,
+/// then seed — the order is a function of the spec alone, never of worker
+/// scheduling, so two runs of the same spec serialize byte-identically.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub name: String,
+    /// The resolved base config (scenario applied) the cells ran under.
+    pub base: SimConfig,
+    /// Policy axis: (label, x-coordinate; NaN when categorical).
+    pub policies: Vec<(String, f64)>,
+    /// Load axis: (label, x-coordinate).
+    pub loads: Vec<(String, f64)>,
+    pub seeds: Vec<u64>,
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepResult {
+    pub(crate) fn new(spec: &ExperimentSpec, base: SimConfig, cells: Vec<CellResult>) -> Self {
+        SweepResult {
+            name: spec.name.clone(),
+            base,
+            policies: spec.policies.iter().map(|p| (p.label.clone(), p.x)).collect(),
+            loads: spec.loads.iter().map(|l| (l.label.clone(), l.x)).collect(),
+            seeds: spec.seeds.clone(),
+            cells,
+        }
+    }
+
+    /// The cell at (policy, load, seed-index).
+    pub fn cell(&self, pi: usize, li: usize, si: usize) -> &CellResult {
+        &self.cells[(pi * self.loads.len() + li) * self.seeds.len() + si]
+    }
+
+    /// All seeds of one (policy, load) pair, in seed order.
+    pub fn cells_for(&self, pi: usize, li: usize) -> &[CellResult] {
+        let ns = self.seeds.len();
+        let start = (pi * self.loads.len() + li) * ns;
+        &self.cells[start..start + ns]
+    }
+
+    /// Pool one (policy, load) pair's per-job records across seeds — the
+    /// paper repeats each experiment with a few seeds and pools the jobs.
+    /// Utilization is averaged; counters are summed.
+    pub fn merged(&self, pi: usize, li: usize) -> SimResult {
+        let cells = self.cells_for(pi, li);
+        let mut acc = cells[0].result.clone();
+        for c in &cells[1..] {
+            acc.completed.extend(c.result.completed.iter().cloned());
+            acc.incomplete += c.result.incomplete;
+            acc.total_machine_time += c.result.total_machine_time;
+            acc.speculative_launches += c.result.speculative_launches;
+        }
+        acc.utilization =
+            cells.iter().map(|c| c.result.utilization).sum::<f64>() / cells.len() as f64;
+        acc
+    }
+
+    /// One series per policy over the load axis: seed-pooled `metric`
+    /// against each load's x.  Feeds `metrics::report::xy_csv`.
+    pub fn series_over_loads(
+        &self,
+        metric: impl Fn(&SimResult) -> f64,
+    ) -> Vec<(String, Vec<(f64, f64)>)> {
+        self.policies
+            .iter()
+            .enumerate()
+            .map(|(pi, (label, _))| {
+                let pts = self
+                    .loads
+                    .iter()
+                    .enumerate()
+                    .map(|(li, (_, x))| (*x, metric(&self.merged(pi, li))))
+                    .collect();
+                (label.clone(), pts)
+            })
+            .collect()
+    }
+
+    /// One series over the policy axis for a fixed load: seed-pooled
+    /// `metric` against each policy's x (a sigma sweep, say).
+    pub fn series_over_policies(
+        &self,
+        li: usize,
+        metric: impl Fn(&SimResult) -> f64,
+    ) -> Vec<(f64, f64)> {
+        self.policies
+            .iter()
+            .enumerate()
+            .map(|(pi, (_, x))| (*x, metric(&self.merged(pi, li))))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::spec::{LoadPoint, PolicyVariant};
+    use crate::experiment::Runner;
+    use crate::scheduler::SchedulerKind;
+
+    fn sweep() -> SweepResult {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 30;
+        cfg.horizon = 50.0;
+        cfg.use_runtime = false;
+        let mut spec = ExperimentSpec::new("t", cfg);
+        spec.policies = vec![PolicyVariant::kind(SchedulerKind::Naive)];
+        spec.loads = vec![LoadPoint::lambda(0.2), LoadPoint::lambda(0.3)];
+        spec.seeds = vec![4, 5];
+        spec.threads = 1;
+        Runner::run(&spec).unwrap()
+    }
+
+    #[test]
+    fn merged_pools_seeds() {
+        let s = sweep();
+        let merged = s.merged(0, 0);
+        let per_seed: usize =
+            s.cells_for(0, 0).iter().map(|c| c.result.completed.len()).sum();
+        assert_eq!(merged.completed.len(), per_seed);
+    }
+
+    #[test]
+    fn series_shapes_match_axes() {
+        let s = sweep();
+        let over_loads = s.series_over_loads(|r| r.mean_flowtime());
+        assert_eq!(over_loads.len(), 1);
+        assert_eq!(over_loads[0].1.len(), 2);
+        assert_eq!(over_loads[0].1[0].0, 0.2);
+        let over_policies = s.series_over_policies(1, |r| r.mean_flowtime());
+        assert_eq!(over_policies.len(), 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! The parallel sweep engine: fans grid cells out across scoped worker
+//! threads.
+//!
+//! Two invariants make parallel runs reproducible:
+//!
+//! 1. **Schedulers are constructed inside the worker thread.**  The
+//!    [`Scheduler`](crate::scheduler::Scheduler) trait is deliberately
+//!    `!Send` — SCA may hold a thread-pinned PJRT executor — so a cell's
+//!    scheduler never crosses a thread boundary.
+//! 2. **Workloads are pre-sampled once per `(load, seed)` pair** and shared
+//!    read-only by every policy, so all policies replay the identical
+//!    arrivals and first-copy durations, and results are independent of the
+//!    worker count and cell interleaving.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::generator;
+use crate::cluster::sim::{Simulator, Workload};
+use crate::scheduler;
+
+use super::result::{CellResult, SweepResult};
+use super::spec::ExperimentSpec;
+
+/// Run `f(0..n)` on up to `threads` scoped workers (0 = one per available
+/// core) and return the results in index order.  The low-level primitive
+/// under [`Runner::run`]; figure drivers with non-simulation cells (solver
+/// traces, analytic curves) use it directly.
+pub fn run_parallel<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = resolve_threads(threads).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                out.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|v| v.expect("every cell filled"))
+        .collect()
+}
+
+/// 0 = one worker per available core.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Executes an [`ExperimentSpec`]'s grid and collects a [`SweepResult`].
+pub struct Runner;
+
+impl Runner {
+    pub fn run(spec: &ExperimentSpec) -> Result<SweepResult, String> {
+        spec.validate()?;
+        let mut base = spec.base.clone();
+        spec.scenario.apply(&mut base);
+        base.validate()?;
+        let (np, nl, ns) = (spec.policies.len(), spec.loads.len(), spec.seeds.len());
+
+        // Pre-sample each (load, seed) workload exactly once; generation is
+        // itself seed-deterministic, so it parallelizes safely.
+        let cache: Vec<Workload> = run_parallel(nl * ns, spec.threads, |i| {
+            generator::generate(&spec.loads[i / ns].workload, base.horizon, spec.seeds[i % ns])
+        });
+
+        // Grid cells in policy-major order; the index fixes the output
+        // order regardless of which worker finishes first.
+        let cells: Vec<Result<CellResult, String>> =
+            run_parallel(np * nl * ns, spec.threads, |i| {
+                let (pi, li, si) = (i / (nl * ns), (i / ns) % nl, i % ns);
+                let policy = &spec.policies[pi];
+                let mut cfg = base.clone();
+                cfg.scheduler = policy.scheduler;
+                cfg.seed = spec.seeds[si];
+                if let Some(patch) = &policy.patch {
+                    patch(&mut cfg);
+                }
+                let workload = cache[li * ns + si].clone();
+                // built here, inside the worker: Scheduler is !Send
+                let sched = scheduler::build_for(&cfg, &spec.loads[li].workload, Some(&workload))?;
+                let result = Simulator::new(cfg, workload, sched).run();
+                Ok(CellResult { policy: pi, load: li, seed: spec.seeds[si], result })
+            });
+
+        let mut out = Vec::with_capacity(cells.len());
+        for cell in cells {
+            out.push(cell?);
+        }
+        Ok(SweepResult::new(spec, base, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::experiment::spec::{LoadPoint, PolicyVariant};
+    use crate::scheduler::SchedulerKind;
+
+    #[test]
+    fn run_parallel_preserves_index_order() {
+        for threads in [1, 2, 7] {
+            let v = run_parallel(23, threads, |i| i * i);
+            assert_eq!(v, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+        assert!(run_parallel(0, 4, |i| i).is_empty());
+    }
+
+    fn tiny_spec(threads: usize) -> ExperimentSpec {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 40;
+        cfg.horizon = 60.0;
+        cfg.use_runtime = false;
+        let mut spec = ExperimentSpec::new("tiny", cfg);
+        spec.policies = vec![
+            PolicyVariant::kind(SchedulerKind::Naive),
+            PolicyVariant::kind(SchedulerKind::CloneAll),
+        ];
+        spec.loads = vec![LoadPoint::lambda(0.2), LoadPoint::lambda(0.4)];
+        spec.seeds = vec![1, 2];
+        spec.threads = threads;
+        spec
+    }
+
+    #[test]
+    fn grid_is_complete_and_ordered() {
+        let sweep = Runner::run(&tiny_spec(2)).unwrap();
+        assert_eq!(sweep.cells.len(), 8);
+        for (i, c) in sweep.cells.iter().enumerate() {
+            assert_eq!(c.policy, i / 4);
+            assert_eq!(c.load, (i / 2) % 2);
+            assert_eq!(c.seed, [1, 2][i % 2]);
+        }
+    }
+
+    #[test]
+    fn policies_share_the_sampled_workload() {
+        let sweep = Runner::run(&tiny_spec(3)).unwrap();
+        // same (load, seed) cell under naive and clone_all: any job both
+        // policies completed must have the identical arrival and task count
+        let by_id = |r: &crate::cluster::sim::SimResult| {
+            r.completed
+                .iter()
+                .map(|j| (j.job, (j.arrival, j.num_tasks)))
+                .collect::<std::collections::BTreeMap<_, _>>()
+        };
+        let a = by_id(&sweep.cell(0, 0, 0).result);
+        let b = by_id(&sweep.cell(1, 0, 0).result);
+        let mut common = 0;
+        for (id, meta) in &b {
+            if let Some(meta_a) = a.get(id) {
+                assert_eq!(meta, meta_a, "job {id} diverged between policies");
+                common += 1;
+            }
+        }
+        assert!(common > 0, "no overlapping completed jobs to compare");
+    }
+}

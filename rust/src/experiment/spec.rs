@@ -1,0 +1,221 @@
+//! Declarative description of a sweep: which policies, which load points,
+//! which seeds, on which cluster scenario.  The [`Runner`](super::Runner)
+//! turns the spec's cross product into grid cells and fans them out across
+//! worker threads.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::cluster::machine::MachineClass;
+use crate::config::{SimConfig, WorkloadConfig};
+use crate::scheduler::SchedulerKind;
+
+/// A deterministic tweak applied to the cell's config after the scheduler
+/// kind and seed are set (e.g. an ablation flag).  Must be `Send + Sync`:
+/// it is *called* inside worker threads, although the scheduler it
+/// configures is still constructed in-thread.
+pub type ConfigPatch = Arc<dyn Fn(&mut SimConfig) + Send + Sync>;
+
+/// One point on the policy axis: a scheduler kind plus an optional config
+/// patch, labelled for reports.  `x` is the variant's coordinate when the
+/// policy axis is the swept dimension (e.g. a sigma sweep); NaN when the
+/// axis is categorical.
+#[derive(Clone)]
+pub struct PolicyVariant {
+    pub label: String,
+    pub scheduler: SchedulerKind,
+    pub x: f64,
+    pub patch: Option<ConfigPatch>,
+}
+
+impl PolicyVariant {
+    /// A plain scheduler with no overrides.
+    pub fn kind(k: SchedulerKind) -> Self {
+        PolicyVariant { label: k.as_str().to_string(), scheduler: k, x: f64::NAN, patch: None }
+    }
+
+    /// A scheduler run at a fixed straggler threshold (the Fig. 3/5 sigma
+    /// sweeps); `x` is set to sigma so series can plot against it.
+    pub fn with_sigma(k: SchedulerKind, sigma: f64) -> Self {
+        PolicyVariant {
+            label: format!("{}@sigma{sigma}", k.as_str()),
+            scheduler: k,
+            x: sigma,
+            patch: Some(Arc::new(move |cfg: &mut SimConfig| cfg.sigma = Some(sigma))),
+        }
+    }
+
+    /// A scheduler with an arbitrary config patch (ablation sweeps).
+    pub fn patched(
+        label: impl Into<String>,
+        k: SchedulerKind,
+        patch: impl Fn(&mut SimConfig) + Send + Sync + 'static,
+    ) -> Self {
+        PolicyVariant {
+            label: label.into(),
+            scheduler: k,
+            x: f64::NAN,
+            patch: Some(Arc::new(patch)),
+        }
+    }
+
+    /// Set the variant's x-coordinate (for swept policy axes).
+    pub fn at_x(mut self, x: f64) -> Self {
+        self.x = x;
+        self
+    }
+}
+
+impl fmt::Debug for PolicyVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PolicyVariant")
+            .field("label", &self.label)
+            .field("scheduler", &self.scheduler)
+            .field("x", &self.x)
+            .field("patched", &self.patch.is_some())
+            .finish()
+    }
+}
+
+/// One point on the load axis: a labelled workload with an x-coordinate
+/// (arrival rate, tail index, load fraction — whatever the sweep varies).
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    pub label: String,
+    pub x: f64,
+    pub workload: WorkloadConfig,
+}
+
+impl LoadPoint {
+    pub fn new(label: impl Into<String>, x: f64, workload: WorkloadConfig) -> Self {
+        LoadPoint { label: label.into(), x, workload }
+    }
+
+    /// The paper's multi-job workload at arrival rate `lambda`.
+    pub fn lambda(lambda: f64) -> Self {
+        LoadPoint::new(format!("lambda{lambda}"), lambda, WorkloadConfig::paper(lambda))
+    }
+}
+
+/// The cluster scenario axis: which machines the sweep runs on.  The
+/// default is the paper's homogeneous cluster (whatever `base.machines`
+/// says); a heterogeneous scenario overrides both the class layout and the
+/// machine count.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterScenario {
+    pub machine_classes: Vec<MachineClass>,
+}
+
+impl ClusterScenario {
+    /// The paper's homogeneous cluster (no override).
+    pub fn homogeneous() -> Self {
+        ClusterScenario::default()
+    }
+
+    /// A heterogeneous cluster built from speed classes.
+    pub fn heterogeneous(classes: Vec<MachineClass>) -> Self {
+        ClusterScenario { machine_classes: classes }
+    }
+
+    pub(crate) fn apply(&self, cfg: &mut SimConfig) {
+        if !self.machine_classes.is_empty() {
+            cfg.set_machine_classes(self.machine_classes.clone());
+        }
+    }
+}
+
+/// A declarative sweep: the full grid is
+/// `policies x loads x seeds` on `scenario`, every cell sharing the
+/// pre-sampled workload of its `(load, seed)` pair.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    /// Name for reports/logs.
+    pub name: String,
+    /// Common configuration; per-cell fields (scheduler, seed) and policy
+    /// patches are applied on top of a clone.
+    pub base: SimConfig,
+    /// Cluster scenario applied to `base` before any cell runs.
+    pub scenario: ClusterScenario,
+    pub policies: Vec<PolicyVariant>,
+    pub loads: Vec<LoadPoint>,
+    pub seeds: Vec<u64>,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+}
+
+impl ExperimentSpec {
+    pub fn new(name: impl Into<String>, base: SimConfig) -> Self {
+        let seeds = vec![base.seed];
+        ExperimentSpec {
+            name: name.into(),
+            base,
+            scenario: ClusterScenario::default(),
+            policies: Vec::new(),
+            loads: Vec::new(),
+            seeds,
+            threads: 0,
+        }
+    }
+
+    /// Grid size.
+    pub fn cell_count(&self) -> usize {
+        self.policies.len() * self.loads.len() * self.seeds.len()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.policies.is_empty() {
+            return Err(format!("experiment '{}': no policies", self.name));
+        }
+        if self.loads.is_empty() {
+            return Err(format!("experiment '{}': no load points", self.name));
+        }
+        if self.seeds.is_empty() {
+            return Err(format!("experiment '{}': no seeds", self.name));
+        }
+        self.base.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validates_axes() {
+        let mut spec = ExperimentSpec::new("t", SimConfig::default());
+        assert!(spec.validate().is_err());
+        spec.policies = vec![PolicyVariant::kind(SchedulerKind::Naive)];
+        assert!(spec.validate().is_err());
+        spec.loads = vec![LoadPoint::lambda(2.0)];
+        spec.validate().unwrap();
+        assert_eq!(spec.cell_count(), 1);
+        spec.seeds = vec![1, 2, 3];
+        assert_eq!(spec.cell_count(), 3);
+    }
+
+    #[test]
+    fn sigma_variant_patches_config() {
+        let v = PolicyVariant::with_sigma(SchedulerKind::Sda, 1.7);
+        assert_eq!(v.x, 1.7);
+        let mut cfg = SimConfig::default();
+        (v.patch.unwrap())(&mut cfg);
+        assert_eq!(cfg.sigma, Some(1.7));
+    }
+
+    #[test]
+    fn scenario_applies_classes() {
+        let sc = ClusterScenario::heterogeneous(vec![
+            MachineClass::new(10, 1.0),
+            MachineClass::new(5, 0.5),
+        ]);
+        let mut cfg = SimConfig::default();
+        sc.apply(&mut cfg);
+        assert_eq!(cfg.machines, 15);
+        cfg.validate().unwrap();
+        // homogeneous scenario leaves the base cluster untouched
+        let mut cfg = SimConfig::default();
+        ClusterScenario::homogeneous().apply(&mut cfg);
+        assert_eq!(cfg.machines, 3000);
+        assert!(cfg.machine_classes.is_empty());
+    }
+}

@@ -7,6 +7,7 @@
 
 use std::path::Path;
 
+use crate::experiment::run_parallel;
 use crate::metrics::report;
 use crate::opt::gradient::{GradientSolver, P2Job, P2Problem};
 use crate::runtime::{Manifest, PjrtExecutor};
@@ -71,8 +72,20 @@ pub fn pjrt_trace(artifacts_dir: &str) -> Result<Vec<Vec<f64>>, String> {
     Ok(trace)
 }
 
-pub fn run(out_dir: &Path, artifacts_dir: &str, _scale: Scale) -> Result<(), String> {
-    let rust = rust_trace();
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    _scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    // both backends in parallel; each worker constructs its own solver /
+    // PJRT executor in-thread (the executor is thread-pinned)
+    let mut traces = run_parallel(2, threads, |i| match i {
+        0 => Ok(rust_trace()),
+        _ => pjrt_trace(artifacts_dir),
+    });
+    let pjrt = traces.pop().unwrap();
+    let rust = traces.pop().unwrap().expect("rust trace is infallible");
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
     for j in 0..4 {
         series.push((
@@ -83,7 +96,7 @@ pub fn run(out_dir: &Path, artifacts_dir: &str, _scale: Scale) -> Result<(), Str
                 .collect(),
         ));
     }
-    match pjrt_trace(artifacts_dir) {
+    match pjrt {
         Ok(pjrt) => {
             for j in 0..4 {
                 series.push((

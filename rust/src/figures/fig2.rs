@@ -6,38 +6,12 @@
 
 use std::path::Path;
 
-use crate::cluster::generator::generate;
-use crate::cluster::sim::{SimResult, Simulator};
 use crate::config::{SimConfig, WorkloadConfig};
+use crate::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner, SweepResult};
 use crate::metrics::report::{self, SummaryRow};
-use crate::scheduler::{self, SchedulerKind};
+use crate::scheduler::SchedulerKind;
 
 use super::Scale;
-
-/// Run one scheduler over several seeds and merge the per-job records
-/// (the paper repeats with 3 seeds and pools the ~27000 jobs).
-pub fn run_seeds(cfg: &SimConfig, wl: &WorkloadConfig, seeds: &[u64]) -> SimResult {
-    let mut merged: Option<SimResult> = None;
-    for &seed in seeds {
-        let mut c = cfg.clone();
-        c.seed = seed;
-        let workload = generate(wl, c.horizon, seed);
-        let sched = scheduler::build(&c, wl).expect("scheduler build");
-        let res = Simulator::new(c, workload, sched).run();
-        merged = Some(match merged {
-            None => res,
-            Some(mut acc) => {
-                acc.completed.extend(res.completed);
-                acc.incomplete += res.incomplete;
-                acc.total_machine_time += res.total_machine_time;
-                acc.speculative_launches += res.speculative_launches;
-                acc.utilization = (acc.utilization + res.utilization) / 2.0;
-                acc
-            }
-        });
-    }
-    merged.expect("at least one seed")
-}
 
 pub fn config(scale: Scale) -> (SimConfig, WorkloadConfig) {
     let mut cfg = SimConfig::default();
@@ -48,19 +22,35 @@ pub fn config(scale: Scale) -> (SimConfig, WorkloadConfig) {
     (cfg, WorkloadConfig::paper(lambda))
 }
 
-pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), String> {
-    let (mut cfg, wl) = config(scale);
-    cfg.artifacts_dir = artifacts_dir.to_string();
-    let seeds: Vec<u64> = (1..=3).collect();
+/// The experiment as a declaration: 3 policies x 1 load x 3 seeds (the
+/// paper pools the ~27000 jobs of 3 replications).
+pub fn spec(scale: Scale) -> ExperimentSpec {
+    let (cfg, wl) = config(scale);
+    let lambda = match &wl {
+        WorkloadConfig::Poisson { lambda, .. } => *lambda,
+        _ => unreachable!(),
+    };
+    let mut spec = ExperimentSpec::new("fig2", cfg);
+    spec.policies = vec![
+        PolicyVariant::kind(SchedulerKind::Sca),
+        PolicyVariant::kind(SchedulerKind::Sda),
+        PolicyVariant::kind(SchedulerKind::Mantri),
+    ];
+    spec.loads = vec![LoadPoint::new("paper", lambda, wl)];
+    spec.seeds = (1..=3).collect();
+    spec
+}
+
+/// Write the CMF CSVs and print the summary table from a completed sweep.
+pub fn write_outputs(sweep: &SweepResult, out_dir: &Path) -> Result<(), String> {
     let mut rows = Vec::new();
     let mut flow_series = Vec::new();
     let mut res_series = Vec::new();
-    for kind in [SchedulerKind::Sca, SchedulerKind::Sda, SchedulerKind::Mantri] {
-        cfg.scheduler = kind;
-        let res = run_seeds(&cfg, &wl, &seeds);
+    for (pi, (label, _)) in sweep.policies.iter().enumerate() {
+        let res = sweep.merged(pi, 0);
         rows.push(SummaryRow::from_result(&res));
-        flow_series.push((kind.as_str(), res.flowtime_cdf()));
-        res_series.push((kind.as_str(), res.resource_cdf()));
+        flow_series.push((label.as_str(), res.flowtime_cdf()));
+        res_series.push((label.as_str(), res.resource_cdf()));
     }
     report::write_file(
         out_dir.join("fig2a_flowtime_cmf.csv"),
@@ -72,10 +62,7 @@ pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), Stri
         &report::cmf_csv(&mut res_series, 400),
     )
     .map_err(|e| e.to_string())?;
-    println!("fig2 (lambda={:.2}, M={}):", match wl {
-        WorkloadConfig::Poisson { lambda, .. } => lambda,
-        _ => unreachable!(),
-    }, cfg.machines);
+    println!("fig2 (lambda={:.2}, M={}):", sweep.loads[0].1, sweep.base.machines);
     print!("{}", report::summary_table(&rows));
     let mantri_ft = rows[2].mean_flowtime;
     for r in &rows[..2] {
@@ -86,4 +73,17 @@ pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), Stri
         );
     }
     Ok(())
+}
+
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    let mut spec = spec(scale);
+    spec.base.artifacts_dir = artifacts_dir.to_string();
+    spec.threads = threads;
+    let sweep = Runner::run(&spec)?;
+    write_outputs(&sweep, out_dir)
 }

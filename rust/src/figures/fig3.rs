@@ -5,36 +5,52 @@
 
 use std::path::Path;
 
+use crate::config::WorkloadConfig;
+use crate::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
 use crate::metrics::report::{self, SummaryRow};
 use crate::scheduler::SchedulerKind;
 
-use super::fig2::{config, run_seeds};
+use super::fig2;
 use super::Scale;
 
 pub const SIGMAS: [f64; 5] = [1.2, 1.707, 2.2, 3.0, 4.0];
 
-pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), String> {
-    let (mut cfg, wl) = config(scale);
-    cfg.artifacts_dir = artifacts_dir.to_string();
-    cfg.scheduler = SchedulerKind::Sda;
-    let seeds = [1u64, 2];
-    let mut rows = Vec::new();
-    let mut series = vec![
-        ("mean_flowtime".to_string(), Vec::new()),
-        ("mean_resource".to_string(), Vec::new()),
+/// The sigma sweep as a policy axis: SDA at each threshold, same workload.
+pub fn spec(scale: Scale) -> ExperimentSpec {
+    let (cfg, wl) = fig2::config(scale);
+    let lambda = match &wl {
+        WorkloadConfig::Poisson { lambda, .. } => *lambda,
+        _ => unreachable!(),
+    };
+    let mut spec = ExperimentSpec::new("fig3", cfg);
+    spec.policies = SIGMAS
+        .iter()
+        .map(|&s| PolicyVariant::with_sigma(SchedulerKind::Sda, s))
+        .collect();
+    spec.loads = vec![LoadPoint::new("paper", lambda, wl)];
+    spec.seeds = vec![1, 2];
+    spec
+}
+
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    let mut spec = spec(scale);
+    spec.base.artifacts_dir = artifacts_dir.to_string();
+    spec.threads = threads;
+    let sweep = Runner::run(&spec)?;
+    let series = vec![
+        ("mean_flowtime".to_string(), sweep.series_over_policies(0, |r| r.mean_flowtime())),
+        ("mean_resource".to_string(), sweep.series_over_policies(0, |r| r.mean_resource())),
     ];
-    for sigma in SIGMAS {
-        cfg.sigma = Some(sigma);
-        let res = run_seeds(&cfg, &wl, &seeds);
-        let row = SummaryRow::from_result(&res);
-        series[0].1.push((sigma, row.mean_flowtime));
-        series[1].1.push((sigma, row.mean_resource));
-        rows.push(row);
-    }
     report::write_file(out_dir.join("fig3_sda_sigma.csv"), &report::xy_csv(&series))
         .map_err(|e| e.to_string())?;
     println!("fig3 (SDA sigma sweep, paper optimum ~1.707):");
-    for (sigma, row) in SIGMAS.iter().zip(&rows) {
+    for (pi, &sigma) in SIGMAS.iter().enumerate() {
+        let row = SummaryRow::from_result(&sweep.merged(pi, 0));
         println!(
             "  sigma={sigma:<6} mean_flowtime={:.3} mean_resource={:.4}",
             row.mean_flowtime, row.mean_resource
@@ -50,5 +66,13 @@ mod tests {
     #[test]
     fn sigma_grid_includes_theorem3_optimum() {
         assert!(SIGMAS.iter().any(|s| (s - 1.707).abs() < 1e-9));
+    }
+
+    #[test]
+    fn spec_sweeps_sigma_on_the_policy_axis() {
+        let s = spec(Scale(0.05));
+        assert_eq!(s.policies.len(), SIGMAS.len());
+        assert_eq!(s.policies[1].x, 1.707);
+        assert_eq!(s.cell_count(), SIGMAS.len() * 2);
     }
 }

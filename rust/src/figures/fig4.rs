@@ -6,6 +6,7 @@
 
 use std::path::Path;
 
+use crate::experiment::run_parallel;
 use crate::metrics::report;
 use crate::opt::pareto_math;
 use crate::runtime::solver::sigma_curve;
@@ -26,11 +27,18 @@ pub fn curve(artifacts_dir: &str, alpha: f64) -> (Vec<f64>, Vec<f64>, &'static s
     }
 }
 
-pub fn run(out_dir: &Path, artifacts_dir: &str, _scale: Scale) -> Result<(), String> {
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    _scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
     let mut series = Vec::new();
     println!("fig4 (E[R]/E[x] vs sigma):");
-    for alpha in ALPHAS {
-        let (sg, er, backend) = curve(artifacts_dir, alpha);
+    // one curve per alpha in parallel; each worker loads its own PJRT
+    // executor (thread-pinned) or falls back to the rust quadrature
+    let curves = run_parallel(ALPHAS.len(), threads, |i| curve(artifacts_dir, ALPHAS[i]));
+    for (alpha, (sg, er, backend)) in ALPHAS.into_iter().zip(curves) {
         let (mut best_s, mut best_v) = (0.0, f64::INFINITY);
         for (&s, &v) in sg.iter().zip(&er) {
             if v < best_v {

@@ -2,14 +2,18 @@
 //! E[x] = 1, ESE vs the no-backup naive baseline, sweeping sigma.  The
 //! empirical optimum should match the Fig. 4 analysis (~1.7 at alpha = 2)
 //! and the ESE advantage should fade as alpha grows.
+//!
+//! Grid: policy axis = naive + ESE@sigma (12 thresholds), load axis =
+//! tail index alpha in {2, 3, 4}, seed axis = up to 50 replications — the
+//! largest sweep in the figure set and the acceptance benchmark for the
+//! parallel runner.
 
 use std::path::Path;
 
-use crate::cluster::generator::generate;
-use crate::cluster::sim::Simulator;
 use crate::config::{SimConfig, WorkloadConfig};
+use crate::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner, SweepResult};
 use crate::metrics::report;
-use crate::scheduler::{self, SchedulerKind};
+use crate::scheduler::SchedulerKind;
 
 use super::Scale;
 
@@ -22,57 +26,76 @@ pub fn config(scale: Scale) -> (SimConfig, WorkloadConfig) {
     (cfg, WorkloadConfig::SingleJob { tasks, mean: 1.0, alpha: 2.0 })
 }
 
-/// (total resource, job flowtime) averaged over `seeds` runs.
-fn measure(
-    cfg: &SimConfig,
-    wl: &WorkloadConfig,
-    kind: SchedulerKind,
-    sigma: Option<f64>,
-    seeds: u64,
-) -> (f64, f64) {
-    let (mut res_acc, mut flow_acc) = (0.0, 0.0);
-    for seed in 0..seeds {
-        let mut c = cfg.clone();
-        c.scheduler = kind;
-        c.sigma = sigma;
-        c.seed = seed + 1;
-        let workload = generate(wl, c.horizon, c.seed);
-        let sched = scheduler::build(&c, wl).expect("build");
-        let r = Simulator::new(c, workload, sched).run();
-        // single job: total resource + its flowtime
-        res_acc += r.total_machine_time * cfg.gamma;
-        flow_acc += r
-            .completed
-            .first()
-            .map(|j| j.flowtime)
-            .unwrap_or(cfg.horizon);
-    }
-    (res_acc / seeds as f64, flow_acc / seeds as f64)
+pub fn sigmas() -> Vec<f64> {
+    (1..=12).map(|i| i as f64 * 0.5).collect()
 }
 
-pub fn run(out_dir: &Path, _artifacts_dir: &str, scale: Scale) -> Result<(), String> {
+/// The full Fig. 5 grid as one declaration.
+pub fn spec(scale: Scale) -> ExperimentSpec {
     let (cfg, wl) = config(scale);
-    // paper: 50 runs per point; scale that down with the workload
-    let seeds = ((50.0 * scale.0) as u64).clamp(3, 50);
-    let sigmas: Vec<f64> = (1..=12).map(|i| i as f64 * 0.5).collect();
-    let mut series = Vec::new();
-    println!("fig5 (single job, {} tasks, M = {}, {seeds} runs/point):", match wl {
+    let tasks = match wl {
         WorkloadConfig::SingleJob { tasks, .. } => tasks,
         _ => unreachable!(),
-    }, cfg.machines);
-    for alpha in [2.0f64, 3.0, 4.0] {
-        let wl_a = match wl {
-            WorkloadConfig::SingleJob { tasks, mean, .. } => {
-                WorkloadConfig::SingleJob { tasks, mean, alpha }
-            }
-            _ => unreachable!(),
-        };
-        let (naive_res, naive_flow) = measure(&cfg, &wl_a, SchedulerKind::Naive, None, seeds);
+    };
+    let mut spec = ExperimentSpec::new("fig5", cfg);
+    spec.policies = std::iter::once(PolicyVariant::kind(SchedulerKind::Naive))
+        .chain(sigmas().into_iter().map(|s| PolicyVariant::with_sigma(SchedulerKind::Ese, s)))
+        .collect();
+    spec.loads = [2.0f64, 3.0, 4.0]
+        .into_iter()
+        .map(|alpha| {
+            LoadPoint::new(
+                format!("alpha{alpha}"),
+                alpha,
+                WorkloadConfig::SingleJob { tasks, mean: 1.0, alpha },
+            )
+        })
+        .collect();
+    // paper: 50 runs per point; scale that down with the workload
+    let seeds = ((50.0 * scale.0) as u64).clamp(3, 50);
+    spec.seeds = (1..=seeds).collect();
+    spec
+}
+
+/// (total resource, job flowtime) for one (policy, load) pair, averaged
+/// over the seed axis.  The single job may be censored by the horizon, so
+/// flowtime falls back to the horizon like the paper's runs do.
+fn measure(sweep: &SweepResult, pi: usize, li: usize) -> (f64, f64) {
+    let cells = sweep.cells_for(pi, li);
+    let gamma = sweep.base.gamma;
+    let horizon = sweep.base.horizon;
+    let (mut res_acc, mut flow_acc) = (0.0, 0.0);
+    for c in cells {
+        res_acc += c.result.total_machine_time * gamma;
+        flow_acc += c.result.completed.first().map(|j| j.flowtime).unwrap_or(horizon);
+    }
+    (res_acc / cells.len() as f64, flow_acc / cells.len() as f64)
+}
+
+pub fn run(
+    out_dir: &Path,
+    _artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    let mut spec = spec(scale);
+    spec.threads = threads;
+    let sweep = Runner::run(&spec)?;
+    let sigma_grid = sigmas();
+    let mut series = Vec::new();
+    println!(
+        "fig5 (single job, M = {}, {} runs/point, {} grid cells):",
+        sweep.base.machines,
+        sweep.seeds.len(),
+        sweep.cells.len()
+    );
+    for (li, (_, alpha)) in sweep.loads.iter().enumerate() {
+        let (naive_res, naive_flow) = measure(&sweep, 0, li);
         let mut res_pts = Vec::new();
         let mut flow_pts = Vec::new();
         let (mut best_sigma, mut best_res) = (0.0, f64::INFINITY);
-        for &sigma in &sigmas {
-            let (r, f) = measure(&cfg, &wl_a, SchedulerKind::Ese, Some(sigma), seeds);
+        for (k, &sigma) in sigma_grid.iter().enumerate() {
+            let (r, f) = measure(&sweep, k + 1, li);
             res_pts.push((sigma, r));
             flow_pts.push((sigma, f));
             if r < best_res {
@@ -88,14 +111,31 @@ pub fn run(out_dir: &Path, _artifacts_dir: &str, scale: Scale) -> Result<(), Str
         series.push((format!("ese_flowtime_alpha{alpha}"), flow_pts));
         series.push((
             format!("naive_resource_alpha{alpha}"),
-            sigmas.iter().map(|&s| (s, naive_res)).collect(),
+            sigma_grid.iter().map(|&s| (s, naive_res)).collect(),
         ));
         series.push((
             format!("naive_flowtime_alpha{alpha}"),
-            sigmas.iter().map(|&s| (s, naive_flow)).collect(),
+            sigma_grid.iter().map(|&s| (s, naive_flow)).collect(),
         ));
     }
     report::write_file(out_dir.join("fig5_single_job.csv"), &report::xy_csv(&series))
         .map_err(|e| e.to_string())?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_covers_the_paper_grid() {
+        let s = spec(Scale(0.02));
+        assert_eq!(s.policies.len(), 13); // naive + 12 sigmas
+        assert_eq!(s.loads.len(), 3);
+        assert_eq!(s.seeds.len(), 3);
+        assert_eq!(s.cell_count(), 13 * 3 * 3);
+        // the policy axis carries the sigma coordinate for the CSV series
+        assert_eq!(s.policies[1].x, 0.5);
+        assert_eq!(s.policies[12].x, 6.0);
+    }
 }

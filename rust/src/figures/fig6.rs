@@ -6,10 +6,10 @@
 use std::path::Path;
 
 use crate::config::{SimConfig, WorkloadConfig};
+use crate::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner, SweepResult};
 use crate::metrics::report::{self, SummaryRow};
 use crate::scheduler::SchedulerKind;
 
-use super::fig2::run_seeds;
 use super::Scale;
 
 pub fn config(scale: Scale, lambda_full: f64) -> (SimConfig, WorkloadConfig) {
@@ -25,22 +25,38 @@ pub fn config(scale: Scale, lambda_full: f64) -> (SimConfig, WorkloadConfig) {
     (cfg, WorkloadConfig::paper(lambda))
 }
 
-pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), String> {
-    for lambda_full in [30.0, 40.0] {
-        let (mut cfg, wl) = config(scale, lambda_full);
-        cfg.artifacts_dir = artifacts_dir.to_string();
-        let seeds = [1u64, 2, 3];
+/// Both arrival rates on the load axis, ESE vs Mantri on the policy axis.
+pub fn spec(scale: Scale) -> ExperimentSpec {
+    let (cfg, _) = config(scale, 30.0);
+    let mut spec = ExperimentSpec::new("fig6", cfg);
+    spec.policies = vec![
+        PolicyVariant::kind(SchedulerKind::Ese),
+        PolicyVariant::kind(SchedulerKind::Mantri),
+    ];
+    spec.loads = [30.0f64, 40.0]
+        .into_iter()
+        .map(|lambda_full| {
+            let (_, wl) = config(scale, lambda_full);
+            LoadPoint::new(format!("lambda{}", lambda_full as u32), lambda_full, wl)
+        })
+        .collect();
+    spec.seeds = vec![1, 2, 3];
+    spec
+}
+
+/// Per-lambda CMF CSVs + summary tables from a completed sweep.
+pub fn write_outputs(sweep: &SweepResult, out_dir: &Path) -> Result<(), String> {
+    for (li, (_, lambda_full)) in sweep.loads.iter().enumerate() {
         let mut rows = Vec::new();
         let mut flow_series = Vec::new();
         let mut res_series = Vec::new();
-        for kind in [SchedulerKind::Ese, SchedulerKind::Mantri] {
-            cfg.scheduler = kind;
-            let res = run_seeds(&cfg, &wl, &seeds);
+        for (pi, (label, _)) in sweep.policies.iter().enumerate() {
+            let res = sweep.merged(pi, li);
             rows.push(SummaryRow::from_result(&res));
-            flow_series.push((kind.as_str(), res.flowtime_cdf()));
-            res_series.push((kind.as_str(), res.resource_cdf()));
+            flow_series.push((label.as_str(), res.flowtime_cdf()));
+            res_series.push((label.as_str(), res.resource_cdf()));
         }
-        let tag = lambda_full as u32;
+        let tag = *lambda_full as u32;
         report::write_file(
             out_dir.join(format!("fig6a_flowtime_cmf_lambda{tag}.csv")),
             &report::cmf_csv(&mut flow_series, 400),
@@ -51,7 +67,7 @@ pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), Stri
             &report::cmf_csv(&mut res_series, 400),
         )
         .map_err(|e| e.to_string())?;
-        println!("fig6 (lambda_full={lambda_full}, M={}):", cfg.machines);
+        println!("fig6 (lambda_full={lambda_full}, M={}):", sweep.base.machines);
         print!("{}", report::summary_table(&rows));
         println!(
             "  ese vs mantri: flowtime {:+.1}% (paper: ~-18% at lambda=40), \
@@ -61,4 +77,17 @@ pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), Stri
         );
     }
     Ok(())
+}
+
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    let mut spec = spec(scale);
+    spec.base.artifacts_dir = artifacts_dir.to_string();
+    spec.threads = threads;
+    let sweep = Runner::run(&spec)?;
+    write_outputs(&sweep, out_dir)
 }

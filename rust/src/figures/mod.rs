@@ -1,5 +1,11 @@
 //! One driver per paper figure (see DESIGN.md §5).  Shared by the CLI
 //! (`specsim figure <id>`), the examples, and `cargo bench`.
+//!
+//! Every driver routes through the [`experiment`](crate::experiment)
+//! engine: the simulation figures declare an `ExperimentSpec` grid and run
+//! it on the parallel `Runner`; the solver/analytic figures (fig1, fig4)
+//! fan their independent cells out with `run_parallel`.  `threads = 0`
+//! means one worker per core; any N > 0 produces identical output.
 
 pub mod fig1;
 pub mod fig2;
@@ -28,14 +34,20 @@ impl Scale {
     }
 }
 
-/// Run every figure driver, writing CSVs under `out_dir`.
-pub fn run_all(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), String> {
-    fig1::run(out_dir, artifacts_dir, scale)?;
-    fig2::run(out_dir, artifacts_dir, scale)?;
-    fig3::run(out_dir, artifacts_dir, scale)?;
-    fig4::run(out_dir, artifacts_dir, scale)?;
-    fig5::run(out_dir, artifacts_dir, scale)?;
-    fig6::run(out_dir, artifacts_dir, scale)?;
-    threshold::run(out_dir, artifacts_dir, scale)?;
+/// Run every figure driver, writing CSVs under `out_dir`.  `threads` is
+/// each driver's worker count (0 = one per core).
+pub fn run_all(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    fig1::run(out_dir, artifacts_dir, scale, threads)?;
+    fig2::run(out_dir, artifacts_dir, scale, threads)?;
+    fig3::run(out_dir, artifacts_dir, scale, threads)?;
+    fig4::run(out_dir, artifacts_dir, scale, threads)?;
+    fig5::run(out_dir, artifacts_dir, scale, threads)?;
+    fig6::run(out_dir, artifacts_dir, scale, threads)?;
+    threshold::run(out_dir, artifacts_dir, scale, threads)?;
     Ok(())
 }

@@ -7,14 +7,65 @@
 use std::path::Path;
 
 use crate::analysis::threshold::{cutoff_lambda, delay_cloned, delay_no_spec};
+use crate::cluster::sim::SimResult;
 use crate::config::{SimConfig, WorkloadConfig};
+use crate::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
 use crate::metrics::report::{self, SummaryRow};
 use crate::scheduler::SchedulerKind;
 
-use super::fig2::run_seeds;
 use super::Scale;
 
-pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), String> {
+pub const FRACS: [f64; 5] = [0.3, 0.6, 0.9, 1.1, 1.3];
+
+/// The paper's workload moments (E[m] = 50.5, E[s] = 2.5, alpha = 2) —
+/// shared by the analytic header and the empirical sweep so the two can't
+/// drift apart.
+pub const MEAN_TASKS: f64 = 50.5;
+pub const MEAN_DURATION: f64 = 2.5;
+pub const TAIL_ALPHA: f64 = 2.0;
+
+/// The empirical sweep: load axis = lambda as a fraction of the analytic
+/// cutoff, policy axis = strict 2-copy cloning vs no speculation.
+pub fn spec(scale: Scale) -> ExperimentSpec {
+    let mut cfg = SimConfig::default();
+    cfg.machines = scale.machines(600);
+    cfg.horizon = scale.horizon(600.0);
+    // strict cloning: the literal Sec. III scheme, so exceeding the
+    // Theorem-1 bound actually destabilizes instead of degrading gracefully.
+    // Past the bound the queue grows without bound; the completed-jobs CMF
+    // is censored, so the instability shows up as a collapsing completion
+    // ratio rather than an exploding mean.
+    cfg.clone_strict = true;
+    let rep = cutoff_lambda(cfg.machines, MEAN_TASKS, MEAN_DURATION, TAIL_ALPHA);
+    let mut spec = ExperimentSpec::new("threshold", cfg);
+    spec.policies = vec![
+        PolicyVariant::kind(SchedulerKind::CloneAll),
+        PolicyVariant::kind(SchedulerKind::Naive),
+    ];
+    spec.loads = FRACS
+        .iter()
+        .map(|&frac| {
+            LoadPoint::new(
+                format!("frac{frac}"),
+                frac,
+                WorkloadConfig::paper(rep.lambda_cutoff * frac),
+            )
+        })
+        .collect();
+    spec.seeds = vec![1];
+    spec
+}
+
+fn completion_ratio(res: &SimResult) -> f64 {
+    res.completed.len() as f64 / (res.completed.len() as f64 + res.incomplete as f64)
+}
+
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
     // analytic curves over omega for a few alphas
     let mut series = Vec::new();
     for alpha in [2.0f64, 3.0, 4.0] {
@@ -33,47 +84,39 @@ pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), Stri
 
     // paper set-up cutoff
     let machines = scale.machines(3000);
-    let rep = cutoff_lambda(machines, 50.5, 2.5, 2.0);
+    let rep = cutoff_lambda(machines, MEAN_TASKS, MEAN_DURATION, TAIL_ALPHA);
     println!(
         "threshold: omega_stability={:.3} omega_cutoff={:.3} lambda^U={:.2} (M={machines})",
         rep.omega_stability, rep.omega_cutoff, rep.lambda_cutoff
     );
 
     // empirical sweep around the cutoff with clone-all vs naive
-    let mut cfg = SimConfig::default();
-    cfg.machines = scale.machines(600);
-    cfg.horizon = scale.horizon(600.0);
-    cfg.artifacts_dir = artifacts_dir.to_string();
-    let rep_small = cutoff_lambda(cfg.machines, 50.5, 2.5, 2.0);
-    let mut sweep = vec![
+    let mut spec = spec(scale);
+    spec.base.artifacts_dir = artifacts_dir.to_string();
+    spec.threads = threads;
+    let rep_small = cutoff_lambda(spec.base.machines, MEAN_TASKS, MEAN_DURATION, TAIL_ALPHA);
+    println!(
+        "  empirical sweep (M={}, lambda^U={:.2}):",
+        spec.base.machines, rep_small.lambda_cutoff
+    );
+    let sweep = Runner::run(&spec)?;
+    let mut out = vec![
         ("clone_mean_flowtime".to_string(), Vec::new()),
         ("naive_mean_flowtime".to_string(), Vec::new()),
         ("clone_completion_ratio".to_string(), Vec::new()),
         ("naive_completion_ratio".to_string(), Vec::new()),
     ];
-    println!("  empirical sweep (M={}, lambda^U={:.2}):", cfg.machines, rep_small.lambda_cutoff);
-    // strict cloning: the literal Sec. III scheme, so exceeding the
-    // Theorem-1 bound actually destabilizes instead of degrading gracefully.
-    // Past the bound the queue grows without bound; the completed-jobs CMF
-    // is censored, so the instability shows up as a collapsing completion
-    // ratio rather than an exploding mean.
-    cfg.clone_strict = true;
-    for frac in [0.3, 0.6, 0.9, 1.1, 1.3] {
-        let lambda = rep_small.lambda_cutoff * frac;
-        let wl = WorkloadConfig::paper(lambda);
-        let ratio = |res: &crate::cluster::sim::SimResult| {
-            res.completed.len() as f64 / (res.completed.len() as f64 + res.incomplete as f64)
-        };
-        cfg.scheduler = SchedulerKind::CloneAll;
-        let res = run_seeds(&cfg, &wl, &[1]);
-        let (clone, clone_ratio) = (SummaryRow::from_result(&res).mean_flowtime, ratio(&res));
-        cfg.scheduler = SchedulerKind::Naive;
-        let res = run_seeds(&cfg, &wl, &[1]);
-        let (naive, naive_ratio) = (SummaryRow::from_result(&res).mean_flowtime, ratio(&res));
-        sweep[0].1.push((frac, clone));
-        sweep[1].1.push((frac, naive));
-        sweep[2].1.push((frac, clone_ratio));
-        sweep[3].1.push((frac, naive_ratio));
+    for (li, (_, frac)) in sweep.loads.iter().enumerate() {
+        let clone_res = sweep.merged(0, li);
+        let naive_res = sweep.merged(1, li);
+        let clone = SummaryRow::from_result(&clone_res).mean_flowtime;
+        let naive = SummaryRow::from_result(&naive_res).mean_flowtime;
+        let (clone_ratio, naive_ratio) =
+            (completion_ratio(&clone_res), completion_ratio(&naive_res));
+        out[0].1.push((*frac, clone));
+        out[1].1.push((*frac, naive));
+        out[2].1.push((*frac, clone_ratio));
+        out[3].1.push((*frac, naive_ratio));
         println!(
             "    lambda/lambda^U={frac:.1}: clone ft={clone:.2} done={:.0}% | naive ft={naive:.2} done={:.0}% -> {}",
             clone_ratio * 100.0,
@@ -85,7 +128,7 @@ pub fn run(out_dir: &Path, artifacts_dir: &str, scale: Scale) -> Result<(), Stri
             }
         );
     }
-    report::write_file(out_dir.join("threshold_empirical.csv"), &report::xy_csv(&sweep))
+    report::write_file(out_dir.join("threshold_empirical.csv"), &report::xy_csv(&out))
         .map_err(|e| e.to_string())?;
     Ok(())
 }

@@ -24,13 +24,19 @@
 //!   slot loop, routing, backpressure and metrics export.
 //! * [`metrics`] — per-job flowtime/resource accounting and the per-figure
 //!   report writers used by the benchmark harness.
+//! * [`experiment`] — the parallel sweep engine: declarative
+//!   scheduler x load x seed grids on homogeneous or heterogeneous
+//!   cluster scenarios, fanned out across scoped worker threads with a
+//!   shared pre-sampled workload per grid point.
 //! * [`figures`] — one driver per paper figure (Fig. 1–6 + the threshold
-//!   experiment), shared by the CLI, the examples and `cargo bench`.
+//!   experiment), all routed through the experiment engine; shared by the
+//!   CLI, the examples and `cargo bench`.
 
 pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod experiment;
 pub mod figures;
 pub mod metrics;
 pub mod opt;
@@ -41,4 +47,5 @@ pub mod util;
 
 pub use config::{SimConfig, WorkloadConfig};
 pub use cluster::sim::{SimResult, Simulator};
+pub use experiment::{ExperimentSpec, Runner, SweepResult};
 pub use scheduler::SchedulerKind;

@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   simulate   run one scheduler on one workload, print the summary
-//!   compare    run several schedulers on the identical workload
+//!   compare    run several schedulers on the identical workload (in
+//!              parallel, one worker per scheduler)
+//!   sweep      run a scheduler x lambda x seed grid through the
+//!              experiment engine and write the cell table as CSV
 //!   figure     regenerate a paper figure's data series (fig1..fig6,
 //!              threshold, or `all`)
 //!   threshold  print the analytic cutoff lambda^U for a cluster
@@ -12,14 +15,14 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use specsim::cluster::generator::generate;
-use specsim::cluster::sim::Simulator;
+use specsim::cluster::machine;
 use specsim::cluster::trace;
 use specsim::config::{SimConfig, WorkloadConfig};
 use specsim::coordinator::master::{Master, Submission};
+use specsim::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
 use specsim::figures::{self, Scale};
 use specsim::metrics::report::{self, SummaryRow};
-use specsim::scheduler::{self, SchedulerKind};
+use specsim::scheduler::SchedulerKind;
 use specsim::stats::Pcg64;
 use specsim::util::cli::Args;
 
@@ -30,16 +33,63 @@ USAGE: specsim <command> [flags]
 COMMANDS
   simulate   --scheduler <kind> [--machines N] [--horizon T] [--lambda L]
              [--seed S] [--sigma X] [--config file.toml]
-             [--artifacts-dir DIR] [--no-runtime]
-  compare    [--schedulers a,b,c] [same flags as simulate]
+             [--artifacts-dir DIR] [--no-runtime] [workload/cluster flags]
+  compare    [--schedulers a,b,c] [--threads N] [same flags as simulate]
+  sweep      [--schedulers a,b,c] [--lambdas 2,4,6] [--seeds 1,2,3]
+             [--threads N] [--out FILE] [same flags as simulate]
   figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|all>
              [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
+             [--threads N]
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
   trace      --out FILE [--lambda L] [--horizon T] [--seed S]
   serve      [--machines N] [--rate R] [--jobs J] [--scheduler kind]
              [--artifacts-dir DIR]
 
-scheduler kinds: naive clone_all mantri late sca sda ese";
+WORKLOAD / CLUSTER SCENARIO FLAGS
+  --workload poisson|bursty|trace   arrival process (default poisson)
+  --burst B --on-frac F --cycle C   bursty (MMPP) shape: ON rate = B*lambda,
+                                    ON fraction F, mean cycle C time units
+  --trace FILE                      trace replay (with --workload trace)
+  --machine-classes \"2000x1.0,1000x0.5\"
+                                    heterogeneous cluster: COUNTxSPEED groups
+                                    (machine count is derived from the sum)
+
+scheduler kinds: naive clone_all mantri late sca sda ese
+threads: 0 = one worker per core";
+
+/// The arrival process selected by `--workload` at rate `lambda`.
+fn build_workload(args: &Args, lambda: f64) -> Result<WorkloadConfig, String> {
+    match args.string("workload", "poisson").as_str() {
+        "poisson" => Ok(WorkloadConfig::paper(lambda)),
+        "bursty" => {
+            let burst = args.f64("burst", 3.0)?;
+            let frac = args.f64("on-frac", 0.25)?;
+            if !(0.0 < frac && frac < 1.0) {
+                return Err("--on-frac must be in (0,1)".to_string());
+            }
+            if burst < 1.0 || burst * frac > 1.0 {
+                return Err(format!(
+                    "--burst must be in [1, 1/on-frac] = [1, {:.2}] so the mean rate stays \
+                     reachable (got {burst})",
+                    1.0 / frac
+                ));
+            }
+            let mut wl = WorkloadConfig::bursty_paper(lambda, burst);
+            if let WorkloadConfig::Bursty { on_frac, cycle, .. } = &mut wl {
+                *on_frac = frac;
+                *cycle = args.f64("cycle", 40.0)?;
+            }
+            Ok(wl)
+        }
+        "trace" => Ok(WorkloadConfig::Trace {
+            path: args
+                .str("trace")
+                .ok_or("--trace FILE required with --workload trace")?
+                .to_string(),
+        }),
+        other => Err(format!("unknown workload '{other}' (poisson|bursty|trace)")),
+    }
+}
 
 fn build_common(args: &Args) -> Result<(SimConfig, WorkloadConfig), String> {
     let mut cfg = match args.str("config") {
@@ -58,22 +108,41 @@ fn build_common(args: &Args) -> Result<(SimConfig, WorkloadConfig), String> {
     if let Some(sigma) = args.f64_opt("sigma")? {
         cfg.sigma = Some(sigma);
     }
+    if let Some(spec) = args.str("machine-classes") {
+        cfg.set_machine_classes(machine::parse_classes(spec)?);
+    }
     cfg.artifacts_dir = args.string("artifacts-dir", &cfg.artifacts_dir);
     if args.has("no-runtime") {
         cfg.use_runtime = false;
     }
     cfg.validate()?;
     let lambda = args.f64("lambda", 6.0)?;
-    Ok((cfg, WorkloadConfig::paper(lambda)))
+    let wl = build_workload(args, lambda)?;
+    Ok((cfg, wl))
 }
 
-fn run_one(cfg: &SimConfig, wl: &WorkloadConfig, kind: SchedulerKind) -> Result<SummaryRow, String> {
-    let mut c = cfg.clone();
-    c.scheduler = kind;
-    let workload = generate(wl, c.horizon, c.seed);
-    let sched = scheduler::build(&c, wl)?;
-    let res = Simulator::new(c, workload, sched).run();
-    Ok(SummaryRow::from_result(&res))
+/// Run `kinds` on the identical workload through the experiment engine.
+fn run_kinds(
+    cfg: &SimConfig,
+    wl: &WorkloadConfig,
+    kinds: Vec<SchedulerKind>,
+    threads: usize,
+) -> Result<Vec<SummaryRow>, String> {
+    let mut spec = ExperimentSpec::new("cli", cfg.clone());
+    spec.policies = kinds.into_iter().map(PolicyVariant::kind).collect();
+    spec.loads = vec![LoadPoint::new("cli", f64::NAN, wl.clone())];
+    spec.seeds = vec![cfg.seed];
+    spec.threads = threads;
+    let sweep = Runner::run(&spec)?;
+    Ok((0..sweep.policies.len())
+        .map(|pi| SummaryRow::from_result(&sweep.merged(pi, 0)))
+        .collect())
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> Result<Vec<T>, String> {
+    s.split(',')
+        .map(|p| p.trim().parse().map_err(|_| format!("{what}: bad value '{p}'")))
+        .collect()
 }
 
 fn main() {
@@ -96,10 +165,10 @@ fn run() -> Result<(), String> {
     }
     match cmd.as_str() {
         "simulate" => {
-            let (cfg, wl) = build_common(&args)?;
-            let kind: SchedulerKind = args.string("scheduler", "sca").parse()?;
-            let row = run_one(&cfg, &wl, kind)?;
-            print!("{}", report::summary_table(&[row]));
+            let (mut cfg, wl) = build_common(&args)?;
+            cfg.scheduler = args.string("scheduler", "sca").parse()?;
+            let rows = run_kinds(&cfg, &wl, vec![cfg.scheduler], 1)?;
+            print!("{}", report::summary_table(&rows));
         }
         "compare" => {
             let (cfg, wl) = build_common(&args)?;
@@ -108,11 +177,39 @@ fn run() -> Result<(), String> {
                 .split(',')
                 .map(|s| s.trim().parse())
                 .collect::<Result<_, _>>()?;
-            let mut rows = Vec::new();
-            for kind in kinds {
-                rows.push(run_one(&cfg, &wl, kind)?);
-            }
+            let threads = args.usize("threads", 0)?;
+            let rows = run_kinds(&cfg, &wl, kinds, threads)?;
             print!("{}", report::summary_table(&rows));
+        }
+        "sweep" => {
+            let (cfg, _) = build_common(&args)?;
+            let kinds: Vec<SchedulerKind> = args
+                .string("schedulers", "sca,sda,ese,mantri,naive")
+                .split(',')
+                .map(|s| s.trim().parse())
+                .collect::<Result<_, _>>()?;
+            let lambdas: Vec<f64> = parse_list(&args.string("lambdas", "2,4,6"), "--lambdas")?;
+            let seeds: Vec<u64> = parse_list(&args.string("seeds", "1,2,3"), "--seeds")?;
+            let mut spec = ExperimentSpec::new("sweep", cfg);
+            spec.policies = kinds.into_iter().map(PolicyVariant::kind).collect();
+            spec.loads = lambdas
+                .iter()
+                .map(|&l| {
+                    build_workload(&args, l)
+                        .map(|wl| LoadPoint::new(format!("lambda{l}"), l, wl))
+                })
+                .collect::<Result<_, _>>()?;
+            spec.seeds = seeds;
+            spec.threads = args.usize("threads", 0)?;
+            let sweep = Runner::run(&spec)?;
+            let out = args.string("out", "results/sweep.csv");
+            report::write_file(&out, &report::sweep_csv(&sweep)).map_err(|e| e.to_string())?;
+            println!("wrote {} cells to {out}", sweep.cells.len());
+            for (label, pts) in sweep.series_over_loads(|r| r.mean_flowtime()) {
+                let series: Vec<String> =
+                    pts.iter().map(|(x, y)| format!("{x}:{y:.3}")).collect();
+                println!("  {label:<10} mean_flowtime by lambda: {}", series.join("  "));
+            }
         }
         "figure" => {
             let id = args
@@ -123,15 +220,16 @@ fn run() -> Result<(), String> {
             let out_dir = PathBuf::from(args.string("out-dir", "results"));
             let artifacts_dir = args.string("artifacts-dir", "artifacts");
             let scale = Scale(args.f64("scale", 1.0)?);
+            let threads = args.usize("threads", 0)?;
             match id.as_str() {
-                "fig1" => figures::fig1::run(&out_dir, &artifacts_dir, scale)?,
-                "fig2" => figures::fig2::run(&out_dir, &artifacts_dir, scale)?,
-                "fig3" => figures::fig3::run(&out_dir, &artifacts_dir, scale)?,
-                "fig4" => figures::fig4::run(&out_dir, &artifacts_dir, scale)?,
-                "fig5" => figures::fig5::run(&out_dir, &artifacts_dir, scale)?,
-                "fig6" => figures::fig6::run(&out_dir, &artifacts_dir, scale)?,
-                "threshold" => figures::threshold::run(&out_dir, &artifacts_dir, scale)?,
-                "all" => figures::run_all(&out_dir, &artifacts_dir, scale)?,
+                "fig1" => figures::fig1::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "fig2" => figures::fig2::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "fig3" => figures::fig3::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "fig4" => figures::fig4::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "fig5" => figures::fig5::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "fig6" => figures::fig6::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "threshold" => figures::threshold::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "all" => figures::run_all(&out_dir, &artifacts_dir, scale, threads)?,
                 other => return Err(format!("unknown figure '{other}'")),
             }
             println!("wrote series under {}", out_dir.display());
@@ -150,8 +248,8 @@ fn run() -> Result<(), String> {
         }
         "trace" => {
             let out = PathBuf::from(args.str("out").ok_or("trace: --out FILE required")?);
-            let wl = generate(
-                &WorkloadConfig::paper(args.f64("lambda", 6.0)?),
+            let wl = specsim::cluster::generator::generate(
+                &build_workload(&args, args.f64("lambda", 6.0)?)?,
                 args.f64("horizon", 100.0)?,
                 args.u64("seed", 1)?,
             );
@@ -164,6 +262,9 @@ fn run() -> Result<(), String> {
             cfg.horizon = f64::INFINITY;
             cfg.scheduler = args.string("scheduler", "sda").parse()?;
             cfg.artifacts_dir = args.string("artifacts-dir", "artifacts");
+            if let Some(spec) = args.str("machine-classes") {
+                cfg.set_machine_classes(machine::parse_classes(spec)?);
+            }
             if args.has("no-runtime") {
                 cfg.use_runtime = false;
             }

@@ -6,6 +6,7 @@ use std::fs;
 use std::path::Path;
 
 use crate::cluster::sim::SimResult;
+use crate::experiment::SweepResult;
 use crate::stats::Cdf;
 
 /// Headline comparison row for one scheduler run.
@@ -90,6 +91,37 @@ pub fn cmf_csv(series: &mut [(&str, Cdf)], points: usize) -> String {
     out
 }
 
+/// Serialize a sweep's full grid, one row per (policy, load, seed) cell.
+/// The row order is fixed by the spec (policy-major), so the same spec
+/// always produces the identical file regardless of worker count.
+pub fn sweep_csv(sweep: &SweepResult) -> String {
+    let mut out = String::from(
+        "policy,load,x,seed,jobs,incomplete,mean_flowtime,p80_flowtime,p90_flowtime,\
+         mean_resource,p80_resource,net_utility,utilization,backups\n",
+    );
+    for cell in &sweep.cells {
+        let row = SummaryRow::from_result(&cell.result);
+        let (policy, _) = &sweep.policies[cell.policy];
+        let (load, x) = &sweep.loads[cell.load];
+        let _ = writeln!(
+            out,
+            "{policy},{load},{x},{},{},{},{},{},{},{},{},{},{},{}",
+            cell.seed,
+            row.jobs,
+            cell.result.incomplete,
+            row.mean_flowtime,
+            row.p80_flowtime,
+            row.p90_flowtime,
+            row.mean_resource,
+            row.p80_resource,
+            row.mean_net_utility,
+            row.utilization,
+            row.speculative_launches
+        );
+    }
+    out
+}
+
 /// Simple labelled (x, y) series CSV: label,x,y.
 pub fn xy_csv(series: &[(String, Vec<(f64, f64)>)]) -> String {
     let mut out = String::from("label,x,y\n");
@@ -138,6 +170,37 @@ mod tests {
         assert_eq!(lines[0], "label,x,y");
         assert_eq!(lines[1], "a,1,2");
         assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn sweep_csv_one_row_per_cell() {
+        use crate::experiment::CellResult;
+        let result = SimResult {
+            scheduler: "naive",
+            completed: Vec::new(),
+            incomplete: 1,
+            total_machine_time: 3.0,
+            speculative_launches: 0,
+            utilization: 0.5,
+            horizon: 10.0,
+        };
+        let sweep = SweepResult {
+            name: "t".into(),
+            base: crate::config::SimConfig::default(),
+            policies: vec![("naive".into(), f64::NAN)],
+            loads: vec![("lambda2".into(), 2.0)],
+            seeds: vec![1, 2],
+            cells: vec![
+                CellResult { policy: 0, load: 0, seed: 1, result: result.clone() },
+                CellResult { policy: 0, load: 0, seed: 2, result },
+            ],
+        };
+        let csv = sweep_csv(&sweep);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("policy,load,x,seed"));
+        assert!(lines[1].starts_with("naive,lambda2,2,1,"));
+        assert!(lines[2].starts_with("naive,lambda2,2,2,"));
     }
 
     #[test]

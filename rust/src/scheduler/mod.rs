@@ -23,7 +23,7 @@ pub mod srpt;
 use std::str::FromStr;
 
 use crate::cluster::job::TaskRef;
-use crate::cluster::sim::Cluster;
+use crate::cluster::sim::{Cluster, Workload};
 use crate::config::{SimConfig, WorkloadConfig};
 
 /// A speculative-execution policy driven by the simulator.
@@ -94,14 +94,36 @@ impl FromStr for SchedulerKind {
 
 /// Instantiate the configured scheduler.  `workload` supplies the common
 /// heavy-tail order for the policies that derive their thresholds from the
-/// analysis (SDA's Theorem 3, ESE's Eq. 30-33).
+/// analysis (SDA's Theorem 3, ESE's Eq. 30-33).  For trace workloads the
+/// tail index is estimated from the trace's own sampled durations (loading
+/// the file if no pre-sampled [`Workload`] is at hand — prefer
+/// [`build_for`] when one is).
 pub fn build(
     cfg: &SimConfig,
     workload: &WorkloadConfig,
 ) -> Result<Box<dyn Scheduler>, String> {
+    build_for(cfg, workload, None)
+}
+
+/// [`build`] with an optional pre-sampled workload, so trace replays derive
+/// alpha from the durations already in memory instead of re-reading the
+/// trace file.  The experiment runner calls this once per grid cell, inside
+/// the worker thread (the `Scheduler` trait is `!Send`).
+pub fn build_for(
+    cfg: &SimConfig,
+    workload: &WorkloadConfig,
+    sampled: Option<&Workload>,
+) -> Result<Box<dyn Scheduler>, String> {
     let alpha = match workload {
-        WorkloadConfig::Poisson { alpha, .. } | WorkloadConfig::SingleJob { alpha, .. } => *alpha,
-        WorkloadConfig::Trace { .. } => 2.0,
+        WorkloadConfig::Poisson { alpha, .. }
+        | WorkloadConfig::Bursty { alpha, .. }
+        | WorkloadConfig::SingleJob { alpha, .. } => *alpha,
+        WorkloadConfig::Trace { path } => match sampled {
+            Some(wl) => crate::cluster::generator::estimate_alpha(wl),
+            None => crate::cluster::trace::load(path)
+                .map(|wl| crate::cluster::generator::estimate_alpha(&wl))
+                .unwrap_or(2.0),
+        },
     };
     Ok(match cfg.scheduler {
         SchedulerKind::Naive => Box::new(naive::Naive),
@@ -130,6 +152,22 @@ mod tests {
             let s = build(&cfg, &wl).unwrap();
             assert_eq!(s.name(), kind.as_str());
         }
+    }
+
+    #[test]
+    fn trace_alpha_estimated_from_sampled_workload() {
+        let mut cfg = SimConfig::default();
+        cfg.use_runtime = false;
+        cfg.scheduler = SchedulerKind::Sda;
+        let wl = crate::cluster::generator::generate(&WorkloadConfig::paper(2.0), 50.0, 3);
+        // with a pre-sampled workload the trace file is never touched, so a
+        // bogus path must not fail the build
+        let trace_cfg = WorkloadConfig::Trace { path: "/nonexistent/trace.csv".to_string() };
+        let s = build_for(&cfg, &trace_cfg, Some(&wl)).unwrap();
+        assert_eq!(s.name(), "sda");
+        // without one, an unreadable trace falls back to the paper default
+        let s = build_for(&cfg, &trace_cfg, None).unwrap();
+        assert_eq!(s.name(), "sda");
     }
 
     #[test]

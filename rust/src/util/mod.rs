@@ -8,3 +8,10 @@ pub mod json;
 pub mod toml_lite;
 
 pub use json::Json;
+
+/// Parse an environment variable, falling back to `default` when the
+/// variable is unset or malformed.  The examples and benches use this for
+/// the SPECSIM_SCALE / SPECSIM_THREADS knobs.
+pub fn env_or<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}

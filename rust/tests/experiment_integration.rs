@@ -1,0 +1,161 @@
+//! Integration tests for the experiment engine: determinism under
+//! parallelism (the acceptance bar for every sweep the figures run) and
+//! the scenario axes (heterogeneous machine speeds, bursty arrivals).
+
+use specsim::cluster::machine::MachineClass;
+use specsim::config::{SimConfig, WorkloadConfig};
+use specsim::experiment::{
+    ClusterScenario, ExperimentSpec, LoadPoint, PolicyVariant, Runner,
+};
+use specsim::metrics::report;
+use specsim::scheduler::SchedulerKind;
+
+fn small_base() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.machines = 120;
+    cfg.horizon = 120.0;
+    cfg.use_runtime = false; // pure-rust everywhere: no artifact dependency
+    cfg
+}
+
+fn grid_spec(threads: usize) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::new("det", small_base());
+    spec.policies = vec![
+        PolicyVariant::kind(SchedulerKind::Naive),
+        PolicyVariant::kind(SchedulerKind::Sda),
+        PolicyVariant::with_sigma(SchedulerKind::Ese, 1.7),
+    ];
+    spec.loads = vec![LoadPoint::lambda(0.3), LoadPoint::lambda(0.6)];
+    spec.seeds = vec![1, 2];
+    spec.threads = threads;
+    spec
+}
+
+/// The tentpole guarantee: the serialized sweep table is byte-identical
+/// whatever the worker count, because every cell's RNG streams depend only
+/// on (config, workload, seed) and cells never share mutable state.
+#[test]
+fn sweep_rows_identical_across_worker_counts() {
+    let reference = report::sweep_csv(&Runner::run(&grid_spec(1)).unwrap());
+    assert!(reference.lines().count() > 12, "grid should have 12 cells + header");
+    for threads in [2, 4, 8] {
+        let parallel = report::sweep_csv(&Runner::run(&grid_spec(threads)).unwrap());
+        assert_eq!(
+            reference, parallel,
+            "threads={threads} produced different rows than threads=1"
+        );
+    }
+}
+
+/// Same grid, bursty arrivals: parallel determinism must hold on the new
+/// scenario axis too.
+#[test]
+fn bursty_sweep_deterministic_and_distinct_from_poisson() {
+    // identical label/x for both arrival processes so the CSVs can only
+    // differ through the simulated results themselves
+    let bursty_spec = |threads| {
+        let mut spec = grid_spec(threads);
+        spec.loads = vec![LoadPoint::new(
+            "load",
+            0.6,
+            WorkloadConfig::bursty_paper(0.6, 3.0),
+        )];
+        spec
+    };
+    let a = report::sweep_csv(&Runner::run(&bursty_spec(1)).unwrap());
+    let b = report::sweep_csv(&Runner::run(&bursty_spec(4)).unwrap());
+    assert_eq!(a, b);
+    // and the bursty rows differ from the Poisson rows at the same rate
+    let mut poisson_spec = grid_spec(1);
+    poisson_spec.loads =
+        vec![LoadPoint::new("load", 0.6, WorkloadConfig::paper(0.6))];
+    let p = report::sweep_csv(&Runner::run(&poisson_spec).unwrap());
+    assert_ne!(a, p, "bursty arrivals should change the results");
+}
+
+/// Heterogeneous machine speeds scale copy durations: a uniformly-2x
+/// cluster halves the single job's flowtime and machine time exactly.
+#[test]
+fn heterogeneous_speeds_scale_copy_durations() {
+    let run_at = |speed: f64| {
+        let mut spec = ExperimentSpec::new("hetero", small_base());
+        spec.base.horizon = 4000.0;
+        spec.scenario =
+            ClusterScenario::heterogeneous(vec![MachineClass::new(120, speed)]);
+        spec.policies = vec![PolicyVariant::kind(SchedulerKind::Naive)];
+        spec.loads = vec![LoadPoint::new(
+            "single",
+            1.0,
+            WorkloadConfig::SingleJob { tasks: 120, mean: 1.0, alpha: 2.0 },
+        )];
+        spec.seeds = vec![9];
+        spec.threads = 1;
+        Runner::run(&spec).unwrap()
+    };
+    let slow = run_at(1.0).merged(0, 0);
+    let fast = run_at(2.0).merged(0, 0);
+    assert_eq!(slow.completed.len(), 1);
+    assert_eq!(fast.completed.len(), 1);
+    assert!(
+        (fast.completed[0].flowtime - slow.completed[0].flowtime / 2.0).abs() < 1e-9,
+        "2x cluster should halve the flowtime: {} vs {}",
+        fast.completed[0].flowtime,
+        slow.completed[0].flowtime
+    );
+    assert!(
+        (fast.total_machine_time - slow.total_machine_time / 2.0).abs() < 1e-6,
+        "2x cluster should halve machine time"
+    );
+}
+
+/// A mixed cluster must sit strictly between all-slow and all-fast.
+#[test]
+fn mixed_cluster_between_homogeneous_extremes() {
+    let run_with = |classes: Vec<MachineClass>| {
+        let mut spec = ExperimentSpec::new("mix", small_base());
+        spec.base.horizon = 4000.0;
+        spec.scenario = ClusterScenario::heterogeneous(classes);
+        spec.policies = vec![PolicyVariant::kind(SchedulerKind::Naive)];
+        spec.loads = vec![LoadPoint::new(
+            "single",
+            1.0,
+            WorkloadConfig::SingleJob { tasks: 120, mean: 1.0, alpha: 2.0 },
+        )];
+        spec.seeds = vec![9];
+        spec.threads = 2;
+        Runner::run(&spec).unwrap().merged(0, 0).total_machine_time
+    };
+    let slow = run_with(vec![MachineClass::new(120, 1.0)]);
+    let fast = run_with(vec![MachineClass::new(120, 2.0)]);
+    let mixed =
+        run_with(vec![MachineClass::new(60, 1.0), MachineClass::new(60, 2.0)]);
+    assert!(fast < mixed && mixed < slow, "fast {fast} < mixed {mixed} < slow {slow}");
+}
+
+/// Policy patches apply per-cell without leaking into neighbours: the
+/// unpatched SDA cells of one sweep match a sweep with no patched variants.
+#[test]
+fn patched_variants_do_not_leak() {
+    let mut with_patch = ExperimentSpec::new("p", small_base());
+    with_patch.policies = vec![
+        PolicyVariant::kind(SchedulerKind::Sda),
+        PolicyVariant::with_sigma(SchedulerKind::Sda, 4.0),
+    ];
+    with_patch.loads = vec![LoadPoint::lambda(0.4)];
+    with_patch.seeds = vec![3];
+    with_patch.threads = 4;
+    let both = Runner::run(&with_patch).unwrap();
+
+    let mut alone = ExperimentSpec::new("q", small_base());
+    alone.policies = vec![PolicyVariant::kind(SchedulerKind::Sda)];
+    alone.loads = vec![LoadPoint::lambda(0.4)];
+    alone.seeds = vec![3];
+    alone.threads = 1;
+    let solo = Runner::run(&alone).unwrap();
+
+    let a = &both.cell(0, 0, 0).result;
+    let b = &solo.cell(0, 0, 0).result;
+    assert_eq!(a.completed.len(), b.completed.len());
+    assert_eq!(a.total_machine_time, b.total_machine_time);
+    assert_eq!(a.speculative_launches, b.speculative_launches);
+}
