@@ -2,13 +2,13 @@
 //! below which cloning-based speculation beats no-speculation, separating
 //! the lightly loaded (SCA/SDA) and heavily loaded (ESE) regimes.
 //!
-//! Per-machine model: tasks arrive at rate lambda_m = lambda E[m]/M.
+//! Per-machine model: tasks arrive at rate `lambda_m = lambda E[m]/M`.
 //! Without speculation each machine is M/G/1 with Pareto(mu, alpha) service
 //! (Eq. 1).  With 2-copy cloning, arrivals double and service becomes the
 //! min of two copies, Pareto(mu, 2 alpha) — Eq. (3) in the paper, which the
 //! test below re-derives from raw Pollaczek-Khinchine.
 //!
-//! omega = lambda E[m] E[s] / M is the offered utilization; the threshold
+//! `omega = lambda E[m] E[s] / M` is the offered utilization; the threshold
 //! is the largest omega with W_t^c(omega) < W_t(omega), intersected with
 //! the Theorem-1 stability bound omega < (2 alpha - 1)/(4 (alpha - 1)).
 
@@ -74,7 +74,7 @@ pub fn cutoff_omega(es: f64, alpha: f64) -> f64 {
     0.5 * (lo + hi)
 }
 
-/// Eq. (5): lambda^U = omega^U * M / (E[m] E[s]).
+/// Eq. (5): `lambda^U = omega^U * M / (E[m] E[s])`.
 pub fn cutoff_lambda(machines: usize, mean_tasks: f64, es: f64, alpha: f64) -> CutoffReport {
     let omega_cutoff = cutoff_omega(es, alpha);
     CutoffReport {

@@ -131,7 +131,7 @@ impl JobState {
         self.spec.num_tasks - self.next_unlaunched
     }
 
-    /// Remaining workload (#unfinished tasks * E[x]) — the priority key of
+    /// Remaining workload (`#unfinished tasks * E[x]`) — the priority key of
     /// the smallest-remaining-first levels in SCA/SDA/ESE.
     pub fn remaining_workload(&self) -> f64 {
         self.unfinished as f64 * self.spec.dist.mean()

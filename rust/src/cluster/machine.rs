@@ -3,8 +3,24 @@
 //!
 //! The pool is homogeneous by default (every machine at speed 1.0, the
 //! paper's set-up) but can be built from [`MachineClass`]es with per-class
-//! speed factors: a copy's wall-clock duration on a host is its sampled
-//! work amount divided by the host's speed (`Cluster::launch_copy`).
+//! speed factors, and each machine additionally carries a **slowdown
+//! state** (cf. Anselmi & Walton's server-dependent slowdown): a copy's
+//! wall-clock duration on a host is its sampled work amount divided by the
+//! host's *effective* speed (`Cluster::launch_copy`).
+//!
+//! The two factors have different visibility, and the split is the
+//! estimator contract (see [`crate::estimator`]):
+//!
+//! * [`MachinePool::speed`] is the **advertised class speed** — a public
+//!   hardware fact the speed-aware estimators may read.
+//! * [`MachinePool::slowdown`] is the **hidden degradation state**, sampled
+//!   per machine from [`SlowdownConfig`]; only the simulator reads it (via
+//!   [`MachinePool::effective_speed`]).  Schedulers can observe it only
+//!   indirectly, through inflated revealed remaining times — which is what
+//!   makes a degraded host a *detectable* straggler while a merely
+//!   slow-class host is not.
+
+use crate::stats::Pcg64;
 
 use super::job::TaskRef;
 
@@ -22,6 +38,61 @@ impl MachineClass {
     pub fn new(count: usize, speed: f64) -> Self {
         MachineClass { count, speed }
     }
+}
+
+/// Server-dependent slowdown scenario (cf. Anselmi & Walton): each machine
+/// is independently degraded with probability `frac`; a degraded machine
+/// multiplies every copy's wall-clock duration by `factor` (>= 1).  States
+/// are sampled once per simulation from the run's seed, so the slowdown is
+/// *correlated across tasks on the same server* — the regime where blind
+/// speculation rules misfire.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlowdownConfig {
+    /// Probability a machine is degraded.
+    pub frac: f64,
+    /// Wall-clock multiplier on a degraded machine (1.0 = no degradation).
+    pub factor: f64,
+}
+
+impl SlowdownConfig {
+    pub fn new(frac: f64, factor: f64) -> Self {
+        SlowdownConfig { frac, factor }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.frac) {
+            return Err(format!("slowdown frac must be in [0,1], got {}", self.frac));
+        }
+        if !(self.factor >= 1.0) {
+            return Err(format!("slowdown factor must be >= 1, got {}", self.factor));
+        }
+        Ok(())
+    }
+}
+
+/// Parse a slowdown spec `FRACxFACTOR`, e.g. `"0.1x4.0"` (10% of machines
+/// run 4x slower).
+pub fn parse_slowdown(s: &str) -> Result<SlowdownConfig, String> {
+    let (frac_s, factor_s) = s
+        .split_once('x')
+        .ok_or_else(|| format!("slowdown '{s}': expected FRACxFACTOR, e.g. 0.1x4.0"))?;
+    let frac: f64 = frac_s
+        .trim()
+        .parse()
+        .map_err(|_| format!("slowdown '{s}': bad fraction '{frac_s}'"))?;
+    let factor: f64 = factor_s
+        .trim()
+        .parse()
+        .map_err(|_| format!("slowdown '{s}': bad factor '{factor_s}'"))?;
+    let sd = SlowdownConfig { frac, factor };
+    sd.validate()?;
+    Ok(sd)
+}
+
+/// Render a slowdown spec back to `FRACxFACTOR` (round-trips through
+/// [`parse_slowdown`]).
+pub fn format_slowdown(sd: &SlowdownConfig) -> String {
+    format!("{:?}x{:?}", sd.frac, sd.factor)
 }
 
 /// Parse a cluster scenario spec: comma-separated `COUNTxSPEED` groups,
@@ -76,12 +147,14 @@ pub struct Assignment {
     pub copy: u32,
 }
 
-/// Fixed-size pool of machines with per-machine speed factors.
+/// Fixed-size pool of machines with per-machine speed factors and hidden
+/// slowdown states.
 #[derive(Clone, Debug)]
 pub struct MachinePool {
     free: Vec<u32>,
     busy: Vec<Option<Assignment>>, // indexed by machine id
-    speeds: Vec<f64>,              // indexed by machine id
+    speeds: Vec<f64>,              // indexed by machine id (advertised)
+    slowdowns: Vec<f64>,           // indexed by machine id (hidden, >= 1)
 }
 
 impl MachinePool {
@@ -103,13 +176,43 @@ impl MachinePool {
             free: (0..n as u32).rev().collect(),
             busy: vec![None; n],
             speeds,
+            slowdowns: vec![1.0; n],
         }
     }
 
-    /// Speed factor of machine `id`.
+    /// Sample per-machine slowdown states: each machine is degraded (its
+    /// slowdown set to `sd.factor`) independently with probability
+    /// `sd.frac`.  Called once at cluster construction with a dedicated RNG
+    /// stream derived from the run's seed, so the degraded set is a
+    /// deterministic function of (config, seed).
+    pub fn sample_slowdowns(&mut self, sd: &SlowdownConfig, rng: &mut Pcg64) {
+        for s in self.slowdowns.iter_mut() {
+            if rng.next_f64() < sd.frac {
+                *s = sd.factor;
+            }
+        }
+    }
+
+    /// Advertised class speed of machine `id` — public hardware knowledge,
+    /// readable by speed-aware estimators.
     #[inline]
     pub fn speed(&self, id: u32) -> f64 {
         self.speeds[id as usize]
+    }
+
+    /// Hidden slowdown state of machine `id` (1.0 = healthy).  Simulator
+    /// ground truth; schedulers must not read it (see [`crate::estimator`]).
+    #[inline]
+    pub fn slowdown(&self, id: u32) -> f64 {
+        self.slowdowns[id as usize]
+    }
+
+    /// Effective speed of machine `id`: advertised speed divided by the
+    /// hidden slowdown.  `Cluster::launch_copy` converts sampled work to
+    /// wall-clock with this.
+    #[inline]
+    pub fn effective_speed(&self, id: u32) -> f64 {
+        self.speeds[id as usize] / self.slowdowns[id as usize]
     }
 
     pub fn total(&self) -> usize {
@@ -258,5 +361,53 @@ mod tests {
         assert!(parse_classes("10x0").is_err());
         assert!(parse_classes("abcx1.0").is_err());
         assert!(parse_classes("10xfast").is_err());
+    }
+
+    #[test]
+    fn slowdown_spec_roundtrip_and_bounds() {
+        let sd = parse_slowdown("0.1x4.0").unwrap();
+        assert_eq!(sd, SlowdownConfig::new(0.1, 4.0));
+        assert_eq!(parse_slowdown(&format_slowdown(&sd)).unwrap(), sd);
+        assert!(parse_slowdown("1.5x2.0").is_err()); // frac > 1
+        assert!(parse_slowdown("0.5x0.5").is_err()); // factor < 1
+        assert!(parse_slowdown("0.5").is_err());
+        assert!(parse_slowdown("axb").is_err());
+    }
+
+    #[test]
+    fn slowdown_states_divide_effective_speed() {
+        let mut p = MachinePool::with_classes(&[MachineClass::new(4, 2.0)]);
+        // healthy pool: effective == advertised
+        for id in 0..4 {
+            assert_eq!(p.slowdown(id), 1.0);
+            assert_eq!(p.effective_speed(id), 2.0);
+        }
+        // frac = 1: every machine degraded, advertised speed unchanged
+        let mut rng = Pcg64::new(7, 0x510d);
+        p.sample_slowdowns(&SlowdownConfig::new(1.0, 4.0), &mut rng);
+        for id in 0..4 {
+            assert_eq!(p.speed(id), 2.0);
+            assert_eq!(p.slowdown(id), 4.0);
+            assert_eq!(p.effective_speed(id), 0.5);
+        }
+        // frac = 0: nothing happens
+        let mut p = MachinePool::new(3);
+        let mut rng = Pcg64::new(7, 0x510d);
+        p.sample_slowdowns(&SlowdownConfig::new(0.0, 4.0), &mut rng);
+        for id in 0..3 {
+            assert_eq!(p.effective_speed(id), 1.0);
+        }
+    }
+
+    #[test]
+    fn slowdown_sampling_is_seed_deterministic() {
+        let sample = |seed| {
+            let mut p = MachinePool::new(64);
+            let mut rng = Pcg64::new(seed, 0x510d);
+            p.sample_slowdowns(&SlowdownConfig::new(0.5, 3.0), &mut rng);
+            (0..64).map(|i| p.slowdown(i)).collect::<Vec<_>>()
+        };
+        assert_eq!(sample(11), sample(11));
+        assert_ne!(sample(11), sample(12));
     }
 }

@@ -10,6 +10,12 @@
 //! First-copy durations are **pre-sampled by the generator** so that every
 //! scheduling policy sees the identical workload; backup-copy durations are
 //! drawn i.i.d. from the job's own RNG stream at launch time.
+//!
+//! Sampled durations are **work** amounts; a copy's wall-clock duration is
+//! its work divided by the host's *effective* speed (advertised class
+//! speed over hidden slowdown, see `cluster::machine`).  Schedulers do not
+//! estimate remaining times here — that lives in [`crate::estimator`],
+//! which defines exactly what a scheduler may observe about a copy.
 
 use std::collections::BTreeSet;
 
@@ -63,11 +69,17 @@ impl Cluster {
             .map(|s| root.split(s.id.0 as u64 + 1))
             .collect();
         let jobs = workload.specs.into_iter().map(JobState::new).collect();
-        let machines = if cfg.machine_classes.is_empty() {
+        let mut machines = if cfg.machine_classes.is_empty() {
             MachinePool::new(cfg.machines)
         } else {
             MachinePool::with_classes(&cfg.machine_classes)
         };
+        if let Some(sd) = &cfg.slowdown {
+            // dedicated stream: adding the slowdown axis must not perturb
+            // the workload or backup-duration draws of existing scenarios
+            let mut sd_rng = Pcg64::new(cfg.seed, 0x510d);
+            machines.sample_slowdowns(sd, &mut sd_rng);
+        }
         Cluster {
             machines,
             cfg,
@@ -173,93 +185,10 @@ impl Cluster {
         v
     }
 
-    /// Running jobs with unlaunched tasks, smallest remaining workload first
-    /// (SCA/SDA/ESE level 2).
-    pub fn running_needing_tasks(&self) -> Vec<JobId> {
-        let mut v: Vec<JobId> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|id| self.job(*id).unlaunched() > 0)
-            .collect();
-        v.sort_by(|a, b| {
-            self.job(*a)
-                .remaining_workload()
-                .total_cmp(&self.job(*b).remaining_workload())
-        });
-        v
-    }
-
-    /// Estimated remaining time of a running task: the minimum over running
-    /// copies of (true remaining if revealed, conditional mean otherwise).
-    pub fn est_remaining(&self, t: TaskRef) -> f64 {
-        let job = self.job(t.job);
-        let task = &job.tasks[t.task as usize];
-        let now = self.clock;
-        task.copies
-            .iter()
-            .filter(|c| c.phase == CopyPhase::Running)
-            .map(|c| {
-                if c.revealed {
-                    c.true_remaining(now)
-                } else {
-                    job.spec.dist.mean_remaining(c.elapsed(now))
-                }
-            })
-            .fold(f64::INFINITY, f64::min)
-    }
-
-    /// Blind estimate of remaining time: conditional mean given elapsed
-    /// only, never the revealed truth.  This is all a scheduler *without*
-    /// the paper's s_i-checkpoint instrumentation (i.e. the Mantri/LATE
-    /// baselines) can know; the paper's own algorithms get `est_remaining`.
-    pub fn est_remaining_blind(&self, t: TaskRef) -> f64 {
-        let job = self.job(t.job);
-        let task = &job.tasks[t.task as usize];
-        let now = self.clock;
-        task.copies
-            .iter()
-            .filter(|c| c.phase == CopyPhase::Running)
-            .map(|c| job.spec.dist.mean_remaining(c.elapsed(now)))
-            .fold(f64::INFINITY, f64::min)
-    }
-
-    /// P(t_rem > a) for the *oldest* running copy of a task — the Mantri
-    /// estimator.  Uses the conditional Pareto survival before the copy's
-    /// checkpoint and the revealed truth (0/1) after.
-    pub fn prob_remaining_exceeds(&self, t: TaskRef, a: f64) -> f64 {
-        let job = self.job(t.job);
-        let task = &job.tasks[t.task as usize];
-        let now = self.clock;
-        task.copies
-            .iter()
-            .filter(|c| c.phase == CopyPhase::Running)
-            .map(|c| {
-                if c.revealed {
-                    if c.true_remaining(now) > a {
-                        1.0
-                    } else {
-                        0.0
-                    }
-                } else {
-                    job.spec.dist.sf_remaining(c.elapsed(now), a)
-                }
-            })
-            .fold(f64::INFINITY, f64::min)
-    }
-
-    /// Blind version of [`Self::prob_remaining_exceeds`]: conditional Pareto
-    /// survival from elapsed time only (no checkpoint knowledge).
-    pub fn prob_remaining_exceeds_blind(&self, t: TaskRef, a: f64) -> f64 {
-        let job = self.job(t.job);
-        let task = &job.tasks[t.task as usize];
-        let now = self.clock;
-        task.copies
-            .iter()
-            .filter(|c| c.phase == CopyPhase::Running)
-            .map(|c| job.spec.dist.sf_remaining(c.elapsed(now), a))
-            .fold(f64::INFINITY, f64::min)
-    }
+    // Remaining-time estimation used to live here as `est_remaining*` /
+    // `prob_remaining_exceeds*` methods; it moved to `crate::estimator`,
+    // which defines the observation contract (what a scheduler may read
+    // about a copy) and the blind / revealed / speed-aware implementations.
 
     // ----- mutations -----------------------------------------------------
 
@@ -289,8 +218,9 @@ impl Cluster {
             return false;
         };
         // sampled durations are work amounts; wall-clock scales by the
-        // host's speed (1.0 everywhere in the paper's homogeneous cluster)
-        let duration = work / self.machines.speed(machine);
+        // host's effective speed — advertised class speed (1.0 everywhere
+        // in the paper's homogeneous cluster) over the hidden slowdown
+        let duration = work / self.machines.effective_speed(machine);
         let job = &mut self.jobs[ji];
         job.tasks[t.task as usize].copies.push(CopyState {
             machine,
@@ -652,5 +582,35 @@ mod tests {
     /// exactly, so the tolerance is just numerical.
     fn cfg_slot_slack() -> f64 {
         1e-9
+    }
+
+    #[test]
+    fn slowdown_inflates_wall_clock() {
+        use crate::cluster::machine::SlowdownConfig;
+        // frac = 1 degrades every machine deterministically: a uniform 3x
+        // slowdown must exactly triple the single job's flowtime and the
+        // machine-time it consumes
+        let run_sd = |slowdown: Option<SlowdownConfig>| {
+            let mut cfg = small_cfg();
+            cfg.horizon = 5000.0;
+            cfg.slowdown = slowdown;
+            let wl = generator::generate(
+                &WorkloadConfig::SingleJob { tasks: 50, mean: 1.0, alpha: 2.0 },
+                cfg.horizon,
+                cfg.seed,
+            );
+            let sched = scheduler::build(&cfg, &WorkloadConfig::paper(0.3)).unwrap();
+            Simulator::new(cfg, wl, sched).run()
+        };
+        let healthy = run_sd(None);
+        let degraded = run_sd(Some(SlowdownConfig::new(1.0, 3.0)));
+        assert_eq!(healthy.completed.len(), 1);
+        assert_eq!(degraded.completed.len(), 1);
+        let (h, d) = (healthy.completed[0].flowtime, degraded.completed[0].flowtime);
+        assert!((d - 3.0 * h).abs() < 1e-9, "3x slowdown should triple flowtime: {h} vs {d}");
+        assert!(
+            (degraded.total_machine_time - 3.0 * healthy.total_machine_time).abs() < 1e-6,
+            "machine time should triple"
+        );
     }
 }

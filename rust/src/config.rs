@@ -5,7 +5,7 @@
 //! the CLI builds it from flags.  Defaults reproduce the paper's Sec. IV-C
 //! simulation set-up.
 
-use crate::cluster::machine::{self, MachineClass};
+use crate::cluster::machine::{self, MachineClass, SlowdownConfig};
 use crate::scheduler::SchedulerKind;
 use crate::util::toml_lite;
 
@@ -19,6 +19,17 @@ pub struct SimConfig {
     /// `machines` speed-1.0 hosts.  When non-empty, class counts must sum to
     /// `machines`.
     pub machine_classes: Vec<MachineClass>,
+    /// Server-dependent slowdown scenario (cf. Anselmi & Walton): each
+    /// machine is independently degraded with probability `frac`, inflating
+    /// its copies' wall-clock by `factor`.  The state is hidden from
+    /// schedulers (see `estimator`).  `None` = all machines healthy.
+    pub slowdown: Option<SlowdownConfig>,
+    /// Let the schedulers' estimators divide by the running copy's
+    /// advertised host speed (`estimator::SpeedAware`).  A no-op on
+    /// homogeneous speed-1.0 clusters; `false` reproduces the unit-naive
+    /// estimates that treat wall-clock as work (the paper's homogeneous
+    /// assumption).
+    pub speed_aware: bool,
     /// Simulation horizon in time units (paper: 1500).
     pub horizon: f64,
     /// Scheduling-slot length (the paper's slotted decision model).
@@ -39,7 +50,7 @@ pub struct SimConfig {
     pub scheduler: SchedulerKind,
     /// ESE small-job gate: m_i < eta_small * N(l)/|chi(l)| (paper: 0.1).
     pub eta_small: f64,
-    /// ESE small-job gate: E[x] < xi_small (paper: 1.0).
+    /// ESE small-job gate: `E[x] < xi_small` (paper: 1.0).
     pub xi_small: f64,
     /// CloneAll in strict mode (always `copies` clones; see Sec. III).
     pub clone_strict: bool,
@@ -73,6 +84,8 @@ impl Default for SimConfig {
         SimConfig {
             machines: 3000,
             machine_classes: Vec::new(),
+            slowdown: None,
+            speed_aware: true,
             horizon: 1500.0,
             slot_dt: 1.0,
             seed: 1,
@@ -119,6 +132,11 @@ impl SimConfig {
                 if !(c.speed > 0.0) {
                     errs.push("machine class speed must be > 0".to_string());
                 }
+            }
+        }
+        if let Some(sd) = &self.slowdown {
+            if let Err(e) = sd.validate() {
+                errs.push(e);
             }
         }
         if !(self.horizon > 0.0) {
@@ -168,6 +186,11 @@ impl SimConfig {
                     cfg.machine_classes =
                         machine::parse_classes(doc.str(key).ok_or("machine_classes: string")?)?
                 }
+                "slowdown" => {
+                    cfg.slowdown =
+                        Some(machine::parse_slowdown(doc.str(key).ok_or("slowdown: string")?)?)
+                }
+                "speed_aware" => cfg.speed_aware = doc.bool(key).ok_or("speed_aware: bool")?,
                 "horizon" => cfg.horizon = doc.f64(key).ok_or("horizon: float")?,
                 "slot_dt" => cfg.slot_dt = doc.f64(key).ok_or("slot_dt: float")?,
                 "seed" => cfg.seed = doc.i64(key).ok_or("seed: int")? as u64,
@@ -225,6 +248,10 @@ impl SimConfig {
                 machine::format_classes(&self.machine_classes)
             );
         }
+        if let Some(sd) = &self.slowdown {
+            let _ = writeln!(s, "slowdown = \"{}\"", machine::format_slowdown(sd));
+        }
+        let _ = writeln!(s, "speed_aware = {}", self.speed_aware);
         let _ = writeln!(s, "horizon = {:?}", self.horizon);
         let _ = writeln!(s, "slot_dt = {:?}", self.slot_dt);
         let _ = writeln!(s, "seed = {}", self.seed);
@@ -322,7 +349,7 @@ impl WorkloadConfig {
         }
     }
 
-    /// Mean tasks per job E[m_i].
+    /// Mean tasks per job `E[m_i]`.
     pub fn mean_tasks(&self) -> f64 {
         match self {
             WorkloadConfig::Poisson { m_lo, m_hi, .. }
@@ -332,7 +359,7 @@ impl WorkloadConfig {
         }
     }
 
-    /// Mean task duration E[s].
+    /// Mean task duration `E[s]`.
     pub fn mean_duration(&self) -> f64 {
         match self {
             WorkloadConfig::Poisson { mean_lo, mean_hi, .. }
@@ -415,6 +442,29 @@ mod tests {
         // mismatched counts are rejected
         cfg.machines = 10;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn slowdown_validates_and_roundtrips() {
+        let mut cfg = SimConfig::default();
+        cfg.slowdown = Some(SlowdownConfig::new(0.1, 4.0));
+        cfg.speed_aware = false;
+        cfg.validate().unwrap();
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.slowdown, cfg.slowdown);
+        assert!(!back.speed_aware);
+        // defaults: no slowdown, speed-aware on
+        let d = SimConfig::default();
+        assert_eq!(d.slowdown, None);
+        assert!(d.speed_aware);
+        // out-of-range specs are rejected
+        cfg.slowdown = Some(SlowdownConfig::new(2.0, 4.0));
+        assert!(cfg.validate().is_err());
+        cfg.slowdown = Some(SlowdownConfig::new(0.1, 0.5));
+        assert!(cfg.validate().is_err());
+        assert!(SimConfig::from_toml("slowdown = \"0.1x0.5\"").is_err());
+        let cfg = SimConfig::from_toml("slowdown = \"0.25x3.0\"").unwrap();
+        assert_eq!(cfg.slowdown, Some(SlowdownConfig::new(0.25, 3.0)));
     }
 
     #[test]

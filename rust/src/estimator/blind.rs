@@ -1,0 +1,45 @@
+//! The blind estimator: conditional Pareto statistics from elapsed time
+//! only.  This is all a scheduler *without* the paper's `s_i`-checkpoint
+//! instrumentation (the Mantri/LATE baselines) can know — granting them
+//! the revealed truth would make the baselines implausibly strong (it
+//! roughly halved the paper's reported gaps in early versions of this
+//! reproduction).
+//!
+//! Unit-naive: wall-clock elapsed time is fed to the work-unit
+//! distribution unchanged, exact on the paper's homogeneous speed-1.0
+//! cluster and an approximation elsewhere (use
+//! [`SpeedAware::blind`](super::SpeedAware::blind) for the corrected
+//! variant).
+
+use crate::cluster::job::TaskRef;
+use crate::cluster::sim::Cluster;
+
+use super::{observe, RemainingTime};
+
+/// Conditional-mean / conditional-survival estimates given elapsed time
+/// only; never the revealed truth, never the host speed.
+pub struct Blind;
+
+impl RemainingTime for Blind {
+    fn name(&self) -> &'static str {
+        "blind"
+    }
+
+    /// `E[x - e | x > e]` with wall-clock elapsed `e` read as work.
+    fn copy_remaining_work(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
+        let o = observe(cl, t, copy);
+        o.dist.mean_remaining(o.elapsed)
+    }
+
+    /// Identical to the work estimate (speed assumed 1).
+    fn copy_remaining_wall(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
+        self.copy_remaining_work(cl, t, copy)
+    }
+
+    /// `P(x > e + a | x > e)` — the conditional Pareto survival Mantri's
+    /// duplicate rule tests against its `delta`.
+    fn copy_prob_exceeds(&self, cl: &Cluster, t: TaskRef, copy: usize, a: f64) -> f64 {
+        let o = observe(cl, t, copy);
+        o.dist.sf_remaining(o.elapsed, a)
+    }
+}

@@ -1,0 +1,356 @@
+//! # Remaining-time estimation — the scheduler ⇄ simulator contract
+//!
+//! Every speculation decision in the paper reduces to a remaining-time
+//! query: Mantri duplicates when `P(t_rem > 2 E[x]) > delta` (its rule's
+//! `delta`), SDA/ESE declare a straggler when the remaining time exceeds
+//! `sigma * E[x]` (Sec. V–VI), LATE ranks tasks by progress rate.  This
+//! module centralizes those queries behind one trait so that (a) every
+//! scheduler states exactly *what it is allowed to know*, and (b) the
+//! heterogeneous-cluster and server-slowdown scenario axes can be handled
+//! once, correctly, instead of ad hoc in each policy.
+//!
+//! ## Observation contract
+//!
+//! The simulator measures copies in **work units** (samples of the job's
+//! Pareto task-duration distribution, the paper's `x` with tail index
+//! `alpha`) but runs them in **wall-clock**: a copy of work `w` on host
+//! `h` finishes after `w / effective_speed(h)` wall-clock units, where
+//! `effective_speed = advertised class speed / hidden slowdown` (see
+//! [`crate::cluster::machine`]).  An estimator may read, per copy (via
+//! [`CopyObs`]):
+//!
+//! * the job's duration distribution (the paper's per-job Pareto);
+//! * the copy's wall-clock elapsed time;
+//! * whether the copy passed its detection checkpoint (the paper's `s_i`
+//!   monitoring fraction, Sec. V) and, if so, its true remaining
+//!   *wall-clock* time;
+//! * the **advertised class speed** of the copy's host — public hardware
+//!   knowledge.
+//!
+//! It may *not* read an unrevealed copy's true duration, nor the host's
+//! hidden slowdown state.  A degraded host is therefore only detectable
+//! through the inflated remaining times it reveals — which is precisely
+//! what makes it a legitimate straggler — while a merely slow-*class* host
+//! inflates nothing once the class speed is accounted for.
+//!
+//! ## Implementations
+//!
+//! | estimator | checkpoint (`s_i`) | class speed | who uses it |
+//! |---|---|---|---|
+//! | [`Blind`] | no | no | Mantri, LATE (baselines, `speed_aware = false`) |
+//! | [`Revealed`] | yes | no | SCA/SDA/ESE with `speed_aware = false` |
+//! | [`SpeedAware::blind`] | no | yes | Mantri, LATE (default) |
+//! | [`SpeedAware::revealed`] | yes | yes | SCA/SDA/ESE (default) |
+//!
+//! [`for_policy`] maps a config to the right row.  On the paper's
+//! homogeneous speed-1.0 cluster every row of a column is identical, so
+//! the default (`speed_aware = true`) reproduces the paper's numbers
+//! exactly while remaining correct under heterogeneity.
+//!
+//! ## Units
+//!
+//! Queries come in two unit systems and the trait names them explicitly:
+//!
+//! * `*_work` — work units, the units of `E[x]`; thresholds like
+//!   `sigma * E[x]` (SDA/ESE) and `2 E[x]` (Mantri) compare against these.
+//! * `*_wall` — wall-clock on the copy's host; sorting by urgency and
+//!   LATE's time-to-end use these.
+//!
+//! `Cluster::launch_copy` and the estimators agree on the conversion
+//! (divide work by advertised speed), which is the invariant the
+//! `speed2_host_halves_actual_and_estimated_remaining` regression test
+//! pins down.
+//!
+//! ## Example
+//!
+//! ```
+//! use specsim::cluster::job::{JobId, JobSpec, TaskRef};
+//! use specsim::cluster::machine::MachineClass;
+//! use specsim::cluster::sim::{Simulator, Workload};
+//! use specsim::config::SimConfig;
+//! use specsim::estimator::{RemainingTime, SpeedAware};
+//! use specsim::scheduler::naive::Naive;
+//! use specsim::stats::Pareto;
+//!
+//! // one 3-work-unit task on a single 2x-speed host
+//! let mut cfg = SimConfig::default();
+//! cfg.set_machine_classes(vec![MachineClass::new(1, 2.0)]);
+//! cfg.use_runtime = false;
+//! let dist = Pareto::from_mean(1.0, 2.0);
+//! let wl = Workload {
+//!     specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
+//!     first_durations: vec![vec![3.0]],
+//! };
+//! let mut sim = Simulator::new(cfg, wl, Box::new(Naive));
+//! let t = TaskRef { job: JobId(0), task: 0 };
+//! assert!(sim.cluster.launch_copy(t));
+//!
+//! // the 2x host turns 3 work units into 1.5 wall-clock units, and the
+//! // speed-aware estimator prices a fresh copy consistently: E[x] work
+//! // remaining, E[x] / speed wall-clock remaining
+//! let est = SpeedAware::blind();
+//! assert_eq!(sim.cluster.jobs[0].tasks[0].copies[0].duration, 1.5);
+//! assert_eq!(est.task_remaining_work(&sim.cluster, t), 1.0);
+//! assert_eq!(est.task_remaining_wall(&sim.cluster, t), 0.5);
+//! ```
+
+pub mod blind;
+pub mod revealed;
+pub mod speed_aware;
+
+pub use blind::Blind;
+pub use revealed::Revealed;
+pub use speed_aware::SpeedAware;
+
+use crate::cluster::job::{CopyPhase, JobId, TaskRef};
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+use crate::stats::Pareto;
+
+/// Everything an estimator is allowed to observe about one running copy.
+/// This struct *is* the information boundary: the hidden slowdown state and
+/// an unrevealed copy's true duration are deliberately absent.
+#[derive(Clone, Copy, Debug)]
+pub struct CopyObs<'a> {
+    /// The job's task-duration distribution (work units).
+    pub dist: &'a Pareto,
+    /// Wall-clock time since the copy started.
+    pub elapsed: f64,
+    /// Did the copy pass its `s_i` detection checkpoint?
+    pub revealed: bool,
+    /// True remaining wall-clock time — only meaningful when `revealed`.
+    pub revealed_wall: f64,
+    /// Advertised class speed of the copy's host (public hardware fact).
+    pub speed: f64,
+}
+
+/// Observe copy `copy` of task `t` under the contract above.
+pub fn observe(cl: &Cluster, t: TaskRef, copy: usize) -> CopyObs<'_> {
+    let job = cl.job(t.job);
+    let c = &job.tasks[t.task as usize].copies[copy];
+    CopyObs {
+        dist: &job.spec.dist,
+        elapsed: c.elapsed(cl.clock),
+        revealed: c.revealed,
+        revealed_wall: if c.revealed { c.true_remaining(cl.clock) } else { f64::NAN },
+        speed: cl.machines.speed(c.machine),
+    }
+}
+
+/// Minimum of `per_copy` over the running copies of `t` — the task-level
+/// fold shared by every query (a task finishes when its first copy does).
+/// Infinite when nothing runs.
+fn min_over_running(cl: &Cluster, t: TaskRef, mut per_copy: impl FnMut(usize) -> f64) -> f64 {
+    let copies = &cl.task(t).copies;
+    let mut best = f64::INFINITY;
+    for (i, c) in copies.iter().enumerate() {
+        if c.phase == CopyPhase::Running {
+            best = best.min(per_copy(i));
+        }
+    }
+    best
+}
+
+/// A remaining-time estimator: the single interface every scheduler's
+/// speculation rule queries.  Implementations differ only in which parts
+/// of the [`CopyObs`] observation they use.
+pub trait RemainingTime {
+    fn name(&self) -> &'static str;
+
+    /// Estimated remaining **work** of copy `copy` of task `t`, in the
+    /// units of `E[x]` — the units speculation thresholds live in
+    /// (`sigma * E[x]`, `2 E[x]`).
+    fn copy_remaining_work(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64;
+
+    /// Estimated remaining **wall-clock** time of copy `copy` on its host.
+    fn copy_remaining_wall(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64;
+
+    /// Estimated probability that the remaining *work* of copy `copy`
+    /// exceeds `a` (Mantri's duplicate rule compares this to its `delta`).
+    fn copy_prob_exceeds(&self, cl: &Cluster, t: TaskRef, copy: usize, a: f64) -> f64;
+
+    /// Task-level remaining work: the minimum over running copies.
+    fn task_remaining_work(&self, cl: &Cluster, t: TaskRef) -> f64 {
+        min_over_running(cl, t, |i| self.copy_remaining_work(cl, t, i))
+    }
+
+    /// Task-level remaining wall-clock: minimum over running copies.
+    fn task_remaining_wall(&self, cl: &Cluster, t: TaskRef) -> f64 {
+        min_over_running(cl, t, |i| self.copy_remaining_wall(cl, t, i))
+    }
+
+    /// Task-level `P(remaining work > a)`: minimum over running copies
+    /// (any copy finishing within `a` finishes the task).
+    fn task_prob_exceeds(&self, cl: &Cluster, t: TaskRef, a: f64) -> f64 {
+        min_over_running(cl, t, |i| self.copy_prob_exceeds(cl, t, i, a))
+    }
+
+    /// Job-level remaining workload — the SRPT ordering key of the
+    /// paper's level-2 scheduling (`#unfinished tasks * E[x]`).  Kept
+    /// mean-field for every estimator: at ordering time the scheduler does
+    /// not know which hosts future copies will land on, so per-host
+    /// corrections have no defined target; this also keeps the job order
+    /// identical to the paper's on every scenario.
+    fn job_remaining_work(&self, cl: &Cluster, id: JobId) -> f64 {
+        cl.job(id).remaining_workload()
+    }
+}
+
+/// The estimator a policy should run with under `cfg`:
+/// `instrumented` = the policy owns the paper's `s_i` checkpoint
+/// instrumentation (SCA/SDA/ESE — true) or is a blind baseline
+/// (Mantri/LATE — false); `cfg.speed_aware` selects the class-speed-aware
+/// variant (the default; a no-op on homogeneous speed-1.0 clusters).
+pub fn for_policy(cfg: &SimConfig, instrumented: bool) -> Box<dyn RemainingTime> {
+    match (instrumented, cfg.speed_aware) {
+        (false, false) => Box::new(Blind),
+        (false, true) => Box::new(SpeedAware::blind()),
+        (true, false) => Box::new(Revealed),
+        (true, true) => Box::new(SpeedAware::revealed()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::job::JobSpec;
+    use crate::cluster::machine::MachineClass;
+    use crate::cluster::sim::{Simulator, Workload};
+    use crate::scheduler::naive::Naive;
+
+    fn task0() -> TaskRef {
+        TaskRef { job: JobId(0), task: 0 }
+    }
+
+    /// One job, one task with a controlled first-copy work amount, on the
+    /// given machine classes; the copy is launched at t = 0.
+    fn cluster_with(classes: Vec<MachineClass>, work: f64) -> Cluster {
+        let mut cfg = SimConfig::default();
+        cfg.set_machine_classes(classes);
+        cfg.horizon = 100.0;
+        cfg.use_runtime = false;
+        let dist = Pareto::from_mean(1.0, 2.0);
+        let wl = Workload {
+            specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
+            first_durations: vec![vec![work]],
+        };
+        let mut sim = Simulator::new(cfg, wl, Box::new(Naive));
+        assert!(sim.cluster.launch_copy(task0()));
+        sim.cluster
+    }
+
+    /// Satellite regression: `Cluster::launch_copy` wall-clock scaling and
+    /// the estimators agree on units — a 2x-speed host halves both the
+    /// actual and the estimated remaining time, while the remaining *work*
+    /// estimate is host-invariant.
+    #[test]
+    fn speed2_host_halves_actual_and_estimated_remaining() {
+        let slow = cluster_with(vec![MachineClass::new(1, 1.0)], 3.0);
+        let fast = cluster_with(vec![MachineClass::new(1, 2.0)], 3.0);
+        // actual wall-clock halves
+        let d_slow = slow.jobs[0].tasks[0].copies[0].duration;
+        let d_fast = fast.jobs[0].tasks[0].copies[0].duration;
+        assert_eq!(d_slow, 3.0);
+        assert_eq!(d_fast, 1.5);
+        // blind speed-aware estimate at launch: E[x] work on both hosts,
+        // wall-clock halves with the speed
+        let est = SpeedAware::blind();
+        assert_eq!(
+            est.task_remaining_work(&slow, task0()),
+            est.task_remaining_work(&fast, task0())
+        );
+        let w_slow = est.task_remaining_wall(&slow, task0());
+        let w_fast = est.task_remaining_wall(&fast, task0());
+        assert!((w_fast - w_slow / 2.0).abs() < 1e-12, "wall {w_fast} vs half of {w_slow}");
+        // once revealed, the speed-aware estimate *is* the simulator's
+        // wall-clock truth on both hosts
+        let est = SpeedAware::revealed();
+        let mut both = [slow, fast];
+        for cl in both.iter_mut() {
+            cl.clock = 0.25;
+            cl.jobs[0].tasks[0].copies[0].revealed = true;
+            let truth = cl.jobs[0].tasks[0].copies[0].true_remaining(0.25);
+            assert_eq!(est.task_remaining_wall(cl, task0()), truth);
+        }
+    }
+
+    /// On unit-speed hosts the speed-aware estimators are *exactly* the
+    /// naive ones — the paper's homogeneous numbers are untouched.
+    #[test]
+    fn speed_aware_is_identity_at_unit_speed() {
+        let mut cl = cluster_with(vec![MachineClass::new(1, 1.0)], 2.5);
+        cl.clock = 0.8;
+        let t = task0();
+        assert_eq!(
+            Blind.task_remaining_work(&cl, t),
+            SpeedAware::blind().task_remaining_work(&cl, t)
+        );
+        assert_eq!(
+            Blind.task_remaining_wall(&cl, t),
+            SpeedAware::blind().task_remaining_wall(&cl, t)
+        );
+        assert_eq!(
+            Blind.task_prob_exceeds(&cl, t, 2.0),
+            SpeedAware::blind().task_prob_exceeds(&cl, t, 2.0)
+        );
+        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        assert_eq!(
+            Revealed.task_remaining_work(&cl, t),
+            SpeedAware::revealed().task_remaining_work(&cl, t)
+        );
+        assert_eq!(
+            Revealed.task_prob_exceeds(&cl, t, 1.0),
+            SpeedAware::revealed().task_prob_exceeds(&cl, t, 1.0)
+        );
+    }
+
+    /// The blind estimator never sees the revealed truth; the revealed one
+    /// switches to it at the checkpoint.
+    #[test]
+    fn reveal_switches_revealed_but_not_blind() {
+        let mut cl = cluster_with(vec![MachineClass::new(1, 1.0)], 4.0);
+        cl.clock = 1.0;
+        let t = task0();
+        let blind_before = Blind.task_remaining_work(&cl, t);
+        assert_eq!(Revealed.task_remaining_work(&cl, t), blind_before);
+        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        assert_eq!(Blind.task_remaining_work(&cl, t), blind_before);
+        assert_eq!(Revealed.task_remaining_work(&cl, t), 3.0); // 4 - 1 elapsed
+        assert_eq!(Revealed.task_prob_exceeds(&cl, t, 2.0), 1.0);
+        assert_eq!(Revealed.task_prob_exceeds(&cl, t, 3.5), 0.0);
+    }
+
+    /// No running copies => infinite estimates (nothing to wait for is a
+    /// caller bug, not a panic).
+    #[test]
+    fn no_running_copies_is_infinite() {
+        let mut cl = cluster_with(vec![MachineClass::new(2, 1.0)], 1.0);
+        let t = task0();
+        cl.kill_copy(t, 0); // the only copy
+        assert!(Blind.task_remaining_work(&cl, t).is_infinite());
+        assert!(SpeedAware::revealed().task_remaining_wall(&cl, t).is_infinite());
+    }
+
+    /// `job_remaining_work` is the paper's mean-field key for every
+    /// estimator, so the level-2 job order is scenario-independent.
+    #[test]
+    fn job_key_is_mean_field_for_all() {
+        let cl = cluster_with(vec![MachineClass::new(1, 2.0)], 3.0);
+        let id = JobId(0);
+        let expect = cl.job(id).remaining_workload();
+        assert_eq!(Blind.job_remaining_work(&cl, id), expect);
+        assert_eq!(Revealed.job_remaining_work(&cl, id), expect);
+        assert_eq!(SpeedAware::revealed().job_remaining_work(&cl, id), expect);
+    }
+
+    #[test]
+    fn for_policy_maps_config() {
+        let mut cfg = SimConfig::default();
+        assert!(cfg.speed_aware);
+        assert_eq!(for_policy(&cfg, true).name(), "speed_aware");
+        assert_eq!(for_policy(&cfg, false).name(), "speed_aware_blind");
+        cfg.speed_aware = false;
+        assert_eq!(for_policy(&cfg, true).name(), "revealed");
+        assert_eq!(for_policy(&cfg, false).name(), "blind");
+    }
+}

@@ -1,0 +1,51 @@
+//! The revealed estimator: the paper's monitoring model (Sec. V).  Once a
+//! copy has executed the detection fraction `s_i` of its work the
+//! scheduler knows its true remaining time exactly; before
+//! that it falls back to the blind conditional-Pareto estimate.
+//!
+//! Unit-naive like [`Blind`](super::Blind): revealed wall-clock remaining
+//! is read as work, exact on the homogeneous speed-1.0 cluster and an
+//! approximation elsewhere (use
+//! [`SpeedAware::revealed`](super::SpeedAware::revealed) for the corrected
+//! variant).
+
+use crate::cluster::job::TaskRef;
+use crate::cluster::sim::Cluster;
+
+use super::{observe, RemainingTime};
+
+/// Post-checkpoint truth, blind conditional estimates before it.
+pub struct Revealed;
+
+impl RemainingTime for Revealed {
+    fn name(&self) -> &'static str {
+        "revealed"
+    }
+
+    fn copy_remaining_work(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
+        let o = observe(cl, t, copy);
+        if o.revealed {
+            o.revealed_wall
+        } else {
+            o.dist.mean_remaining(o.elapsed)
+        }
+    }
+
+    fn copy_remaining_wall(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
+        self.copy_remaining_work(cl, t, copy)
+    }
+
+    /// Degenerate 0/1 once revealed, conditional survival before.
+    fn copy_prob_exceeds(&self, cl: &Cluster, t: TaskRef, copy: usize, a: f64) -> f64 {
+        let o = observe(cl, t, copy);
+        if o.revealed {
+            if o.revealed_wall > a {
+                1.0
+            } else {
+                0.0
+            }
+        } else {
+            o.dist.sf_remaining(o.elapsed, a)
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! The speed-aware estimators: divide by the running copy's advertised
+//! host speed, so work-unit thresholds (`sigma * E[x]`, `2 E[x]`) and
+//! wall-clock observations stop being conflated on heterogeneous clusters.
+//!
+//! With class speed `v` (a public hardware fact):
+//!
+//! * blind branch — wall-clock elapsed `e` corresponds to `e * v` work
+//!   executed; condition the Pareto on that, and convert the remaining
+//!   work back to wall-clock by dividing by `v`;
+//! * revealed branch — the checkpoint reveals the true remaining
+//!   *wall-clock* `r`; the copy's remaining work is `r * v`.
+//!
+//! The revealed conversion is where server-dependent slowdown (cf.
+//! Anselmi & Walton) becomes detectable: on a host whose hidden slowdown
+//! is `k`, `r` is `k`x inflated, so the estimated remaining work is `k`x
+//! the truth — a *legitimate* straggler signal that trips the SDA/ESE
+//! threshold.  On a merely slow-*class* host (`v < 1`, no slowdown) the
+//! division removes the inflation entirely, suppressing the false positive
+//! a unit-naive estimator would raise.  See the `estimator_slowdown`
+//! integration tests.
+
+use crate::cluster::job::TaskRef;
+use crate::cluster::sim::Cluster;
+
+use super::{observe, RemainingTime};
+
+/// Class-speed-corrected estimator; `reveal` selects whether the paper's
+/// `s_i`-checkpoint revelation is used (SCA/SDA/ESE) or not (a
+/// speed-aware Mantri/LATE baseline).
+pub struct SpeedAware {
+    reveal: bool,
+}
+
+impl SpeedAware {
+    /// Speed-corrected conditional-Pareto estimates only (baselines).
+    pub fn blind() -> Self {
+        SpeedAware { reveal: false }
+    }
+
+    /// Speed-corrected with post-checkpoint truth (the paper's algorithms).
+    pub fn revealed() -> Self {
+        SpeedAware { reveal: true }
+    }
+}
+
+impl RemainingTime for SpeedAware {
+    fn name(&self) -> &'static str {
+        if self.reveal {
+            "speed_aware"
+        } else {
+            "speed_aware_blind"
+        }
+    }
+
+    fn copy_remaining_work(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
+        let o = observe(cl, t, copy);
+        if self.reveal && o.revealed {
+            o.revealed_wall * o.speed
+        } else {
+            o.dist.mean_remaining(o.elapsed * o.speed)
+        }
+    }
+
+    fn copy_remaining_wall(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
+        let o = observe(cl, t, copy);
+        if self.reveal && o.revealed {
+            o.revealed_wall
+        } else {
+            o.dist.mean_remaining(o.elapsed * o.speed) / o.speed
+        }
+    }
+
+    fn copy_prob_exceeds(&self, cl: &Cluster, t: TaskRef, copy: usize, a: f64) -> f64 {
+        let o = observe(cl, t, copy);
+        if self.reveal && o.revealed {
+            if o.revealed_wall * o.speed > a {
+                1.0
+            } else {
+                0.0
+            }
+        } else {
+            o.dist.sf_remaining(o.elapsed * o.speed, a)
+        }
+    }
+}

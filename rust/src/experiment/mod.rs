@@ -7,7 +7,8 @@
 //! * [`ExperimentSpec`] declares the grid — [`PolicyVariant`]s (scheduler
 //!   kind + optional config patch), [`LoadPoint`]s (labelled workloads),
 //!   replication seeds, and a [`ClusterScenario`] (homogeneous or
-//!   heterogeneous machine classes).
+//!   heterogeneous machine classes, with optional server-dependent
+//!   slowdown).
 //! * [`Runner`] executes the grid across `std::thread::scope` workers.
 //!   Schedulers are constructed *inside* each worker (the `Scheduler`
 //!   trait is `!Send`; SCA can pin a PJRT executor to its thread), and

@@ -6,7 +6,7 @@
 use std::fmt;
 use std::sync::Arc;
 
-use crate::cluster::machine::MachineClass;
+use crate::cluster::machine::{MachineClass, SlowdownConfig};
 use crate::config::{SimConfig, WorkloadConfig};
 use crate::scheduler::SchedulerKind;
 
@@ -100,10 +100,12 @@ impl LoadPoint {
 /// The cluster scenario axis: which machines the sweep runs on.  The
 /// default is the paper's homogeneous cluster (whatever `base.machines`
 /// says); a heterogeneous scenario overrides both the class layout and the
-/// machine count.
+/// machine count, and a slowdown scenario degrades a seed-deterministic
+/// random subset of machines (see `cluster::machine::SlowdownConfig`).
 #[derive(Clone, Debug, Default)]
 pub struct ClusterScenario {
     pub machine_classes: Vec<MachineClass>,
+    pub slowdown: Option<SlowdownConfig>,
 }
 
 impl ClusterScenario {
@@ -114,12 +116,22 @@ impl ClusterScenario {
 
     /// A heterogeneous cluster built from speed classes.
     pub fn heterogeneous(classes: Vec<MachineClass>) -> Self {
-        ClusterScenario { machine_classes: classes }
+        ClusterScenario { machine_classes: classes, slowdown: None }
+    }
+
+    /// Add server-dependent slowdown: each machine degraded with
+    /// probability `sd.frac`, inflating its wall-clock by `sd.factor`.
+    pub fn with_slowdown(mut self, sd: SlowdownConfig) -> Self {
+        self.slowdown = Some(sd);
+        self
     }
 
     pub(crate) fn apply(&self, cfg: &mut SimConfig) {
         if !self.machine_classes.is_empty() {
             cfg.set_machine_classes(self.machine_classes.clone());
+        }
+        if let Some(sd) = self.slowdown {
+            cfg.slowdown = Some(sd);
         }
     }
 }
@@ -127,6 +139,31 @@ impl ClusterScenario {
 /// A declarative sweep: the full grid is
 /// `policies x loads x seeds` on `scenario`, every cell sharing the
 /// pre-sampled workload of its `(load, seed)` pair.
+///
+/// # Example
+///
+/// A one-cell sweep, run through the parallel [`Runner`](super::Runner):
+///
+/// ```
+/// use specsim::config::SimConfig;
+/// use specsim::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
+/// use specsim::scheduler::SchedulerKind;
+///
+/// let mut base = SimConfig::default();
+/// base.machines = 50;
+/// base.horizon = 80.0;
+/// base.use_runtime = false;
+/// let mut spec = ExperimentSpec::new("doc", base);
+/// spec.policies = vec![PolicyVariant::kind(SchedulerKind::Naive)];
+/// spec.loads = vec![LoadPoint::lambda(0.3)];
+/// spec.seeds = vec![1];
+/// spec.threads = 1;
+/// assert_eq!(spec.cell_count(), 1);
+///
+/// let sweep = Runner::run(&spec).unwrap();
+/// assert_eq!(sweep.cells.len(), 1);
+/// assert!(!sweep.cell(0, 0, 0).result.completed.is_empty());
+/// ```
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
     /// Name for reports/logs.
@@ -217,5 +254,22 @@ mod tests {
         ClusterScenario::homogeneous().apply(&mut cfg);
         assert_eq!(cfg.machines, 3000);
         assert!(cfg.machine_classes.is_empty());
+        assert_eq!(cfg.slowdown, None);
+    }
+
+    #[test]
+    fn scenario_applies_slowdown() {
+        let sd = SlowdownConfig::new(0.2, 3.0);
+        let sc = ClusterScenario::homogeneous().with_slowdown(sd);
+        let mut cfg = SimConfig::default();
+        sc.apply(&mut cfg);
+        assert_eq!(cfg.slowdown, Some(sd));
+        cfg.validate().unwrap();
+        // composes with heterogeneous classes
+        let sc = ClusterScenario::heterogeneous(vec![MachineClass::new(4, 2.0)]).with_slowdown(sd);
+        let mut cfg = SimConfig::default();
+        sc.apply(&mut cfg);
+        assert_eq!(cfg.machines, 4);
+        assert_eq!(cfg.slowdown, Some(sd));
     }
 }

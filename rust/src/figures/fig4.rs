@@ -1,4 +1,4 @@
-//! Fig. 4: the analytic per-task resource curve E[R]/E[x] against sigma for
+//! Fig. 4: the analytic per-task resource curve `E[R]/E[x]` against sigma for
 //! alpha in {2,3,4,5} (Eq. 30-33).  Uses the AOT-compiled `sigma_curve`
 //! artifact when present (exercising the Pallas kernel end-to-end) and the
 //! f64 rust quadrature otherwise; when both are available the driver

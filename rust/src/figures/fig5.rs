@@ -1,5 +1,5 @@
 //! Fig. 5: single-job experiment — one 10000-task job on 100 machines,
-//! E[x] = 1, ESE vs the no-backup naive baseline, sweeping sigma.  The
+//! `E[x] = 1`, ESE vs the no-backup naive baseline, sweeping sigma.  The
 //! empirical optimum should match the Fig. 4 analysis (~1.7 at alpha = 2)
 //! and the ESE advantage should fade as alpha grows.
 //!

@@ -17,7 +17,7 @@ use super::Scale;
 
 pub const FRACS: [f64; 5] = [0.3, 0.6, 0.9, 1.1, 1.3];
 
-/// The paper's workload moments (E[m] = 50.5, E[s] = 2.5, alpha = 2) —
+/// The paper's workload moments (`E[m] = 50.5`, `E[s] = 2.5`, alpha = 2) —
 /// shared by the analytic header and the empirical sweep so the two can't
 /// drift apart.
 pub const MEAN_TASKS: f64 = 50.5;

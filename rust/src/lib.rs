@@ -13,6 +13,10 @@
 //! * [`scheduler`] — the seven speculative-execution policies: the paper's
 //!   SCA (Algorithm 1), SDA (Sec. V), ESE (Algorithm 2) and the baselines
 //!   they are evaluated against (naive, blind cloning, Mantri, LATE).
+//! * [`estimator`] — the remaining-time estimation contract every policy's
+//!   speculation rule queries: blind (conditional Pareto), revealed
+//!   (post-checkpoint truth, Sec. V) and speed-aware (divide by the
+//!   running copy's advertised host speed) implementations.
 //! * [`opt`] — the optimization machinery: Pareto order-statistic math,
 //!   the P2 gradient-projection solver, the P3/Theorem-3 solution and the
 //!   ESE sigma* analysis (Eq. 30–33).
@@ -36,6 +40,7 @@ pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod estimator;
 pub mod experiment;
 pub mod figures;
 pub mod metrics;
@@ -47,5 +52,6 @@ pub mod util;
 
 pub use config::{SimConfig, WorkloadConfig};
 pub use cluster::sim::{SimResult, Simulator};
+pub use estimator::RemainingTime;
 pub use experiment::{ExperimentSpec, Runner, SweepResult};
 pub use scheduler::SchedulerKind;

@@ -53,6 +53,11 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
   --machine-classes \"2000x1.0,1000x0.5\"
                                     heterogeneous cluster: COUNTxSPEED groups
                                     (machine count is derived from the sum)
+  --slowdown FRACxFACTOR            server-dependent slowdown: each machine
+                                    degraded with prob FRAC runs FACTORx
+                                    slower (hidden from schedulers)
+  --no-speed-aware                  estimators ignore advertised host speeds
+                                    (the unit-naive homogeneous assumption)
 
 scheduler kinds: naive clone_all mantri late sca sda ese
 threads: 0 = one worker per core";
@@ -91,6 +96,23 @@ fn build_workload(args: &Args, lambda: f64) -> Result<WorkloadConfig, String> {
     }
 }
 
+/// Cluster scenario flags shared by the simulation commands and `serve`.
+fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> {
+    if let Some(spec) = args.str("machine-classes") {
+        cfg.set_machine_classes(machine::parse_classes(spec)?);
+    }
+    if let Some(spec) = args.str("slowdown") {
+        cfg.slowdown = Some(machine::parse_slowdown(spec)?);
+    }
+    if args.has("no-speed-aware") {
+        cfg.speed_aware = false;
+    }
+    if args.has("no-runtime") {
+        cfg.use_runtime = false;
+    }
+    Ok(())
+}
+
 fn build_common(args: &Args) -> Result<(SimConfig, WorkloadConfig), String> {
     let mut cfg = match args.str("config") {
         Some(p) => {
@@ -108,13 +130,8 @@ fn build_common(args: &Args) -> Result<(SimConfig, WorkloadConfig), String> {
     if let Some(sigma) = args.f64_opt("sigma")? {
         cfg.sigma = Some(sigma);
     }
-    if let Some(spec) = args.str("machine-classes") {
-        cfg.set_machine_classes(machine::parse_classes(spec)?);
-    }
+    apply_scenario_flags(&mut cfg, args)?;
     cfg.artifacts_dir = args.string("artifacts-dir", &cfg.artifacts_dir);
-    if args.has("no-runtime") {
-        cfg.use_runtime = false;
-    }
     cfg.validate()?;
     let lambda = args.f64("lambda", 6.0)?;
     let wl = build_workload(args, lambda)?;
@@ -158,7 +175,7 @@ fn run() -> Result<(), String> {
         println!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(rest, &["no-runtime", "help"])?;
+    let args = Args::parse(rest, &["no-runtime", "no-speed-aware", "help"])?;
     if args.has("help") {
         println!("{USAGE}");
         return Ok(());
@@ -262,12 +279,7 @@ fn run() -> Result<(), String> {
             cfg.horizon = f64::INFINITY;
             cfg.scheduler = args.string("scheduler", "sda").parse()?;
             cfg.artifacts_dir = args.string("artifacts-dir", "artifacts");
-            if let Some(spec) = args.str("machine-classes") {
-                cfg.set_machine_classes(machine::parse_classes(spec)?);
-            }
-            if args.has("no-runtime") {
-                cfg.use_runtime = false;
-            }
+            apply_scenario_flags(&mut cfg, &args)?;
             let rate = args.f64("rate", 50.0)?;
             let jobs = args.u64("jobs", 500)?;
             let master = Master::new(cfg);

@@ -4,7 +4,7 @@
 
 use super::pareto_math::{emin_coeff, ese_resource, flow_integral};
 
-/// sigma* = argmin_sigma E[R](sigma) for the given heavy-tail order
+/// `sigma* = argmin_sigma E[R](sigma)` for the given heavy-tail order
 /// (Fig. 4: ~1.7-1.9 at alpha = 2, approaching ~2 for larger alpha).
 pub fn sigma_star(alpha: f64) -> f64 {
     let mut best = (1.0, f64::INFINITY);
@@ -34,7 +34,7 @@ pub fn sigma_star(alpha: f64) -> f64 {
 }
 
 /// Eq. (29): optimal clone count for one small job scheduled in isolation —
-/// argmax_c U(E[t], m) - gamma sum_j c E[t_j] with U = -E[t], capped so the
+/// `argmax_c U(E[t], m) - gamma sum_j c E[t_j]` with `U = -E[t]`, capped so the
 /// job's clones fit the idle machines.
 pub fn small_job_clones(
     mu: f64,

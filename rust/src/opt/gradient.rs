@@ -101,7 +101,7 @@ impl GradientSolver {
         }
     }
 
-    /// Precompute A[b][g] for the batch.
+    /// Precompute `A[b][g]` for the batch.
     fn table(&mut self, p: &P2Problem) -> Vec<Vec<f64>> {
         let jobs = p.jobs.clone();
         jobs.iter()

@@ -13,7 +13,7 @@ use super::pareto_math::{sda_resource, sda_tau};
 /// Numerical solution of P3 for one job class.
 #[derive(Clone, Copy, Debug)]
 pub struct SdaPolicy {
-    /// Detection threshold multiplier: straggler iff t_rem > sigma * E[x].
+    /// Detection threshold multiplier: straggler iff `t_rem > sigma * E[x]`.
     pub sigma: f64,
     /// Total copies for a detected straggler (incl. the original).
     pub c_star: u32,

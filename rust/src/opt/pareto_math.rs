@@ -7,7 +7,7 @@
 //! * `flow_integral(beta, m)`  = E[max of m mins] / mu with beta = alpha*c.
 //! * `emin_coeff(beta)`        = E[min of c copies] / mu = beta/(beta-1).
 //! * `sda_tau`, `sda_resource` and `ese_resource` are per-task expectations
-//!   for a **unit-mean** Pareto (scale by E[x] at the call site).
+//!   for a **unit-mean** Pareto (scale by `E[x]` at the call site).
 
 /// Log-spaced trapezoid nodes/weights for `integral_{lo}^{hi} g(u) du`.
 pub fn log_trap(lo: f64, hi: f64, n: usize) -> (Vec<f64>, Vec<f64>) {
@@ -82,7 +82,7 @@ pub fn sda_tau(alpha: f64, s: f64, sigma: f64, c: f64) -> f64 {
     c * acc
 }
 
-/// Unconditional per-task resource E[R] for the SDA model (Eq. 21):
+/// Unconditional per-task resource `E[R]` for the SDA model (Eq. 21):
 /// R = t1 if no straggler, s*t1 + c*d otherwise.  Unit-mean Pareto.
 pub fn sda_resource(alpha: f64, s: f64, sigma: f64, c: f64) -> f64 {
     let mu = (alpha - 1.0) / alpha;

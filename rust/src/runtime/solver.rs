@@ -76,7 +76,7 @@ impl P2Backend for PjrtP2 {
 }
 
 /// The Fig. 4 sigma curve from the `sigma_curve` artifact:
-/// returns (sigma_grid, E[R]/E[x]).
+/// returns (sigma_grid, `E[R]/E[x]`).
 pub fn sigma_curve(artifacts_dir: &str, alpha: f64) -> Result<(Vec<f64>, Vec<f64>), String> {
     let manifest = Manifest::load(artifacts_dir)?;
     let entry = manifest
@@ -94,7 +94,7 @@ pub fn sigma_curve(artifacts_dir: &str, alpha: f64) -> Result<(Vec<f64>, Vec<f64
     ))
 }
 
-/// The SDA tables from the `sda_opt` artifact: (tau[S][C], resource[S][C])
+/// The SDA tables from the `sda_opt` artifact: (`tau[S][C]`, `resource[S][C]`)
 /// flattened row-major plus the sigma grid from the manifest statics.
 pub fn sda_tables(
     artifacts_dir: &str,

@@ -4,8 +4,11 @@
 //! (interactive, latency-sensitive) via the Eq. 29 objective.
 //!
 //! Per slot:
-//! 1. D(l) = single-copy running tasks with t_rem > sigma * E[x], sorted by
-//!    decreasing t_rem; one backup each while machines remain;
+//! 1. D(l) = single-copy running tasks with `t_rem > sigma * E[x]`, sorted
+//!    by decreasing t_rem; one backup each while machines remain.  The
+//!    t_rem query is the estimator's remaining-work estimate
+//!    (`estimator::for_policy` with `instrumented = true`: revealed
+//!    post-checkpoint, speed-aware per config);
 //! 2. unassigned tasks of running jobs, smallest remaining workload first;
 //! 3. queued jobs smallest workload first; a job with
 //!    `m < eta * N(l)/|chi(l)|` and `E[x] < xi` is cloned with the Eq. 29
@@ -14,6 +17,7 @@
 use crate::cluster::job::{CopyPhase, TaskRef};
 use crate::cluster::sim::Cluster;
 use crate::config::SimConfig;
+use crate::estimator::{self, RemainingTime};
 use crate::opt::ese_sigma;
 
 use super::{srpt, Scheduler};
@@ -25,6 +29,8 @@ pub struct Ese {
     gamma: f64,
     r_max: u32,
     alpha: f64,
+    /// Revealed estimator (checkpoint-instrumented), speed-aware per config.
+    est: Box<dyn RemainingTime>,
     /// Diagnostics.
     pub backups: u64,
     pub small_jobs_cloned: u64,
@@ -40,6 +46,7 @@ impl Ese {
             gamma: cfg.gamma,
             r_max: cfg.r_max,
             alpha,
+            est: estimator::for_policy(cfg, true),
             backups: 0,
             small_jobs_cloned: 0,
         }
@@ -65,7 +72,7 @@ impl Scheduler for Ese {
                     continue;
                 }
                 let t = TaskRef { job: *id, task: ti as u32 };
-                let rem = cl.est_remaining(t);
+                let rem = self.est.task_remaining_work(cl, t);
                 if rem > threshold {
                     d.push((rem, t));
                 }
@@ -81,7 +88,7 @@ impl Scheduler for Ese {
             }
         }
         // 2. remaining tasks of running jobs
-        srpt::schedule_running(cl);
+        srpt::schedule_running_by(cl, self.est.as_ref());
         if cl.idle() == 0 {
             return;
         }

@@ -2,16 +2,25 @@
 //! tasks whose progress *rate* falls below the slowTaskThreshold percentile,
 //! choosing the longest-remaining first, subject to a cluster-wide cap on
 //! outstanding speculative copies (speculativeCap).
+//!
+//! Like Mantri, LATE is a **blind** baseline (`estimator::for_policy` with
+//! `instrumented = false`): no access to the paper's s_i-checkpoint; its
+//! time-to-end is the estimator's wall-clock remaining, which with the
+//! default `speed_aware = true` accounts for the advertised class speed —
+//! fitting, since LATE was designed for heterogeneous clusters.
 
 use crate::cluster::job::{CopyPhase, TaskRef};
 use crate::cluster::sim::Cluster;
 use crate::config::SimConfig;
+use crate::estimator::{self, RemainingTime};
 
 use super::{srpt, Scheduler};
 
 pub struct Late {
     speculative_cap: f64,
     slow_percentile: f64,
+    /// Blind estimator (no checkpoint), speed-aware per config.
+    est: Box<dyn RemainingTime>,
 }
 
 impl Late {
@@ -19,15 +28,14 @@ impl Late {
         Late {
             speculative_cap: cfg.late_speculative_cap,
             slow_percentile: cfg.late_slow_percentile,
+            est: estimator::for_policy(cfg, false),
         }
     }
 
-    /// Estimated progress rate of a task's primary copy, from elapsed time
-    /// only (blind — LATE has no access to the paper's s_i-checkpoint
-    /// instrumentation; see mantri.rs).
-    fn progress_rate(cl: &Cluster, t: TaskRef) -> Option<(f64, f64)> {
-        let job = cl.job(t.job);
-        let task = &job.tasks[t.task as usize];
+    /// Estimated progress rate of a task's primary copy:
+    /// `1 / (elapsed + estimated wall-clock remaining)`.
+    fn progress_rate(&self, cl: &Cluster, t: TaskRef) -> Option<(f64, f64)> {
+        let task = cl.task(t);
         let c = task.copies.first()?;
         if c.phase != CopyPhase::Running {
             return None;
@@ -36,7 +44,7 @@ impl Late {
         if elapsed <= 0.0 {
             return None;
         }
-        let rem = job.spec.dist.mean_remaining(elapsed);
+        let rem = self.est.copy_remaining_wall(cl, t, 0);
         Some((1.0 / (elapsed + rem), rem))
     }
 }
@@ -56,7 +64,7 @@ impl Scheduler for Late {
                     continue;
                 }
                 let t = TaskRef { job: *id, task: ti as u32 };
-                if let Some((rate, rem)) = Self::progress_rate(cl, t) {
+                if let Some((rate, rem)) = self.progress_rate(cl, t) {
                     rates.push((rate, rem, t));
                 }
             }

@@ -2,19 +2,24 @@
 //! duplicate a running task when `P(t_rem > 2 * t_new) > delta` (default
 //! delta = 0.25) and a machine is available; at most one backup per task.
 //!
-//! The estimator is **blind**: the conditional Pareto survival
+//! The estimator is **blind** (`estimator::for_policy` with
+//! `instrumented = false`): the conditional Pareto survival
 //! `P(x > e + 2 E[x] | x > e)` from elapsed time only.  The s_i-checkpoint
 //! that reveals a copy's true remaining time is the *paper's* monitoring
 //! instrumentation (Eq. 18-19) — granting it to the baseline would make
 //! Mantri implausibly strong (it roughly halved the paper's reported gaps
-//! in early versions of this reproduction).
+//! in early versions of this reproduction).  Class-speed awareness, by
+//! contrast, is public hardware knowledge, so with the default
+//! `speed_aware = true` Mantri gets `estimator::SpeedAware::blind` (a
+//! no-op on the paper's homogeneous cluster).
 //! With `mantri_kill` the scheduler also terminates an original whose
-//! revealed remaining time exceeds both the restart threshold and what a
+//! estimated remaining time exceeds both the restart threshold and what a
 //! fresh copy would need (the paper mentions Mantri may terminate tasks).
 
 use crate::cluster::job::{CopyPhase, TaskRef};
 use crate::cluster::sim::Cluster;
 use crate::config::SimConfig;
+use crate::estimator::{self, RemainingTime};
 
 use super::{srpt, Scheduler};
 
@@ -24,11 +29,18 @@ pub struct Mantri {
     /// Job ordering for levels 2/3: FIFO (the Dryad stock scheduler) or the
     /// paper's SRPT levels (the like-for-like Fig. 6 baseline).
     srpt: bool,
+    /// Blind estimator (no checkpoint), speed-aware per config.
+    est: Box<dyn RemainingTime>,
 }
 
 impl Mantri {
     pub fn new(cfg: &SimConfig) -> Self {
-        Mantri { delta: cfg.mantri_delta, kill: cfg.mantri_kill, srpt: cfg.mantri_srpt }
+        Mantri {
+            delta: cfg.mantri_delta,
+            kill: cfg.mantri_kill,
+            srpt: cfg.mantri_srpt,
+            est: estimator::for_policy(cfg, false),
+        }
     }
 }
 
@@ -51,8 +63,8 @@ impl Scheduler for Mantri {
                     continue;
                 }
                 let t = TaskRef { job: *id, task: ti as u32 };
-                if cl.prob_remaining_exceeds_blind(t, two_means) > self.delta {
-                    cands.push((cl.est_remaining_blind(t), t));
+                if self.est.task_prob_exceeds(cl, t, two_means) > self.delta {
+                    cands.push((self.est.task_remaining_work(cl, t), t));
                 }
             }
         }
@@ -73,7 +85,7 @@ impl Scheduler for Mantri {
         }
         // 2/3. job ordering per the configured baseline strength
         if self.srpt {
-            srpt::schedule_running(cl);
+            srpt::schedule_running_by(cl, self.est.as_ref());
             srpt::schedule_queued_single(cl);
         } else {
             srpt::schedule_running_fifo(cl);

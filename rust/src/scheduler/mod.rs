@@ -10,6 +10,26 @@
 //! * [`sca`]       — Smart Cloning Algorithm (Algorithm 1, P2 solver).
 //! * [`sda`]       — Straggler Detection Algorithm (Sec. V, Theorem 3).
 //! * [`ese`]       — Enhanced Speculative Execution (Algorithm 2).
+//!
+//! ## Remaining-time queries
+//!
+//! No policy does its own remaining-time math: every speculation rule
+//! queries a [`crate::estimator::RemainingTime`] built by
+//! `estimator::for_policy(cfg, instrumented)` at construction, where
+//! `instrumented` says whether the policy owns the paper's `s_i`
+//! detection checkpoint:
+//!
+//! | policy | instrumented | queries |
+//! |---|---|---|
+//! | Mantri | no (blind baseline) | `task_prob_exceeds` (its rule's `delta`), `task_remaining_work`, level-2 key |
+//! | LATE | no (blind baseline) | `copy_remaining_wall` (time-to-end), level-2 key via FIFO |
+//! | SCA | yes | level-2 ordering key (`job_remaining_work`) |
+//! | SDA | yes | `copy_remaining_work` at the reveal (vs `sigma * E[x]`), level-2 key |
+//! | ESE | yes | `task_remaining_work` per slot (vs `sigma * E[x]`), level-2 key |
+//!
+//! `cfg.speed_aware` (default true) selects the class-speed-corrected
+//! estimator variants — a no-op on the paper's homogeneous cluster; see
+//! [`crate::estimator`] for the full observation contract.
 
 pub mod clone_all;
 pub mod ese;

@@ -12,6 +12,7 @@
 
 use crate::cluster::sim::Cluster;
 use crate::config::SimConfig;
+use crate::estimator::{self, RemainingTime};
 use crate::opt::gradient::{GradientSolver, P2Job, P2Problem};
 use crate::opt::p2::round_and_repair;
 
@@ -44,6 +45,10 @@ pub struct Sca {
     r_max: u32,
     /// Batch cap (min of backend capacity and cfg.p2_batch).
     batch: usize,
+    /// Level-2 ordering estimator (checkpoint-instrumented, speed-aware
+    /// per config) — SCA's only remaining-time query; the P2 cloning
+    /// decision concerns *queued* jobs, which have nothing to estimate.
+    est: Box<dyn RemainingTime>,
     /// Counters exposed for diagnostics / perf accounting.
     pub p2_solves: u64,
     pub p2_jobs_solved: u64,
@@ -70,6 +75,7 @@ impl Sca {
             gamma: cfg.gamma,
             r_max: cfg.r_max,
             batch,
+            est: estimator::for_policy(cfg, true),
             p2_solves: 0,
             p2_jobs_solved: 0,
         })
@@ -135,7 +141,7 @@ impl Scheduler for Sca {
 
     fn on_slot(&mut self, cl: &mut Cluster) {
         // 1. remaining tasks of running jobs, fewest remaining first
-        srpt::schedule_running(cl);
+        srpt::schedule_running_by(cl, self.est.as_ref());
         if cl.idle() == 0 {
             return;
         }

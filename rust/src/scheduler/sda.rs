@@ -1,10 +1,18 @@
 //! Straggler Detection Algorithm (Sec. V-B).
 //!
 //! Level 1 (event-driven, not slot-gated): when a task's first copy crosses
-//! its detection checkpoint and the revealed remaining time exceeds
+//! its detection checkpoint and the estimated remaining **work** exceeds
 //! `sigma * E[x]`, launch `c* - 1` backups immediately on idle machines.
 //! Theorem 3 gives c* = 2 under Pareto; we *compute* c* and sigma* from P3
 //! (Eq. 27-28) at construction and debug-assert the theorem.
+//!
+//! The detection query routes through `estimator::for_policy` with
+//! `instrumented = true`: SDA owns the paper's s_i monitoring, so at the
+//! checkpoint the estimate is the revealed truth — speed-corrected by the
+//! host's advertised class speed under the default `speed_aware = true`.
+//! That correction is what separates a copy that is *behind* (degraded
+//! host, genuinely long task) from one that merely sits on a slow machine
+//! class: see the `estimator_slowdown` integration tests.
 //!
 //! Levels 2/3 (slotted): the shared smallest-remaining / smallest-workload
 //! SRPT ordering, one copy per task.
@@ -12,6 +20,7 @@
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::Cluster;
 use crate::config::SimConfig;
+use crate::estimator::{self, RemainingTime};
 use crate::opt::p3;
 
 use super::{srpt, Scheduler};
@@ -24,6 +33,8 @@ pub struct Sda {
     /// Stragglers detected / backups actually launched (diagnostics).
     pub detected: u64,
     pub backups: u64,
+    /// Revealed estimator (checkpoint-instrumented), speed-aware per config.
+    est: Box<dyn RemainingTime>,
 }
 
 impl Sda {
@@ -32,7 +43,13 @@ impl Sda {
         let sigma = cfg.sigma.unwrap_or(policy.sigma);
         // Theorem 3: one backup is optimal under Pareto
         debug_assert_eq!(policy.c_star, 2, "Theorem 3 violated: c* = {}", policy.c_star);
-        Sda { sigma, c_star: policy.c_star, detected: 0, backups: 0 }
+        Sda {
+            sigma,
+            c_star: policy.c_star,
+            detected: 0,
+            backups: 0,
+            est: estimator::for_policy(cfg, true),
+        }
     }
 }
 
@@ -42,15 +59,13 @@ impl Scheduler for Sda {
     }
 
     fn on_reveal(&mut self, cl: &mut Cluster, t: TaskRef) {
-        let job = cl.job(t.job);
-        let task = &job.tasks[t.task as usize];
         // only the original triggers detection, and only once
-        if task.copies.len() != 1 {
+        if cl.task(t).copies.len() != 1 {
             return;
         }
-        let copy = &task.copies[0];
-        let remaining = copy.true_remaining(cl.clock);
-        if remaining > self.sigma * job.spec.dist.mean() {
+        let mean = cl.job(t.job).spec.dist.mean();
+        let remaining = self.est.copy_remaining_work(cl, t, 0);
+        if remaining > self.sigma * mean {
             self.detected += 1;
             for _ in 1..self.c_star {
                 if cl.idle() == 0 {
@@ -64,7 +79,7 @@ impl Scheduler for Sda {
     }
 
     fn on_slot(&mut self, cl: &mut Cluster) {
-        srpt::schedule_running(cl);
+        srpt::schedule_running_by(cl, self.est.as_ref());
         srpt::schedule_queued_single(cl);
     }
 }

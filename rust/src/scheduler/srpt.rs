@@ -2,17 +2,41 @@
 //! (2) the remaining tasks of begun jobs smallest-remaining-workload first,
 //! then (3) the queued jobs smallest-workload first — the SRPT-flavoured
 //! ordering the paper adopts throughout.
+//!
+//! The level-2 ordering key is a remaining-time query, so it routes
+//! through the [`RemainingTime`] trait: policies holding an estimator call
+//! [`schedule_running_by`]; [`schedule_running`] is the plain mean-field
+//! shorthand (identical key for every estimator — see
+//! `RemainingTime::job_remaining_work`).
 
+use crate::cluster::job::JobId;
 use crate::cluster::sim::Cluster;
+use crate::estimator::{Blind, RemainingTime};
 
 /// Level 2: launch first copies for unlaunched tasks of running jobs,
 /// smallest remaining workload first.  Returns copies launched.
 pub fn schedule_running(cl: &mut Cluster) -> usize {
+    schedule_running_by(cl, &Blind)
+}
+
+/// Level 2 with the ordering key supplied by `est` — the paper's
+/// smallest-remaining-workload-first over `est.job_remaining_work`.  Ties
+/// break by job id (arrival order): keys are computed up-front and sorted
+/// stably over the id-ordered running set.
+pub fn schedule_running_by(cl: &mut Cluster, est: &dyn RemainingTime) -> usize {
     let mut launched = 0;
     if cl.idle() == 0 {
         return 0;
     }
-    for id in cl.running_needing_tasks() {
+    let mut keyed: Vec<(f64, JobId)> = cl
+        .running
+        .iter()
+        .copied()
+        .filter(|id| cl.job(*id).unlaunched() > 0)
+        .map(|id| (est.job_remaining_work(cl, id), id))
+        .collect();
+    keyed.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (_, id) in keyed {
         let idle = cl.idle();
         if idle == 0 {
             break;

@@ -26,13 +26,13 @@ impl Pareto {
         Pareto::new(mean * (alpha - 1.0) / alpha, alpha)
     }
 
-    /// E[x] = mu * alpha / (alpha - 1).
+    /// `E[x] = mu * alpha / (alpha - 1)`.
     #[inline]
     pub fn mean(&self) -> f64 {
         self.mu * self.alpha / (self.alpha - 1.0)
     }
 
-    /// E[x^2] (infinite for alpha <= 2).
+    /// `E[x^2]` (infinite for `alpha <= 2`).
     #[inline]
     pub fn second_moment(&self) -> f64 {
         if self.alpha <= 2.0 {
@@ -86,14 +86,14 @@ impl Pareto {
         Pareto { mu: self.mu, alpha: self.alpha * c }
     }
 
-    /// E[min of c copies] = mu * c*alpha / (c*alpha - 1)  (Sec. III-B).
+    /// `E[min of c copies] = mu * c*alpha / (c*alpha - 1)`  (Sec. III-B).
     #[inline]
     pub fn mean_min_of(&self, c: f64) -> f64 {
         let beta = self.alpha * c;
         self.mu * beta / (beta - 1.0)
     }
 
-    /// E[min(x, cap)] = integral_0^cap S(t) dt.
+    /// `E[min(x, cap)] = integral_0^cap S(t) dt`.
     #[inline]
     pub fn mean_capped(&self, cap: f64) -> f64 {
         if cap <= self.mu {

@@ -1,0 +1,197 @@
+//! Integration tests for the estimator subsystem on the server-dependent
+//! slowdown axis: SDA must relaunch a copy stuck on a *degraded* host
+//! (hidden slowdown — a real straggler) while the speed-aware estimator
+//! suppresses the false positive a merely slow-*class* host would raise;
+//! and the `--slowdown` scenario must separate Mantri from ESE in a sweep.
+
+use specsim::cluster::job::{JobId, JobSpec, TaskRef};
+use specsim::cluster::machine::{MachineClass, SlowdownConfig};
+use specsim::cluster::sim::{Cluster, Simulator, Workload};
+use specsim::config::SimConfig;
+use specsim::experiment::{ClusterScenario, ExperimentSpec, LoadPoint, PolicyVariant, Runner};
+use specsim::metrics::report;
+use specsim::scheduler::naive::Naive;
+use specsim::scheduler::sda::Sda;
+use specsim::scheduler::{Scheduler, SchedulerKind};
+use specsim::stats::Pareto;
+
+fn task0() -> TaskRef {
+    TaskRef { job: JobId(0), task: 0 }
+}
+
+/// One job with a single task of controlled work (`E[x]` = 1), launched at
+/// t = 0 on the first machine of the configured cluster.
+fn one_task_cluster(cfg: SimConfig, work: f64) -> Cluster {
+    let dist = Pareto::from_mean(1.0, 2.0);
+    let wl = Workload {
+        specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
+        first_durations: vec![vec![work]],
+    };
+    let mut sim = Simulator::new(cfg, wl, Box::new(Naive));
+    assert!(sim.cluster.launch_copy(task0()));
+    sim.cluster
+}
+
+/// Drive the copy to its reveal by hand (deterministic, no event loop) and
+/// return (stragglers detected, copies of the task afterwards).
+fn reveal_under_sda(mut cl: Cluster, sda: &mut Sda, at: f64) -> (u64, usize) {
+    cl.clock = at;
+    cl.jobs[0].tasks[0].copies[0].revealed = true;
+    sda.on_reveal(&mut cl, task0());
+    (sda.detected, cl.jobs[0].tasks[0].copies.len())
+}
+
+/// A slow-*class* host (advertised speed 0.5, healthy): the copy's
+/// wall-clock remaining looks 2x inflated, but the speed-aware estimator
+/// normalizes by the public class speed and correctly stays quiet, while
+/// the unit-naive estimator raises a false positive.
+#[test]
+fn speed_aware_sda_suppresses_slow_class_false_positive() {
+    let base = {
+        let mut cfg = SimConfig::default();
+        // machine 0 (allocated first) is the slow class
+        cfg.set_machine_classes(vec![MachineClass::new(1, 0.5), MachineClass::new(4, 1.0)]);
+        cfg.sigma = Some(1.0); // threshold = sigma * E[x] = 1 work unit
+        cfg.use_runtime = false;
+        cfg
+    };
+    // work 1.0 on a 0.5x host: wall duration 2.0; at t = 0.2 the true
+    // remaining work is 0.9 (< 1) but the raw wall-clock remaining is 1.8
+    let aware = {
+        let mut s = Sda::new(&base, 2.0);
+        reveal_under_sda(one_task_cluster(base.clone(), 1.0), &mut s, 0.2)
+    };
+    assert_eq!(aware, (0, 1), "speed-aware SDA must not speculate on a slow-class host");
+    let naive_units = {
+        let mut cfg = base;
+        cfg.speed_aware = false;
+        let mut s = Sda::new(&cfg, 2.0);
+        reveal_under_sda(one_task_cluster(cfg.clone(), 1.0), &mut s, 0.2)
+    };
+    assert_eq!(
+        naive_units,
+        (1, 2),
+        "the unit-naive estimator conflates class speed with straggling"
+    );
+}
+
+/// A *degraded* host (hidden 4x slowdown on a speed-1 class): the revealed
+/// remaining time is genuinely inflated, the speed-aware estimator cannot
+/// (and must not) explain it away, and SDA relaunches.
+#[test]
+fn sda_relaunches_copy_stuck_on_slowed_host() {
+    let mut cfg = SimConfig::default();
+    cfg.machines = 5;
+    // frac = 1.0: every machine degraded, so the test is deterministic
+    cfg.slowdown = Some(SlowdownConfig::new(1.0, 4.0));
+    cfg.sigma = Some(1.0);
+    cfg.use_runtime = false;
+    let mut sda = Sda::new(&cfg, 2.0);
+    // work 1.0 at effective speed 1/4: wall duration 4.0; at t = 0.4 the
+    // apparent remaining work is 3.6 >> 1 — a detectable straggler
+    let cl = one_task_cluster(cfg.clone(), 1.0);
+    assert_eq!(cl.jobs[0].tasks[0].copies[0].duration, 4.0);
+    let (detected, copies) = reveal_under_sda(cl, &mut sda, 0.4);
+    assert_eq!(detected, 1, "SDA must detect the slowed host's straggler");
+    assert_eq!(copies, 2, "SDA must have launched a backup copy");
+    assert_eq!(sda.backups, 1);
+}
+
+fn slowdown_spec(threads: usize) -> ExperimentSpec {
+    let mut cfg = SimConfig::default();
+    cfg.machines = 100;
+    cfg.horizon = 150.0;
+    cfg.use_runtime = false;
+    cfg.mantri_srpt = true; // like-for-like baseline (see fig6.rs)
+    let mut spec = ExperimentSpec::new("slowdown", cfg);
+    spec.scenario = ClusterScenario::homogeneous().with_slowdown(SlowdownConfig::new(0.3, 4.0));
+    spec.policies = vec![
+        PolicyVariant::kind(SchedulerKind::Mantri),
+        PolicyVariant::kind(SchedulerKind::Ese),
+    ];
+    spec.loads = vec![LoadPoint::lambda(0.5)];
+    spec.seeds = vec![1];
+    spec.threads = threads;
+    spec
+}
+
+/// The acceptance bar for the `--slowdown` axis: the same degraded cluster
+/// produces different flowtime under Mantri (blind) and ESE
+/// (checkpoint-instrumented), and the sweep stays deterministic across
+/// worker counts.
+#[test]
+fn slowdown_separates_mantri_from_ese() {
+    let sweep = Runner::run(&slowdown_spec(1)).unwrap();
+    let mantri = sweep.merged(0, 0);
+    let ese = sweep.merged(1, 0);
+    assert!(!mantri.completed.is_empty());
+    assert!(!ese.completed.is_empty());
+    assert!(
+        (mantri.mean_flowtime() - ese.mean_flowtime()).abs() > 1e-9,
+        "slowdown should separate mantri ({}) from ese ({})",
+        mantri.mean_flowtime(),
+        ese.mean_flowtime()
+    );
+    // parallel determinism must hold on the slowdown axis too
+    let a = report::sweep_csv(&sweep);
+    let b = report::sweep_csv(&Runner::run(&slowdown_spec(4)).unwrap());
+    assert_eq!(a, b);
+}
+
+/// Slowing 30% of the machines 4x must hurt: the naive baseline's mean
+/// flowtime strictly increases relative to the healthy cluster.
+#[test]
+fn slowdown_degrades_the_naive_baseline() {
+    let run = |slowdown: Option<SlowdownConfig>| {
+        let mut spec = slowdown_spec(2);
+        spec.scenario = ClusterScenario::default();
+        if let Some(sd) = slowdown {
+            spec.scenario = spec.scenario.with_slowdown(sd);
+        }
+        spec.policies = vec![PolicyVariant::kind(SchedulerKind::Naive)];
+        Runner::run(&spec).unwrap().merged(0, 0).mean_flowtime()
+    };
+    let healthy = run(None);
+    let degraded = run(Some(SlowdownConfig::new(0.3, 4.0)));
+    assert!(
+        degraded > healthy,
+        "degraded cluster should be slower: {degraded} vs {healthy}"
+    );
+}
+
+/// On a heterogeneous cluster the `speed_aware` toggle changes ESE's
+/// speculation behaviour: unit-naive estimates read every slow-class copy
+/// as a straggler.
+#[test]
+fn speed_awareness_changes_ese_under_heterogeneity() {
+    let mut cfg = SimConfig::default();
+    cfg.horizon = 150.0;
+    cfg.use_runtime = false;
+    let mut spec = ExperimentSpec::new("hetero-aware", cfg);
+    spec.scenario = ClusterScenario::heterogeneous(vec![
+        MachineClass::new(60, 1.0),
+        MachineClass::new(60, 0.4),
+    ]);
+    spec.policies = vec![
+        PolicyVariant::kind(SchedulerKind::Ese),
+        PolicyVariant::patched("ese_naive_units", SchedulerKind::Ese, |c| c.speed_aware = false),
+    ];
+    spec.loads = vec![LoadPoint::lambda(0.5)];
+    spec.seeds = vec![2];
+    spec.threads = 2;
+    let sweep = Runner::run(&spec).unwrap();
+    let aware = sweep.merged(0, 0);
+    let naive_units = sweep.merged(1, 0);
+    assert!(!aware.completed.is_empty());
+    assert!(!naive_units.completed.is_empty());
+    assert!(
+        aware.speculative_launches != naive_units.speculative_launches
+            || (aware.mean_flowtime() - naive_units.mean_flowtime()).abs() > 1e-12,
+        "speed awareness should change ESE behaviour on a heterogeneous cluster \
+         (speculative: {} vs {}, flowtime: {} vs {})",
+        aware.speculative_launches,
+        naive_units.speculative_launches,
+        aware.mean_flowtime(),
+        naive_units.mean_flowtime()
+    );
+}
