@@ -26,12 +26,19 @@ fn batch_problem(b: usize) -> P2Problem {
     P2Problem { jobs, n_avail: total * 2.0, gamma: 0.01, r: 8.0, alpha: 2.0 }
 }
 
-fn sim_events(kind: SchedulerKind, machines: usize, lambda: f64, horizon: f64) -> (u64, f64) {
+fn sim_events(
+    kind: SchedulerKind,
+    machines: usize,
+    lambda: f64,
+    horizon: f64,
+    sched_index: bool,
+) -> (u64, f64) {
     let mut cfg = SimConfig::default();
     cfg.machines = machines;
     cfg.horizon = horizon;
     cfg.use_runtime = false;
     cfg.scheduler = kind;
+    cfg.sched_index = sched_index;
     let wl = WorkloadConfig::paper(lambda);
     let workload = generate(&wl, cfg.horizon, 1);
     let tasks: u64 = workload.specs.iter().map(|s| s.num_tasks as u64).sum();
@@ -43,7 +50,7 @@ fn sim_events(kind: SchedulerKind, machines: usize, lambda: f64, horizon: f64) -
 }
 
 fn main() {
-    println!("== L3: simulator throughput ==");
+    println!("== L3: simulator throughput (SchedIndex hot path vs naive scans) ==");
     for (kind, label) in [
         (SchedulerKind::Naive, "naive"),
         (SchedulerKind::Sda, "sda"),
@@ -51,12 +58,16 @@ fn main() {
         (SchedulerKind::Sca, "sca(rust)"),
         (SchedulerKind::Mantri, "mantri"),
     ] {
-        let (copies, dt) = sim_events(kind, 1000, 2.0, 500.0);
+        let (copies, dt) = sim_events(kind, 1000, 2.0, 500.0, true);
+        let (_, dt_scan) = sim_events(kind, 1000, 2.0, 500.0, false);
         println!(
-            "{label:<12} {copies:>8} task-copies in {dt:>7.3}s  -> {:>10.0} copies/s",
-            copies as f64 / dt
+            "{label:<12} {copies:>8} task-copies in {dt:>7.3}s  -> {:>10.0} copies/s \
+             (scan: {dt_scan:>7.3}s, {:>5.2}x)",
+            copies as f64 / dt,
+            dt_scan / dt
         );
     }
+    println!("(full grid with events/sec + JSON artifact: specsim bench)");
     println!("\n== L3: P2 solver latency (per scheduling slot) ==");
     let mut solver = GradientSolver::default();
     let p64 = batch_problem(64);

@@ -1,6 +1,18 @@
 //! Discrete-event queue.  Events are ordered by time (then by a sequence
 //! number so simultaneous events process in insertion order, keeping runs
 //! deterministic).
+//!
+//! ## Stale-entry hygiene
+//!
+//! A killed copy leaves its `CopyFinish` (and possibly `Checkpoint`) entry
+//! in the heap until its sampled time — harmless (the pop is a no-op) but
+//! under heavy speculation the heap would otherwise track *copies ever
+//! launched* instead of *copies alive*.  The cluster counts exactly those
+//! dead entries via [`EventQueue::note_stale`]; once they outnumber the
+//! live half of the heap, [`EventQueue::retain_live`] compacts in one
+//! O(n) pass (amortized O(1) per kill).  Sequence numbers survive
+//! compaction, so the pop order of the remaining events — and therefore
+//! the simulation — is bit-identical with or without it.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -50,12 +62,20 @@ impl PartialOrd for Entry {
     }
 }
 
-/// Min-heap of timestamped events.
+/// Min-heap of timestamped events with stale-entry accounting.
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Entry>,
     seq: u64,
+    /// Entries known to be dead (their copy was killed / its task done);
+    /// popped as no-ops unless compacted away first.
+    stale: usize,
+    /// High-water mark of `len()` over the queue's lifetime.
+    peak: usize,
 }
+
+/// Don't bother compacting tiny heaps.
+const COMPACT_MIN_STALE: usize = 64;
 
 impl EventQueue {
     pub fn new() -> Self {
@@ -66,6 +86,9 @@ impl EventQueue {
         debug_assert!(time.is_finite(), "event at non-finite time: {event:?}");
         self.seq += 1;
         self.heap.push(Entry { time, seq: self.seq, event });
+        if self.heap.len() > self.peak {
+            self.peak = self.heap.len();
+        }
     }
 
     pub fn pop(&mut self) -> Option<(f64, Event)> {
@@ -81,6 +104,40 @@ impl EventQueue {
     }
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Largest `len()` ever observed (perf-harness metric: heap growth
+    /// must track active copies, not copies ever launched).
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
+
+    /// Record that `n` already-pushed entries became dead (e.g. a killed
+    /// copy's pending `CopyFinish`).  The caller is responsible for exact
+    /// counting; see `Cluster::kill_copy`.
+    pub fn note_stale(&mut self, n: usize) {
+        self.stale += n;
+    }
+
+    /// A previously-noted stale entry just popped as a no-op (it outlived
+    /// the compaction that would have removed it) — keep the count exact.
+    pub fn note_stale_popped(&mut self) {
+        self.stale = self.stale.saturating_sub(1);
+    }
+
+    /// Should the owner run a compaction pass?  True once at least half
+    /// the heap is dead entries (so each O(n) pass removes ≥ n/2 of them —
+    /// amortized O(1) per kill).
+    pub fn should_compact(&self) -> bool {
+        self.stale >= COMPACT_MIN_STALE && 2 * self.stale >= self.heap.len()
+    }
+
+    /// Drop every entry whose event fails `is_live`, resetting the stale
+    /// count.  Sequence numbers are preserved, so surviving events pop in
+    /// the exact order they would have without compaction.
+    pub fn retain_live(&mut self, mut is_live: impl FnMut(&Event) -> bool) {
+        self.heap.retain(|e| is_live(&e.event));
+        self.stale = 0;
     }
 }
 
@@ -110,6 +167,53 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut q = EventQueue::new();
+        for i in 0..5 {
+            q.push(i as f64, Event::SlotTick);
+        }
+        q.pop();
+        q.pop();
+        q.push(9.0, Event::SlotTick);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peak_len(), 5);
+    }
+
+    #[test]
+    fn compaction_preserves_survivor_order() {
+        let mut q = EventQueue::new();
+        // interleave live arrivals with stale-to-be copy finishes
+        for i in 0..200u32 {
+            q.push(i as f64, Event::Arrival(JobId(i)));
+            q.push(
+                i as f64 + 0.5,
+                Event::CopyFinish { task: TaskRef { job: JobId(i), task: 0 }, copy: 0 },
+            );
+        }
+        assert!(!q.should_compact());
+        q.note_stale(200);
+        assert!(q.should_compact());
+        q.retain_live(|e| matches!(e, Event::Arrival(_)));
+        assert!(!q.should_compact());
+        assert_eq!(q.len(), 200);
+        // survivors pop in the original (time, seq) order
+        let mut prev = -1.0;
+        while let Some((t, e)) = q.pop() {
+            assert!(t > prev);
+            prev = t;
+            assert!(matches!(e, Event::Arrival(_)));
+        }
+    }
+
+    #[test]
+    fn small_heaps_never_compact() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::SlotTick);
+        q.note_stale(1);
+        assert!(!q.should_compact(), "below the compaction floor");
     }
 
     #[test]

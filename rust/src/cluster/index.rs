@@ -1,0 +1,453 @@
+//! `SchedIndex` — incrementally-maintained scheduler indices, so every
+//! slotted decision costs O(what changed), not O(everything running).
+//!
+//! The paper's regimes of interest (thousands of machines, λ near the ESE
+//! threshold, long horizons) are exactly the expensive ones to simulate:
+//! before this subsystem every slot re-scanned *all tasks of all running
+//! jobs* (Mantri/LATE/ESE duplicate rules) and re-collected + re-sorted
+//! the job orderings (`Cluster::chi_sorted`, SRPT level 2) from scratch.
+//! The index keeps three structures current at the `Cluster` mutation
+//! points instead:
+//!
+//! 1. **Speculation candidates** — per job, the tasks whose only copy is a
+//!    running *first* copy, split into unrevealed / revealed (the `s_i`
+//!    checkpoint state).  Mantri, LATE and ESE iterate only these; a task
+//!    with a backup, a finished task, or an unlaunched task never appears.
+//! 2. **Level-2 ordering** — the running jobs that still have unlaunched
+//!    tasks, ordered by the paper's mean-field remaining workload
+//!    `#unfinished · E[x]` (ties by `JobId`), plus the same membership in
+//!    plain id order for the FIFO baselines.
+//! 3. **Level-3 ordering** — the queued jobs χ(l) ordered by total
+//!    workload `m_i · E[x]` (ties by `JobId`), plus a running total of
+//!    queued tasks (the live master's backpressure signal).
+//!
+//! ## The bit-identical-behavior invariant
+//!
+//! Index-driven scheduling must make **exactly** the decisions the naive
+//! scans make: the same copies launched in the same order with the same
+//! tie-breaks.  Three facts deliver that:
+//!
+//! * candidate iteration yields ascending task indices per job
+//!   ([`BTreeSet::union`] of the two disjoint splits), and schedulers
+//!   visit jobs in the same ascending-`JobId` order as before;
+//! * the ordered job sets are `BTreeSet<(F64Key, JobId)>` with
+//!   [`f64::total_cmp`] key order — identical to a *stable* sort by
+//!   `total_cmp` over an id-ordered collection, which is what the scan
+//!   paths do;
+//! * keys are recomputed from the same pure functions
+//!   (`JobState::remaining_workload`, `JobSpec::workload`) at every
+//!   mutation, and mutations only happen between queries (event handling
+//!   and launches never interleave with an in-progress ordering scan —
+//!   schedulers snapshot the order into a reused scratch buffer first).
+//!
+//! The scan implementations are **retained** (`SimConfig::sched_index =
+//! false`) as the equivalence reference; `tests/experiment_integration.rs`
+//! proves byte-identical `sweep_csv` output across every policy and
+//! scenario axis.  See `rust/DESIGN.md` §10 for the full contract table
+//! (which mutation updates which index).
+
+use std::cmp::Ordering;
+use std::collections::BTreeSet;
+
+use super::job::{CopyPhase, JobId, JobPhase, JobState, TaskRef};
+
+/// An `f64` ordered by [`f64::total_cmp`] so it can key a [`BTreeSet`].
+/// Matches the NaN-safe `total_cmp` sorts used by the scan reference
+/// paths, so index order and scan order agree on every input.  Equality
+/// is defined through the same total order (NOT `f64::eq`: `-0.0` and
+/// `0.0` are distinct keys, NaN equals itself) to keep the `Ord`
+/// contract consistent.
+#[derive(Clone, Copy, Debug)]
+pub struct F64Key(pub f64);
+
+impl PartialEq for F64Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for F64Key {}
+
+impl Ord for F64Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl PartialOrd for F64Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-job slice of the index.
+#[derive(Clone, Debug, Default)]
+struct JobIndex {
+    /// Tasks whose only copy is a running first copy that has not crossed
+    /// its detection checkpoint.  Disjoint from `revealed`.
+    unrevealed: BTreeSet<u32>,
+    /// Tasks whose only copy is a running, checkpoint-revealed first copy.
+    revealed: BTreeSet<u32>,
+    /// The key under which the job currently sits in the level-2 set
+    /// (`None` = not a member).  Stored so a stale entry can be removed
+    /// when the remaining workload changes.
+    level2_key: Option<F64Key>,
+    /// Membership in the queued-by-workload set (key is the static total
+    /// workload, so it needs no stored copy).
+    in_queued: bool,
+}
+
+/// Incremental indices over one [`Cluster`](super::sim::Cluster)'s jobs.
+/// Maintained by the cluster's mutation points — and, like the queries,
+/// only when `SimConfig::sched_index` is on (the default), so the `false`
+/// setting reproduces the true pre-index code: scans only, no upkeep.
+/// The benchmark's indexed-vs-scan speedup is therefore measured against
+/// a genuine baseline, not a scan that still pays maintenance.
+#[derive(Clone, Debug, Default)]
+pub struct SchedIndex {
+    jobs: Vec<JobIndex>,
+    /// Running jobs with unlaunched tasks, by (remaining workload, id) —
+    /// the SRPT level-2 order.
+    level2: BTreeSet<(F64Key, JobId)>,
+    /// Same membership as `level2`, in plain id (= arrival) order — the
+    /// Mantri/LATE FIFO baselines.
+    level2_fifo: BTreeSet<JobId>,
+    /// Queued jobs by (total workload, id) — the χ(l) level-3 order.
+    queued: BTreeSet<(F64Key, JobId)>,
+    /// Total unlaunched tasks over the queued jobs (backpressure signal).
+    queued_tasks: usize,
+    /// Reused job-id buffer for slot hooks (snapshot an ordering, then
+    /// launch against it without re-allocating every slot).
+    scratch: Vec<JobId>,
+}
+
+impl SchedIndex {
+    /// An index for `n` not-yet-arrived jobs (batch mode pre-loads the
+    /// whole trace; live mode starts at 0 and [`push_job`](Self::push_job)s).
+    pub fn new(n: usize) -> Self {
+        SchedIndex { jobs: vec![JobIndex::default(); n], ..SchedIndex::default() }
+    }
+
+    /// Register one more job slot (live-mode `Cluster::add_job`).
+    pub fn push_job(&mut self) {
+        self.jobs.push(JobIndex::default());
+    }
+
+    // ----- mutation hooks (called by Cluster) ----------------------------
+
+    /// The job joined χ(l) (its `Arrival` event fired / live submission).
+    pub fn job_arrived(&mut self, job: &JobState) {
+        let ji = &mut self.jobs[job.spec.id.0 as usize];
+        debug_assert!(!ji.in_queued, "job {:?} arrived twice", job.spec.id);
+        ji.in_queued = true;
+        self.queued.insert((F64Key(job.spec.workload()), job.spec.id));
+        self.queued_tasks += job.spec.num_tasks as usize;
+    }
+
+    /// Re-derive the task's speculation-candidate status from its state.
+    /// Call after any mutation of the task's copies (launch, kill, finish,
+    /// checkpoint reveal).
+    pub fn sync_task(&mut self, job: &JobState, t: TaskRef) {
+        let task = &job.tasks[t.task as usize];
+        let ji = &mut self.jobs[t.job.0 as usize];
+        let candidate = !task.done
+            && task.copies.len() == 1
+            && task.copies[0].phase == CopyPhase::Running;
+        if candidate {
+            if task.copies[0].revealed {
+                ji.unrevealed.remove(&t.task);
+                ji.revealed.insert(t.task);
+            } else {
+                ji.revealed.remove(&t.task);
+                ji.unrevealed.insert(t.task);
+            }
+        } else {
+            ji.unrevealed.remove(&t.task);
+            ji.revealed.remove(&t.task);
+        }
+    }
+
+    /// Re-derive the job's membership in the ordered sets from its phase,
+    /// launch progress and remaining workload.  Call after any mutation
+    /// that can change them (first-copy launch, task completion).
+    pub fn sync_job(&mut self, job: &JobState) {
+        let id = job.spec.id;
+        let ji = &mut self.jobs[id.0 as usize];
+        // leave χ(l) when the first task launches
+        if ji.in_queued && job.phase != JobPhase::Queued {
+            ji.in_queued = false;
+            self.queued.remove(&(F64Key(job.spec.workload()), id));
+            self.queued_tasks -= job.spec.num_tasks as usize;
+        }
+        // level-2 membership: running with unlaunched tasks, keyed by the
+        // mean-field remaining workload (see RemainingTime::job_remaining_work)
+        let want = job.phase == JobPhase::Running && job.unlaunched() > 0;
+        let key = F64Key(job.remaining_workload());
+        match (ji.level2_key, want) {
+            (Some(old), true) if old == key => {}
+            (Some(old), true) => {
+                self.level2.remove(&(old, id));
+                self.level2.insert((key, id));
+                ji.level2_key = Some(key);
+            }
+            (Some(old), false) => {
+                self.level2.remove(&(old, id));
+                self.level2_fifo.remove(&id);
+                ji.level2_key = None;
+            }
+            (None, true) => {
+                self.level2.insert((key, id));
+                self.level2_fifo.insert(id);
+                ji.level2_key = Some(key);
+            }
+            (None, false) => {}
+        }
+    }
+
+    // ----- queries (the O(active) replacements for the scans) ------------
+
+    /// The job's speculation candidates in ascending task order: tasks
+    /// whose only copy is a running first copy (revealed or not).  This is
+    /// exactly the set the Mantri/LATE/ESE duplicate rules filter out of a
+    /// full task scan.
+    pub fn candidates(&self, id: JobId) -> impl Iterator<Item = u32> + '_ {
+        let ji = &self.jobs[id.0 as usize];
+        ji.unrevealed.union(&ji.revealed).copied()
+    }
+
+    /// The job's *revealed* candidates only (ascending) — the subset whose
+    /// estimates are post-checkpoint truth.
+    pub fn revealed_candidates(&self, id: JobId) -> impl Iterator<Item = u32> + '_ {
+        self.jobs[id.0 as usize].revealed.iter().copied()
+    }
+
+    /// The job's *unrevealed* candidates only (ascending).
+    pub fn unrevealed_candidates(&self, id: JobId) -> impl Iterator<Item = u32> + '_ {
+        self.jobs[id.0 as usize].unrevealed.iter().copied()
+    }
+
+    /// Running jobs with unlaunched tasks, smallest remaining workload
+    /// first (ties by id) — the incremental SRPT level-2 order.
+    pub fn level2_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.level2.iter().map(|&(_, id)| id)
+    }
+
+    /// Same membership as [`level2_jobs`](Self::level2_jobs), in arrival
+    /// (id) order — the FIFO baselines.
+    pub fn level2_jobs_fifo(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.level2_fifo.iter().copied()
+    }
+
+    /// Queued jobs χ(l), smallest total workload first (ties by id).
+    pub fn queued_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.queued.iter().map(|&(_, id)| id)
+    }
+
+    /// Total unlaunched tasks across χ(l) — the backpressure signal,
+    /// maintained as a running counter.
+    pub fn queued_task_count(&self) -> usize {
+        self.queued_tasks
+    }
+
+    /// Borrow the reusable job-id scratch buffer (empty).  Slot hooks
+    /// snapshot an ordering into it, launch against the snapshot, then
+    /// hand it back with [`put_scratch`](Self::put_scratch) so the next
+    /// slot allocates nothing.  Taking twice just yields a fresh buffer.
+    pub fn take_scratch(&mut self) -> Vec<JobId> {
+        let mut v = std::mem::take(&mut self.scratch);
+        v.clear();
+        v
+    }
+
+    /// Return the scratch buffer, keeping its capacity for the next slot.
+    pub fn put_scratch(&mut self, v: Vec<JobId>) {
+        if v.capacity() > self.scratch.capacity() {
+            self.scratch = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::job::{JobSpec, JobState};
+    use crate::stats::Pareto;
+
+    fn job(id: u32, tasks: u32, mean: f64) -> JobState {
+        JobState::new(JobSpec {
+            id: JobId(id),
+            arrival: 0.0,
+            dist: Pareto::from_mean(mean, 2.0),
+            num_tasks: tasks,
+        })
+    }
+
+    fn launch_first_copy(j: &mut JobState, task: u32, now: f64) {
+        j.tasks[task as usize].copies.push(crate::cluster::job::CopyState {
+            machine: 0,
+            start: now,
+            duration: 1.0,
+            phase: CopyPhase::Running,
+            revealed: false,
+        });
+        if task >= j.next_unlaunched {
+            j.next_unlaunched = task + 1;
+        }
+        if j.phase == JobPhase::Queued {
+            j.phase = JobPhase::Running;
+        }
+    }
+
+    #[test]
+    fn f64key_orders_like_total_cmp() {
+        let mut keys = [F64Key(2.0), F64Key(f64::NAN), F64Key(-0.0), F64Key(0.0), F64Key(-1.0)];
+        keys.sort();
+        let mut floats = [2.0, f64::NAN, -0.0, 0.0, -1.0];
+        floats.sort_by(|a, b| a.total_cmp(b));
+        for (k, f) in keys.iter().zip(floats) {
+            assert_eq!(k.0.total_cmp(&f), Ordering::Equal);
+        }
+    }
+
+    #[test]
+    fn queued_order_is_workload_then_id() {
+        let mut idx = SchedIndex::new(3);
+        // equal workloads for 0 and 2 -> id breaks the tie
+        let jobs = [job(0, 4, 1.0), job(1, 1, 1.0), job(2, 2, 2.0)];
+        for j in &jobs {
+            idx.job_arrived(j);
+        }
+        let order: Vec<u32> = idx.queued_jobs().map(|id| id.0).collect();
+        assert_eq!(order, vec![1, 0, 2]); // workloads 1, 4, 4 (tie 0 < 2)
+        assert_eq!(idx.queued_task_count(), 7);
+    }
+
+    #[test]
+    fn job_leaves_queue_on_first_launch() {
+        let mut idx = SchedIndex::new(1);
+        let mut j = job(0, 3, 1.0);
+        idx.job_arrived(&j);
+        assert_eq!(idx.queued_task_count(), 3);
+        launch_first_copy(&mut j, 0, 0.0);
+        idx.sync_task(&j, TaskRef { job: JobId(0), task: 0 });
+        idx.sync_job(&j);
+        assert_eq!(idx.queued_jobs().count(), 0);
+        assert_eq!(idx.queued_task_count(), 0);
+        // still has unlaunched tasks -> level 2 member, both orders
+        assert_eq!(idx.level2_jobs().collect::<Vec<_>>(), vec![JobId(0)]);
+        assert_eq!(idx.level2_jobs_fifo().collect::<Vec<_>>(), vec![JobId(0)]);
+    }
+
+    #[test]
+    fn level2_leaves_when_fully_launched() {
+        let mut idx = SchedIndex::new(1);
+        let mut j = job(0, 2, 1.0);
+        idx.job_arrived(&j);
+        launch_first_copy(&mut j, 0, 0.0);
+        idx.sync_job(&j);
+        assert_eq!(idx.level2_jobs().count(), 1);
+        launch_first_copy(&mut j, 1, 0.0);
+        idx.sync_job(&j);
+        assert_eq!(idx.level2_jobs().count(), 0);
+        assert_eq!(idx.level2_jobs_fifo().count(), 0);
+    }
+
+    #[test]
+    fn level2_reorders_on_completion() {
+        let mut idx = SchedIndex::new(2);
+        // job 0: 3 tasks of mean 2 (remaining 6); job 1: 2 tasks of mean 2
+        // (remaining 4) -> order [1, 0]; completing two of job 0's tasks
+        // drops its remaining to 2 -> order flips to [0, 1]
+        let mut j0 = job(0, 3, 2.0);
+        let mut j1 = job(1, 2, 2.0);
+        for j in [&mut j0, &mut j1] {
+            idx.job_arrived(j);
+            launch_first_copy(j, 0, 0.0);
+            idx.sync_job(j);
+        }
+        let order: Vec<u32> = idx.level2_jobs().map(|id| id.0).collect();
+        assert_eq!(order, vec![1, 0]);
+        j0.unfinished -= 2;
+        idx.sync_job(&j0);
+        let order: Vec<u32> = idx.level2_jobs().map(|id| id.0).collect();
+        assert_eq!(order, vec![0, 1]);
+        // fifo order is id order regardless of keys
+        let fifo: Vec<u32> = idx.level2_jobs_fifo().map(|id| id.0).collect();
+        assert_eq!(fifo, vec![0, 1]);
+    }
+
+    #[test]
+    fn candidates_track_copy_lifecycle() {
+        let mut idx = SchedIndex::new(1);
+        let mut j = job(0, 3, 1.0);
+        idx.job_arrived(&j);
+        let t0 = TaskRef { job: JobId(0), task: 0 };
+        let t1 = TaskRef { job: JobId(0), task: 1 };
+        launch_first_copy(&mut j, 0, 0.0);
+        launch_first_copy(&mut j, 1, 0.0);
+        idx.sync_task(&j, t0);
+        idx.sync_task(&j, t1);
+        idx.sync_job(&j);
+        assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(idx.unrevealed_candidates(JobId(0)).count(), 2);
+        // reveal task 0: moves between the splits, union order unchanged
+        j.tasks[0].copies[0].revealed = true;
+        idx.sync_task(&j, t0);
+        assert_eq!(idx.revealed_candidates(JobId(0)).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(idx.unrevealed_candidates(JobId(0)).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![0, 1]);
+        // a backup on task 0 disqualifies it (no longer a single-copy task)
+        let backup = j.tasks[0].copies[0];
+        j.tasks[0].copies.push(backup);
+        idx.sync_task(&j, t0);
+        assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![1]);
+        // task 1 finishes -> gone too
+        j.tasks[1].done = true;
+        j.tasks[1].copies[0].phase = CopyPhase::Finished;
+        idx.sync_task(&j, t1);
+        assert_eq!(idx.candidates(JobId(0)).count(), 0);
+        // a killed single copy (Mantri's restart) is not a candidate either
+        j.tasks[2].copies.push(crate::cluster::job::CopyState {
+            machine: 1,
+            start: 0.0,
+            duration: 1.0,
+            phase: CopyPhase::Killed,
+            revealed: false,
+        });
+        idx.sync_task(&j, TaskRef { job: JobId(0), task: 2 });
+        assert_eq!(idx.candidates(JobId(0)).count(), 0);
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_capacity() {
+        let mut idx = SchedIndex::new(0);
+        let mut v = idx.take_scratch();
+        v.extend([JobId(1), JobId(2), JobId(3)]);
+        let cap = v.capacity();
+        idx.put_scratch(v);
+        let v = idx.take_scratch();
+        assert!(v.is_empty());
+        assert_eq!(v.capacity(), cap);
+        // taking while taken still works (fresh buffer)
+        let w = idx.take_scratch();
+        assert!(w.is_empty());
+        idx.put_scratch(v);
+        idx.put_scratch(w);
+    }
+
+    #[test]
+    fn sync_is_idempotent() {
+        let mut idx = SchedIndex::new(1);
+        let mut j = job(0, 2, 1.5);
+        idx.job_arrived(&j);
+        launch_first_copy(&mut j, 0, 0.0);
+        let t0 = TaskRef { job: JobId(0), task: 0 };
+        for _ in 0..3 {
+            idx.sync_task(&j, t0);
+            idx.sync_job(&j);
+        }
+        assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(idx.level2_jobs().count(), 1);
+        assert_eq!(idx.queued_jobs().count(), 0);
+    }
+}

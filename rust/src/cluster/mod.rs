@@ -1,9 +1,11 @@
 //! The MapReduce-like cluster substrate: machines, jobs/tasks/copies, the
-//! discrete-event simulator with slotted scheduling, workload generators and
-//! trace I/O.
+//! discrete-event simulator with slotted scheduling, the incrementally
+//! maintained scheduler indices ([`index::SchedIndex`]), workload
+//! generators and trace I/O.
 
 pub mod event;
 pub mod generator;
+pub mod index;
 pub mod job;
 pub mod machine;
 pub mod sim;
@@ -11,6 +13,7 @@ pub mod trace;
 
 pub use event::{Event, EventQueue};
 pub use generator::generate;
+pub use index::SchedIndex;
 pub use job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskRef, TaskState};
 pub use machine::{MachineClass, MachinePool};
 pub use sim::{Cluster, SimResult, Simulator};

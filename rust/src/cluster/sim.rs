@@ -25,6 +25,7 @@ use crate::scheduler::Scheduler;
 use crate::stats::{Cdf, Pcg64};
 
 use super::event::{Event, EventQueue};
+use super::index::SchedIndex;
 use super::job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskRef};
 use super::machine::{Assignment, MachinePool};
 
@@ -47,6 +48,13 @@ pub struct Cluster {
     pub queued: BTreeSet<JobId>,
     /// R(l): jobs with at least one launched task, not yet finished.
     pub running: BTreeSet<JobId>,
+    /// Incremental scheduler indices (speculation candidates, SRPT level-2
+    /// order, χ(l) order), kept current by every mutation below so slot
+    /// hooks cost O(active) instead of O(everything).  Maintained and
+    /// queried only when `cfg.sched_index` is on (the default); with it
+    /// off the retained naive scans run instead, with no index upkeep —
+    /// the true pre-index baseline.  See [`SchedIndex`].
+    pub index: SchedIndex,
     pub(crate) events: EventQueue,
     first_durations: Vec<Vec<f64>>,
     job_rngs: Vec<Pcg64>,
@@ -80,6 +88,7 @@ impl Cluster {
             let mut sd_rng = Pcg64::new(cfg.seed, 0x510d);
             machines.sample_slowdowns(sd, &mut sd_rng);
         }
+        let index = SchedIndex::new(jobs.len());
         Cluster {
             machines,
             cfg,
@@ -87,6 +96,7 @@ impl Cluster {
             jobs,
             queued: BTreeSet::new(),
             running: BTreeSet::new(),
+            index,
             events: EventQueue::new(),
             first_durations: workload.first_durations,
             job_rngs,
@@ -118,8 +128,40 @@ impl Cluster {
             dist,
             num_tasks,
         }));
-        self.queued.insert(id);
+        self.index.push_job();
+        self.arrive(id);
         id
+    }
+
+    /// A job joins χ(l) (its arrival event fired / a live submission).
+    /// Crate-visible so unit tests can stage arrivals without running the
+    /// event loop; external callers go through the simulator / `add_job`.
+    ///
+    /// Index maintenance (here and in the other mutation points) is gated
+    /// on `cfg.sched_index`, so the `false` setting reproduces the true
+    /// pre-index code — scans only, no index upkeep — which is what the
+    /// bench suite's `scan` cells and the equivalence reference measure.
+    pub(crate) fn arrive(&mut self, id: JobId) {
+        self.queued.insert(id);
+        if self.cfg.sched_index {
+            self.index.job_arrived(&self.jobs[id.0 as usize]);
+        }
+    }
+
+    /// A first copy crossed its detection checkpoint.  Returns true when
+    /// the reveal took effect (the copy is still running and its task not
+    /// done) — the caller then fires the scheduler's `on_reveal` hook.
+    fn reveal_copy(&mut self, t: TaskRef, copy: u32) -> bool {
+        let tstate = &mut self.jobs[t.job.0 as usize].tasks[t.task as usize];
+        if tstate.done || tstate.copies[copy as usize].phase != CopyPhase::Running {
+            self.events.note_stale_popped();
+            return false;
+        }
+        tstate.copies[copy as usize].revealed = true;
+        if self.cfg.sched_index {
+            self.index.sync_task(&self.jobs[t.job.0 as usize], t);
+        }
+        true
     }
 
     /// Live mode: process all pending events up to (and including) time `t`
@@ -132,14 +174,10 @@ impl Cluster {
             let (time, event) = self.events.pop().unwrap();
             self.clock = time;
             match event {
-                Event::Arrival(id) => {
-                    self.queued.insert(id);
-                }
+                Event::Arrival(id) => self.arrive(id),
                 Event::CopyFinish { task, copy } => self.copy_finished(task, copy),
                 Event::Checkpoint { task, copy } => {
-                    let tstate = &mut self.jobs[task.job.0 as usize].tasks[task.task as usize];
-                    if !tstate.done && tstate.copies[copy as usize].phase == CopyPhase::Running {
-                        tstate.copies[copy as usize].revealed = true;
+                    if self.reveal_copy(task, copy) {
                         sched.on_reveal(self, task);
                     }
                 }
@@ -149,12 +187,22 @@ impl Cluster {
         self.clock = t;
     }
 
-    /// Total queued (unlaunched) tasks — the backpressure signal.
+    /// Total queued (unlaunched) tasks — the backpressure signal.  O(1)
+    /// from the index counter; the retained scan double-checks it in
+    /// debug builds and serves as the `sched_index = false` reference.
     pub fn queued_tasks(&self) -> usize {
-        self.queued
-            .iter()
-            .map(|id| self.job(*id).spec.num_tasks as usize)
-            .sum()
+        let scan = || -> usize {
+            self.queued
+                .iter()
+                .map(|id| self.job(*id).spec.num_tasks as usize)
+                .sum()
+        };
+        if self.cfg.sched_index {
+            debug_assert_eq!(self.index.queued_task_count(), scan());
+            self.index.queued_task_count()
+        } else {
+            scan()
+        }
     }
 
     // ----- queries -------------------------------------------------------
@@ -174,6 +222,12 @@ impl Cluster {
     }
 
     /// chi(l) sorted by increasing total workload (SCA/SDA/ESE level 3).
+    ///
+    /// This is the **naive-scan reference**: O(|χ| log |χ|) per call.  The
+    /// production path snapshots [`SchedIndex::queued_jobs`] into a reused
+    /// scratch buffer instead (see [`Cluster::snapshot_queued`]); the two
+    /// orders are identical — the index keys by `(workload, id)` under
+    /// `total_cmp`, exactly this stable sort's order.
     pub fn chi_sorted(&self) -> Vec<JobId> {
         let mut v: Vec<JobId> = self.queued.iter().copied().collect();
         v.sort_by(|a, b| {
@@ -183,6 +237,24 @@ impl Cluster {
                 .total_cmp(&self.job(*b).spec.workload())
         });
         v
+    }
+
+    /// χ(l) in workload order via the index (or the scan reference when
+    /// `cfg.sched_index` is off), snapshotted into the index's reused
+    /// scratch buffer.  Return it with [`Cluster::put_scratch`] when done.
+    pub fn snapshot_queued(&mut self) -> Vec<JobId> {
+        let mut buf = self.index.take_scratch();
+        if self.cfg.sched_index {
+            buf.extend(self.index.queued_jobs());
+        } else {
+            buf.extend(self.chi_sorted());
+        }
+        buf
+    }
+
+    /// Hand a snapshot buffer back for reuse by the next slot hook.
+    pub fn put_scratch(&mut self, buf: Vec<JobId>) {
+        self.index.put_scratch(buf);
     }
 
     // Remaining-time estimation used to live here as `est_remaining*` /
@@ -248,6 +320,11 @@ impl Cluster {
             self.queued.remove(&t.job);
             self.running.insert(t.job);
         }
+        if self.cfg.sched_index {
+            let job = &self.jobs[ji];
+            self.index.sync_task(job, t);
+            self.index.sync_job(job);
+        }
         true
     }
 
@@ -295,12 +372,48 @@ impl Cluster {
         }
         c.phase = CopyPhase::Killed;
         let used = c.elapsed(now).min(c.duration);
+        let machine = c.machine;
+        // the kill strands this copy's pending CopyFinish in the heap, and
+        // its Checkpoint too if it had not revealed yet (checkpoints fire
+        // strictly before finishes, so unrevealed == checkpoint pending)
+        let stranded = if copy == 0 && !c.revealed { 2 } else { 1 };
         job.machine_time += used;
         self.total_machine_time += used;
         if copy > 0 {
             self.outstanding_backups -= 1;
         }
-        self.machines.release(c.machine);
+        self.machines.release(machine);
+        self.events.note_stale(stranded);
+        if self.cfg.sched_index {
+            self.index.sync_task(&self.jobs[t.job.0 as usize], t);
+        }
+        self.maybe_compact_events();
+    }
+
+    /// Compact the event heap once stale (killed-copy) entries outnumber
+    /// live ones.  Removes only events that would pop as no-ops, so the
+    /// simulation is bit-identical with or without compaction; the heap
+    /// length, however, now tracks *active* copies rather than copies ever
+    /// launched (see `EventQueue`).
+    fn maybe_compact_events(&mut self) {
+        if !self.events.should_compact() {
+            return;
+        }
+        let jobs = &self.jobs;
+        // Liveness is the copy's phase alone — deliberately NOT `!done`:
+        // when a completion's sibling-kill loop triggers compaction midway,
+        // the not-yet-killed siblings (done task, still Running) must stay
+        // in the heap, because their kill_copy calls will note_stale them
+        // afterwards; removing them early would leave the stale counter
+        // permanently overcounting.  A done task retains no other entries
+        // (the finished copy's events have fired), so phase is exact.
+        self.events.retain_live(|ev| match *ev {
+            Event::CopyFinish { task, copy } | Event::Checkpoint { task, copy } => {
+                jobs[task.job.0 as usize].tasks[task.task as usize].copies[copy as usize].phase
+                    == CopyPhase::Running
+            }
+            Event::Arrival(_) | Event::SlotTick => true,
+        });
     }
 
     /// Handle a copy completing at the current clock.
@@ -313,7 +426,10 @@ impl Cluster {
             let job = &mut self.jobs[ji];
             let task = &mut job.tasks[t.task as usize];
             if task.done || task.copies[copy as usize].phase != CopyPhase::Running {
-                return; // stale event (sibling finished first / copy killed)
+                // stale event (sibling finished first / copy killed) that
+                // outlived compaction
+                self.events.note_stale_popped();
+                return;
             }
             task.copies[copy as usize].phase = CopyPhase::Finished;
             let dur = task.copies[copy as usize].duration;
@@ -353,6 +469,11 @@ impl Cluster {
                 });
             }
         }
+        if self.cfg.sched_index {
+            let job = &self.jobs[ji];
+            self.index.sync_task(job, t);
+            self.index.sync_job(job);
+        }
     }
 }
 
@@ -367,6 +488,17 @@ pub struct SimResult {
     /// Machine-time / (M * horizon).
     pub utilization: f64,
     pub horizon: f64,
+    /// Events popped by the run loop — the perf harness's throughput
+    /// numerator (events/sec).  A pure function of the simulated system,
+    /// identical across `sched_index` on/off.
+    pub events_processed: u64,
+    /// High-water mark of the event heap (must track active copies, not
+    /// copies ever launched — see `EventQueue` hygiene).
+    pub peak_event_queue: usize,
+    /// Wall-clock spent inside the scheduler's `on_slot` hook — where the
+    /// O(everything) scans used to live.  Timing only; never fed back
+    /// into the simulation.
+    pub slot_hook_secs: f64,
 }
 
 impl SimResult {
@@ -425,30 +557,28 @@ impl Simulator {
     pub fn run(mut self) -> SimResult {
         let horizon = self.cluster.cfg.horizon;
         let slot_dt = self.cluster.cfg.slot_dt;
+        let mut events_processed: u64 = 0;
+        let mut slot_hook = std::time::Duration::ZERO;
         while let Some((time, event)) = self.cluster.events.pop() {
             if time > horizon {
                 break;
             }
             self.cluster.clock = time;
+            events_processed += 1;
             match event {
-                Event::Arrival(id) => {
-                    self.cluster.queued.insert(id);
-                }
+                Event::Arrival(id) => self.cluster.arrive(id),
                 Event::CopyFinish { task, copy } => {
                     self.cluster.copy_finished(task, copy);
                 }
                 Event::Checkpoint { task, copy } => {
-                    let ji = task.job.0 as usize;
-                    let tstate = &mut self.cluster.jobs[ji].tasks[task.task as usize];
-                    if !tstate.done
-                        && tstate.copies[copy as usize].phase == CopyPhase::Running
-                    {
-                        tstate.copies[copy as usize].revealed = true;
+                    if self.cluster.reveal_copy(task, copy) {
                         self.scheduler.on_reveal(&mut self.cluster, task);
                     }
                 }
                 Event::SlotTick => {
+                    let t0 = std::time::Instant::now();
                     self.scheduler.on_slot(&mut self.cluster);
+                    slot_hook += t0.elapsed();
                     let next = time + slot_dt;
                     if next <= horizon {
                         self.cluster.events.push(next, Event::SlotTick);
@@ -470,6 +600,9 @@ impl Simulator {
             total_machine_time: cl.total_machine_time,
             speculative_launches: cl.speculative_launches,
             horizon,
+            events_processed,
+            peak_event_queue: cl.events.peak_len(),
+            slot_hook_secs: slot_hook.as_secs_f64(),
         }
     }
 }
@@ -533,6 +666,46 @@ mod tests {
         let b = run_with(scheduler::SchedulerKind::Naive);
         assert_eq!(a.completed.len(), b.completed.len());
         assert_eq!(a.total_machine_time, b.total_machine_time);
+    }
+
+    #[test]
+    fn run_reports_perf_instrumentation() {
+        let res = run_with(scheduler::SchedulerKind::Sda);
+        assert!(res.events_processed > 0, "run loop should count events");
+        assert!(res.peak_event_queue > 0, "heap high-water mark should be set");
+        assert!(res.slot_hook_secs >= 0.0);
+        // events are a pure function of the simulated system, so the
+        // count is identical across repeat runs
+        assert_eq!(res.events_processed, run_with(scheduler::SchedulerKind::Sda).events_processed);
+    }
+
+    /// Mid-run spot check of the index ⇄ scan agreement: drive a live
+    /// cluster with `advance_to` and compare the index's χ(l) order and
+    /// queued-task counter against the naive scans at every step.
+    #[test]
+    fn index_matches_scans_under_advance_to() {
+        let mut cfg = small_cfg();
+        cfg.machines = 10;
+        cfg.horizon = f64::INFINITY;
+        cfg.scheduler = scheduler::SchedulerKind::Sda;
+        cfg.use_runtime = false;
+        let mut sched = scheduler::build(&cfg, &WorkloadConfig::paper(0.3)).unwrap();
+        let mut cl = Cluster::new_live(cfg);
+        let mut rng = crate::stats::Pcg64::new(9, 0);
+        for step in 0..120u32 {
+            if step % 3 == 0 {
+                cl.add_job(1.0 + rng.next_f64(), 2.0, 1 + (step % 7));
+            }
+            let t = cl.clock + 0.5;
+            cl.advance_to(t, sched.as_mut());
+            sched.on_slot(&mut cl);
+            let indexed: Vec<JobId> = cl.index.queued_jobs().collect();
+            assert_eq!(indexed, cl.chi_sorted(), "χ(l) order diverged at step {step}");
+            let scan_tasks: usize =
+                cl.queued.iter().map(|id| cl.job(*id).spec.num_tasks as usize).sum();
+            assert_eq!(cl.index.queued_task_count(), scan_tasks);
+        }
+        assert!(!cl.completed.is_empty(), "live cluster should complete jobs");
     }
 
     #[test]

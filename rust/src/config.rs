@@ -77,6 +77,12 @@ pub struct SimConfig {
     pub p2_batch: usize,
     /// Collect a per-job record stream (disable for huge sweeps).
     pub record_jobs: bool,
+    /// Drive scheduler slot hooks from the incremental `SchedIndex`
+    /// (O(active) queries — the default) instead of the retained naive
+    /// full scans (O(everything) — the equivalence reference).  Both paths
+    /// make bit-identical scheduling decisions; see `cluster::index` and
+    /// the equivalence suite in `tests/experiment_integration.rs`.
+    pub sched_index: bool,
 }
 
 impl Default for SimConfig {
@@ -106,6 +112,7 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".to_string(),
             p2_batch: 64,
             record_jobs: true,
+            sched_index: true,
         }
     }
 }
@@ -223,6 +230,7 @@ impl SimConfig {
                 }
                 "p2_batch" => cfg.p2_batch = doc.i64(key).ok_or("p2_batch: int")? as usize,
                 "record_jobs" => cfg.record_jobs = doc.bool(key).ok_or("record_jobs: bool")?,
+                "sched_index" => cfg.sched_index = doc.bool(key).ok_or("sched_index: bool")?,
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -274,6 +282,7 @@ impl SimConfig {
         let _ = writeln!(s, "artifacts_dir = \"{}\"", self.artifacts_dir);
         let _ = writeln!(s, "p2_batch = {}", self.p2_batch);
         let _ = writeln!(s, "record_jobs = {}", self.record_jobs);
+        let _ = writeln!(s, "sched_index = {}", self.sched_index);
         s
     }
 }
@@ -465,6 +474,15 @@ mod tests {
         assert!(SimConfig::from_toml("slowdown = \"0.1x0.5\"").is_err());
         let cfg = SimConfig::from_toml("slowdown = \"0.25x3.0\"").unwrap();
         assert_eq!(cfg.slowdown, Some(SlowdownConfig::new(0.25, 3.0)));
+    }
+
+    #[test]
+    fn sched_index_flag_roundtrips() {
+        assert!(SimConfig::default().sched_index, "index path is the default");
+        let cfg = SimConfig::from_toml("sched_index = false").unwrap();
+        assert!(!cfg.sched_index);
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert!(!back.sched_index);
     }
 
     #[test]

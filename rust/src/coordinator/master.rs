@@ -128,6 +128,7 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
     let jobs_rejected = metrics.counter("jobs_rejected");
     let q_depth = metrics.gauge("queued_tasks");
     let busy = metrics.gauge("busy_machines");
+    let evq_depth = metrics.gauge("event_queue_len");
     let mut slots: u64 = 0;
     let mut draining = false;
     let mut drain_left = master.drain_slots;
@@ -166,8 +167,11 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
         sched.on_slot(&mut cluster);
         slots += 1;
         jobs_done.add(cluster.completed.len() as u64 - jobs_done.get());
+        // O(1) reads: queued_tasks comes off the SchedIndex counter, and
+        // stale-entry compaction keeps the event heap tracking live copies
         q_depth.set(cluster.queued_tasks() as i64);
         busy.set(cluster.machines.busy_count() as i64);
+        evq_depth.set(cluster.events.len() as i64);
         if draining {
             let drained = cluster.running.is_empty() && cluster.queued.is_empty();
             if drained || drain_left == 0 {

@@ -70,6 +70,9 @@ impl SweepResult {
             acc.incomplete += c.result.incomplete;
             acc.total_machine_time += c.result.total_machine_time;
             acc.speculative_launches += c.result.speculative_launches;
+            acc.events_processed += c.result.events_processed;
+            acc.peak_event_queue = acc.peak_event_queue.max(c.result.peak_event_queue);
+            acc.slot_hook_secs += c.result.slot_hook_secs;
         }
         acc.utilization =
             cells.iter().map(|c| c.result.utilization).sum::<f64>() / cells.len() as f64;

@@ -41,6 +41,11 @@ COMMANDS
              [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
              [--threads N]
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
+  bench      [--quick] [--out FILE]   standardized throughput suite: every
+             policy x {light lambda=0.3, heavy lambda~0.9*lambda^U} x
+             M in {500, 4000}, each cell on both the SchedIndex hot path
+             and the naive-scan reference; writes machine-readable JSON
+             (default BENCH_sim.json at the cwd)
   trace      --out FILE [--lambda L] [--horizon T] [--seed S]
   serve      [--machines N] [--rate R] [--jobs J] [--scheduler kind]
              [--artifacts-dir DIR]
@@ -58,6 +63,10 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
                                     slower (hidden from schedulers)
   --no-speed-aware                  estimators ignore advertised host speeds
                                     (the unit-naive homogeneous assumption)
+  --no-sched-index                  slot hooks use the retained naive full
+                                    scans instead of the incremental
+                                    SchedIndex (equivalence reference; same
+                                    decisions, slower)
 
 scheduler kinds: naive clone_all mantri late sca sda ese
 threads: 0 = one worker per core";
@@ -106,6 +115,9 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
     }
     if args.has("no-speed-aware") {
         cfg.speed_aware = false;
+    }
+    if args.has("no-sched-index") {
+        cfg.sched_index = false;
     }
     if args.has("no-runtime") {
         cfg.use_runtime = false;
@@ -175,7 +187,8 @@ fn run() -> Result<(), String> {
         println!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(rest, &["no-runtime", "no-speed-aware", "help"])?;
+    let args =
+        Args::parse(rest, &["no-runtime", "no-speed-aware", "no-sched-index", "quick", "help"])?;
     if args.has("help") {
         println!("{USAGE}");
         return Ok(());
@@ -262,6 +275,36 @@ fn run() -> Result<(), String> {
                 "omega_stability = {:.4}\nomega_cutoff    = {:.4}\nlambda^U        = {:.3} jobs/unit",
                 rep.omega_stability, rep.omega_cutoff, rep.lambda_cutoff
             );
+        }
+        "bench" => {
+            let quick = args.has("quick");
+            let out = args.string("out", "BENCH_sim.json");
+            println!(
+                "specsim throughput suite ({}; horizon {}): policies x \
+                 {{light, heavy}} x M in {:?}, indexed vs naive-scan",
+                if quick { "quick" } else { "full" },
+                specsim::util::bench::suite_horizon(quick),
+                specsim::util::bench::SUITE_MACHINES,
+            );
+            println!(
+                "{:<10} {:>5} {:>8} {:>7} {:>14} {:>14} {:>8}",
+                "policy", "M", "lambda", "load", "indexed ev/s", "scan ev/s", "speedup"
+            );
+            let cells = specsim::util::bench::run_throughput_suite(quick, |c| {
+                println!(
+                    "{:<10} {:>5} {:>8.3} {:>7} {:>14.0} {:>14.0} {:>7.2}x",
+                    c.policy,
+                    c.machines,
+                    c.lambda,
+                    c.load,
+                    c.indexed.events_per_sec,
+                    c.scan.events_per_sec,
+                    c.speedup()
+                );
+            })?;
+            let doc = specsim::util::bench::throughput_json(&cells, quick);
+            report::write_file(&out, &format!("{doc}\n")).map_err(|e| e.to_string())?;
+            println!("wrote {} cells to {out}", cells.len());
         }
         "trace" => {
             let out = PathBuf::from(args.str("out").ok_or("trace: --out FILE required")?);

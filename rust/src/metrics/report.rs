@@ -183,6 +183,9 @@ mod tests {
             speculative_launches: 0,
             utilization: 0.5,
             horizon: 10.0,
+            events_processed: 42,
+            peak_event_queue: 7,
+            slot_hook_secs: 0.0,
         };
         let sweep = SweepResult {
             name: "t".into(),

@@ -27,8 +27,10 @@ impl Scheduler for CloneAll {
     fn on_slot(&mut self, cl: &mut Cluster) {
         // level 2 first: keep begun jobs moving (single copies)
         srpt::schedule_running(cl);
-        // then clone whole queued jobs while room remains
-        for id in cl.chi_sorted() {
+        // then clone whole queued jobs while room remains (χ(l) order via
+        // the index snapshot; scan reference when sched_index is off)
+        let chi = cl.snapshot_queued();
+        for &id in &chi {
             if cl.idle() == 0 {
                 break;
             }
@@ -40,6 +42,7 @@ impl Scheduler for CloneAll {
             };
             cl.launch_job_cloned(id, copies);
         }
+        cl.put_scratch(chi);
     }
 }
 

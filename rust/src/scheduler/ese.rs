@@ -31,6 +31,8 @@ pub struct Ese {
     alpha: f64,
     /// Revealed estimator (checkpoint-instrumented), speed-aware per config.
     est: Box<dyn RemainingTime>,
+    /// Reused D(l) buffer (no per-slot allocation).
+    d: Vec<(f64, TaskRef)>,
     /// Diagnostics.
     pub backups: u64,
     pub small_jobs_cloned: u64,
@@ -47,6 +49,7 @@ impl Ese {
             r_max: cfg.r_max,
             alpha,
             est: estimator::for_policy(cfg, true),
+            d: Vec::new(),
             backups: 0,
             small_jobs_cloned: 0,
         }
@@ -60,26 +63,43 @@ impl Scheduler for Ese {
 
     fn on_slot(&mut self, cl: &mut Cluster) {
         // 1. backup candidates D(l), longest estimated remaining first
-        let mut d = Vec::new();
-        for id in cl.running.iter() {
-            let job = cl.job(*id);
-            let threshold = self.sigma * job.spec.dist.mean();
-            for (ti, task) in job.tasks.iter().enumerate() {
-                if task.done || task.copies.len() != 1 {
-                    continue;
+        self.d.clear();
+        if cl.cfg.sched_index {
+            // O(active): only single-running-first-copy tasks, same
+            // (job asc, task asc) order as the scan
+            for id in cl.running.iter() {
+                let threshold = self.sigma * cl.job(*id).spec.dist.mean();
+                for ti in cl.index.candidates(*id) {
+                    let t = TaskRef { job: *id, task: ti };
+                    let rem = self.est.task_remaining_work(cl, t);
+                    if rem > threshold {
+                        self.d.push((rem, t));
+                    }
                 }
-                if task.copies[0].phase != CopyPhase::Running {
-                    continue;
-                }
-                let t = TaskRef { job: *id, task: ti as u32 };
-                let rem = self.est.task_remaining_work(cl, t);
-                if rem > threshold {
-                    d.push((rem, t));
+            }
+        } else {
+            // naive-scan reference
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                let threshold = self.sigma * job.spec.dist.mean();
+                for (ti, task) in job.tasks.iter().enumerate() {
+                    if task.done || task.copies.len() != 1 {
+                        continue;
+                    }
+                    if task.copies[0].phase != CopyPhase::Running {
+                        continue;
+                    }
+                    let t = TaskRef { job: *id, task: ti as u32 };
+                    let rem = self.est.task_remaining_work(cl, t);
+                    if rem > threshold {
+                        self.d.push((rem, t));
+                    }
                 }
             }
         }
-        d.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        for (_, t) in d {
+        // NaN-safe descending sort (total_cmp, not partial_cmp().unwrap())
+        self.d.sort_by(|a, b| b.0.total_cmp(&a.0));
+        for &(_, t) in &self.d {
             if cl.idle() == 0 {
                 return;
             }
@@ -93,12 +113,12 @@ impl Scheduler for Ese {
             return;
         }
         // 3. queued jobs; clone the small ones per Eq. 29
-        let chi = cl.chi_sorted();
+        let chi = cl.snapshot_queued();
         let chi_len = chi.len().max(1) as f64;
-        for id in chi {
+        for &id in &chi {
             let idle = cl.idle();
             if idle == 0 {
-                return;
+                break;
             }
             let job = cl.job(id);
             let m = job.spec.num_tasks as f64;
@@ -121,6 +141,7 @@ impl Scheduler for Ese {
                 cl.launch_unlaunched(id, idle);
             }
         }
+        cl.put_scratch(chi);
     }
 }
 

@@ -21,6 +21,10 @@ pub struct Late {
     slow_percentile: f64,
     /// Blind estimator (no checkpoint), speed-aware per config.
     est: Box<dyn RemainingTime>,
+    /// Reused per-slot buffers (no allocation in the hot hook).
+    rates: Vec<(f64, f64, TaskRef)>,
+    sorted_rates: Vec<f64>,
+    cands: Vec<(f64, TaskRef)>,
 }
 
 impl Late {
@@ -29,6 +33,9 @@ impl Late {
             speculative_cap: cfg.late_speculative_cap,
             slow_percentile: cfg.late_slow_percentile,
             est: estimator::for_policy(cfg, false),
+            rates: Vec::new(),
+            sorted_rates: Vec::new(),
+            cands: Vec::new(),
         }
     }
 
@@ -56,35 +63,58 @@ impl Scheduler for Late {
 
     fn on_slot(&mut self, cl: &mut Cluster) {
         // gather progress rates of all single-copy running tasks
-        let mut rates = Vec::new();
-        for id in cl.running.iter() {
-            let job = cl.job(*id);
-            for (ti, task) in job.tasks.iter().enumerate() {
-                if task.done || task.copies.len() != 1 {
-                    continue;
+        self.rates.clear();
+        if cl.cfg.sched_index {
+            // O(active): the index yields exactly the single-running-first-
+            // copy tasks, in the scan's (job asc, task asc) order
+            for id in cl.running.iter() {
+                for ti in cl.index.candidates(*id) {
+                    let t = TaskRef { job: *id, task: ti };
+                    if let Some((rate, rem)) = self.progress_rate(cl, t) {
+                        self.rates.push((rate, rem, t));
+                    }
                 }
-                let t = TaskRef { job: *id, task: ti as u32 };
-                if let Some((rate, rem)) = self.progress_rate(cl, t) {
-                    rates.push((rate, rem, t));
+            }
+        } else {
+            // naive-scan reference (the phase filter mirrors the index's
+            // candidate definition; progress_rate would reject non-running
+            // copies anyway, so this is behavior-neutral symmetry)
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                for (ti, task) in job.tasks.iter().enumerate() {
+                    if task.done || task.copies.len() != 1 {
+                        continue;
+                    }
+                    if task.copies[0].phase != CopyPhase::Running {
+                        continue;
+                    }
+                    let t = TaskRef { job: *id, task: ti as u32 };
+                    if let Some((rate, rem)) = self.progress_rate(cl, t) {
+                        self.rates.push((rate, rem, t));
+                    }
                 }
             }
         }
-        if !rates.is_empty() {
+        if !self.rates.is_empty() {
             // slowTaskThreshold: the `slow_percentile` quantile of rates
-            let mut sorted: Vec<f64> = rates.iter().map(|(r, _, _)| *r).collect();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let idx = ((sorted.len() as f64 * self.slow_percentile) as usize)
-                .min(sorted.len() - 1);
-            let threshold = sorted[idx];
+            // (NaN-safe total_cmp sorts throughout)
+            self.sorted_rates.clear();
+            self.sorted_rates.extend(self.rates.iter().map(|(r, _, _)| *r));
+            self.sorted_rates.sort_by(|a, b| a.total_cmp(b));
+            let idx = ((self.sorted_rates.len() as f64 * self.slow_percentile) as usize)
+                .min(self.sorted_rates.len() - 1);
+            let threshold = self.sorted_rates[idx];
             let cap = (self.speculative_cap * cl.machines.total() as f64) as usize;
             // longest remaining first among the slow ones
-            let mut cands: Vec<(f64, TaskRef)> = rates
-                .into_iter()
-                .filter(|(r, _, _)| *r < threshold)
-                .map(|(_, rem, t)| (rem, t))
-                .collect();
-            cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-            for (_, t) in cands {
+            self.cands.clear();
+            self.cands.extend(
+                self.rates
+                    .iter()
+                    .filter(|(r, _, _)| *r < threshold)
+                    .map(|&(_, rem, t)| (rem, t)),
+            );
+            self.cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+            for &(_, t) in &self.cands {
                 if cl.idle() == 0 || cl.outstanding_backups >= cap {
                     break;
                 }

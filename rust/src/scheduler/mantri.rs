@@ -31,6 +31,8 @@ pub struct Mantri {
     srpt: bool,
     /// Blind estimator (no checkpoint), speed-aware per config.
     est: Box<dyn RemainingTime>,
+    /// Reused duplicate-candidate buffer (no per-slot allocation).
+    cands: Vec<(f64, TaskRef)>,
 }
 
 impl Mantri {
@@ -40,6 +42,7 @@ impl Mantri {
             kill: cfg.mantri_kill,
             srpt: cfg.mantri_srpt,
             est: estimator::for_policy(cfg, false),
+            cands: Vec::new(),
         }
     }
 }
@@ -51,25 +54,42 @@ impl Scheduler for Mantri {
 
     fn on_slot(&mut self, cl: &mut Cluster) {
         // 1. duplicates for outliers (resource-saving test), longest first
-        let mut cands = Vec::new();
-        for id in cl.running.iter() {
-            let job = cl.job(*id);
-            let two_means = 2.0 * job.spec.dist.mean();
-            for (ti, task) in job.tasks.iter().enumerate() {
-                if task.done || task.copies.len() != 1 {
-                    continue;
+        self.cands.clear();
+        if cl.cfg.sched_index {
+            // O(active): only tasks whose sole copy is a running first
+            // copy, in the same (job asc, task asc) order as the scan
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                let two_means = 2.0 * job.spec.dist.mean();
+                for ti in cl.index.candidates(*id) {
+                    let t = TaskRef { job: *id, task: ti };
+                    if self.est.task_prob_exceeds(cl, t, two_means) > self.delta {
+                        self.cands.push((self.est.task_remaining_work(cl, t), t));
+                    }
                 }
-                if task.copies[0].phase != CopyPhase::Running {
-                    continue;
-                }
-                let t = TaskRef { job: *id, task: ti as u32 };
-                if self.est.task_prob_exceeds(cl, t, two_means) > self.delta {
-                    cands.push((self.est.task_remaining_work(cl, t), t));
+            }
+        } else {
+            // naive-scan reference: every task of every running job
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                let two_means = 2.0 * job.spec.dist.mean();
+                for (ti, task) in job.tasks.iter().enumerate() {
+                    if task.done || task.copies.len() != 1 {
+                        continue;
+                    }
+                    if task.copies[0].phase != CopyPhase::Running {
+                        continue;
+                    }
+                    let t = TaskRef { job: *id, task: ti as u32 };
+                    if self.est.task_prob_exceeds(cl, t, two_means) > self.delta {
+                        self.cands.push((self.est.task_remaining_work(cl, t), t));
+                    }
                 }
             }
         }
-        cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        for (rem, t) in cands {
+        // NaN-safe descending sort (total_cmp, not partial_cmp().unwrap())
+        self.cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+        for &(rem, t) in &self.cands {
             // the restart rule frees its own machine, so it applies even
             // when the cluster is full (kill the hopeless original, then
             // relaunch afresh on the freed slot)

@@ -30,6 +30,17 @@
 //! `cfg.speed_aware` (default true) selects the class-speed-corrected
 //! estimator variants — a no-op on the paper's homogeneous cluster; see
 //! [`crate::estimator`] for the full observation contract.
+//!
+//! ## Hot paths
+//!
+//! With `cfg.sched_index` on (the default) every slot hook queries the
+//! cluster's incremental [`SchedIndex`](crate::cluster::index::SchedIndex)
+//! — speculation-candidate sets and pre-ordered job sets maintained at the
+//! mutation points — so per-slot cost is O(what's actually active), and
+//! reused scratch buffers keep the hooks allocation-free.  Setting
+//! `sched_index = false` selects the retained naive full scans; both paths
+//! make bit-identical decisions (the equivalence suite in
+//! `tests/experiment_integration.rs` proves byte-identical sweep CSVs).
 
 pub mod clone_all;
 pub mod ese;

@@ -145,8 +145,11 @@ impl Scheduler for Sca {
         if cl.idle() == 0 {
             return;
         }
-        let chi = cl.chi_sorted();
+        // χ(l) in workload order from the index (scan reference when
+        // sched_index is off), via the reused snapshot buffer
+        let chi = cl.snapshot_queued();
         if chi.is_empty() {
+            cl.put_scratch(chi);
             return;
         }
         let total_tasks: u64 = chi
@@ -157,9 +160,17 @@ impl Scheduler for Sca {
             // 2. room to clone: optimize
             self.clone_by_p2(cl, &chi);
         } else {
-            // 3. tight: smallest workload first, one copy per task
-            srpt::schedule_queued_single(cl);
+            // 3. tight: smallest workload first, one copy per task — the
+            // snapshot *is* that order, so launch straight off it
+            for &id in &chi {
+                let idle = cl.idle();
+                if idle == 0 {
+                    break;
+                }
+                cl.launch_unlaunched(id, idle);
+            }
         }
+        cl.put_scratch(chi);
     }
 }
 

@@ -15,7 +15,10 @@
 //! class: see the `estimator_slowdown` integration tests.
 //!
 //! Levels 2/3 (slotted): the shared smallest-remaining / smallest-workload
-//! SRPT ordering, one copy per task.
+//! SRPT ordering, one copy per task — both served by the cluster's
+//! incremental [`SchedIndex`](crate::cluster::index::SchedIndex) under the
+//! default `sched_index = true` (SDA's own level 1 is event-driven and
+//! O(1) per checkpoint already).
 
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::Cluster;

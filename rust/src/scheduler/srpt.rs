@@ -8,6 +8,14 @@
 //! [`schedule_running_by`]; [`schedule_running`] is the plain mean-field
 //! shorthand (identical key for every estimator — see
 //! `RemainingTime::job_remaining_work`).
+//!
+//! With `cfg.sched_index` on (the default) every level snapshots its job
+//! order from the cluster's incremental [`SchedIndex`](crate::cluster::index::SchedIndex)
+//! into a reused scratch buffer — O(members) per slot, no re-keying, no
+//! sort, no allocation.  The original collect+sort scans are retained
+//! below as the `sched_index = false` equivalence reference; both paths
+//! launch the same copies in the same order (the index orders by the very
+//! `total_cmp` keys the scans stably sort by).
 
 use crate::cluster::job::JobId;
 use crate::cluster::sim::Cluster;
@@ -23,11 +31,40 @@ pub fn schedule_running(cl: &mut Cluster) -> usize {
 /// smallest-remaining-workload-first over `est.job_remaining_work`.  Ties
 /// break by job id (arrival order): keys are computed up-front and sorted
 /// stably over the id-ordered running set.
+///
+/// The indexed path replaces the per-slot collect+sort with the
+/// incrementally-ordered level-2 set.  That is valid because the level-2
+/// key is the mean-field remaining workload for *every* estimator (the
+/// documented contract of [`RemainingTime::job_remaining_work`]); a debug
+/// assertion re-checks the contract against `est` on every slot of a
+/// debug build.
 pub fn schedule_running_by(cl: &mut Cluster, est: &dyn RemainingTime) -> usize {
     let mut launched = 0;
     if cl.idle() == 0 {
         return 0;
     }
+    if cl.cfg.sched_index {
+        let mut buf = cl.index.take_scratch();
+        buf.extend(cl.index.level2_jobs());
+        #[cfg(debug_assertions)]
+        for &id in &buf {
+            debug_assert_eq!(
+                est.job_remaining_work(cl, id).to_bits(),
+                cl.job(id).remaining_workload().to_bits(),
+                "level-2 index key must be the estimator's mean-field job key"
+            );
+        }
+        for &id in &buf {
+            let idle = cl.idle();
+            if idle == 0 {
+                break;
+            }
+            launched += cl.launch_unlaunched(id, idle);
+        }
+        cl.put_scratch(buf);
+        return launched;
+    }
+    // naive-scan reference
     let mut keyed: Vec<(f64, JobId)> = cl
         .running
         .iter()
@@ -54,13 +91,15 @@ pub fn schedule_queued_single(cl: &mut Cluster) -> usize {
     if cl.idle() == 0 {
         return 0;
     }
-    for id in cl.chi_sorted() {
+    let buf = cl.snapshot_queued();
+    for &id in &buf {
         let idle = cl.idle();
         if idle == 0 {
             break;
         }
         launched += cl.launch_unlaunched(id, idle);
     }
+    cl.put_scratch(buf);
     launched
 }
 
@@ -73,37 +112,48 @@ pub fn schedule_running_fifo(cl: &mut Cluster) -> usize {
     if cl.idle() == 0 {
         return 0;
     }
-    // BTreeSet<JobId> iterates in id order == arrival order
-    let ids: Vec<_> = cl
-        .running
-        .iter()
-        .copied()
-        .filter(|id| cl.job(*id).unlaunched() > 0)
-        .collect();
-    for id in ids {
+    let mut buf = cl.index.take_scratch();
+    if cl.cfg.sched_index {
+        // same membership as level 2, kept in id (= arrival) order
+        buf.extend(cl.index.level2_jobs_fifo());
+    } else {
+        // BTreeSet<JobId> iterates in id order == arrival order
+        buf.extend(
+            cl.running
+                .iter()
+                .copied()
+                .filter(|id| cl.job(*id).unlaunched() > 0),
+        );
+    }
+    for &id in &buf {
         let idle = cl.idle();
         if idle == 0 {
             break;
         }
         launched += cl.launch_unlaunched(id, idle);
     }
+    cl.put_scratch(buf);
     launched
 }
 
-/// FIFO level 3 (arrival order).
+/// FIFO level 3 (arrival order).  `Cluster::queued` is already id-ordered
+/// and O(|χ|) to walk, so both index modes share the same snapshot; the
+/// scratch buffer just kills the per-slot allocation.
 pub fn schedule_queued_fifo(cl: &mut Cluster) -> usize {
     let mut launched = 0;
     if cl.idle() == 0 {
         return 0;
     }
-    let ids: Vec<_> = cl.queued.iter().copied().collect();
-    for id in ids {
+    let mut buf = cl.index.take_scratch();
+    buf.extend(cl.queued.iter().copied());
+    for &id in &buf {
         let idle = cl.idle();
         if idle == 0 {
             break;
         }
         launched += cl.launch_unlaunched(id, idle);
     }
+    cl.put_scratch(buf);
     launched
 }
 
@@ -129,12 +179,13 @@ mod tests {
     #[test]
     fn queued_jobs_fill_idle_machines() {
         let mut cl = cluster_with(100, 2.0, 50.0);
-        // force all arrivals into the queue "now"
+        // force all arrivals into the queue "now" (through arrive(), so
+        // the scheduler index sees them too)
         let ids: Vec<_> = (0..cl.jobs.len() as u32)
             .map(crate::cluster::job::JobId)
             .collect();
         for id in &ids[..4.min(ids.len())] {
-            cl.queued.insert(*id);
+            cl.arrive(*id);
         }
         let launched = schedule_queued_single(&mut cl);
         assert!(launched > 0);
@@ -149,7 +200,7 @@ mod tests {
             .map(crate::cluster::job::JobId)
             .collect();
         for id in &ids {
-            cl.queued.insert(*id);
+            cl.arrive(*id);
         }
         schedule_queued_single(&mut cl);
         // with ample machines everything launches
@@ -163,7 +214,7 @@ mod tests {
     fn level2_picks_up_partial_jobs() {
         let mut cl = cluster_with(5, 1.0, 60.0);
         let id = crate::cluster::job::JobId(0);
-        cl.queued.insert(id);
+        cl.arrive(id);
         schedule_queued_single(&mut cl);
         if cl.jobs[0].spec.num_tasks > 5 {
             assert!(cl.jobs[0].unlaunched() > 0);

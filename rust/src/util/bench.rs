@@ -1,9 +1,28 @@
 //! Micro-bench harness (criterion is unavailable offline): warm-up + timed
 //! iterations with mean/median/min reporting and a simple guard against
-//! dead-code elimination.
+//! dead-code elimination — plus the standardized **simulator throughput
+//! suite** behind the `bench` CLI subcommand, whose machine-readable
+//! artifact (`BENCH_sim.json`) seeds the repo's perf trajectory.
+//!
+//! The suite runs every policy over {light λ = 0.3, heavy λ ≈ 0.9·λ^U} ×
+//! M ∈ {500, 4000}, each cell **twice** — once on the incremental
+//! `SchedIndex` hot path (the default) and once on the retained naive-scan
+//! reference (`sched_index = false`) — so one artifact carries both the
+//! absolute events/sec numbers and the index speedup, measured by the
+//! identical harness on the identical pre-sampled workload.  Cells run
+//! sequentially on purpose: concurrent cells would contaminate each
+//! other's wall-clock.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
+
+use crate::analysis::threshold;
+use crate::cluster::generator;
+use crate::cluster::sim::{SimResult, Simulator, Workload};
+use crate::config::{SimConfig, WorkloadConfig};
+use crate::scheduler::{self, SchedulerKind};
+
+use super::json::Json;
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
@@ -53,6 +72,188 @@ pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Meas
     m
 }
 
+// ----- the standardized simulator-throughput suite -----------------------
+
+/// Schema tag written into `BENCH_sim.json` so downstream tooling can
+/// detect format drift.
+pub const BENCH_SCHEMA: &str = "specsim-bench-v1";
+
+/// The suite's machine-count axis.
+pub const SUITE_MACHINES: [usize; 2] = [500, 4000];
+
+/// The suite's light-load arrival rate (jobs per time unit).
+pub const LIGHT_LAMBDA: f64 = 0.3;
+
+/// Heavy-load arrival rate for `machines`: 90% of the analytic ESE cutoff
+/// λ^U for the paper's job mix (Sec. III-B) — near-threshold load, the
+/// regime where the naive scans blow up.
+pub fn heavy_lambda(machines: usize) -> f64 {
+    let mix = WorkloadConfig::paper(1.0);
+    0.9 * threshold::cutoff_lambda(machines, mix.mean_tasks(), mix.mean_duration(), 2.0)
+        .lambda_cutoff
+}
+
+/// One timed simulation of a suite cell (one query path).
+#[derive(Clone, Debug)]
+pub struct ThroughputRun {
+    /// Wall-clock for `Simulator::new` + `run`.
+    pub wall_secs: f64,
+    /// Events the run loop popped.
+    pub events: u64,
+    /// `events / wall_secs` — the headline throughput metric.
+    pub events_per_sec: f64,
+    /// Wall-clock inside the scheduler's `on_slot` hook.
+    pub slot_hook_secs: f64,
+    /// Event-heap high-water mark.
+    pub peak_event_queue: usize,
+    pub completed_jobs: usize,
+}
+
+impl ThroughputRun {
+    fn from_result(res: &SimResult, wall_secs: f64) -> Self {
+        ThroughputRun {
+            wall_secs,
+            events: res.events_processed,
+            events_per_sec: res.events_processed as f64 / wall_secs.max(1e-12),
+            slot_hook_secs: res.slot_hook_secs,
+            peak_event_queue: res.peak_event_queue,
+            completed_jobs: res.completed.len(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        m.insert("events".into(), Json::Num(self.events as f64));
+        m.insert("events_per_sec".into(), Json::Num(self.events_per_sec));
+        m.insert("slot_hook_secs".into(), Json::Num(self.slot_hook_secs));
+        m.insert("peak_event_queue".into(), Json::Num(self.peak_event_queue as f64));
+        m.insert("completed_jobs".into(), Json::Num(self.completed_jobs as f64));
+        Json::Obj(m)
+    }
+}
+
+/// One (policy, load, machines) grid cell, measured on both query paths.
+#[derive(Clone, Debug)]
+pub struct ThroughputCell {
+    pub policy: &'static str,
+    /// `"light"` or `"heavy"`.
+    pub load: &'static str,
+    pub lambda: f64,
+    pub machines: usize,
+    /// The `sched_index = true` hot path (the default).
+    pub indexed: ThroughputRun,
+    /// The retained naive-scan reference (`sched_index = false`).
+    pub scan: ThroughputRun,
+}
+
+impl ThroughputCell {
+    /// Index-path speedup over the scan reference (events/sec ratio).
+    pub fn speedup(&self) -> f64 {
+        self.indexed.events_per_sec / self.scan.events_per_sec.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("policy".into(), Json::Str(self.policy.to_string()));
+        m.insert("load".into(), Json::Str(self.load.to_string()));
+        m.insert("lambda".into(), Json::Num(self.lambda));
+        m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("indexed".into(), self.indexed.to_json());
+        m.insert("scan".into(), self.scan.to_json());
+        m.insert("speedup".into(), Json::Num(self.speedup()));
+        Json::Obj(m)
+    }
+}
+
+/// Suite horizon: `--quick` (CI) keeps the whole suite under a couple of
+/// minutes; the full setting is the EXPERIMENTS.md reference length.
+pub fn suite_horizon(quick: bool) -> f64 {
+    if quick {
+        120.0
+    } else {
+        400.0
+    }
+}
+
+/// One timed run of `kind` on `workload` with the given query path.
+pub fn time_simulation(
+    base: &SimConfig,
+    wl_cfg: &WorkloadConfig,
+    workload: Workload,
+    kind: SchedulerKind,
+    sched_index: bool,
+) -> Result<ThroughputRun, String> {
+    let mut cfg = base.clone();
+    cfg.scheduler = kind;
+    cfg.sched_index = sched_index;
+    let sched = scheduler::build_for(&cfg, wl_cfg, Some(&workload))?;
+    let t0 = Instant::now();
+    let res = Simulator::new(cfg, workload, sched).run();
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(ThroughputRun::from_result(&res, wall))
+}
+
+/// Run the standardized suite, invoking `progress` after each finished
+/// cell (the CLI prints a table row).  Policies × {light, heavy} ×
+/// [`SUITE_MACHINES`]; every cell shares its (load, M) pre-sampled
+/// workload across policies and paths.
+pub fn run_throughput_suite(
+    quick: bool,
+    mut progress: impl FnMut(&ThroughputCell),
+) -> Result<Vec<ThroughputCell>, String> {
+    let horizon = suite_horizon(quick);
+    let mut cells = Vec::new();
+    for machines in SUITE_MACHINES {
+        for (load, lambda) in [("light", LIGHT_LAMBDA), ("heavy", heavy_lambda(machines))] {
+            let mut base = SimConfig::default();
+            base.machines = machines;
+            base.horizon = horizon;
+            base.use_runtime = false; // rust P2 twin: no artifact dependency
+            let wl_cfg = WorkloadConfig::paper(lambda);
+            let workload = generator::generate(&wl_cfg, horizon, base.seed);
+            for kind in SchedulerKind::all() {
+                let indexed = time_simulation(&base, &wl_cfg, workload.clone(), kind, true)?;
+                let scan = time_simulation(&base, &wl_cfg, workload.clone(), kind, false)?;
+                let cell = ThroughputCell {
+                    policy: kind.as_str(),
+                    load,
+                    lambda,
+                    machines,
+                    indexed,
+                    scan,
+                };
+                progress(&cell);
+                cells.push(cell);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Serialize a finished suite to the `BENCH_sim.json` document.
+pub fn throughput_json(cells: &[ThroughputCell], quick: bool) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("schema".into(), Json::Str(BENCH_SCHEMA.to_string()));
+    m.insert("suite".into(), Json::Str("throughput".to_string()));
+    // distinguishes a real harness run from the committed schema seed
+    // (which carries `"measured": false`)
+    m.insert("measured".into(), Json::Bool(true));
+    m.insert("quick".into(), Json::Bool(quick));
+    m.insert("horizon".into(), Json::Num(suite_horizon(quick)));
+    m.insert(
+        "note".into(),
+        Json::Str(
+            "indexed = SchedIndex hot path (default); scan = retained naive \
+             full-scan reference (sched_index = false); speedup = ratio of \
+             events_per_sec. Regenerate: cargo run --release -- bench"
+                .to_string(),
+        ),
+    );
+    m.insert("cells".into(), Json::Arr(cells.iter().map(|c| c.to_json()).collect()));
+    Json::Obj(m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +275,54 @@ mod tests {
             x
         });
         assert!(m.min <= m.median);
+    }
+
+    #[test]
+    fn throughput_cell_measures_and_serializes() {
+        let mut base = SimConfig::default();
+        base.machines = 40;
+        base.horizon = 60.0;
+        base.use_runtime = false;
+        let wl_cfg = WorkloadConfig::paper(0.3);
+        let workload = generator::generate(&wl_cfg, base.horizon, 1);
+        let indexed =
+            time_simulation(&base, &wl_cfg, workload.clone(), SchedulerKind::Sda, true).unwrap();
+        let scan = time_simulation(&base, &wl_cfg, workload, SchedulerKind::Sda, false).unwrap();
+        // both paths simulate the identical system: same events popped,
+        // same jobs completed, same heap high-water mark — only the wall
+        // clock may differ
+        assert_eq!(indexed.events, scan.events);
+        assert_eq!(indexed.completed_jobs, scan.completed_jobs);
+        assert_eq!(indexed.peak_event_queue, scan.peak_event_queue);
+        assert!(indexed.events > 0);
+        assert!(indexed.events_per_sec > 0.0);
+        let cell = ThroughputCell {
+            policy: "sda",
+            load: "light",
+            lambda: 0.3,
+            machines: 40,
+            indexed,
+            scan,
+        };
+        assert!(cell.speedup() > 0.0);
+        let doc = throughput_json(&[cell], true);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
+        assert_eq!(back.get("measured"), Some(&Json::Bool(true)));
+        let cells = back.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("policy").unwrap().as_str(), Some("sda"));
+        assert_eq!(cells[0].get("machines").unwrap().as_usize(), Some(40));
+        assert!(cells[0].path(&["indexed", "events_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn heavy_lambda_tracks_cluster_size() {
+        // λ^U is linear in M for a fixed job mix (Eq. 5)
+        let (small, big) = (heavy_lambda(500), heavy_lambda(4000));
+        assert!(small > 0.0);
+        assert!((big / small - 8.0).abs() < 1e-9, "{big} vs {small}");
+        // and the paper's M = 3000 set-up puts the cutoff near 17.8
+        assert!((heavy_lambda(3000) / 0.9 - 17.82).abs() < 0.1);
     }
 }

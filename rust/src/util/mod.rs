@@ -1,6 +1,8 @@
 //! In-tree substrates for functionality the offline build cannot pull from
 //! crates.io: a JSON reader (artifact manifests), a TOML-subset reader
-//! (config files), a CLI flag parser, and a micro-bench timing harness.
+//! (config files), a CLI flag parser, and the bench harness (micro-bench
+//! timing plus the standardized simulator-throughput suite behind the
+//! `bench` CLI subcommand).
 
 pub mod bench;
 pub mod cli;

@@ -1,8 +1,12 @@
 //! Integration tests for the experiment engine: determinism under
-//! parallelism (the acceptance bar for every sweep the figures run) and
-//! the scenario axes (heterogeneous machine speeds, bursty arrivals).
+//! parallelism (the acceptance bar for every sweep the figures run), the
+//! scenario axes (heterogeneous machine speeds, bursty arrivals), and the
+//! **index-equivalence suite** — the indexed scheduler hot paths
+//! (`sched_index = true`, the default) must produce byte-identical
+//! `sweep_csv` tables to the retained naive-scan reference across every
+//! policy, scenario axis and worker count.
 
-use specsim::cluster::machine::MachineClass;
+use specsim::cluster::machine::{MachineClass, SlowdownConfig};
 use specsim::config::{SimConfig, WorkloadConfig};
 use specsim::experiment::{
     ClusterScenario, ExperimentSpec, LoadPoint, PolicyVariant, Runner,
@@ -130,6 +134,119 @@ fn mixed_cluster_between_homogeneous_extremes() {
     let mixed =
         run_with(vec![MachineClass::new(60, 1.0), MachineClass::new(60, 2.0)]);
     assert!(fast < mixed && mixed < slow, "fast {fast} < mixed {mixed} < slow {slow}");
+}
+
+// ----- index-equivalence suite ------------------------------------------
+//
+// The tentpole guarantee of the SchedIndex subsystem: with the identical
+// spec, `sched_index = true` (incremental indices) and `sched_index =
+// false` (the retained naive scans) must serialize byte-identical sweep
+// tables — same launches, same tie-breaks, same everything.
+
+/// Every scheduler kind plus the ablation variants that exercise the
+/// extra index paths: Mantri's SRPT baseline (level-2/3 through the
+/// index), Mantri's kill rule (kill_copy + relaunch on a candidate task)
+/// and the unit-naive estimator row.
+fn equivalence_policies() -> Vec<PolicyVariant> {
+    let mut policies: Vec<PolicyVariant> =
+        SchedulerKind::all().into_iter().map(PolicyVariant::kind).collect();
+    policies.push(PolicyVariant::patched("mantri_srpt", SchedulerKind::Mantri, |c| {
+        c.mantri_srpt = true;
+    }));
+    policies.push(PolicyVariant::patched("mantri_kill", SchedulerKind::Mantri, |c| {
+        c.mantri_kill = true;
+    }));
+    policies.push(PolicyVariant::patched("sda_unit_naive", SchedulerKind::Sda, |c| {
+        c.speed_aware = false;
+    }));
+    policies
+}
+
+fn equivalence_spec(
+    name: &str,
+    scenario: ClusterScenario,
+    loads: Vec<LoadPoint>,
+    threads: usize,
+) -> ExperimentSpec {
+    let mut base = SimConfig::default();
+    base.machines = 100;
+    base.horizon = 100.0;
+    base.use_runtime = false;
+    let mut spec = ExperimentSpec::new(name, base);
+    spec.scenario = scenario;
+    spec.policies = equivalence_policies();
+    spec.loads = loads;
+    spec.seeds = vec![7];
+    spec.threads = threads;
+    spec
+}
+
+fn csv_with_index(spec: &ExperimentSpec, sched_index: bool) -> String {
+    let mut spec = spec.clone();
+    spec.base.sched_index = sched_index;
+    report::sweep_csv(&Runner::run(&spec).unwrap())
+}
+
+/// All policies × {light, near-capacity} × every scenario axis: the
+/// indexed sweep table is byte-identical to the naive-scan reference.
+#[test]
+fn indexed_sweeps_byte_identical_to_scan_reference() {
+    // capacity at M = 100 for the paper mix is ~0.79 jobs/unit: 0.4 is
+    // light, 0.75 is near-threshold (queues build, level 3 stays busy)
+    let scenarios: Vec<(&str, ClusterScenario, Vec<LoadPoint>)> = vec![
+        (
+            "homogeneous",
+            ClusterScenario::homogeneous(),
+            vec![LoadPoint::lambda(0.4), LoadPoint::lambda(0.75)],
+        ),
+        (
+            "machine-classes",
+            ClusterScenario::heterogeneous(vec![
+                MachineClass::new(60, 1.0),
+                MachineClass::new(40, 0.5),
+            ]),
+            vec![LoadPoint::lambda(0.5)],
+        ),
+        (
+            "slowdown",
+            ClusterScenario::homogeneous().with_slowdown(SlowdownConfig::new(0.2, 3.0)),
+            vec![LoadPoint::lambda(0.5)],
+        ),
+        (
+            "bursty",
+            ClusterScenario::homogeneous(),
+            vec![LoadPoint::new("bursty0.5", 0.5, WorkloadConfig::bursty_paper(0.5, 3.0))],
+        ),
+    ];
+    for (name, scenario, loads) in scenarios {
+        let spec = equivalence_spec(name, scenario, loads, 2);
+        let scan = csv_with_index(&spec, false);
+        let indexed = csv_with_index(&spec, true);
+        assert!(scan.lines().count() > spec.policies.len(), "{name}: empty sweep?");
+        assert_eq!(
+            indexed, scan,
+            "{name}: indexed scheduling diverged from the naive-scan reference"
+        );
+    }
+}
+
+/// The equivalence must also be independent of the worker count on both
+/// paths (index state is per-cluster, never shared across cells).
+#[test]
+fn indexed_sweep_identical_across_worker_counts() {
+    let loads = vec![LoadPoint::lambda(0.6)];
+    let reference = {
+        let spec = equivalence_spec("wc", ClusterScenario::homogeneous(), loads.clone(), 1);
+        csv_with_index(&spec, false)
+    };
+    for threads in [1, 4] {
+        let spec = equivalence_spec("wc", ClusterScenario::homogeneous(), loads.clone(), threads);
+        assert_eq!(
+            csv_with_index(&spec, true),
+            reference,
+            "threads={threads}: indexed table diverged"
+        );
+    }
 }
 
 /// Policy patches apply per-cell without leaking into neighbours: the

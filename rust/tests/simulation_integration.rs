@@ -163,6 +163,40 @@ fn single_job_sigma_shape() {
     );
 }
 
+/// Event-queue hygiene: under CloneAll at heavy load every completed task
+/// kills a sibling whose `CopyFinish` (and sometimes `Checkpoint`) would
+/// otherwise sit in the heap for its full sampled Pareto duration.  With
+/// stale-entry compaction the heap must track *active* copies: its peak
+/// is bounded by twice the live-event ceiling
+/// (pending arrivals + 2 events per busy machine + the slot tick),
+/// plus the compaction floor — independent of how many copies were ever
+/// launched and killed.
+#[test]
+fn clone_all_heap_tracks_active_copies() {
+    let mut c = cfg(100, 400.0);
+    c.clone_strict = true; // always 2 copies: maximal kill volume
+    let wl = WorkloadConfig::paper(0.6); // heavy for M = 100 (omega ~ 0.76)
+    let workload = generate(&wl, c.horizon, 11);
+    let jobs = workload.specs.len();
+    c.scheduler = SchedulerKind::CloneAll;
+    let sched = scheduler::build(&c, &wl).unwrap();
+    let res = Simulator::new(c, workload, sched).run();
+    assert!(res.speculative_launches > 500, "want heavy kill traffic");
+    // live events <= jobs (arrivals queued up-front) + 2 per machine
+    // (CopyFinish + young Checkpoint) + 1 slot tick; compaction keeps
+    // stale <= max(live, 64), so peak <= 2 * live_ceiling + 64 + margin
+    let live_ceiling = jobs + 2 * 100 + 1;
+    assert!(
+        res.peak_event_queue <= 2 * live_ceiling + 80,
+        "heap peak {} vs live ceiling {} (launched {} backups): stale \
+         CopyFinish entries are accumulating",
+        res.peak_event_queue,
+        live_ceiling,
+        res.speculative_launches
+    );
+    assert!(res.events_processed > 0);
+}
+
 /// Slot-granularity ablation: finer slots must not break anything and
 /// should not change the qualitative ordering.
 #[test]
