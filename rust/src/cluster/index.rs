@@ -95,6 +95,17 @@ struct JobIndex {
     /// Membership in the queued-by-workload set (key is the static total
     /// workload, so it needs no stored copy).
     in_queued: bool,
+    /// Per-task contributions to the estimate-driven level-2 key
+    /// (`estimator::revealed_task_workload` values; empty unless the
+    /// index tracks est keys).
+    est_contrib: Vec<f64>,
+    /// Ordered sum of `est_contrib` — the est-keyed level-2 key.  Always
+    /// recomputed as the in-order sum so it is bit-identical to the scan
+    /// path's fresh summation (float addition order matters).
+    est_sum: f64,
+    /// Membership key in the est-keyed level-2 twin (`None` = not a
+    /// member).
+    est_key: Option<F64Key>,
 }
 
 /// Incremental indices over one [`Cluster`](super::sim::Cluster)'s jobs.
@@ -112,6 +123,16 @@ pub struct SchedIndex {
     /// Same membership as `level2`, in plain id (= arrival) order — the
     /// Mantri/LATE FIFO baselines.
     level2_fifo: BTreeSet<JobId>,
+    /// Same membership as `level2`, keyed by the estimate-driven
+    /// reveal-refined workload (`estimator::revealed_job_workload`) — the
+    /// `est-srpt` ordering.  Maintained only when [`track_est_keys`]
+    /// enabled it (an est-srpt pipeline is active); zero upkeep otherwise.
+    ///
+    /// [`track_est_keys`]: Self::track_est_keys
+    level2_est: BTreeSet<(F64Key, JobId)>,
+    /// Whether the est-keyed twin (and the per-job contribution vectors)
+    /// are maintained.
+    track_est: bool,
     /// Queued jobs by (total workload, id) — the χ(l) level-3 order.
     queued: BTreeSet<(F64Key, JobId)>,
     /// Total unlaunched tasks over the queued jobs (backpressure signal).
@@ -133,6 +154,20 @@ impl SchedIndex {
         self.jobs.push(JobIndex::default());
     }
 
+    /// Enable the estimate-driven level-2 twin (the `est-srpt` ordering).
+    /// Must be called before any job arrives; when off (the default) the
+    /// est structures cost nothing.
+    pub fn track_est_keys(&mut self) {
+        debug_assert!(self.queued.is_empty() && self.level2.is_empty());
+        self.track_est = true;
+    }
+
+    /// Is the est-keyed twin maintained?  The cluster's mutation points
+    /// gate their re-key calls on this.
+    pub fn tracks_est(&self) -> bool {
+        self.track_est
+    }
+
     // ----- mutation hooks (called by Cluster) ----------------------------
 
     /// The job joined χ(l) (its `Arrival` event fired / live submission).
@@ -140,8 +175,46 @@ impl SchedIndex {
         let ji = &mut self.jobs[job.spec.id.0 as usize];
         debug_assert!(!ji.in_queued, "job {:?} arrived twice", job.spec.id);
         ji.in_queued = true;
+        if self.track_est {
+            // nothing launched, nothing revealed: every task contributes
+            // E[x] (the same in-order sum the scan path computes)
+            ji.est_contrib = vec![job.spec.dist.mean(); job.spec.num_tasks as usize];
+            ji.est_sum = ji.est_contrib.iter().sum();
+        }
         self.queued.insert((F64Key(job.spec.workload()), job.spec.id));
         self.queued_tasks += job.spec.num_tasks as usize;
+    }
+
+    /// Re-key hook for the estimate-driven ordering: task `t`'s
+    /// contribution to the job's reveal-refined workload changed (a
+    /// checkpoint reveal, a kill, a completion).  The cluster computes
+    /// `contrib` via `estimator::revealed_task_workload` — the same pure
+    /// function the scan path sums — and the stored per-task vector is
+    /// re-summed **in task order** so index key and scan key are
+    /// bit-identical.  No-op unless est tracking is on.
+    pub fn set_est_contrib(&mut self, t: TaskRef, contrib: f64) {
+        if !self.track_est {
+            return;
+        }
+        let id = t.job;
+        let ji = &mut self.jobs[id.0 as usize];
+        // bit-equal contribution ⇒ identical sum: skip the O(m) re-sum.
+        // Most mutations hit this (launches and kills of unrevealed
+        // copies leave the task at E[x]), keeping est upkeep O(changes)
+        // rather than O(m) per event.
+        if ji.est_contrib[t.task as usize].to_bits() == contrib.to_bits() {
+            return;
+        }
+        ji.est_contrib[t.task as usize] = contrib;
+        ji.est_sum = ji.est_contrib.iter().sum();
+        if let Some(old) = ji.est_key {
+            let key = F64Key(ji.est_sum);
+            if old != key {
+                self.level2_est.remove(&(old, id));
+                self.level2_est.insert((key, id));
+                ji.est_key = Some(key);
+            }
+        }
     }
 
     /// Re-derive the task's speculation-candidate status from its state.
@@ -202,6 +275,29 @@ impl SchedIndex {
             }
             (None, false) => {}
         }
+        // est-keyed twin: same membership, reveal-refined key (the key
+        // itself is kept current by set_est_contrib)
+        if self.track_est {
+            let ji = &mut self.jobs[id.0 as usize];
+            let key = F64Key(ji.est_sum);
+            match (ji.est_key, want) {
+                (Some(old), true) if old == key => {}
+                (Some(old), true) => {
+                    self.level2_est.remove(&(old, id));
+                    self.level2_est.insert((key, id));
+                    ji.est_key = Some(key);
+                }
+                (Some(old), false) => {
+                    self.level2_est.remove(&(old, id));
+                    ji.est_key = None;
+                }
+                (None, true) => {
+                    self.level2_est.insert((key, id));
+                    ji.est_key = Some(key);
+                }
+                (None, false) => {}
+            }
+        }
     }
 
     // ----- queries (the O(active) replacements for the scans) ------------
@@ -236,6 +332,21 @@ impl SchedIndex {
     /// (id) order — the FIFO baselines.
     pub fn level2_jobs_fifo(&self) -> impl Iterator<Item = JobId> + '_ {
         self.level2_fifo.iter().copied()
+    }
+
+    /// Same membership as [`level2_jobs`](Self::level2_jobs), smallest
+    /// *reveal-refined* workload first (ties by id) — the `est-srpt`
+    /// ordering.  Empty unless [`track_est_keys`](Self::track_est_keys)
+    /// enabled the twin.
+    pub fn level2_jobs_est(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.level2_est.iter().map(|&(_, id)| id)
+    }
+
+    /// The job's current est-keyed level-2 key, if it is a member — what
+    /// the `schedule_running_est` debug assertion checks against the scan
+    /// path's fresh recomputation (the re-key contract).
+    pub fn est_key(&self, id: JobId) -> Option<f64> {
+        self.jobs[id.0 as usize].est_key.map(|k| k.0)
     }
 
     /// Queued jobs χ(l), smallest total workload first (ties by id).
@@ -416,6 +527,58 @@ mod tests {
         });
         idx.sync_task(&j, TaskRef { job: JobId(0), task: 2 });
         assert_eq!(idx.candidates(JobId(0)).count(), 0);
+    }
+
+    #[test]
+    fn est_twin_tracks_reveals_and_reorders() {
+        let mut idx = SchedIndex::new(2);
+        idx.track_est_keys();
+        assert!(idx.tracks_est());
+        // two 2-task jobs, mean 2.0 each: est keys start at 4.0 apiece
+        let mut j0 = job(0, 2, 2.0);
+        let mut j1 = job(1, 2, 2.0);
+        for j in [&mut j0, &mut j1] {
+            idx.job_arrived(j);
+            launch_first_copy(j, 0, 0.0);
+            idx.sync_task(j, TaskRef { job: j.spec.id, task: 0 });
+            idx.sync_job(j);
+        }
+        // tie on 4.0 -> id order
+        let order: Vec<u32> = idx.level2_jobs_est().map(|id| id.0).collect();
+        assert_eq!(order, vec![0, 1]);
+        assert_eq!(idx.est_key(JobId(0)), Some(4.0));
+        // job 0's first copy reveals a 9.0-work duration: its key jumps to
+        // 9 + 2 = 11 and it sinks below job 1
+        j0.tasks[0].copies[0].duration = 9.0;
+        j0.tasks[0].copies[0].revealed = true;
+        idx.sync_task(&j0, TaskRef { job: JobId(0), task: 0 });
+        idx.set_est_contrib(TaskRef { job: JobId(0), task: 0 }, 9.0);
+        assert_eq!(idx.est_key(JobId(0)), Some(11.0));
+        let order: Vec<u32> = idx.level2_jobs_est().map(|id| id.0).collect();
+        assert_eq!(order, vec![1, 0]);
+        // the mean-field set is untouched by the reveal
+        let mean_field: Vec<u32> = idx.level2_jobs().map(|id| id.0).collect();
+        assert_eq!(mean_field, vec![0, 1]);
+        // fully launching job 0 removes it from both twins
+        launch_first_copy(&mut j0, 1, 0.0);
+        idx.sync_job(&j0);
+        assert_eq!(idx.level2_jobs_est().count(), 1);
+        assert_eq!(idx.est_key(JobId(0)), None);
+    }
+
+    #[test]
+    fn est_twin_off_by_default_costs_nothing() {
+        let mut idx = SchedIndex::new(1);
+        let mut j = job(0, 3, 1.0);
+        idx.job_arrived(&j);
+        launch_first_copy(&mut j, 0, 0.0);
+        idx.sync_job(&j);
+        // no tracking: the twin stays empty and re-keys are no-ops
+        assert!(!idx.tracks_est());
+        assert_eq!(idx.level2_jobs_est().count(), 0);
+        idx.set_est_contrib(TaskRef { job: JobId(0), task: 0 }, 7.0);
+        assert_eq!(idx.est_key(JobId(0)), None);
+        assert_eq!(idx.level2_jobs().count(), 1);
     }
 
     #[test]

@@ -88,7 +88,13 @@ impl Cluster {
             let mut sd_rng = Pcg64::new(cfg.seed, 0x510d);
             machines.sample_slowdowns(sd, &mut sd_rng);
         }
-        let index = SchedIndex::new(jobs.len());
+        let mut index = SchedIndex::new(jobs.len());
+        if cfg.sched_index && cfg.scheduler.uses_est_ordering() {
+            // an est-srpt pipeline is active: maintain the est-keyed
+            // level-2 twin (re-keyed at the reveal/kill/finish mutation
+            // points below); any other policy pays no upkeep
+            index.track_est_keys();
+        }
         Cluster {
             machines,
             cfg,
@@ -160,8 +166,26 @@ impl Cluster {
         tstate.copies[copy as usize].revealed = true;
         if self.cfg.sched_index {
             self.index.sync_task(&self.jobs[t.job.0 as usize], t);
+            self.sync_est(t);
         }
         true
+    }
+
+    /// Est-ordering re-key hook: task `t`'s contribution to the
+    /// reveal-refined level-2 key may have changed (checkpoint reveal,
+    /// kill, completion) — recompute it through the same pure function
+    /// the scan path sums (`estimator::revealed_task_workload`), so the
+    /// maintained key stays bit-identical to a fresh recomputation.
+    /// No-op unless an est-srpt pipeline enabled tracking.
+    fn sync_est(&mut self, t: TaskRef) {
+        if self.index.tracks_est() {
+            let contrib = crate::estimator::revealed_task_workload(
+                &self.jobs[t.job.0 as usize],
+                &self.machines,
+                t.task,
+            );
+            self.index.set_est_contrib(t, contrib);
+        }
     }
 
     /// Live mode: process all pending events up to (and including) time `t`
@@ -323,7 +347,8 @@ impl Cluster {
         if self.cfg.sched_index {
             let job = &self.jobs[ji];
             self.index.sync_task(job, t);
-            self.index.sync_job(job);
+            self.sync_est(t);
+            self.index.sync_job(&self.jobs[ji]);
         }
         true
     }
@@ -386,6 +411,8 @@ impl Cluster {
         self.events.note_stale(stranded);
         if self.cfg.sched_index {
             self.index.sync_task(&self.jobs[t.job.0 as usize], t);
+            // killing a revealed copy reverts the task's est contribution
+            self.sync_est(t);
         }
         self.maybe_compact_events();
     }
@@ -472,7 +499,9 @@ impl Cluster {
         if self.cfg.sched_index {
             let job = &self.jobs[ji];
             self.index.sync_task(job, t);
-            self.index.sync_job(job);
+            // a finished task stops contributing to the est key
+            self.sync_est(t);
+            self.index.sync_job(&self.jobs[ji]);
         }
     }
 }
@@ -480,7 +509,8 @@ impl Cluster {
 /// Aggregated output of one simulation run.
 #[derive(Clone, Debug)]
 pub struct SimResult {
-    pub scheduler: &'static str,
+    /// The policy label — a canonical name or a composition spec string.
+    pub scheduler: String,
     pub completed: Vec<JobRecord>,
     pub incomplete: u64,
     pub total_machine_time: f64,
@@ -593,7 +623,7 @@ impl Simulator {
             .filter(|j| j.spec.arrival <= horizon && j.phase != JobPhase::Done)
             .count() as u64;
         SimResult {
-            scheduler: self.scheduler.name(),
+            scheduler: self.scheduler.name().to_string(),
             utilization: cl.total_machine_time / (cl.machines.total() as f64 * horizon),
             completed: cl.completed,
             incomplete,

@@ -52,7 +52,10 @@ pub struct SimConfig {
     pub eta_small: f64,
     /// ESE small-job gate: `E[x] < xi_small` (paper: 1.0).
     pub xi_small: f64,
-    /// CloneAll in strict mode (always `copies` clones; see Sec. III).
+    /// Clones per task for the `clone_all` policy / the `clone` rule's
+    /// default fixed budget (the Eq. 3 analysis uses 2; must be >= 2).
+    pub clone_copies: u32,
+    /// CloneAll in strict mode (always `clone_copies` clones; see Sec. III).
     pub clone_strict: bool,
     /// Mantri duplicate rule P(t_rem > 2 t_new) > delta (paper: 0.25).
     pub mantri_delta: f64,
@@ -77,6 +80,12 @@ pub struct SimConfig {
     pub p2_batch: usize,
     /// Collect a per-job record stream (disable for huge sweeps).
     pub record_jobs: bool,
+    /// Build the retained monolithic scheduler implementations instead of
+    /// their canonical pipeline compositions — the equivalence reference
+    /// for the policy-pipeline redesign (`tests/pipeline_equivalence.rs`
+    /// proves byte-identical sweep CSVs).  Canonical names only; composed
+    /// policy specs always run the pipeline.
+    pub legacy_sched: bool,
     /// Drive scheduler slot hooks from the incremental `SchedIndex`
     /// (O(active) queries — the default) instead of the retained naive
     /// full scans (O(everything) — the equivalence reference).  Both paths
@@ -102,6 +111,7 @@ impl Default for SimConfig {
             scheduler: SchedulerKind::Naive,
             eta_small: 0.1,
             xi_small: 1.0,
+            clone_copies: 2,
             clone_strict: false,
             mantri_delta: 0.25,
             mantri_kill: false,
@@ -112,6 +122,7 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".to_string(),
             p2_batch: 64,
             record_jobs: true,
+            legacy_sched: false,
             sched_index: true,
         }
     }
@@ -166,6 +177,9 @@ impl SimConfig {
         if self.gamma < 0.0 {
             errs.push("gamma must be >= 0".to_string());
         }
+        if self.clone_copies < 2 {
+            errs.push("clone_copies must be >= 2 (cloning means extra copies)".to_string());
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -214,6 +228,9 @@ impl SimConfig {
                 }
                 "eta_small" => cfg.eta_small = doc.f64(key).ok_or("eta_small: float")?,
                 "xi_small" => cfg.xi_small = doc.f64(key).ok_or("xi_small: float")?,
+                "clone_copies" => {
+                    cfg.clone_copies = doc.i64(key).ok_or("clone_copies: int")? as u32
+                }
                 "clone_strict" => cfg.clone_strict = doc.bool(key).ok_or("clone_strict: bool")?,
                 "mantri_delta" => cfg.mantri_delta = doc.f64(key).ok_or("mantri_delta: float")?,
                 "mantri_kill" => cfg.mantri_kill = doc.bool(key).ok_or("mantri_kill: bool")?,
@@ -230,6 +247,7 @@ impl SimConfig {
                 }
                 "p2_batch" => cfg.p2_batch = doc.i64(key).ok_or("p2_batch: int")? as usize,
                 "record_jobs" => cfg.record_jobs = doc.bool(key).ok_or("record_jobs: bool")?,
+                "legacy_sched" => cfg.legacy_sched = doc.bool(key).ok_or("legacy_sched: bool")?,
                 "sched_index" => cfg.sched_index = doc.bool(key).ok_or("sched_index: bool")?,
                 other => return Err(format!("unknown config key '{other}'")),
             }
@@ -269,9 +287,10 @@ impl SimConfig {
         if let Some(sig) = self.sigma {
             let _ = writeln!(s, "sigma = {sig:?}");
         }
-        let _ = writeln!(s, "scheduler = \"{}\"", self.scheduler.as_str());
+        let _ = writeln!(s, "scheduler = \"{}\"", self.scheduler);
         let _ = writeln!(s, "eta_small = {:?}", self.eta_small);
         let _ = writeln!(s, "xi_small = {:?}", self.xi_small);
+        let _ = writeln!(s, "clone_copies = {}", self.clone_copies);
         let _ = writeln!(s, "clone_strict = {}", self.clone_strict);
         let _ = writeln!(s, "mantri_delta = {:?}", self.mantri_delta);
         let _ = writeln!(s, "mantri_kill = {}", self.mantri_kill);
@@ -282,6 +301,7 @@ impl SimConfig {
         let _ = writeln!(s, "artifacts_dir = \"{}\"", self.artifacts_dir);
         let _ = writeln!(s, "p2_batch = {}", self.p2_batch);
         let _ = writeln!(s, "record_jobs = {}", self.record_jobs);
+        let _ = writeln!(s, "legacy_sched = {}", self.legacy_sched);
         let _ = writeln!(s, "sched_index = {}", self.sched_index);
         s
     }
@@ -412,6 +432,38 @@ mod tests {
         assert_eq!(back.scheduler, cfg.scheduler);
         assert_eq!(back.sigma, cfg.sigma);
         assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
+    }
+
+    #[test]
+    fn composed_scheduler_roundtrips_through_toml() {
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = "est-srpt+ese*cap2".parse().unwrap();
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.scheduler, cfg.scheduler);
+        assert_eq!(back.scheduler.to_string(), "est-srpt+ese*cap2");
+        // the grammar is reachable straight from TOML text too
+        let cfg = SimConfig::from_toml("scheduler = \"fifo+sda\"").unwrap();
+        assert_eq!(cfg.scheduler.to_string(), "fifo+sda");
+        assert!(SimConfig::from_toml("scheduler = \"fifo+bogus\"").is_err());
+    }
+
+    #[test]
+    fn clone_copies_key_parses_and_validates() {
+        assert_eq!(SimConfig::default().clone_copies, 2);
+        let cfg = SimConfig::from_toml("clone_copies = 3").unwrap();
+        assert_eq!(cfg.clone_copies, 3);
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.clone_copies, 3);
+        assert!(SimConfig::from_toml("clone_copies = 1").is_err());
+    }
+
+    #[test]
+    fn legacy_sched_flag_roundtrips() {
+        assert!(!SimConfig::default().legacy_sched, "pipeline is the default");
+        let cfg = SimConfig::from_toml("legacy_sched = true").unwrap();
+        assert!(cfg.legacy_sched);
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert!(back.legacy_sched);
     }
 
     #[test]

@@ -137,6 +137,50 @@ pub fn observe(cl: &Cluster, t: TaskRef, copy: usize) -> CopyObs<'_> {
     }
 }
 
+/// One task's contribution to the estimate-driven level-2 key: the
+/// *revealed total work* of its running first copy once the `s_i`
+/// checkpoint passed (wall-clock duration × advertised class speed — all
+/// observable facts), `E[x]` before that, `0` once the task is done.
+///
+/// Deliberately **not** a remaining-time estimate: remaining times decay
+/// with the clock, but an ordering key must be piecewise-constant between
+/// cluster mutations so the incremental
+/// [`SchedIndex`](crate::cluster::index::SchedIndex) can maintain the
+/// est-keyed level-2 set by re-keying at the reveal/kill/finish mutation
+/// points (the `est-srpt` re-key contract; see
+/// `scheduler::ordering`).  Under a hidden slowdown the revealed work is
+/// inflated by the unexplained factor — exactly the straggler signal the
+/// estimate-driven ordering should rank by.
+pub fn revealed_task_workload(
+    job: &crate::cluster::job::JobState,
+    machines: &crate::cluster::machine::MachinePool,
+    task: u32,
+) -> f64 {
+    let t = &job.tasks[task as usize];
+    if t.done {
+        return 0.0;
+    }
+    for c in &t.copies {
+        if c.phase == CopyPhase::Running && c.revealed {
+            return c.duration * machines.speed(c.machine);
+        }
+    }
+    job.spec.dist.mean()
+}
+
+/// The estimate-driven level-2 job key: the sum of
+/// [`revealed_task_workload`] over the job's tasks, **in task order** —
+/// the index maintains the identical ordered sum incrementally, so both
+/// query paths produce bit-identical keys (float addition order matters).
+pub fn revealed_job_workload(cl: &Cluster, id: JobId) -> f64 {
+    let job = cl.job(id);
+    let mut sum = 0.0;
+    for task in 0..job.spec.num_tasks {
+        sum += revealed_task_workload(job, &cl.machines, task);
+    }
+    sum
+}
+
 /// Minimum of `per_copy` over the running copies of `t` — the task-level
 /// fold shared by every query (a task finishes when its first copy does).
 /// Infinite when nothing runs.
@@ -341,6 +385,32 @@ mod tests {
         assert_eq!(Blind.job_remaining_work(&cl, id), expect);
         assert_eq!(Revealed.job_remaining_work(&cl, id), expect);
         assert_eq!(SpeedAware::revealed().job_remaining_work(&cl, id), expect);
+    }
+
+    /// The estimate-driven level-2 key: `E[x]` per task until a reveal,
+    /// the revealed total work (speed-corrected) after, `0` once done —
+    /// and it only moves at those mutation points, never with the clock.
+    #[test]
+    fn revealed_job_workload_refines_at_mutation_points_only() {
+        let mut cl = cluster_with(vec![MachineClass::new(2, 2.0)], 3.0);
+        let id = JobId(0);
+        let mean = cl.job(id).spec.dist.mean();
+        assert_eq!(revealed_job_workload(&cl, id), mean);
+        // the clock alone must not move the key (piecewise-constant)
+        cl.clock = 0.9;
+        assert_eq!(revealed_job_workload(&cl, id), mean);
+        // reveal: the task now contributes its observed total work —
+        // wall duration (3 work / 2x speed = 1.5) x advertised speed 2
+        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        assert_eq!(revealed_job_workload(&cl, id), 3.0);
+        cl.clock = 1.2;
+        assert_eq!(revealed_job_workload(&cl, id), 3.0);
+        // killing the revealed copy reverts the task to E[x]
+        cl.kill_copy(task0(), 0);
+        assert_eq!(revealed_job_workload(&cl, id), mean);
+        // a finished task contributes nothing
+        cl.jobs[0].tasks[0].done = true;
+        assert_eq!(revealed_job_workload(&cl, id), 0.0);
     }
 
     #[test]

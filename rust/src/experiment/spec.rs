@@ -29,16 +29,25 @@ pub struct PolicyVariant {
 }
 
 impl PolicyVariant {
-    /// A plain scheduler with no overrides.
+    /// A plain scheduler with no overrides.  The label is the kind's
+    /// canonical name or composition spec (`"sda"`, `"est-srpt+mantri"`),
+    /// so composed pipelines appear as distinct rows in sweep CSVs.
     pub fn kind(k: SchedulerKind) -> Self {
-        PolicyVariant { label: k.as_str().to_string(), scheduler: k, x: f64::NAN, patch: None }
+        PolicyVariant { label: k.to_string(), scheduler: k, x: f64::NAN, patch: None }
+    }
+
+    /// A policy parsed from the grammar (canonical name or composition
+    /// spec) — the string-friendly way to put pipeline components on the
+    /// sweep's policy axis.
+    pub fn policy(spec: &str) -> Result<Self, String> {
+        spec.parse().map(PolicyVariant::kind)
     }
 
     /// A scheduler run at a fixed straggler threshold (the Fig. 3/5 sigma
     /// sweeps); `x` is set to sigma so series can plot against it.
     pub fn with_sigma(k: SchedulerKind, sigma: f64) -> Self {
         PolicyVariant {
-            label: format!("{}@sigma{sigma}", k.as_str()),
+            label: format!("{k}@sigma{sigma}"),
             scheduler: k,
             x: sigma,
             patch: Some(Arc::new(move |cfg: &mut SimConfig| cfg.sigma = Some(sigma))),

@@ -10,9 +10,12 @@
 //! * [`cluster`] — the MapReduce-like cluster: machines, jobs/tasks/copies,
 //!   a discrete-event simulator with slotted scheduling decisions, workload
 //!   generators and trace I/O.
-//! * [`scheduler`] — the seven speculative-execution policies: the paper's
-//!   SCA (Algorithm 1), SDA (Sec. V), ESE (Algorithm 2) and the baselines
-//!   they are evaluated against (naive, blind cloning, Mantri, LATE).
+//! * [`scheduler`] — speculative-execution policies as composable
+//!   pipelines (`ordering+rule[*budget]`): the paper's SCA (Algorithm 1),
+//!   SDA (Sec. V) and ESE (Algorithm 2) and the baselines they are
+//!   evaluated against (naive, blind cloning, Mantri, LATE) are canonical
+//!   compositions of a job ordering, a speculation rule and a copy
+//!   budget.
 //! * [`estimator`] — the remaining-time estimation contract every policy's
 //!   speculation rule queries: blind (conditional Pareto), revealed
 //!   (post-checkpoint truth, Sec. V) and speed-aware (divide by the

@@ -31,23 +31,25 @@ const USAGE: &str = "specsim — speculative execution for MapReduce-like cluste
 USAGE: specsim <command> [flags]
 
 COMMANDS
-  simulate   --scheduler <kind> [--machines N] [--horizon T] [--lambda L]
+  simulate   --policy <spec> [--machines N] [--horizon T] [--lambda L]
              [--seed S] [--sigma X] [--config file.toml]
              [--artifacts-dir DIR] [--no-runtime] [workload/cluster flags]
-  compare    [--schedulers a,b,c] [--threads N] [same flags as simulate]
-  sweep      [--schedulers a,b,c] [--lambdas 2,4,6] [--seeds 1,2,3]
+  compare    [--policies a,b,c] [--threads N] [same flags as simulate]
+  sweep      [--policies a,b,c] [--lambdas 2,4,6] [--seeds 1,2,3]
              [--threads N] [--out FILE] [same flags as simulate]
   figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|all>
              [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
              [--threads N]
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
-  bench      [--quick] [--out FILE]   standardized throughput suite: every
-             policy x {light lambda=0.3, heavy lambda~0.9*lambda^U} x
+  bench      [--quick] [--out FILE] [--md FILE]   standardized throughput
+             suite: every policy (7 canonical + 2 composed pipelines) x
+             {light lambda=0.3, heavy lambda~0.9*lambda^U} x
              M in {500, 4000}, each cell on both the SchedIndex hot path
              and the naive-scan reference; writes machine-readable JSON
-             (default BENCH_sim.json at the cwd)
+             (default BENCH_sim.json at the cwd) and, with --md, the
+             EXPERIMENTS.md-ready markdown table
   trace      --out FILE [--lambda L] [--horizon T] [--seed S]
-  serve      [--machines N] [--rate R] [--jobs J] [--scheduler kind]
+  serve      [--machines N] [--rate R] [--jobs J] [--policy spec]
              [--artifacts-dir DIR]
 
 WORKLOAD / CLUSTER SCENARIO FLAGS
@@ -67,8 +69,23 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
                                     scans instead of the incremental
                                     SchedIndex (equivalence reference; same
                                     decisions, slower)
+  --clone-copies N                  clones per task for clone_all / the
+                                    clone rule's fixed budget (default 2)
+  --legacy-sched                    build the retained monolithic scheduler
+                                    implementations instead of their
+                                    pipeline compositions (equivalence
+                                    reference; canonical names only)
 
-scheduler kinds: naive clone_all mantri late sca sda ese
+POLICY SPECS
+  A policy is a canonical name — naive clone_all mantri late sca sda ese —
+  or a composition 'ordering+rule[*budget]':
+    orderings  fifo | srpt | est-srpt      (est-srpt = estimate-driven SRPT)
+    rules      never | clone | mantri | late | sda | ese
+    budgets    fixedK | capK | p2 | eq29   (K >= 2; omit for the default;
+                                            p2 needs a cloning rule)
+  e.g. srpt+mantri, fifo+sda, est-srpt+ese*cap2, srpt+clone*fixed3.
+  (--scheduler/--schedulers are accepted as aliases of --policy/--policies.)
+
 threads: 0 = one worker per core";
 
 /// The arrival process selected by `--workload` at rate `lambda`.
@@ -119,10 +136,27 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
     if args.has("no-sched-index") {
         cfg.sched_index = false;
     }
+    if args.has("legacy-sched") {
+        cfg.legacy_sched = true;
+    }
     if args.has("no-runtime") {
         cfg.use_runtime = false;
     }
+    cfg.clone_copies = args.usize("clone-copies", cfg.clone_copies as usize)? as u32;
     Ok(())
+}
+
+/// `--policy SPEC` with `--scheduler` as a legacy alias.
+fn policy_arg(args: &Args, default: &str) -> String {
+    args.string("policy", &args.string("scheduler", default))
+}
+
+/// `--policies a,b,c` with `--schedulers` as a legacy alias.
+fn policies_arg(args: &Args, default: &str) -> Result<Vec<SchedulerKind>, String> {
+    args.string("policies", &args.string("schedulers", default))
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect()
 }
 
 fn build_common(args: &Args) -> Result<(SimConfig, WorkloadConfig), String> {
@@ -187,8 +221,10 @@ fn run() -> Result<(), String> {
         println!("{USAGE}");
         return Ok(());
     };
-    let args =
-        Args::parse(rest, &["no-runtime", "no-speed-aware", "no-sched-index", "quick", "help"])?;
+    let args = Args::parse(
+        rest,
+        &["no-runtime", "no-speed-aware", "no-sched-index", "legacy-sched", "quick", "help"],
+    )?;
     if args.has("help") {
         println!("{USAGE}");
         return Ok(());
@@ -196,28 +232,20 @@ fn run() -> Result<(), String> {
     match cmd.as_str() {
         "simulate" => {
             let (mut cfg, wl) = build_common(&args)?;
-            cfg.scheduler = args.string("scheduler", "sca").parse()?;
+            cfg.scheduler = policy_arg(&args, "sca").parse()?;
             let rows = run_kinds(&cfg, &wl, vec![cfg.scheduler], 1)?;
             print!("{}", report::summary_table(&rows));
         }
         "compare" => {
             let (cfg, wl) = build_common(&args)?;
-            let kinds: Vec<SchedulerKind> = args
-                .string("schedulers", "sca,sda,ese,mantri,naive")
-                .split(',')
-                .map(|s| s.trim().parse())
-                .collect::<Result<_, _>>()?;
+            let kinds = policies_arg(&args, "sca,sda,ese,mantri,naive")?;
             let threads = args.usize("threads", 0)?;
             let rows = run_kinds(&cfg, &wl, kinds, threads)?;
             print!("{}", report::summary_table(&rows));
         }
         "sweep" => {
             let (cfg, _) = build_common(&args)?;
-            let kinds: Vec<SchedulerKind> = args
-                .string("schedulers", "sca,sda,ese,mantri,naive")
-                .split(',')
-                .map(|s| s.trim().parse())
-                .collect::<Result<_, _>>()?;
+            let kinds = policies_arg(&args, "sca,sda,ese,mantri,naive")?;
             let lambdas: Vec<f64> = parse_list(&args.string("lambdas", "2,4,6"), "--lambdas")?;
             let seeds: Vec<u64> = parse_list(&args.string("seeds", "1,2,3"), "--seeds")?;
             let mut spec = ExperimentSpec::new("sweep", cfg);
@@ -304,6 +332,11 @@ fn run() -> Result<(), String> {
             })?;
             let doc = specsim::util::bench::throughput_json(&cells, quick);
             report::write_file(&out, &format!("{doc}\n")).map_err(|e| e.to_string())?;
+            if let Some(md) = args.str("md") {
+                let table = specsim::util::bench::throughput_markdown(&cells);
+                report::write_file(md, &table).map_err(|e| e.to_string())?;
+                println!("wrote the EXPERIMENTS.md-ready table to {md}");
+            }
             println!("wrote {} cells to {out}", cells.len());
         }
         "trace" => {
@@ -320,7 +353,7 @@ fn run() -> Result<(), String> {
             let mut cfg = SimConfig::default();
             cfg.machines = args.usize("machines", 200)?;
             cfg.horizon = f64::INFINITY;
-            cfg.scheduler = args.string("scheduler", "sda").parse()?;
+            cfg.scheduler = policy_arg(&args, "sda").parse()?;
             cfg.artifacts_dir = args.string("artifacts-dir", "artifacts");
             apply_scenario_flags(&mut cfg, &args)?;
             let rate = args.f64("rate", 50.0)?;

@@ -12,7 +12,8 @@ use crate::stats::Cdf;
 /// Headline comparison row for one scheduler run.
 #[derive(Clone, Debug)]
 pub struct SummaryRow {
-    pub scheduler: &'static str,
+    /// Policy label (canonical name or composition spec).
+    pub scheduler: String,
     pub jobs: usize,
     pub mean_flowtime: f64,
     pub p80_flowtime: f64,
@@ -29,7 +30,7 @@ impl SummaryRow {
         let mut ft = res.flowtime_cdf();
         let mut rs = res.resource_cdf();
         SummaryRow {
-            scheduler: res.scheduler,
+            scheduler: res.scheduler.clone(),
             jobs: res.completed.len(),
             mean_flowtime: ft.mean(),
             p80_flowtime: ft.quantile(0.8),
@@ -147,7 +148,7 @@ mod tests {
     #[test]
     fn table_renders_all_rows() {
         let rows = vec![SummaryRow {
-            scheduler: "sca",
+            scheduler: "sca".to_string(),
             jobs: 10,
             mean_flowtime: 1.5,
             p80_flowtime: 2.0,
@@ -176,7 +177,7 @@ mod tests {
     fn sweep_csv_one_row_per_cell() {
         use crate::experiment::CellResult;
         let result = SimResult {
-            scheduler: "naive",
+            scheduler: "naive".to_string(),
             completed: Vec::new(),
             incomplete: 1,
             total_machine_time: 3.0,

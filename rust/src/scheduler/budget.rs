@@ -1,0 +1,235 @@
+//! `CopyBudget` — the how-many-copies axis of the policy pipeline.
+//!
+//! A [`SpeculationRule`](super::rule::SpeculationRule) decides *when* to
+//! act on a task or queued job; the budget decides *how many* copies the
+//! target gets.  Backup phases read a per-task total-copy target
+//! ([`CopyBudget::backup_copies`]); level 3 either pre-plans the whole
+//! queued batch jointly ([`CopyBudget::plan_queued`] — SCA's P2 solve) or
+//! answers per job during the walk ([`CopyBudget::queued_copies`] — the
+//! current idle count matters, so the query happens at launch time
+//! exactly like the monoliths did).
+
+use crate::cluster::job::JobId;
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+use crate::opt::ese_sigma;
+use crate::opt::gradient::{GradientSolver, P2Job, P2Problem};
+use crate::opt::p2::round_and_repair;
+
+use super::sca::P2Backend;
+
+/// The copy-count component of a [`Pipeline`](super::Pipeline).
+pub trait CopyBudget {
+    fn name(&self) -> &'static str;
+
+    /// Total copies (including the original) a rule-flagged *running*
+    /// task should reach — `2` means one backup.  Constant within a slot.
+    fn backup_copies(&self, cl: &Cluster) -> u32;
+
+    /// Jointly plan the level-3 copy counts for the whole χ(l) snapshot.
+    /// `Some(counts)` (parallel to `chi`) bypasses the rule's per-job
+    /// clone gate — the batch solver owns the decision; `None` routes
+    /// each job through the gate + [`queued_copies`](Self::queued_copies).
+    fn plan_queued(&mut self, _cl: &Cluster, _chi: &[JobId]) -> Option<Vec<u32>> {
+        None
+    }
+
+    /// Launch-time copy count for one rule-flagged queued job, queried at
+    /// walk time (the current idle count is part of the decision).
+    fn queued_copies(&mut self, cl: &Cluster, id: JobId) -> u32;
+}
+
+/// A plain per-task total-copy target with no room check — the
+/// resource-capped budget (`cap2` = at most one backup, the Mantri/LATE
+/// default and SDA's Theorem-3 `c* = 2`).
+pub struct CapBudget {
+    pub copies: u32,
+}
+
+impl CopyBudget for CapBudget {
+    fn name(&self) -> &'static str {
+        "cap"
+    }
+
+    fn backup_copies(&self, _cl: &Cluster) -> u32 {
+        self.copies
+    }
+
+    fn queued_copies(&mut self, _cl: &Cluster, _id: JobId) -> u32 {
+        self.copies
+    }
+}
+
+/// CloneAll's fixed-k budget (Sec. III): `k` clones per task when the
+/// cluster has room, degrading to single copies when tight unless
+/// `strict` (the literal Eq. 3 model the threshold experiment uses).
+pub struct FixedBudget {
+    pub copies: u32,
+    pub strict: bool,
+}
+
+impl CopyBudget for FixedBudget {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn backup_copies(&self, _cl: &Cluster) -> u32 {
+        self.copies
+    }
+
+    fn queued_copies(&mut self, cl: &Cluster, id: JobId) -> u32 {
+        let m = cl.job(id).spec.num_tasks as usize;
+        if self.strict || cl.idle() >= m * self.copies as usize {
+            self.copies
+        } else {
+            1
+        }
+    }
+}
+
+/// SCA's P2 utility solver (Algorithm 1): when every queued job fits
+/// (`sum m_i < N(l)`), solve P2 for the batch and launch each job with its
+/// optimized clone count; otherwise fall back to single copies.  The
+/// solve goes through a [`P2Backend`] — the PJRT executor when artifacts
+/// are available, the pure-rust gradient-projection twin otherwise.
+pub struct P2Budget {
+    backend: Box<dyn P2Backend>,
+    gamma: f64,
+    r_max: u32,
+    /// Batch cap (min of backend capacity and `cfg.p2_batch`).
+    batch: usize,
+    /// Diagnostics.
+    pub p2_solves: u64,
+    pub p2_jobs_solved: u64,
+}
+
+impl P2Budget {
+    pub fn new(cfg: &SimConfig) -> Result<Self, String> {
+        let backend: Box<dyn P2Backend> = if cfg.use_runtime {
+            match crate::runtime::solver::PjrtP2::load(&cfg.artifacts_dir) {
+                Ok(exec) => Box::new(exec),
+                Err(e) => {
+                    eprintln!(
+                        "p2 budget: PJRT runtime unavailable ({e}); using the pure-rust solver"
+                    );
+                    Box::new(GradientSolver::default())
+                }
+            }
+        } else {
+            Box::new(GradientSolver::default())
+        };
+        let batch = cfg.p2_batch.min(backend.max_batch());
+        Ok(P2Budget {
+            backend,
+            gamma: cfg.gamma,
+            r_max: cfg.r_max,
+            batch,
+            p2_solves: 0,
+            p2_jobs_solved: 0,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.backend_name()
+    }
+}
+
+impl CopyBudget for P2Budget {
+    fn name(&self) -> &'static str {
+        "p2"
+    }
+
+    fn backup_copies(&self, _cl: &Cluster) -> u32 {
+        2
+    }
+
+    fn plan_queued(&mut self, cl: &Cluster, chi: &[JobId]) -> Option<Vec<u32>> {
+        if chi.is_empty() {
+            return None;
+        }
+        let total_tasks: u64 = chi.iter().map(|id| cl.job(*id).spec.num_tasks as u64).sum();
+        // tight cluster: single copies, smallest workload first (the χ
+        // order the snapshot already is) — no solve
+        if (total_tasks as usize) >= cl.idle() {
+            return None;
+        }
+        let n_avail = cl.idle() as f64;
+        // the artifact batch is static: solve the `batch` smallest-workload
+        // jobs through the backend, single-launch any overflow
+        let (solved, overflow) = chi.split_at(chi.len().min(self.batch));
+        let jobs: Vec<P2Job> = solved
+            .iter()
+            .map(|id| {
+                let j = cl.job(*id);
+                P2Job {
+                    mu: j.spec.dist.mu,
+                    m: j.spec.num_tasks as f64,
+                    age: cl.clock - j.spec.arrival,
+                }
+            })
+            .collect();
+        let alpha = solved
+            .first()
+            .map(|id| cl.job(*id).spec.dist.alpha)
+            .unwrap_or(2.0);
+        let problem = P2Problem {
+            jobs: jobs.clone(),
+            n_avail,
+            gamma: self.gamma,
+            r: self.r_max as f64,
+            alpha,
+        };
+        let c = self.backend.solve(&problem);
+        self.p2_solves += 1;
+        self.p2_jobs_solved += jobs.len() as u64;
+        let m: Vec<f64> = jobs.iter().map(|j| j.m).collect();
+        let mut counts = round_and_repair(&c, &m, n_avail, self.r_max);
+        counts.extend(overflow.iter().map(|_| 1u32));
+        Some(counts)
+    }
+
+    fn queued_copies(&mut self, _cl: &Cluster, _id: JobId) -> u32 {
+        1
+    }
+}
+
+/// ESE's Eq. 29 optimal clone count for gate-flagged small jobs.
+pub struct Eq29Budget {
+    gamma: f64,
+    alpha: f64,
+    r_max: u32,
+    /// Diagnostics: gate-flagged jobs whose optimal count exceeded 1.
+    pub small_jobs_cloned: u64,
+}
+
+impl Eq29Budget {
+    pub fn new(cfg: &SimConfig, alpha: f64) -> Self {
+        Eq29Budget { gamma: cfg.gamma, alpha, r_max: cfg.r_max, small_jobs_cloned: 0 }
+    }
+}
+
+impl CopyBudget for Eq29Budget {
+    fn name(&self) -> &'static str {
+        "eq29"
+    }
+
+    fn backup_copies(&self, _cl: &Cluster) -> u32 {
+        2
+    }
+
+    fn queued_copies(&mut self, cl: &Cluster, id: JobId) -> u32 {
+        let job = cl.job(id);
+        let c = ese_sigma::small_job_clones(
+            job.spec.dist.mu,
+            job.spec.num_tasks as f64,
+            self.gamma,
+            self.alpha,
+            self.r_max,
+            cl.idle() as f64,
+        );
+        if c > 1 {
+            self.small_jobs_cloned += 1;
+        }
+        c
+    }
+}

@@ -3,6 +3,11 @@
 //! job size — the indiscriminate strategy whose stability bound is
 //! Theorem 1 and whose delay is W_t^c (Eq. 3).  Used by the threshold
 //! experiment to locate lambda^U empirically.
+//!
+//! **Retained monolith.**  Since the policy-pipeline redesign this is the
+//! `legacy_sched` equivalence reference for the canonical composition
+//! `srpt+clone` (see `scheduler::pipeline`); `tests/pipeline_equivalence.rs`
+//! proves byte-identical sweep CSVs, after which the monolith can go.
 
 use crate::cluster::sim::Cluster;
 
@@ -20,7 +25,7 @@ pub struct CloneAll {
 }
 
 impl Scheduler for CloneAll {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "clone_all"
     }
 

@@ -13,6 +13,11 @@
 //! 3. queued jobs smallest workload first; a job with
 //!    `m < eta * N(l)/|chi(l)|` and `E[x] < xi` is cloned with the Eq. 29
 //!    optimal count, everything else gets single copies.
+//!
+//! **Retained monolith.**  Since the policy-pipeline redesign this is the
+//! `legacy_sched` equivalence reference for the canonical composition
+//! `srpt+ese` (see `scheduler::pipeline`); `tests/pipeline_equivalence.rs`
+//! proves byte-identical sweep CSVs, after which the monolith can go.
 
 use crate::cluster::job::{CopyPhase, TaskRef};
 use crate::cluster::sim::Cluster;
@@ -57,7 +62,7 @@ impl Ese {
 }
 
 impl Scheduler for Ese {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "ese"
     }
 

@@ -8,6 +8,11 @@
 //! time-to-end is the estimator's wall-clock remaining, which with the
 //! default `speed_aware = true` accounts for the advertised class speed —
 //! fitting, since LATE was designed for heterogeneous clusters.
+//!
+//! **Retained monolith.**  Since the policy-pipeline redesign this is the
+//! `legacy_sched` equivalence reference for the canonical composition
+//! `fifo+late` (see `scheduler::pipeline`); `tests/pipeline_equivalence.rs`
+//! proves byte-identical sweep CSVs, after which the monolith can go.
 
 use crate::cluster::job::{CopyPhase, TaskRef};
 use crate::cluster::sim::Cluster;
@@ -57,7 +62,7 @@ impl Late {
 }
 
 impl Scheduler for Late {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "late"
     }
 

@@ -15,6 +15,11 @@
 //! With `mantri_kill` the scheduler also terminates an original whose
 //! estimated remaining time exceeds both the restart threshold and what a
 //! fresh copy would need (the paper mentions Mantri may terminate tasks).
+//!
+//! **Retained monolith.**  Since the policy-pipeline redesign this is the
+//! `legacy_sched` equivalence reference for the canonical composition
+//! `fifo+mantri` (see `scheduler::pipeline`); `tests/pipeline_equivalence.rs`
+//! proves byte-identical sweep CSVs, after which the monolith can go.
 
 use crate::cluster::job::{CopyPhase, TaskRef};
 use crate::cluster::sim::Cluster;
@@ -48,7 +53,7 @@ impl Mantri {
 }
 
 impl Scheduler for Mantri {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "mantri"
     }
 

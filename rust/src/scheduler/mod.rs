@@ -1,32 +1,50 @@
-//! Speculative-execution policies.
+//! Speculative-execution policies, decomposed into a composable pipeline.
 //!
-//! All seven schedulers share the same slotted hook structure (the paper's
-//! decision model) so the comparison isolates the *speculation policy*:
+//! The paper's decision model is layered — level-2/3 job ordering, a
+//! per-task speculation rule, and a copy-count decision — and since the
+//! pipeline redesign each policy *is* a composition of those three axes
+//! (see [`policy`] for the grammar `ordering+rule[*budget]`):
 //!
-//! * [`naive`]     — no speculation (the Fig. 5 "no backup" baseline).
-//! * [`clone_all`] — Sec. III generalized cloning (>= 2 copies per task).
-//! * [`mantri`]    — Microsoft Mantri's rule `P(t_rem > 2 t_new) > delta`.
-//! * [`late`]      — Berkeley LATE (progress rate + speculativeCap).
-//! * [`sca`]       — Smart Cloning Algorithm (Algorithm 1, P2 solver).
-//! * [`sda`]       — Straggler Detection Algorithm (Sec. V, Theorem 3).
-//! * [`ese`]       — Enhanced Speculative Execution (Algorithm 2).
+//! * [`ordering`] — [`JobOrdering`](ordering::JobOrdering): FIFO / SRPT /
+//!   estimate-driven SRPT (with the level-2 re-key contract made
+//!   explicit);
+//! * [`rule`] — [`SpeculationRule`](rule::SpeculationRule): never /
+//!   always-clone / Mantri-δ / LATE progress-rate / SDA-reveal /
+//!   ESE-threshold;
+//! * [`budget`] — [`CopyBudget`](budget::CopyBudget): fixed-k / SCA's P2
+//!   utility solver / resource-capped / ESE's Eq. 29;
+//! * [`pipeline`] — the [`Pipeline`] composing them behind the
+//!   [`Scheduler`] trait, owning the shared slot loop (χ allocation,
+//!   backpressure, scratch buffers, `SchedIndex` queries) exactly once.
+//!
+//! The seven canonical policy names are themselves compositions
+//! ([`SchedulerKind::canonical_spec`]):
+//!
+//! | name | composition | paper reference |
+//! |---|---|---|
+//! | `naive` | `srpt+never` | Fig. 5 "no backup" baseline |
+//! | `clone_all` | `srpt+clone` (`fixed` k = `clone_copies`) | Sec. III generalized cloning |
+//! | `mantri` | `fifo+mantri` (`srpt+mantri` with `mantri_srpt`) | Microsoft Mantri's δ-rule |
+//! | `late` | `fifo+late` | Berkeley LATE |
+//! | `sca` | `srpt+clone*p2` | Algorithm 1 (Smart Cloning) |
+//! | `sda` | `srpt+sda` (`cap` c* from P3) | Sec. V, Theorem 3 |
+//! | `ese` | `srpt+ese` (`eq29` small-job counts) | Algorithm 2 (Enhanced SE) |
+//!
+//! The monolithic implementations ([`naive`], [`clone_all`], [`mantri`],
+//! [`late`], [`sca`], [`sda`], [`ese`]) are **retained verbatim** behind
+//! `SimConfig::legacy_sched` as the equivalence reference —
+//! `tests/pipeline_equivalence.rs` proves every canonical composition
+//! produces byte-identical sweep CSVs to its monolith across all scenario
+//! axes — and will be deleted once CI has pinned the proof.
 //!
 //! ## Remaining-time queries
 //!
 //! No policy does its own remaining-time math: every speculation rule
 //! queries a [`crate::estimator::RemainingTime`] built by
 //! `estimator::for_policy(cfg, instrumented)` at construction, where
-//! `instrumented` says whether the policy owns the paper's `s_i`
-//! detection checkpoint:
-//!
-//! | policy | instrumented | queries |
-//! |---|---|---|
-//! | Mantri | no (blind baseline) | `task_prob_exceeds` (its rule's `delta`), `task_remaining_work`, level-2 key |
-//! | LATE | no (blind baseline) | `copy_remaining_wall` (time-to-end), level-2 key via FIFO |
-//! | SCA | yes | level-2 ordering key (`job_remaining_work`) |
-//! | SDA | yes | `copy_remaining_work` at the reveal (vs `sigma * E[x]`), level-2 key |
-//! | ESE | yes | `task_remaining_work` per slot (vs `sigma * E[x]`), level-2 key |
-//!
+//! `instrumented` says whether the rule owns the paper's `s_i` detection
+//! checkpoint ([`policy::RuleKind::instrumented`]): SDA/ESE (and SCA's
+//! clone composition) do, the Mantri/LATE baselines do not.
 //! `cfg.speed_aware` (default true) selects the class-speed-corrected
 //! estimator variants — a no-op on the paper's homogeneous cluster; see
 //! [`crate::estimator`] for the full observation contract.
@@ -41,27 +59,40 @@
 //! `sched_index = false` selects the retained naive full scans; both paths
 //! make bit-identical decisions (the equivalence suite in
 //! `tests/experiment_integration.rs` proves byte-identical sweep CSVs).
+//! The estimate-driven ordering re-keys the index at the reveal/kill/
+//! finish mutation points (the `est-srpt` re-key contract, [`ordering`]).
 
+pub mod budget;
 pub mod clone_all;
 pub mod ese;
 pub mod late;
 pub mod mantri;
 pub mod naive;
+pub mod ordering;
+pub mod pipeline;
+pub mod policy;
+pub mod rule;
 pub mod sca;
 pub mod sda;
 pub mod srpt;
 
+use std::fmt;
 use std::str::FromStr;
+
+pub use pipeline::Pipeline;
+pub use policy::{BudgetKind, OrderingKind, PolicySpec, RuleKind};
 
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::{Cluster, Workload};
 use crate::config::{SimConfig, WorkloadConfig};
 
 /// A speculative-execution policy driven by the simulator.
-/// Not `Send`: SCA may hold a thread-pinned PJRT executor; the live master
-/// therefore constructs its scheduler on its own thread.
+/// Not `Send`: SCA's P2 budget may hold a thread-pinned PJRT executor; the
+/// live master therefore constructs its scheduler on its own thread.
 pub trait Scheduler {
-    fn name(&self) -> &'static str;
+    /// The policy label reports print — a canonical name (`"sda"`) or a
+    /// composition spec (`"est-srpt+mantri"`).
+    fn name(&self) -> &str;
     /// Slot-boundary decisions (the paper's slotted model).
     fn on_slot(&mut self, cl: &mut Cluster);
     /// A first copy crossed its detection checkpoint: its true remaining
@@ -69,7 +100,8 @@ pub trait Scheduler {
     fn on_reveal(&mut self, _cl: &mut Cluster, _t: TaskRef) {}
 }
 
-/// Which policy to run (CLI/TOML selectable).
+/// Which policy to run (CLI/TOML selectable): one of the seven canonical
+/// names, or any composition from the [`policy`] grammar.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedulerKind {
     Naive,
@@ -79,9 +111,12 @@ pub enum SchedulerKind {
     Sca,
     Sda,
     Ese,
+    /// A composed policy pipeline: `ordering+rule[*budget]`.
+    Composed(PolicySpec),
 }
 
 impl SchedulerKind {
+    /// The seven canonical policies (the paper's comparison set).
     pub fn all() -> [SchedulerKind; 7] {
         [
             SchedulerKind::Naive,
@@ -94,15 +129,45 @@ impl SchedulerKind {
         ]
     }
 
-    pub fn as_str(&self) -> &'static str {
+    /// The composition this kind resolves to (`cfg` supplies the knobs
+    /// folded into canonical specs: `mantri_srpt` upgrades Mantri's
+    /// ordering axis; budget defaults resolve at build time).
+    pub fn canonical_spec(&self, cfg: &SimConfig) -> PolicySpec {
+        use self::policy::{BudgetKind as B, OrderingKind as O, RuleKind as R};
         match self {
-            SchedulerKind::Naive => "naive",
-            SchedulerKind::CloneAll => "clone_all",
-            SchedulerKind::Mantri => "mantri",
-            SchedulerKind::Late => "late",
-            SchedulerKind::Sca => "sca",
-            SchedulerKind::Sda => "sda",
-            SchedulerKind::Ese => "ese",
+            SchedulerKind::Naive => PolicySpec::new(O::Srpt, R::Never, None),
+            SchedulerKind::CloneAll => PolicySpec::new(O::Srpt, R::Clone, None),
+            SchedulerKind::Mantri => {
+                let ord = if cfg.mantri_srpt { O::Srpt } else { O::Fifo };
+                PolicySpec::new(ord, R::Mantri, None)
+            }
+            SchedulerKind::Late => PolicySpec::new(O::Fifo, R::Late, None),
+            SchedulerKind::Sca => PolicySpec::new(O::Srpt, R::Clone, Some(B::P2)),
+            SchedulerKind::Sda => PolicySpec::new(O::Srpt, R::Sda, None),
+            SchedulerKind::Ese => PolicySpec::new(O::Srpt, R::Ese, None),
+            SchedulerKind::Composed(spec) => *spec,
+        }
+    }
+
+    /// Does this policy order level 2 by the estimate-driven key?  The
+    /// cluster asks at construction to enable the `SchedIndex` est-keyed
+    /// level-2 twin (no upkeep cost otherwise); no canonical policy does.
+    pub fn uses_est_ordering(&self) -> bool {
+        matches!(self, SchedulerKind::Composed(s) if s.ordering == OrderingKind::EstSrpt)
+    }
+}
+
+impl fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedulerKind::Naive => f.write_str("naive"),
+            SchedulerKind::CloneAll => f.write_str("clone_all"),
+            SchedulerKind::Mantri => f.write_str("mantri"),
+            SchedulerKind::Late => f.write_str("late"),
+            SchedulerKind::Sca => f.write_str("sca"),
+            SchedulerKind::Sda => f.write_str("sda"),
+            SchedulerKind::Ese => f.write_str("ese"),
+            SchedulerKind::Composed(spec) => write!(f, "{spec}"),
         }
     }
 }
@@ -111,20 +176,21 @@ impl FromStr for SchedulerKind {
     type Err = String;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        SchedulerKind::all()
-            .into_iter()
-            .find(|k| k.as_str() == s)
-            .ok_or_else(|| {
-                format!(
-                    "unknown scheduler '{s}' (expected one of: {})",
-                    SchedulerKind::all().map(|k| k.as_str()).join(", ")
-                )
-            })
+        match s {
+            "naive" => Ok(SchedulerKind::Naive),
+            "clone_all" => Ok(SchedulerKind::CloneAll),
+            "mantri" => Ok(SchedulerKind::Mantri),
+            "late" => Ok(SchedulerKind::Late),
+            "sca" => Ok(SchedulerKind::Sca),
+            "sda" => Ok(SchedulerKind::Sda),
+            "ese" => Ok(SchedulerKind::Ese),
+            other => other.parse::<PolicySpec>().map(SchedulerKind::Composed),
+        }
     }
 }
 
-/// Instantiate the configured scheduler.  `workload` supplies the common
-/// heavy-tail order for the policies that derive their thresholds from the
+/// Instantiate the configured policy.  `workload` supplies the common
+/// heavy-tail order for the rules that derive their thresholds from the
 /// analysis (SDA's Theorem 3, ESE's Eq. 30-33).  For trace workloads the
 /// tail index is estimated from the trace's own sampled durations (loading
 /// the file if no pre-sampled [`Workload`] is at hand — prefer
@@ -140,32 +206,61 @@ pub fn build(
 /// alpha from the durations already in memory instead of re-reading the
 /// trace file.  The experiment runner calls this once per grid cell, inside
 /// the worker thread (the `Scheduler` trait is `!Send`).
+///
+/// With `cfg.legacy_sched` the retained monolithic implementation of a
+/// canonical name is built instead of its pipeline composition — the
+/// equivalence reference (composed specs have no monolith and error).
 pub fn build_for(
     cfg: &SimConfig,
     workload: &WorkloadConfig,
     sampled: Option<&Workload>,
 ) -> Result<Box<dyn Scheduler>, String> {
-    let alpha = match workload {
+    let alpha = tail_alpha(workload, sampled)?;
+    if cfg.legacy_sched {
+        return build_legacy(cfg, alpha);
+    }
+    pipeline::build(cfg, alpha)
+}
+
+/// The workload's Pareto tail index.  Trace workloads estimate it from
+/// the pre-sampled durations when available; otherwise the trace file is
+/// loaded, and a load failure is a hard error — a silently assumed
+/// alpha = 2.0 would mis-derive every analysis threshold.
+fn tail_alpha(workload: &WorkloadConfig, sampled: Option<&Workload>) -> Result<f64, String> {
+    match workload {
         WorkloadConfig::Poisson { alpha, .. }
         | WorkloadConfig::Bursty { alpha, .. }
-        | WorkloadConfig::SingleJob { alpha, .. } => *alpha,
+        | WorkloadConfig::SingleJob { alpha, .. } => Ok(*alpha),
         WorkloadConfig::Trace { path } => match sampled {
-            Some(wl) => crate::cluster::generator::estimate_alpha(wl),
+            Some(wl) => Ok(crate::cluster::generator::estimate_alpha(wl)),
             None => crate::cluster::trace::load(path)
                 .map(|wl| crate::cluster::generator::estimate_alpha(&wl))
-                .unwrap_or(2.0),
+                .map_err(|e| format!("cannot derive the tail index from trace '{path}': {e}")),
         },
-    };
+    }
+}
+
+/// The retained monolithic schedulers (`cfg.legacy_sched`) — the
+/// pre-redesign implementations, kept verbatim as the pipeline's
+/// equivalence reference until CI has pinned the byte-identical proof.
+fn build_legacy(cfg: &SimConfig, alpha: f64) -> Result<Box<dyn Scheduler>, String> {
     Ok(match cfg.scheduler {
         SchedulerKind::Naive => Box::new(naive::Naive),
-        SchedulerKind::CloneAll => {
-            Box::new(clone_all::CloneAll { copies: 2, strict: cfg.clone_strict })
-        }
+        SchedulerKind::CloneAll => Box::new(clone_all::CloneAll {
+            copies: cfg.clone_copies,
+            strict: cfg.clone_strict,
+        }),
         SchedulerKind::Mantri => Box::new(mantri::Mantri::new(cfg)),
         SchedulerKind::Late => Box::new(late::Late::new(cfg)),
         SchedulerKind::Sca => Box::new(sca::Sca::new(cfg)?),
         SchedulerKind::Sda => Box::new(sda::Sda::new(cfg, alpha)),
         SchedulerKind::Ese => Box::new(ese::Ese::new(cfg, alpha)),
+        SchedulerKind::Composed(spec) => {
+            return Err(format!(
+                "legacy_sched retains only the seven canonical monoliths; \
+                 '{spec}' always runs the pipeline"
+            ))
+        }
     })
 }
 
@@ -181,8 +276,24 @@ mod tests {
         for kind in SchedulerKind::all() {
             cfg.scheduler = kind;
             let s = build(&cfg, &wl).unwrap();
-            assert_eq!(s.name(), kind.as_str());
+            assert_eq!(s.name(), kind.to_string());
+            // the retained monolith answers to the same name
+            cfg.legacy_sched = true;
+            let legacy = build(&cfg, &wl).unwrap();
+            assert_eq!(legacy.name(), kind.to_string());
+            cfg.legacy_sched = false;
         }
+    }
+
+    #[test]
+    fn composed_kinds_build_pipelines_but_no_monolith() {
+        let mut cfg = SimConfig::default();
+        cfg.use_runtime = false;
+        cfg.scheduler = "fifo+sda".parse().unwrap();
+        let wl = WorkloadConfig::paper(6.0);
+        assert_eq!(build(&cfg, &wl).unwrap().name(), "fifo+sda");
+        cfg.legacy_sched = true;
+        assert!(build(&cfg, &wl).is_err(), "composed specs have no monolith");
     }
 
     #[test]
@@ -196,17 +307,36 @@ mod tests {
         let trace_cfg = WorkloadConfig::Trace { path: "/nonexistent/trace.csv".to_string() };
         let s = build_for(&cfg, &trace_cfg, Some(&wl)).unwrap();
         assert_eq!(s.name(), "sda");
-        // without one, an unreadable trace falls back to the paper default
-        let s = build_for(&cfg, &trace_cfg, None).unwrap();
-        assert_eq!(s.name(), "sda");
+        // without one, an unreadable trace is a hard error (satellite: no
+        // silent alpha = 2.0 fallback), and the error names the path
+        let err = match build_for(&cfg, &trace_cfg, None) {
+            Ok(_) => panic!("unreadable trace must not silently fall back"),
+            Err(e) => e,
+        };
+        assert!(err.contains("/nonexistent/trace.csv"), "unhelpful error: {err}");
     }
 
     #[test]
     fn kind_str_roundtrip() {
         for kind in SchedulerKind::all() {
-            let back: SchedulerKind = kind.as_str().parse().unwrap();
+            let back: SchedulerKind = kind.to_string().parse().unwrap();
             assert_eq!(kind, back);
         }
+        for spec in ["srpt+mantri", "fifo+sda", "est-srpt+ese*cap2", "srpt+clone*fixed3"] {
+            let kind: SchedulerKind = spec.parse().unwrap();
+            assert_eq!(kind.to_string(), spec);
+            assert!(matches!(kind, SchedulerKind::Composed(_)));
+        }
         assert!("bogus".parse::<SchedulerKind>().is_err());
+        assert!("srpt+bogus".parse::<SchedulerKind>().is_err());
+    }
+
+    #[test]
+    fn est_ordering_detection() {
+        assert!(!SchedulerKind::Sda.uses_est_ordering());
+        let k: SchedulerKind = "srpt+sda".parse().unwrap();
+        assert!(!k.uses_est_ordering());
+        let k: SchedulerKind = "est-srpt+sda".parse().unwrap();
+        assert!(k.uses_est_ordering());
     }
 }

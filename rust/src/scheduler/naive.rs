@@ -1,6 +1,11 @@
 //! No speculation at all: one copy per task, SRPT-ordered levels 2/3.
 //! This is the "without backup" baseline of Fig. 5 and the service model
 //! behind the no-speculation M/G/1 delay W_t (Eq. 1).
+//!
+//! **Retained monolith.**  Since the policy-pipeline redesign this is the
+//! `legacy_sched` equivalence reference for the canonical composition
+//! `srpt+never` (see `scheduler::pipeline`); `tests/pipeline_equivalence.rs`
+//! proves byte-identical sweep CSVs, after which the monolith can go.
 
 use crate::cluster::sim::Cluster;
 
@@ -9,7 +14,7 @@ use super::{srpt, Scheduler};
 pub struct Naive;
 
 impl Scheduler for Naive {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "naive"
     }
 

@@ -1,0 +1,229 @@
+//! `Pipeline` — the composition of the three policy axes into one
+//! [`Scheduler`], owning the shared slot loop exactly once.
+//!
+//! Per slot: (1) the [`rule::SpeculationRule`]'s backup phase, (2) level 2 in
+//! the [`JobOrdering`]'s order, (3) the χ(l) walk where the
+//! [`CopyBudget`] (batch-planned or per job through the rule's clone
+//! gate) decides launch-time copy counts.  `on_reveal` forwards to the
+//! rule.  This is the structure every monolith shared; with the canonical
+//! compositions ([`SchedulerKind::canonical_spec`]) the pipeline makes
+//! bit-identical decisions to the retained monoliths — proven by
+//! `tests/pipeline_equivalence.rs` against `cfg.legacy_sched = true`.
+//!
+//! [`SchedulerKind::canonical_spec`]: super::SchedulerKind::canonical_spec
+
+use crate::cluster::job::TaskRef;
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+use crate::estimator::{self, RemainingTime};
+
+use super::budget::{CapBudget, CopyBudget, Eq29Budget, FixedBudget, P2Budget};
+use super::ordering::{EstSrpt, Fifo, JobOrdering, Srpt};
+use super::policy::{BudgetKind, OrderingKind, RuleKind};
+use super::{rule, Scheduler};
+
+/// A composed policy: ordering × speculation rule × copy budget.
+pub struct Pipeline {
+    /// The policy-spec label (a canonical name or the grammar string) —
+    /// what reports and sweep CSVs print.
+    name: String,
+    ordering: Box<dyn JobOrdering>,
+    rule: Box<dyn rule::SpeculationRule>,
+    budget: Box<dyn CopyBudget>,
+    est: Box<dyn RemainingTime>,
+}
+
+impl Pipeline {
+    pub fn ordering_name(&self) -> &'static str {
+        self.ordering.name()
+    }
+
+    pub fn rule_name(&self) -> &'static str {
+        self.rule.name()
+    }
+
+    pub fn budget_name(&self) -> &'static str {
+        self.budget.name()
+    }
+}
+
+impl Scheduler for Pipeline {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster) {
+        // 1. the rule's slot-gated backup phase (Mantri/LATE/ESE; no-op
+        // for never/clone/sda)
+        self.rule.on_slot(cl, self.est.as_ref(), self.budget.as_ref());
+        // 2. remaining tasks of begun jobs, in the ordering's order
+        self.ordering.schedule_running(cl, self.est.as_ref());
+        // 3. queued jobs χ(l): budget-planned (P2) or gate + per-job count
+        let chi = self.ordering.snapshot_queued(cl);
+        if chi.is_empty() {
+            cl.put_scratch(chi);
+            return;
+        }
+        let chi_len = chi.len();
+        let plan = self.budget.plan_queued(cl, &chi);
+        for (i, &id) in chi.iter().enumerate() {
+            let idle = cl.idle();
+            if idle == 0 {
+                break;
+            }
+            let copies = match &plan {
+                Some(counts) => counts[i],
+                None if self.rule.clone_gate(cl, id, chi_len) => self.budget.queued_copies(cl, id),
+                None => 1,
+            };
+            if copies > 1 {
+                cl.launch_job_cloned(id, copies);
+            } else {
+                cl.launch_unlaunched(id, idle);
+            }
+        }
+        cl.put_scratch(chi);
+    }
+
+    fn on_reveal(&mut self, cl: &mut Cluster, t: TaskRef) {
+        self.rule.on_reveal(cl, self.est.as_ref(), self.budget.as_ref(), t);
+    }
+}
+
+/// Assemble the pipeline for `cfg.scheduler` (canonical names resolve via
+/// [`SchedulerKind::canonical_spec`](super::SchedulerKind::canonical_spec)).
+/// `alpha` is the workload's Pareto tail index — the SDA/ESE thresholds
+/// derive from it.
+pub fn build(cfg: &SimConfig, alpha: f64) -> Result<Box<dyn Scheduler>, String> {
+    Ok(Box::new(build_pipeline(cfg, alpha)?))
+}
+
+/// [`build`], returning the concrete [`Pipeline`] (component
+/// introspection for tests and diagnostics).
+pub fn build_pipeline(cfg: &SimConfig, alpha: f64) -> Result<Pipeline, String> {
+    let spec = cfg.scheduler.canonical_spec(cfg);
+    let est = estimator::for_policy(cfg, spec.rule.instrumented());
+    let ordering: Box<dyn JobOrdering> = match spec.ordering {
+        OrderingKind::Fifo => Box::new(Fifo),
+        OrderingKind::Srpt => Box::new(Srpt),
+        OrderingKind::EstSrpt => Box::new(EstSrpt),
+    };
+    let rule: Box<dyn rule::SpeculationRule> = match spec.rule {
+        RuleKind::Never => Box::new(rule::Never),
+        RuleKind::Clone => Box::new(rule::Clone),
+        RuleKind::Mantri => Box::new(rule::Mantri::new(cfg)),
+        RuleKind::Late => Box::new(rule::Late::new(cfg)),
+        RuleKind::Sda => Box::new(rule::Sda::new(cfg, alpha)),
+        RuleKind::Ese => Box::new(rule::Ese::new(cfg, alpha)),
+    };
+    // an omitted budget is the rule's canonical default — the counts the
+    // monoliths hard-wired
+    let kind = match spec.budget {
+        Some(b) => b,
+        None => match spec.rule {
+            // Never flags nothing; the placeholder budget is never queried
+            RuleKind::Never => BudgetKind::Cap(2),
+            RuleKind::Clone => BudgetKind::Fixed(cfg.clone_copies),
+            RuleKind::Mantri | RuleKind::Late => BudgetKind::Cap(2),
+            RuleKind::Sda => {
+                BudgetKind::Cap(crate::opt::p3::solve(alpha, cfg.detect_frac, cfg.r_max).c_star)
+            }
+            RuleKind::Ese => BudgetKind::Eq29,
+        },
+    };
+    // P2 is a *batch* budget: it plans the whole χ(l) snapshot and
+    // bypasses the rule's per-job clone gate, so pairing it with a rule
+    // that never clones queued jobs would let the budget usurp the
+    // rule's when-to-act axis.  Reject the contradiction loudly.
+    if kind == BudgetKind::P2 && !matches!(spec.rule, RuleKind::Clone | RuleKind::Ese) {
+        return Err(format!(
+            "'{}': the p2 budget batch-plans queued-job cloning, which the '{}' rule \
+             never performs — pair p2 with a cloning rule (clone|ese)",
+            cfg.scheduler,
+            spec.rule.as_str()
+        ));
+    }
+    let budget: Box<dyn CopyBudget> = match kind {
+        BudgetKind::Fixed(k) => Box::new(FixedBudget { copies: k, strict: cfg.clone_strict }),
+        BudgetKind::Cap(k) => Box::new(CapBudget { copies: k }),
+        BudgetKind::P2 => Box::new(P2Budget::new(cfg)?),
+        BudgetKind::Eq29 => Box::new(Eq29Budget::new(cfg, alpha)),
+    };
+    Ok(Pipeline { name: cfg.scheduler.to_string(), ordering, rule, budget, est })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SchedulerKind;
+
+    fn cfg_for(kind: SchedulerKind) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.use_runtime = false;
+        cfg.scheduler = kind;
+        cfg
+    }
+
+    #[test]
+    fn canonical_names_label_their_pipelines() {
+        for kind in SchedulerKind::all() {
+            let sched = build(&cfg_for(kind), 2.0).unwrap();
+            assert_eq!(sched.name(), kind.to_string());
+        }
+    }
+
+    #[test]
+    fn canonical_compositions_pick_the_monolith_components() {
+        let expect = [
+            (SchedulerKind::Naive, "srpt", "never", "cap"),
+            (SchedulerKind::CloneAll, "srpt", "clone", "fixed"),
+            (SchedulerKind::Mantri, "fifo", "mantri", "cap"),
+            (SchedulerKind::Late, "fifo", "late", "cap"),
+            (SchedulerKind::Sca, "srpt", "clone", "p2"),
+            (SchedulerKind::Sda, "srpt", "sda", "cap"),
+            (SchedulerKind::Ese, "srpt", "ese", "eq29"),
+        ];
+        for (kind, ordering, rule, budget) in expect {
+            let p = build_pipeline(&cfg_for(kind), 2.0).unwrap();
+            assert_eq!(p.ordering_name(), ordering, "{kind}");
+            assert_eq!(p.rule_name(), rule, "{kind}");
+            assert_eq!(p.budget_name(), budget, "{kind}");
+        }
+        // the mantri_srpt ablation upgrades the ordering axis
+        let mut cfg = cfg_for(SchedulerKind::Mantri);
+        cfg.mantri_srpt = true;
+        assert_eq!(build_pipeline(&cfg, 2.0).unwrap().ordering_name(), "srpt");
+    }
+
+    #[test]
+    fn p2_budget_requires_a_cloning_rule() {
+        // p2 batch-plans queued-job cloning; a rule that never clones
+        // queued jobs must not be silently overridden by it
+        for bad in ["srpt+never*p2", "fifo+mantri*p2", "srpt+sda*p2", "fifo+late*p2"] {
+            let kind: SchedulerKind = bad.parse().unwrap();
+            let err = match build(&cfg_for(kind), 2.0) {
+                Ok(_) => panic!("'{bad}' should be rejected"),
+                Err(e) => e,
+            };
+            assert!(err.contains("cloning rule"), "'{bad}': unhelpful error {err}");
+        }
+        for ok in ["fifo+clone*p2", "srpt+clone*p2", "est-srpt+ese*p2"] {
+            let kind: SchedulerKind = ok.parse().unwrap();
+            assert!(build(&cfg_for(kind), 2.0).is_ok(), "'{ok}' should build");
+        }
+    }
+
+    #[test]
+    fn composed_specs_label_their_pipelines() {
+        for spec in ["fifo+sda", "est-srpt+mantri", "srpt+ese*cap2"] {
+            let kind: SchedulerKind = spec.parse().unwrap();
+            let p = build_pipeline(&cfg_for(kind), 2.0).unwrap();
+            assert_eq!(p.name(), spec);
+        }
+        let kind: SchedulerKind = "est-srpt+ese*cap2".parse().unwrap();
+        let p = build_pipeline(&cfg_for(kind), 2.0).unwrap();
+        assert_eq!(p.ordering_name(), "est-srpt");
+        assert_eq!(p.rule_name(), "ese");
+        assert_eq!(p.budget_name(), "cap");
+    }
+}

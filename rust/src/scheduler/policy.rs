@@ -1,0 +1,310 @@
+//! The policy-spec grammar: `ordering+rule[*budget]`.
+//!
+//! The paper's decision model is layered — level-2/3 job ordering, a
+//! per-task speculation rule, and a copy-count decision — and the grammar
+//! names one choice per axis so sweeps can treat pipeline components as a
+//! first-class dimension:
+//!
+//! ```text
+//! spec     := ordering "+" rule [ "*" budget ]
+//! ordering := "fifo" | "srpt" | "est-srpt"
+//! rule     := "never" | "clone" | "mantri" | "late" | "sda" | "ese"
+//! budget   := "fixed" K | "cap" K | "p2" | "eq29"        (K >= 2)
+//! ```
+//!
+//! Examples: `srpt+mantri`, `fifo+sda`, `est-srpt+ese*cap2`,
+//! `srpt+clone*fixed3`.  Omitting the budget selects the rule's canonical
+//! default (see [`RuleKind::instrumented`] and `scheduler::pipeline`); the
+//! seven legacy scheduler names are themselves canonical compositions —
+//! [`SchedulerKind::canonical_spec`](crate::scheduler::SchedulerKind::canonical_spec)
+//! maps them (the README carries the full table).
+//!
+//! Everything here is plain-old-data (`Copy`), so a parsed spec travels
+//! through `SimConfig` → TOML → CLI → `ExperimentSpec` grids unchanged and
+//! `Display`/`FromStr` round-trip exactly.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Level-2/3 job ordering (the paper's layers 2 and 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrderingKind {
+    /// Arrival (id) order — Hadoop/Dryad's stock job schedulers, the
+    /// baseline ordering for Mantri/LATE.
+    Fifo,
+    /// The paper's smallest-remaining-workload-first levels, keyed by the
+    /// mean-field `#unfinished * E[x]`.
+    Srpt,
+    /// SRPT with the estimate-refined key: revealed copies contribute
+    /// their observed total work instead of `E[x]` (see
+    /// `estimator::revealed_job_workload` and the re-key contract in
+    /// `cluster::index`).
+    EstSrpt,
+}
+
+impl OrderingKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OrderingKind::Fifo => "fifo",
+            OrderingKind::Srpt => "srpt",
+            OrderingKind::EstSrpt => "est-srpt",
+        }
+    }
+}
+
+/// When to act on a task (the per-task speculation rule).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleKind {
+    /// No speculation at all (the Fig. 5 "no backup" baseline).
+    Never,
+    /// Clone every queued job at launch time (Sec. III generalized
+    /// cloning; the copy count is the budget's decision).
+    Clone,
+    /// Mantri's duplicate rule `P(t_rem > 2 E[x]) > delta` on running
+    /// single-copy tasks (+ the optional kill/restart ablation).
+    Mantri,
+    /// LATE's progress-rate percentile rule under a speculative cap.
+    Late,
+    /// SDA's event-driven reveal test: remaining work > `sigma * E[x]` at
+    /// the detection checkpoint (Sec. V, Theorem 3).
+    Sda,
+    /// ESE's slot-gated threshold backups plus the small-job cloning gate
+    /// (Algorithm 2; the clone count is the budget's decision).
+    Ese,
+}
+
+impl RuleKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleKind::Never => "never",
+            RuleKind::Clone => "clone",
+            RuleKind::Mantri => "mantri",
+            RuleKind::Late => "late",
+            RuleKind::Sda => "sda",
+            RuleKind::Ese => "ese",
+        }
+    }
+
+    /// Whether the rule owns the paper's `s_i` detection checkpoint
+    /// (selects the estimator via `estimator::for_policy`): SDA/ESE do
+    /// (and Clone, whose SCA composition orders level 2 by the same
+    /// instrumented estimator the monolith used); Mantri/LATE are blind
+    /// baselines; Never performs no estimator queries at all.
+    pub fn instrumented(&self) -> bool {
+        matches!(self, RuleKind::Clone | RuleKind::Sda | RuleKind::Ese)
+    }
+}
+
+/// How many copies a flagged task/job gets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BudgetKind {
+    /// Exactly `k` copies per task at launch-time cloning, degrading to
+    /// single copies when the cluster is tight unless `clone_strict`
+    /// (CloneAll's Sec. III semantics); `k` total copies for backups.
+    Fixed(u32),
+    /// A plain per-task total-copy target of `k` for both phases, with no
+    /// room check (resource-capped: `cap2` = at most one backup).
+    Cap(u32),
+    /// SCA's P2 utility solver over the queued batch (Algorithm 1); falls
+    /// back to single copies when the batch does not fit.  Batch budgets
+    /// own the queued-cloning decision, so `p2` pairs only with the
+    /// cloning rules (`clone`, `ese`) — `scheduler::pipeline::build`
+    /// rejects other pairings.
+    P2,
+    /// ESE's Eq. 29 optimal small-job clone count.
+    Eq29,
+}
+
+impl fmt::Display for BudgetKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BudgetKind::Fixed(k) => write!(f, "fixed{k}"),
+            BudgetKind::Cap(k) => write!(f, "cap{k}"),
+            BudgetKind::P2 => write!(f, "p2"),
+            BudgetKind::Eq29 => write!(f, "eq29"),
+        }
+    }
+}
+
+/// One composed policy: an ordering, a rule, and (optionally) an explicit
+/// budget.  `budget = None` means the rule's canonical default — it is
+/// not printed, so `Display`/`FromStr` round-trip exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PolicySpec {
+    pub ordering: OrderingKind,
+    pub rule: RuleKind,
+    pub budget: Option<BudgetKind>,
+}
+
+impl PolicySpec {
+    pub fn new(ordering: OrderingKind, rule: RuleKind, budget: Option<BudgetKind>) -> Self {
+        PolicySpec { ordering, rule, budget }
+    }
+}
+
+impl fmt::Display for PolicySpec {
+    /// Prints `ordering+rule` plus `*budget` when the budget is explicit.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}+{}", self.ordering.as_str(), self.rule.as_str())?;
+        if let Some(b) = self.budget {
+            write!(f, "*{b}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for PolicySpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (ord, rest) = s.split_once('+').ok_or_else(|| grammar_err(s))?;
+        let ordering = match ord {
+            "fifo" => OrderingKind::Fifo,
+            "srpt" => OrderingKind::Srpt,
+            "est-srpt" => OrderingKind::EstSrpt,
+            other => return Err(format!("unknown ordering '{other}' (fifo|srpt|est-srpt)")),
+        };
+        let (rule_s, budget_s) = match rest.split_once('*') {
+            Some((r, b)) => (r, Some(b)),
+            None => (rest, None),
+        };
+        let rule = match rule_s {
+            "never" => RuleKind::Never,
+            "clone" => RuleKind::Clone,
+            "mantri" => RuleKind::Mantri,
+            "late" => RuleKind::Late,
+            "sda" => RuleKind::Sda,
+            "ese" => RuleKind::Ese,
+            other => {
+                return Err(format!(
+                    "unknown speculation rule '{other}' (never|clone|mantri|late|sda|ese)"
+                ))
+            }
+        };
+        let budget = budget_s.map(parse_budget).transpose()?;
+        Ok(PolicySpec { ordering, rule, budget })
+    }
+}
+
+fn parse_budget(s: &str) -> Result<BudgetKind, String> {
+    if s == "p2" {
+        return Ok(BudgetKind::P2);
+    }
+    if s == "eq29" {
+        return Ok(BudgetKind::Eq29);
+    }
+    if let Some(k) = s.strip_prefix("fixed") {
+        return parse_copies(k, s).map(BudgetKind::Fixed);
+    }
+    if let Some(k) = s.strip_prefix("cap") {
+        return parse_copies(k, s).map(BudgetKind::Cap);
+    }
+    Err(format!("unknown copy budget '{s}' (fixedK|capK|p2|eq29, K >= 2)"))
+}
+
+fn parse_copies(k: &str, whole: &str) -> Result<u32, String> {
+    let n: u32 = k.parse().map_err(|_| format!("budget '{whole}': bad copy count '{k}'"))?;
+    if n < 2 {
+        return Err(format!("budget '{whole}': copy count must be >= 2"));
+    }
+    Ok(n)
+}
+
+fn grammar_err(s: &str) -> String {
+    format!(
+        "unknown scheduler '{s}' (expected one of the canonical names \
+         naive|clone_all|mantri|late|sca|sda|ese, or a composition \
+         'ordering+rule[*budget]' — e.g. srpt+mantri, fifo+sda, \
+         est-srpt+ese*cap2; orderings fifo|srpt|est-srpt, rules \
+         never|clone|mantri|late|sda|ese, budgets fixedK|capK|p2|eq29)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_issue_examples() {
+        let s: PolicySpec = "srpt+mantri".parse().unwrap();
+        assert_eq!(s.ordering, OrderingKind::Srpt);
+        assert_eq!(s.rule, RuleKind::Mantri);
+        assert_eq!(s.budget, None);
+        let s: PolicySpec = "fifo+sda".parse().unwrap();
+        assert_eq!(s.ordering, OrderingKind::Fifo);
+        assert_eq!(s.rule, RuleKind::Sda);
+        let s: PolicySpec = "est-srpt+ese*cap2".parse().unwrap();
+        assert_eq!(s.ordering, OrderingKind::EstSrpt);
+        assert_eq!(s.rule, RuleKind::Ese);
+        assert_eq!(s.budget, Some(BudgetKind::Cap(2)));
+    }
+
+    /// Property-style round-trip: every representable spec survives
+    /// `Display` → `FromStr` unchanged.
+    #[test]
+    fn display_parse_roundtrip_over_the_full_grid() {
+        let orderings = [OrderingKind::Fifo, OrderingKind::Srpt, OrderingKind::EstSrpt];
+        let rules = [
+            RuleKind::Never,
+            RuleKind::Clone,
+            RuleKind::Mantri,
+            RuleKind::Late,
+            RuleKind::Sda,
+            RuleKind::Ese,
+        ];
+        let budgets = [
+            None,
+            Some(BudgetKind::Fixed(2)),
+            Some(BudgetKind::Fixed(5)),
+            Some(BudgetKind::Cap(2)),
+            Some(BudgetKind::Cap(8)),
+            Some(BudgetKind::P2),
+            Some(BudgetKind::Eq29),
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for &ordering in &orderings {
+            for &rule in &rules {
+                for &budget in &budgets {
+                    let spec = PolicySpec::new(ordering, rule, budget);
+                    let text = spec.to_string();
+                    let back: PolicySpec = text.parse().unwrap_or_else(|e| {
+                        panic!("'{text}' failed to re-parse: {e}");
+                    });
+                    assert_eq!(back, spec, "round-trip changed '{text}'");
+                    assert!(seen.insert(text.clone()), "'{text}' printed twice");
+                }
+            }
+        }
+        assert_eq!(seen.len(), orderings.len() * rules.len() * budgets.len());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "srpt",
+            "srpt+",
+            "+mantri",
+            "bogus+mantri",
+            "srpt+bogus",
+            "srpt+mantri*",
+            "srpt+mantri*bogus",
+            "srpt+mantri*cap1",
+            "srpt+mantri*fixed0",
+            "srpt+mantri*capx",
+            "srpt+mantri*cap2*cap3",
+        ] {
+            assert!(bad.parse::<PolicySpec>().is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn instrumentation_follows_the_monolith_mapping() {
+        assert!(!RuleKind::Never.instrumented());
+        assert!(!RuleKind::Mantri.instrumented());
+        assert!(!RuleKind::Late.instrumented());
+        assert!(RuleKind::Clone.instrumented()); // SCA's composition
+        assert!(RuleKind::Sda.instrumented());
+        assert!(RuleKind::Ese.instrumented());
+    }
+}

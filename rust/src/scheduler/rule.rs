@@ -1,0 +1,405 @@
+//! `SpeculationRule` — the when-to-act axis of the policy pipeline.
+//!
+//! A rule decides *which* tasks (slot-gated or at the detection reveal)
+//! and *which* queued jobs (the level-3 clone gate) deserve extra copies;
+//! the [`CopyBudget`](super::budget::CopyBudget) decides *how many*.  The
+//! six rules are the monoliths' decision cores extracted verbatim — same
+//! candidate iteration (SchedIndex or naive scan per `cfg.sched_index`),
+//! same NaN-safe `total_cmp` sorts, same idle-exhaustion breaks — so each
+//! canonical composition is provably bit-identical to its retained
+//! monolith (`tests/pipeline_equivalence.rs`).
+
+use crate::cluster::job::{CopyPhase, JobId, TaskRef};
+use crate::cluster::sim::Cluster;
+use crate::config::SimConfig;
+use crate::estimator::RemainingTime;
+use crate::opt::{ese_sigma, p3};
+
+use super::budget::CopyBudget;
+
+/// The speculation-rule component of a [`Pipeline`](super::Pipeline).
+pub trait SpeculationRule {
+    fn name(&self) -> &'static str;
+
+    /// Slot-gated backup phase: examine running tasks and launch backups
+    /// (the budget supplies the per-task copy target).  Runs before the
+    /// ordering's levels 2/3, exactly where the monoliths ran theirs.
+    fn on_slot(&mut self, _cl: &mut Cluster, _est: &dyn RemainingTime, _budget: &dyn CopyBudget) {}
+
+    /// Event-driven reveal hook: a first copy crossed its detection
+    /// checkpoint (SDA acts here; others ignore it).
+    fn on_reveal(
+        &mut self,
+        _cl: &mut Cluster,
+        _est: &dyn RemainingTime,
+        _budget: &dyn CopyBudget,
+        _t: TaskRef,
+    ) {
+    }
+
+    /// Level-3 clone gate: should this queued job be cloned at launch
+    /// (count = the budget's decision)?  Called at walk time, so the
+    /// current idle count is part of the decision; bypassed when the
+    /// budget pre-plans the batch (SCA's P2).
+    fn clone_gate(&self, _cl: &Cluster, _id: JobId, _chi_len: usize) -> bool {
+        false
+    }
+}
+
+/// No speculation at all (the Fig. 5 "no backup" baseline).
+pub struct Never;
+
+impl SpeculationRule for Never {
+    fn name(&self) -> &'static str {
+        "never"
+    }
+}
+
+/// Clone every queued job at launch time (Sec. III generalized cloning);
+/// the budget decides the count — `fixed2` reproduces CloneAll, `p2`
+/// reproduces SCA's Algorithm 1.
+pub struct Clone;
+
+impl SpeculationRule for Clone {
+    fn name(&self) -> &'static str {
+        "clone"
+    }
+
+    fn clone_gate(&self, _cl: &Cluster, _id: JobId, _chi_len: usize) -> bool {
+        true
+    }
+}
+
+/// Mantri's duplicate rule `P(t_rem > 2 E[x]) > delta` on running
+/// single-copy tasks, longest estimated remaining first, plus the
+/// optional kill/restart ablation (`mantri_kill`).
+pub struct Mantri {
+    delta: f64,
+    kill: bool,
+    /// Reused duplicate-candidate buffer (no per-slot allocation).
+    cands: Vec<(f64, TaskRef)>,
+}
+
+impl Mantri {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Mantri { delta: cfg.mantri_delta, kill: cfg.mantri_kill, cands: Vec::new() }
+    }
+}
+
+impl SpeculationRule for Mantri {
+    fn name(&self) -> &'static str {
+        "mantri"
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster, est: &dyn RemainingTime, budget: &dyn CopyBudget) {
+        self.cands.clear();
+        if cl.cfg.sched_index {
+            // O(active): only tasks whose sole copy is a running first
+            // copy, in the same (job asc, task asc) order as the scan
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                let two_means = 2.0 * job.spec.dist.mean();
+                for ti in cl.index.candidates(*id) {
+                    let t = TaskRef { job: *id, task: ti };
+                    if est.task_prob_exceeds(cl, t, two_means) > self.delta {
+                        self.cands.push((est.task_remaining_work(cl, t), t));
+                    }
+                }
+            }
+        } else {
+            // naive-scan reference: every task of every running job
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                let two_means = 2.0 * job.spec.dist.mean();
+                for (ti, task) in job.tasks.iter().enumerate() {
+                    if task.done || task.copies.len() != 1 {
+                        continue;
+                    }
+                    if task.copies[0].phase != CopyPhase::Running {
+                        continue;
+                    }
+                    let t = TaskRef { job: *id, task: ti as u32 };
+                    if est.task_prob_exceeds(cl, t, two_means) > self.delta {
+                        self.cands.push((est.task_remaining_work(cl, t), t));
+                    }
+                }
+            }
+        }
+        // NaN-safe descending sort (total_cmp, not partial_cmp().unwrap())
+        self.cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let target = budget.backup_copies(cl);
+        'cands: for &(rem, t) in &self.cands {
+            // the restart rule frees its own machine, so it applies even
+            // when the cluster is full (kill the hopeless original, then
+            // relaunch afresh on the freed slot)
+            if self.kill && rem > 3.0 * cl.job(t.job).spec.dist.mean() {
+                cl.kill_copy(t, 0);
+                cl.launch_copy(t);
+                continue;
+            }
+            for _ in 1..target {
+                if cl.idle() == 0 {
+                    break 'cands;
+                }
+                cl.launch_copy(t);
+            }
+        }
+    }
+}
+
+/// Berkeley LATE: speculate on tasks whose progress *rate* falls below
+/// the slowTaskThreshold percentile, longest remaining first, under a
+/// cluster-wide cap on outstanding speculative copies.
+pub struct Late {
+    speculative_cap: f64,
+    slow_percentile: f64,
+    /// Reused per-slot buffers (no allocation in the hot hook).
+    rates: Vec<(f64, f64, TaskRef)>,
+    sorted_rates: Vec<f64>,
+    cands: Vec<(f64, TaskRef)>,
+}
+
+impl Late {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Late {
+            speculative_cap: cfg.late_speculative_cap,
+            slow_percentile: cfg.late_slow_percentile,
+            rates: Vec::new(),
+            sorted_rates: Vec::new(),
+            cands: Vec::new(),
+        }
+    }
+
+    /// Estimated progress rate of a task's primary copy:
+    /// `1 / (elapsed + estimated wall-clock remaining)`.
+    fn progress_rate(
+        &self,
+        cl: &Cluster,
+        est: &dyn RemainingTime,
+        t: TaskRef,
+    ) -> Option<(f64, f64)> {
+        let task = cl.task(t);
+        let c = task.copies.first()?;
+        if c.phase != CopyPhase::Running {
+            return None;
+        }
+        let elapsed = c.elapsed(cl.clock);
+        if elapsed <= 0.0 {
+            return None;
+        }
+        let rem = est.copy_remaining_wall(cl, t, 0);
+        Some((1.0 / (elapsed + rem), rem))
+    }
+}
+
+impl SpeculationRule for Late {
+    fn name(&self) -> &'static str {
+        "late"
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster, est: &dyn RemainingTime, budget: &dyn CopyBudget) {
+        // gather progress rates of all single-copy running tasks
+        self.rates.clear();
+        if cl.cfg.sched_index {
+            // O(active): the index yields exactly the single-running-first-
+            // copy tasks, in the scan's (job asc, task asc) order
+            for id in cl.running.iter() {
+                for ti in cl.index.candidates(*id) {
+                    let t = TaskRef { job: *id, task: ti };
+                    if let Some((rate, rem)) = self.progress_rate(cl, est, t) {
+                        self.rates.push((rate, rem, t));
+                    }
+                }
+            }
+        } else {
+            // naive-scan reference (the phase filter mirrors the index's
+            // candidate definition; progress_rate would reject non-running
+            // copies anyway, so this is behavior-neutral symmetry)
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                for (ti, task) in job.tasks.iter().enumerate() {
+                    if task.done || task.copies.len() != 1 {
+                        continue;
+                    }
+                    if task.copies[0].phase != CopyPhase::Running {
+                        continue;
+                    }
+                    let t = TaskRef { job: *id, task: ti as u32 };
+                    if let Some((rate, rem)) = self.progress_rate(cl, est, t) {
+                        self.rates.push((rate, rem, t));
+                    }
+                }
+            }
+        }
+        if self.rates.is_empty() {
+            return;
+        }
+        // slowTaskThreshold: the `slow_percentile` quantile of rates
+        // (NaN-safe total_cmp sorts throughout)
+        self.sorted_rates.clear();
+        self.sorted_rates.extend(self.rates.iter().map(|(r, _, _)| *r));
+        self.sorted_rates.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((self.sorted_rates.len() as f64 * self.slow_percentile) as usize)
+            .min(self.sorted_rates.len() - 1);
+        let threshold = self.sorted_rates[idx];
+        let cap = (self.speculative_cap * cl.machines.total() as f64) as usize;
+        // longest remaining first among the slow ones
+        self.cands.clear();
+        self.cands.extend(
+            self.rates
+                .iter()
+                .filter(|(r, _, _)| *r < threshold)
+                .map(|&(_, rem, t)| (rem, t)),
+        );
+        self.cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let target = budget.backup_copies(cl);
+        'cands: for &(_, t) in &self.cands {
+            for _ in 1..target {
+                if cl.idle() == 0 || cl.outstanding_backups >= cap {
+                    break 'cands;
+                }
+                cl.launch_copy(t);
+            }
+        }
+    }
+}
+
+/// SDA's Straggler Detection (Sec. V-B): when a first copy crosses its
+/// detection checkpoint with estimated remaining work > `sigma * E[x]`,
+/// bring the task to the budget's copy target immediately (Theorem 3:
+/// `c* = 2` under Pareto — the canonical default budget).
+pub struct Sda {
+    /// Detection threshold multiplier (sigma_i).
+    pub sigma: f64,
+    /// Stragglers detected / backups actually launched (diagnostics).
+    pub detected: u64,
+    pub backups: u64,
+}
+
+impl Sda {
+    pub fn new(cfg: &SimConfig, alpha: f64) -> Self {
+        let policy = p3::solve(alpha, cfg.detect_frac, cfg.r_max);
+        let sigma = cfg.sigma.unwrap_or(policy.sigma);
+        // Theorem 3: one backup is optimal under Pareto
+        debug_assert_eq!(policy.c_star, 2, "Theorem 3 violated: c* = {}", policy.c_star);
+        Sda { sigma, detected: 0, backups: 0 }
+    }
+}
+
+impl SpeculationRule for Sda {
+    fn name(&self) -> &'static str {
+        "sda"
+    }
+
+    fn on_reveal(
+        &mut self,
+        cl: &mut Cluster,
+        est: &dyn RemainingTime,
+        budget: &dyn CopyBudget,
+        t: TaskRef,
+    ) {
+        // only the original triggers detection, and only once
+        if cl.task(t).copies.len() != 1 {
+            return;
+        }
+        let mean = cl.job(t.job).spec.dist.mean();
+        let remaining = est.copy_remaining_work(cl, t, 0);
+        if remaining > self.sigma * mean {
+            self.detected += 1;
+            let target = budget.backup_copies(cl);
+            for _ in 1..target {
+                if cl.idle() == 0 {
+                    break;
+                }
+                if cl.launch_copy(t) {
+                    self.backups += 1;
+                }
+            }
+        }
+    }
+}
+
+/// ESE (Algorithm 2): slot-gated backups for running tasks with
+/// `t_rem > sigma * E[x]` (longest first), plus the small-job clone gate
+/// `m < eta * N(l)/|chi(l)|` and `E[x] < xi` at level 3 (the count is the
+/// budget's decision — Eq. 29 by default).
+pub struct Ese {
+    pub sigma: f64,
+    eta: f64,
+    xi: f64,
+    /// Reused D(l) buffer (no per-slot allocation).
+    d: Vec<(f64, TaskRef)>,
+    /// Diagnostics.
+    pub backups: u64,
+}
+
+impl Ese {
+    pub fn new(cfg: &SimConfig, alpha: f64) -> Self {
+        let sigma = cfg.sigma.unwrap_or_else(|| ese_sigma::sigma_star(alpha));
+        Ese { sigma, eta: cfg.eta_small, xi: cfg.xi_small, d: Vec::new(), backups: 0 }
+    }
+}
+
+impl SpeculationRule for Ese {
+    fn name(&self) -> &'static str {
+        "ese"
+    }
+
+    fn on_slot(&mut self, cl: &mut Cluster, est: &dyn RemainingTime, budget: &dyn CopyBudget) {
+        // backup candidates D(l), longest estimated remaining first
+        self.d.clear();
+        if cl.cfg.sched_index {
+            // O(active): only single-running-first-copy tasks, same
+            // (job asc, task asc) order as the scan
+            for id in cl.running.iter() {
+                let threshold = self.sigma * cl.job(*id).spec.dist.mean();
+                for ti in cl.index.candidates(*id) {
+                    let t = TaskRef { job: *id, task: ti };
+                    let rem = est.task_remaining_work(cl, t);
+                    if rem > threshold {
+                        self.d.push((rem, t));
+                    }
+                }
+            }
+        } else {
+            // naive-scan reference
+            for id in cl.running.iter() {
+                let job = cl.job(*id);
+                let threshold = self.sigma * job.spec.dist.mean();
+                for (ti, task) in job.tasks.iter().enumerate() {
+                    if task.done || task.copies.len() != 1 {
+                        continue;
+                    }
+                    if task.copies[0].phase != CopyPhase::Running {
+                        continue;
+                    }
+                    let t = TaskRef { job: *id, task: ti as u32 };
+                    let rem = est.task_remaining_work(cl, t);
+                    if rem > threshold {
+                        self.d.push((rem, t));
+                    }
+                }
+            }
+        }
+        // NaN-safe descending sort (total_cmp, not partial_cmp().unwrap())
+        self.d.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let target = budget.backup_copies(cl);
+        'd: for &(_, t) in &self.d {
+            for _ in 1..target {
+                if cl.idle() == 0 {
+                    break 'd;
+                }
+                if cl.launch_copy(t) {
+                    self.backups += 1;
+                }
+            }
+        }
+    }
+
+    fn clone_gate(&self, cl: &Cluster, id: JobId, chi_len: usize) -> bool {
+        let job = cl.job(id);
+        let m = job.spec.num_tasks as f64;
+        let mean = job.spec.dist.mean();
+        m < self.eta * cl.idle() as f64 / chi_len.max(1) as f64 && mean < self.xi
+    }
+}

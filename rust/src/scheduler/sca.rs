@@ -9,6 +9,11 @@
 //! The P2 solve goes through a [`P2Backend`]: the PJRT executor running the
 //! AOT-compiled JAX/Pallas artifact on the hot path, or the pure-rust
 //! gradient-projection twin when artifacts are unavailable.
+//!
+//! **Retained monolith.**  Since the policy-pipeline redesign this is the
+//! `legacy_sched` equivalence reference for the canonical composition
+//! `srpt+clone*p2` (see `scheduler::pipeline`); `tests/pipeline_equivalence.rs`
+//! proves byte-identical sweep CSVs, after which the monolith can go.
 
 use crate::cluster::sim::Cluster;
 use crate::config::SimConfig;
@@ -135,7 +140,7 @@ impl Sca {
 }
 
 impl Scheduler for Sca {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "sca"
     }
 

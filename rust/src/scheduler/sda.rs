@@ -19,6 +19,11 @@
 //! incremental [`SchedIndex`](crate::cluster::index::SchedIndex) under the
 //! default `sched_index = true` (SDA's own level 1 is event-driven and
 //! O(1) per checkpoint already).
+//!
+//! **Retained monolith.**  Since the policy-pipeline redesign this is the
+//! `legacy_sched` equivalence reference for the canonical composition
+//! `srpt+sda` (see `scheduler::pipeline`); `tests/pipeline_equivalence.rs`
+//! proves byte-identical sweep CSVs, after which the monolith can go.
 
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::Cluster;
@@ -57,7 +62,7 @@ impl Sda {
 }
 
 impl Scheduler for Sda {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "sda"
     }
 

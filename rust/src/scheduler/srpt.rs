@@ -83,6 +83,69 @@ pub fn schedule_running_by(cl: &mut Cluster, est: &dyn RemainingTime) -> usize {
     launched
 }
 
+/// Level 2 under the estimate-driven ordering (`est-srpt`): smallest
+/// *reveal-refined* remaining workload first — tasks whose first copy
+/// crossed the detection checkpoint contribute their observed total work
+/// instead of `E[x]` (see [`crate::estimator::revealed_job_workload`]).
+///
+/// The key is piecewise-constant between cluster mutations (it changes
+/// only at reveal/kill/finish events), which is what lets the
+/// [`SchedIndex`](crate::cluster::index::SchedIndex) maintain the
+/// est-keyed level-2 twin via the re-key hooks at those mutation points;
+/// the `sched_index = false` fallback recomputes the identical key per
+/// slot (same values, same `total_cmp` stable order, bit-identical
+/// decisions).  A debug assertion re-checks the re-key contract on every
+/// slot of a debug build.
+///
+/// The scan is also the automatic fallback whenever the cluster's index
+/// is not maintaining est keys (`SchedIndex::tracks_est`) — e.g. a
+/// hand-built cluster whose config never named an est-srpt policy — so
+/// the ordering can never silently read an empty twin.
+pub fn schedule_running_est(cl: &mut Cluster) -> usize {
+    let mut launched = 0;
+    if cl.idle() == 0 {
+        return 0;
+    }
+    if cl.cfg.sched_index && cl.index.tracks_est() {
+        let mut buf = cl.index.take_scratch();
+        buf.extend(cl.index.level2_jobs_est());
+        #[cfg(debug_assertions)]
+        for &id in &buf {
+            debug_assert_eq!(
+                cl.index.est_key(id).map(f64::to_bits),
+                Some(crate::estimator::revealed_job_workload(cl, id).to_bits()),
+                "est-srpt re-key contract violated for job {id:?}"
+            );
+        }
+        for &id in &buf {
+            let idle = cl.idle();
+            if idle == 0 {
+                break;
+            }
+            launched += cl.launch_unlaunched(id, idle);
+        }
+        cl.put_scratch(buf);
+        return launched;
+    }
+    // naive-scan reference: recompute the reveal-refined key per job
+    let mut keyed: Vec<(f64, JobId)> = cl
+        .running
+        .iter()
+        .copied()
+        .filter(|id| cl.job(*id).unlaunched() > 0)
+        .map(|id| (crate::estimator::revealed_job_workload(cl, id), id))
+        .collect();
+    keyed.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (_, id) in keyed {
+        let idle = cl.idle();
+        if idle == 0 {
+            break;
+        }
+        launched += cl.launch_unlaunched(id, idle);
+    }
+    launched
+}
+
 /// Level 3: launch queued jobs (one copy per task) smallest total workload
 /// first.  Jobs may be partially launched when machines run out; the rest
 /// is picked up by level 2 at the next slot.  Returns copies launched.

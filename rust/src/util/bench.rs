@@ -136,7 +136,8 @@ impl ThroughputRun {
 /// One (policy, load, machines) grid cell, measured on both query paths.
 #[derive(Clone, Debug)]
 pub struct ThroughputCell {
-    pub policy: &'static str,
+    /// Policy label: a canonical name or a composition spec.
+    pub policy: String,
     /// `"light"` or `"heavy"`.
     pub load: &'static str,
     pub lambda: f64,
@@ -155,7 +156,7 @@ impl ThroughputCell {
 
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
-        m.insert("policy".into(), Json::Str(self.policy.to_string()));
+        m.insert("policy".into(), Json::Str(self.policy.clone()));
         m.insert("load".into(), Json::Str(self.load.to_string()));
         m.insert("lambda".into(), Json::Num(self.lambda));
         m.insert("machines".into(), Json::Num(self.machines as f64));
@@ -194,10 +195,21 @@ pub fn time_simulation(
     Ok(ThroughputRun::from_result(&res, wall))
 }
 
+/// The suite's policy axis: the seven canonical policies plus two
+/// composed pipelines, so the policy-pipeline layer (grammar dispatch,
+/// est-srpt re-keying) is perf-tracked alongside the monolith-equivalent
+/// compositions.
+pub fn suite_policies() -> Vec<SchedulerKind> {
+    let mut kinds: Vec<SchedulerKind> = SchedulerKind::all().to_vec();
+    kinds.push("fifo+sda".parse().expect("valid composition"));
+    kinds.push("est-srpt+mantri".parse().expect("valid composition"));
+    kinds
+}
+
 /// Run the standardized suite, invoking `progress` after each finished
-/// cell (the CLI prints a table row).  Policies × {light, heavy} ×
-/// [`SUITE_MACHINES`]; every cell shares its (load, M) pre-sampled
-/// workload across policies and paths.
+/// cell (the CLI prints a table row).  [`suite_policies`] × {light,
+/// heavy} × [`SUITE_MACHINES`]; every cell shares its (load, M)
+/// pre-sampled workload across policies and paths.
 pub fn run_throughput_suite(
     quick: bool,
     mut progress: impl FnMut(&ThroughputCell),
@@ -212,11 +224,11 @@ pub fn run_throughput_suite(
             base.use_runtime = false; // rust P2 twin: no artifact dependency
             let wl_cfg = WorkloadConfig::paper(lambda);
             let workload = generator::generate(&wl_cfg, horizon, base.seed);
-            for kind in SchedulerKind::all() {
+            for kind in suite_policies() {
                 let indexed = time_simulation(&base, &wl_cfg, workload.clone(), kind, true)?;
                 let scan = time_simulation(&base, &wl_cfg, workload.clone(), kind, false)?;
                 let cell = ThroughputCell {
-                    policy: kind.as_str(),
+                    policy: kind.to_string(),
                     load,
                     lambda,
                     machines,
@@ -229,6 +241,28 @@ pub fn run_throughput_suite(
         }
     }
     Ok(cells)
+}
+
+/// Render a finished suite as the EXPERIMENTS.md §Perf markdown table —
+/// what CI appends to the job summary so the committed table can be
+/// refreshed from a real measured artifact by copy-paste.
+pub fn throughput_markdown(cells: &[ThroughputCell]) -> String {
+    let mut out = String::from(
+        "| policy | load | M | indexed ev/s | scan ev/s | speedup |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.0} | {:.0} | {:.2}x |\n",
+            c.policy,
+            c.load,
+            c.machines,
+            c.indexed.events_per_sec,
+            c.scan.events_per_sec,
+            c.speedup()
+        ));
+    }
+    out
 }
 
 /// Serialize a finished suite to the `BENCH_sim.json` document.
@@ -297,7 +331,7 @@ mod tests {
         assert!(indexed.events > 0);
         assert!(indexed.events_per_sec > 0.0);
         let cell = ThroughputCell {
-            policy: "sda",
+            policy: "sda".to_string(),
             load: "light",
             lambda: 0.3,
             machines: 40,
@@ -305,6 +339,9 @@ mod tests {
             scan,
         };
         assert!(cell.speedup() > 0.0);
+        let md = throughput_markdown(std::slice::from_ref(&cell));
+        assert!(md.starts_with("| policy |"));
+        assert!(md.contains("| sda | light | 40 |"));
         let doc = throughput_json(&[cell], true);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
@@ -314,6 +351,15 @@ mod tests {
         assert_eq!(cells[0].get("policy").unwrap().as_str(), Some("sda"));
         assert_eq!(cells[0].get("machines").unwrap().as_usize(), Some(40));
         assert!(cells[0].path(&["indexed", "events_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn suite_covers_canonical_and_composed_policies() {
+        let kinds = suite_policies();
+        assert_eq!(kinds.len(), 9, "7 canonical + 2 composed");
+        let labels: Vec<String> = kinds.iter().map(|k| k.to_string()).collect();
+        assert!(labels.contains(&"fifo+sda".to_string()));
+        assert!(labels.contains(&"est-srpt+mantri".to_string()));
     }
 
     #[test]

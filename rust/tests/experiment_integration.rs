@@ -145,8 +145,11 @@ fn mixed_cluster_between_homogeneous_extremes() {
 
 /// Every scheduler kind plus the ablation variants that exercise the
 /// extra index paths: Mantri's SRPT baseline (level-2/3 through the
-/// index), Mantri's kill rule (kill_copy + relaunch on a candidate task)
-/// and the unit-naive estimator row.
+/// index), Mantri's kill rule (kill_copy + relaunch on a candidate task),
+/// the unit-naive estimator row, and composed pipelines — including
+/// est-srpt ones, whose level-2 twin is re-keyed at the reveal/kill/
+/// finish mutation points and must still match the `sched_index = false`
+/// scan fallback exactly (the re-key contract's auto-fallback guarantee).
 fn equivalence_policies() -> Vec<PolicyVariant> {
     let mut policies: Vec<PolicyVariant> =
         SchedulerKind::all().into_iter().map(PolicyVariant::kind).collect();
@@ -159,6 +162,9 @@ fn equivalence_policies() -> Vec<PolicyVariant> {
     policies.push(PolicyVariant::patched("sda_unit_naive", SchedulerKind::Sda, |c| {
         c.speed_aware = false;
     }));
+    for spec in ["fifo+sda", "est-srpt+sda", "est-srpt+mantri", "est-srpt+ese*cap2"] {
+        policies.push(PolicyVariant::policy(spec).unwrap());
+    }
     policies
 }
 

@@ -1,0 +1,246 @@
+//! The policy-pipeline redesign's acceptance suite.
+//!
+//! 1. **Monolith equivalence** — every canonical policy name now builds a
+//!    composed `Pipeline` (`scheduler::pipeline`); with the identical
+//!    spec, the pipeline (`legacy_sched = false`, the default) and the
+//!    retained monolith (`legacy_sched = true`) must serialize
+//!    byte-identical sweep CSVs — same launches, same tie-breaks, same
+//!    everything — across every scenario axis and the ablation knobs the
+//!    compositions fold in (`mantri_srpt`, `mantri_kill`, `clone_copies`,
+//!    `clone_strict`, unit-naive estimators).
+//! 2. **Novel compositions** — specs with no monolith (`"fifo+sda"`,
+//!    `"est-srpt+mantri"`) run end-to-end through the sweep engine and
+//!    appear as distinct labeled rows.
+//! 3. **The est-srpt ordering is real** — it changes scheduling relative
+//!    to mean-field SRPT once reveals refine the keys (its index path is
+//!    proven equivalent to the scan fallback in
+//!    `experiment_integration.rs`).
+
+use specsim::cluster::machine::{MachineClass, SlowdownConfig};
+use specsim::config::{SimConfig, WorkloadConfig};
+use specsim::experiment::{
+    ClusterScenario, ExperimentSpec, LoadPoint, PolicyVariant, Runner,
+};
+use specsim::metrics::report;
+use specsim::scheduler::SchedulerKind;
+
+/// The seven canonical kinds plus the ablation variants whose knobs the
+/// compositions fold in.  Every variant here has a retained monolith to
+/// compare against.
+fn canonical_policies() -> Vec<PolicyVariant> {
+    let mut policies: Vec<PolicyVariant> =
+        SchedulerKind::all().into_iter().map(PolicyVariant::kind).collect();
+    policies.push(PolicyVariant::patched("mantri_srpt", SchedulerKind::Mantri, |c| {
+        c.mantri_srpt = true;
+    }));
+    policies.push(PolicyVariant::patched("mantri_kill", SchedulerKind::Mantri, |c| {
+        c.mantri_kill = true;
+    }));
+    policies.push(PolicyVariant::patched("sda_unit_naive", SchedulerKind::Sda, |c| {
+        c.speed_aware = false;
+    }));
+    policies.push(PolicyVariant::patched("clone3", SchedulerKind::CloneAll, |c| {
+        c.clone_copies = 3;
+    }));
+    policies.push(PolicyVariant::patched("clone_strict", SchedulerKind::CloneAll, |c| {
+        c.clone_strict = true;
+    }));
+    policies
+}
+
+fn equivalence_spec(
+    name: &str,
+    scenario: ClusterScenario,
+    loads: Vec<LoadPoint>,
+    threads: usize,
+) -> ExperimentSpec {
+    let mut base = SimConfig::default();
+    base.machines = 100;
+    base.horizon = 100.0;
+    base.use_runtime = false;
+    let mut spec = ExperimentSpec::new(name, base);
+    spec.scenario = scenario;
+    spec.policies = canonical_policies();
+    spec.loads = loads;
+    spec.seeds = vec![7];
+    spec.threads = threads;
+    spec
+}
+
+fn csv_with_legacy(spec: &ExperimentSpec, legacy: bool) -> String {
+    let mut spec = spec.clone();
+    spec.base.legacy_sched = legacy;
+    report::sweep_csv(&Runner::run(&spec).unwrap())
+}
+
+/// The acceptance bar: canonical compositions are byte-identical to the
+/// pre-redesign monoliths across {light, near-capacity} loads and every
+/// scenario axis.
+#[test]
+fn canonical_pipelines_byte_identical_to_monoliths() {
+    let scenarios: Vec<(&str, ClusterScenario, Vec<LoadPoint>)> = vec![
+        (
+            "homogeneous",
+            ClusterScenario::homogeneous(),
+            vec![LoadPoint::lambda(0.4), LoadPoint::lambda(0.75)],
+        ),
+        (
+            "machine-classes",
+            ClusterScenario::heterogeneous(vec![
+                MachineClass::new(60, 1.0),
+                MachineClass::new(40, 0.5),
+            ]),
+            vec![LoadPoint::lambda(0.5)],
+        ),
+        (
+            "slowdown",
+            ClusterScenario::homogeneous().with_slowdown(SlowdownConfig::new(0.2, 3.0)),
+            vec![LoadPoint::lambda(0.5)],
+        ),
+        (
+            "bursty",
+            ClusterScenario::homogeneous(),
+            vec![LoadPoint::new("bursty0.5", 0.5, WorkloadConfig::bursty_paper(0.5, 3.0))],
+        ),
+    ];
+    for (name, scenario, loads) in scenarios {
+        let spec = equivalence_spec(name, scenario, loads, 2);
+        let monolith = csv_with_legacy(&spec, true);
+        let pipeline = csv_with_legacy(&spec, false);
+        assert!(monolith.lines().count() > spec.policies.len(), "{name}: empty sweep?");
+        assert_eq!(
+            pipeline, monolith,
+            "{name}: the composed pipeline diverged from the retained monolith"
+        );
+    }
+}
+
+/// Both build paths must also agree on the scan fallback (the monoliths
+/// and the pipeline share the `sched_index = false` reference scans).
+#[test]
+fn pipeline_equivalence_holds_on_the_scan_path_too() {
+    let mut spec = equivalence_spec(
+        "scan",
+        ClusterScenario::homogeneous(),
+        vec![LoadPoint::lambda(0.6)],
+        2,
+    );
+    spec.base.sched_index = false;
+    assert_eq!(csv_with_legacy(&spec, false), csv_with_legacy(&spec, true));
+}
+
+/// Novel compositions — no monolith exists for these — run end-to-end
+/// through the sweep engine and land as distinct labeled CSV rows.
+#[test]
+fn novel_compositions_sweep_end_to_end() {
+    let mut base = SimConfig::default();
+    base.machines = 100;
+    base.horizon = 150.0;
+    base.use_runtime = false;
+    let mut spec = ExperimentSpec::new("novel", base);
+    spec.policies = vec![
+        PolicyVariant::policy("fifo+sda").unwrap(),
+        PolicyVariant::policy("est-srpt+mantri").unwrap(),
+    ];
+    spec.loads = vec![LoadPoint::lambda(0.4), LoadPoint::lambda(0.75)];
+    spec.seeds = vec![1];
+    spec.threads = 2;
+    let sweep = Runner::run(&spec).unwrap();
+    let csv = report::sweep_csv(&sweep);
+    let fifo_sda: Vec<&str> = csv.lines().filter(|l| l.starts_with("fifo+sda,")).collect();
+    let est_mantri: Vec<&str> =
+        csv.lines().filter(|l| l.starts_with("est-srpt+mantri,")).collect();
+    assert_eq!(fifo_sda.len(), 2, "one row per load:\n{csv}");
+    assert_eq!(est_mantri.len(), 2, "one row per load:\n{csv}");
+    for pi in 0..2 {
+        for li in 0..2 {
+            let res = sweep.merged(pi, li);
+            assert!(!res.completed.is_empty(), "({pi},{li}) completed nothing");
+        }
+    }
+    // both compositions actually speculate (sda reveals / mantri δ-tests)
+    assert!(sweep.merged(0, 1).speculative_launches > 0);
+    assert!(sweep.merged(1, 1).speculative_launches > 0);
+    // and the two pipelines are genuinely different policies
+    assert_ne!(fifo_sda[1], est_mantri[1].replace("est-srpt+mantri,", "fifo+sda,"));
+}
+
+/// The estimate-driven ordering must *matter*: once reveals refine the
+/// level-2 keys, `est-srpt+sda` schedules differently from the mean-field
+/// `srpt+sda` on a congested cluster (same workload, same seed).
+#[test]
+fn est_ordering_diverges_from_mean_field_srpt() {
+    let mut base = SimConfig::default();
+    base.machines = 100;
+    base.horizon = 150.0;
+    base.use_runtime = false;
+    let mut spec = ExperimentSpec::new("est-vs-mean", base);
+    spec.policies = vec![
+        PolicyVariant::policy("srpt+sda").unwrap(),
+        PolicyVariant::policy("est-srpt+sda").unwrap(),
+    ];
+    // near capacity: queues build, so level-2 order decides real launches
+    spec.loads = vec![LoadPoint::lambda(0.75)];
+    spec.seeds = vec![1, 2, 3];
+    spec.threads = 2;
+    let sweep = Runner::run(&spec).unwrap();
+    let mean_field = sweep.merged(0, 0);
+    let est = sweep.merged(1, 0);
+    assert!(!mean_field.completed.is_empty());
+    assert!(!est.completed.is_empty());
+    assert!(
+        (mean_field.mean_flowtime() - est.mean_flowtime()).abs() > 1e-12
+            || mean_field.speculative_launches != est.speculative_launches,
+        "est-srpt should change scheduling under congestion (flowtime {} vs {})",
+        mean_field.mean_flowtime(),
+        est.mean_flowtime()
+    );
+    // `srpt+sda` is byte-identical to the canonical `sda` (same pipeline,
+    // different label): the composition grammar adds labels, not drift
+    let mut canon = ExperimentSpec::new("canon", {
+        let mut b = SimConfig::default();
+        b.machines = 100;
+        b.horizon = 150.0;
+        b.use_runtime = false;
+        b
+    });
+    canon.policies = vec![PolicyVariant::kind(SchedulerKind::Sda)];
+    canon.loads = vec![LoadPoint::lambda(0.75)];
+    canon.seeds = vec![1, 2, 3];
+    canon.threads = 2;
+    let canon_sweep = Runner::run(&canon).unwrap();
+    let canon_res = canon_sweep.merged(0, 0);
+    assert_eq!(canon_res.completed.len(), mean_field.completed.len());
+    assert_eq!(canon_res.total_machine_time, mean_field.total_machine_time);
+    assert_eq!(canon_res.speculative_launches, mean_field.speculative_launches);
+}
+
+/// Satellite: `clone_copies` is configurable and the copy count bites —
+/// 3-way cloning burns measurably more machine time than 2-way on an
+/// uncongested cluster.
+#[test]
+fn clone_copies_knob_changes_resource_use() {
+    let run_with = |copies: u32| {
+        let mut base = SimConfig::default();
+        base.machines = 2000;
+        base.horizon = 100.0;
+        base.use_runtime = false;
+        base.clone_copies = copies;
+        let mut spec = ExperimentSpec::new("clone-k", base);
+        spec.policies = vec![PolicyVariant::kind(SchedulerKind::CloneAll)];
+        spec.loads = vec![LoadPoint::lambda(0.5)];
+        spec.seeds = vec![5];
+        spec.threads = 1;
+        Runner::run(&spec).unwrap().merged(0, 0)
+    };
+    let two = run_with(2);
+    let three = run_with(3);
+    assert!(two.speculative_launches > 0);
+    assert!(
+        three.speculative_launches > two.speculative_launches,
+        "3-way cloning should launch more backups: {} vs {}",
+        three.speculative_launches,
+        two.speculative_launches
+    );
+    assert!(three.total_machine_time > two.total_machine_time);
+}
