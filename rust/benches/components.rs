@@ -9,7 +9,7 @@ use specsim::config::{SimConfig, WorkloadConfig};
 use specsim::opt::gradient::{GradientSolver, P2Job, P2Problem};
 use specsim::opt::pareto_math;
 use specsim::runtime::solver::PjrtP2;
-use specsim::scheduler::sca::P2Backend;
+use specsim::scheduler::budget::P2Backend;
 use specsim::scheduler::{self, SchedulerKind};
 use specsim::stats::{Pareto, Pcg64};
 use specsim::util::bench::run;

@@ -2,6 +2,13 @@
 //! number so simultaneous events process in insertion order, keeping runs
 //! deterministic).
 //!
+//! Scheduling-slot boundaries do **not** live in this heap: since the
+//! demand-driven wakeup planner retired the `SlotTick` polling loop, the
+//! slot grid is interleaved with the heap by the run loops themselves
+//! (`Simulator::run`, `coordinator::master`), with the defined tie
+//! semantics that a slot at time `t` observes every event at `t` — see
+//! [`crate::cluster::sim::SlotGate`] and DESIGN.md §12.
+//!
 //! ## Stale-entry hygiene
 //!
 //! A killed copy leaves its `CopyFinish` (and possibly `Checkpoint`) entry
@@ -28,8 +35,6 @@ pub enum Event {
     /// A first copy crosses the detection fraction s_i: its true remaining
     /// time becomes visible to the scheduler (straggler checkpoint).
     Checkpoint { task: TaskRef, copy: u32 },
-    /// Slot boundary: the scheduler makes its slotted decisions.
-    SlotTick,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -148,7 +153,7 @@ mod tests {
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
-        q.push(3.0, Event::SlotTick);
+        q.push(3.0, Event::Arrival(JobId(3)));
         q.push(1.0, Event::Arrival(JobId(1)));
         q.push(2.0, Event::Arrival(JobId(2)));
         let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
@@ -173,11 +178,11 @@ mod tests {
     fn peak_tracks_high_water_mark() {
         let mut q = EventQueue::new();
         for i in 0..5 {
-            q.push(i as f64, Event::SlotTick);
+            q.push(i as f64, Event::Arrival(JobId(i)));
         }
         q.pop();
         q.pop();
-        q.push(9.0, Event::SlotTick);
+        q.push(9.0, Event::Arrival(JobId(9)));
         assert_eq!(q.len(), 4);
         assert_eq!(q.peak_len(), 5);
     }
@@ -211,7 +216,7 @@ mod tests {
     #[test]
     fn small_heaps_never_compact() {
         let mut q = EventQueue::new();
-        q.push(1.0, Event::SlotTick);
+        q.push(1.0, Event::Arrival(JobId(1)));
         q.note_stale(1);
         assert!(!q.should_compact(), "below the compaction floor");
     }
@@ -219,8 +224,8 @@ mod tests {
     #[test]
     fn peek_matches_pop() {
         let mut q = EventQueue::new();
-        q.push(5.0, Event::SlotTick);
-        q.push(4.0, Event::SlotTick);
+        q.push(5.0, Event::Arrival(JobId(5)));
+        q.push(4.0, Event::Arrival(JobId(4)));
         assert_eq!(q.peek_time(), Some(4.0));
         assert_eq!(q.pop().unwrap().0, 4.0);
         assert_eq!(q.len(), 1);

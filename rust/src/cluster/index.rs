@@ -45,6 +45,12 @@
 //! proves byte-identical `sweep_csv` output across every policy and
 //! scenario axis.  See `rust/DESIGN.md` §10 for the full contract table
 //! (which mutation updates which index).
+//!
+//! The same mutation points also raise the wakeup planner's
+//! [`Cluster::sched_dirty`](super::sim::Cluster::sched_dirty) flag
+//! (independently of `sched_index`, a bare bool store): the index makes
+//! a fired slot cost O(active), the planner makes a quiet slot not fire
+//! at all — see `rust/DESIGN.md` §12.
 
 use std::cmp::Ordering;
 use std::collections::BTreeSet;

@@ -55,6 +55,15 @@ pub struct Cluster {
     /// off the retained naive scans run instead, with no index upkeep —
     /// the true pre-index baseline.  See [`SchedIndex`].
     pub index: SchedIndex,
+    /// Wakeup-planner dirty flag: set by every cluster mutation (arrival,
+    /// launch, kill, finish, checkpoint reveal) and cleared when a
+    /// scheduling slot fires, so "has anything changed since the last
+    /// fired slot?" is an O(1) read.  A set flag forces the next grid
+    /// slot; see [`SlotGate`] and DESIGN.md §12.  Maintained
+    /// unconditionally (a bool store at mutation points — the `wakeup`
+    /// toggle gates only the *skipping*, so `wakeup = false` reproduces
+    /// the polled loop exactly).
+    pub sched_dirty: bool,
     pub(crate) events: EventQueue,
     first_durations: Vec<Vec<f64>>,
     job_rngs: Vec<Pcg64>,
@@ -103,6 +112,9 @@ impl Cluster {
             queued: BTreeSet::new(),
             running: BTreeSet::new(),
             index,
+            // dirty at birth: the first slot always fires (initial state
+            // has never been scheduled)
+            sched_dirty: true,
             events: EventQueue::new(),
             first_durations: workload.first_durations,
             job_rngs,
@@ -149,6 +161,7 @@ impl Cluster {
     /// bench suite's `scan` cells and the equivalence reference measure.
     pub(crate) fn arrive(&mut self, id: JobId) {
         self.queued.insert(id);
+        self.sched_dirty = true;
         if self.cfg.sched_index {
             self.index.job_arrived(&self.jobs[id.0 as usize]);
         }
@@ -164,6 +177,9 @@ impl Cluster {
             return false;
         }
         tstate.copies[copy as usize].revealed = true;
+        // a reveal can flip slot-gated threshold predicates (ESE's
+        // sigma-test reads the revealed truth), so it dirties the planner
+        self.sched_dirty = true;
         if self.cfg.sched_index {
             self.index.sync_task(&self.jobs[t.job.0 as usize], t);
             self.sync_est(t);
@@ -189,7 +205,8 @@ impl Cluster {
     }
 
     /// Live mode: process all pending events up to (and including) time `t`
-    /// and advance the clock to `t`.  Slot decisions are the caller's job.
+    /// and advance the clock to `t`.  Slot decisions are the caller's job
+    /// (typically through a [`SlotGate`]).
     pub fn advance_to(&mut self, t: f64, sched: &mut dyn Scheduler) {
         while let Some(et) = self.events.peek_time() {
             if et > t {
@@ -205,7 +222,6 @@ impl Cluster {
                         sched.on_reveal(self, task);
                     }
                 }
-                Event::SlotTick => {}
             }
         }
         self.clock = t;
@@ -344,6 +360,7 @@ impl Cluster {
             self.queued.remove(&t.job);
             self.running.insert(t.job);
         }
+        self.sched_dirty = true;
         if self.cfg.sched_index {
             let job = &self.jobs[ji];
             self.index.sync_task(job, t);
@@ -409,6 +426,7 @@ impl Cluster {
         }
         self.machines.release(machine);
         self.events.note_stale(stranded);
+        self.sched_dirty = true;
         if self.cfg.sched_index {
             self.index.sync_task(&self.jobs[t.job.0 as usize], t);
             // killing a revealed copy reverts the task's est contribution
@@ -439,7 +457,7 @@ impl Cluster {
                 jobs[task.job.0 as usize].tasks[task.task as usize].copies[copy as usize].phase
                     == CopyPhase::Running
             }
-            Event::Arrival(_) | Event::SlotTick => true,
+            Event::Arrival(_) => true,
         });
     }
 
@@ -465,6 +483,7 @@ impl Cluster {
             task.done = true;
             task.finish = Some(now);
         }
+        self.sched_dirty = true;
         self.machines
             .release(self.jobs[ji].tasks[t.task as usize].copies[copy as usize].machine);
         if copy > 0 {
@@ -520,8 +539,16 @@ pub struct SimResult {
     pub horizon: f64,
     /// Events popped by the run loop — the perf harness's throughput
     /// numerator (events/sec).  A pure function of the simulated system,
-    /// identical across `sched_index` on/off.
+    /// identical across `sched_index` on/off *and* `wakeup` on/off (slot
+    /// boundaries no longer live in the heap and are counted separately
+    /// below).
     pub events_processed: u64,
+    /// Grid slots whose `on_slot` actually ran.  With `wakeup = false`
+    /// this is every grid point up to the horizon (the polled loop).
+    pub ticks_fired: u64,
+    /// Grid slots the wakeup planner proved to be no-ops and never ran.
+    /// Always 0 with `wakeup = false`.
+    pub ticks_skipped: u64,
     /// High-water mark of the event heap (must track active copies, not
     /// copies ever launched — see `EventQueue` hygiene).
     pub peak_event_queue: usize,
@@ -566,7 +593,96 @@ impl SimResult {
     }
 }
 
-/// Drives the event loop: arrivals, copy completions, checkpoints, slots.
+/// The demand-driven wakeup planner's slot gate, shared by the batch run
+/// loop ([`Simulator::run`]) and the live master (`coordinator::master`).
+///
+/// The slot grid itself is unchanged — decisions stay quantized to the
+/// `slot_dt` chain — but a grid slot only *runs the scheduler* when one
+/// of two wakeup conditions holds:
+///
+/// 1. **dirty** — some cluster mutation happened since the last fired
+///    slot ([`Cluster::sched_dirty`]: arrival, launch, kill, finish,
+///    checkpoint reveal — every point the `SchedIndex` already hooks);
+/// 2. **a time-dependent predicate may have flipped** — the scheduler's
+///    [`Scheduler::next_decision_time`] horizon (computed lazily at the
+///    first clean slot after a fired one, from what is then still the
+///    post-`on_slot` state) falls at or before this slot.
+///
+/// When neither holds the slot is a provable no-op: after a fired slot,
+/// launchable work remains only when the cluster is full (any idle-count
+/// change is a mutation), and the per-rule horizons bound exactly when
+/// Mantri's delta-gate, LATE's progress-rate window or ESE's
+/// sigma-threshold can next flip on their own (DESIGN.md §12 carries the
+/// per-rule derivations).  Skipped slots therefore change nothing the
+/// polled loop would have observed — pinned byte-identical by
+/// `tests/pipeline_equivalence.rs`.
+///
+/// [`Scheduler::next_decision_time`]: crate::scheduler::Scheduler::next_decision_time
+pub struct SlotGate {
+    enabled: bool,
+    /// The scheduler's wakeup horizon, computed **lazily** at the first
+    /// clean (non-dirty) slot after a fired one: outer `None` = stale,
+    /// `Some(inner)` = valid since the last fired slot, where the inner
+    /// `None` means only a mutation can make a future slot act.  Busy
+    /// regimes — where the dirty flag short-circuits every slot — never
+    /// pay for a horizon they would discard.
+    hint: Option<Option<f64>>,
+    /// Slots that ran `on_slot` / slots proven no-ops and skipped.
+    pub fired: u64,
+    pub skipped: u64,
+    /// Wall-clock spent inside fired slots (`Scheduler::on_slot`) — the
+    /// [`SimResult::slot_hook_secs`] source.  Timed here, inside the
+    /// fire branch, so a skipped slot never takes a timestamp: the skip
+    /// path costs exactly the flag/hint check the design promises.
+    pub hook: std::time::Duration,
+}
+
+impl SlotGate {
+    /// `enabled = false` fires every slot — the retired polling loop,
+    /// kept as the wakeup equivalence reference (`--no-wakeup`).
+    pub fn new(enabled: bool) -> Self {
+        SlotGate { enabled, hint: None, fired: 0, skipped: 0, hook: std::time::Duration::ZERO }
+    }
+
+    /// Must the slot at grid time `t` run the scheduler?  Deferring the
+    /// horizon query to the first clean slot is exact, not approximate:
+    /// with no mutations since the fired slot the cluster state is the
+    /// post-`on_slot` state, and every horizon is either an absolute
+    /// flip instant (the clock cancels out of `start + e*`) or "now"
+    /// (`<= t` whenever it was `<=` the fired slot's time).
+    fn due(&mut self, cl: &Cluster, sched: &dyn Scheduler, t: f64) -> bool {
+        if !self.enabled || cl.sched_dirty {
+            return true;
+        }
+        let hint = *self.hint.get_or_insert_with(|| sched.next_decision_time(cl));
+        matches!(hint, Some(h) if h <= t)
+    }
+
+    /// Run the slot at grid time `t`: fire `on_slot` when due (clearing
+    /// the dirty flag and invalidating the cached horizon), count it
+    /// skipped otherwise.  Returns whether it fired.  The caller must
+    /// have processed every event with time `<= t` first — a slot
+    /// observes all simultaneous events (DESIGN.md §12).
+    pub fn slot(&mut self, cl: &mut Cluster, sched: &mut dyn Scheduler, t: f64) -> bool {
+        if self.due(cl, &*sched, t) {
+            let t0 = std::time::Instant::now();
+            cl.clock = t;
+            sched.on_slot(cl);
+            self.hook += t0.elapsed();
+            cl.sched_dirty = false;
+            self.hint = None; // recompute at the next clean slot
+            self.fired += 1;
+            true
+        } else {
+            self.skipped += 1;
+            false
+        }
+    }
+}
+
+/// Drives the event loop: arrivals, copy completions, checkpoints, and
+/// the slot grid (interleaved by the wakeup planner — slots no longer
+/// live in the event heap).
 pub struct Simulator {
     pub cluster: Cluster,
     scheduler: Box<dyn Scheduler>,
@@ -579,41 +695,50 @@ impl Simulator {
             let t = job.spec.arrival;
             cluster.events.push(t, Event::Arrival(JobId(i as u32)));
         }
-        cluster.events.push(0.0, Event::SlotTick);
         Simulator { cluster, scheduler }
     }
 
     /// Run to the horizon and aggregate.
+    ///
+    /// The slot grid is the same repeated-addition chain the polled loop
+    /// re-armed (`t += slot_dt`, bit-identical grid points), with the tie
+    /// rule that events at exactly a grid time process *before* that
+    /// slot; the [`SlotGate`] then decides fire vs skip per grid point.
     pub fn run(mut self) -> SimResult {
         let horizon = self.cluster.cfg.horizon;
         let slot_dt = self.cluster.cfg.slot_dt;
+        let mut gate = SlotGate::new(self.cluster.cfg.wakeup);
+        let mut next_slot = 0.0_f64;
         let mut events_processed: u64 = 0;
-        let mut slot_hook = std::time::Duration::ZERO;
-        while let Some((time, event)) = self.cluster.events.pop() {
-            if time > horizon {
-                break;
-            }
-            self.cluster.clock = time;
-            events_processed += 1;
-            match event {
-                Event::Arrival(id) => self.cluster.arrive(id),
-                Event::CopyFinish { task, copy } => {
-                    self.cluster.copy_finished(task, copy);
+        loop {
+            let slot_pending = next_slot <= horizon;
+            // events strictly before the grid head — and at exactly the
+            // grid head — go first (a slot observes its instant fully)
+            let next_event = self.cluster.events.peek_time();
+            let take_event = next_event.is_some_and(|et| !slot_pending || et <= next_slot);
+            if take_event {
+                let (time, event) = self.cluster.events.pop().unwrap();
+                if time > horizon {
+                    break;
                 }
-                Event::Checkpoint { task, copy } => {
-                    if self.cluster.reveal_copy(task, copy) {
-                        self.scheduler.on_reveal(&mut self.cluster, task);
+                self.cluster.clock = time;
+                events_processed += 1;
+                match event {
+                    Event::Arrival(id) => self.cluster.arrive(id),
+                    Event::CopyFinish { task, copy } => {
+                        self.cluster.copy_finished(task, copy);
+                    }
+                    Event::Checkpoint { task, copy } => {
+                        if self.cluster.reveal_copy(task, copy) {
+                            self.scheduler.on_reveal(&mut self.cluster, task);
+                        }
                     }
                 }
-                Event::SlotTick => {
-                    let t0 = std::time::Instant::now();
-                    self.scheduler.on_slot(&mut self.cluster);
-                    slot_hook += t0.elapsed();
-                    let next = time + slot_dt;
-                    if next <= horizon {
-                        self.cluster.events.push(next, Event::SlotTick);
-                    }
-                }
+            } else if slot_pending {
+                gate.slot(&mut self.cluster, self.scheduler.as_mut(), next_slot);
+                next_slot += slot_dt;
+            } else {
+                break; // no events left, no slots within the horizon
             }
         }
         let cl = self.cluster;
@@ -631,8 +756,10 @@ impl Simulator {
             speculative_launches: cl.speculative_launches,
             horizon,
             events_processed,
+            ticks_fired: gate.fired,
+            ticks_skipped: gate.skipped,
             peak_event_queue: cl.events.peak_len(),
-            slot_hook_secs: slot_hook.as_secs_f64(),
+            slot_hook_secs: gate.hook.as_secs_f64(),
         }
     }
 }
@@ -736,6 +863,113 @@ mod tests {
             assert_eq!(cl.index.queued_task_count(), scan_tasks);
         }
         assert!(!cl.completed.is_empty(), "live cluster should complete jobs");
+    }
+
+    /// The wakeup planner's unit bar: at light load (λ = 0.3) most grid
+    /// slots are provable no-ops and are skipped, while the planner-on
+    /// and planner-off (polled) runs remain identical in every simulated
+    /// quantity — same completions, same machine time, same event count.
+    #[test]
+    fn wakeup_skips_noop_slots_at_light_load() {
+        let run_wakeup = |wakeup: bool, kind: scheduler::SchedulerKind| {
+            let mut cfg = small_cfg();
+            cfg.machines = 200;
+            cfg.horizon = 120.0;
+            // a fine grid: the polling-dominated regime the planner targets
+            cfg.slot_dt = 0.1;
+            cfg.scheduler = kind;
+            cfg.wakeup = wakeup;
+            cfg.use_runtime = false;
+            let wl_cfg = WorkloadConfig::paper(0.3);
+            let wl = generator::generate(&wl_cfg, cfg.horizon, cfg.seed);
+            let sched = scheduler::build_for(&cfg, &wl_cfg, Some(&wl)).unwrap();
+            Simulator::new(cfg, wl, sched).run()
+        };
+        for kind in scheduler::SchedulerKind::all() {
+            let on = run_wakeup(true, kind);
+            let off = run_wakeup(false, kind);
+            // LATE's percentile ranking moves continuously, so its horizon
+            // is conservative whenever >= 1/percentile candidates run —
+            // it only skips globally-quiet stretches, which this workload
+            // need not contain; every other policy must skip plenty
+            if kind != scheduler::SchedulerKind::Late {
+                assert!(on.ticks_skipped > 0, "{kind:?}: no slots skipped at lambda = 0.3");
+            }
+            assert_eq!(off.ticks_skipped, 0, "{kind:?}: polled loop must fire every slot");
+            assert_eq!(
+                on.ticks_fired + on.ticks_skipped,
+                off.ticks_fired,
+                "{kind:?}: the slot grid itself must be identical"
+            );
+            assert_eq!(on.completed.len(), off.completed.len(), "{kind:?}");
+            assert_eq!(on.total_machine_time, off.total_machine_time, "{kind:?}");
+            assert_eq!(on.speculative_launches, off.speculative_launches, "{kind:?}");
+            assert_eq!(on.events_processed, off.events_processed, "{kind:?}");
+            for (a, b) in on.completed.iter().zip(&off.completed) {
+                assert_eq!(a.job, b.job, "{kind:?}");
+                assert_eq!(a.flowtime.to_bits(), b.flowtime.to_bits(), "{kind:?}");
+                assert_eq!(a.resource.to_bits(), b.resource.to_bits(), "{kind:?}");
+            }
+        }
+    }
+
+    /// LATE does skip once the cluster goes quiet: a single early job on
+    /// an ample cluster leaves a long tail of slots with no running
+    /// single-copy task — all provable no-ops.
+    #[test]
+    fn late_skips_quiet_tail() {
+        let mut cfg = small_cfg();
+        cfg.machines = 50;
+        cfg.horizon = 100.0;
+        cfg.scheduler = scheduler::SchedulerKind::Late;
+        cfg.use_runtime = false;
+        let wl = generator::generate(
+            &WorkloadConfig::SingleJob { tasks: 10, mean: 1.0, alpha: 2.0 },
+            cfg.horizon,
+            cfg.seed,
+        );
+        let sched = scheduler::build(&cfg, &WorkloadConfig::paper(0.3)).unwrap();
+        let res = Simulator::new(cfg, wl, sched).run();
+        assert_eq!(res.completed.len(), 1);
+        assert!(
+            res.ticks_skipped > 0,
+            "LATE should skip the quiet tail after the job drains"
+        );
+    }
+
+    /// Live-mode spot check: a [`SlotGate`]-driven `advance_to` loop makes
+    /// the identical decisions as one that fires the scheduler on every
+    /// slot, while actually skipping some.
+    #[test]
+    fn live_slot_gate_matches_always_firing() {
+        let live = |gated: bool| {
+            let mut cfg = small_cfg();
+            cfg.machines = 30;
+            cfg.horizon = f64::INFINITY;
+            cfg.scheduler = scheduler::SchedulerKind::Sda;
+            cfg.use_runtime = false;
+            let mut sched = scheduler::build(&cfg, &WorkloadConfig::paper(0.3)).unwrap();
+            let mut cl = Cluster::new_live(cfg);
+            let mut gate = SlotGate::new(gated);
+            let mut rng = crate::stats::Pcg64::new(17, 0);
+            for step in 0..400u32 {
+                if step % 9 == 0 {
+                    cl.add_job(1.0 + rng.next_f64(), 2.0, 1 + (step % 5));
+                }
+                let t = cl.clock + 0.5;
+                cl.advance_to(t, sched.as_mut());
+                gate.slot(&mut cl, sched.as_mut(), t);
+            }
+            (cl, gate)
+        };
+        let (polled_cl, polled_gate) = live(false);
+        let (gated_cl, gated_gate) = live(true);
+        assert_eq!(polled_gate.skipped, 0);
+        assert!(gated_gate.skipped > 0, "the live gate should skip quiet slots");
+        assert!(!gated_cl.completed.is_empty());
+        assert_eq!(gated_cl.completed.len(), polled_cl.completed.len());
+        assert_eq!(gated_cl.total_machine_time, polled_cl.total_machine_time);
+        assert_eq!(gated_cl.speculative_launches, polled_cl.speculative_launches);
     }
 
     #[test]

@@ -80,12 +80,15 @@ pub struct SimConfig {
     pub p2_batch: usize,
     /// Collect a per-job record stream (disable for huge sweeps).
     pub record_jobs: bool,
-    /// Build the retained monolithic scheduler implementations instead of
-    /// their canonical pipeline compositions — the equivalence reference
-    /// for the policy-pipeline redesign (`tests/pipeline_equivalence.rs`
-    /// proves byte-identical sweep CSVs).  Canonical names only; composed
-    /// policy specs always run the pipeline.
-    pub legacy_sched: bool,
+    /// Demand-driven scheduler wakeups (the default): grid slots that are
+    /// provably no-ops — no cluster mutation since the last fired slot
+    /// and no time-dependent rule predicate due (`Scheduler::
+    /// next_decision_time`) — never run the scheduler.  Decisions stay
+    /// quantized to the `slot_dt` grid and are bit-identical to the
+    /// polled loop; `false` (CLI `--no-wakeup`) fires every grid slot —
+    /// the retired polling loop, kept as the equivalence reference.  See
+    /// `cluster::sim::SlotGate` and DESIGN.md §12.
+    pub wakeup: bool,
     /// Drive scheduler slot hooks from the incremental `SchedIndex`
     /// (O(active) queries — the default) instead of the retained naive
     /// full scans (O(everything) — the equivalence reference).  Both paths
@@ -122,7 +125,7 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".to_string(),
             p2_batch: 64,
             record_jobs: true,
-            legacy_sched: false,
+            wakeup: true,
             sched_index: true,
         }
     }
@@ -247,7 +250,7 @@ impl SimConfig {
                 }
                 "p2_batch" => cfg.p2_batch = doc.i64(key).ok_or("p2_batch: int")? as usize,
                 "record_jobs" => cfg.record_jobs = doc.bool(key).ok_or("record_jobs: bool")?,
-                "legacy_sched" => cfg.legacy_sched = doc.bool(key).ok_or("legacy_sched: bool")?,
+                "wakeup" => cfg.wakeup = doc.bool(key).ok_or("wakeup: bool")?,
                 "sched_index" => cfg.sched_index = doc.bool(key).ok_or("sched_index: bool")?,
                 other => return Err(format!("unknown config key '{other}'")),
             }
@@ -301,7 +304,7 @@ impl SimConfig {
         let _ = writeln!(s, "artifacts_dir = \"{}\"", self.artifacts_dir);
         let _ = writeln!(s, "p2_batch = {}", self.p2_batch);
         let _ = writeln!(s, "record_jobs = {}", self.record_jobs);
-        let _ = writeln!(s, "legacy_sched = {}", self.legacy_sched);
+        let _ = writeln!(s, "wakeup = {}", self.wakeup);
         let _ = writeln!(s, "sched_index = {}", self.sched_index);
         s
     }
@@ -458,12 +461,14 @@ mod tests {
     }
 
     #[test]
-    fn legacy_sched_flag_roundtrips() {
-        assert!(!SimConfig::default().legacy_sched, "pipeline is the default");
-        let cfg = SimConfig::from_toml("legacy_sched = true").unwrap();
-        assert!(cfg.legacy_sched);
+    fn wakeup_flag_roundtrips() {
+        assert!(SimConfig::default().wakeup, "demand-driven wakeups are the default");
+        let cfg = SimConfig::from_toml("wakeup = false").unwrap();
+        assert!(!cfg.wakeup);
         let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
-        assert!(back.legacy_sched);
+        assert!(!back.wakeup);
+        // the policy-pipeline equivalence flag is gone with the monoliths
+        assert!(SimConfig::from_toml("legacy_sched = true").is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::Cluster;
 
-use super::{observe, RemainingTime};
+use super::{flip_guard, observe, RemainingTime};
 
 /// Conditional-mean / conditional-survival estimates given elapsed time
 /// only; never the revealed truth, never the host speed.
@@ -41,5 +41,27 @@ impl RemainingTime for Blind {
     fn copy_prob_exceeds(&self, cl: &Cluster, t: TaskRef, copy: usize, a: f64) -> f64 {
         let o = observe(cl, t, copy);
         o.dist.sf_remaining(o.elapsed, a)
+    }
+
+    /// Exact inverse of the survival predicate above: elapsed time is the
+    /// only moving part, so the predicate first flips when wall-clock
+    /// elapsed reaches `sf_remaining_flip(a, p)` (work read as wall).
+    fn copy_prob_flip_time(
+        &self,
+        cl: &Cluster,
+        t: TaskRef,
+        copy: usize,
+        a: f64,
+        p: f64,
+    ) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        o.dist.sf_remaining_flip(a, p).map(|e| flip_guard(cl.clock + (e - o.elapsed)))
+    }
+
+    /// Exact inverse of the conditional-mean estimate (same unit-naive
+    /// elapsed-as-work reading as the forward query).
+    fn copy_work_flip_time(&self, cl: &Cluster, t: TaskRef, copy: usize, w: f64) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        Some(flip_guard(cl.clock + (o.dist.mean_remaining_flip(w) - o.elapsed)))
     }
 }

@@ -67,9 +67,8 @@
 //! use specsim::cluster::job::{JobId, JobSpec, TaskRef};
 //! use specsim::cluster::machine::MachineClass;
 //! use specsim::cluster::sim::{Simulator, Workload};
-//! use specsim::config::SimConfig;
+//! use specsim::config::{SimConfig, WorkloadConfig};
 //! use specsim::estimator::{RemainingTime, SpeedAware};
-//! use specsim::scheduler::naive::Naive;
 //! use specsim::stats::Pareto;
 //!
 //! // one 3-work-unit task on a single 2x-speed host
@@ -81,7 +80,9 @@
 //!     specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
 //!     first_durations: vec![vec![3.0]],
 //! };
-//! let mut sim = Simulator::new(cfg, wl, Box::new(Naive));
+//! // default policy: naive (the srpt+never pipeline) — a do-nothing driver
+//! let sched = specsim::scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+//! let mut sim = Simulator::new(cfg, wl, sched);
 //! let t = TaskRef { job: JobId(0), task: 0 };
 //! assert!(sim.cluster.launch_copy(t));
 //!
@@ -181,6 +182,16 @@ pub fn revealed_job_workload(cl: &Cluster, id: JobId) -> f64 {
     sum
 }
 
+/// Shave a hair off a computed predicate-flip instant so floating-point
+/// error in the closed-form inverses (`powf` round-trips) can only make
+/// the wakeup planner fire *early* — a harmless extra no-op slot — never
+/// late, which would skip a slot the polled loop acts on.  The margin is
+/// far below any slot grid, so it costs at most one extra fired slot per
+/// flip.
+pub(crate) fn flip_guard(t: f64) -> f64 {
+    t - 1e-9 * (1.0 + t.abs())
+}
+
 /// Minimum of `per_copy` over the running copies of `t` — the task-level
 /// fold shared by every query (a task finishes when its first copy does).
 /// Infinite when nothing runs.
@@ -212,6 +223,35 @@ pub trait RemainingTime {
     /// Estimated probability that the remaining *work* of copy `copy`
     /// exceeds `a` (Mantri's duplicate rule compares this to its `delta`).
     fn copy_prob_exceeds(&self, cl: &Cluster, t: TaskRef, copy: usize, a: f64) -> f64;
+
+    /// Wakeup-planner query: the earliest simulated instant at which
+    /// `copy_prob_exceeds(cl, t, copy, a) > p` could *first become true*,
+    /// assuming the predicate is currently false and no cluster mutation
+    /// happens in between.  `None` = it can never flip on its own.
+    ///
+    /// The conservative default — "now" — forces the planner to fire
+    /// every slot, which is always correct; implementations override it
+    /// with the exact inverse of their own estimate (see
+    /// [`Pareto::sf_remaining_flip`]).
+    fn copy_prob_flip_time(
+        &self,
+        cl: &Cluster,
+        _t: TaskRef,
+        _copy: usize,
+        _a: f64,
+        _p: f64,
+    ) -> Option<f64> {
+        Some(cl.clock)
+    }
+
+    /// Wakeup-planner query: the earliest simulated instant at which
+    /// `copy_remaining_work(cl, t, copy) > w` could first become true,
+    /// under the same contract as [`RemainingTime::copy_prob_flip_time`]
+    /// (currently false, no mutations; `None` = never; the default forces
+    /// every slot).  See [`Pareto::mean_remaining_flip`].
+    fn copy_work_flip_time(&self, cl: &Cluster, _t: TaskRef, _copy: usize, _w: f64) -> Option<f64> {
+        Some(cl.clock)
+    }
 
     /// Task-level remaining work: the minimum over running copies.
     fn task_remaining_work(&self, cl: &Cluster, t: TaskRef) -> f64 {
@@ -260,7 +300,7 @@ mod tests {
     use crate::cluster::job::JobSpec;
     use crate::cluster::machine::MachineClass;
     use crate::cluster::sim::{Simulator, Workload};
-    use crate::scheduler::naive::Naive;
+    use crate::config::WorkloadConfig;
 
     fn task0() -> TaskRef {
         TaskRef { job: JobId(0), task: 0 }
@@ -278,7 +318,8 @@ mod tests {
             specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
             first_durations: vec![vec![work]],
         };
-        let mut sim = Simulator::new(cfg, wl, Box::new(Naive));
+        let sched = crate::scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let mut sim = Simulator::new(cfg, wl, sched);
         assert!(sim.cluster.launch_copy(task0()));
         sim.cluster
     }
@@ -411,6 +452,46 @@ mod tests {
         // a finished task contributes nothing
         cl.jobs[0].tasks[0].done = true;
         assert_eq!(revealed_job_workload(&cl, id), 0.0);
+    }
+
+    /// The wakeup-planner flip queries invert the forward predicates per
+    /// estimator: advancing the clock to just past the returned instant
+    /// flips the predicate, and the early-bias guard means the returned
+    /// instant itself is never *after* the true flip.
+    #[test]
+    fn flip_times_invert_forward_predicates() {
+        // 2x-speed host so the speed conversion is exercised too
+        let mut cl = cluster_with(vec![MachineClass::new(2, 2.0)], 30.0);
+        cl.clock = 0.25;
+        let t = task0();
+        let mean = cl.job(JobId(0)).spec.dist.mean();
+        let (a, delta) = (2.0 * mean, 0.25);
+        let est = SpeedAware::blind();
+        assert!(est.task_prob_exceeds(&cl, t, a) <= delta, "test premise: currently false");
+        let flip = est.copy_prob_flip_time(&cl, t, 0, a, delta).unwrap();
+        assert!(flip > cl.clock);
+        // just before: still false; just after: flipped
+        let mut before = cluster_with(vec![MachineClass::new(2, 2.0)], 30.0);
+        before.clock = flip - 1e-6;
+        assert!(est.task_prob_exceeds(&before, t, a) <= delta);
+        let mut after = cluster_with(vec![MachineClass::new(2, 2.0)], 30.0);
+        after.clock = flip + 1e-6;
+        assert!(est.task_prob_exceeds(&after, t, a) > delta);
+        // the sigma-threshold work flip behaves the same way
+        let w = 1.7 * mean;
+        assert!(est.task_remaining_work(&cl, t) <= w);
+        let wflip = est.copy_work_flip_time(&cl, t, 0, w).unwrap();
+        let mut after = cluster_with(vec![MachineClass::new(2, 2.0)], 30.0);
+        after.clock = wflip + 1e-6;
+        assert!(est.task_remaining_work(&after, t) > w);
+        // a revealed copy's estimate decays: it can never flip up
+        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        let est = SpeedAware::revealed();
+        assert_eq!(est.copy_prob_flip_time(&cl, t, 0, a, delta), None);
+        assert_eq!(est.copy_work_flip_time(&cl, t, 0, w), None);
+        assert_eq!(Revealed.copy_work_flip_time(&cl, t, 0, w), None);
+        // blind estimators ignore the reveal and still report a flip
+        assert!(Blind.copy_prob_flip_time(&cl, t, 0, a, delta).is_some());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::Cluster;
 
-use super::{observe, RemainingTime};
+use super::{flip_guard, observe, RemainingTime};
 
 /// Post-checkpoint truth, blind conditional estimates before it.
 pub struct Revealed;
@@ -46,6 +46,36 @@ impl RemainingTime for Revealed {
             }
         } else {
             o.dist.sf_remaining(o.elapsed, a)
+        }
+    }
+
+    /// A revealed copy's remaining time only *decays* with the clock, so a
+    /// currently-false threshold predicate can never flip up on its own —
+    /// `None`.  Unrevealed copies use the blind inverse; the reveal event
+    /// itself is a mutation and forces a wakeup independently.
+    fn copy_prob_flip_time(
+        &self,
+        cl: &Cluster,
+        t: TaskRef,
+        copy: usize,
+        a: f64,
+        p: f64,
+    ) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        if o.revealed {
+            None
+        } else {
+            o.dist.sf_remaining_flip(a, p).map(|e| flip_guard(cl.clock + (e - o.elapsed)))
+        }
+    }
+
+    /// Same decay argument as [`RemainingTime::copy_prob_flip_time`].
+    fn copy_work_flip_time(&self, cl: &Cluster, t: TaskRef, copy: usize, w: f64) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        if o.revealed {
+            None
+        } else {
+            Some(flip_guard(cl.clock + (o.dist.mean_remaining_flip(w) - o.elapsed)))
         }
     }
 }

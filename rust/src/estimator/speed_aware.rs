@@ -22,7 +22,7 @@
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::Cluster;
 
-use super::{observe, RemainingTime};
+use super::{flip_guard, observe, RemainingTime};
 
 /// Class-speed-corrected estimator; `reveal` selects whether the paper's
 /// `s_i`-checkpoint revelation is used (SCA/SDA/ESE) or not (a
@@ -80,6 +80,40 @@ impl RemainingTime for SpeedAware {
             }
         } else {
             o.dist.sf_remaining(o.elapsed * o.speed, a)
+        }
+    }
+
+    /// Exact inverse of the speed-corrected survival predicate: the flip
+    /// sits at work-equivalent elapsed `e*`, i.e. `(e* - elapsed·v) / v`
+    /// wall-clock from now on a class-speed-`v` host.  Revealed copies
+    /// (with `reveal`) decay and never flip up — `None`, same argument as
+    /// [`Revealed`](super::Revealed).
+    fn copy_prob_flip_time(
+        &self,
+        cl: &Cluster,
+        t: TaskRef,
+        copy: usize,
+        a: f64,
+        p: f64,
+    ) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        if self.reveal && o.revealed {
+            None
+        } else {
+            o.dist
+                .sf_remaining_flip(a, p)
+                .map(|e| flip_guard(cl.clock + (e - o.elapsed * o.speed) / o.speed))
+        }
+    }
+
+    fn copy_work_flip_time(&self, cl: &Cluster, t: TaskRef, copy: usize, w: f64) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        if self.reveal && o.revealed {
+            None
+        } else {
+            Some(flip_guard(
+                cl.clock + (o.dist.mean_remaining_flip(w) - o.elapsed * o.speed) / o.speed,
+            ))
         }
     }
 }

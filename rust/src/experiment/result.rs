@@ -71,6 +71,8 @@ impl SweepResult {
             acc.total_machine_time += c.result.total_machine_time;
             acc.speculative_launches += c.result.speculative_launches;
             acc.events_processed += c.result.events_processed;
+            acc.ticks_fired += c.result.ticks_fired;
+            acc.ticks_skipped += c.result.ticks_skipped;
             acc.peak_event_queue = acc.peak_event_queue.max(c.result.peak_event_queue);
             acc.slot_hook_secs += c.result.slot_hook_secs;
         }

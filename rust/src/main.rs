@@ -41,13 +41,17 @@ COMMANDS
              [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
              [--threads N]
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
-  bench      [--quick] [--out FILE] [--md FILE]   standardized throughput
-             suite: every policy (7 canonical + 2 composed pipelines) x
-             {light lambda=0.3, heavy lambda~0.9*lambda^U} x
-             M in {500, 4000}, each cell on both the SchedIndex hot path
-             and the naive-scan reference; writes machine-readable JSON
-             (default BENCH_sim.json at the cwd) and, with --md, the
-             EXPERIMENTS.md-ready markdown table
+  bench      [--quick] [--out FILE] [--md FILE] [--check-wakeup]
+             standardized throughput suite: every policy (7 canonical +
+             2 composed pipelines) x {light lambda=0.3, heavy
+             lambda~0.9*lambda^U} x M in {500, 4000}, each cell on the
+             SchedIndex hot path, the naive-scan reference, and the
+             polled (--no-wakeup) loop; light cells run the fine
+             slot grid (slot_dt = 0.001) the wakeup planner targets;
+             writes machine-readable JSON (default BENCH_sim.json at the
+             cwd) and, with --md, the EXPERIMENTS.md-ready markdown
+             table; --check-wakeup fails unless the (naive, light,
+             M=4000) cell skips >= 50% of slots at >= 2x wall speedup
   trace      --out FILE [--lambda L] [--horizon T] [--seed S]
   serve      [--machines N] [--rate R] [--jobs J] [--policy spec]
              [--artifacts-dir DIR]
@@ -69,12 +73,15 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
                                     scans instead of the incremental
                                     SchedIndex (equivalence reference; same
                                     decisions, slower)
+  --slot-dt DT                      scheduling-slot length (> 0; default
+                                    1.0 — the paper's slotted grid)
+  --no-wakeup                       fire the scheduler at every slot-grid
+                                    point (the retired polling loop)
+                                    instead of demand-driven wakeups
+                                    (equivalence reference; same decisions,
+                                    slower on fine grids / light loads)
   --clone-copies N                  clones per task for clone_all / the
                                     clone rule's fixed budget (default 2)
-  --legacy-sched                    build the retained monolithic scheduler
-                                    implementations instead of their
-                                    pipeline compositions (equivalence
-                                    reference; canonical names only)
 
 POLICY SPECS
   A policy is a canonical name — naive clone_all mantri late sca sda ese —
@@ -136,11 +143,16 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
     if args.has("no-sched-index") {
         cfg.sched_index = false;
     }
-    if args.has("legacy-sched") {
-        cfg.legacy_sched = true;
+    if args.has("no-wakeup") {
+        cfg.wakeup = false;
     }
     if args.has("no-runtime") {
         cfg.use_runtime = false;
+    }
+    // the TOML key always existed; the flag finally reaches it (validated
+    // > 0 by cfg.validate(), which every consumer runs)
+    if let Some(dt) = args.f64_opt("slot-dt")? {
+        cfg.slot_dt = dt;
     }
     cfg.clone_copies = args.usize("clone-copies", cfg.clone_copies as usize)? as u32;
     Ok(())
@@ -223,7 +235,15 @@ fn run() -> Result<(), String> {
     };
     let args = Args::parse(
         rest,
-        &["no-runtime", "no-speed-aware", "no-sched-index", "legacy-sched", "quick", "help"],
+        &[
+            "no-runtime",
+            "no-speed-aware",
+            "no-sched-index",
+            "no-wakeup",
+            "quick",
+            "check-wakeup",
+            "help",
+        ],
     )?;
     if args.has("help") {
         println!("{USAGE}");
@@ -309,25 +329,35 @@ fn run() -> Result<(), String> {
             let out = args.string("out", "BENCH_sim.json");
             println!(
                 "specsim throughput suite ({}; horizon {}): policies x \
-                 {{light, heavy}} x M in {:?}, indexed vs naive-scan",
+                 {{light, heavy}} x M in {:?}, indexed vs naive-scan vs polled",
                 if quick { "quick" } else { "full" },
                 specsim::util::bench::suite_horizon(quick),
                 specsim::util::bench::SUITE_MACHINES,
             );
             println!(
-                "{:<10} {:>5} {:>8} {:>7} {:>14} {:>14} {:>8}",
-                "policy", "M", "lambda", "load", "indexed ev/s", "scan ev/s", "speedup"
+                "{:<10} {:>5} {:>8} {:>7} {:>13} {:>13} {:>8} {:>6} {:>8}",
+                "policy",
+                "M",
+                "lambda",
+                "load",
+                "indexed ev/s",
+                "scan ev/s",
+                "speedup",
+                "skip",
+                "wakeup"
             );
             let cells = specsim::util::bench::run_throughput_suite(quick, |c| {
                 println!(
-                    "{:<10} {:>5} {:>8.3} {:>7} {:>14.0} {:>14.0} {:>7.2}x",
+                    "{:<10} {:>5} {:>8.3} {:>7} {:>13.0} {:>13.0} {:>7.2}x {:>5.0}% {:>7.2}x",
                     c.policy,
                     c.machines,
                     c.lambda,
                     c.load,
                     c.indexed.events_per_sec,
                     c.scan.events_per_sec,
-                    c.speedup()
+                    c.speedup(),
+                    100.0 * c.indexed.skip_ratio(),
+                    c.wakeup_speedup()
                 );
             })?;
             let doc = specsim::util::bench::throughput_json(&cells, quick);
@@ -338,6 +368,10 @@ fn run() -> Result<(), String> {
                 println!("wrote the EXPERIMENTS.md-ready table to {md}");
             }
             println!("wrote {} cells to {out}", cells.len());
+            if args.has("check-wakeup") {
+                specsim::util::bench::check_wakeup_gate(&cells)?;
+                println!("wakeup gate passed: (naive, light, M=4000) skips >= 50% at >= 2x");
+            }
         }
         "trace" => {
             let out = PathBuf::from(args.str("out").ok_or("trace: --out FILE required")?);
@@ -356,6 +390,7 @@ fn run() -> Result<(), String> {
             cfg.scheduler = policy_arg(&args, "sda").parse()?;
             cfg.artifacts_dir = args.string("artifacts-dir", "artifacts");
             apply_scenario_flags(&mut cfg, &args)?;
+            cfg.validate()?;
             let rate = args.f64("rate", 50.0)?;
             let jobs = args.u64("jobs", 500)?;
             let master = Master::new(cfg);

@@ -185,6 +185,8 @@ mod tests {
             utilization: 0.5,
             horizon: 10.0,
             events_processed: 42,
+            ticks_fired: 5,
+            ticks_skipped: 5,
             peak_event_queue: 7,
             slot_hook_secs: 0.0,
         };

@@ -3,7 +3,7 @@
 //! tables) used by the figure harness.
 
 use crate::opt::gradient::P2Problem;
-use crate::scheduler::sca::P2Backend;
+use crate::scheduler::budget::P2Backend;
 
 use super::artifacts::Manifest;
 use super::pjrt::PjrtExecutor;

@@ -16,7 +16,28 @@ use crate::opt::ese_sigma;
 use crate::opt::gradient::{GradientSolver, P2Job, P2Problem};
 use crate::opt::p2::round_and_repair;
 
-use super::sca::P2Backend;
+/// Anything that can solve a P2 batch (continuous clone counts).
+/// Not `Send`: the PJRT backend is thread-pinned (see `runtime::pjrt`).
+/// (Moved here from the deleted `sca` monolith — the [`P2Budget`] is the
+/// only remaining consumer.)
+pub trait P2Backend {
+    fn backend_name(&self) -> &'static str;
+    fn solve(&mut self, p: &P2Problem) -> Vec<f64>;
+    /// Largest batch the backend accepts (the AOT artifact has a static
+    /// batch dimension; the rust solver is unbounded).
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+}
+
+impl P2Backend for GradientSolver {
+    fn backend_name(&self) -> &'static str {
+        "rust-gradient"
+    }
+    fn solve(&mut self, p: &P2Problem) -> Vec<f64> {
+        GradientSolver::solve(self, p).c
+    }
+}
 
 /// The copy-count component of a [`Pipeline`](super::Pipeline).
 pub trait CopyBudget {
@@ -25,6 +46,18 @@ pub trait CopyBudget {
     /// Total copies (including the original) a rule-flagged *running*
     /// task should reach — `2` means one backup.  Constant within a slot.
     fn backup_copies(&self, cl: &Cluster) -> u32;
+
+    /// Wakeup-planner horizon, mirroring
+    /// [`SpeculationRule::next_decision_time`](super::rule::SpeculationRule::next_decision_time):
+    /// the earliest instant this budget's answers could change absent any
+    /// cluster mutation; `None` = never.  A budget whose
+    /// [`backup_copies`](Self::backup_copies) or queued planning reads
+    /// the clock must override conservatively; the conservative default
+    /// ("now") fires every slot.  All four in-tree budgets are provably
+    /// mutation-driven and override to `None` (see each impl).
+    fn next_decision_time(&self, cl: &Cluster) -> Option<f64> {
+        Some(cl.clock)
+    }
 
     /// Jointly plan the level-3 copy counts for the whole χ(l) snapshot.
     /// `Some(counts)` (parallel to `chi`) bypasses the rule's per-job
@@ -55,6 +88,11 @@ impl CopyBudget for CapBudget {
         self.copies
     }
 
+    /// Constant copy counts: nothing here reads the clock.
+    fn next_decision_time(&self, _cl: &Cluster) -> Option<f64> {
+        None
+    }
+
     fn queued_copies(&mut self, _cl: &Cluster, _id: JobId) -> u32 {
         self.copies
     }
@@ -75,6 +113,14 @@ impl CopyBudget for FixedBudget {
 
     fn backup_copies(&self, _cl: &Cluster) -> u32 {
         self.copies
+    }
+
+    /// The room check reads the idle count (mutation-driven), never the
+    /// clock, and is only consulted during the χ(l) walk — unreachable
+    /// on a quiet cluster (non-empty χ after a fired slot implies no
+    /// idle machines).
+    fn next_decision_time(&self, _cl: &Cluster) -> Option<f64> {
+        None
     }
 
     fn queued_copies(&mut self, cl: &Cluster, id: JobId) -> u32 {
@@ -141,6 +187,17 @@ impl CopyBudget for P2Budget {
 
     fn backup_copies(&self, _cl: &Cluster) -> u32 {
         2
+    }
+
+    /// The P2 objective *does* read the clock (job ages enter the solve),
+    /// but the solve is unreachable on a quiet cluster: `plan_queued`
+    /// runs only when χ(l) is non-empty, which after a fired slot implies
+    /// no idle machines, and then `total_tasks >= idle` short-circuits to
+    /// `None` before the backend is touched.  Any state change that could
+    /// re-enable the solve (arrival, machine release) is a mutation that
+    /// forces the next slot anyway — so `None` is exact, not optimistic.
+    fn next_decision_time(&self, _cl: &Cluster) -> Option<f64> {
+        None
     }
 
     fn plan_queued(&mut self, cl: &Cluster, chi: &[JobId]) -> Option<Vec<u32>> {
@@ -217,6 +274,13 @@ impl CopyBudget for Eq29Budget {
         2
     }
 
+    /// Eq. 29 reads job constants and the idle count (mutation-driven),
+    /// never the clock; like every queued-copy query it is unreachable on
+    /// a quiet cluster (see [`FixedBudget::next_decision_time`]).
+    fn next_decision_time(&self, _cl: &Cluster) -> Option<f64> {
+        None
+    }
+
     fn queued_copies(&mut self, cl: &Cluster, id: JobId) -> u32 {
         let job = cl.job(id);
         let c = ese_sigma::small_job_clones(
@@ -231,5 +295,37 @@ impl CopyBudget for Eq29Budget {
             self.small_jobs_cloned += 1;
         }
         c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::generator::generate;
+    use crate::cluster::sim::Simulator;
+    use crate::config::{SimConfig, WorkloadConfig};
+    use crate::scheduler::SchedulerKind;
+
+    /// Ported from the deleted SCA monolith: on a light cluster the P2
+    /// budget's cloning branch engages (`sum m_i < N(l)`), so SCA
+    /// speculates; on a tight one it degrades to single copies and still
+    /// completes jobs.
+    #[test]
+    fn p2_budget_clones_in_light_load_and_degrades_when_tight() {
+        let run = |machines: usize, horizon: f64, lambda: f64| {
+            let mut cfg = SimConfig::default();
+            cfg.machines = machines;
+            cfg.horizon = horizon;
+            cfg.use_runtime = false;
+            cfg.scheduler = SchedulerKind::Sca;
+            let wl = WorkloadConfig::paper(lambda);
+            let workload = generate(&wl, cfg.horizon, 5);
+            let sched = crate::scheduler::build(&cfg, &wl).unwrap();
+            Simulator::new(cfg, workload, sched).run()
+        };
+        let light = run(2000, 200.0, 0.5);
+        assert!(light.speculative_launches > 0, "SCA should clone in light load");
+        assert!(!light.completed.is_empty());
+        let tight = run(30, 300.0, 1.0);
+        assert!(!tight.completed.is_empty());
     }
 }

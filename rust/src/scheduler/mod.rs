@@ -30,12 +30,12 @@
 //! | `sda` | `srpt+sda` (`cap` c* from P3) | Sec. V, Theorem 3 |
 //! | `ese` | `srpt+ese` (`eq29` small-job counts) | Algorithm 2 (Enhanced SE) |
 //!
-//! The monolithic implementations ([`naive`], [`clone_all`], [`mantri`],
-//! [`late`], [`sca`], [`sda`], [`ese`]) are **retained verbatim** behind
-//! `SimConfig::legacy_sched` as the equivalence reference —
-//! `tests/pipeline_equivalence.rs` proves every canonical composition
-//! produces byte-identical sweep CSVs to its monolith across all scenario
-//! axes — and will be deleted once CI has pinned the proof.
+//! The pre-redesign monolithic implementations (and their `legacy_sched`
+//! flag) are **gone**: the pipeline is the only implementation.  Their
+//! equivalence role passed to `tests/pipeline_equivalence.rs`, which now
+//! pins the pipeline against committed canonical sweep-CSV snapshots and
+//! proves the wakeup planner (`wakeup = true`, the default) byte-identical
+//! to the polled slot loop (`--no-wakeup`).
 //!
 //! ## Remaining-time queries
 //!
@@ -63,17 +63,10 @@
 //! finish mutation points (the `est-srpt` re-key contract, [`ordering`]).
 
 pub mod budget;
-pub mod clone_all;
-pub mod ese;
-pub mod late;
-pub mod mantri;
-pub mod naive;
 pub mod ordering;
 pub mod pipeline;
 pub mod policy;
 pub mod rule;
-pub mod sca;
-pub mod sda;
 pub mod srpt;
 
 use std::fmt;
@@ -98,6 +91,21 @@ pub trait Scheduler {
     /// A first copy crossed its detection checkpoint: its true remaining
     /// time just became visible (SDA acts here; others ignore it).
     fn on_reveal(&mut self, _cl: &mut Cluster, _t: TaskRef) {}
+    /// Wakeup-planner horizon: the earliest simulated instant at which
+    /// this scheduler's next `on_slot` could act differently from an
+    /// immediate re-run, assuming **no cluster mutation** in between
+    /// (mutations set [`Cluster::sched_dirty`] and independently force
+    /// the next slot).  `None` = never — absent mutations, every future
+    /// slot is a provable no-op.  Queried by the
+    /// [`SlotGate`](crate::cluster::sim::SlotGate) at the first clean
+    /// slot after a fired one (mutation-free since the fire, so the
+    /// state is still the post-`on_slot` state — busy regimes never pay
+    /// for it).  The conservative default — "now" — makes the planner fire
+    /// every grid slot, reproducing the polled loop exactly; override
+    /// only with a proven bound (DESIGN.md §12).
+    fn next_decision_time(&self, cl: &Cluster) -> Option<f64> {
+        Some(cl.clock)
+    }
 }
 
 /// Which policy to run (CLI/TOML selectable): one of the seven canonical
@@ -206,19 +214,12 @@ pub fn build(
 /// alpha from the durations already in memory instead of re-reading the
 /// trace file.  The experiment runner calls this once per grid cell, inside
 /// the worker thread (the `Scheduler` trait is `!Send`).
-///
-/// With `cfg.legacy_sched` the retained monolithic implementation of a
-/// canonical name is built instead of its pipeline composition — the
-/// equivalence reference (composed specs have no monolith and error).
 pub fn build_for(
     cfg: &SimConfig,
     workload: &WorkloadConfig,
     sampled: Option<&Workload>,
 ) -> Result<Box<dyn Scheduler>, String> {
     let alpha = tail_alpha(workload, sampled)?;
-    if cfg.legacy_sched {
-        return build_legacy(cfg, alpha);
-    }
     pipeline::build(cfg, alpha)
 }
 
@@ -240,30 +241,6 @@ fn tail_alpha(workload: &WorkloadConfig, sampled: Option<&Workload>) -> Result<f
     }
 }
 
-/// The retained monolithic schedulers (`cfg.legacy_sched`) — the
-/// pre-redesign implementations, kept verbatim as the pipeline's
-/// equivalence reference until CI has pinned the byte-identical proof.
-fn build_legacy(cfg: &SimConfig, alpha: f64) -> Result<Box<dyn Scheduler>, String> {
-    Ok(match cfg.scheduler {
-        SchedulerKind::Naive => Box::new(naive::Naive),
-        SchedulerKind::CloneAll => Box::new(clone_all::CloneAll {
-            copies: cfg.clone_copies,
-            strict: cfg.clone_strict,
-        }),
-        SchedulerKind::Mantri => Box::new(mantri::Mantri::new(cfg)),
-        SchedulerKind::Late => Box::new(late::Late::new(cfg)),
-        SchedulerKind::Sca => Box::new(sca::Sca::new(cfg)?),
-        SchedulerKind::Sda => Box::new(sda::Sda::new(cfg, alpha)),
-        SchedulerKind::Ese => Box::new(ese::Ese::new(cfg, alpha)),
-        SchedulerKind::Composed(spec) => {
-            return Err(format!(
-                "legacy_sched retains only the seven canonical monoliths; \
-                 '{spec}' always runs the pipeline"
-            ))
-        }
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,23 +254,16 @@ mod tests {
             cfg.scheduler = kind;
             let s = build(&cfg, &wl).unwrap();
             assert_eq!(s.name(), kind.to_string());
-            // the retained monolith answers to the same name
-            cfg.legacy_sched = true;
-            let legacy = build(&cfg, &wl).unwrap();
-            assert_eq!(legacy.name(), kind.to_string());
-            cfg.legacy_sched = false;
         }
     }
 
     #[test]
-    fn composed_kinds_build_pipelines_but_no_monolith() {
+    fn composed_kinds_build_pipelines() {
         let mut cfg = SimConfig::default();
         cfg.use_runtime = false;
         cfg.scheduler = "fifo+sda".parse().unwrap();
         let wl = WorkloadConfig::paper(6.0);
         assert_eq!(build(&cfg, &wl).unwrap().name(), "fifo+sda");
-        cfg.legacy_sched = true;
-        assert!(build(&cfg, &wl).is_err(), "composed specs have no monolith");
     }
 
     #[test]

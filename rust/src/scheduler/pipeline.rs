@@ -5,10 +5,11 @@
 //! the [`JobOrdering`]'s order, (3) the χ(l) walk where the
 //! [`CopyBudget`] (batch-planned or per job through the rule's clone
 //! gate) decides launch-time copy counts.  `on_reveal` forwards to the
-//! rule.  This is the structure every monolith shared; with the canonical
-//! compositions ([`SchedulerKind::canonical_spec`]) the pipeline makes
-//! bit-identical decisions to the retained monoliths — proven by
-//! `tests/pipeline_equivalence.rs` against `cfg.legacy_sched = true`.
+//! rule.  This is the structure every pre-redesign monolith shared; the
+//! monoliths themselves are deleted (the byte-identical proof ran its
+//! course) and `tests/pipeline_equivalence.rs` now pins the canonical
+//! compositions against committed sweep-CSV snapshots, plus the wakeup
+//! planner against the polled slot loop.
 //!
 //! [`SchedulerKind::canonical_spec`]: super::SchedulerKind::canonical_spec
 
@@ -87,6 +88,23 @@ impl Scheduler for Pipeline {
 
     fn on_reveal(&mut self, cl: &mut Cluster, t: TaskRef) {
         self.rule.on_reveal(cl, self.est.as_ref(), self.budget.as_ref(), t);
+    }
+
+    /// The pipeline's wakeup horizon is the earlier of its rule's and its
+    /// budget's.  The ordering axis contributes nothing: every admissible
+    /// level-2/3 key is piecewise-constant between mutations (the re-key
+    /// contract, [`ordering`](super::ordering)), and after a fired slot
+    /// launchable work remains only on a full cluster, where any idle
+    /// change is itself a mutation — so levels 2/3 can never act on an
+    /// otherwise-quiet cluster.
+    fn next_decision_time(&self, cl: &Cluster) -> Option<f64> {
+        match (
+            self.rule.next_decision_time(cl, self.est.as_ref()),
+            self.budget.next_decision_time(cl),
+        ) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 }
 

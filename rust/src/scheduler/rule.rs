@@ -3,11 +3,15 @@
 //! A rule decides *which* tasks (slot-gated or at the detection reveal)
 //! and *which* queued jobs (the level-3 clone gate) deserve extra copies;
 //! the [`CopyBudget`](super::budget::CopyBudget) decides *how many*.  The
-//! six rules are the monoliths' decision cores extracted verbatim — same
-//! candidate iteration (SchedIndex or naive scan per `cfg.sched_index`),
-//! same NaN-safe `total_cmp` sorts, same idle-exhaustion breaks — so each
-//! canonical composition is provably bit-identical to its retained
-//! monolith (`tests/pipeline_equivalence.rs`).
+//! six rules are the deleted monoliths' decision cores, extracted
+//! verbatim during the pipeline redesign — same candidate iteration
+//! (SchedIndex or naive scan per `cfg.sched_index`), same NaN-safe
+//! `total_cmp` sorts, same idle-exhaustion breaks.  Each rule also
+//! carries its wakeup horizon
+//! ([`SpeculationRule::next_decision_time`]): the earliest instant its
+//! time-dependent predicate can flip absent cluster mutations, which is
+//! what lets the wakeup planner skip provably no-op slots (DESIGN.md
+//! §12; equivalence pinned by `tests/pipeline_equivalence.rs`).
 
 use crate::cluster::job::{CopyPhase, JobId, TaskRef};
 use crate::cluster::sim::Cluster;
@@ -16,6 +20,35 @@ use crate::estimator::RemainingTime;
 use crate::opt::{ese_sigma, p3};
 
 use super::budget::CopyBudget;
+
+/// Enumerate the speculation-candidate set — tasks whose only copy is a
+/// running *first* copy — exactly as the slot hooks do: through the
+/// `SchedIndex` or the naive scan per `cfg.sched_index`, in the same
+/// (job asc, task asc) order either way.  The wakeup-horizon methods
+/// below share this one enumeration so the gate provably inspects the
+/// same candidates `on_slot` would act on.
+fn for_each_candidate(cl: &Cluster, mut f: impl FnMut(&Cluster, TaskRef)) {
+    if cl.cfg.sched_index {
+        for id in cl.running.iter() {
+            for ti in cl.index.candidates(*id) {
+                f(cl, TaskRef { job: *id, task: ti });
+            }
+        }
+    } else {
+        for id in cl.running.iter() {
+            let job = cl.job(*id);
+            for (ti, task) in job.tasks.iter().enumerate() {
+                if task.done || task.copies.len() != 1 {
+                    continue;
+                }
+                if task.copies[0].phase != CopyPhase::Running {
+                    continue;
+                }
+                f(cl, TaskRef { job: *id, task: ti as u32 });
+            }
+        }
+    }
+}
 
 /// The speculation-rule component of a [`Pipeline`](super::Pipeline).
 pub trait SpeculationRule {
@@ -44,6 +77,24 @@ pub trait SpeculationRule {
     fn clone_gate(&self, _cl: &Cluster, _id: JobId, _chi_len: usize) -> bool {
         false
     }
+
+    /// Wakeup-planner horizon: the earliest simulated instant at which
+    /// this rule's slot-gated decisions could differ from an immediate
+    /// re-run, assuming **no cluster mutation** in between (mutations set
+    /// [`Cluster::sched_dirty`] and force a slot independently).  `None`
+    /// = never: absent mutations, every future slot is a provable no-op
+    /// for this rule.
+    ///
+    /// Called while the dirty flag is clear — i.e. on exactly the
+    /// post-`on_slot` state of the last fired slot — so implementations
+    /// may rely on the slot-loop quiescence invariant: any rule-flagged
+    /// task has been served unless the cluster is full or the task is at
+    /// its copy cap.  The conservative default — "now" — fires every
+    /// slot, which is always correct; each impl documents its tightened
+    /// bound (DESIGN.md §12).
+    fn next_decision_time(&self, cl: &Cluster, _est: &dyn RemainingTime) -> Option<f64> {
+        Some(cl.clock)
+    }
 }
 
 /// No speculation at all (the Fig. 5 "no backup" baseline).
@@ -52,6 +103,11 @@ pub struct Never;
 impl SpeculationRule for Never {
     fn name(&self) -> &'static str {
         "never"
+    }
+
+    /// No predicate at all, let alone a time-dependent one.
+    fn next_decision_time(&self, _cl: &Cluster, _est: &dyn RemainingTime) -> Option<f64> {
+        None
     }
 }
 
@@ -67,6 +123,14 @@ impl SpeculationRule for Clone {
 
     fn clone_gate(&self, _cl: &Cluster, _id: JobId, _chi_len: usize) -> bool {
         true
+    }
+
+    /// The gate is constant-true and consulted only during the χ(l) walk;
+    /// after a fired slot a non-empty χ(l) implies a full cluster (the
+    /// walk would have launched otherwise), and any idle-count change is
+    /// a mutation — nothing here moves with the clock.
+    fn next_decision_time(&self, _cl: &Cluster, _est: &dyn RemainingTime) -> Option<f64> {
+        None
     }
 }
 
@@ -93,38 +157,14 @@ impl SpeculationRule for Mantri {
 
     fn on_slot(&mut self, cl: &mut Cluster, est: &dyn RemainingTime, budget: &dyn CopyBudget) {
         self.cands.clear();
-        if cl.cfg.sched_index {
-            // O(active): only tasks whose sole copy is a running first
-            // copy, in the same (job asc, task asc) order as the scan
-            for id in cl.running.iter() {
-                let job = cl.job(*id);
-                let two_means = 2.0 * job.spec.dist.mean();
-                for ti in cl.index.candidates(*id) {
-                    let t = TaskRef { job: *id, task: ti };
-                    if est.task_prob_exceeds(cl, t, two_means) > self.delta {
-                        self.cands.push((est.task_remaining_work(cl, t), t));
-                    }
-                }
+        // one shared enumeration with the wakeup horizon below — the
+        // skip proof needs both to inspect the identical candidate set
+        for_each_candidate(cl, |cl, t| {
+            let two_means = 2.0 * cl.job(t.job).spec.dist.mean();
+            if est.task_prob_exceeds(cl, t, two_means) > self.delta {
+                self.cands.push((est.task_remaining_work(cl, t), t));
             }
-        } else {
-            // naive-scan reference: every task of every running job
-            for id in cl.running.iter() {
-                let job = cl.job(*id);
-                let two_means = 2.0 * job.spec.dist.mean();
-                for (ti, task) in job.tasks.iter().enumerate() {
-                    if task.done || task.copies.len() != 1 {
-                        continue;
-                    }
-                    if task.copies[0].phase != CopyPhase::Running {
-                        continue;
-                    }
-                    let t = TaskRef { job: *id, task: ti as u32 };
-                    if est.task_prob_exceeds(cl, t, two_means) > self.delta {
-                        self.cands.push((est.task_remaining_work(cl, t), t));
-                    }
-                }
-            }
-        }
+        });
         // NaN-safe descending sort (total_cmp, not partial_cmp().unwrap())
         self.cands.sort_by(|a, b| b.0.total_cmp(&a.0));
         let target = budget.backup_copies(cl);
@@ -144,6 +184,44 @@ impl SpeculationRule for Mantri {
                 cl.launch_copy(t);
             }
         }
+    }
+
+    /// Earliest flip of the delta-gate `P(t_rem > 2 E[x]) > delta` over
+    /// the current candidates, via the estimator's exact predicate
+    /// inverse ([`RemainingTime::copy_prob_flip_time`]):
+    ///
+    /// * full cluster → `None` (no machine to duplicate onto, and any
+    ///   release is a mutation);
+    /// * an already-flagged candidate below its copy cap would act next
+    ///   slot → "now" (unreachable right after `on_slot`, which serves
+    ///   flagged candidates while idle machines remain — kept as a
+    ///   defensive bound, never skipped past);
+    /// * a flagged candidate *at* its copy cap can never launch — its
+    ///   every future slot is a no-op, so it contributes nothing;
+    /// * the kill/restart ablation acts even on a full cluster and its
+    ///   3·E\[x\] gate moves with the clock — stay fully conservative.
+    fn next_decision_time(&self, cl: &Cluster, est: &dyn RemainingTime) -> Option<f64> {
+        if self.kill {
+            return Some(cl.clock);
+        }
+        if cl.idle() == 0 {
+            return None;
+        }
+        let r_max = cl.cfg.r_max as usize;
+        let mut next: Option<f64> = None;
+        for_each_candidate(cl, |cl, t| {
+            let two_means = 2.0 * cl.job(t.job).spec.dist.mean();
+            if est.task_prob_exceeds(cl, t, two_means) > self.delta {
+                if cl.task(t).copies.len() < r_max {
+                    next = Some(cl.clock); // flagged and launchable: act now
+                }
+                return;
+            }
+            if let Some(flip) = est.copy_prob_flip_time(cl, t, 0, two_means, self.delta) {
+                next = Some(next.map_or(flip, |n| n.min(flip)));
+            }
+        });
+        next
     }
 }
 
@@ -198,39 +276,14 @@ impl SpeculationRule for Late {
     }
 
     fn on_slot(&mut self, cl: &mut Cluster, est: &dyn RemainingTime, budget: &dyn CopyBudget) {
-        // gather progress rates of all single-copy running tasks
+        // gather progress rates of all single-copy running tasks — the
+        // same shared enumeration the wakeup horizon counts below
         self.rates.clear();
-        if cl.cfg.sched_index {
-            // O(active): the index yields exactly the single-running-first-
-            // copy tasks, in the scan's (job asc, task asc) order
-            for id in cl.running.iter() {
-                for ti in cl.index.candidates(*id) {
-                    let t = TaskRef { job: *id, task: ti };
-                    if let Some((rate, rem)) = self.progress_rate(cl, est, t) {
-                        self.rates.push((rate, rem, t));
-                    }
-                }
+        for_each_candidate(cl, |cl, t| {
+            if let Some((rate, rem)) = self.progress_rate(cl, est, t) {
+                self.rates.push((rate, rem, t));
             }
-        } else {
-            // naive-scan reference (the phase filter mirrors the index's
-            // candidate definition; progress_rate would reject non-running
-            // copies anyway, so this is behavior-neutral symmetry)
-            for id in cl.running.iter() {
-                let job = cl.job(*id);
-                for (ti, task) in job.tasks.iter().enumerate() {
-                    if task.done || task.copies.len() != 1 {
-                        continue;
-                    }
-                    if task.copies[0].phase != CopyPhase::Running {
-                        continue;
-                    }
-                    let t = TaskRef { job: *id, task: ti as u32 };
-                    if let Some((rate, rem)) = self.progress_rate(cl, est, t) {
-                        self.rates.push((rate, rem, t));
-                    }
-                }
-            }
-        }
+        });
         if self.rates.is_empty() {
             return;
         }
@@ -260,6 +313,37 @@ impl SpeculationRule for Late {
                 }
                 cl.launch_copy(t);
             }
+        }
+    }
+
+    /// LATE's below-percentile set is a *relative* ranking of
+    /// continuously-moving progress rates, so no useful flip time exists
+    /// while it can be non-empty — the bound is conservative ("now")
+    /// whenever LATE could launch, and exact (`None`) in the provably
+    /// inert states:
+    ///
+    /// * full cluster, or speculative cap reached (`outstanding_backups`
+    ///   only changes through mutations);
+    /// * fewer candidates than `1 / slow_percentile`: the percentile
+    ///   index truncates to 0, the threshold is the *minimum* rate, and
+    ///   the strict `rate < threshold` set is empty for any candidate
+    ///   count up to the current one — no launch can happen.
+    fn next_decision_time(&self, cl: &Cluster, _est: &dyn RemainingTime) -> Option<f64> {
+        if cl.idle() == 0 {
+            return None;
+        }
+        let cap = (self.speculative_cap * cl.machines.total() as f64) as usize;
+        if cl.outstanding_backups >= cap {
+            return None;
+        }
+        // count single-running-first-copy candidates (including elapsed-0
+        // copies, which grow a progress rate by the next slot)
+        let mut n: usize = 0;
+        for_each_candidate(cl, |_, _| n += 1);
+        if (n as f64 * self.slow_percentile) as usize == 0 {
+            None
+        } else {
+            Some(cl.clock)
         }
     }
 }
@@ -317,6 +401,14 @@ impl SpeculationRule for Sda {
             }
         }
     }
+
+    /// Purely event-driven: SDA acts only at the detection checkpoint,
+    /// and every checkpoint reveal is a mutation that sets the dirty
+    /// flag — its slot phase is empty, so no slot ever needs to fire for
+    /// SDA's sake.
+    fn next_decision_time(&self, _cl: &Cluster, _est: &dyn RemainingTime) -> Option<f64> {
+        None
+    }
 }
 
 /// ESE (Algorithm 2): slot-gated backups for running tasks with
@@ -346,41 +438,16 @@ impl SpeculationRule for Ese {
     }
 
     fn on_slot(&mut self, cl: &mut Cluster, est: &dyn RemainingTime, budget: &dyn CopyBudget) {
-        // backup candidates D(l), longest estimated remaining first
+        // backup candidates D(l), longest estimated remaining first —
+        // the same shared enumeration the wakeup horizon walks below
         self.d.clear();
-        if cl.cfg.sched_index {
-            // O(active): only single-running-first-copy tasks, same
-            // (job asc, task asc) order as the scan
-            for id in cl.running.iter() {
-                let threshold = self.sigma * cl.job(*id).spec.dist.mean();
-                for ti in cl.index.candidates(*id) {
-                    let t = TaskRef { job: *id, task: ti };
-                    let rem = est.task_remaining_work(cl, t);
-                    if rem > threshold {
-                        self.d.push((rem, t));
-                    }
-                }
+        for_each_candidate(cl, |cl, t| {
+            let threshold = self.sigma * cl.job(t.job).spec.dist.mean();
+            let rem = est.task_remaining_work(cl, t);
+            if rem > threshold {
+                self.d.push((rem, t));
             }
-        } else {
-            // naive-scan reference
-            for id in cl.running.iter() {
-                let job = cl.job(*id);
-                let threshold = self.sigma * job.spec.dist.mean();
-                for (ti, task) in job.tasks.iter().enumerate() {
-                    if task.done || task.copies.len() != 1 {
-                        continue;
-                    }
-                    if task.copies[0].phase != CopyPhase::Running {
-                        continue;
-                    }
-                    let t = TaskRef { job: *id, task: ti as u32 };
-                    let rem = est.task_remaining_work(cl, t);
-                    if rem > threshold {
-                        self.d.push((rem, t));
-                    }
-                }
-            }
-        }
+        });
         // NaN-safe descending sort (total_cmp, not partial_cmp().unwrap())
         self.d.sort_by(|a, b| b.0.total_cmp(&a.0));
         let target = budget.backup_copies(cl);
@@ -401,5 +468,100 @@ impl SpeculationRule for Ese {
         let m = job.spec.num_tasks as f64;
         let mean = job.spec.dist.mean();
         m < self.eta * cl.idle() as f64 / chi_len.max(1) as f64 && mean < self.xi
+    }
+
+    /// Earliest flip of the sigma-threshold `t_rem > sigma E[x]` over the
+    /// current candidates, via the estimator's exact inverse
+    /// ([`RemainingTime::copy_work_flip_time`]); the small-job clone gate
+    /// reads only state (idle, |χ|, job constants), never the clock, and
+    /// is unreachable on a quiet cluster (χ non-empty after a fired slot
+    /// implies a full cluster).  Structure mirrors
+    /// [`Mantri::next_decision_time`]: full cluster → `None`; flagged-
+    /// at-cap candidates contribute nothing; flagged-and-launchable →
+    /// "now" (defensive, unreachable post-`on_slot`).
+    fn next_decision_time(&self, cl: &Cluster, est: &dyn RemainingTime) -> Option<f64> {
+        if cl.idle() == 0 {
+            return None;
+        }
+        let r_max = cl.cfg.r_max as usize;
+        let mut next: Option<f64> = None;
+        for_each_candidate(cl, |cl, t| {
+            let threshold = self.sigma * cl.job(t.job).spec.dist.mean();
+            if est.task_remaining_work(cl, t) > threshold {
+                if cl.task(t).copies.len() < r_max {
+                    next = Some(cl.clock);
+                }
+                return;
+            }
+            if let Some(flip) = est.copy_work_flip_time(cl, t, 0, threshold) {
+                next = Some(next.map_or(flip, |n| n.min(flip)));
+            }
+        });
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::generator::generate;
+    use crate::cluster::sim::{SimResult, Simulator};
+    use crate::config::WorkloadConfig;
+    use crate::scheduler::SchedulerKind;
+
+    /// Per-policy behavioral checks ported from the deleted monolith
+    /// modules (the pipeline builds the same decision cores from these
+    /// rules, so the assertions transfer verbatim).
+    fn run_kind(kind: SchedulerKind, lambda: f64, patch: fn(&mut SimConfig)) -> SimResult {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 200;
+        cfg.horizon = 300.0;
+        cfg.use_runtime = false;
+        cfg.scheduler = kind;
+        patch(&mut cfg);
+        let wl = WorkloadConfig::paper(lambda);
+        let workload = generate(&wl, cfg.horizon, 5);
+        let sched = crate::scheduler::build(&cfg, &wl).unwrap();
+        Simulator::new(cfg, workload, sched).run()
+    }
+
+    #[test]
+    fn mantri_speculates_on_stragglers_and_kill_variant_runs() {
+        let plain = run_kind(SchedulerKind::Mantri, 1.0, |_| {});
+        assert!(plain.speculative_launches > 0);
+        assert!(!plain.completed.is_empty());
+        let kill = run_kind(SchedulerKind::Mantri, 1.0, |c| c.mantri_kill = true);
+        assert!(!kill.completed.is_empty());
+    }
+
+    #[test]
+    fn late_speculates_under_cap_and_zero_cap_disables() {
+        let late = run_kind(SchedulerKind::Late, 1.0, |_| {});
+        assert!(late.speculative_launches > 0);
+        assert!(!late.completed.is_empty());
+        let capped = run_kind(SchedulerKind::Late, 1.0, |c| c.late_speculative_cap = 0.0);
+        assert_eq!(capped.speculative_launches, 0);
+    }
+
+    #[test]
+    fn ese_derives_sigma_and_speculates_under_heavy_load() {
+        let cfg = {
+            let mut c = SimConfig::default();
+            c.use_runtime = false;
+            c
+        };
+        let e = Ese::new(&cfg, 2.0);
+        assert!((1.5..=2.0).contains(&e.sigma), "sigma = {}", e.sigma);
+        // heavy relative to 300 machines (the deleted ese.rs setting)
+        let res = run_kind(SchedulerKind::Ese, 4.0, |c| c.machines = 300);
+        assert!(!res.completed.is_empty());
+        assert!(res.speculative_launches > 0);
+    }
+
+    #[test]
+    fn sda_detects_and_backs_up_through_the_reveal_hook() {
+        let res = run_kind(SchedulerKind::Sda, 1.0, |_| {});
+        assert!(res.speculative_launches > 0, "SDA should launch backups at reveals");
+        assert!(!res.completed.is_empty());
     }
 }

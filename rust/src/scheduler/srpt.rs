@@ -227,15 +227,18 @@ mod tests {
     use crate::cluster::job::JobPhase;
     use crate::cluster::sim::{Cluster, Simulator};
     use crate::config::{SimConfig, WorkloadConfig};
-    use crate::scheduler::naive::Naive;
 
     fn cluster_with(machines: usize, lambda: f64, horizon: f64) -> Cluster {
         let mut cfg = SimConfig::default();
         cfg.machines = machines;
         cfg.horizon = horizon;
-        let wl = generate(&WorkloadConfig::paper(lambda), horizon, 3);
+        cfg.use_runtime = false;
+        let wl_cfg = WorkloadConfig::paper(lambda);
+        let wl = generate(&wl_cfg, horizon, 3);
         // build a simulator just to construct the cluster consistently
-        let sim = Simulator::new(cfg, wl, Box::new(Naive));
+        // (default policy: naive — the srpt+never pipeline)
+        let sched = crate::scheduler::build(&cfg, &wl_cfg).unwrap();
+        let sim = Simulator::new(cfg, wl, sched);
         sim.cluster
     }
 

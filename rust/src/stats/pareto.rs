@@ -93,6 +93,43 @@ impl Pareto {
         self.mu * beta / (beta - 1.0)
     }
 
+    /// Inverse of [`Pareto::sf_remaining`] in its increasing branch: the
+    /// elapsed time `e*` at which `P(x > e + a | x > e)` equals `p`, i.e.
+    /// the boundary past which the survival predicate `sf_remaining(e, a)
+    /// > p` holds.  `None` when it can never hold (`p >= 1`).
+    ///
+    /// Used by the wakeup planner to answer "when does Mantri's duplicate
+    /// test first flip, absent new events?".  Valid under the planner's
+    /// precondition that the predicate is currently *false*: on `[0, mu]`
+    /// the survival `sf(e + a)` is non-increasing in `e` and on
+    /// `[mu, inf)` it is `(e / (e + a))^alpha`, strictly increasing — so
+    /// a currently-false predicate stays false until exactly
+    /// `e* = a q / (1 - q)` with `q = p^(1/alpha)` (which the
+    /// precondition places in the increasing branch), and holds strictly
+    /// after.
+    #[inline]
+    pub fn sf_remaining_flip(&self, a: f64, p: f64) -> Option<f64> {
+        if p >= 1.0 {
+            return None; // a survival probability never exceeds 1
+        }
+        let q = p.max(0.0).powf(1.0 / self.alpha);
+        Some(a * q / (1.0 - q))
+    }
+
+    /// Inverse of [`Pareto::mean_remaining`] in its increasing branch: the
+    /// elapsed time `e* = w (alpha - 1)` at which `E[x - e | x > e]`
+    /// equals `w` — the boundary past which the threshold predicate
+    /// `mean_remaining(e) > w` holds.
+    ///
+    /// Same planner precondition as [`Pareto::sf_remaining_flip`]: the
+    /// conditional mean is non-increasing on `[0, mu]` (`mean - e`) and
+    /// `e / (alpha - 1)` beyond, so a currently-false predicate first
+    /// flips at `e*` exactly.
+    #[inline]
+    pub fn mean_remaining_flip(&self, w: f64) -> f64 {
+        w * (self.alpha - 1.0)
+    }
+
     /// `E[min(x, cap)] = integral_0^cap S(t) dt`.
     #[inline]
     pub fn mean_capped(&self, cap: f64) -> f64 {
@@ -182,6 +219,29 @@ mod tests {
         assert!((p.mean_capped(1e9) - p.mean()).abs() < 1e-3);
         assert!((p.mean_capped(0.5) - 0.5).abs() < 1e-12);
         assert_eq!(p.mean_capped(-1.0), 0.0);
+    }
+
+    /// The flip times are exact inverses of their predicates: just before
+    /// the boundary the predicate is false, just after it is true — for
+    /// several tail indices and thresholds.
+    #[test]
+    fn flip_times_invert_the_predicates() {
+        for alpha in [1.5, 2.0, 3.0] {
+            let p = Pareto::new(1.0, alpha);
+            let a = 2.0 * p.mean();
+            for delta in [0.1, 0.25, 0.5] {
+                let e = p.sf_remaining_flip(a, delta).unwrap();
+                assert!(e >= p.mu, "flip must sit in the increasing branch");
+                assert!(p.sf_remaining(e * (1.0 - 1e-9), a) < delta);
+                assert!(p.sf_remaining(e * (1.0 + 1e-9), a) > delta);
+            }
+            assert_eq!(p.sf_remaining_flip(a, 1.0), None);
+            for w in [p.mean(), 1.7 * p.mean(), 4.0] {
+                let e = p.mean_remaining_flip(w);
+                assert!((p.mean_remaining(e) - w).abs() < 1e-9);
+                assert!(p.mean_remaining(e * (1.0 + 1e-9)) > w);
+            }
+        }
     }
 
     #[test]

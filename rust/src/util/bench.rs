@@ -5,11 +5,17 @@
 //! artifact (`BENCH_sim.json`) seeds the repo's perf trajectory.
 //!
 //! The suite runs every policy over {light λ = 0.3, heavy λ ≈ 0.9·λ^U} ×
-//! M ∈ {500, 4000}, each cell **twice** — once on the incremental
-//! `SchedIndex` hot path (the default) and once on the retained naive-scan
-//! reference (`sched_index = false`) — so one artifact carries both the
-//! absolute events/sec numbers and the index speedup, measured by the
-//! identical harness on the identical pre-sampled workload.  Cells run
+//! M ∈ {500, 4000}, each cell **three times** on the identical
+//! pre-sampled workload — `indexed` (the `SchedIndex` hot path, wakeup
+//! planner on: the default), `scan` (the retained naive-scan reference),
+//! and `polled` (indexed path with `wakeup = false`: the retired
+//! fire-every-slot loop) — so one artifact carries the absolute
+//! events/sec numbers, the index speedup *and* the wakeup speedup.
+//! Light cells run on a fine slot grid ([`WAKEUP_SLOT_DT`]): the
+//! polling-dominated regime the wakeup planner targets, where most grid
+//! slots find no free machine and no threshold crossing; heavy
+//! cells keep the paper's `slot_dt = 1`, where nearly every slot has
+//! real work and the planner's job is to cost nothing.  Cells run
 //! sequentially on purpose: concurrent cells would contaminate each
 //! other's wall-clock.
 
@@ -75,14 +81,25 @@ pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Meas
 // ----- the standardized simulator-throughput suite -----------------------
 
 /// Schema tag written into `BENCH_sim.json` so downstream tooling can
-/// detect format drift.
-pub const BENCH_SCHEMA: &str = "specsim-bench-v1";
+/// detect format drift.  v2: per-cell `slot_dt`, the third (`polled`)
+/// run, `wakeup_speedup`/`skip_ratio`, tick counters on every run, and
+/// `events` no longer counts slot boundaries (they left the event heap).
+pub const BENCH_SCHEMA: &str = "specsim-bench-v2";
 
 /// The suite's machine-count axis.
 pub const SUITE_MACHINES: [usize; 2] = [500, 4000];
 
 /// The suite's light-load arrival rate (jobs per time unit).
 pub const LIGHT_LAMBDA: f64 = 0.3;
+
+/// Slot grid for the light-load cells: 1000 decision slots per time unit.
+/// This is the regime the wakeup planner targets — wall-clock of
+/// the polled loop scales with `horizon / slot_dt` even when nothing
+/// changes, so a fine grid makes the tick path's cost (and the planner's
+/// elimination of it) visible instead of noise behind event handling.
+/// Heavy cells keep the paper's `slot_dt = 1.0`: with real work at almost
+/// every slot the planner can only show that skipping costs nothing.
+pub const WAKEUP_SLOT_DT: f64 = 0.001;
 
 /// Heavy-load arrival rate for `machines`: 90% of the analytic ESE cutoff
 /// λ^U for the paper's job mix (Sec. III-B) — near-threshold load, the
@@ -93,15 +110,20 @@ pub fn heavy_lambda(machines: usize) -> f64 {
         .lambda_cutoff
 }
 
-/// One timed simulation of a suite cell (one query path).
+/// One timed simulation of a suite cell (one query path × one wakeup
+/// mode).
 #[derive(Clone, Debug)]
 pub struct ThroughputRun {
     /// Wall-clock for `Simulator::new` + `run`.
     pub wall_secs: f64,
-    /// Events the run loop popped.
+    /// Events the run loop popped (slot boundaries are counted separately
+    /// below — they no longer live in the event heap).
     pub events: u64,
     /// `events / wall_secs` — the headline throughput metric.
     pub events_per_sec: f64,
+    /// Grid slots whose `on_slot` ran / slots the wakeup planner skipped.
+    pub ticks_fired: u64,
+    pub ticks_skipped: u64,
     /// Wall-clock inside the scheduler's `on_slot` hook.
     pub slot_hook_secs: f64,
     /// Event-heap high-water mark.
@@ -115,9 +137,21 @@ impl ThroughputRun {
             wall_secs,
             events: res.events_processed,
             events_per_sec: res.events_processed as f64 / wall_secs.max(1e-12),
+            ticks_fired: res.ticks_fired,
+            ticks_skipped: res.ticks_skipped,
             slot_hook_secs: res.slot_hook_secs,
             peak_event_queue: res.peak_event_queue,
             completed_jobs: res.completed.len(),
+        }
+    }
+
+    /// `ticks_skipped / (ticks_fired + ticks_skipped)`; 0 on an empty grid.
+    pub fn skip_ratio(&self) -> f64 {
+        let total = self.ticks_fired + self.ticks_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.ticks_skipped as f64 / total as f64
         }
     }
 
@@ -126,6 +160,8 @@ impl ThroughputRun {
         m.insert("wall_secs".into(), Json::Num(self.wall_secs));
         m.insert("events".into(), Json::Num(self.events as f64));
         m.insert("events_per_sec".into(), Json::Num(self.events_per_sec));
+        m.insert("ticks_fired".into(), Json::Num(self.ticks_fired as f64));
+        m.insert("ticks_skipped".into(), Json::Num(self.ticks_skipped as f64));
         m.insert("slot_hook_secs".into(), Json::Num(self.slot_hook_secs));
         m.insert("peak_event_queue".into(), Json::Num(self.peak_event_queue as f64));
         m.insert("completed_jobs".into(), Json::Num(self.completed_jobs as f64));
@@ -133,7 +169,8 @@ impl ThroughputRun {
     }
 }
 
-/// One (policy, load, machines) grid cell, measured on both query paths.
+/// One (policy, load, machines) grid cell, measured on both query paths
+/// plus the polled (wakeup-off) reference.
 #[derive(Clone, Debug)]
 pub struct ThroughputCell {
     /// Policy label: a canonical name or a composition spec.
@@ -142,10 +179,15 @@ pub struct ThroughputCell {
     pub load: &'static str,
     pub lambda: f64,
     pub machines: usize,
-    /// The `sched_index = true` hot path (the default).
+    /// The decision grid the cell ran on ([`WAKEUP_SLOT_DT`] for light
+    /// cells, the paper's 1.0 for heavy ones).
+    pub slot_dt: f64,
+    /// The `sched_index = true`, `wakeup = true` hot path (the default).
     pub indexed: ThroughputRun,
     /// The retained naive-scan reference (`sched_index = false`).
     pub scan: ThroughputRun,
+    /// The retired polling loop (`wakeup = false`) on the indexed path.
+    pub polled: ThroughputRun,
 }
 
 impl ThroughputCell {
@@ -154,15 +196,26 @@ impl ThroughputCell {
         self.indexed.events_per_sec / self.scan.events_per_sec.max(1e-12)
     }
 
+    /// Wakeup-planner speedup over the polled loop (wall-clock ratio on
+    /// the identical indexed path — events/sec would say the same thing,
+    /// since both runs pop the identical events).
+    pub fn wakeup_speedup(&self) -> f64 {
+        self.polled.wall_secs / self.indexed.wall_secs.max(1e-12)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
         m.insert("policy".into(), Json::Str(self.policy.clone()));
         m.insert("load".into(), Json::Str(self.load.to_string()));
         m.insert("lambda".into(), Json::Num(self.lambda));
         m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("slot_dt".into(), Json::Num(self.slot_dt));
         m.insert("indexed".into(), self.indexed.to_json());
         m.insert("scan".into(), self.scan.to_json());
+        m.insert("polled".into(), self.polled.to_json());
         m.insert("speedup".into(), Json::Num(self.speedup()));
+        m.insert("wakeup_speedup".into(), Json::Num(self.wakeup_speedup()));
+        m.insert("skip_ratio".into(), Json::Num(self.indexed.skip_ratio()));
         Json::Obj(m)
     }
 }
@@ -177,17 +230,20 @@ pub fn suite_horizon(quick: bool) -> f64 {
     }
 }
 
-/// One timed run of `kind` on `workload` with the given query path.
+/// One timed run of `kind` on `workload` with the given query path and
+/// wakeup mode.
 pub fn time_simulation(
     base: &SimConfig,
     wl_cfg: &WorkloadConfig,
     workload: Workload,
     kind: SchedulerKind,
     sched_index: bool,
+    wakeup: bool,
 ) -> Result<ThroughputRun, String> {
     let mut cfg = base.clone();
     cfg.scheduler = kind;
     cfg.sched_index = sched_index;
+    cfg.wakeup = wakeup;
     let sched = scheduler::build_for(&cfg, wl_cfg, Some(&workload))?;
     let t0 = Instant::now();
     let res = Simulator::new(cfg, workload, sched).run();
@@ -222,18 +278,24 @@ pub fn run_throughput_suite(
             base.machines = machines;
             base.horizon = horizon;
             base.use_runtime = false; // rust P2 twin: no artifact dependency
+            // light cells stress the fine-grid polling regime the wakeup
+            // planner targets; heavy cells keep the paper's slot grid
+            base.slot_dt = if load == "light" { WAKEUP_SLOT_DT } else { 1.0 };
             let wl_cfg = WorkloadConfig::paper(lambda);
             let workload = generator::generate(&wl_cfg, horizon, base.seed);
             for kind in suite_policies() {
-                let indexed = time_simulation(&base, &wl_cfg, workload.clone(), kind, true)?;
-                let scan = time_simulation(&base, &wl_cfg, workload.clone(), kind, false)?;
+                let indexed = time_simulation(&base, &wl_cfg, workload.clone(), kind, true, true)?;
+                let scan = time_simulation(&base, &wl_cfg, workload.clone(), kind, false, true)?;
+                let polled = time_simulation(&base, &wl_cfg, workload.clone(), kind, true, false)?;
                 let cell = ThroughputCell {
                     policy: kind.to_string(),
                     load,
                     lambda,
                     machines,
+                    slot_dt: base.slot_dt,
                     indexed,
                     scan,
+                    polled,
                 };
                 progress(&cell);
                 cells.push(cell);
@@ -243,23 +305,56 @@ pub fn run_throughput_suite(
     Ok(cells)
 }
 
+/// The wakeup acceptance gate CI enforces (`bench --check-wakeup`): on
+/// the (naive, light, M = 4000) cell the planner must skip at least half
+/// the grid slots and cut wall-clock at least 2× against the polled loop.
+pub fn check_wakeup_gate(cells: &[ThroughputCell]) -> Result<(), String> {
+    let cell = cells
+        .iter()
+        .find(|c| c.policy == "naive" && c.load == "light" && c.machines == 4000)
+        .ok_or("wakeup gate: the (naive, light, M=4000) cell is missing")?;
+    let ratio = cell.indexed.skip_ratio();
+    let speedup = cell.wakeup_speedup();
+    if ratio < 0.5 {
+        return Err(format!(
+            "wakeup gate: skip ratio {ratio:.3} < 0.5 on (naive, light, M=4000) — \
+             {} fired / {} skipped",
+            cell.indexed.ticks_fired, cell.indexed.ticks_skipped
+        ));
+    }
+    if speedup < 2.0 {
+        return Err(format!(
+            "wakeup gate: wakeup_speedup {speedup:.2}x < 2x on (naive, light, M=4000) — \
+             polled {:.3}s vs wakeup {:.3}s",
+            cell.polled.wall_secs, cell.indexed.wall_secs
+        ));
+    }
+    Ok(())
+}
+
 /// Render a finished suite as the EXPERIMENTS.md §Perf markdown table —
 /// what CI appends to the job summary so the committed table can be
 /// refreshed from a real measured artifact by copy-paste.
 pub fn throughput_markdown(cells: &[ThroughputCell]) -> String {
     let mut out = String::from(
-        "| policy | load | M | indexed ev/s | scan ev/s | speedup |\n\
-         |---|---|---|---|---|---|\n",
+        "| policy | load | M | slot_dt | indexed ev/s | scan ev/s | speedup \
+         | ticks fired/skipped | skip | wakeup speedup |\n\
+         |---|---|---|---|---|---|---|---|---|---|\n",
     );
     for c in cells {
         out.push_str(&format!(
-            "| {} | {} | {} | {:.0} | {:.0} | {:.2}x |\n",
+            "| {} | {} | {} | {} | {:.0} | {:.0} | {:.2}x | {}/{} | {:.0}% | {:.2}x |\n",
             c.policy,
             c.load,
             c.machines,
+            c.slot_dt,
             c.indexed.events_per_sec,
             c.scan.events_per_sec,
-            c.speedup()
+            c.speedup(),
+            c.indexed.ticks_fired,
+            c.indexed.ticks_skipped,
+            100.0 * c.indexed.skip_ratio(),
+            c.wakeup_speedup()
         ));
     }
     out
@@ -278,9 +373,14 @@ pub fn throughput_json(cells: &[ThroughputCell], quick: bool) -> Json {
     m.insert(
         "note".into(),
         Json::Str(
-            "indexed = SchedIndex hot path (default); scan = retained naive \
-             full-scan reference (sched_index = false); speedup = ratio of \
-             events_per_sec. Regenerate: cargo run --release -- bench"
+            "indexed = SchedIndex hot path, wakeup planner on (default); \
+             scan = retained naive full-scan reference (sched_index = false); \
+             polled = retired fire-every-slot loop (wakeup = false); \
+             speedup = indexed/scan events_per_sec; wakeup_speedup = \
+             polled/indexed wall_secs; skip_ratio = indexed ticks_skipped \
+             over the grid. Light cells run slot_dt = 0.001 (the \
+             polling-dominated regime), heavy cells 1.0. Regenerate: \
+             cargo run --release -- bench"
                 .to_string(),
         ),
     );
@@ -317,17 +417,34 @@ mod tests {
         base.machines = 40;
         base.horizon = 60.0;
         base.use_runtime = false;
+        base.slot_dt = 0.1;
         let wl_cfg = WorkloadConfig::paper(0.3);
         let workload = generator::generate(&wl_cfg, base.horizon, 1);
         let indexed =
-            time_simulation(&base, &wl_cfg, workload.clone(), SchedulerKind::Sda, true).unwrap();
-        let scan = time_simulation(&base, &wl_cfg, workload, SchedulerKind::Sda, false).unwrap();
-        // both paths simulate the identical system: same events popped,
-        // same jobs completed, same heap high-water mark — only the wall
-        // clock may differ
+            time_simulation(&base, &wl_cfg, workload.clone(), SchedulerKind::Sda, true, true)
+                .unwrap();
+        let scan =
+            time_simulation(&base, &wl_cfg, workload.clone(), SchedulerKind::Sda, false, true)
+                .unwrap();
+        let polled =
+            time_simulation(&base, &wl_cfg, workload, SchedulerKind::Sda, true, false).unwrap();
+        // all three runs simulate the identical system: same events
+        // popped, same jobs completed, same heap high-water mark, same
+        // slot grid — only the wall clock (and the fired/skipped split)
+        // may differ
         assert_eq!(indexed.events, scan.events);
+        assert_eq!(indexed.events, polled.events);
         assert_eq!(indexed.completed_jobs, scan.completed_jobs);
+        assert_eq!(indexed.completed_jobs, polled.completed_jobs);
         assert_eq!(indexed.peak_event_queue, scan.peak_event_queue);
+        assert_eq!(
+            indexed.ticks_fired + indexed.ticks_skipped,
+            polled.ticks_fired,
+            "identical slot grid on both wakeup modes"
+        );
+        assert_eq!(polled.ticks_skipped, 0);
+        assert!(indexed.ticks_skipped > 0, "light load must skip slots");
+        assert!(indexed.skip_ratio() > 0.0 && indexed.skip_ratio() < 1.0);
         assert!(indexed.events > 0);
         assert!(indexed.events_per_sec > 0.0);
         let cell = ThroughputCell {
@@ -335,13 +452,16 @@ mod tests {
             load: "light",
             lambda: 0.3,
             machines: 40,
+            slot_dt: 0.1,
             indexed,
             scan,
+            polled,
         };
         assert!(cell.speedup() > 0.0);
+        assert!(cell.wakeup_speedup() > 0.0);
         let md = throughput_markdown(std::slice::from_ref(&cell));
         assert!(md.starts_with("| policy |"));
-        assert!(md.contains("| sda | light | 40 |"));
+        assert!(md.contains("| sda | light | 40 | 0.1 |"));
         let doc = throughput_json(&[cell], true);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
@@ -351,6 +471,40 @@ mod tests {
         assert_eq!(cells[0].get("policy").unwrap().as_str(), Some("sda"));
         assert_eq!(cells[0].get("machines").unwrap().as_usize(), Some(40));
         assert!(cells[0].path(&["indexed", "events_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(cells[0].path(&["polled", "ticks_fired"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(cells[0].get("wakeup_speedup").unwrap().as_f64().is_some());
+        assert!(cells[0].get("skip_ratio").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// The CI gate logic reads the right cell and enforces both bars.
+    #[test]
+    fn wakeup_gate_checks_the_naive_light_cell() {
+        let run = |wall: f64, fired: u64, skipped: u64| ThroughputRun {
+            wall_secs: wall,
+            events: 100,
+            events_per_sec: 100.0 / wall,
+            ticks_fired: fired,
+            ticks_skipped: skipped,
+            slot_hook_secs: 0.0,
+            peak_event_queue: 10,
+            completed_jobs: 5,
+        };
+        let cell = |wakeup_wall: f64, fired: u64, skipped: u64| ThroughputCell {
+            policy: "naive".into(),
+            load: "light",
+            lambda: 0.3,
+            machines: 4000,
+            slot_dt: WAKEUP_SLOT_DT,
+            indexed: run(wakeup_wall, fired, skipped),
+            scan: run(1.0, fired, skipped),
+            polled: run(1.0, fired + skipped, 0),
+        };
+        assert!(check_wakeup_gate(&[cell(0.4, 100, 900)]).is_ok());
+        let err = check_wakeup_gate(&[cell(0.9, 100, 900)]).unwrap_err();
+        assert!(err.contains("wakeup_speedup"), "{err}");
+        let err = check_wakeup_gate(&[cell(0.4, 900, 100)]).unwrap_err();
+        assert!(err.contains("skip ratio"), "{err}");
+        assert!(check_wakeup_gate(&[]).is_err(), "missing cell must fail");
     }
 
     #[test]

@@ -7,12 +7,13 @@
 use specsim::cluster::job::{JobId, JobSpec, TaskRef};
 use specsim::cluster::machine::{MachineClass, SlowdownConfig};
 use specsim::cluster::sim::{Cluster, Simulator, Workload};
-use specsim::config::SimConfig;
+use specsim::config::{SimConfig, WorkloadConfig};
+use specsim::estimator;
 use specsim::experiment::{ClusterScenario, ExperimentSpec, LoadPoint, PolicyVariant, Runner};
 use specsim::metrics::report;
-use specsim::scheduler::naive::Naive;
-use specsim::scheduler::sda::Sda;
-use specsim::scheduler::{Scheduler, SchedulerKind};
+use specsim::scheduler::budget::CapBudget;
+use specsim::scheduler::rule::{Sda, SpeculationRule};
+use specsim::scheduler::SchedulerKind;
 use specsim::stats::Pareto;
 
 fn task0() -> TaskRef {
@@ -27,17 +28,22 @@ fn one_task_cluster(cfg: SimConfig, work: f64) -> Cluster {
         specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
         first_durations: vec![vec![work]],
     };
-    let mut sim = Simulator::new(cfg, wl, Box::new(Naive));
+    let sched = specsim::scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+    let mut sim = Simulator::new(cfg, wl, sched);
     assert!(sim.cluster.launch_copy(task0()));
     sim.cluster
 }
 
 /// Drive the copy to its reveal by hand (deterministic, no event loop) and
-/// return (stragglers detected, copies of the task afterwards).
-fn reveal_under_sda(mut cl: Cluster, sda: &mut Sda, at: f64) -> (u64, usize) {
+/// return (stragglers detected, copies of the task afterwards).  The SDA
+/// decision core is the pipeline's `rule::Sda`, wired to the estimator
+/// the pipeline would select for `cfg` and its Theorem-3 `cap2` budget.
+fn reveal_under_sda(cfg: &SimConfig, mut cl: Cluster, sda: &mut Sda, at: f64) -> (u64, usize) {
+    let est = estimator::for_policy(cfg, true);
+    let budget = CapBudget { copies: 2 };
     cl.clock = at;
     cl.jobs[0].tasks[0].copies[0].revealed = true;
-    sda.on_reveal(&mut cl, task0());
+    sda.on_reveal(&mut cl, est.as_ref(), &budget, task0());
     (sda.detected, cl.jobs[0].tasks[0].copies.len())
 }
 
@@ -59,14 +65,14 @@ fn speed_aware_sda_suppresses_slow_class_false_positive() {
     // remaining work is 0.9 (< 1) but the raw wall-clock remaining is 1.8
     let aware = {
         let mut s = Sda::new(&base, 2.0);
-        reveal_under_sda(one_task_cluster(base.clone(), 1.0), &mut s, 0.2)
+        reveal_under_sda(&base, one_task_cluster(base.clone(), 1.0), &mut s, 0.2)
     };
     assert_eq!(aware, (0, 1), "speed-aware SDA must not speculate on a slow-class host");
     let naive_units = {
         let mut cfg = base;
         cfg.speed_aware = false;
         let mut s = Sda::new(&cfg, 2.0);
-        reveal_under_sda(one_task_cluster(cfg.clone(), 1.0), &mut s, 0.2)
+        reveal_under_sda(&cfg, one_task_cluster(cfg.clone(), 1.0), &mut s, 0.2)
     };
     assert_eq!(
         naive_units,
@@ -91,7 +97,7 @@ fn sda_relaunches_copy_stuck_on_slowed_host() {
     // apparent remaining work is 3.6 >> 1 — a detectable straggler
     let cl = one_task_cluster(cfg.clone(), 1.0);
     assert_eq!(cl.jobs[0].tasks[0].copies[0].duration, 4.0);
-    let (detected, copies) = reveal_under_sda(cl, &mut sda, 0.4);
+    let (detected, copies) = reveal_under_sda(&cfg, cl, &mut sda, 0.4);
     assert_eq!(detected, 1, "SDA must detect the slowed host's straggler");
     assert_eq!(copies, 2, "SDA must have launched a backup copy");
     assert_eq!(sda.backups, 1);

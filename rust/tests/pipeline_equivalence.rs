@@ -1,20 +1,28 @@
-//! The policy-pipeline redesign's acceptance suite.
+//! The policy-pipeline + wakeup-planner acceptance suite.
 //!
-//! 1. **Monolith equivalence** — every canonical policy name now builds a
-//!    composed `Pipeline` (`scheduler::pipeline`); with the identical
-//!    spec, the pipeline (`legacy_sched = false`, the default) and the
-//!    retained monolith (`legacy_sched = true`) must serialize
-//!    byte-identical sweep CSVs — same launches, same tie-breaks, same
-//!    everything — across every scenario axis and the ablation knobs the
-//!    compositions fold in (`mantri_srpt`, `mantri_kill`, `clone_copies`,
-//!    `clone_strict`, unit-naive estimators).
-//! 2. **Novel compositions** — specs with no monolith (`"fifo+sda"`,
-//!    `"est-srpt+mantri"`) run end-to-end through the sweep engine and
-//!    appear as distinct labeled rows.
-//! 3. **The est-srpt ordering is real** — it changes scheduling relative
-//!    to mean-field SRPT once reveals refine the keys (its index path is
-//!    proven equivalent to the scan fallback in
-//!    `experiment_integration.rs`).
+//! The pre-redesign scheduler monoliths (and their `legacy_sched` flag)
+//! are deleted — CI ran the byte-identical pipeline-vs-monolith proof
+//! green, per the ROADMAP directive — so this suite now pins the pipeline
+//! two ways:
+//!
+//! 1. **Wakeup equivalence** (the PR-5 tentpole bar) — with the identical
+//!    spec, the demand-driven wakeup planner (`wakeup = true`, the
+//!    default) and the retired fire-every-slot polling loop
+//!    (`wakeup = false`) must serialize byte-identical sweep CSVs — same
+//!    launches, same tie-breaks, same everything — across every canonical
+//!    policy, the ablation variants, two composed specs, and all four
+//!    scenario axes, on both `sched_index` paths.
+//! 2. **Snapshot pin** — the canonical sweep CSV is compared against a
+//!    committed snapshot (`tests/snapshots/canonical_sweep.csv`), so a
+//!    behavioral drift in the pipeline itself (not just a divergence
+//!    between two in-process modes) fails loudly.  On a checkout without
+//!    the snapshot the test *blesses* it (writes the file and passes,
+//!    with a warning): commit the blessed file — CI uploads it as the
+//!    `sweep-snapshots` artifact — to arm the pin.
+//!
+//! Plus the pipeline-composition tests that never depended on the
+//! monoliths: novel compositions sweep end-to-end, and the est-srpt
+//! ordering genuinely diverges from mean-field SRPT.
 
 use specsim::cluster::machine::{MachineClass, SlowdownConfig};
 use specsim::config::{SimConfig, WorkloadConfig};
@@ -24,9 +32,9 @@ use specsim::experiment::{
 use specsim::metrics::report;
 use specsim::scheduler::SchedulerKind;
 
-/// The seven canonical kinds plus the ablation variants whose knobs the
-/// compositions fold in.  Every variant here has a retained monolith to
-/// compare against.
+/// The seven canonical kinds, the ablation variants whose knobs the
+/// compositions fold in, and two composed specs (the ISSUE's wakeup
+/// equivalence grid: 7 canonical + 2 composed).
 fn canonical_policies() -> Vec<PolicyVariant> {
     let mut policies: Vec<PolicyVariant> =
         SchedulerKind::all().into_iter().map(PolicyVariant::kind).collect();
@@ -45,6 +53,8 @@ fn canonical_policies() -> Vec<PolicyVariant> {
     policies.push(PolicyVariant::patched("clone_strict", SchedulerKind::CloneAll, |c| {
         c.clone_strict = true;
     }));
+    policies.push(PolicyVariant::policy("fifo+sda").unwrap());
+    policies.push(PolicyVariant::policy("est-srpt+mantri").unwrap());
     policies
 }
 
@@ -67,17 +77,16 @@ fn equivalence_spec(
     spec
 }
 
-fn csv_with_legacy(spec: &ExperimentSpec, legacy: bool) -> String {
+fn csv_with_wakeup(spec: &ExperimentSpec, wakeup: bool) -> String {
     let mut spec = spec.clone();
-    spec.base.legacy_sched = legacy;
+    spec.base.wakeup = wakeup;
     report::sweep_csv(&Runner::run(&spec).unwrap())
 }
 
-/// The acceptance bar: canonical compositions are byte-identical to the
-/// pre-redesign monoliths across {light, near-capacity} loads and every
-/// scenario axis.
+/// The acceptance bar: the wakeup planner is byte-identical to the polled
+/// slot loop across {light, near-capacity} loads and every scenario axis.
 #[test]
-fn canonical_pipelines_byte_identical_to_monoliths() {
+fn wakeup_sweeps_byte_identical_to_polled_loop() {
     let scenarios: Vec<(&str, ClusterScenario, Vec<LoadPoint>)> = vec![
         (
             "homogeneous",
@@ -105,20 +114,21 @@ fn canonical_pipelines_byte_identical_to_monoliths() {
     ];
     for (name, scenario, loads) in scenarios {
         let spec = equivalence_spec(name, scenario, loads, 2);
-        let monolith = csv_with_legacy(&spec, true);
-        let pipeline = csv_with_legacy(&spec, false);
-        assert!(monolith.lines().count() > spec.policies.len(), "{name}: empty sweep?");
+        let polled = csv_with_wakeup(&spec, false);
+        let planned = csv_with_wakeup(&spec, true);
+        assert!(polled.lines().count() > spec.policies.len(), "{name}: empty sweep?");
         assert_eq!(
-            pipeline, monolith,
-            "{name}: the composed pipeline diverged from the retained monolith"
+            planned, polled,
+            "{name}: the wakeup planner diverged from the polled slot loop"
         );
     }
 }
 
-/// Both build paths must also agree on the scan fallback (the monoliths
-/// and the pipeline share the `sched_index = false` reference scans).
+/// The equivalence must also hold on the naive-scan query path (the
+/// planner's per-rule horizons enumerate candidates on both paths) and
+/// on a finer slot grid, where skipping is the common case.
 #[test]
-fn pipeline_equivalence_holds_on_the_scan_path_too() {
+fn wakeup_equivalence_holds_on_the_scan_path_and_fine_grids_too() {
     let mut spec = equivalence_spec(
         "scan",
         ClusterScenario::homogeneous(),
@@ -126,10 +136,48 @@ fn pipeline_equivalence_holds_on_the_scan_path_too() {
         2,
     );
     spec.base.sched_index = false;
-    assert_eq!(csv_with_legacy(&spec, false), csv_with_legacy(&spec, true));
+    assert_eq!(csv_with_wakeup(&spec, true), csv_with_wakeup(&spec, false));
+    let mut fine = equivalence_spec(
+        "fine-grid",
+        ClusterScenario::homogeneous(),
+        vec![LoadPoint::lambda(0.4)],
+        2,
+    );
+    fine.base.slot_dt = 0.1;
+    assert_eq!(csv_with_wakeup(&fine, true), csv_with_wakeup(&fine, false));
 }
 
-/// Novel compositions — no monolith exists for these — run end-to-end
+/// The committed-snapshot pin replacing the deleted monoliths as the
+/// pipeline's external reference.  Missing snapshot = bless-and-warn
+/// (commit the written file, or the CI `sweep-snapshots` artifact, to
+/// arm the pin); present snapshot = byte-identical or fail.
+#[test]
+fn canonical_sweep_matches_committed_snapshot() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/snapshots/canonical_sweep.csv");
+    let spec = equivalence_spec(
+        "snapshot",
+        ClusterScenario::homogeneous(),
+        vec![LoadPoint::lambda(0.4), LoadPoint::lambda(0.75)],
+        2,
+    );
+    let current = report::sweep_csv(&Runner::run(&spec).unwrap());
+    match std::fs::read_to_string(path) {
+        Ok(snapshot) => assert_eq!(
+            current, snapshot,
+            "canonical sweep drifted from the committed snapshot {path}; if the \
+             change is intentional, delete the file and re-run to re-bless"
+        ),
+        Err(_) => {
+            report::write_file(path, &current).expect("bless the snapshot");
+            eprintln!(
+                "warning: blessed missing canonical sweep snapshot at {path} — \
+                 commit it to arm the pin"
+            );
+        }
+    }
+}
+
+/// Novel compositions — pipelines with no canonical name — run end-to-end
 /// through the sweep engine and land as distinct labeled CSV rows.
 #[test]
 fn novel_compositions_sweep_end_to_end() {
@@ -215,9 +263,9 @@ fn est_ordering_diverges_from_mean_field_srpt() {
     assert_eq!(canon_res.speculative_launches, mean_field.speculative_launches);
 }
 
-/// Satellite: `clone_copies` is configurable and the copy count bites —
-/// 3-way cloning burns measurably more machine time than 2-way on an
-/// uncongested cluster.
+/// Satellite (PR 4): `clone_copies` is configurable and the copy count
+/// bites — 3-way cloning burns measurably more machine time than 2-way on
+/// an uncongested cluster.
 #[test]
 fn clone_copies_knob_changes_resource_use() {
     let run_with = |copies: u32| {

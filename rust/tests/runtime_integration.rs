@@ -8,7 +8,7 @@ use specsim::opt::gradient::{GradientSolver, P2Job, P2Problem};
 use specsim::opt::pareto_math;
 use specsim::runtime::solver::{sda_tables, sigma_curve, PjrtP2};
 use specsim::runtime::Manifest;
-use specsim::scheduler::sca::P2Backend;
+use specsim::scheduler::budget::P2Backend;
 
 const DIR: &str = "artifacts";
 

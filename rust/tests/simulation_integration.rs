@@ -168,9 +168,9 @@ fn single_job_sigma_shape() {
 /// otherwise sit in the heap for its full sampled Pareto duration.  With
 /// stale-entry compaction the heap must track *active* copies: its peak
 /// is bounded by twice the live-event ceiling
-/// (pending arrivals + 2 events per busy machine + the slot tick),
-/// plus the compaction floor — independent of how many copies were ever
-/// launched and killed.
+/// (pending arrivals + 2 events per busy machine — slot boundaries no
+/// longer live in the heap), plus the compaction floor — independent of
+/// how many copies were ever launched and killed.
 #[test]
 fn clone_all_heap_tracks_active_copies() {
     let mut c = cfg(100, 400.0);
@@ -183,9 +183,9 @@ fn clone_all_heap_tracks_active_copies() {
     let res = Simulator::new(c, workload, sched).run();
     assert!(res.speculative_launches > 500, "want heavy kill traffic");
     // live events <= jobs (arrivals queued up-front) + 2 per machine
-    // (CopyFinish + young Checkpoint) + 1 slot tick; compaction keeps
+    // (CopyFinish + young Checkpoint); compaction keeps
     // stale <= max(live, 64), so peak <= 2 * live_ceiling + 64 + margin
-    let live_ceiling = jobs + 2 * 100 + 1;
+    let live_ceiling = jobs + 2 * 100;
     assert!(
         res.peak_event_queue <= 2 * live_ceiling + 80,
         "heap peak {} vs live ceiling {} (launched {} backups): stale \
