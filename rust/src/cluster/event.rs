@@ -2,24 +2,47 @@
 //! number so simultaneous events process in insertion order, keeping runs
 //! deterministic).
 //!
-//! Scheduling-slot boundaries do **not** live in this heap: since the
+//! Scheduling-slot boundaries do **not** live in this queue: since the
 //! demand-driven wakeup planner retired the `SlotTick` polling loop, the
-//! slot grid is interleaved with the heap by the run loops themselves
+//! slot grid is interleaved with the queue by the run loops themselves
 //! (`Simulator::run`, `coordinator::master`), with the defined tie
 //! semantics that a slot at time `t` observes every event at `t` — see
 //! [`crate::cluster::sim::SlotGate`] and DESIGN.md §12.
 //!
+//! ## Backends
+//!
+//! Two interchangeable backends implement the same `(time, seq)` total
+//! order ([`EventQueueKind`], selected by `SimConfig::event_queue`):
+//!
+//! * **`binary-heap`** — the classic `BinaryHeap<Entry>`: O(log n) push
+//!   and pop, no assumptions about push times.  Retained as the
+//!   equivalence reference.
+//! * **`calendar`** — a calendar queue keyed on the scheduling slot grid
+//!   (bucket width = `slot_dt`, the same grid the wakeup planner
+//!   quantizes to): O(1) push into the bucket of `floor(t / width)`,
+//!   pops walk a cursor over an absolute in-window wheel of
+//!   [`CALENDAR_DAYS`] buckets and lazily sort one bucket at a time.
+//!   Events beyond the wheel's horizon wait in a sorted **overflow**
+//!   min-heap and migrate into the wheel (each at most once) when the
+//!   wheel drains and the window rebases forward.  The calendar assumes
+//!   the simulator's push discipline — every push is at `clock + d`,
+//!   `d > 0`, with `clock` at or after the last popped time — which keeps
+//!   the window monotone (asserted in debug builds).  Within a bucket,
+//!   entries sort by the *identical* `(time, seq)` comparison the heap
+//!   uses, so the two backends pop bit-identical sequences.
+//!
 //! ## Stale-entry hygiene
 //!
 //! A killed copy leaves its `CopyFinish` (and possibly `Checkpoint`) entry
-//! in the heap until its sampled time — harmless (the pop is a no-op) but
-//! under heavy speculation the heap would otherwise track *copies ever
+//! in the queue until its sampled time — harmless (the pop is a no-op) but
+//! under heavy speculation the queue would otherwise track *copies ever
 //! launched* instead of *copies alive*.  The cluster counts exactly those
 //! dead entries via [`EventQueue::note_stale`]; once they outnumber the
-//! live half of the heap, [`EventQueue::retain_live`] compacts in one
+//! live half of the queue, [`EventQueue::retain_live`] compacts in one
 //! O(n) pass (amortized O(1) per kill).  Sequence numbers survive
 //! compaction, so the pop order of the remaining events — and therefore
-//! the simulation — is bit-identical with or without it.
+//! the simulation — is bit-identical with or without it, on either
+//! backend.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -35,6 +58,45 @@ pub enum Event {
     /// A first copy crosses the detection fraction s_i: its true remaining
     /// time becomes visible to the scheduler (straggler checkpoint).
     Checkpoint { task: TaskRef, copy: u32 },
+}
+
+/// Which data structure backs the [`EventQueue`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EventQueueKind {
+    /// The classic binary heap — the equivalence reference.
+    BinaryHeap,
+    /// Slot-grid calendar queue — the default hot path.
+    #[default]
+    Calendar,
+}
+
+impl EventQueueKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventQueueKind::BinaryHeap => "binary-heap",
+            EventQueueKind::Calendar => "calendar",
+        }
+    }
+}
+
+impl std::str::FromStr for EventQueueKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "binary-heap" | "heap" => Ok(EventQueueKind::BinaryHeap),
+            "calendar" => Ok(EventQueueKind::Calendar),
+            other => Err(format!(
+                "unknown event queue '{other}' (expected binary-heap or calendar)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for EventQueueKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -53,7 +115,10 @@ impl Eq for Entry {}
 
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        // reversed: BinaryHeap is a max-heap, we want earliest-first.  The
+        // calendar's per-bucket sort uses this same comparison (popping
+        // from the Vec's tail), so tie order — including the -0.0 == 0.0
+        // semantics of partial_cmp — is identical across backends.
         other
             .time
             .partial_cmp(&self.time)
@@ -67,10 +132,198 @@ impl PartialOrd for Entry {
     }
 }
 
-/// Min-heap of timestamped events with stale-entry accounting.
-#[derive(Debug, Default)]
+/// In-window wheel size, in buckets (= scheduling slots).  At the bench's
+/// light-load grid (`slot_dt = 0.001`) this covers 8.192 time units —
+/// past the mean Pareto copy duration, so most `CopyFinish` pushes land
+/// in-window; at the paper's `slot_dt = 1` it covers every event of a
+/// standard run.  Empty buckets cost one `Vec` header each (~192 KiB
+/// total), independent of machine count.
+const CALENDAR_DAYS: usize = 8192;
+
+/// Calendar-queue backend: an absolute-addressed window of
+/// [`CALENDAR_DAYS`] buckets starting at bucket `epoch`, plus an overflow
+/// min-heap for events at or beyond bucket `epoch + CALENDAR_DAYS`.
+///
+/// Invariants (debug-asserted where cheap):
+/// * every bucket below `cursor` in the wheel is empty;
+/// * wheel entries live in buckets `[epoch, epoch + CALENDAR_DAYS)`,
+///   overflow entries at or beyond `epoch + CALENDAR_DAYS` — so every
+///   wheel entry pops before any overflow entry, and equal times always
+///   share a bucket (tie order is the bucket sort);
+/// * pushes never land below `last_pop_bucket` (the simulator's push
+///   discipline), so `epoch` only ever moves forward — it rebases to
+///   `last_pop_bucket` when the wheel drains, at which point any overflow
+///   prefix that fits the new window migrates in (each entry at most
+///   once).
+#[derive(Debug)]
+struct Calendar {
+    /// Bucket width: the run's `slot_dt` (guarded to a positive finite).
+    width: f64,
+    /// Absolute bucket index of `wheel[0]`.
+    epoch: u64,
+    /// Current wheel slot; all slots below it are empty.
+    cursor: usize,
+    /// Whether `wheel[cursor]` is sorted (descending by `Entry`'s reversed
+    /// order, so the earliest entry is at the tail).
+    cur_sorted: bool,
+    wheel: Vec<Vec<Entry>>,
+    /// Total entries across all wheel buckets.
+    wheel_len: usize,
+    /// Far-horizon entries, earliest-first (same `Entry` order).
+    overflow: BinaryHeap<Entry>,
+    /// Absolute bucket of the most recent pop — the floor for future
+    /// pushes and the rebase target.
+    last_pop_bucket: u64,
+}
+
+impl Calendar {
+    fn new(width: f64) -> Self {
+        let width = if width.is_finite() && width > 0.0 { width } else { 1.0 };
+        Calendar {
+            width,
+            epoch: 0,
+            cursor: 0,
+            cur_sorted: true,
+            wheel: (0..CALENDAR_DAYS).map(|_| Vec::new()).collect(),
+            wheel_len: 0,
+            overflow: BinaryHeap::new(),
+            last_pop_bucket: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, t: f64) -> u64 {
+        let b = (t / self.width).floor();
+        if b <= 0.0 {
+            0
+        } else {
+            b as u64 // saturates for absurdly large t
+        }
+    }
+
+    fn push(&mut self, e: Entry) {
+        let b = self.bucket(e.time);
+        debug_assert!(
+            b >= self.last_pop_bucket,
+            "calendar push into bucket {b} behind last pop bucket {} (t = {})",
+            self.last_pop_bucket,
+            e.time
+        );
+        let rel = b.saturating_sub(self.epoch);
+        if rel >= CALENDAR_DAYS as u64 {
+            self.overflow.push(e);
+            return;
+        }
+        let i = rel as usize;
+        self.wheel[i].push(e);
+        self.wheel_len += 1;
+        if i < self.cursor {
+            // a slot fired between far-apart events and launched a short
+            // copy: legal (still >= last_pop_bucket), walk the cursor back
+            self.cursor = i;
+            self.cur_sorted = false;
+        } else if i == self.cursor {
+            self.cur_sorted = false;
+        }
+    }
+
+    /// Bring the queue to a poppable state: rebase + migrate if the wheel
+    /// drained, then advance the cursor to the next non-empty bucket and
+    /// sort it lazily.
+    fn settle(&mut self) {
+        if self.wheel_len == 0 {
+            if self.overflow.is_empty() {
+                return;
+            }
+            if self.last_pop_bucket > self.epoch {
+                self.epoch = self.last_pop_bucket;
+            }
+            self.cursor = 0;
+            self.cur_sorted = false;
+            // migrate the overflow prefix that fits the rebased window;
+            // time order == bucket order, so a peek/pop loop extracts
+            // exactly the in-window entries
+            let horizon = self.epoch.saturating_add(CALENDAR_DAYS as u64);
+            while let Some(e) = self.overflow.peek() {
+                if self.bucket(e.time) >= horizon {
+                    break;
+                }
+                let e = self.overflow.pop().expect("peeked entry");
+                let i = (self.bucket(e.time) - self.epoch) as usize;
+                self.wheel[i].push(e);
+                self.wheel_len += 1;
+            }
+            if self.wheel_len == 0 {
+                return; // everything still beyond the window: pop overflow
+            }
+        }
+        while self.wheel[self.cursor].is_empty() {
+            self.cursor += 1;
+            self.cur_sorted = false;
+        }
+        if !self.cur_sorted {
+            self.wheel[self.cursor].sort_unstable();
+            self.cur_sorted = true;
+        }
+    }
+
+    fn pop(&mut self) -> Option<Entry> {
+        self.settle();
+        if self.wheel_len > 0 {
+            let e = self.wheel[self.cursor].pop().expect("settled cursor bucket");
+            self.wheel_len -= 1;
+            self.last_pop_bucket = self.epoch + self.cursor as u64;
+            Some(e)
+        } else {
+            let e = self.overflow.pop()?;
+            self.last_pop_bucket = self.bucket(e.time);
+            Some(e)
+        }
+    }
+
+    fn peek(&mut self) -> Option<&Entry> {
+        self.settle();
+        if self.wheel_len > 0 {
+            self.wheel[self.cursor].last()
+        } else {
+            self.overflow.peek()
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.wheel_len + self.overflow.len()
+    }
+
+    fn retain(&mut self, mut is_live: impl FnMut(&Event) -> bool) {
+        let mut removed = 0;
+        for slot in self.wheel.iter_mut() {
+            let before = slot.len();
+            // Vec::retain preserves order, so a sorted cursor bucket stays
+            // sorted
+            slot.retain(|e| is_live(&e.event));
+            removed += before - slot.len();
+        }
+        self.wheel_len -= removed;
+        let kept: Vec<Entry> = std::mem::take(&mut self.overflow)
+            .into_vec()
+            .into_iter()
+            .filter(|e| is_live(&e.event))
+            .collect();
+        self.overflow = BinaryHeap::from(kept);
+    }
+}
+
+#[derive(Debug)]
+enum Backend {
+    Heap(BinaryHeap<Entry>),
+    Calendar(Calendar),
+}
+
+/// Min-queue of timestamped events with stale-entry accounting, backed by
+/// either a binary heap or a slot-grid calendar ([`EventQueueKind`]).
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Entry>,
+    backend: Backend,
     seq: u64,
     /// Entries known to be dead (their copy was killed / its task done);
     /// popped as no-ops unless compacted away first.
@@ -79,39 +332,89 @@ pub struct EventQueue {
     peak: usize,
 }
 
-/// Don't bother compacting tiny heaps.
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue {
+            backend: Backend::Heap(BinaryHeap::new()),
+            seq: 0,
+            stale: 0,
+            peak: 0,
+        }
+    }
+}
+
+/// Don't bother compacting tiny queues.
 const COMPACT_MIN_STALE: usize = 64;
 
 impl EventQueue {
+    /// Binary-heap-backed queue (the reference backend).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Queue backed by `kind`; the calendar's bucket width is the run's
+    /// `slot_dt` (the wakeup planner's decision grid).
+    pub fn with_kind(kind: EventQueueKind, slot_dt: f64) -> Self {
+        match kind {
+            EventQueueKind::BinaryHeap => Self::new(),
+            EventQueueKind::Calendar => EventQueue {
+                backend: Backend::Calendar(Calendar::new(slot_dt)),
+                seq: 0,
+                stale: 0,
+                peak: 0,
+            },
+        }
+    }
+
+    pub fn kind(&self) -> EventQueueKind {
+        match &self.backend {
+            Backend::Heap(_) => EventQueueKind::BinaryHeap,
+            Backend::Calendar(_) => EventQueueKind::Calendar,
+        }
     }
 
     pub fn push(&mut self, time: f64, event: Event) {
         debug_assert!(time.is_finite(), "event at non-finite time: {event:?}");
         self.seq += 1;
-        self.heap.push(Entry { time, seq: self.seq, event });
-        if self.heap.len() > self.peak {
-            self.peak = self.heap.len();
+        let entry = Entry { time, seq: self.seq, event };
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(entry),
+            Backend::Calendar(c) => c.push(entry),
+        }
+        let n = self.len();
+        if n > self.peak {
+            self.peak = n;
         }
     }
 
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        self.heap.pop().map(|e| (e.time, e.event))
+        let e = match &mut self.backend {
+            Backend::Heap(h) => h.pop(),
+            Backend::Calendar(c) => c.pop(),
+        };
+        e.map(|e| (e.time, e.event))
     }
 
-    pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time)
+    /// Time of the next event.  `&mut` because the calendar backend
+    /// settles (rebases / sorts) lazily on observation.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        match &mut self.backend {
+            Backend::Heap(h) => h.peek().map(|e| e.time),
+            Backend::Calendar(c) => c.peek().map(|e| e.time),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Calendar(c) => c.len(),
+        }
     }
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
-    /// Largest `len()` ever observed (perf-harness metric: heap growth
+    /// Largest `len()` ever observed (perf-harness metric: queue growth
     /// must track active copies, not copies ever launched).
     pub fn peak_len(&self) -> usize {
         self.peak
@@ -131,17 +434,20 @@ impl EventQueue {
     }
 
     /// Should the owner run a compaction pass?  True once at least half
-    /// the heap is dead entries (so each O(n) pass removes ≥ n/2 of them —
+    /// the queue is dead entries (so each O(n) pass removes ≥ n/2 of them —
     /// amortized O(1) per kill).
     pub fn should_compact(&self) -> bool {
-        self.stale >= COMPACT_MIN_STALE && 2 * self.stale >= self.heap.len()
+        self.stale >= COMPACT_MIN_STALE && 2 * self.stale >= self.len()
     }
 
     /// Drop every entry whose event fails `is_live`, resetting the stale
     /// count.  Sequence numbers are preserved, so surviving events pop in
     /// the exact order they would have without compaction.
     pub fn retain_live(&mut self, mut is_live: impl FnMut(&Event) -> bool) {
-        self.heap.retain(|e| is_live(&e.event));
+        match &mut self.backend {
+            Backend::Heap(h) => h.retain(|e| is_live(&e.event)),
+            Backend::Calendar(c) => c.retain(is_live),
+        }
         self.stale = 0;
     }
 }
@@ -149,85 +455,264 @@ impl EventQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stats::Pcg64;
+
+    /// Run every black-box queue test against both backends.
+    fn both(mut f: impl FnMut(EventQueue)) {
+        f(EventQueue::new());
+        f(EventQueue::with_kind(EventQueueKind::Calendar, 1.0));
+    }
+
+    #[test]
+    fn kind_parses_and_roundtrips() {
+        use std::str::FromStr;
+        assert_eq!(EventQueueKind::from_str("binary-heap"), Ok(EventQueueKind::BinaryHeap));
+        assert_eq!(EventQueueKind::from_str("heap"), Ok(EventQueueKind::BinaryHeap));
+        assert_eq!(EventQueueKind::from_str("calendar"), Ok(EventQueueKind::Calendar));
+        assert!(EventQueueKind::from_str("splay").is_err());
+        for k in [EventQueueKind::BinaryHeap, EventQueueKind::Calendar] {
+            assert_eq!(EventQueueKind::from_str(&k.to_string()), Ok(k));
+        }
+        assert_eq!(EventQueueKind::default(), EventQueueKind::Calendar);
+        assert_eq!(EventQueue::new().kind(), EventQueueKind::BinaryHeap);
+        assert_eq!(
+            EventQueue::with_kind(EventQueueKind::Calendar, 0.5).kind(),
+            EventQueueKind::Calendar
+        );
+    }
 
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(3.0, Event::Arrival(JobId(3)));
-        q.push(1.0, Event::Arrival(JobId(1)));
-        q.push(2.0, Event::Arrival(JobId(2)));
-        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
-        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        both(|mut q| {
+            q.push(3.0, Event::Arrival(JobId(3)));
+            q.push(1.0, Event::Arrival(JobId(1)));
+            q.push(2.0, Event::Arrival(JobId(2)));
+            let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+            assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        });
     }
 
     #[test]
     fn ties_pop_in_insertion_order() {
-        let mut q = EventQueue::new();
-        q.push(1.0, Event::Arrival(JobId(10)));
-        q.push(1.0, Event::Arrival(JobId(20)));
-        match (q.pop().unwrap().1, q.pop().unwrap().1) {
-            (Event::Arrival(a), Event::Arrival(b)) => {
-                assert_eq!(a, JobId(10));
-                assert_eq!(b, JobId(20));
+        both(|mut q| {
+            q.push(1.0, Event::Arrival(JobId(10)));
+            q.push(1.0, Event::Arrival(JobId(20)));
+            match (q.pop().unwrap().1, q.pop().unwrap().1) {
+                (Event::Arrival(a), Event::Arrival(b)) => {
+                    assert_eq!(a, JobId(10));
+                    assert_eq!(b, JobId(20));
+                }
+                other => panic!("unexpected {other:?}"),
             }
-            other => panic!("unexpected {other:?}"),
-        }
+        });
     }
 
     #[test]
     fn peak_tracks_high_water_mark() {
-        let mut q = EventQueue::new();
-        for i in 0..5 {
-            q.push(i as f64, Event::Arrival(JobId(i)));
-        }
-        q.pop();
-        q.pop();
-        q.push(9.0, Event::Arrival(JobId(9)));
-        assert_eq!(q.len(), 4);
-        assert_eq!(q.peak_len(), 5);
+        both(|mut q| {
+            for i in 0..5 {
+                q.push(i as f64, Event::Arrival(JobId(i)));
+            }
+            q.pop();
+            q.pop();
+            q.push(9.0, Event::Arrival(JobId(9)));
+            assert_eq!(q.len(), 4);
+            assert_eq!(q.peak_len(), 5);
+        });
     }
 
     #[test]
     fn compaction_preserves_survivor_order() {
-        let mut q = EventQueue::new();
-        // interleave live arrivals with stale-to-be copy finishes
-        for i in 0..200u32 {
-            q.push(i as f64, Event::Arrival(JobId(i)));
-            q.push(
-                i as f64 + 0.5,
-                Event::CopyFinish { task: TaskRef { job: JobId(i), task: 0 }, copy: 0 },
-            );
-        }
-        assert!(!q.should_compact());
-        q.note_stale(200);
-        assert!(q.should_compact());
-        q.retain_live(|e| matches!(e, Event::Arrival(_)));
-        assert!(!q.should_compact());
-        assert_eq!(q.len(), 200);
-        // survivors pop in the original (time, seq) order
-        let mut prev = -1.0;
-        while let Some((t, e)) = q.pop() {
-            assert!(t > prev);
-            prev = t;
-            assert!(matches!(e, Event::Arrival(_)));
-        }
+        both(|mut q| {
+            // interleave live arrivals with stale-to-be copy finishes
+            for i in 0..200u32 {
+                q.push(i as f64, Event::Arrival(JobId(i)));
+                q.push(
+                    i as f64 + 0.5,
+                    Event::CopyFinish { task: TaskRef { job: JobId(i), task: 0 }, copy: 0 },
+                );
+            }
+            assert!(!q.should_compact());
+            q.note_stale(200);
+            assert!(q.should_compact());
+            q.retain_live(|e| matches!(e, Event::Arrival(_)));
+            assert!(!q.should_compact());
+            assert_eq!(q.len(), 200);
+            // survivors pop in the original (time, seq) order
+            let mut prev = -1.0;
+            while let Some((t, e)) = q.pop() {
+                assert!(t > prev);
+                prev = t;
+                assert!(matches!(e, Event::Arrival(_)));
+            }
+        });
     }
 
     #[test]
     fn small_heaps_never_compact() {
-        let mut q = EventQueue::new();
-        q.push(1.0, Event::Arrival(JobId(1)));
-        q.note_stale(1);
-        assert!(!q.should_compact(), "below the compaction floor");
+        both(|mut q| {
+            q.push(1.0, Event::Arrival(JobId(1)));
+            q.note_stale(1);
+            assert!(!q.should_compact(), "below the compaction floor");
+        });
     }
 
     #[test]
     fn peek_matches_pop() {
-        let mut q = EventQueue::new();
-        q.push(5.0, Event::Arrival(JobId(5)));
-        q.push(4.0, Event::Arrival(JobId(4)));
-        assert_eq!(q.peek_time(), Some(4.0));
-        assert_eq!(q.pop().unwrap().0, 4.0);
-        assert_eq!(q.len(), 1);
+        both(|mut q| {
+            q.push(5.0, Event::Arrival(JobId(5)));
+            q.push(4.0, Event::Arrival(JobId(4)));
+            assert_eq!(q.peek_time(), Some(4.0));
+            assert_eq!(q.pop().unwrap().0, 4.0);
+            assert_eq!(q.len(), 1);
+        });
+    }
+
+    /// The wheel rebases across many full windows without losing order.
+    #[test]
+    fn calendar_bucket_rollover_preserves_order() {
+        let mut q = EventQueue::with_kind(EventQueueKind::Calendar, 1.0);
+        // 5 windows' worth of events, pushed shuffled within a stride
+        let span = (CALENDAR_DAYS * 5) as u32;
+        for i in (0..span).step_by(7) {
+            q.push(i as f64 + 0.25, Event::Arrival(JobId(i)));
+        }
+        let mut prev = -1.0;
+        let mut popped = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t > prev, "out of order at t = {t}");
+            prev = t;
+            popped += 1;
+        }
+        assert_eq!(popped, span.div_ceil(7));
+    }
+
+    /// Far-horizon events wait in overflow and still pop in global order,
+    /// including ties against in-window pushes that arrive later.
+    #[test]
+    fn calendar_far_horizon_overflow_order() {
+        let far = (CALENDAR_DAYS as f64) * 3.0 + 0.5;
+        let mut q = EventQueue::with_kind(EventQueueKind::Calendar, 1.0);
+        q.push(far, Event::Arrival(JobId(1))); // straight to overflow
+        q.push(2.5, Event::Arrival(JobId(2)));
+        q.push(far, Event::Arrival(JobId(3))); // ties with the first by seq
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap(), (2.5, Event::Arrival(JobId(2))));
+        // wheel drained: rebase migrates the overflow pair in
+        assert_eq!(q.pop().unwrap(), (far, Event::Arrival(JobId(1))));
+        assert_eq!(q.pop().unwrap(), (far, Event::Arrival(JobId(3))));
+        assert!(q.pop().is_none());
+    }
+
+    /// A push can land behind the cursor (a slot fired between far-apart
+    /// events and launched a short copy); the cursor walks back.
+    #[test]
+    fn calendar_push_behind_cursor() {
+        let mut q = EventQueue::with_kind(EventQueueKind::Calendar, 1.0);
+        q.push(100.5, Event::Arrival(JobId(1)));
+        q.push(0.5, Event::Arrival(JobId(2)));
+        assert_eq!(q.pop().unwrap().0, 0.5);
+        // cursor is now deep in the wheel; push an earlier (but still
+        // post-pop) event behind it
+        q.push(3.5, Event::Arrival(JobId(3)));
+        assert_eq!(q.pop().unwrap().0, 3.5);
+        assert_eq!(q.pop().unwrap().0, 100.5);
+    }
+
+    /// Overflow entries whose spacing exceeds the window pop directly from
+    /// the overflow heap (the rebase migrates nothing).
+    #[test]
+    fn calendar_sparse_overflow_pops_directly() {
+        let w = CALENDAR_DAYS as f64;
+        let mut q = EventQueue::with_kind(EventQueueKind::Calendar, 1.0);
+        for i in 1..=4u32 {
+            q.push(w * 2.0 * i as f64, Event::Arrival(JobId(i)));
+        }
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![w * 2.0, w * 4.0, w * 6.0, w * 8.0]);
+    }
+
+    /// Property test: random interleaved push/pop/kill/compact sequences
+    /// through both backends pop identical `(time, seq)` streams and agree
+    /// on every piece of stale bookkeeping.  Pushes follow the simulator's
+    /// discipline (always at or after the last popped time).
+    #[test]
+    fn backends_pop_identically_under_random_ops() {
+        for seed in 0..8u64 {
+            let mut rng = Pcg64::new(seed, 0xca1e);
+            let mut heap = EventQueue::new();
+            let mut cal = EventQueue::with_kind(EventQueueKind::Calendar, 0.25);
+            let mut clock = 0.0f64;
+            let mut next_id = 0u32;
+            // ids whose events are dead; both queues' retain predicate
+            let mut killed = std::collections::HashSet::new();
+            let mut live_ids = Vec::new();
+            for _ in 0..4000 {
+                match (rng.next_f64() * 10.0) as u32 {
+                    // 40%: push at clock + d, d in (0, ~3 windows]
+                    0..=3 => {
+                        let d = rng.next_f64().powi(3) * 3.0 * 0.25 * CALENDAR_DAYS as f64;
+                        let t = clock + d.max(1e-9);
+                        let ev = Event::Arrival(JobId(next_id));
+                        live_ids.push(next_id);
+                        next_id += 1;
+                        heap.push(t, ev);
+                        cal.push(t, ev);
+                    }
+                    // 30%: pop and compare
+                    4..=6 => {
+                        let a = heap.pop();
+                        let b = cal.pop();
+                        assert_eq!(a, b, "divergent pop (seed {seed})");
+                        if let Some((t, Event::Arrival(id))) = a {
+                            assert!(t >= clock);
+                            clock = t;
+                            if killed.remove(&id.0) {
+                                heap.note_stale_popped();
+                                cal.note_stale_popped();
+                            }
+                            live_ids.retain(|&x| x != id.0);
+                        }
+                    }
+                    // 20%: kill a random live entry
+                    7..=8 => {
+                        if !live_ids.is_empty() {
+                            let i = (rng.next_f64() * live_ids.len() as f64) as usize;
+                            let id = live_ids[i.min(live_ids.len() - 1)];
+                            if killed.insert(id) {
+                                heap.note_stale(1);
+                                cal.note_stale(1);
+                            }
+                        }
+                    }
+                    // 10%: compact when due (same trigger on both)
+                    _ => {
+                        assert_eq!(heap.should_compact(), cal.should_compact());
+                        if heap.should_compact() {
+                            let k1 = killed.clone();
+                            let k2 = killed.clone();
+                            heap.retain_live(|e| {
+                                !matches!(e, Event::Arrival(id) if k1.contains(&id.0))
+                            });
+                            cal.retain_live(|e| {
+                                !matches!(e, Event::Arrival(id) if k2.contains(&id.0))
+                            });
+                            live_ids.retain(|x| !killed.contains(x));
+                            killed.clear();
+                        }
+                    }
+                }
+                assert_eq!(heap.len(), cal.len(), "divergent len (seed {seed})");
+            }
+            // drain both to the end
+            loop {
+                let a = heap.pop();
+                let b = cal.pop();
+                assert_eq!(a, b, "divergent drain (seed {seed})");
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
     }
 }

@@ -27,13 +27,14 @@
 //! scans make: the same copies launched in the same order with the same
 //! tie-breaks.  Three facts deliver that:
 //!
-//! * candidate iteration yields ascending task indices per job
-//!   ([`BTreeSet::union`] of the two disjoint splits), and schedulers
-//!   visit jobs in the same ascending-`JobId` order as before;
-//! * the ordered job sets are `BTreeSet<(F64Key, JobId)>` with
+//! * candidate iteration yields ascending task indices per job (an
+//!   allocation-free merge of the two disjoint sorted splits), and
+//!   schedulers visit jobs in the same ascending-`JobId` order as before;
+//! * the ordered job sets are [`SortedSet`]s of `(F64Key, JobId)` with
 //!   [`f64::total_cmp`] key order — identical to a *stable* sort by
 //!   `total_cmp` over an id-ordered collection, which is what the scan
-//!   paths do;
+//!   paths do (a sorted vec and a `BTreeSet` iterate the same `Ord`
+//!   order, so swapping the container cannot change a decision);
 //! * keys are recomputed from the same pure functions
 //!   (`JobState::remaining_workload`, `JobSpec::workload`) at every
 //!   mutation, and mutations only happen between queries (event handling
@@ -53,11 +54,10 @@
 //! at all — see `rust/DESIGN.md` §12.
 
 use std::cmp::Ordering;
-use std::collections::BTreeSet;
 
-use super::job::{CopyPhase, JobId, JobPhase, JobState, TaskRef};
+use super::job::{CopyPhase, JobId, JobPhase, JobState, TaskArena, TaskRef};
 
-/// An `f64` ordered by [`f64::total_cmp`] so it can key a [`BTreeSet`].
+/// An `f64` ordered by [`f64::total_cmp`] so it can key an ordered set.
 /// Matches the NaN-safe `total_cmp` sorts used by the scan reference
 /// paths, so index order and scan order agree on every input.  Equality
 /// is defined through the same total order (NOT `f64::eq`: `-0.0` and
@@ -86,14 +86,99 @@ impl PartialOrd for F64Key {
     }
 }
 
+/// An ordered set backed by a flat sorted `Vec`: binary-search membership,
+/// `memmove` insert/remove, ascending in-place iteration.  The measured
+/// pass over `SchedIndex` churn (DESIGN.md §13) showed mutation rate
+/// dominating lookups at bench scale, where a contiguous shift of a few
+/// hundred small elements beats a `BTreeSet`'s node allocation and
+/// pointer-chasing on every re-key — and iteration (the per-slot query
+/// path) becomes a linear scan of one cache-friendly slice.  Iterates in
+/// exactly the `Ord` order a `BTreeSet` would, which is what keeps the
+/// container swap bit-identical.
+#[derive(Clone, Debug)]
+pub(crate) struct SortedSet<T: Ord> {
+    items: Vec<T>,
+}
+
+impl<T: Ord> Default for SortedSet<T> {
+    fn default() -> Self {
+        SortedSet { items: Vec::new() }
+    }
+}
+
+impl<T: Ord> SortedSet<T> {
+    /// Insert, keeping sort order; false if already present.
+    fn insert(&mut self, x: T) -> bool {
+        match self.items.binary_search(&x) {
+            Ok(_) => false,
+            Err(i) => {
+                self.items.insert(i, x);
+                true
+            }
+        }
+    }
+
+    /// Remove; false if absent.
+    fn remove(&mut self, x: &T) -> bool {
+        match self.items.binary_search(x) {
+            Ok(i) => {
+                self.items.remove(i);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.items.iter()
+    }
+
+    fn as_slice(&self) -> &[T] {
+        &self.items
+    }
+
+    fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Ascending merge of two disjoint sorted `u32` slices — the union the
+/// old `BTreeSet` layout got from `BTreeSet::union`, allocation-free.
+struct MergeAsc<'a> {
+    a: &'a [u32],
+    b: &'a [u32],
+}
+
+impl Iterator for MergeAsc<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        match (self.a.first(), self.b.first()) {
+            (Some(&x), Some(&y)) if x <= y => {
+                self.a = &self.a[1..];
+                Some(x)
+            }
+            (_, Some(&y)) => {
+                self.b = &self.b[1..];
+                Some(y)
+            }
+            (Some(&x), None) => {
+                self.a = &self.a[1..];
+                Some(x)
+            }
+            (None, None) => None,
+        }
+    }
+}
+
 /// Per-job slice of the index.
 #[derive(Clone, Debug, Default)]
 struct JobIndex {
     /// Tasks whose only copy is a running first copy that has not crossed
     /// its detection checkpoint.  Disjoint from `revealed`.
-    unrevealed: BTreeSet<u32>,
+    unrevealed: SortedSet<u32>,
     /// Tasks whose only copy is a running, checkpoint-revealed first copy.
-    revealed: BTreeSet<u32>,
+    revealed: SortedSet<u32>,
     /// The key under which the job currently sits in the level-2 set
     /// (`None` = not a member).  Stored so a stale entry can be removed
     /// when the remaining workload changes.
@@ -125,22 +210,22 @@ pub struct SchedIndex {
     jobs: Vec<JobIndex>,
     /// Running jobs with unlaunched tasks, by (remaining workload, id) —
     /// the SRPT level-2 order.
-    level2: BTreeSet<(F64Key, JobId)>,
+    level2: SortedSet<(F64Key, JobId)>,
     /// Same membership as `level2`, in plain id (= arrival) order — the
     /// Mantri/LATE FIFO baselines.
-    level2_fifo: BTreeSet<JobId>,
+    level2_fifo: SortedSet<JobId>,
     /// Same membership as `level2`, keyed by the estimate-driven
     /// reveal-refined workload (`estimator::revealed_job_workload`) — the
     /// `est-srpt` ordering.  Maintained only when [`track_est_keys`]
     /// enabled it (an est-srpt pipeline is active); zero upkeep otherwise.
     ///
     /// [`track_est_keys`]: Self::track_est_keys
-    level2_est: BTreeSet<(F64Key, JobId)>,
+    level2_est: SortedSet<(F64Key, JobId)>,
     /// Whether the est-keyed twin (and the per-job contribution vectors)
     /// are maintained.
     track_est: bool,
     /// Queued jobs by (total workload, id) — the χ(l) level-3 order.
-    queued: BTreeSet<(F64Key, JobId)>,
+    queued: SortedSet<(F64Key, JobId)>,
     /// Total unlaunched tasks over the queued jobs (backpressure signal).
     queued_tasks: usize,
     /// Reused job-id buffer for slot hooks (snapshot an ordering, then
@@ -223,27 +308,27 @@ impl SchedIndex {
         }
     }
 
-    /// Re-derive the task's speculation-candidate status from its state.
-    /// Call after any mutation of the task's copies (launch, kill, finish,
-    /// checkpoint reveal).
-    pub fn sync_task(&mut self, job: &JobState, t: TaskRef) {
-        let task = &job.tasks[t.task as usize];
+    /// Re-derive the task's speculation-candidate status from its arena
+    /// state.  Call after any mutation of the task's copies (launch, kill,
+    /// finish, checkpoint reveal).
+    pub fn sync_task(&mut self, job: &JobState, arena: &TaskArena, t: TaskRef) {
+        let tid = job.tid(t.task);
         let ji = &mut self.jobs[t.job.0 as usize];
-        let candidate = !task.done
-            && task.copies.len() == 1
-            && task.copies[0].phase == CopyPhase::Running;
-        if candidate {
-            if task.copies[0].revealed {
-                ji.unrevealed.remove(&t.task);
-                ji.revealed.insert(t.task);
-            } else {
-                ji.revealed.remove(&t.task);
-                ji.unrevealed.insert(t.task);
+        if !arena.done(tid) && arena.n_copies(tid) == 1 {
+            let cid = arena.copy_id(tid, 0);
+            if arena.phase(cid) == CopyPhase::Running {
+                if arena.revealed(cid) {
+                    ji.unrevealed.remove(&t.task);
+                    ji.revealed.insert(t.task);
+                } else {
+                    ji.revealed.remove(&t.task);
+                    ji.unrevealed.insert(t.task);
+                }
+                return;
             }
-        } else {
-            ji.unrevealed.remove(&t.task);
-            ji.revealed.remove(&t.task);
         }
+        ji.unrevealed.remove(&t.task);
+        ji.revealed.remove(&t.task);
     }
 
     /// Re-derive the job's membership in the ordered sets from its phase,
@@ -314,7 +399,7 @@ impl SchedIndex {
     /// full task scan.
     pub fn candidates(&self, id: JobId) -> impl Iterator<Item = u32> + '_ {
         let ji = &self.jobs[id.0 as usize];
-        ji.unrevealed.union(&ji.revealed).copied()
+        MergeAsc { a: ji.unrevealed.as_slice(), b: ji.revealed.as_slice() }
     }
 
     /// The job's *revealed* candidates only (ascending) — the subset whose
@@ -390,29 +475,52 @@ mod tests {
     use crate::cluster::job::{JobSpec, JobState};
     use crate::stats::Pareto;
 
-    fn job(id: u32, tasks: u32, mean: f64) -> JobState {
-        JobState::new(JobSpec {
-            id: JobId(id),
-            arrival: 0.0,
-            dist: Pareto::from_mean(mean, 2.0),
-            num_tasks: tasks,
-        })
+    fn job(arena: &mut TaskArena, id: u32, tasks: u32, mean: f64) -> JobState {
+        let base = arena.alloc_tasks(tasks);
+        JobState::new(
+            JobSpec {
+                id: JobId(id),
+                arrival: 0.0,
+                dist: Pareto::from_mean(mean, 2.0),
+                num_tasks: tasks,
+            },
+            base,
+        )
     }
 
-    fn launch_first_copy(j: &mut JobState, task: u32, now: f64) {
-        j.tasks[task as usize].copies.push(crate::cluster::job::CopyState {
-            machine: 0,
-            start: now,
-            duration: 1.0,
-            phase: CopyPhase::Running,
-            revealed: false,
-        });
+    fn launch_first_copy(j: &mut JobState, arena: &mut TaskArena, task: u32, now: f64) {
+        arena.push_copy(j.tid(task), 0, now, 1.0);
         if task >= j.next_unlaunched {
             j.next_unlaunched = task + 1;
         }
         if j.phase == JobPhase::Queued {
             j.phase = JobPhase::Running;
         }
+    }
+
+    #[test]
+    fn sorted_set_matches_btreeset_semantics() {
+        let mut s: SortedSet<(F64Key, JobId)> = SortedSet::default();
+        assert!(s.insert((F64Key(2.0), JobId(1))));
+        assert!(s.insert((F64Key(1.0), JobId(9))));
+        assert!(s.insert((F64Key(2.0), JobId(0))));
+        assert!(!s.insert((F64Key(2.0), JobId(1)))); // duplicate
+        let order: Vec<u32> = s.iter().map(|&(_, id)| id.0).collect();
+        assert_eq!(order, vec![9, 0, 1]); // key order, ties by id
+        assert!(s.remove(&(F64Key(2.0), JobId(0))));
+        assert!(!s.remove(&(F64Key(2.0), JobId(0)))); // already gone
+        let order: Vec<u32> = s.iter().map(|&(_, id)| id.0).collect();
+        assert_eq!(order, vec![9, 1]);
+    }
+
+    #[test]
+    fn merge_asc_interleaves_disjoint_slices() {
+        let merged: Vec<u32> = MergeAsc { a: &[0, 3, 4], b: &[1, 2, 7] }.collect();
+        assert_eq!(merged, vec![0, 1, 2, 3, 4, 7]);
+        let left_only: Vec<u32> = MergeAsc { a: &[5, 6], b: &[] }.collect();
+        assert_eq!(left_only, vec![5, 6]);
+        let right_only: Vec<u32> = MergeAsc { a: &[], b: &[5, 6] }.collect();
+        assert_eq!(right_only, vec![5, 6]);
     }
 
     #[test]
@@ -429,8 +537,13 @@ mod tests {
     #[test]
     fn queued_order_is_workload_then_id() {
         let mut idx = SchedIndex::new(3);
+        let mut arena = TaskArena::new();
         // equal workloads for 0 and 2 -> id breaks the tie
-        let jobs = [job(0, 4, 1.0), job(1, 1, 1.0), job(2, 2, 2.0)];
+        let jobs = [
+            job(&mut arena, 0, 4, 1.0),
+            job(&mut arena, 1, 1, 1.0),
+            job(&mut arena, 2, 2, 2.0),
+        ];
         for j in &jobs {
             idx.job_arrived(j);
         }
@@ -442,11 +555,12 @@ mod tests {
     #[test]
     fn job_leaves_queue_on_first_launch() {
         let mut idx = SchedIndex::new(1);
-        let mut j = job(0, 3, 1.0);
+        let mut arena = TaskArena::new();
+        let mut j = job(&mut arena, 0, 3, 1.0);
         idx.job_arrived(&j);
         assert_eq!(idx.queued_task_count(), 3);
-        launch_first_copy(&mut j, 0, 0.0);
-        idx.sync_task(&j, TaskRef { job: JobId(0), task: 0 });
+        launch_first_copy(&mut j, &mut arena, 0, 0.0);
+        idx.sync_task(&j, &arena, TaskRef { job: JobId(0), task: 0 });
         idx.sync_job(&j);
         assert_eq!(idx.queued_jobs().count(), 0);
         assert_eq!(idx.queued_task_count(), 0);
@@ -458,12 +572,13 @@ mod tests {
     #[test]
     fn level2_leaves_when_fully_launched() {
         let mut idx = SchedIndex::new(1);
-        let mut j = job(0, 2, 1.0);
+        let mut arena = TaskArena::new();
+        let mut j = job(&mut arena, 0, 2, 1.0);
         idx.job_arrived(&j);
-        launch_first_copy(&mut j, 0, 0.0);
+        launch_first_copy(&mut j, &mut arena, 0, 0.0);
         idx.sync_job(&j);
         assert_eq!(idx.level2_jobs().count(), 1);
-        launch_first_copy(&mut j, 1, 0.0);
+        launch_first_copy(&mut j, &mut arena, 1, 0.0);
         idx.sync_job(&j);
         assert_eq!(idx.level2_jobs().count(), 0);
         assert_eq!(idx.level2_jobs_fifo().count(), 0);
@@ -475,11 +590,12 @@ mod tests {
         // job 0: 3 tasks of mean 2 (remaining 6); job 1: 2 tasks of mean 2
         // (remaining 4) -> order [1, 0]; completing two of job 0's tasks
         // drops its remaining to 2 -> order flips to [0, 1]
-        let mut j0 = job(0, 3, 2.0);
-        let mut j1 = job(1, 2, 2.0);
+        let mut arena = TaskArena::new();
+        let mut j0 = job(&mut arena, 0, 3, 2.0);
+        let mut j1 = job(&mut arena, 1, 2, 2.0);
         for j in [&mut j0, &mut j1] {
             idx.job_arrived(j);
-            launch_first_copy(j, 0, 0.0);
+            launch_first_copy(j, &mut arena, 0, 0.0);
             idx.sync_job(j);
         }
         let order: Vec<u32> = idx.level2_jobs().map(|id| id.0).collect();
@@ -496,42 +612,37 @@ mod tests {
     #[test]
     fn candidates_track_copy_lifecycle() {
         let mut idx = SchedIndex::new(1);
-        let mut j = job(0, 3, 1.0);
+        let mut arena = TaskArena::new();
+        let mut j = job(&mut arena, 0, 3, 1.0);
         idx.job_arrived(&j);
         let t0 = TaskRef { job: JobId(0), task: 0 };
         let t1 = TaskRef { job: JobId(0), task: 1 };
-        launch_first_copy(&mut j, 0, 0.0);
-        launch_first_copy(&mut j, 1, 0.0);
-        idx.sync_task(&j, t0);
-        idx.sync_task(&j, t1);
+        launch_first_copy(&mut j, &mut arena, 0, 0.0);
+        launch_first_copy(&mut j, &mut arena, 1, 0.0);
+        idx.sync_task(&j, &arena, t0);
+        idx.sync_task(&j, &arena, t1);
         idx.sync_job(&j);
         assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(idx.unrevealed_candidates(JobId(0)).count(), 2);
         // reveal task 0: moves between the splits, union order unchanged
-        j.tasks[0].copies[0].revealed = true;
-        idx.sync_task(&j, t0);
+        arena.set_revealed(arena.copy_id(j.tid(0), 0));
+        idx.sync_task(&j, &arena, t0);
         assert_eq!(idx.revealed_candidates(JobId(0)).collect::<Vec<_>>(), vec![0]);
         assert_eq!(idx.unrevealed_candidates(JobId(0)).collect::<Vec<_>>(), vec![1]);
         assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![0, 1]);
         // a backup on task 0 disqualifies it (no longer a single-copy task)
-        let backup = j.tasks[0].copies[0];
-        j.tasks[0].copies.push(backup);
-        idx.sync_task(&j, t0);
+        arena.push_copy(j.tid(0), 0, 0.0, 1.0);
+        idx.sync_task(&j, &arena, t0);
         assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![1]);
         // task 1 finishes -> gone too
-        j.tasks[1].done = true;
-        j.tasks[1].copies[0].phase = CopyPhase::Finished;
-        idx.sync_task(&j, t1);
+        arena.set_done(j.tid(1), 0.0);
+        arena.set_phase(arena.copy_id(j.tid(1), 0), CopyPhase::Finished);
+        idx.sync_task(&j, &arena, t1);
         assert_eq!(idx.candidates(JobId(0)).count(), 0);
         // a killed single copy (Mantri's restart) is not a candidate either
-        j.tasks[2].copies.push(crate::cluster::job::CopyState {
-            machine: 1,
-            start: 0.0,
-            duration: 1.0,
-            phase: CopyPhase::Killed,
-            revealed: false,
-        });
-        idx.sync_task(&j, TaskRef { job: JobId(0), task: 2 });
+        arena.push_copy(j.tid(2), 1, 0.0, 1.0);
+        arena.set_phase(arena.copy_id(j.tid(2), 0), CopyPhase::Killed);
+        idx.sync_task(&j, &arena, TaskRef { job: JobId(0), task: 2 });
         assert_eq!(idx.candidates(JobId(0)).count(), 0);
     }
 
@@ -541,12 +652,13 @@ mod tests {
         idx.track_est_keys();
         assert!(idx.tracks_est());
         // two 2-task jobs, mean 2.0 each: est keys start at 4.0 apiece
-        let mut j0 = job(0, 2, 2.0);
-        let mut j1 = job(1, 2, 2.0);
+        let mut arena = TaskArena::new();
+        let mut j0 = job(&mut arena, 0, 2, 2.0);
+        let mut j1 = job(&mut arena, 1, 2, 2.0);
         for j in [&mut j0, &mut j1] {
             idx.job_arrived(j);
-            launch_first_copy(j, 0, 0.0);
-            idx.sync_task(j, TaskRef { job: j.spec.id, task: 0 });
+            launch_first_copy(j, &mut arena, 0, 0.0);
+            idx.sync_task(j, &arena, TaskRef { job: j.spec.id, task: 0 });
             idx.sync_job(j);
         }
         // tie on 4.0 -> id order
@@ -555,9 +667,8 @@ mod tests {
         assert_eq!(idx.est_key(JobId(0)), Some(4.0));
         // job 0's first copy reveals a 9.0-work duration: its key jumps to
         // 9 + 2 = 11 and it sinks below job 1
-        j0.tasks[0].copies[0].duration = 9.0;
-        j0.tasks[0].copies[0].revealed = true;
-        idx.sync_task(&j0, TaskRef { job: JobId(0), task: 0 });
+        arena.set_revealed(arena.copy_id(j0.tid(0), 0));
+        idx.sync_task(&j0, &arena, TaskRef { job: JobId(0), task: 0 });
         idx.set_est_contrib(TaskRef { job: JobId(0), task: 0 }, 9.0);
         assert_eq!(idx.est_key(JobId(0)), Some(11.0));
         let order: Vec<u32> = idx.level2_jobs_est().map(|id| id.0).collect();
@@ -566,7 +677,7 @@ mod tests {
         let mean_field: Vec<u32> = idx.level2_jobs().map(|id| id.0).collect();
         assert_eq!(mean_field, vec![0, 1]);
         // fully launching job 0 removes it from both twins
-        launch_first_copy(&mut j0, 1, 0.0);
+        launch_first_copy(&mut j0, &mut arena, 1, 0.0);
         idx.sync_job(&j0);
         assert_eq!(idx.level2_jobs_est().count(), 1);
         assert_eq!(idx.est_key(JobId(0)), None);
@@ -575,9 +686,10 @@ mod tests {
     #[test]
     fn est_twin_off_by_default_costs_nothing() {
         let mut idx = SchedIndex::new(1);
-        let mut j = job(0, 3, 1.0);
+        let mut arena = TaskArena::new();
+        let mut j = job(&mut arena, 0, 3, 1.0);
         idx.job_arrived(&j);
-        launch_first_copy(&mut j, 0, 0.0);
+        launch_first_copy(&mut j, &mut arena, 0, 0.0);
         idx.sync_job(&j);
         // no tracking: the twin stays empty and re-keys are no-ops
         assert!(!idx.tracks_est());
@@ -607,12 +719,13 @@ mod tests {
     #[test]
     fn sync_is_idempotent() {
         let mut idx = SchedIndex::new(1);
-        let mut j = job(0, 2, 1.5);
+        let mut arena = TaskArena::new();
+        let mut j = job(&mut arena, 0, 2, 1.5);
         idx.job_arrived(&j);
-        launch_first_copy(&mut j, 0, 0.0);
+        launch_first_copy(&mut j, &mut arena, 0, 0.0);
         let t0 = TaskRef { job: JobId(0), task: 0 };
         for _ in 0..3 {
-            idx.sync_task(&j, t0);
+            idx.sync_task(&j, &arena, t0);
             idx.sync_job(&j);
         }
         assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![0]);

@@ -4,6 +4,28 @@
 //! (clones or straggler backups); a task completes when its first copy
 //! finishes, at which point sibling copies are killed and their machines
 //! freed.  A job completes when all its tasks have (Sec. III).
+//!
+//! ## Arena / SoA storage
+//!
+//! Task and copy state live in one cluster-owned [`TaskArena`] of flat
+//! parallel columns rather than per-job `Vec<TaskState>` allocations: a
+//! job's tasks occupy the dense id range `base .. base + num_tasks`
+//! (`base` is stored on [`JobState`]), and each task's copies form a
+//! short sibling chain (`head`/`next`) through global copy columns
+//! (`machine`/`start`/`duration`/`phase`/`revealed`).  Copy *indices*
+//! within a task (the `copy: u32` the event queue and machine
+//! assignments carry) are chain positions, so the public addressing —
+//! `TaskRef` + copy index — is unchanged from the per-job layout.
+//!
+//! Id-stability invariants (DESIGN.md §13): a task id is stable for the
+//! job's entire lifetime, and a copy id is stable for the copy's
+//! lifetime; rows are recycled only through [`TaskArena::recycle_tasks`],
+//! which the cluster calls only for a `Done` job with no event-queue
+//! entries still referencing it (`JobState::stranded == 0`) — and only
+//! on the live path, so batch runs are bit-identical to the per-job
+//! layout by construction.
+
+use std::collections::BTreeMap;
 
 use crate::stats::Pareto;
 
@@ -50,7 +72,8 @@ pub enum CopyPhase {
     Killed,
 }
 
-/// One execution attempt of a task on one machine.
+/// One execution attempt of a task on one machine — a by-value view of
+/// one copy row of the [`TaskArena`].
 #[derive(Clone, Copy, Debug)]
 pub struct CopyState {
     pub machine: u32,
@@ -75,31 +98,266 @@ impl CopyState {
     }
 }
 
-/// Mutable per-task state.
+/// Null link / missing row in the arena's chains.
+const NONE: u32 = u32::MAX;
+
+/// Cluster-wide structure-of-arrays storage for task and copy state.
+///
+/// Task columns are indexed by global task id (`JobState::base` + the
+/// task's index within its job); copy columns by global copy id.  A
+/// task's copies are a singly-linked sibling chain (`head` → `next`),
+/// at most `r_max` long (8 in the paper), so positional walks are a few
+/// hops through contiguous columns.
 #[derive(Clone, Debug, Default)]
-pub struct TaskState {
-    pub copies: Vec<CopyState>,
-    pub done: bool,
+pub struct TaskArena {
+    // task columns
+    done: Vec<bool>,
+    /// Completion time; NaN while unfinished.
+    finish: Vec<f64>,
+    /// First copy id, or `NONE` while unlaunched.
+    head: Vec<u32>,
+    /// Last copy id (O(1) chain append), or `NONE`.
+    tail: Vec<u32>,
+    n_copies: Vec<u32>,
+    // copy columns
+    machine: Vec<u32>,
+    start: Vec<f64>,
+    duration: Vec<f64>,
+    phase: Vec<CopyPhase>,
+    revealed: Vec<bool>,
+    /// Next sibling copy id, or `NONE` at the chain tail.
+    next: Vec<u32>,
+    /// Recycled copy rows (filled by `recycle_tasks`).
+    free_copies: Vec<u32>,
+    /// Recycled task ranges, keyed by exact length (job task counts are
+    /// small and repeat heavily, so exact-fit reuse suffices).
+    free_ranges: BTreeMap<u32, Vec<u32>>,
+}
+
+impl TaskArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate `n` contiguous task rows; returns the base id.  Reuses an
+    /// exact-length recycled range when one exists.
+    pub fn alloc_tasks(&mut self, n: u32) -> u32 {
+        if let Some(bases) = self.free_ranges.get_mut(&n) {
+            let base = bases.pop().expect("free-range buckets are never empty");
+            if bases.is_empty() {
+                self.free_ranges.remove(&n);
+            }
+            return base;
+        }
+        let base = self.done.len() as u32;
+        let nn = n as usize;
+        self.done.resize(self.done.len() + nn, false);
+        self.finish.resize(self.finish.len() + nn, f64::NAN);
+        self.head.resize(self.head.len() + nn, NONE);
+        self.tail.resize(self.tail.len() + nn, NONE);
+        self.n_copies.resize(self.n_copies.len() + nn, 0);
+        base
+    }
+
+    /// Return a job's task range (and its copy chains) to the free lists.
+    /// The caller must guarantee nothing references these rows any more —
+    /// see the id-stability invariants in the module docs.
+    pub fn recycle_tasks(&mut self, base: u32, n: u32) {
+        for tid in base..base + n {
+            let i = tid as usize;
+            let mut cid = self.head[i];
+            while cid != NONE {
+                let nxt = self.next[cid as usize];
+                self.free_copies.push(cid);
+                cid = nxt;
+            }
+            self.done[i] = false;
+            self.finish[i] = f64::NAN;
+            self.head[i] = NONE;
+            self.tail[i] = NONE;
+            self.n_copies[i] = 0;
+        }
+        if n > 0 {
+            self.free_ranges.entry(n).or_default().push(base);
+        }
+    }
+
+    /// Total task rows ever allocated (capacity metric).
+    pub fn task_rows(&self) -> usize {
+        self.done.len()
+    }
+
+    /// Total copy rows ever allocated (capacity metric).
+    pub fn copy_rows(&self) -> usize {
+        self.phase.len()
+    }
+
+    // ----- task queries ---------------------------------------------------
+
+    #[inline]
+    pub fn done(&self, tid: u32) -> bool {
+        self.done[tid as usize]
+    }
+
     /// Completion time, once done.
-    pub finish: Option<f64>,
-}
-
-impl TaskState {
-    pub fn launched(&self) -> bool {
-        !self.copies.is_empty()
+    pub fn finish(&self, tid: u32) -> Option<f64> {
+        let f = self.finish[tid as usize];
+        if f.is_nan() {
+            None
+        } else {
+            Some(f)
+        }
     }
 
-    pub fn running_copies(&self) -> usize {
-        self.copies.iter().filter(|c| c.phase == CopyPhase::Running).count()
+    #[inline]
+    pub fn launched(&self, tid: u32) -> bool {
+        self.head[tid as usize] != NONE
+    }
+
+    #[inline]
+    pub fn n_copies(&self, tid: u32) -> u32 {
+        self.n_copies[tid as usize]
+    }
+
+    /// Global copy id of the task's `k`-th copy (chain position == the
+    /// copy index carried by events and machine assignments).
+    #[inline]
+    pub fn copy_id(&self, tid: u32, k: u32) -> u32 {
+        let mut cid = self.head[tid as usize];
+        for _ in 0..k {
+            cid = self.next[cid as usize];
+        }
+        cid
+    }
+
+    /// The task's copy ids in launch (chain) order.
+    pub fn copies(&self, tid: u32) -> impl Iterator<Item = u32> + '_ {
+        let mut cid = self.head[tid as usize];
+        std::iter::from_fn(move || {
+            if cid == NONE {
+                None
+            } else {
+                let c = cid;
+                cid = self.next[c as usize];
+                Some(c)
+            }
+        })
+    }
+
+    pub fn running_copies(&self, tid: u32) -> usize {
+        self.copies(tid).filter(|&c| self.phase[c as usize] == CopyPhase::Running).count()
+    }
+
+    // ----- task mutations -------------------------------------------------
+
+    pub fn set_done(&mut self, tid: u32, now: f64) {
+        self.done[tid as usize] = true;
+        self.finish[tid as usize] = now;
+    }
+
+    /// Append a running copy to the task's chain; returns its copy index
+    /// (chain position).
+    pub fn push_copy(&mut self, tid: u32, machine: u32, start: f64, duration: f64) -> u32 {
+        let cid = match self.free_copies.pop() {
+            Some(c) => {
+                let i = c as usize;
+                self.machine[i] = machine;
+                self.start[i] = start;
+                self.duration[i] = duration;
+                self.phase[i] = CopyPhase::Running;
+                self.revealed[i] = false;
+                self.next[i] = NONE;
+                c
+            }
+            None => {
+                let c = self.phase.len() as u32;
+                self.machine.push(machine);
+                self.start.push(start);
+                self.duration.push(duration);
+                self.phase.push(CopyPhase::Running);
+                self.revealed.push(false);
+                self.next.push(NONE);
+                c
+            }
+        };
+        let i = tid as usize;
+        let k = self.n_copies[i];
+        if self.head[i] == NONE {
+            self.head[i] = cid;
+        } else {
+            self.next[self.tail[i] as usize] = cid;
+        }
+        self.tail[i] = cid;
+        self.n_copies[i] = k + 1;
+        k
+    }
+
+    // ----- copy accessors (by global copy id) ----------------------------
+
+    /// By-value view of one copy row.
+    #[inline]
+    pub fn copy(&self, cid: u32) -> CopyState {
+        let i = cid as usize;
+        CopyState {
+            machine: self.machine[i],
+            start: self.start[i],
+            duration: self.duration[i],
+            phase: self.phase[i],
+            revealed: self.revealed[i],
+        }
+    }
+
+    /// By-value view of the task's `k`-th copy.
+    #[inline]
+    pub fn copy_at(&self, tid: u32, k: u32) -> CopyState {
+        self.copy(self.copy_id(tid, k))
+    }
+
+    #[inline]
+    pub fn phase(&self, cid: u32) -> CopyPhase {
+        self.phase[cid as usize]
+    }
+
+    #[inline]
+    pub fn set_phase(&mut self, cid: u32, phase: CopyPhase) {
+        self.phase[cid as usize] = phase;
+    }
+
+    #[inline]
+    pub fn revealed(&self, cid: u32) -> bool {
+        self.revealed[cid as usize]
+    }
+
+    #[inline]
+    pub fn set_revealed(&mut self, cid: u32) {
+        self.revealed[cid as usize] = true;
+    }
+
+    #[inline]
+    pub fn machine(&self, cid: u32) -> u32 {
+        self.machine[cid as usize]
+    }
+
+    #[inline]
+    pub fn duration(&self, cid: u32) -> f64 {
+        self.duration[cid as usize]
+    }
+
+    #[inline]
+    pub fn start(&self, cid: u32) -> f64 {
+        self.start[cid as usize]
     }
 }
 
-/// Mutable per-job state.
+/// Mutable per-job state.  Task/copy state lives in the cluster's
+/// [`TaskArena`]; the job carries only its `base` id into it.
 #[derive(Clone, Debug)]
 pub struct JobState {
     pub spec: JobSpec,
     pub phase: JobPhase,
-    pub tasks: Vec<TaskState>,
+    /// First row of this job's task range in the [`TaskArena`] (tasks
+    /// occupy `base .. base + spec.num_tasks`).
+    pub base: u32,
     /// Index of the first task with no copies yet (tasks launch in order).
     pub next_unlaunched: u32,
     /// Tasks not yet completed.
@@ -109,21 +367,32 @@ pub struct JobState {
     pub finish: Option<f64>,
     /// Machine-time consumed by all copies (resource, before gamma scaling).
     pub machine_time: f64,
+    /// Dead event-queue entries (killed copies' pending `CopyFinish` /
+    /// `Checkpoint`) still referencing this job's tasks — they leave by
+    /// popping as no-ops or by compaction.  The arena-recycle guard: a
+    /// `Done` job's rows may be reused only at zero.
+    pub stranded: u32,
 }
 
 impl JobState {
-    pub fn new(spec: JobSpec) -> Self {
-        let n = spec.num_tasks as usize;
+    pub fn new(spec: JobSpec, base: u32) -> Self {
         JobState {
             phase: JobPhase::Queued,
-            tasks: vec![TaskState::default(); n],
+            base,
             next_unlaunched: 0,
             unfinished: spec.num_tasks,
             first_sched: None,
             finish: None,
             machine_time: 0.0,
+            stranded: 0,
             spec,
         }
+    }
+
+    /// Global arena id of this job's `task`-th task.
+    #[inline]
+    pub fn tid(&self, task: u32) -> u32 {
+        self.base + task
     }
 
     /// Tasks that still need a first copy.
@@ -157,16 +426,23 @@ mod tests {
 
     #[test]
     fn new_job_is_queued() {
-        let j = JobState::new(spec(0, 5));
+        let mut arena = TaskArena::new();
+        let base = arena.alloc_tasks(5);
+        let j = JobState::new(spec(0, 5), base);
         assert_eq!(j.phase, JobPhase::Queued);
         assert_eq!(j.unfinished, 5);
         assert_eq!(j.unlaunched(), 5);
         assert!(j.flowtime().is_none());
+        for t in 0..5 {
+            assert!(!arena.done(j.tid(t)));
+            assert!(!arena.launched(j.tid(t)));
+            assert_eq!(arena.finish(j.tid(t)), None);
+        }
     }
 
     #[test]
     fn workload_key() {
-        let j = JobState::new(spec(0, 10));
+        let j = JobState::new(spec(0, 10), 0);
         assert!((j.spec.workload() - 20.0).abs() < 1e-12);
         assert!((j.remaining_workload() - 20.0).abs() < 1e-12);
     }
@@ -183,5 +459,67 @@ mod tests {
         assert_eq!(c.elapsed(4.0), 2.0);
         assert_eq!(c.true_remaining(4.0), 3.0);
         assert_eq!(c.true_remaining(100.0), 0.0);
+    }
+
+    #[test]
+    fn arena_copy_chains_keep_launch_order() {
+        let mut arena = TaskArena::new();
+        let base = arena.alloc_tasks(2);
+        assert_eq!(arena.push_copy(base, 7, 1.0, 5.0), 0);
+        assert_eq!(arena.push_copy(base + 1, 8, 1.5, 2.0), 0);
+        assert_eq!(arena.push_copy(base, 9, 2.0, 4.0), 1);
+        assert_eq!(arena.n_copies(base), 2);
+        assert_eq!(arena.n_copies(base + 1), 1);
+        let c0 = arena.copy_at(base, 0);
+        let c1 = arena.copy_at(base, 1);
+        assert_eq!((c0.machine, c0.start), (7, 1.0));
+        assert_eq!((c1.machine, c1.start), (9, 2.0));
+        assert_eq!(arena.copies(base).count(), 2);
+        assert_eq!(arena.running_copies(base), 2);
+        arena.set_phase(arena.copy_id(base, 1), CopyPhase::Killed);
+        assert_eq!(arena.running_copies(base), 1);
+        assert!(!arena.revealed(arena.copy_id(base, 0)));
+        arena.set_revealed(arena.copy_id(base, 0));
+        assert!(arena.copy_at(base, 0).revealed);
+    }
+
+    #[test]
+    fn arena_done_and_finish() {
+        let mut arena = TaskArena::new();
+        let base = arena.alloc_tasks(1);
+        assert_eq!(arena.finish(base), None);
+        arena.set_done(base, 3.5);
+        assert!(arena.done(base));
+        assert_eq!(arena.finish(base), Some(3.5));
+    }
+
+    #[test]
+    fn recycled_ranges_and_copies_are_reused() {
+        let mut arena = TaskArena::new();
+        let a = arena.alloc_tasks(3);
+        let b = arena.alloc_tasks(5);
+        arena.push_copy(a, 0, 0.0, 1.0);
+        arena.push_copy(a + 2, 1, 0.0, 1.0);
+        arena.set_done(a, 1.0);
+        let rows = arena.task_rows();
+        let copies = arena.copy_rows();
+        arena.recycle_tasks(a, 3);
+        // exact-length reuse, fully reset
+        let c = arena.alloc_tasks(3);
+        assert_eq!(c, a);
+        assert_eq!(arena.task_rows(), rows, "no new task rows");
+        for t in c..c + 3 {
+            assert!(!arena.done(t));
+            assert!(!arena.launched(t));
+            assert_eq!(arena.n_copies(t), 0);
+        }
+        // recycled copy rows come back before new ones are grown
+        arena.push_copy(c, 4, 2.0, 1.0);
+        arena.push_copy(c + 1, 5, 2.0, 1.0);
+        assert_eq!(arena.copy_rows(), copies, "no new copy rows");
+        // a different length allocates fresh rows
+        let d = arena.alloc_tasks(4);
+        assert_eq!(d as usize, rows);
+        let _ = b;
     }
 }

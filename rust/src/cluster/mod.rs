@@ -11,9 +11,9 @@ pub mod machine;
 pub mod sim;
 pub mod trace;
 
-pub use event::{Event, EventQueue};
+pub use event::{Event, EventQueue, EventQueueKind};
 pub use generator::generate;
 pub use index::SchedIndex;
-pub use job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskRef, TaskState};
+pub use job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskArena, TaskRef};
 pub use machine::{MachineClass, MachinePool};
 pub use sim::{Cluster, SimResult, Simulator};

@@ -26,7 +26,7 @@ use crate::stats::{Cdf, Pcg64};
 
 use super::event::{Event, EventQueue};
 use super::index::SchedIndex;
-use super::job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskRef};
+use super::job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskArena, TaskRef};
 use super::machine::{Assignment, MachinePool};
 
 /// Pre-sampled workload: the job specs plus the first-copy duration of every
@@ -44,6 +44,9 @@ pub struct Cluster {
     pub clock: f64,
     pub machines: MachinePool,
     pub jobs: Vec<JobState>,
+    /// Flat SoA task/copy storage; `jobs[i].base` keys each job's range.
+    /// See [`TaskArena`] and DESIGN.md §13.
+    pub arena: TaskArena,
     /// chi(l): arrived jobs with no task launched yet.
     pub queued: BTreeSet<JobId>,
     /// R(l): jobs with at least one launched task, not yet finished.
@@ -67,6 +70,9 @@ pub struct Cluster {
     pub(crate) events: EventQueue,
     first_durations: Vec<Vec<f64>>,
     job_rngs: Vec<Pcg64>,
+    /// Completed jobs whose arena rows are not yet reusable (waiting on
+    /// `stranded == 0`); drained by the live path's `add_job`.
+    pending_recycle: Vec<JobId>,
     /// Machine-time consumed so far across all jobs (utilization numerator).
     pub total_machine_time: f64,
     /// Copies beyond the first launched per task (speculation volume).
@@ -85,7 +91,15 @@ impl Cluster {
             .iter()
             .map(|s| root.split(s.id.0 as u64 + 1))
             .collect();
-        let jobs = workload.specs.into_iter().map(JobState::new).collect();
+        let mut arena = TaskArena::new();
+        let jobs: Vec<JobState> = workload
+            .specs
+            .into_iter()
+            .map(|s| {
+                let base = arena.alloc_tasks(s.num_tasks);
+                JobState::new(s, base)
+            })
+            .collect();
         let mut machines = if cfg.machine_classes.is_empty() {
             MachinePool::new(cfg.machines)
         } else {
@@ -104,20 +118,23 @@ impl Cluster {
             // points below); any other policy pays no upkeep
             index.track_est_keys();
         }
+        let events = EventQueue::with_kind(cfg.event_queue, cfg.slot_dt);
         Cluster {
             machines,
             cfg,
             clock: 0.0,
             jobs,
+            arena,
             queued: BTreeSet::new(),
             running: BTreeSet::new(),
             index,
             // dirty at birth: the first slot always fires (initial state
             // has never been scheduled)
             sched_dirty: true,
-            events: EventQueue::new(),
+            events,
             first_durations: workload.first_durations,
             job_rngs,
+            pending_recycle: Vec::new(),
             total_machine_time: 0.0,
             speculative_launches: 0,
             outstanding_backups: 0,
@@ -134,21 +151,41 @@ impl Cluster {
     /// Live mode: admit a job now.  Task first-copy durations are sampled
     /// immediately from the cluster RNG (there is no pre-generated trace).
     pub fn add_job(&mut self, mean_duration: f64, alpha: f64, num_tasks: u32) -> JobId {
+        self.recycle_retired();
         let id = JobId(self.jobs.len() as u32);
         let dist = crate::stats::Pareto::from_mean(mean_duration, alpha);
         let mut rng = Pcg64::new(self.cfg.seed ^ 0xadd0b, id.0 as u64 + 1);
         let durs: Vec<f64> = (0..num_tasks).map(|_| dist.sample(&mut rng)).collect();
         self.first_durations.push(durs);
         self.job_rngs.push(rng.split(7));
-        self.jobs.push(JobState::new(JobSpec {
-            id,
-            arrival: self.clock,
-            dist,
-            num_tasks,
-        }));
+        let base = self.arena.alloc_tasks(num_tasks);
+        self.jobs.push(JobState::new(
+            JobSpec { id, arrival: self.clock, dist, num_tasks },
+            base,
+        ));
         self.index.push_job();
         self.arrive(id);
         id
+    }
+
+    /// Live-path arena hygiene: reuse the task/copy rows of completed
+    /// jobs once no event-queue entry references them any more
+    /// (`stranded == 0` — killed copies' dead entries either popped as
+    /// no-ops or were compacted away).  Batch runs never call this, so
+    /// the trace path keeps every row — and stays bit-identical to the
+    /// per-job layout by construction.
+    fn recycle_retired(&mut self) {
+        let mut i = 0;
+        while i < self.pending_recycle.len() {
+            let id = self.pending_recycle[i];
+            let job = &self.jobs[id.0 as usize];
+            if job.stranded == 0 {
+                self.arena.recycle_tasks(job.base, job.spec.num_tasks);
+                self.pending_recycle.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// A job joins χ(l) (its arrival event fired / a live submission).
@@ -171,17 +208,22 @@ impl Cluster {
     /// the reveal took effect (the copy is still running and its task not
     /// done) — the caller then fires the scheduler's `on_reveal` hook.
     fn reveal_copy(&mut self, t: TaskRef, copy: u32) -> bool {
-        let tstate = &mut self.jobs[t.job.0 as usize].tasks[t.task as usize];
-        if tstate.done || tstate.copies[copy as usize].phase != CopyPhase::Running {
+        let tid = self.tid(t);
+        let cid = self.arena.copy_id(tid, copy);
+        if self.arena.done(tid) || self.arena.phase(cid) != CopyPhase::Running {
+            // the copy was killed before its checkpoint fired: this entry
+            // was stale-counted at the kill (unrevealed first copies
+            // strand their checkpoint too) — settle both ledgers
             self.events.note_stale_popped();
+            self.jobs[t.job.0 as usize].stranded -= 1;
             return false;
         }
-        tstate.copies[copy as usize].revealed = true;
+        self.arena.set_revealed(cid);
         // a reveal can flip slot-gated threshold predicates (ESE's
         // sigma-test reads the revealed truth), so it dirties the planner
         self.sched_dirty = true;
         if self.cfg.sched_index {
-            self.index.sync_task(&self.jobs[t.job.0 as usize], t);
+            self.index.sync_task(&self.jobs[t.job.0 as usize], &self.arena, t);
             self.sync_est(t);
         }
         true
@@ -197,6 +239,7 @@ impl Cluster {
         if self.index.tracks_est() {
             let contrib = crate::estimator::revealed_task_workload(
                 &self.jobs[t.job.0 as usize],
+                &self.arena,
                 &self.machines,
                 t.task,
             );
@@ -257,8 +300,27 @@ impl Cluster {
         &self.jobs[id.0 as usize]
     }
 
-    pub fn task(&self, t: TaskRef) -> &super::job::TaskState {
-        &self.jobs[t.job.0 as usize].tasks[t.task as usize]
+    /// Global arena id of task `t` (see [`TaskArena`]).
+    #[inline]
+    pub fn tid(&self, t: TaskRef) -> u32 {
+        self.jobs[t.job.0 as usize].base + t.task
+    }
+
+    #[inline]
+    pub fn task_done(&self, t: TaskRef) -> bool {
+        self.arena.done(self.tid(t))
+    }
+
+    /// Copies launched for task `t` so far (running, finished or killed).
+    #[inline]
+    pub fn n_copies(&self, t: TaskRef) -> u32 {
+        self.arena.n_copies(self.tid(t))
+    }
+
+    /// By-value view of task `t`'s `k`-th copy.
+    #[inline]
+    pub fn copy(&self, t: TaskRef, k: u32) -> CopyState {
+        self.arena.copy_at(self.tid(t), k)
     }
 
     /// chi(l) sorted by increasing total workload (SCA/SDA/ESE level 3).
@@ -312,20 +374,21 @@ impl Cluster {
         let now = self.clock;
         let ji = t.job.0 as usize;
         let detect_frac = self.cfg.detect_frac;
-        let r_max = self.cfg.r_max as usize;
-        if self.jobs[ji].tasks[t.task as usize].done {
+        let r_max = self.cfg.r_max;
+        let tid = self.tid(t);
+        if self.arena.done(tid) {
             return false;
         }
-        if self.jobs[ji].tasks[t.task as usize].copies.len() >= r_max {
+        let n_copies = self.arena.n_copies(tid);
+        if n_copies >= r_max {
             return false;
         }
-        let n_copies = self.jobs[ji].tasks[t.task as usize].copies.len();
         let work = if n_copies == 0 {
             self.first_durations[ji][t.task as usize]
         } else {
             self.jobs[ji].spec.dist.sample(&mut self.job_rngs[ji])
         };
-        let copy_idx = n_copies as u32;
+        let copy_idx = n_copies;
         let Some(machine) = self.machines.alloc(Assignment { task: t, copy: copy_idx }) else {
             return false;
         };
@@ -333,14 +396,9 @@ impl Cluster {
         // host's effective speed — advertised class speed (1.0 everywhere
         // in the paper's homogeneous cluster) over the hidden slowdown
         let duration = work / self.machines.effective_speed(machine);
+        let k = self.arena.push_copy(tid, machine, now, duration);
+        debug_assert_eq!(k, copy_idx);
         let job = &mut self.jobs[ji];
-        job.tasks[t.task as usize].copies.push(CopyState {
-            machine,
-            start: now,
-            duration,
-            phase: CopyPhase::Running,
-            revealed: false,
-        });
         self.events.push(now + duration, Event::CopyFinish { task: t, copy: copy_idx });
         // detection checkpoint on the first copy only (the paper monitors
         // the original; backups are already speculation)
@@ -362,8 +420,7 @@ impl Cluster {
         }
         self.sched_dirty = true;
         if self.cfg.sched_index {
-            let job = &self.jobs[ji];
-            self.index.sync_task(job, t);
+            self.index.sync_task(&self.jobs[ji], &self.arena, t);
             self.sync_est(t);
             self.index.sync_job(&self.jobs[ji]);
         }
@@ -407,28 +464,32 @@ impl Cluster {
     /// Kill a running copy (Mantri's restart ablation); frees its machine.
     pub fn kill_copy(&mut self, t: TaskRef, copy: u32) {
         let now = self.clock;
-        let job = &mut self.jobs[t.job.0 as usize];
-        let c = &mut job.tasks[t.task as usize].copies[copy as usize];
-        if c.phase != CopyPhase::Running {
+        let tid = self.tid(t);
+        let cid = self.arena.copy_id(tid, copy);
+        if self.arena.phase(cid) != CopyPhase::Running {
             return;
         }
-        c.phase = CopyPhase::Killed;
+        self.arena.set_phase(cid, CopyPhase::Killed);
+        let c = self.arena.copy(cid);
         let used = c.elapsed(now).min(c.duration);
-        let machine = c.machine;
         // the kill strands this copy's pending CopyFinish in the heap, and
         // its Checkpoint too if it had not revealed yet (checkpoints fire
-        // strictly before finishes, so unrevealed == checkpoint pending)
-        let stranded = if copy == 0 && !c.revealed { 2 } else { 1 };
+        // strictly before finishes, so unrevealed == checkpoint pending);
+        // the job's `stranded` ledger mirrors the queue's stale counter so
+        // arena rows are only recycled once no queue entry references them
+        let stranded = if copy == 0 && !c.revealed { 2usize } else { 1 };
+        let job = &mut self.jobs[t.job.0 as usize];
         job.machine_time += used;
+        job.stranded += stranded as u32;
         self.total_machine_time += used;
         if copy > 0 {
             self.outstanding_backups -= 1;
         }
-        self.machines.release(machine);
+        self.machines.release(c.machine);
         self.events.note_stale(stranded);
         self.sched_dirty = true;
         if self.cfg.sched_index {
-            self.index.sync_task(&self.jobs[t.job.0 as usize], t);
+            self.index.sync_task(&self.jobs[t.job.0 as usize], &self.arena, t);
             // killing a revealed copy reverts the task's est contribution
             self.sync_est(t);
         }
@@ -444,7 +505,7 @@ impl Cluster {
         if !self.events.should_compact() {
             return;
         }
-        let jobs = &self.jobs;
+        let Cluster { events, jobs, arena, .. } = self;
         // Liveness is the copy's phase alone — deliberately NOT `!done`:
         // when a completion's sibling-kill loop triggers compaction midway,
         // the not-yet-killed siblings (done task, still Running) must stay
@@ -452,10 +513,18 @@ impl Cluster {
         // afterwards; removing them early would leave the stale counter
         // permanently overcounting.  A done task retains no other entries
         // (the finished copy's events have fired), so phase is exact.
-        self.events.retain_live(|ev| match *ev {
+        // Each removed dead entry also settles the owning job's `stranded`
+        // ledger — compaction is the other place (besides a stale pop)
+        // where a queue reference to an arena row disappears.
+        events.retain_live(|ev| match *ev {
             Event::CopyFinish { task, copy } | Event::Checkpoint { task, copy } => {
-                jobs[task.job.0 as usize].tasks[task.task as usize].copies[copy as usize].phase
-                    == CopyPhase::Running
+                let job = &mut jobs[task.job.0 as usize];
+                let cid = arena.copy_id(job.base + task.task, copy);
+                let live = arena.phase(cid) == CopyPhase::Running;
+                if !live {
+                    job.stranded -= 1;
+                }
+                live
             }
             Event::Arrival(_) => true,
         });
@@ -467,31 +536,28 @@ impl Cluster {
         let record_jobs = self.cfg.record_jobs;
         let gamma = self.cfg.gamma;
         let ji = t.job.0 as usize;
-        {
-            let job = &mut self.jobs[ji];
-            let task = &mut job.tasks[t.task as usize];
-            if task.done || task.copies[copy as usize].phase != CopyPhase::Running {
-                // stale event (sibling finished first / copy killed) that
-                // outlived compaction
-                self.events.note_stale_popped();
-                return;
-            }
-            task.copies[copy as usize].phase = CopyPhase::Finished;
-            let dur = task.copies[copy as usize].duration;
-            job.machine_time += dur;
-            self.total_machine_time += dur;
-            task.done = true;
-            task.finish = Some(now);
+        let tid = self.tid(t);
+        let cid = self.arena.copy_id(tid, copy);
+        if self.arena.done(tid) || self.arena.phase(cid) != CopyPhase::Running {
+            // stale event (sibling finished first / copy killed) that
+            // outlived compaction — settle the job's stranded ledger too
+            self.events.note_stale_popped();
+            self.jobs[ji].stranded -= 1;
+            return;
         }
+        self.arena.set_phase(cid, CopyPhase::Finished);
+        let dur = self.arena.duration(cid);
+        self.jobs[ji].machine_time += dur;
+        self.total_machine_time += dur;
+        self.arena.set_done(tid, now);
         self.sched_dirty = true;
-        self.machines
-            .release(self.jobs[ji].tasks[t.task as usize].copies[copy as usize].machine);
+        self.machines.release(self.arena.machine(cid));
         if copy > 0 {
             self.outstanding_backups -= 1;
         }
         // kill sibling copies and free their machines
-        let n = self.jobs[ji].tasks[t.task as usize].copies.len();
-        for k in 0..n as u32 {
+        let n = self.arena.n_copies(tid);
+        for k in 0..n {
             if k != copy {
                 self.kill_copy(t, k);
             }
@@ -502,6 +568,9 @@ impl Cluster {
             job.phase = JobPhase::Done;
             job.finish = Some(now);
             self.running.remove(&t.job);
+            // arena rows become reusable once every stranded queue entry
+            // referencing them has been settled; the live path checks that
+            self.pending_recycle.push(t.job);
             if record_jobs {
                 self.completed.push(JobRecord {
                     job: t.job.0,
@@ -516,8 +585,7 @@ impl Cluster {
             }
         }
         if self.cfg.sched_index {
-            let job = &self.jobs[ji];
-            self.index.sync_task(job, t);
+            self.index.sync_task(&self.jobs[ji], &self.arena, t);
             // a finished task stops contributing to the est key
             self.sync_est(t);
             self.index.sync_job(&self.jobs[ji]);
@@ -888,10 +956,13 @@ mod tests {
         for kind in scheduler::SchedulerKind::all() {
             let on = run_wakeup(true, kind);
             let off = run_wakeup(false, kind);
-            // LATE's percentile ranking moves continuously, so its horizon
-            // is conservative whenever >= 1/percentile candidates run —
-            // it only skips globally-quiet stretches, which this workload
-            // need not contain; every other policy must skip plenty
+            // LATE's rate-flip bound collapses to "now" whenever a
+            // candidate past the Pareto scale sits tied at the percentile
+            // threshold (its denominator grows immediately), so steady
+            // mixed-age stretches fire every slot and this workload need
+            // not leave it any skips — see `late_skips_quiet_tail` for
+            // the stretches it *must* skip; every other policy must skip
+            // plenty here
             if kind != scheduler::SchedulerKind::Late {
                 assert!(on.ticks_skipped > 0, "{kind:?}: no slots skipped at lambda = 0.3");
             }

@@ -5,6 +5,7 @@
 //! the CLI builds it from flags.  Defaults reproduce the paper's Sec. IV-C
 //! simulation set-up.
 
+use crate::cluster::event::EventQueueKind;
 use crate::cluster::machine::{self, MachineClass, SlowdownConfig};
 use crate::scheduler::SchedulerKind;
 use crate::util::toml_lite;
@@ -95,6 +96,12 @@ pub struct SimConfig {
     /// make bit-identical scheduling decisions; see `cluster::index` and
     /// the equivalence suite in `tests/experiment_integration.rs`.
     pub sched_index: bool,
+    /// Event-queue backend: `calendar` (slot-grid calendar queue — the
+    /// default, O(1) pushes at million-machine scale) or `binary-heap`
+    /// (the classic heap, retained as the equivalence reference).  Both
+    /// pop the identical `(time, seq)` event order; see
+    /// `cluster::event::EventQueueKind` and DESIGN.md §13.
+    pub event_queue: EventQueueKind,
 }
 
 impl Default for SimConfig {
@@ -127,6 +134,7 @@ impl Default for SimConfig {
             record_jobs: true,
             wakeup: true,
             sched_index: true,
+            event_queue: EventQueueKind::default(),
         }
     }
 }
@@ -252,6 +260,13 @@ impl SimConfig {
                 "record_jobs" => cfg.record_jobs = doc.bool(key).ok_or("record_jobs: bool")?,
                 "wakeup" => cfg.wakeup = doc.bool(key).ok_or("wakeup: bool")?,
                 "sched_index" => cfg.sched_index = doc.bool(key).ok_or("sched_index: bool")?,
+                "event_queue" => {
+                    cfg.event_queue = doc
+                        .str(key)
+                        .ok_or("event_queue: string")?
+                        .parse()
+                        .map_err(|e: String| e)?
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -306,6 +321,7 @@ impl SimConfig {
         let _ = writeln!(s, "record_jobs = {}", self.record_jobs);
         let _ = writeln!(s, "wakeup = {}", self.wakeup);
         let _ = writeln!(s, "sched_index = {}", self.sched_index);
+        let _ = writeln!(s, "event_queue = \"{}\"", self.event_queue);
         s
     }
 }
@@ -540,6 +556,20 @@ mod tests {
         assert!(!cfg.sched_index);
         let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
         assert!(!back.sched_index);
+    }
+
+    #[test]
+    fn event_queue_key_roundtrips() {
+        assert_eq!(
+            SimConfig::default().event_queue,
+            EventQueueKind::Calendar,
+            "calendar backend is the default"
+        );
+        let cfg = SimConfig::from_toml("event_queue = \"binary-heap\"").unwrap();
+        assert_eq!(cfg.event_queue, EventQueueKind::BinaryHeap);
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.event_queue, EventQueueKind::BinaryHeap);
+        assert!(SimConfig::from_toml("event_queue = \"splay\"").is_err());
     }
 
     #[test]

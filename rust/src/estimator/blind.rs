@@ -64,4 +64,16 @@ impl RemainingTime for Blind {
         let o = observe(cl, t, copy);
         Some(flip_guard(cl.clock + (o.dist.mean_remaining_flip(w) - o.elapsed)))
     }
+
+    /// Exact inverse of the LATE progress-rate denominator
+    /// `e + mean_remaining(e)` (elapsed read as work, like the forward
+    /// queries).
+    fn copy_rate_flip_time(&self, cl: &Cluster, t: TaskRef, copy: usize, rate: f64) -> Option<f64> {
+        if !(rate > 0.0) {
+            return None; // a positive rate never drops below zero
+        }
+        let o = observe(cl, t, copy);
+        let e = o.dist.rate_denom_flip(1.0 / rate);
+        Some(flip_guard(cl.clock + (e - o.elapsed)))
+    }
 }

@@ -90,7 +90,7 @@
 //! // speed-aware estimator prices a fresh copy consistently: E[x] work
 //! // remaining, E[x] / speed wall-clock remaining
 //! let est = SpeedAware::blind();
-//! assert_eq!(sim.cluster.jobs[0].tasks[0].copies[0].duration, 1.5);
+//! assert_eq!(sim.cluster.copy(t, 0).duration, 1.5);
 //! assert_eq!(est.task_remaining_work(&sim.cluster, t), 1.0);
 //! assert_eq!(est.task_remaining_wall(&sim.cluster, t), 0.5);
 //! ```
@@ -128,7 +128,7 @@ pub struct CopyObs<'a> {
 /// Observe copy `copy` of task `t` under the contract above.
 pub fn observe(cl: &Cluster, t: TaskRef, copy: usize) -> CopyObs<'_> {
     let job = cl.job(t.job);
-    let c = &job.tasks[t.task as usize].copies[copy];
+    let c = cl.copy(t, copy as u32);
     CopyObs {
         dist: &job.spec.dist,
         elapsed: c.elapsed(cl.clock),
@@ -154,16 +154,17 @@ pub fn observe(cl: &Cluster, t: TaskRef, copy: usize) -> CopyObs<'_> {
 /// estimate-driven ordering should rank by.
 pub fn revealed_task_workload(
     job: &crate::cluster::job::JobState,
+    arena: &crate::cluster::job::TaskArena,
     machines: &crate::cluster::machine::MachinePool,
     task: u32,
 ) -> f64 {
-    let t = &job.tasks[task as usize];
-    if t.done {
+    let tid = job.tid(task);
+    if arena.done(tid) {
         return 0.0;
     }
-    for c in &t.copies {
-        if c.phase == CopyPhase::Running && c.revealed {
-            return c.duration * machines.speed(c.machine);
+    for cid in arena.copies(tid) {
+        if arena.phase(cid) == CopyPhase::Running && arena.revealed(cid) {
+            return arena.duration(cid) * machines.speed(arena.machine(cid));
         }
     }
     job.spec.dist.mean()
@@ -177,7 +178,7 @@ pub fn revealed_job_workload(cl: &Cluster, id: JobId) -> f64 {
     let job = cl.job(id);
     let mut sum = 0.0;
     for task in 0..job.spec.num_tasks {
-        sum += revealed_task_workload(job, &cl.machines, task);
+        sum += revealed_task_workload(job, &cl.arena, &cl.machines, task);
     }
     sum
 }
@@ -196,10 +197,10 @@ pub(crate) fn flip_guard(t: f64) -> f64 {
 /// fold shared by every query (a task finishes when its first copy does).
 /// Infinite when nothing runs.
 fn min_over_running(cl: &Cluster, t: TaskRef, mut per_copy: impl FnMut(usize) -> f64) -> f64 {
-    let copies = &cl.task(t).copies;
+    let tid = cl.tid(t);
     let mut best = f64::INFINITY;
-    for (i, c) in copies.iter().enumerate() {
-        if c.phase == CopyPhase::Running {
+    for (i, cid) in cl.arena.copies(tid).enumerate() {
+        if cl.arena.phase(cid) == CopyPhase::Running {
             best = best.min(per_copy(i));
         }
     }
@@ -250,6 +251,26 @@ pub trait RemainingTime {
     /// (currently false, no mutations; `None` = never; the default forces
     /// every slot).  See [`Pareto::mean_remaining_flip`].
     fn copy_work_flip_time(&self, cl: &Cluster, _t: TaskRef, _copy: usize, _w: f64) -> Option<f64> {
+        Some(cl.clock)
+    }
+
+    /// Wakeup-planner query for LATE's relative ranking: the earliest
+    /// simulated instant at which this copy's progress rate
+    /// `1 / (elapsed + copy_remaining_wall)` could first drop *strictly
+    /// below* `rate`, under the same contract as the other flips
+    /// (currently `>= rate`, no mutations in between; `None` = never;
+    /// the default forces every slot).  Every estimator's rate is
+    /// non-increasing between mutations: a revealed copy's denominator is
+    /// its constant wall duration (`None`), an unrevealed one's grows on
+    /// the conditional-Pareto schedule inverted by
+    /// [`Pareto::rate_denom_flip`].
+    fn copy_rate_flip_time(
+        &self,
+        cl: &Cluster,
+        _t: TaskRef,
+        _copy: usize,
+        _rate: f64,
+    ) -> Option<f64> {
         Some(cl.clock)
     }
 
@@ -306,6 +327,13 @@ mod tests {
         TaskRef { job: JobId(0), task: 0 }
     }
 
+    /// Flip the reveal bit on the first copy of task 0 (the arena is the
+    /// single source of truth for copy state).
+    fn reveal0(cl: &mut Cluster) {
+        let cid = cl.arena.copy_id(cl.tid(task0()), 0);
+        cl.arena.set_revealed(cid);
+    }
+
     /// One job, one task with a controlled first-copy work amount, on the
     /// given machine classes; the copy is launched at t = 0.
     fn cluster_with(classes: Vec<MachineClass>, work: f64) -> Cluster {
@@ -333,8 +361,8 @@ mod tests {
         let slow = cluster_with(vec![MachineClass::new(1, 1.0)], 3.0);
         let fast = cluster_with(vec![MachineClass::new(1, 2.0)], 3.0);
         // actual wall-clock halves
-        let d_slow = slow.jobs[0].tasks[0].copies[0].duration;
-        let d_fast = fast.jobs[0].tasks[0].copies[0].duration;
+        let d_slow = slow.copy(task0(), 0).duration;
+        let d_fast = fast.copy(task0(), 0).duration;
         assert_eq!(d_slow, 3.0);
         assert_eq!(d_fast, 1.5);
         // blind speed-aware estimate at launch: E[x] work on both hosts,
@@ -353,8 +381,8 @@ mod tests {
         let mut both = [slow, fast];
         for cl in both.iter_mut() {
             cl.clock = 0.25;
-            cl.jobs[0].tasks[0].copies[0].revealed = true;
-            let truth = cl.jobs[0].tasks[0].copies[0].true_remaining(0.25);
+            reveal0(cl);
+            let truth = cl.copy(task0(), 0).true_remaining(0.25);
             assert_eq!(est.task_remaining_wall(cl, task0()), truth);
         }
     }
@@ -378,7 +406,7 @@ mod tests {
             Blind.task_prob_exceeds(&cl, t, 2.0),
             SpeedAware::blind().task_prob_exceeds(&cl, t, 2.0)
         );
-        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        reveal0(&mut cl);
         assert_eq!(
             Revealed.task_remaining_work(&cl, t),
             SpeedAware::revealed().task_remaining_work(&cl, t)
@@ -398,7 +426,7 @@ mod tests {
         let t = task0();
         let blind_before = Blind.task_remaining_work(&cl, t);
         assert_eq!(Revealed.task_remaining_work(&cl, t), blind_before);
-        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        reveal0(&mut cl);
         assert_eq!(Blind.task_remaining_work(&cl, t), blind_before);
         assert_eq!(Revealed.task_remaining_work(&cl, t), 3.0); // 4 - 1 elapsed
         assert_eq!(Revealed.task_prob_exceeds(&cl, t, 2.0), 1.0);
@@ -442,7 +470,7 @@ mod tests {
         assert_eq!(revealed_job_workload(&cl, id), mean);
         // reveal: the task now contributes its observed total work —
         // wall duration (3 work / 2x speed = 1.5) x advertised speed 2
-        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        reveal0(&mut cl);
         assert_eq!(revealed_job_workload(&cl, id), 3.0);
         cl.clock = 1.2;
         assert_eq!(revealed_job_workload(&cl, id), 3.0);
@@ -450,7 +478,8 @@ mod tests {
         cl.kill_copy(task0(), 0);
         assert_eq!(revealed_job_workload(&cl, id), mean);
         // a finished task contributes nothing
-        cl.jobs[0].tasks[0].done = true;
+        let tid = cl.tid(task0());
+        cl.arena.set_done(tid, cl.clock);
         assert_eq!(revealed_job_workload(&cl, id), 0.0);
     }
 
@@ -485,13 +514,50 @@ mod tests {
         after.clock = wflip + 1e-6;
         assert!(est.task_remaining_work(&after, t) > w);
         // a revealed copy's estimate decays: it can never flip up
-        cl.jobs[0].tasks[0].copies[0].revealed = true;
+        reveal0(&mut cl);
         let est = SpeedAware::revealed();
         assert_eq!(est.copy_prob_flip_time(&cl, t, 0, a, delta), None);
         assert_eq!(est.copy_work_flip_time(&cl, t, 0, w), None);
         assert_eq!(Revealed.copy_work_flip_time(&cl, t, 0, w), None);
         // blind estimators ignore the reveal and still report a flip
         assert!(Blind.copy_prob_flip_time(&cl, t, 0, a, delta).is_some());
+    }
+
+    /// Satellite: the LATE progress-rate flip inverts the rate predicate.
+    /// On the 2x host at clock 0.25 the copy's work-elapsed is exactly
+    /// `mu = 0.5`, so the rate is `1 / (0.25 + mean_remaining(0.5)/2) = 2`;
+    /// a target of `1.6` puts the crossing at work-elapsed
+    /// `rate_denom_flip(2/1.6) = 0.625`, i.e. clock `0.3125`.
+    #[test]
+    fn rate_flip_time_inverts_the_progress_rate() {
+        let mut cl = cluster_with(vec![MachineClass::new(2, 2.0)], 30.0);
+        cl.clock = 0.25;
+        let t = task0();
+        let est = SpeedAware::blind();
+        // LATE's rate: copy started at 0, so elapsed == clock
+        let rate_at = |cl: &Cluster| 1.0 / (cl.clock + est.copy_remaining_wall(cl, t, 0));
+        let now = rate_at(&cl);
+        assert!((now - 2.0).abs() < 1e-12);
+        let target = 0.8 * now;
+        let flip = est.copy_rate_flip_time(&cl, t, 0, target).unwrap();
+        assert!((flip - 0.3125).abs() < 1e-8);
+        // before the flip the rate still meets the target...
+        let mut before = cluster_with(vec![MachineClass::new(2, 2.0)], 30.0);
+        before.clock = 0.3;
+        assert!(rate_at(&before) >= target);
+        // ...just after it sits strictly below
+        let mut after = cluster_with(vec![MachineClass::new(2, 2.0)], 30.0);
+        after.clock = flip + 1e-6;
+        assert!(rate_at(&after) < target);
+        // a positive rate never drops below a non-positive target
+        assert_eq!(est.copy_rate_flip_time(&cl, t, 0, 0.0), None);
+        // a revealed copy's denominator is its constant wall duration:
+        // the rate can never drop on its own
+        reveal0(&mut cl);
+        assert_eq!(SpeedAware::revealed().copy_rate_flip_time(&cl, t, 0, target), None);
+        assert_eq!(Revealed.copy_rate_flip_time(&cl, t, 0, target), None);
+        // blind estimators ignore the reveal and still report a flip
+        assert!(Blind.copy_rate_flip_time(&cl, t, 0, target).is_some());
     }
 
     #[test]

@@ -78,4 +78,17 @@ impl RemainingTime for Revealed {
             Some(flip_guard(cl.clock + (o.dist.mean_remaining_flip(w) - o.elapsed)))
         }
     }
+
+    /// A revealed copy's rate denominator is `elapsed + true remaining`
+    /// — its constant wall duration — so the rate never drops (`None`);
+    /// unrevealed copies decay on the blind Pareto schedule.
+    fn copy_rate_flip_time(&self, cl: &Cluster, t: TaskRef, copy: usize, rate: f64) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        if o.revealed || !(rate > 0.0) {
+            None
+        } else {
+            let e = o.dist.rate_denom_flip(1.0 / rate);
+            Some(flip_guard(cl.clock + (e - o.elapsed)))
+        }
+    }
 }

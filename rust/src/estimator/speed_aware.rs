@@ -116,4 +116,18 @@ impl RemainingTime for SpeedAware {
             ))
         }
     }
+
+    /// The wall denominator on a class-speed-`v` host is
+    /// `d_work(e·v) / v`, so the rate drops below `rate` once the
+    /// work-equivalent elapsed crosses `rate_denom_flip(v / rate)`;
+    /// revealed copies (with `reveal`) hold a constant rate — `None`.
+    fn copy_rate_flip_time(&self, cl: &Cluster, t: TaskRef, copy: usize, rate: f64) -> Option<f64> {
+        let o = observe(cl, t, copy);
+        if (self.reveal && o.revealed) || !(rate > 0.0) {
+            None
+        } else {
+            let e = o.dist.rate_denom_flip(o.speed / rate);
+            Some(flip_guard(cl.clock + (e - o.elapsed * o.speed) / o.speed))
+        }
+    }
 }

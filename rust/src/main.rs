@@ -42,16 +42,22 @@ COMMANDS
              [--threads N]
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
   bench      [--quick] [--out FILE] [--md FILE] [--check-wakeup]
+             [--check-scale]
              standardized throughput suite: every policy (7 canonical +
              2 composed pipelines) x {light lambda=0.3, heavy
              lambda~0.9*lambda^U} x M in {500, 4000}, each cell on the
              SchedIndex hot path, the naive-scan reference, and the
              polled (--no-wakeup) loop; light cells run the fine
              slot grid (slot_dt = 0.001) the wakeup planner targets;
-             writes machine-readable JSON (default BENCH_sim.json at the
+             then the (naive, light) scale cells M in {1e5, 1e6} timed
+             per event-queue backend (calendar vs binary-heap) with
+             peak RSS — --quick omits the M=1e6 cell; writes
+             machine-readable JSON (default BENCH_sim.json at the
              cwd) and, with --md, the EXPERIMENTS.md-ready markdown
-             table; --check-wakeup fails unless the (naive, light,
-             M=4000) cell skips >= 50% of slots at >= 2x wall speedup
+             tables; --check-wakeup fails unless the (naive, light,
+             M=4000) cell skips >= 50% of slots at >= 2x wall speedup;
+             --check-scale fails unless the calendar backend at least
+             matches the heap on the (naive, light, M=1e5) cell
   trace      --out FILE [--lambda L] [--horizon T] [--seed S]
   serve      [--machines N] [--rate R] [--jobs J] [--policy spec]
              [--artifacts-dir DIR]
@@ -80,6 +86,10 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
                                     instead of demand-driven wakeups
                                     (equivalence reference; same decisions,
                                     slower on fine grids / light loads)
+  --event-queue calendar|binary-heap
+                                    event-queue backend (default calendar;
+                                    binary-heap is the bit-identical
+                                    equivalence reference)
   --clone-copies N                  clones per task for clone_all / the
                                     clone rule's fixed budget (default 2)
 
@@ -145,6 +155,9 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
     }
     if args.has("no-wakeup") {
         cfg.wakeup = false;
+    }
+    if let Some(q) = args.str("event-queue") {
+        cfg.event_queue = q.parse()?;
     }
     if args.has("no-runtime") {
         cfg.use_runtime = false;
@@ -242,6 +255,7 @@ fn run() -> Result<(), String> {
             "no-wakeup",
             "quick",
             "check-wakeup",
+            "check-scale",
             "help",
         ],
     )?;
@@ -360,17 +374,44 @@ fn run() -> Result<(), String> {
                     c.wakeup_speedup()
                 );
             })?;
-            let doc = specsim::util::bench::throughput_json(&cells, quick);
+            println!(
+                "scale cells (naive, light): M in {:?}{}, calendar vs binary-heap",
+                specsim::util::bench::SCALE_MACHINES,
+                if quick { " minus the M=1e6 cell (--quick)" } else { "" },
+            );
+            let scale = specsim::util::bench::run_scale_suite(quick, |c| {
+                println!(
+                    "{:<10} {:>8} {:>8.3} {:>7} {:>13.0} {:>13.0} {:>7.2}x  rss {}/{}",
+                    c.policy,
+                    c.machines,
+                    c.lambda,
+                    c.load,
+                    c.calendar.events_per_sec,
+                    c.heap.events_per_sec,
+                    c.queue_speedup(),
+                    c.calendar
+                        .peak_rss_bytes
+                        .map_or("n/a".into(), |b| format!("{}MiB", b >> 20)),
+                    c.heap.peak_rss_bytes.map_or("n/a".into(), |b| format!("{}MiB", b >> 20)),
+                );
+            })?;
+            let doc = specsim::util::bench::throughput_json(&cells, &scale, quick);
             report::write_file(&out, &format!("{doc}\n")).map_err(|e| e.to_string())?;
             if let Some(md) = args.str("md") {
-                let table = specsim::util::bench::throughput_markdown(&cells);
+                let mut table = specsim::util::bench::throughput_markdown(&cells);
+                table.push('\n');
+                table.push_str(&specsim::util::bench::scale_markdown(&scale));
                 report::write_file(md, &table).map_err(|e| e.to_string())?;
-                println!("wrote the EXPERIMENTS.md-ready table to {md}");
+                println!("wrote the EXPERIMENTS.md-ready tables to {md}");
             }
-            println!("wrote {} cells to {out}", cells.len());
+            println!("wrote {} cells (+{} scale) to {out}", cells.len(), scale.len());
             if args.has("check-wakeup") {
                 specsim::util::bench::check_wakeup_gate(&cells)?;
                 println!("wakeup gate passed: (naive, light, M=4000) skips >= 50% at >= 2x");
+            }
+            if args.has("check-scale") {
+                specsim::util::bench::check_scale_gate(&scale)?;
+                println!("scale gate passed: calendar >= heap on (naive, light, M=1e5)");
             }
         }
         "trace" => {

@@ -37,14 +37,15 @@ fn for_each_candidate(cl: &Cluster, mut f: impl FnMut(&Cluster, TaskRef)) {
     } else {
         for id in cl.running.iter() {
             let job = cl.job(*id);
-            for (ti, task) in job.tasks.iter().enumerate() {
-                if task.done || task.copies.len() != 1 {
+            for ti in 0..job.spec.num_tasks {
+                let tid = job.tid(ti);
+                if cl.arena.done(tid) || cl.arena.n_copies(tid) != 1 {
                     continue;
                 }
-                if task.copies[0].phase != CopyPhase::Running {
+                if cl.arena.phase(cl.arena.copy_id(tid, 0)) != CopyPhase::Running {
                     continue;
                 }
-                f(cl, TaskRef { job: *id, task: ti as u32 });
+                f(cl, TaskRef { job: *id, task: ti });
             }
         }
     }
@@ -207,12 +208,12 @@ impl SpeculationRule for Mantri {
         if cl.idle() == 0 {
             return None;
         }
-        let r_max = cl.cfg.r_max as usize;
+        let r_max = cl.cfg.r_max;
         let mut next: Option<f64> = None;
         for_each_candidate(cl, |cl, t| {
             let two_means = 2.0 * cl.job(t.job).spec.dist.mean();
             if est.task_prob_exceeds(cl, t, two_means) > self.delta {
-                if cl.task(t).copies.len() < r_max {
+                if cl.n_copies(t) < r_max {
                     next = Some(cl.clock); // flagged and launchable: act now
                 }
                 return;
@@ -235,6 +236,9 @@ pub struct Late {
     rates: Vec<(f64, f64, TaskRef)>,
     sorted_rates: Vec<f64>,
     cands: Vec<(f64, TaskRef)>,
+    /// Reused rate buffer for the wakeup horizon (`&self` there, hence
+    /// the cell).
+    flip_scratch: std::cell::RefCell<Vec<f64>>,
 }
 
 impl Late {
@@ -245,6 +249,7 @@ impl Late {
             rates: Vec::new(),
             sorted_rates: Vec::new(),
             cands: Vec::new(),
+            flip_scratch: std::cell::RefCell::new(Vec::new()),
         }
     }
 
@@ -256,8 +261,10 @@ impl Late {
         est: &dyn RemainingTime,
         t: TaskRef,
     ) -> Option<(f64, f64)> {
-        let task = cl.task(t);
-        let c = task.copies.first()?;
+        if cl.n_copies(t) == 0 {
+            return None;
+        }
+        let c = cl.copy(t, 0);
         if c.phase != CopyPhase::Running {
             return None;
         }
@@ -317,18 +324,33 @@ impl SpeculationRule for Late {
     }
 
     /// LATE's below-percentile set is a *relative* ranking of
-    /// continuously-moving progress rates, so no useful flip time exists
-    /// while it can be non-empty — the bound is conservative ("now")
-    /// whenever LATE could launch, and exact (`None`) in the provably
-    /// inert states:
+    /// progress rates, but every estimator's rate `1/(elapsed + rem)` is
+    /// non-increasing between mutations, which yields an exact flip bound
+    /// (DESIGN.md §12):
     ///
     /// * full cluster, or speculative cap reached (`outstanding_backups`
-    ///   only changes through mutations);
+    ///   only changes through mutations) → `None`;
     /// * fewer candidates than `1 / slow_percentile`: the percentile
     ///   index truncates to 0, the threshold is the *minimum* rate, and
     ///   the strict `rate < threshold` set is empty for any candidate
-    ///   count up to the current one — no launch can happen.
-    fn next_decision_time(&self, cl: &Cluster, _est: &dyn RemainingTime) -> Option<f64> {
+    ///   count up to the current one — `None`;
+    /// * otherwise the quiescence invariant makes the strict-below set
+    ///   empty right now, i.e. the bottom `idx + 1` rates are all tied at
+    ///   the threshold `r*`.  The set can only become non-empty once some
+    ///   candidate's rate strictly separates below a bottom-group
+    ///   trajectory; because all rates are non-increasing, every such
+    ///   separation is preceded (or met) by that candidate's rate
+    ///   dropping strictly below the *static* value `r*` — so the minimum
+    ///   of [`RemainingTime::copy_rate_flip_time`] over the candidates is
+    ///   an early-or-exact bound.  Revealed copies have constant rates
+    ///   (`None` from the estimator), so an all-revealed candidate set
+    ///   skips forever.
+    ///
+    /// Defensive `Some(now)` cases, mirroring Mantri/ESE: a candidate
+    /// with no progress rate yet (elapsed 0 — it joins the ranking next
+    /// slot), or a strictly-below candidate that `on_slot` could not
+    /// serve (a copy-budget of one launches nothing without breaking).
+    fn next_decision_time(&self, cl: &Cluster, est: &dyn RemainingTime) -> Option<f64> {
         if cl.idle() == 0 {
             return None;
         }
@@ -336,15 +358,39 @@ impl SpeculationRule for Late {
         if cl.outstanding_backups >= cap {
             return None;
         }
-        // count single-running-first-copy candidates (including elapsed-0
-        // copies, which grow a progress rate by the next slot)
+        // gather the same rate set on_slot ranks (elapsed-0 copies have
+        // no rate yet but join the ranking by the next slot)
         let mut n: usize = 0;
-        for_each_candidate(cl, |_, _| n += 1);
+        let mut fresh = false;
+        let mut rates = self.flip_scratch.borrow_mut();
+        rates.clear();
+        for_each_candidate(cl, |cl, t| {
+            n += 1;
+            match self.progress_rate(cl, est, t) {
+                Some((rate, _)) => rates.push(rate),
+                None => fresh = true,
+            }
+        });
         if (n as f64 * self.slow_percentile) as usize == 0 {
-            None
-        } else {
-            Some(cl.clock)
+            return None;
         }
+        if fresh {
+            return Some(cl.clock);
+        }
+        rates.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((rates.len() as f64 * self.slow_percentile) as usize).min(rates.len() - 1);
+        let threshold = rates[idx];
+        if rates[0].total_cmp(&threshold).is_lt() {
+            return Some(cl.clock); // strict-below candidate outstanding
+        }
+        drop(rates);
+        let mut next: Option<f64> = None;
+        for_each_candidate(cl, |cl, t| {
+            if let Some(flip) = est.copy_rate_flip_time(cl, t, 0, threshold) {
+                next = Some(next.map_or(flip, |x| x.min(flip)));
+            }
+        });
+        next
     }
 }
 
@@ -383,7 +429,7 @@ impl SpeculationRule for Sda {
         t: TaskRef,
     ) {
         // only the original triggers detection, and only once
-        if cl.task(t).copies.len() != 1 {
+        if cl.n_copies(t) != 1 {
             return;
         }
         let mean = cl.job(t.job).spec.dist.mean();
@@ -483,12 +529,12 @@ impl SpeculationRule for Ese {
         if cl.idle() == 0 {
             return None;
         }
-        let r_max = cl.cfg.r_max as usize;
+        let r_max = cl.cfg.r_max;
         let mut next: Option<f64> = None;
         for_each_candidate(cl, |cl, t| {
             let threshold = self.sigma * cl.job(t.job).spec.dist.mean();
             if est.task_remaining_work(cl, t) > threshold {
-                if cl.task(t).copies.len() < r_max {
+                if cl.n_copies(t) < r_max {
                     next = Some(cl.clock);
                 }
                 return;

@@ -130,6 +130,22 @@ impl Pareto {
         w * (self.alpha - 1.0)
     }
 
+    /// Inverse of the LATE progress-rate denominator
+    /// `e + mean_remaining(e) = max(e, mu) * alpha / (alpha - 1)`: the
+    /// elapsed boundary `e*` past which the denominator strictly exceeds
+    /// `d` — equivalently, past which the progress rate `1 / denom`
+    /// drops strictly below `1 / d`.
+    ///
+    /// Same planner precondition as the other flips (the predicate is
+    /// currently false, i.e. the denominator is `<= d` now, which forces
+    /// `d >= E[x]`): the denominator is the constant `E[x]` on `[0, mu]`
+    /// and strictly increasing beyond, so the crossing sits at
+    /// `d (alpha - 1) / alpha`, clamped to `mu`.
+    #[inline]
+    pub fn rate_denom_flip(&self, d: f64) -> f64 {
+        (d * (self.alpha - 1.0) / self.alpha).max(self.mu)
+    }
+
     /// `E[min(x, cap)] = integral_0^cap S(t) dt`.
     #[inline]
     pub fn mean_capped(&self, cap: f64) -> f64 {
@@ -240,6 +256,13 @@ mod tests {
                 let e = p.mean_remaining_flip(w);
                 assert!((p.mean_remaining(e) - w).abs() < 1e-9);
                 assert!(p.mean_remaining(e * (1.0 + 1e-9)) > w);
+            }
+            let denom = |e: f64| e + p.mean_remaining(e);
+            for d in [p.mean(), 1.3 * p.mean(), 5.0] {
+                let e = p.rate_denom_flip(d);
+                assert!(e >= p.mu);
+                assert!(denom(e) <= d + 1e-9);
+                assert!(denom(e * (1.0 + 1e-9)) > d);
             }
         }
     }

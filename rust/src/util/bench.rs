@@ -23,6 +23,7 @@ use std::hint::black_box;
 use std::time::{Duration, Instant};
 
 use crate::analysis::threshold;
+use crate::cluster::event::EventQueueKind;
 use crate::cluster::generator;
 use crate::cluster::sim::{SimResult, Simulator, Workload};
 use crate::config::{SimConfig, WorkloadConfig};
@@ -84,10 +85,20 @@ pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Meas
 /// detect format drift.  v2: per-cell `slot_dt`, the third (`polled`)
 /// run, `wakeup_speedup`/`skip_ratio`, tick counters on every run, and
 /// `events` no longer counts slot boundaries (they left the event heap).
-pub const BENCH_SCHEMA: &str = "specsim-bench-v2";
+/// v3: per-run `peak_rss_bytes` (Linux `VmHWM`, reset before each run;
+/// `null` elsewhere) and the `scale_cells` array — the (naive, light)
+/// M ∈ {10^5, 10^6} cells timed per event-queue backend
+/// (calendar vs binary heap).
+pub const BENCH_SCHEMA: &str = "specsim-bench-v3";
 
 /// The suite's machine-count axis.
 pub const SUITE_MACHINES: [usize; 2] = [500, 4000];
+
+/// The machine-count axis of the scale cells — the datacenter regime the
+/// calendar queue and arena/SoA layout target (ROADMAP "Million-machine
+/// raw speed").  Naive policy, light load: the point is that nothing in
+/// the per-slot or per-event path scales with M.
+pub const SCALE_MACHINES: [usize; 2] = [100_000, 1_000_000];
 
 /// The suite's light-load arrival rate (jobs per time unit).
 pub const LIGHT_LAMBDA: f64 = 0.3;
@@ -110,6 +121,23 @@ pub fn heavy_lambda(machines: usize) -> f64 {
         .lambda_cutoff
 }
 
+/// Reset the kernel's peak-RSS high-water mark so each run's `VmHWM`
+/// reading is its own, not an earlier cell's.  Best-effort: the write is
+/// Linux-only and may be refused (e.g. in restricted sandboxes), in which
+/// case later readings are monotone over the process lifetime.
+fn reset_peak_rss() {
+    let _ = std::fs::write("/proc/self/clear_refs", "5");
+}
+
+/// Peak resident set size (`VmHWM` from `/proc/self/status`) in bytes;
+/// `None` off Linux or when the read/parse fails.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// One timed simulation of a suite cell (one query path × one wakeup
 /// mode).
 #[derive(Clone, Debug)]
@@ -129,10 +157,13 @@ pub struct ThroughputRun {
     /// Event-heap high-water mark.
     pub peak_event_queue: usize,
     pub completed_jobs: usize,
+    /// Peak resident set during the run (Linux `VmHWM`, reset per run;
+    /// `None` elsewhere).
+    pub peak_rss_bytes: Option<u64>,
 }
 
 impl ThroughputRun {
-    fn from_result(res: &SimResult, wall_secs: f64) -> Self {
+    fn from_result(res: &SimResult, wall_secs: f64, peak_rss_bytes: Option<u64>) -> Self {
         ThroughputRun {
             wall_secs,
             events: res.events_processed,
@@ -142,6 +173,7 @@ impl ThroughputRun {
             slot_hook_secs: res.slot_hook_secs,
             peak_event_queue: res.peak_event_queue,
             completed_jobs: res.completed.len(),
+            peak_rss_bytes,
         }
     }
 
@@ -165,6 +197,10 @@ impl ThroughputRun {
         m.insert("slot_hook_secs".into(), Json::Num(self.slot_hook_secs));
         m.insert("peak_event_queue".into(), Json::Num(self.peak_event_queue as f64));
         m.insert("completed_jobs".into(), Json::Num(self.completed_jobs as f64));
+        m.insert(
+            "peak_rss_bytes".into(),
+            self.peak_rss_bytes.map_or(Json::Null, |b| Json::Num(b as f64)),
+        );
         Json::Obj(m)
     }
 }
@@ -245,10 +281,11 @@ pub fn time_simulation(
     cfg.sched_index = sched_index;
     cfg.wakeup = wakeup;
     let sched = scheduler::build_for(&cfg, wl_cfg, Some(&workload))?;
+    reset_peak_rss();
     let t0 = Instant::now();
     let res = Simulator::new(cfg, workload, sched).run();
     let wall = t0.elapsed().as_secs_f64();
-    Ok(ThroughputRun::from_result(&res, wall))
+    Ok(ThroughputRun::from_result(&res, wall, peak_rss_bytes()))
 }
 
 /// The suite's policy axis: the seven canonical policies plus two
@@ -332,6 +369,158 @@ pub fn check_wakeup_gate(cells: &[ThroughputCell]) -> Result<(), String> {
     Ok(())
 }
 
+// ----- the million-machine scale cells ------------------------------------
+
+/// One (naive, light, M) scale cell, timed per event-queue backend on the
+/// identical pre-sampled workload.  Both backends pop the identical
+/// `(time, seq)` event order (the equivalence property tests pin this),
+/// so the events/sec ratio is a pure wall-clock comparison.
+#[derive(Clone, Debug)]
+pub struct ScaleCell {
+    pub policy: String,
+    pub load: &'static str,
+    pub lambda: f64,
+    pub machines: usize,
+    pub slot_dt: f64,
+    /// Best-of-N run on the calendar backend (the default hot path).
+    pub calendar: ThroughputRun,
+    /// Best-of-N run on the binary-heap reference.
+    pub heap: ThroughputRun,
+}
+
+impl ScaleCell {
+    /// Calendar-backend speedup over the heap (events/sec ratio; both
+    /// runs pop identical events, so this is a wall-clock ratio).
+    pub fn queue_speedup(&self) -> f64 {
+        self.calendar.events_per_sec / self.heap.events_per_sec.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("policy".into(), Json::Str(self.policy.clone()));
+        m.insert("load".into(), Json::Str(self.load.to_string()));
+        m.insert("lambda".into(), Json::Num(self.lambda));
+        m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("slot_dt".into(), Json::Num(self.slot_dt));
+        m.insert("calendar".into(), self.calendar.to_json());
+        m.insert("heap".into(), self.heap.to_json());
+        m.insert("queue_speedup".into(), Json::Num(self.queue_speedup()));
+        Json::Obj(m)
+    }
+}
+
+/// Best wall-clock of `passes` identical timed runs — the standard
+/// min-of-N defence against scheduler noise on a gated comparison.
+fn best_of(
+    base: &SimConfig,
+    wl_cfg: &WorkloadConfig,
+    workload: &Workload,
+    passes: u32,
+) -> Result<ThroughputRun, String> {
+    assert!(passes >= 1);
+    let mut best: Option<ThroughputRun> = None;
+    for _ in 0..passes {
+        let run =
+            time_simulation(base, wl_cfg, workload.clone(), SchedulerKind::Naive, true, true)?;
+        best = Some(match best {
+            Some(b) if b.wall_secs <= run.wall_secs => b,
+            _ => run,
+        });
+    }
+    Ok(best.expect("passes >= 1"))
+}
+
+/// Run the scale cells: (naive, light) × [`SCALE_MACHINES`], each timed
+/// on both event-queue backends.  `--quick` (CI) skips the M = 10^6 cell
+/// — it exists to prove the full suite completes at datacenter scale, not
+/// to gate every push.  The M ≤ 10^5 cells are best-of-3 per backend
+/// (they feed the [`check_scale_gate`] comparison); M = 10^6 runs once.
+pub fn run_scale_suite(
+    quick: bool,
+    mut progress: impl FnMut(&ScaleCell),
+) -> Result<Vec<ScaleCell>, String> {
+    let horizon = suite_horizon(quick);
+    let mut cells = Vec::new();
+    for machines in SCALE_MACHINES {
+        if quick && machines > 100_000 {
+            continue; // CI quick-mode guard (see the bench CI job)
+        }
+        let mut base = SimConfig::default();
+        base.machines = machines;
+        base.horizon = horizon;
+        base.use_runtime = false;
+        base.slot_dt = WAKEUP_SLOT_DT;
+        let wl_cfg = WorkloadConfig::paper(LIGHT_LAMBDA);
+        let workload = generator::generate(&wl_cfg, horizon, base.seed);
+        let passes = if machines > 100_000 { 1 } else { 3 };
+        let mut cal_cfg = base.clone();
+        cal_cfg.event_queue = EventQueueKind::Calendar;
+        let calendar = best_of(&cal_cfg, &wl_cfg, &workload, passes)?;
+        let mut heap_cfg = base;
+        heap_cfg.event_queue = EventQueueKind::BinaryHeap;
+        let heap = best_of(&heap_cfg, &wl_cfg, &workload, passes)?;
+        let cell = ScaleCell {
+            policy: SchedulerKind::Naive.to_string(),
+            load: "light",
+            lambda: LIGHT_LAMBDA,
+            machines,
+            slot_dt: WAKEUP_SLOT_DT,
+            calendar,
+            heap,
+        };
+        progress(&cell);
+        cells.push(cell);
+    }
+    Ok(cells)
+}
+
+/// The scale acceptance gate CI enforces (`bench --check-scale`): on the
+/// (naive, light, M = 10^5) cell the calendar backend must at least match
+/// the heap reference's throughput.
+pub fn check_scale_gate(cells: &[ScaleCell]) -> Result<(), String> {
+    let cell = cells
+        .iter()
+        .find(|c| c.policy == "naive" && c.load == "light" && c.machines == 100_000)
+        .ok_or("scale gate: the (naive, light, M=100000) cell is missing")?;
+    let speedup = cell.queue_speedup();
+    if speedup < 1.0 {
+        return Err(format!(
+            "scale gate: calendar backend at {speedup:.3}x the heap on (naive, light, \
+             M=100000) — calendar {:.3}s vs heap {:.3}s",
+            cell.calendar.wall_secs, cell.heap.wall_secs
+        ));
+    }
+    Ok(())
+}
+
+/// Render the scale cells as the EXPERIMENTS.md §Perf companion table.
+pub fn scale_markdown(cells: &[ScaleCell]) -> String {
+    let rss = |r: &ThroughputRun| match r.peak_rss_bytes {
+        Some(b) => format!("{:.0} MiB", b as f64 / (1024.0 * 1024.0)),
+        None => "n/a".to_string(),
+    };
+    let mut out = String::from(
+        "| policy | load | M | slot_dt | calendar ev/s | heap ev/s | queue speedup \
+         | calendar peak RSS | heap peak RSS |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {:.0} | {:.0} | {:.2}x | {} | {} |\n",
+            c.policy,
+            c.load,
+            c.machines,
+            c.slot_dt,
+            c.calendar.events_per_sec,
+            c.heap.events_per_sec,
+            c.queue_speedup(),
+            rss(&c.calendar),
+            rss(&c.heap)
+        ));
+    }
+    out
+}
+
 /// Render a finished suite as the EXPERIMENTS.md §Perf markdown table —
 /// what CI appends to the job summary so the committed table can be
 /// refreshed from a real measured artifact by copy-paste.
@@ -360,8 +549,9 @@ pub fn throughput_markdown(cells: &[ThroughputCell]) -> String {
     out
 }
 
-/// Serialize a finished suite to the `BENCH_sim.json` document.
-pub fn throughput_json(cells: &[ThroughputCell], quick: bool) -> Json {
+/// Serialize a finished suite (throughput + scale cells) to the
+/// `BENCH_sim.json` document.
+pub fn throughput_json(cells: &[ThroughputCell], scale: &[ScaleCell], quick: bool) -> Json {
     let mut m = std::collections::BTreeMap::new();
     m.insert("schema".into(), Json::Str(BENCH_SCHEMA.to_string()));
     m.insert("suite".into(), Json::Str("throughput".to_string()));
@@ -379,12 +569,17 @@ pub fn throughput_json(cells: &[ThroughputCell], quick: bool) -> Json {
              speedup = indexed/scan events_per_sec; wakeup_speedup = \
              polled/indexed wall_secs; skip_ratio = indexed ticks_skipped \
              over the grid. Light cells run slot_dt = 0.001 (the \
-             polling-dominated regime), heavy cells 1.0. Regenerate: \
+             polling-dominated regime), heavy cells 1.0. scale_cells time \
+             the (naive, light) M in {1e5, 1e6} cells per event-queue \
+             backend (calendar vs binary-heap; identical popped events); \
+             quick runs omit M = 1e6. peak_rss_bytes = Linux VmHWM, reset \
+             per run; null elsewhere. Regenerate: \
              cargo run --release -- bench"
                 .to_string(),
         ),
     );
     m.insert("cells".into(), Json::Arr(cells.iter().map(|c| c.to_json()).collect()));
+    m.insert("scale_cells".into(), Json::Arr(scale.iter().map(|c| c.to_json()).collect()));
     Json::Obj(m)
 }
 
@@ -462,7 +657,7 @@ mod tests {
         let md = throughput_markdown(std::slice::from_ref(&cell));
         assert!(md.starts_with("| policy |"));
         assert!(md.contains("| sda | light | 40 | 0.1 |"));
-        let doc = throughput_json(&[cell], true);
+        let doc = throughput_json(&[cell], &[], true);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
         assert_eq!(back.get("measured"), Some(&Json::Bool(true)));
@@ -474,6 +669,86 @@ mod tests {
         assert!(cells[0].path(&["polled", "ticks_fired"]).unwrap().as_f64().unwrap() > 0.0);
         assert!(cells[0].get("wakeup_speedup").unwrap().as_f64().is_some());
         assert!(cells[0].get("skip_ratio").unwrap().as_f64().unwrap() > 0.0);
+        // v3: the peak-RSS column round-trips (a number on Linux, null
+        // elsewhere) and the scale_cells array is always present
+        let rss = cells[0].path(&["indexed", "peak_rss_bytes"]).unwrap();
+        if cfg!(target_os = "linux") {
+            assert!(rss.as_f64().unwrap() > 0.0);
+        } else {
+            assert_eq!(rss, &Json::Null);
+        }
+        assert_eq!(back.get("scale_cells").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    /// Both event-queue backends simulate the identical system at the
+    /// bench layer: same events popped, same completions, same grid.
+    #[test]
+    fn scale_backends_pop_identical_events() {
+        let mut base = SimConfig::default();
+        base.machines = 40;
+        base.horizon = 60.0;
+        base.use_runtime = false;
+        base.slot_dt = 0.1;
+        let wl_cfg = WorkloadConfig::paper(0.3);
+        let workload = generator::generate(&wl_cfg, base.horizon, 1);
+        let mut cal_cfg = base.clone();
+        cal_cfg.event_queue = EventQueueKind::Calendar;
+        let calendar = best_of(&cal_cfg, &wl_cfg, &workload, 2).unwrap();
+        let mut heap_cfg = base;
+        heap_cfg.event_queue = EventQueueKind::BinaryHeap;
+        let heap = best_of(&heap_cfg, &wl_cfg, &workload, 2).unwrap();
+        assert_eq!(calendar.events, heap.events);
+        assert_eq!(calendar.completed_jobs, heap.completed_jobs);
+        assert_eq!(calendar.ticks_fired, heap.ticks_fired);
+        assert_eq!(calendar.ticks_skipped, heap.ticks_skipped);
+        let cell = ScaleCell {
+            policy: "naive".into(),
+            load: "light",
+            lambda: 0.3,
+            machines: 40,
+            slot_dt: 0.1,
+            calendar,
+            heap,
+        };
+        assert!(cell.queue_speedup() > 0.0);
+        let j = cell.to_json();
+        assert_eq!(j.get("machines").unwrap().as_usize(), Some(40));
+        assert!(j.path(&["calendar", "events_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("queue_speedup").unwrap().as_f64().is_some());
+        let md = scale_markdown(std::slice::from_ref(&cell));
+        assert!(md.starts_with("| policy |"));
+        assert!(md.contains("| naive | light | 40 | 0.1 |"));
+    }
+
+    /// The scale gate reads the M = 10^5 cell and enforces the
+    /// calendar-at-least-matches-heap bar.
+    #[test]
+    fn scale_gate_checks_the_m1e5_cell() {
+        let run = |wall: f64| ThroughputRun {
+            wall_secs: wall,
+            events: 1000,
+            events_per_sec: 1000.0 / wall,
+            ticks_fired: 10,
+            ticks_skipped: 90,
+            slot_hook_secs: 0.0,
+            peak_event_queue: 10,
+            completed_jobs: 5,
+            peak_rss_bytes: Some(1 << 20),
+        };
+        let cell = |cal_wall: f64, heap_wall: f64| ScaleCell {
+            policy: "naive".into(),
+            load: "light",
+            lambda: LIGHT_LAMBDA,
+            machines: 100_000,
+            slot_dt: WAKEUP_SLOT_DT,
+            calendar: run(cal_wall),
+            heap: run(heap_wall),
+        };
+        assert!(check_scale_gate(&[cell(0.8, 1.0)]).is_ok());
+        assert!(check_scale_gate(&[cell(1.0, 1.0)]).is_ok(), "matching the heap passes");
+        let err = check_scale_gate(&[cell(1.2, 1.0)]).unwrap_err();
+        assert!(err.contains("scale gate"), "{err}");
+        assert!(check_scale_gate(&[]).is_err(), "missing cell must fail");
     }
 
     /// The CI gate logic reads the right cell and enforces both bars.
@@ -488,6 +763,7 @@ mod tests {
             slot_hook_secs: 0.0,
             peak_event_queue: 10,
             completed_jobs: 5,
+            peak_rss_bytes: None,
         };
         let cell = |wakeup_wall: f64, fired: u64, skipped: u64| ThroughputCell {
             policy: "naive".into(),

@@ -42,9 +42,10 @@ fn reveal_under_sda(cfg: &SimConfig, mut cl: Cluster, sda: &mut Sda, at: f64) ->
     let est = estimator::for_policy(cfg, true);
     let budget = CapBudget { copies: 2 };
     cl.clock = at;
-    cl.jobs[0].tasks[0].copies[0].revealed = true;
+    let cid = cl.arena.copy_id(cl.tid(task0()), 0);
+    cl.arena.set_revealed(cid);
     sda.on_reveal(&mut cl, est.as_ref(), &budget, task0());
-    (sda.detected, cl.jobs[0].tasks[0].copies.len())
+    (sda.detected, cl.n_copies(task0()) as usize)
 }
 
 /// A slow-*class* host (advertised speed 0.5, healthy): the copy's
@@ -96,7 +97,7 @@ fn sda_relaunches_copy_stuck_on_slowed_host() {
     // work 1.0 at effective speed 1/4: wall duration 4.0; at t = 0.4 the
     // apparent remaining work is 3.6 >> 1 — a detectable straggler
     let cl = one_task_cluster(cfg.clone(), 1.0);
-    assert_eq!(cl.jobs[0].tasks[0].copies[0].duration, 4.0);
+    assert_eq!(cl.copy(task0(), 0).duration, 4.0);
     let (detected, copies) = reveal_under_sda(&cfg, cl, &mut sda, 0.4);
     assert_eq!(detected, 1, "SDA must detect the slowed host's straggler");
     assert_eq!(copies, 2, "SDA must have launched a backup copy");

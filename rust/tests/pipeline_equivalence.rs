@@ -148,9 +148,13 @@ fn wakeup_equivalence_holds_on_the_scan_path_and_fine_grids_too() {
 }
 
 /// The committed-snapshot pin replacing the deleted monoliths as the
-/// pipeline's external reference.  Missing snapshot = bless-and-warn
-/// (commit the written file, or the CI `sweep-snapshots` artifact, to
-/// arm the pin); present snapshot = byte-identical or fail.
+/// pipeline's external reference.  Present snapshot = byte-identical or
+/// fail.  Missing snapshot: with `SPECSIM_REQUIRE_SNAPSHOT` set (the CI
+/// test step) the pin **fails instead of self-blessing** — a checkout
+/// must carry the committed reference; without it (local runs, and the
+/// CI bootstrap step that generates the first snapshot) the test blesses
+/// the file and passes with a warning, so it can be committed from the
+/// `sweep-snapshots` artifact.  See `tests/snapshots/README.md`.
 #[test]
 fn canonical_sweep_matches_committed_snapshot() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/snapshots/canonical_sweep.csv");
@@ -167,6 +171,14 @@ fn canonical_sweep_matches_committed_snapshot() {
             "canonical sweep drifted from the committed snapshot {path}; if the \
              change is intentional, delete the file and re-run to re-bless"
         ),
+        Err(_) if std::env::var_os("SPECSIM_REQUIRE_SNAPSHOT").is_some() => {
+            panic!(
+                "canonical sweep snapshot missing at {path} and \
+                 SPECSIM_REQUIRE_SNAPSHOT is set: refusing to self-bless — \
+                 commit the sweep-snapshots CI artifact (or run the test once \
+                 without the variable) to restore the pin"
+            );
+        }
         Err(_) => {
             report::write_file(path, &current).expect("bless the snapshot");
             eprintln!(
