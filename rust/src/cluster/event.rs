@@ -53,11 +53,19 @@ use super::job::{JobId, TaskRef};
 pub enum Event {
     /// A job joins the master queue.
     Arrival(JobId),
-    /// A task copy reaches the end of its sampled duration.
-    CopyFinish { task: TaskRef, copy: u32 },
+    /// A task copy reaches the end of its sampled duration.  `epoch` is the
+    /// copy's re-time generation at push: a `SlowdownFlip` on the copy's
+    /// host bumps the arena epoch and re-pushes, so a popped entry whose
+    /// epoch trails the arena's is stale (see `Cluster::flip_machine`).
+    CopyFinish { task: TaskRef, copy: u32, epoch: u32 },
     /// A first copy crosses the detection fraction s_i: its true remaining
     /// time becomes visible to the scheduler (straggler checkpoint).
-    Checkpoint { task: TaskRef, copy: u32 },
+    /// Carries the same re-time `epoch` as `CopyFinish`.
+    Checkpoint { task: TaskRef, copy: u32, epoch: u32 },
+    /// Machine `machine`'s hidden ON/OFF slowdown state flips (degrades or
+    /// recovers).  The handler re-times every running copy on the machine
+    /// and schedules the next flip; never stale, never compacted away.
+    SlowdownFlip { machine: u32 },
 }
 
 /// Which data structure backs the [`EventQueue`].
@@ -529,7 +537,11 @@ mod tests {
                 q.push(i as f64, Event::Arrival(JobId(i)));
                 q.push(
                     i as f64 + 0.5,
-                    Event::CopyFinish { task: TaskRef { job: JobId(i), task: 0 }, copy: 0 },
+                    Event::CopyFinish {
+                        task: TaskRef { job: JobId(i), task: 0 },
+                        copy: 0,
+                        epoch: 0,
+                    },
                 );
             }
             assert!(!q.should_compact());
@@ -699,6 +711,139 @@ mod tests {
                             });
                             live_ids.retain(|x| !killed.contains(x));
                             killed.clear();
+                        }
+                    }
+                }
+                assert_eq!(heap.len(), cal.len(), "divergent len (seed {seed})");
+            }
+            // drain both to the end
+            loop {
+                let a = heap.pop();
+                let b = cal.pop();
+                assert_eq!(a, b, "divergent drain (seed {seed})");
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Property test for the `SlowdownFlip` re-time protocol: random
+    /// sequences of copy pushes, epoch-bumping re-times (the flip handler's
+    /// kill/re-insert: mark the superseded entry stale, re-push the same
+    /// copy at a new time with a bumped epoch), interleaved `SlowdownFlip`
+    /// events, pops, and due-compactions — both backends pop the identical
+    /// `(time, seq, event)` stream and agree on stale counts, compaction
+    /// triggers, and post-compaction lengths.
+    #[test]
+    fn backends_agree_under_flip_retime_sequences() {
+        use std::collections::HashMap;
+        for seed in 0..8u64 {
+            let mut rng = Pcg64::new(seed, 0xf11b);
+            let mut heap = EventQueue::new();
+            let mut cal = EventQueue::with_kind(EventQueueKind::Calendar, 0.25);
+            let mut clock = 0.0f64;
+            let mut next_id = 0u32;
+            // current (live) epoch per copy id; absent = copy finished
+            let mut cur: HashMap<u32, u32> = HashMap::new();
+            let mut live_ids = Vec::new();
+            let finish = |id: u32, epoch: u32| Event::CopyFinish {
+                task: TaskRef { job: JobId(id), task: 0 },
+                copy: 0,
+                epoch,
+            };
+            for _ in 0..4000 {
+                match (rng.next_f64() * 10.0) as u32 {
+                    // 30%: launch a copy (epoch 0)
+                    0..=2 => {
+                        let d = rng.next_f64().powi(3) * 3.0 * 0.25 * CALENDAR_DAYS as f64;
+                        let t = clock + d.max(1e-9);
+                        let id = next_id;
+                        next_id += 1;
+                        cur.insert(id, 0);
+                        live_ids.push(id);
+                        heap.push(t, finish(id, 0));
+                        cal.push(t, finish(id, 0));
+                    }
+                    // 10%: a machine flips (always-live event on both)
+                    3 => {
+                        let d = rng.next_f64() * 0.25 * CALENDAR_DAYS as f64;
+                        let t = clock + d.max(1e-9);
+                        let m = (rng.next_f64() * 16.0) as u32;
+                        heap.push(t, Event::SlowdownFlip { machine: m });
+                        cal.push(t, Event::SlowdownFlip { machine: m });
+                    }
+                    // 20%: re-time a random live copy — the flip handler's
+                    // kill/re-insert: old entry goes stale, same copy
+                    // re-pushed with a bumped epoch at a fresh time
+                    4..=5 => {
+                        if !live_ids.is_empty() {
+                            let i = (rng.next_f64() * live_ids.len() as f64) as usize;
+                            let id = live_ids[i.min(live_ids.len() - 1)];
+                            let e = cur.get_mut(&id).expect("live id has an epoch");
+                            *e += 1;
+                            let epoch = *e;
+                            heap.note_stale(1);
+                            cal.note_stale(1);
+                            let d = rng.next_f64().powi(3) * 0.5 * CALENDAR_DAYS as f64;
+                            let t = clock + d.max(1e-9);
+                            heap.push(t, finish(id, epoch));
+                            cal.push(t, finish(id, epoch));
+                        }
+                    }
+                    // 30%: pop and compare
+                    6..=8 => {
+                        let a = heap.pop();
+                        let b = cal.pop();
+                        assert_eq!(a, b, "divergent pop (seed {seed})");
+                        if let Some((t, ev)) = a {
+                            assert!(t >= clock);
+                            clock = t;
+                            if let Event::CopyFinish { task, epoch, .. } = ev {
+                                let id = task.job.0;
+                                match cur.get(&id) {
+                                    // stale: superseded by a later re-time
+                                    Some(&e) if e != epoch => {
+                                        heap.note_stale_popped();
+                                        cal.note_stale_popped();
+                                    }
+                                    // live: the copy finishes
+                                    Some(_) => {
+                                        cur.remove(&id);
+                                        live_ids.retain(|&x| x != id);
+                                    }
+                                    // stale: the copy already finished — a
+                                    // re-time can land *earlier* than the
+                                    // entry it supersedes (speed went up),
+                                    // so superseded entries may outlive the
+                                    // finish
+                                    None => {
+                                        heap.note_stale_popped();
+                                        cal.note_stale_popped();
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // 10%: compact when due — epoch-comparing predicate
+                    _ => {
+                        assert_eq!(
+                            heap.should_compact(),
+                            cal.should_compact(),
+                            "divergent compaction trigger (seed {seed})"
+                        );
+                        if heap.should_compact() {
+                            let c1 = cur.clone();
+                            let c2 = cur.clone();
+                            let pred = move |c: &HashMap<u32, u32>, e: &Event| match *e {
+                                Event::CopyFinish { task, epoch, .. } => {
+                                    c.get(&task.job.0) == Some(&epoch)
+                                }
+                                Event::SlowdownFlip { .. } => true,
+                                _ => true,
+                            };
+                            heap.retain_live(|e| pred(&c1, e));
+                            cal.retain_live(|e| pred(&c2, e));
                         }
                     }
                 }

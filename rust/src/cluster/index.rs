@@ -489,7 +489,7 @@ mod tests {
     }
 
     fn launch_first_copy(j: &mut JobState, arena: &mut TaskArena, task: u32, now: f64) {
-        arena.push_copy(j.tid(task), 0, now, 1.0);
+        arena.push_copy(j.tid(task), 0, now, 1.0, 1.0);
         if task >= j.next_unlaunched {
             j.next_unlaunched = task + 1;
         }
@@ -631,7 +631,7 @@ mod tests {
         assert_eq!(idx.unrevealed_candidates(JobId(0)).collect::<Vec<_>>(), vec![1]);
         assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![0, 1]);
         // a backup on task 0 disqualifies it (no longer a single-copy task)
-        arena.push_copy(j.tid(0), 0, 0.0, 1.0);
+        arena.push_copy(j.tid(0), 0, 0.0, 1.0, 1.0);
         idx.sync_task(&j, &arena, t0);
         assert_eq!(idx.candidates(JobId(0)).collect::<Vec<_>>(), vec![1]);
         // task 1 finishes -> gone too
@@ -640,7 +640,7 @@ mod tests {
         idx.sync_task(&j, &arena, t1);
         assert_eq!(idx.candidates(JobId(0)).count(), 0);
         // a killed single copy (Mantri's restart) is not a candidate either
-        arena.push_copy(j.tid(2), 1, 0.0, 1.0);
+        arena.push_copy(j.tid(2), 1, 0.0, 1.0, 1.0);
         arena.set_phase(arena.copy_id(j.tid(2), 0), CopyPhase::Killed);
         idx.sync_task(&j, &arena, TaskRef { job: JobId(0), task: 2 });
         assert_eq!(idx.candidates(JobId(0)).count(), 0);

@@ -123,8 +123,25 @@ pub struct TaskArena {
     machine: Vec<u32>,
     start: Vec<f64>,
     duration: Vec<f64>,
+    /// Sampled work amount (units of `E[x]`).  `duration` is derived wall
+    /// clock (`work / effective speed at launch`, re-timed by flips); the
+    /// work itself is flip-invariant and anchors the re-time arithmetic.
+    work: Vec<f64>,
     phase: Vec<CopyPhase>,
     revealed: Vec<bool>,
+    /// Average delivered throughput (work per wall-clock unit) over the
+    /// copy's lifetime, stamped at the detection checkpoint and refreshed
+    /// whenever a `SlowdownFlip` re-times the copy; NaN until revealed.
+    /// Piecewise-constant between cluster mutations by construction, which
+    /// is what keeps the wakeup planner's horizon contract sound for the
+    /// observed-speed estimator (DESIGN.md §14).
+    obs_speed: Vec<f64>,
+    /// Re-time generation: bumped by `Cluster::flip_machine` each time a
+    /// `SlowdownFlip` re-times the copy, so older event-queue entries
+    /// (which carry the epoch they were pushed with) are recognizably
+    /// stale.  0 for copies never re-timed — the only value ever seen when
+    /// ON/OFF flips are disabled.
+    epoch: Vec<u32>,
     /// Next sibling copy id, or `NONE` at the chain tail.
     next: Vec<u32>,
     /// Recycled copy rows (filled by `recycle_tasks`).
@@ -257,15 +274,18 @@ impl TaskArena {
 
     /// Append a running copy to the task's chain; returns its copy index
     /// (chain position).
-    pub fn push_copy(&mut self, tid: u32, machine: u32, start: f64, duration: f64) -> u32 {
+    pub fn push_copy(&mut self, tid: u32, machine: u32, start: f64, duration: f64, work: f64) -> u32 {
         let cid = match self.free_copies.pop() {
             Some(c) => {
                 let i = c as usize;
                 self.machine[i] = machine;
                 self.start[i] = start;
                 self.duration[i] = duration;
+                self.work[i] = work;
                 self.phase[i] = CopyPhase::Running;
                 self.revealed[i] = false;
+                self.obs_speed[i] = f64::NAN;
+                self.epoch[i] = 0;
                 self.next[i] = NONE;
                 c
             }
@@ -274,8 +294,11 @@ impl TaskArena {
                 self.machine.push(machine);
                 self.start.push(start);
                 self.duration.push(duration);
+                self.work.push(work);
                 self.phase.push(CopyPhase::Running);
                 self.revealed.push(false);
+                self.obs_speed.push(f64::NAN);
+                self.epoch.push(0);
                 self.next.push(NONE);
                 c
             }
@@ -343,9 +366,52 @@ impl TaskArena {
         self.duration[cid as usize]
     }
 
+    /// Overwrite a copy's total wall-clock duration — the `SlowdownFlip`
+    /// re-time mutation (`Cluster::flip_machine`).  The copy's `start` is
+    /// unchanged; machine-time accounting stays consistent because
+    /// `copy_finished` / `kill_copy` read this (re-timed) duration.
+    #[inline]
+    pub fn set_duration(&mut self, cid: u32, duration: f64) {
+        self.duration[cid as usize] = duration;
+    }
+
     #[inline]
     pub fn start(&self, cid: u32) -> f64 {
         self.start[cid as usize]
+    }
+
+    /// The copy's sampled work amount (flip-invariant; see the column doc).
+    #[inline]
+    pub fn work(&self, cid: u32) -> f64 {
+        self.work[cid as usize]
+    }
+
+    /// Stamped lifetime-average throughput; NaN until revealed.
+    #[inline]
+    pub fn obs_speed(&self, cid: u32) -> f64 {
+        self.obs_speed[cid as usize]
+    }
+
+    #[inline]
+    pub fn set_obs_speed(&mut self, cid: u32, v: f64) {
+        self.obs_speed[cid as usize] = v;
+    }
+
+    /// Current re-time generation of a copy (0 unless a `SlowdownFlip` has
+    /// re-timed it).
+    #[inline]
+    pub fn epoch(&self, cid: u32) -> u32 {
+        self.epoch[cid as usize]
+    }
+
+    /// Bump the copy's re-time generation, invalidating every event-queue
+    /// entry pushed with the old epoch; returns the new epoch (the value to
+    /// stamp on the re-inserted events).
+    #[inline]
+    pub fn bump_epoch(&mut self, cid: u32) -> u32 {
+        let i = cid as usize;
+        self.epoch[i] += 1;
+        self.epoch[i]
     }
 }
 
@@ -465,9 +531,9 @@ mod tests {
     fn arena_copy_chains_keep_launch_order() {
         let mut arena = TaskArena::new();
         let base = arena.alloc_tasks(2);
-        assert_eq!(arena.push_copy(base, 7, 1.0, 5.0), 0);
-        assert_eq!(arena.push_copy(base + 1, 8, 1.5, 2.0), 0);
-        assert_eq!(arena.push_copy(base, 9, 2.0, 4.0), 1);
+        assert_eq!(arena.push_copy(base, 7, 1.0, 5.0, 5.0), 0);
+        assert_eq!(arena.push_copy(base + 1, 8, 1.5, 2.0, 2.0), 0);
+        assert_eq!(arena.push_copy(base, 9, 2.0, 4.0, 4.0), 1);
         assert_eq!(arena.n_copies(base), 2);
         assert_eq!(arena.n_copies(base + 1), 1);
         let c0 = arena.copy_at(base, 0);
@@ -481,6 +547,25 @@ mod tests {
         assert!(!arena.revealed(arena.copy_id(base, 0)));
         arena.set_revealed(arena.copy_id(base, 0));
         assert!(arena.copy_at(base, 0).revealed);
+    }
+
+    #[test]
+    fn copy_epoch_and_duration_retime() {
+        let mut arena = TaskArena::new();
+        let base = arena.alloc_tasks(1);
+        arena.push_copy(base, 3, 1.0, 5.0, 5.0);
+        let cid = arena.copy_id(base, 0);
+        assert_eq!(arena.epoch(cid), 0);
+        assert_eq!(arena.bump_epoch(cid), 1);
+        assert_eq!(arena.bump_epoch(cid), 2);
+        assert_eq!(arena.epoch(cid), 2);
+        arena.set_duration(cid, 9.0);
+        assert_eq!(arena.duration(cid), 9.0);
+        assert_eq!(arena.start(cid), 1.0, "re-time keeps the start");
+        assert_eq!(arena.work(cid), 5.0, "re-time never touches the work");
+        assert!(arena.obs_speed(cid).is_nan(), "no throughput stamp before reveal");
+        arena.set_obs_speed(cid, 0.25);
+        assert_eq!(arena.obs_speed(cid), 0.25);
     }
 
     #[test]
@@ -498,8 +583,10 @@ mod tests {
         let mut arena = TaskArena::new();
         let a = arena.alloc_tasks(3);
         let b = arena.alloc_tasks(5);
-        arena.push_copy(a, 0, 0.0, 1.0);
-        arena.push_copy(a + 2, 1, 0.0, 1.0);
+        arena.push_copy(a, 0, 0.0, 1.0, 1.0);
+        arena.push_copy(a + 2, 1, 0.0, 1.0, 1.0);
+        arena.bump_epoch(arena.copy_id(a, 0));
+        arena.set_obs_speed(arena.copy_id(a, 0), 0.5);
         arena.set_done(a, 1.0);
         let rows = arena.task_rows();
         let copies = arena.copy_rows();
@@ -514,9 +601,14 @@ mod tests {
             assert_eq!(arena.n_copies(t), 0);
         }
         // recycled copy rows come back before new ones are grown
-        arena.push_copy(c, 4, 2.0, 1.0);
-        arena.push_copy(c + 1, 5, 2.0, 1.0);
+        arena.push_copy(c, 4, 2.0, 1.0, 1.0);
+        arena.push_copy(c + 1, 5, 2.0, 1.0, 1.0);
         assert_eq!(arena.copy_rows(), copies, "no new copy rows");
+        // reused rows come back at epoch 0 even if re-timed before recycling,
+        // and without a stale throughput stamp
+        assert_eq!(arena.epoch(arena.copy_id(c, 0)), 0);
+        assert_eq!(arena.epoch(arena.copy_id(c + 1, 0)), 0);
+        assert!(arena.obs_speed(arena.copy_id(c, 0)).is_nan());
         // a different length allocates fresh rows
         let d = arena.alloc_tasks(4);
         assert_eq!(d as usize, rows);

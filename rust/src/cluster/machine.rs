@@ -46,17 +46,41 @@ impl MachineClass {
 /// are sampled once per simulation from the run's seed, so the slowdown is
 /// *correlated across tasks on the same server* — the regime where blind
 /// speculation rules misfire.
+///
+/// With non-zero `rate_on`/`rate_off` the degradation becomes an ON/OFF
+/// Markov process: a healthy machine degrades after Exp(`rate_on`) time and
+/// a degraded machine recovers after Exp(`rate_off`) time, so `frac` is only
+/// the *initial* state distribution.  Both rates zero (the default)
+/// reproduces the static scenario bit-for-bit — no flip events are ever
+/// scheduled and no extra RNG stream is consumed.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SlowdownConfig {
-    /// Probability a machine is degraded.
+    /// Probability a machine is degraded (at t = 0 when flips are enabled).
     pub frac: f64,
     /// Wall-clock multiplier on a degraded machine (1.0 = no degradation).
     pub factor: f64,
+    /// Exponential rate at which a healthy machine degrades (0 = never).
+    pub rate_on: f64,
+    /// Exponential rate at which a degraded machine recovers (0 = never).
+    pub rate_off: f64,
 }
 
 impl SlowdownConfig {
+    /// Static scenario (no ON/OFF flips) — the pre-flip constructor, kept
+    /// two-arg so existing call sites and specs are unchanged.
     pub fn new(frac: f64, factor: f64) -> Self {
-        SlowdownConfig { frac, factor }
+        SlowdownConfig { frac, factor, rate_on: 0.0, rate_off: 0.0 }
+    }
+
+    /// Add ON/OFF Markov transition rates to a static scenario.
+    pub fn with_rates(self, rate_on: f64, rate_off: f64) -> Self {
+        SlowdownConfig { rate_on, rate_off, ..self }
+    }
+
+    /// Whether the ON/OFF process is active (either rate positive).
+    #[inline]
+    pub fn flips_enabled(&self) -> bool {
+        self.rate_on > 0.0 || self.rate_off > 0.0
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -66,14 +90,29 @@ impl SlowdownConfig {
         if !(self.factor >= 1.0) {
             return Err(format!("slowdown factor must be >= 1, got {}", self.factor));
         }
+        if !(self.rate_on >= 0.0 && self.rate_on.is_finite()) {
+            return Err(format!("slowdown rate_on must be finite and >= 0, got {}", self.rate_on));
+        }
+        if !(self.rate_off >= 0.0 && self.rate_off.is_finite()) {
+            return Err(format!(
+                "slowdown rate_off must be finite and >= 0, got {}",
+                self.rate_off
+            ));
+        }
         Ok(())
     }
 }
 
-/// Parse a slowdown spec `FRACxFACTOR`, e.g. `"0.1x4.0"` (10% of machines
-/// run 4x slower).
+/// Parse a slowdown spec `FRACxFACTOR[@RATE_ON,RATE_OFF]`, e.g. `"0.1x4.0"`
+/// (10% of machines run 4x slower, statically) or `"0.1x4.0@0.02,0.05"`
+/// (same initial state, machines then degrade at rate 0.02 and recover at
+/// rate 0.05).
 pub fn parse_slowdown(s: &str) -> Result<SlowdownConfig, String> {
-    let (frac_s, factor_s) = s
+    let (static_s, rates_s) = match s.split_once('@') {
+        Some((a, b)) => (a, Some(b)),
+        None => (s, None),
+    };
+    let (frac_s, factor_s) = static_s
         .split_once('x')
         .ok_or_else(|| format!("slowdown '{s}': expected FRACxFACTOR, e.g. 0.1x4.0"))?;
     let frac: f64 = frac_s
@@ -84,15 +123,34 @@ pub fn parse_slowdown(s: &str) -> Result<SlowdownConfig, String> {
         .trim()
         .parse()
         .map_err(|_| format!("slowdown '{s}': bad factor '{factor_s}'"))?;
-    let sd = SlowdownConfig { frac, factor };
+    let mut sd = SlowdownConfig::new(frac, factor);
+    if let Some(rates_s) = rates_s {
+        let (on_s, off_s) = rates_s.split_once(',').ok_or_else(|| {
+            format!("slowdown '{s}': expected @RATE_ON,RATE_OFF after FRACxFACTOR")
+        })?;
+        let rate_on: f64 = on_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("slowdown '{s}': bad rate_on '{on_s}'"))?;
+        let rate_off: f64 = off_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("slowdown '{s}': bad rate_off '{off_s}'"))?;
+        sd = sd.with_rates(rate_on, rate_off);
+    }
     sd.validate()?;
     Ok(sd)
 }
 
-/// Render a slowdown spec back to `FRACxFACTOR` (round-trips through
-/// [`parse_slowdown`]).
+/// Render a slowdown spec back to `FRACxFACTOR[@RATE_ON,RATE_OFF]`
+/// (round-trips through [`parse_slowdown`]; the rate suffix is omitted when
+/// flips are disabled so static configs print exactly as before).
 pub fn format_slowdown(sd: &SlowdownConfig) -> String {
-    format!("{:?}x{:?}", sd.frac, sd.factor)
+    if sd.flips_enabled() {
+        format!("{:?}x{:?}@{:?},{:?}", sd.frac, sd.factor, sd.rate_on, sd.rate_off)
+    } else {
+        format!("{:?}x{:?}", sd.frac, sd.factor)
+    }
 }
 
 /// Parse a cluster scenario spec: comma-separated `COUNTxSPEED` groups,
@@ -205,6 +263,16 @@ impl MachinePool {
     #[inline]
     pub fn slowdown(&self, id: u32) -> f64 {
         self.slowdowns[id as usize]
+    }
+
+    /// Overwrite the hidden slowdown state of machine `id` — the ON/OFF flip
+    /// mutation.  Only the simulator's `SlowdownFlip` handler calls this;
+    /// running copies must be re-timed by the caller (`Cluster::flip_machine`)
+    /// since their wall-clock durations were computed from the old state.
+    #[inline]
+    pub fn set_slowdown(&mut self, id: u32, s: f64) {
+        debug_assert!(s >= 1.0, "slowdown must be >= 1, got {s}");
+        self.slowdowns[id as usize] = s;
     }
 
     /// Effective speed of machine `id`: advertised speed divided by the
@@ -367,11 +435,46 @@ mod tests {
     fn slowdown_spec_roundtrip_and_bounds() {
         let sd = parse_slowdown("0.1x4.0").unwrap();
         assert_eq!(sd, SlowdownConfig::new(0.1, 4.0));
+        assert!(!sd.flips_enabled());
         assert_eq!(parse_slowdown(&format_slowdown(&sd)).unwrap(), sd);
         assert!(parse_slowdown("1.5x2.0").is_err()); // frac > 1
         assert!(parse_slowdown("0.5x0.5").is_err()); // factor < 1
         assert!(parse_slowdown("0.5").is_err());
         assert!(parse_slowdown("axb").is_err());
+    }
+
+    #[test]
+    fn slowdown_flip_spec_roundtrip_and_bounds() {
+        let sd = parse_slowdown("0.1x4.0@0.02,0.05").unwrap();
+        assert_eq!(sd, SlowdownConfig::new(0.1, 4.0).with_rates(0.02, 0.05));
+        assert!(sd.flips_enabled());
+        assert_eq!(format_slowdown(&sd), "0.1x4.0@0.02,0.05");
+        assert_eq!(parse_slowdown(&format_slowdown(&sd)).unwrap(), sd);
+        // static spec stays the static format (no trailing @0.0,0.0)
+        assert_eq!(format_slowdown(&SlowdownConfig::new(0.1, 4.0)), "0.1x4.0");
+        // one-sided processes are legal (degrade-only / recover-only)
+        assert!(parse_slowdown("0.0x4.0@0.1,0.0").unwrap().flips_enabled());
+        assert!(parse_slowdown("1.0x4.0@0.0,0.1").unwrap().flips_enabled());
+        // malformed or out-of-range rate suffixes are rejected
+        assert!(parse_slowdown("0.1x4.0@0.02").is_err()); // missing rate_off
+        assert!(parse_slowdown("0.1x4.0@a,b").is_err());
+        assert!(parse_slowdown("0.1x4.0@-0.1,0.2").is_err());
+        assert!(parse_slowdown("0.1x4.0@0.1,-0.2").is_err());
+        assert!(SlowdownConfig::new(0.1, 4.0).with_rates(f64::NAN, 0.0).validate().is_err());
+        assert!(SlowdownConfig::new(0.1, 4.0).with_rates(0.0, f64::INFINITY).validate().is_err());
+    }
+
+    #[test]
+    fn set_slowdown_flips_effective_speed() {
+        let mut p = MachinePool::with_classes(&[MachineClass::new(2, 2.0)]);
+        assert_eq!(p.effective_speed(0), 2.0);
+        p.set_slowdown(0, 4.0);
+        assert_eq!(p.slowdown(0), 4.0);
+        assert_eq!(p.effective_speed(0), 0.5);
+        assert_eq!(p.speed(0), 2.0); // advertised speed is untouched
+        assert_eq!(p.effective_speed(1), 2.0); // other machines untouched
+        p.set_slowdown(0, 1.0);
+        assert_eq!(p.effective_speed(0), 2.0);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::stats::{Cdf, Pcg64};
 use super::event::{Event, EventQueue};
 use super::index::SchedIndex;
 use super::job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskArena, TaskRef};
-use super::machine::{Assignment, MachinePool};
+use super::machine::{Assignment, MachinePool, SlowdownConfig};
 
 /// Pre-sampled workload: the job specs plus the first-copy duration of every
 /// task (policy-independent).
@@ -70,6 +70,10 @@ pub struct Cluster {
     pub(crate) events: EventQueue,
     first_durations: Vec<Vec<f64>>,
     job_rngs: Vec<Pcg64>,
+    /// Per-machine ON/OFF dwell streams for the Markov slowdown process;
+    /// empty unless `cfg.slowdown` has flips enabled, so static-slowdown
+    /// and healthy runs consume no draws and stay bit-identical.
+    flip_rngs: Vec<Pcg64>,
     /// Completed jobs whose arena rows are not yet reusable (waiting on
     /// `stranded == 0`); drained by the live path's `add_job`.
     pending_recycle: Vec<JobId>,
@@ -111,6 +115,17 @@ impl Cluster {
             let mut sd_rng = Pcg64::new(cfg.seed, 0x510d);
             machines.sample_slowdowns(sd, &mut sd_rng);
         }
+        // ON/OFF flip dwells get their own root (enabling the flip axis
+        // must not perturb any existing draw), split per machine so every
+        // machine's dwell sequence is independent of the others' flip
+        // counts
+        let flip_rngs: Vec<Pcg64> = match &cfg.slowdown {
+            Some(sd) if sd.flips_enabled() => {
+                let mut root = Pcg64::new(cfg.seed, 0xf11f);
+                (0..machines.total()).map(|m| root.split(m as u64 + 1)).collect()
+            }
+            _ => Vec::new(),
+        };
         let mut index = SchedIndex::new(jobs.len());
         if cfg.sched_index && cfg.scheduler.uses_est_ordering() {
             // an est-srpt pipeline is active: maintain the est-keyed
@@ -119,7 +134,7 @@ impl Cluster {
             index.track_est_keys();
         }
         let events = EventQueue::with_kind(cfg.event_queue, cfg.slot_dt);
-        Cluster {
+        let mut cl = Cluster {
             machines,
             cfg,
             clock: 0.0,
@@ -134,13 +149,25 @@ impl Cluster {
             events,
             first_durations: workload.first_durations,
             job_rngs,
+            flip_rngs,
             pending_recycle: Vec::new(),
             total_machine_time: 0.0,
             speculative_launches: 0,
             outstanding_backups: 0,
             completed: Vec::new(),
             incomplete: 0,
+        };
+        // seed each machine's first flip from the dwell law of its
+        // *initial* hidden state (degraded machines wait on `rate_off`,
+        // healthy ones on `rate_on`; a zero exit rate is absorbing)
+        if let Some(sd) = cl.cfg.slowdown {
+            if sd.flips_enabled() {
+                for m in 0..cl.machines.total() as u32 {
+                    cl.schedule_flip(m, &sd);
+                }
+            }
         }
+        cl
     }
 
     /// Construct an empty cluster for live (coordinator-driven) operation.
@@ -205,20 +232,26 @@ impl Cluster {
     }
 
     /// A first copy crossed its detection checkpoint.  Returns true when
-    /// the reveal took effect (the copy is still running and its task not
-    /// done) — the caller then fires the scheduler's `on_reveal` hook.
-    fn reveal_copy(&mut self, t: TaskRef, copy: u32) -> bool {
+    /// the reveal took effect (the copy is still running, its task not
+    /// done, and the entry's re-time epoch is current) — the caller then
+    /// fires the scheduler's `on_reveal` hook.
+    fn reveal_copy(&mut self, t: TaskRef, copy: u32, epoch: u32) -> bool {
         let tid = self.tid(t);
         let cid = self.arena.copy_id(tid, copy);
-        if self.arena.done(tid) || self.arena.phase(cid) != CopyPhase::Running {
-            // the copy was killed before its checkpoint fired: this entry
-            // was stale-counted at the kill (unrevealed first copies
-            // strand their checkpoint too) — settle both ledgers
+        if self.arena.done(tid)
+            || self.arena.phase(cid) != CopyPhase::Running
+            || self.arena.epoch(cid) != epoch
+        {
+            // the copy was killed — or re-timed by a SlowdownFlip — before
+            // its checkpoint fired: this entry was stale-counted at that
+            // point (kills strand an unrevealed first copy's checkpoint;
+            // re-times strand and replace it) — settle both ledgers
             self.events.note_stale_popped();
             self.jobs[t.job.0 as usize].stranded -= 1;
             return false;
         }
         self.arena.set_revealed(cid);
+        self.stamp_obs_speed(cid);
         // a reveal can flip slot-gated threshold predicates (ESE's
         // sigma-test reads the revealed truth), so it dirties the planner
         self.sched_dirty = true;
@@ -227,6 +260,35 @@ impl Cluster {
             self.sync_est(t);
         }
         true
+    }
+
+    /// Stamp the copy's lifetime-average delivered throughput (work per
+    /// wall-clock unit) — the observed-speed estimator's only input beyond
+    /// the advertised class speed.  Called at the reveal and again at each
+    /// `SlowdownFlip` re-time, so the stamp is piecewise-constant between
+    /// cluster mutations: that is what keeps the wakeup planner's
+    /// "revealed estimates never rise on their own" horizon argument sound
+    /// for the observed variant too (DESIGN.md §14).  The remaining work
+    /// converts exactly (`remaining wall x current effective speed` —
+    /// the speed has been constant since the last re-time).
+    fn stamp_obs_speed(&mut self, cid: u32) {
+        let c = self.arena.copy(cid);
+        let elapsed = c.elapsed(self.clock);
+        if elapsed <= 0.0 {
+            return;
+        }
+        let v_eff = self.machines.effective_speed(c.machine);
+        let v = if self.arena.epoch(cid) == 0 {
+            // never re-timed: the effective speed has been constant for
+            // the copy's whole life, so the lifetime average *is* the
+            // current speed — stamping it exactly (no round-trip through
+            // work arithmetic) keeps the observed estimator bit-identical
+            // to the advertised one whenever nothing ever flipped
+            v_eff
+        } else {
+            (self.arena.work(cid) - c.true_remaining(self.clock) * v_eff).max(0.0) / elapsed
+        };
+        self.arena.set_obs_speed(cid, v);
     }
 
     /// Est-ordering re-key hook: task `t`'s contribution to the
@@ -259,9 +321,14 @@ impl Cluster {
             self.clock = time;
             match event {
                 Event::Arrival(id) => self.arrive(id),
-                Event::CopyFinish { task, copy } => self.copy_finished(task, copy),
-                Event::Checkpoint { task, copy } => {
-                    if self.reveal_copy(task, copy) {
+                Event::CopyFinish { task, copy, epoch } => self.copy_finished(task, copy, epoch),
+                Event::Checkpoint { task, copy, epoch } => {
+                    if self.reveal_copy(task, copy, epoch) {
+                        sched.on_reveal(self, task);
+                    }
+                }
+                Event::SlowdownFlip { machine } => {
+                    if let Some(task) = self.flip_machine(machine) {
                         sched.on_reveal(self, task);
                     }
                 }
@@ -396,15 +463,18 @@ impl Cluster {
         // host's effective speed — advertised class speed (1.0 everywhere
         // in the paper's homogeneous cluster) over the hidden slowdown
         let duration = work / self.machines.effective_speed(machine);
-        let k = self.arena.push_copy(tid, machine, now, duration);
+        let k = self.arena.push_copy(tid, machine, now, duration, work);
         debug_assert_eq!(k, copy_idx);
         let job = &mut self.jobs[ji];
-        self.events.push(now + duration, Event::CopyFinish { task: t, copy: copy_idx });
+        self.events
+            .push(now + duration, Event::CopyFinish { task: t, copy: copy_idx, epoch: 0 });
         // detection checkpoint on the first copy only (the paper monitors
         // the original; backups are already speculation)
         if copy_idx == 0 {
-            self.events
-                .push(now + detect_frac * duration, Event::Checkpoint { task: t, copy: 0 });
+            self.events.push(
+                now + detect_frac * duration,
+                Event::Checkpoint { task: t, copy: 0, epoch: 0 },
+            );
             if t.task >= job.next_unlaunched {
                 job.next_unlaunched = t.task + 1;
             }
@@ -496,6 +566,106 @@ impl Cluster {
         self.maybe_compact_events();
     }
 
+    /// Handle a `SlowdownFlip` event: toggle the machine's hidden ON/OFF
+    /// slowdown state, re-time the copy it is running (if any) under the
+    /// new effective speed, and schedule the machine's next flip.  Returns
+    /// the re-timed copy's task when that copy had already revealed — the
+    /// event loop then re-fires the scheduler's `on_reveal` hook, so
+    /// detection rules see the jumped remaining time and can reschedule
+    /// in flight.  Public so estimator and rule tests can stage mid-flight
+    /// degradation deterministically without running the event loop.
+    pub fn flip_machine(&mut self, machine: u32) -> Option<TaskRef> {
+        let Some(sd) = self.cfg.slowdown else {
+            debug_assert!(false, "SlowdownFlip without a slowdown config");
+            return None;
+        };
+        let v_old = self.machines.effective_speed(machine);
+        let degraded = self.machines.slowdown(machine) > 1.0;
+        self.machines.set_slowdown(machine, if degraded { 1.0 } else { sd.factor });
+        let v_new = self.machines.effective_speed(machine);
+        let redetect = self
+            .machines
+            .assignment(machine)
+            .and_then(|asg| self.retime_copy(asg, v_old, v_new));
+        // a flip is a cluster mutation: revealed remaining times (and the
+        // wall cost of anything launched here next) just moved, so any
+        // cached `next_decision_time` horizon — computed from the
+        // pre-flip state — must be invalidated; the dirty flag forces the
+        // next slot to fire, which drops the SlotGate's hint
+        self.sched_dirty = true;
+        self.schedule_flip(machine, &sd);
+        redetect
+    }
+
+    /// Re-time one running copy after its host's effective speed changed
+    /// from `v_old` to `v_new`.  The remaining wall-clock under the old
+    /// timeline converts to remaining *work* exactly (`x v_old` — the
+    /// speed was constant since the last re-time), and that work at
+    /// `v_new` fixes the new finish.  The superseded `CopyFinish` — and
+    /// the superseded `Checkpoint` of an unrevealed first copy — are
+    /// stale-counted through the same `note_stale` ledger a kill uses,
+    /// and fresh entries carry the bumped epoch.  Returns the task when
+    /// the copy had revealed (the caller's re-detect signal).
+    fn retime_copy(&mut self, asg: Assignment, v_old: f64, v_new: f64) -> Option<TaskRef> {
+        let t = asg.task;
+        let now = self.clock;
+        let tid = self.tid(t);
+        let cid = self.arena.copy_id(tid, asg.copy);
+        debug_assert_eq!(self.arena.phase(cid), CopyPhase::Running);
+        let c = self.arena.copy(cid);
+        let rem_work = c.true_remaining(now) * v_old;
+        let finish = now + rem_work / v_new;
+        self.arena.set_duration(cid, finish - c.start);
+        let epoch = self.arena.bump_epoch(cid);
+        let superseded = if asg.copy == 0 && !c.revealed { 2usize } else { 1 };
+        self.jobs[t.job.0 as usize].stranded += superseded as u32;
+        self.events.note_stale(superseded);
+        self.events.push(finish, Event::CopyFinish { task: t, copy: asg.copy, epoch });
+        if asg.copy == 0 && !c.revealed {
+            // the pending checkpoint moves to where the `detect_frac` work
+            // point now lands: work done so far is flip-invariant, so the
+            // instant derives from the re-timed finish and the stored
+            // work; it is >= now exactly when the copy is unrevealed, and
+            // <= finish always — the clamp only absorbs float round-off
+            let w = self.arena.work(cid);
+            let cp = finish - (1.0 - self.cfg.detect_frac) * w / v_new;
+            self.events.push(cp.max(now), Event::Checkpoint { task: t, copy: 0, epoch });
+        }
+        if c.revealed {
+            // refresh the observed-throughput stamp at this mutation point
+            // (the estimator may only see it move at mutation points)
+            self.stamp_obs_speed(cid);
+        }
+        if self.cfg.sched_index {
+            self.index.sync_task(&self.jobs[t.job.0 as usize], &self.arena, t);
+            // a revealed copy's est-key contribution is duration x speed —
+            // the re-timed duration just changed it
+            self.sync_est(t);
+        }
+        self.maybe_compact_events();
+        if c.revealed {
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    /// Draw the machine's next ON/OFF dwell from its dedicated stream and
+    /// push the flip event.  A zero exit rate makes the current state
+    /// absorbing (one-sided flip specs are legal); no stream exists when
+    /// flips are disabled, so static runs push nothing and draw nothing.
+    fn schedule_flip(&mut self, machine: u32, sd: &SlowdownConfig) {
+        if self.flip_rngs.is_empty() {
+            return;
+        }
+        let degraded = self.machines.slowdown(machine) > 1.0;
+        let rate = if degraded { sd.rate_off } else { sd.rate_on };
+        if rate > 0.0 {
+            let dwell = self.flip_rngs[machine as usize].exponential(rate);
+            self.events.push(self.clock + dwell, Event::SlowdownFlip { machine });
+        }
+    }
+
     /// Compact the event heap once stale (killed-copy) entries outnumber
     /// live ones.  Removes only events that would pop as no-ops, so the
     /// simulation is bit-identical with or without compaction; the heap
@@ -517,30 +687,38 @@ impl Cluster {
         // ledger — compaction is the other place (besides a stale pop)
         // where a queue reference to an arena row disappears.
         events.retain_live(|ev| match *ev {
-            Event::CopyFinish { task, copy } | Event::Checkpoint { task, copy } => {
+            Event::CopyFinish { task, copy, epoch } | Event::Checkpoint { task, copy, epoch } => {
                 let job = &mut jobs[task.job.0 as usize];
                 let cid = arena.copy_id(job.base + task.task, copy);
-                let live = arena.phase(cid) == CopyPhase::Running;
+                // an entry superseded by a SlowdownFlip re-time (stale
+                // epoch) is as dead as a killed copy's: both were
+                // stale-counted when they were stranded
+                let live =
+                    arena.phase(cid) == CopyPhase::Running && arena.epoch(cid) == epoch;
                 if !live {
                     job.stranded -= 1;
                 }
                 live
             }
-            Event::Arrival(_) => true,
+            Event::Arrival(_) | Event::SlowdownFlip { .. } => true,
         });
     }
 
     /// Handle a copy completing at the current clock.
-    fn copy_finished(&mut self, t: TaskRef, copy: u32) {
+    fn copy_finished(&mut self, t: TaskRef, copy: u32, epoch: u32) {
         let now = self.clock;
         let record_jobs = self.cfg.record_jobs;
         let gamma = self.cfg.gamma;
         let ji = t.job.0 as usize;
         let tid = self.tid(t);
         let cid = self.arena.copy_id(tid, copy);
-        if self.arena.done(tid) || self.arena.phase(cid) != CopyPhase::Running {
-            // stale event (sibling finished first / copy killed) that
-            // outlived compaction — settle the job's stranded ledger too
+        if self.arena.done(tid)
+            || self.arena.phase(cid) != CopyPhase::Running
+            || self.arena.epoch(cid) != epoch
+        {
+            // stale event (sibling finished first / copy killed / entry
+            // superseded by a SlowdownFlip re-time) that outlived
+            // compaction — settle the job's stranded ledger too
             self.events.note_stale_popped();
             self.jobs[ji].stranded -= 1;
             return;
@@ -793,11 +971,16 @@ impl Simulator {
                 events_processed += 1;
                 match event {
                     Event::Arrival(id) => self.cluster.arrive(id),
-                    Event::CopyFinish { task, copy } => {
-                        self.cluster.copy_finished(task, copy);
+                    Event::CopyFinish { task, copy, epoch } => {
+                        self.cluster.copy_finished(task, copy, epoch);
                     }
-                    Event::Checkpoint { task, copy } => {
-                        if self.cluster.reveal_copy(task, copy) {
+                    Event::Checkpoint { task, copy, epoch } => {
+                        if self.cluster.reveal_copy(task, copy, epoch) {
+                            self.scheduler.on_reveal(&mut self.cluster, task);
+                        }
+                    }
+                    Event::SlowdownFlip { machine } => {
+                        if let Some(task) = self.cluster.flip_machine(machine) {
                             self.scheduler.on_reveal(&mut self.cluster, task);
                         }
                     }
@@ -1120,5 +1303,168 @@ mod tests {
             (degraded.total_machine_time - 3.0 * healthy.total_machine_time).abs() < 1e-6,
             "machine time should triple"
         );
+    }
+
+    /// Pin the `SlowdownFlip` re-time arithmetic end to end on one copy:
+    /// degradation mid-flight stretches the duration and the pending
+    /// checkpoint exactly, the reveal on the re-timed checkpoint stamps
+    /// the observed throughput, recovery re-times again (returning the
+    /// re-detect signal and refreshing the stamp), and the copy finishes
+    /// at the final re-timed instant with every superseded queue entry
+    /// settled against the stranded ledger.
+    #[test]
+    fn flip_retimes_running_copy_exactly() {
+        use crate::cluster::machine::SlowdownConfig;
+        let mut cfg = small_cfg();
+        cfg.machines = 1;
+        cfg.detect_frac = 0.25;
+        cfg.scheduler = scheduler::SchedulerKind::Naive;
+        cfg.use_runtime = false;
+        // frac 0 + zero rates: no machine starts degraded and no dwell
+        // streams exist — the test drives `flip_machine` by hand
+        cfg.slowdown = Some(SlowdownConfig::new(0.0, 4.0));
+        let dist = crate::stats::Pareto::from_mean(1.0, 2.0);
+        let wl = Workload {
+            specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
+            first_durations: vec![vec![8.0]],
+        };
+        let sched = scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let mut driver = scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let mut cl = Simulator::new(cfg, wl, sched).cluster;
+        let t = TaskRef { job: JobId(0), task: 0 };
+        cl.advance_to(0.0, driver.as_mut()); // the arrival fires
+        assert!(cl.launch_copy(t));
+        assert_eq!(cl.copy(t, 0).duration, 8.0); // checkpoint pending at 2
+        cl.advance_to(1.0, driver.as_mut());
+        // healthy -> 4x degraded at t = 1: 7 remaining wall units are
+        // 7 work units, now delivered at speed 1/4 — finish at 29, and
+        // the 25%-work point (2 of 8) lands at 29 - 24 = 5
+        assert_eq!(cl.flip_machine(0), None, "an unrevealed copy never re-detects");
+        assert_eq!(cl.copy(t, 0).duration, 29.0);
+        let cid = cl.arena.copy_id(cl.tid(t), 0);
+        assert_eq!(cl.arena.epoch(cid), 1);
+        assert_eq!(cl.job(JobId(0)).stranded, 2, "superseded CopyFinish + Checkpoint");
+        // the superseded epoch-0 checkpoint (still at t = 2) pops as a
+        // settled no-op: no reveal, one stranded entry retired
+        cl.advance_to(4.9, driver.as_mut());
+        assert!(!cl.copy(t, 0).revealed);
+        assert_eq!(cl.job(JobId(0)).stranded, 1);
+        // the re-timed checkpoint reveals at t = 5 and stamps the copy's
+        // lifetime throughput: 2 work units over 5 wall units
+        cl.advance_to(5.0, driver.as_mut());
+        assert!(cl.copy(t, 0).revealed);
+        assert_eq!(cl.arena.obs_speed(cid), 0.4);
+        // recovery at t = 6: 23 remaining wall units at speed 1/4 are
+        // 5.75 work units, delivered at full speed — finish at 11.75;
+        // the revealed copy re-detects and the stamp refreshes to
+        // 2.25 work units over 6 wall units
+        cl.advance_to(6.0, driver.as_mut());
+        assert_eq!(cl.flip_machine(0), Some(t), "a revealed copy re-detects");
+        assert_eq!(cl.copy(t, 0).duration, 11.75);
+        assert_eq!(cl.arena.epoch(cid), 2);
+        assert_eq!(cl.arena.obs_speed(cid), 0.375);
+        // both superseded CopyFinish entries (at 8 and 29) pop as no-ops
+        // around the live finish at 11.75
+        cl.advance_to(40.0, driver.as_mut());
+        assert_eq!(cl.completed.len(), 1);
+        assert_eq!(cl.completed[0].flowtime, 11.75);
+        assert_eq!(cl.job(JobId(0)).stranded, 0, "every stale entry settled");
+        assert_eq!(cl.machines.idle(), 1);
+    }
+
+    /// The equivalence matrix with the ON/OFF flip process enabled: the
+    /// flips, dwell draws and re-times are a pure function of the
+    /// simulated system, so every event-queue backend x wakeup x index
+    /// combination produces the same run, bit for bit.
+    #[test]
+    fn flip_runs_identical_across_backends_wakeup_and_index() {
+        use crate::cluster::event::EventQueueKind;
+        use crate::cluster::machine::SlowdownConfig;
+        let run = |queue: EventQueueKind, wakeup: bool, sched_index: bool| {
+            let mut cfg = small_cfg();
+            cfg.horizon = 120.0;
+            cfg.scheduler = scheduler::SchedulerKind::Sda;
+            cfg.use_runtime = false;
+            cfg.slowdown = Some(SlowdownConfig::new(0.2, 3.0).with_rates(0.5, 1.0));
+            cfg.event_queue = queue;
+            cfg.wakeup = wakeup;
+            cfg.sched_index = sched_index;
+            let wl_cfg = WorkloadConfig::paper(0.3);
+            let wl = generator::generate(&wl_cfg, cfg.horizon, cfg.seed);
+            let sched = scheduler::build_for(&cfg, &wl_cfg, Some(&wl)).unwrap();
+            Simulator::new(cfg, wl, sched).run()
+        };
+        let reference = run(EventQueueKind::Calendar, false, false);
+        assert!(!reference.completed.is_empty());
+        for queue in [EventQueueKind::Calendar, EventQueueKind::BinaryHeap] {
+            for wakeup in [false, true] {
+                for sched_index in [false, true] {
+                    let res = run(queue, wakeup, sched_index);
+                    let tag = format!("{queue:?}/wakeup={wakeup}/index={sched_index}");
+                    assert_eq!(res.completed.len(), reference.completed.len(), "{tag}");
+                    assert_eq!(res.events_processed, reference.events_processed, "{tag}");
+                    assert_eq!(
+                        res.speculative_launches, reference.speculative_launches,
+                        "{tag}"
+                    );
+                    assert_eq!(
+                        res.total_machine_time.to_bits(),
+                        reference.total_machine_time.to_bits(),
+                        "{tag}"
+                    );
+                    for (a, b) in res.completed.iter().zip(&reference.completed) {
+                        assert_eq!(a.job, b.job, "{tag}");
+                        assert_eq!(a.flowtime.to_bits(), b.flowtime.to_bits(), "{tag}");
+                        assert_eq!(a.resource.to_bits(), b.resource.to_bits(), "{tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The flip axis is real and its zero point is exact: enabling
+    /// ON/OFF transitions adds events (flips plus re-timed entries) and
+    /// moves the simulated quantities, while zero rates reproduce the
+    /// static-slowdown run bit for bit (no dwell stream even exists).
+    #[test]
+    fn flips_change_the_run_and_zero_rates_do_not() {
+        use crate::cluster::machine::SlowdownConfig;
+        let run = |rates: Option<(f64, f64)>| {
+            let mut cfg = small_cfg();
+            cfg.horizon = 120.0;
+            cfg.scheduler = scheduler::SchedulerKind::Sda;
+            cfg.use_runtime = false;
+            let base = SlowdownConfig::new(0.2, 3.0);
+            cfg.slowdown = Some(match rates {
+                Some((on, off)) => base.with_rates(on, off),
+                None => base,
+            });
+            let wl_cfg = WorkloadConfig::paper(0.3);
+            let wl = generator::generate(&wl_cfg, cfg.horizon, cfg.seed);
+            let sched = scheduler::build_for(&cfg, &wl_cfg, Some(&wl)).unwrap();
+            Simulator::new(cfg, wl, sched).run()
+        };
+        let still = run(None);
+        let zero = run(Some((0.0, 0.0)));
+        let flipping = run(Some((0.5, 1.0)));
+        assert!(
+            flipping.events_processed > still.events_processed,
+            "flips must add events: {} vs {}",
+            flipping.events_processed,
+            still.events_processed
+        );
+        assert_ne!(
+            flipping.total_machine_time.to_bits(),
+            still.total_machine_time.to_bits(),
+            "flips must move machine time"
+        );
+        // zero rates ARE the static scenario
+        assert_eq!(zero.events_processed, still.events_processed);
+        assert_eq!(zero.total_machine_time.to_bits(), still.total_machine_time.to_bits());
+        assert_eq!(zero.completed.len(), still.completed.len());
+        for (a, b) in zero.completed.iter().zip(&still.completed) {
+            assert_eq!(a.flowtime.to_bits(), b.flowtime.to_bits());
+            assert_eq!(a.resource.to_bits(), b.resource.to_bits());
+        }
     }
 }

@@ -31,6 +31,14 @@ pub struct SimConfig {
     /// estimates that treat wall-clock as work (the paper's homogeneous
     /// assumption).
     pub speed_aware: bool,
+    /// Speed-aware estimators use the copy's **observed** throughput
+    /// (revealed work over elapsed wall, `estimator::SpeedAware::observed`)
+    /// instead of the advertised class speed once the copy's checkpoint has
+    /// revealed its true remaining time; pre-reveal both variants read the
+    /// advertised speed, so this is a no-op unless slowdown states (or
+    /// ON/OFF flips) make observed and advertised speeds diverge.  Ignored
+    /// when `speed_aware` is false.
+    pub observed_speed: bool,
     /// Simulation horizon in time units (paper: 1500).
     pub horizon: f64,
     /// Scheduling-slot length (the paper's slotted decision model).
@@ -111,6 +119,7 @@ impl Default for SimConfig {
             machine_classes: Vec::new(),
             slowdown: None,
             speed_aware: true,
+            observed_speed: false,
             horizon: 1500.0,
             slot_dt: 1.0,
             seed: 1,
@@ -134,7 +143,11 @@ impl Default for SimConfig {
             record_jobs: true,
             wakeup: true,
             sched_index: true,
-            event_queue: EventQueueKind::default(),
+            // SPECSIM_EVENT_QUEUE lets CI re-run the whole suite on the
+            // binary-heap reference backend without touching any test;
+            // both backends are bit-identical, so every pin (including
+            // the committed sweep snapshot) must hold under either value
+            event_queue: crate::util::env_or("SPECSIM_EVENT_QUEUE", EventQueueKind::default()),
         }
     }
 }
@@ -223,6 +236,9 @@ impl SimConfig {
                         Some(machine::parse_slowdown(doc.str(key).ok_or("slowdown: string")?)?)
                 }
                 "speed_aware" => cfg.speed_aware = doc.bool(key).ok_or("speed_aware: bool")?,
+                "observed_speed" => {
+                    cfg.observed_speed = doc.bool(key).ok_or("observed_speed: bool")?
+                }
                 "horizon" => cfg.horizon = doc.f64(key).ok_or("horizon: float")?,
                 "slot_dt" => cfg.slot_dt = doc.f64(key).ok_or("slot_dt: float")?,
                 "seed" => cfg.seed = doc.i64(key).ok_or("seed: int")? as u64,
@@ -296,6 +312,7 @@ impl SimConfig {
             let _ = writeln!(s, "slowdown = \"{}\"", machine::format_slowdown(sd));
         }
         let _ = writeln!(s, "speed_aware = {}", self.speed_aware);
+        let _ = writeln!(s, "observed_speed = {}", self.observed_speed);
         let _ = writeln!(s, "horizon = {:?}", self.horizon);
         let _ = writeln!(s, "slot_dt = {:?}", self.slot_dt);
         let _ = writeln!(s, "seed = {}", self.seed);
@@ -550,6 +567,33 @@ mod tests {
     }
 
     #[test]
+    fn slowdown_flip_rates_roundtrip_through_toml() {
+        let mut cfg = SimConfig::default();
+        cfg.slowdown = Some(SlowdownConfig::new(0.2, 3.0).with_rates(0.05, 0.1));
+        cfg.validate().unwrap();
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.slowdown, cfg.slowdown);
+        assert!(back.slowdown.unwrap().flips_enabled());
+        // rate suffix is reachable straight from TOML text
+        let cfg = SimConfig::from_toml("slowdown = \"0.2x3.0@0.05,0.1\"").unwrap();
+        assert_eq!(cfg.slowdown, Some(SlowdownConfig::new(0.2, 3.0).with_rates(0.05, 0.1)));
+        assert!(SimConfig::from_toml("slowdown = \"0.2x3.0@-1.0,0.1\"").is_err());
+        // negative rates are rejected at validate() too
+        let mut cfg = SimConfig::default();
+        cfg.slowdown = Some(SlowdownConfig::new(0.2, 3.0).with_rates(-0.05, 0.1));
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn observed_speed_flag_roundtrips() {
+        assert!(!SimConfig::default().observed_speed, "advertised speed is the default");
+        let cfg = SimConfig::from_toml("observed_speed = true").unwrap();
+        assert!(cfg.observed_speed);
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert!(back.observed_speed);
+    }
+
+    #[test]
     fn sched_index_flag_roundtrips() {
         assert!(SimConfig::default().sched_index, "index path is the default");
         let cfg = SimConfig::from_toml("sched_index = false").unwrap();
@@ -560,11 +604,13 @@ mod tests {
 
     #[test]
     fn event_queue_key_roundtrips() {
-        assert_eq!(
-            SimConfig::default().event_queue,
-            EventQueueKind::Calendar,
-            "calendar backend is the default"
-        );
+        // the default honors the SPECSIM_EVENT_QUEUE CI override (the
+        // both-backends test pass); unset it is the calendar queue
+        let expected = crate::util::env_or("SPECSIM_EVENT_QUEUE", EventQueueKind::Calendar);
+        assert_eq!(SimConfig::default().event_queue, expected);
+        if std::env::var_os("SPECSIM_EVENT_QUEUE").is_none() {
+            assert_eq!(expected, EventQueueKind::Calendar, "calendar backend is the default");
+        }
         let cfg = SimConfig::from_toml("event_queue = \"binary-heap\"").unwrap();
         assert_eq!(cfg.event_queue, EventQueueKind::BinaryHeap);
         let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();

@@ -41,11 +41,17 @@
 //! | [`Revealed`] | yes | no | SCA/SDA/ESE with `speed_aware = false` |
 //! | [`SpeedAware::blind`] | no | yes | Mantri, LATE (default) |
 //! | [`SpeedAware::revealed`] | yes | yes | SCA/SDA/ESE (default) |
+//! | [`SpeedAware::observed`] | yes | yes + measured | SCA/SDA/ESE with `observed_speed` |
 //!
 //! [`for_policy`] maps a config to the right row.  On the paper's
 //! homogeneous speed-1.0 cluster every row of a column is identical, so
 //! the default (`speed_aware = true`) reproduces the paper's numbers
-//! exactly while remaining correct under heterogeneity.
+//! exactly while remaining correct under heterogeneity.  The observed
+//! variant additionally distrusts that a host will keep its advertised
+//! speed: it projects a revealed copy's remaining wall by the host's
+//! *measured* lifetime throughput ([`CopyObs::observed`]), which is what
+//! reacts to ON/OFF slowdown flips; with no slowdown it measures exactly
+//! the advertised speed and collapses to [`SpeedAware::revealed`].
 //!
 //! ## Units
 //!
@@ -123,18 +129,30 @@ pub struct CopyObs<'a> {
     pub revealed_wall: f64,
     /// Advertised class speed of the copy's host (public hardware fact).
     pub speed: f64,
+    /// The copy's lifetime-average delivered throughput (work per
+    /// wall-clock unit), stamped by the simulator at the detection
+    /// checkpoint and refreshed at `SlowdownFlip` re-times; NaN until
+    /// revealed.  This is the observable a real master reads from a
+    /// task's progress counters (progress score over elapsed — exactly
+    /// LATE's measurement), so it sits inside the information boundary
+    /// even though the simulator computes it from its own ground truth;
+    /// it is piecewise-constant between cluster mutations by
+    /// construction (DESIGN.md §14).
+    pub observed: f64,
 }
 
 /// Observe copy `copy` of task `t` under the contract above.
 pub fn observe(cl: &Cluster, t: TaskRef, copy: usize) -> CopyObs<'_> {
     let job = cl.job(t.job);
-    let c = cl.copy(t, copy as u32);
+    let cid = cl.arena.copy_id(cl.tid(t), copy as u32);
+    let c = cl.arena.copy(cid);
     CopyObs {
         dist: &job.spec.dist,
         elapsed: c.elapsed(cl.clock),
         revealed: c.revealed,
         revealed_wall: if c.revealed { c.true_remaining(cl.clock) } else { f64::NAN },
         speed: cl.machines.speed(c.machine),
+        observed: cl.arena.obs_speed(cid),
     }
 }
 
@@ -305,12 +323,18 @@ pub trait RemainingTime {
 /// `instrumented` = the policy owns the paper's `s_i` checkpoint
 /// instrumentation (SCA/SDA/ESE — true) or is a blind baseline
 /// (Mantri/LATE — false); `cfg.speed_aware` selects the class-speed-aware
-/// variant (the default; a no-op on homogeneous speed-1.0 clusters).
+/// variant (the default; a no-op on homogeneous speed-1.0 clusters), and
+/// `cfg.observed_speed` additionally swaps the revealed conversion to the
+/// measured-throughput projection ([`SpeedAware::observed`]).  The
+/// observed flag has no uninstrumented row — throughput is only measured
+/// at the checkpoint, which blind baselines do not own — so Mantri/LATE
+/// keep [`SpeedAware::blind`].
 pub fn for_policy(cfg: &SimConfig, instrumented: bool) -> Box<dyn RemainingTime> {
     match (instrumented, cfg.speed_aware) {
         (false, false) => Box::new(Blind),
         (false, true) => Box::new(SpeedAware::blind()),
         (true, false) => Box::new(Revealed),
+        (true, true) if cfg.observed_speed => Box::new(SpeedAware::observed()),
         (true, true) => Box::new(SpeedAware::revealed()),
     }
 }
@@ -560,13 +584,64 @@ mod tests {
         assert!(Blind.copy_rate_flip_time(&cl, t, 0, target).is_some());
     }
 
+    /// The observed-speed variant is the advertised one until a throughput
+    /// stamp exists (or when the stamp says the host kept its advertised
+    /// speed), and inflates every revealed estimate by `1/eta` once the
+    /// stamp reports a degraded host.
+    #[test]
+    fn observed_variant_discounts_by_stamped_throughput() {
+        let mut cl = cluster_with(vec![MachineClass::new(1, 1.0)], 4.0);
+        cl.clock = 1.0;
+        let t = task0();
+        let adv = SpeedAware::revealed();
+        let obs = SpeedAware::observed();
+        // pre-reveal: both fall back to the conditional-Pareto branch
+        assert_eq!(obs.task_remaining_work(&cl, t), adv.task_remaining_work(&cl, t));
+        reveal0(&mut cl);
+        // revealed but no stamp (NaN): efficiency falls back to 1
+        let cid = cl.arena.copy_id(cl.tid(t), 0);
+        assert!(cl.arena.obs_speed(cid).is_nan());
+        assert_eq!(obs.task_remaining_wall(&cl, t), adv.task_remaining_wall(&cl, t));
+        // a stamp at the advertised speed is the identity...
+        cl.arena.set_obs_speed(cid, 1.0);
+        assert_eq!(obs.task_remaining_work(&cl, t), adv.task_remaining_work(&cl, t));
+        assert_eq!(obs.task_prob_exceeds(&cl, t, 3.5), adv.task_prob_exceeds(&cl, t, 3.5));
+        // ...and a stamp above it clamps to 1 (slowdowns never speed up)
+        cl.arena.set_obs_speed(cid, 2.0);
+        assert_eq!(obs.task_remaining_wall(&cl, t), adv.task_remaining_wall(&cl, t));
+        // a host measured at half speed doubles both projections:
+        // advertised sees 3 remaining (4 - 1 elapsed), observed sees 6
+        cl.arena.set_obs_speed(cid, 0.5);
+        assert_eq!(adv.task_remaining_work(&cl, t), 3.0);
+        assert_eq!(obs.task_remaining_work(&cl, t), 6.0);
+        assert_eq!(obs.task_remaining_wall(&cl, t), 6.0);
+        // the threshold predicate trips where the advertised one does not
+        assert_eq!(adv.task_prob_exceeds(&cl, t, 4.0), 0.0);
+        assert_eq!(obs.task_prob_exceeds(&cl, t, 4.0), 1.0);
+        // revealed flip queries stay `None`: the stamp only moves at
+        // cluster mutations, so the inflated estimate still decays
+        assert_eq!(obs.copy_prob_flip_time(&cl, t, 0, 4.0, 0.25), None);
+        assert_eq!(obs.copy_work_flip_time(&cl, t, 0, 4.0), None);
+        assert_eq!(obs.copy_rate_flip_time(&cl, t, 0, 0.5), None);
+    }
+
     #[test]
     fn for_policy_maps_config() {
         let mut cfg = SimConfig::default();
         assert!(cfg.speed_aware);
+        assert!(!cfg.observed_speed);
         assert_eq!(for_policy(&cfg, true).name(), "speed_aware");
         assert_eq!(for_policy(&cfg, false).name(), "speed_aware_blind");
+        cfg.observed_speed = true;
+        assert_eq!(for_policy(&cfg, true).name(), "speed_aware_observed");
+        assert_eq!(
+            for_policy(&cfg, false).name(),
+            "speed_aware_blind",
+            "uninstrumented rules never measure throughput"
+        );
         cfg.speed_aware = false;
+        // observed is a refinement of speed-aware: without the base flag
+        // the naive estimators run, observed or not
         assert_eq!(for_policy(&cfg, true).name(), "revealed");
         assert_eq!(for_policy(&cfg, false).name(), "blind");
     }

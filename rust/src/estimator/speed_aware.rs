@@ -18,34 +18,78 @@
 //! division removes the inflation entirely, suppressing the false positive
 //! a unit-naive estimator would raise.  See the `estimator_slowdown`
 //! integration tests.
+//!
+//! ## The observed-speed refinement
+//!
+//! Under an ON/OFF Markov slowdown (`SlowdownFlip` events) the revealed
+//! remaining wall `r` is only the truth *if the host keeps its current
+//! speed* — the simulator re-times it at every flip.  [`SpeedAware::observed`]
+//! therefore discounts `r` by the host's observed efficiency: the ratio of
+//! its measured lifetime throughput ([`CopyObs::observed`](super::CopyObs),
+//! stamped at the checkpoint and refreshed at re-times) to its advertised
+//! speed.  A host that has delivered half its advertised speed is
+//! projected to keep doing so, inflating both the wall and the work
+//! estimate by 2x.  The efficiency is clamped to `(0, 1]` (slowdowns
+//! never speed a host up) and is exactly 1 whenever nothing ever flipped,
+//! so the variant is bit-identical to [`SpeedAware::revealed`] on every
+//! static scenario with healthy hosts.  Because the stamp only moves at
+//! cluster mutations, the revealed estimate still decays between
+//! mutations and the `None` wakeup-horizon arguments below stay sound.
 
 use crate::cluster::job::TaskRef;
 use crate::cluster::sim::Cluster;
 
-use super::{flip_guard, observe, RemainingTime};
+use super::{flip_guard, observe, CopyObs, RemainingTime};
 
 /// Class-speed-corrected estimator; `reveal` selects whether the paper's
 /// `s_i`-checkpoint revelation is used (SCA/SDA/ESE) or not (a
-/// speed-aware Mantri/LATE baseline).
+/// speed-aware Mantri/LATE baseline); `observed` additionally projects
+/// revealed remaining times by the host's measured throughput.
 pub struct SpeedAware {
     reveal: bool,
+    observed: bool,
 }
 
 impl SpeedAware {
     /// Speed-corrected conditional-Pareto estimates only (baselines).
     pub fn blind() -> Self {
-        SpeedAware { reveal: false }
+        SpeedAware { reveal: false, observed: false }
     }
 
     /// Speed-corrected with post-checkpoint truth (the paper's algorithms).
     pub fn revealed() -> Self {
-        SpeedAware { reveal: true }
+        SpeedAware { reveal: true, observed: false }
+    }
+
+    /// Like [`SpeedAware::revealed`], but the revealed remaining wall is
+    /// projected by the host's *measured* lifetime throughput instead of
+    /// trusting the advertised speed to persist (see the module docs).
+    pub fn observed() -> Self {
+        SpeedAware { reveal: true, observed: true }
+    }
+
+    /// Observed efficiency of the copy's host in `(0, 1]`: measured
+    /// lifetime throughput over advertised speed.  1 unless this is the
+    /// observed variant and a usable stamp exists; clamped at 1 because a
+    /// slowdown can only ever slow a host down.
+    fn efficiency(&self, o: &CopyObs) -> f64 {
+        if !self.observed {
+            return 1.0;
+        }
+        let eta = o.observed / o.speed;
+        if eta.is_finite() && eta > 0.0 {
+            eta.min(1.0)
+        } else {
+            1.0
+        }
     }
 }
 
 impl RemainingTime for SpeedAware {
     fn name(&self) -> &'static str {
-        if self.reveal {
+        if self.observed {
+            "speed_aware_observed"
+        } else if self.reveal {
             "speed_aware"
         } else {
             "speed_aware_blind"
@@ -55,7 +99,7 @@ impl RemainingTime for SpeedAware {
     fn copy_remaining_work(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
         let o = observe(cl, t, copy);
         if self.reveal && o.revealed {
-            o.revealed_wall * o.speed
+            o.revealed_wall * o.speed / self.efficiency(&o)
         } else {
             o.dist.mean_remaining(o.elapsed * o.speed)
         }
@@ -64,7 +108,7 @@ impl RemainingTime for SpeedAware {
     fn copy_remaining_wall(&self, cl: &Cluster, t: TaskRef, copy: usize) -> f64 {
         let o = observe(cl, t, copy);
         if self.reveal && o.revealed {
-            o.revealed_wall
+            o.revealed_wall / self.efficiency(&o)
         } else {
             o.dist.mean_remaining(o.elapsed * o.speed) / o.speed
         }
@@ -73,7 +117,7 @@ impl RemainingTime for SpeedAware {
     fn copy_prob_exceeds(&self, cl: &Cluster, t: TaskRef, copy: usize, a: f64) -> f64 {
         let o = observe(cl, t, copy);
         if self.reveal && o.revealed {
-            if o.revealed_wall * o.speed > a {
+            if o.revealed_wall * o.speed / self.efficiency(&o) > a {
                 1.0
             } else {
                 0.0

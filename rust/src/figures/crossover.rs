@@ -1,0 +1,151 @@
+//! Estimator crossover under the ON/OFF Markov slowdown: mean flowtime of
+//! the blind / advertised / observed estimator variants (all driving the
+//! same SDA detection rule) as the flip rate grows.
+//!
+//! The three variants tease the scenario apart along both axes:
+//!
+//! * **blind** (`--no-speed-aware`) conflates class speed with
+//!   straggling — the heterogeneous cluster separates it from the
+//!   speed-aware pair at every flip rate, including zero;
+//! * **advertised** (the default speed-aware estimator) trusts the
+//!   revealed remaining wall, which a flip silently re-times — sound in
+//!   the static regime, increasingly stale as hosts churn;
+//! * **observed** (`--observed-speed`) projects the revealed wall by the
+//!   host's measured lifetime throughput, distrusting hosts with a
+//!   degraded track record (DESIGN.md §14).
+//!
+//! The zero-rate column doubles as the static anchor: observed and
+//! advertised coincide there on healthy hosts, so any gap between the
+//! curves is purchased entirely by the flip process.
+
+use std::path::Path;
+
+use crate::cluster::machine::{MachineClass, SlowdownConfig};
+use crate::config::SimConfig;
+use crate::experiment::{ClusterScenario, ExperimentSpec, LoadPoint, PolicyVariant, Runner};
+use crate::metrics::report;
+use crate::scheduler::SchedulerKind;
+
+use super::Scale;
+
+/// The swept ON rates (healthy -> degraded); the OFF rate is twice the ON
+/// rate so the stationary degraded fraction stays at 1/3 while the churn
+/// frequency grows — the axis isolates non-stationarity, not degradation
+/// volume.
+pub const FLIP_RATES: [f64; 4] = [0.0, 0.1, 0.4, 1.6];
+
+/// Multiplier from ON rate to OFF rate (see [`FLIP_RATES`]).
+pub const OFF_RATE_FACTOR: f64 = 2.0;
+
+/// One flip-rate column of the sweep: the three estimator variants on the
+/// identical heterogeneous, flip-degraded cluster and workload.
+pub fn spec(scale: Scale, rate_on: f64) -> ExperimentSpec {
+    let mut cfg = SimConfig::default();
+    let m = scale.machines(300);
+    cfg.horizon = scale.horizon(400.0);
+    cfg.use_runtime = false;
+    let mut spec = ExperimentSpec::new(format!("crossover@{rate_on}"), cfg);
+    // two public speed classes separate blind from advertised; the hidden
+    // ON/OFF process (3x degradation) separates advertised from observed
+    spec.scenario = ClusterScenario::heterogeneous(vec![
+        MachineClass::new(m - m / 3, 1.0),
+        MachineClass::new(m / 3, 0.5),
+    ])
+    .with_slowdown(
+        SlowdownConfig::new(1.0 / 3.0, 3.0).with_rates(rate_on, OFF_RATE_FACTOR * rate_on),
+    );
+    spec.policies = vec![
+        PolicyVariant::patched("blind", SchedulerKind::Sda, |c| c.speed_aware = false),
+        PolicyVariant::patched("advertised", SchedulerKind::Sda, |_| {}),
+        PolicyVariant::patched("observed", SchedulerKind::Sda, |c| c.observed_speed = true),
+    ];
+    let lambda = 0.5 * m as f64 / 300.0;
+    spec.loads = vec![LoadPoint::lambda(lambda)];
+    spec.seeds = vec![1, 2, 3];
+    spec
+}
+
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for rate in FLIP_RATES {
+        let mut spec = spec(scale, rate);
+        spec.base.artifacts_dir = artifacts_dir.to_string();
+        spec.threads = threads;
+        let sweep = Runner::run(&spec)?;
+        if series.is_empty() {
+            series = sweep
+                .policies
+                .iter()
+                .map(|(label, _)| (label.clone(), Vec::new()))
+                .collect();
+        }
+        print!("crossover (rate_on={rate}):");
+        for (pi, (label, _)) in sweep.policies.iter().enumerate() {
+            let flow = sweep.merged(pi, 0).mean_flowtime();
+            series[pi].1.push((rate, flow));
+            print!("  {label} {flow:.3}");
+        }
+        println!();
+    }
+    // acceptance telemetry at the churn end of the axis: the observed
+    // estimator should beat both rivals once hosts flip faster than the
+    // advertised picture can stay true
+    let at_max = |pi: usize| series[pi].1.last().map_or(f64::NAN, |&(_, y)| y);
+    let (blind, advertised, observed) = (at_max(0), at_max(1), at_max(2));
+    println!(
+        "crossover at rate_on={}: observed {} (vs advertised {}, blind {}) — observed {}",
+        FLIP_RATES[FLIP_RATES.len() - 1],
+        observed,
+        advertised,
+        blind,
+        if observed < advertised && observed < blind { "strictly best" } else { "NOT best" },
+    );
+    report::write_file(
+        out_dir.join("crossover_flowtime_vs_fliprate.csv"),
+        &report::xy_csv(&series),
+    )
+    .map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builds_all_flip_columns() {
+        for rate in FLIP_RATES {
+            let spec = spec(Scale(0.1), rate);
+            spec.validate().unwrap();
+            assert_eq!(spec.policies.len(), 3);
+            let sd = spec.scenario.slowdown.unwrap();
+            assert_eq!(sd.rate_on, rate);
+            assert_eq!(sd.rate_off, OFF_RATE_FACTOR * rate);
+            assert_eq!(sd.flips_enabled(), rate > 0.0);
+            // the variants differ only in the estimator configuration
+            let cfgs: Vec<SimConfig> = spec
+                .policies
+                .iter()
+                .map(|p| {
+                    let mut c = spec.base.clone();
+                    spec.scenario.apply(&mut c);
+                    if let Some(patch) = &p.patch {
+                        patch(&mut c);
+                    }
+                    c.validate().unwrap();
+                    c
+                })
+                .collect();
+            assert!(!cfgs[0].speed_aware);
+            assert!(cfgs[1].speed_aware && !cfgs[1].observed_speed);
+            assert!(cfgs[2].speed_aware && cfgs[2].observed_speed);
+            assert_eq!(cfgs[0].machines, cfgs[1].machines);
+            assert!(cfgs[0].machines >= 20);
+        }
+    }
+}

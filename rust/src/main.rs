@@ -7,7 +7,7 @@
 //!   sweep      run a scheduler x lambda x seed grid through the
 //!              experiment engine and write the cell table as CSV
 //!   figure     regenerate a paper figure's data series (fig1..fig6,
-//!              threshold, or `all`)
+//!              threshold, crossover, or `all`)
 //!   threshold  print the analytic cutoff lambda^U for a cluster
 //!   trace      generate a workload trace CSV
 //!   serve      run the live master and feed it a Poisson client
@@ -37,7 +37,7 @@ COMMANDS
   compare    [--policies a,b,c] [--threads N] [same flags as simulate]
   sweep      [--policies a,b,c] [--lambdas 2,4,6] [--seeds 1,2,3]
              [--threads N] [--out FILE] [same flags as simulate]
-  figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|all>
+  figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|crossover|all>
              [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
              [--threads N]
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
@@ -73,6 +73,16 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
   --slowdown FRACxFACTOR            server-dependent slowdown: each machine
                                     degraded with prob FRAC runs FACTORx
                                     slower (hidden from schedulers)
+  --slowdown-flip RATE_ON,RATE_OFF  ON/OFF Markov slowdown: healthy machines
+                                    degrade at exp rate RATE_ON, degraded
+                                    ones recover at RATE_OFF (needs a
+                                    --slowdown base; running copies are
+                                    re-timed in flight; a 0 rate makes that
+                                    state absorbing)
+  --observed-speed                  checkpoint-instrumented estimators
+                                    project revealed remaining times by the
+                                    host's measured lifetime throughput
+                                    instead of its advertised speed
   --no-speed-aware                  estimators ignore advertised host speeds
                                     (the unit-naive homogeneous assumption)
   --no-sched-index                  slot hooks use the retained naive full
@@ -146,6 +156,19 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
     }
     if let Some(spec) = args.str("slowdown") {
         cfg.slowdown = Some(machine::parse_slowdown(spec)?);
+    }
+    if let Some(spec) = args.str("slowdown-flip") {
+        let rates: Vec<f64> = parse_list(spec, "--slowdown-flip")?;
+        let [rate_on, rate_off] = rates[..] else {
+            return Err("--slowdown-flip RATE_ON,RATE_OFF takes exactly two rates".to_string());
+        };
+        let base = cfg
+            .slowdown
+            .ok_or("--slowdown-flip needs a --slowdown (or TOML) base to flip")?;
+        cfg.slowdown = Some(base.with_rates(rate_on, rate_off));
+    }
+    if args.has("observed-speed") {
+        cfg.observed_speed = true;
     }
     if args.has("no-speed-aware") {
         cfg.speed_aware = false;
@@ -250,6 +273,7 @@ fn run() -> Result<(), String> {
         rest,
         &[
             "no-runtime",
+            "observed-speed",
             "no-speed-aware",
             "no-sched-index",
             "no-wakeup",
@@ -307,7 +331,7 @@ fn run() -> Result<(), String> {
             let id = args
                 .positional()
                 .first()
-                .ok_or("figure: which one? (fig1..fig6, threshold, all)")?
+                .ok_or("figure: which one? (fig1..fig6, threshold, crossover, all)")?
                 .clone();
             let out_dir = PathBuf::from(args.string("out-dir", "results"));
             let artifacts_dir = args.string("artifacts-dir", "artifacts");
@@ -321,6 +345,7 @@ fn run() -> Result<(), String> {
                 "fig5" => figures::fig5::run(&out_dir, &artifacts_dir, scale, threads)?,
                 "fig6" => figures::fig6::run(&out_dir, &artifacts_dir, scale, threads)?,
                 "threshold" => figures::threshold::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "crossover" => figures::crossover::run(&out_dir, &artifacts_dir, scale, threads)?,
                 "all" => figures::run_all(&out_dir, &artifacts_dir, scale, threads)?,
                 other => return Err(format!("unknown figure '{other}'")),
             }
@@ -395,16 +420,37 @@ fn run() -> Result<(), String> {
                     c.heap.peak_rss_bytes.map_or("n/a".into(), |b| format!("{}MiB", b >> 20)),
                 );
             })?;
-            let doc = specsim::util::bench::throughput_json(&cells, &scale, quick);
+            println!("flip cell (sda, light): ON/OFF Markov flips vs static slowdown");
+            let flips = specsim::util::bench::run_flip_suite(quick, |c| {
+                println!(
+                    "{:<10} {:>5} {:>8.3} {:>7} {:>13.0} {:>13.0} {:>7.2}x  ({})",
+                    c.policy,
+                    c.machines,
+                    c.lambda,
+                    c.load,
+                    c.flips.events_per_sec,
+                    c.static_run.events_per_sec,
+                    c.overhead(),
+                    c.slowdown,
+                );
+            })?;
+            let doc = specsim::util::bench::throughput_json(&cells, &scale, &flips, quick);
             report::write_file(&out, &format!("{doc}\n")).map_err(|e| e.to_string())?;
             if let Some(md) = args.str("md") {
                 let mut table = specsim::util::bench::throughput_markdown(&cells);
                 table.push('\n');
                 table.push_str(&specsim::util::bench::scale_markdown(&scale));
+                table.push('\n');
+                table.push_str(&specsim::util::bench::flip_markdown(&flips));
                 report::write_file(md, &table).map_err(|e| e.to_string())?;
                 println!("wrote the EXPERIMENTS.md-ready tables to {md}");
             }
-            println!("wrote {} cells (+{} scale) to {out}", cells.len(), scale.len());
+            println!(
+                "wrote {} cells (+{} scale, +{} flip) to {out}",
+                cells.len(),
+                scale.len(),
+                flips.len()
+            );
             if args.has("check-wakeup") {
                 specsim::util::bench::check_wakeup_gate(&cells)?;
                 println!("wakeup gate passed: (naive, light, M=4000) skips >= 50% at >= 2x");

@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use crate::analysis::threshold;
 use crate::cluster::event::EventQueueKind;
 use crate::cluster::generator;
+use crate::cluster::machine::SlowdownConfig;
 use crate::cluster::sim::{SimResult, Simulator, Workload};
 use crate::config::{SimConfig, WorkloadConfig};
 use crate::scheduler::{self, SchedulerKind};
@@ -89,7 +90,10 @@ pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Meas
 /// `null` elsewhere) and the `scale_cells` array — the (naive, light)
 /// M ∈ {10^5, 10^6} cells timed per event-queue backend
 /// (calendar vs binary heap).
-pub const BENCH_SCHEMA: &str = "specsim-bench-v3";
+/// v4: the `flip_cells` array — the (sda, light, M = 4000) cell with the
+/// ON/OFF Markov slowdown process enabled vs the static slowdown
+/// scenario, pricing the `SlowdownFlip` kill/re-insert traffic.
+pub const BENCH_SCHEMA: &str = "specsim-bench-v4";
 
 /// The suite's machine-count axis.
 pub const SUITE_MACHINES: [usize; 2] = [500, 4000];
@@ -474,6 +478,115 @@ pub fn run_scale_suite(
     Ok(cells)
 }
 
+// ----- the flip-enabled cell ---------------------------------------------
+
+/// The (sda, light) cell with the ON/OFF Markov slowdown process running
+/// vs the static slowdown scenario on the identical pre-sampled workload
+/// (PR 7).  Flip runs pop strictly more events (the `SlowdownFlip`
+/// stream plus the re-inserted finishes/checkpoints it forces), so the
+/// honest overhead metric is the wall-clock ratio, not events/sec.
+#[derive(Clone, Debug)]
+pub struct FlipCell {
+    pub policy: String,
+    pub load: &'static str,
+    pub lambda: f64,
+    pub machines: usize,
+    pub slot_dt: f64,
+    /// `frac x factor @ rate_on, rate_off` of the flip run's scenario.
+    pub slowdown: String,
+    /// Hot path (indexed + wakeup) with flips enabled.
+    pub flips: ThroughputRun,
+    /// The same scenario with zero transition rates (static degradation).
+    pub static_run: ThroughputRun,
+}
+
+impl FlipCell {
+    /// Wall-clock cost of the flip machinery: `flips / static` (1.0 = the
+    /// non-stationary process is free; expect a modest premium — the flip
+    /// run genuinely does more work).
+    pub fn overhead(&self) -> f64 {
+        self.flips.wall_secs / self.static_run.wall_secs.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("policy".into(), Json::Str(self.policy.clone()));
+        m.insert("load".into(), Json::Str(self.load.to_string()));
+        m.insert("lambda".into(), Json::Num(self.lambda));
+        m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("slot_dt".into(), Json::Num(self.slot_dt));
+        m.insert("slowdown".into(), Json::Str(self.slowdown.clone()));
+        m.insert("flips".into(), self.flips.to_json());
+        m.insert("static".into(), self.static_run.to_json());
+        m.insert("overhead".into(), Json::Num(self.overhead()));
+        Json::Obj(m)
+    }
+}
+
+/// Run the flip cell: (sda, light, M = 4000) under
+/// `0.2x3.0 @ 0.5, 1.0` vs the rate-free `0.2x3.0` static scenario.
+/// SDA on purpose — its reveal hook is what the flip handler re-fires,
+/// so the cell prices the full in-flight rescheduling path, not just the
+/// queue churn.
+pub fn run_flip_suite(
+    quick: bool,
+    mut progress: impl FnMut(&FlipCell),
+) -> Result<Vec<FlipCell>, String> {
+    let horizon = suite_horizon(quick);
+    let machines = SUITE_MACHINES[1];
+    let mut base = SimConfig::default();
+    base.machines = machines;
+    base.horizon = horizon;
+    base.use_runtime = false;
+    base.slot_dt = WAKEUP_SLOT_DT;
+    let wl_cfg = WorkloadConfig::paper(LIGHT_LAMBDA);
+    let workload = generator::generate(&wl_cfg, horizon, base.seed);
+    let sd = SlowdownConfig::new(0.2, 3.0).with_rates(0.5, 1.0);
+    let mut flip_cfg = base.clone();
+    flip_cfg.slowdown = Some(sd);
+    let flips = time_simulation(&flip_cfg, &wl_cfg, workload.clone(), SchedulerKind::Sda, true, true)?;
+    let mut static_cfg = base;
+    static_cfg.slowdown = Some(SlowdownConfig::new(0.2, 3.0));
+    let static_run =
+        time_simulation(&static_cfg, &wl_cfg, workload, SchedulerKind::Sda, true, true)?;
+    let cell = FlipCell {
+        policy: SchedulerKind::Sda.to_string(),
+        load: "light",
+        lambda: LIGHT_LAMBDA,
+        machines,
+        slot_dt: WAKEUP_SLOT_DT,
+        slowdown: crate::cluster::machine::format_slowdown(&sd),
+        flips,
+        static_run,
+    };
+    progress(&cell);
+    Ok(vec![cell])
+}
+
+/// Render the flip cells as the EXPERIMENTS.md §Perf companion table.
+pub fn flip_markdown(cells: &[FlipCell]) -> String {
+    let mut out = String::from(
+        "| policy | load | M | slowdown | flips ev/s | static ev/s | flip events \
+         | static events | wall overhead |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {:.0} | {:.0} | {} | {} | {:.2}x |\n",
+            c.policy,
+            c.load,
+            c.machines,
+            c.slowdown,
+            c.flips.events_per_sec,
+            c.static_run.events_per_sec,
+            c.flips.events,
+            c.static_run.events,
+            c.overhead()
+        ));
+    }
+    out
+}
+
 /// The scale acceptance gate CI enforces (`bench --check-scale`): on the
 /// (naive, light, M = 10^5) cell the calendar backend must at least match
 /// the heap reference's throughput.
@@ -549,9 +662,14 @@ pub fn throughput_markdown(cells: &[ThroughputCell]) -> String {
     out
 }
 
-/// Serialize a finished suite (throughput + scale cells) to the
+/// Serialize a finished suite (throughput + scale + flip cells) to the
 /// `BENCH_sim.json` document.
-pub fn throughput_json(cells: &[ThroughputCell], scale: &[ScaleCell], quick: bool) -> Json {
+pub fn throughput_json(
+    cells: &[ThroughputCell],
+    scale: &[ScaleCell],
+    flips: &[FlipCell],
+    quick: bool,
+) -> Json {
     let mut m = std::collections::BTreeMap::new();
     m.insert("schema".into(), Json::Str(BENCH_SCHEMA.to_string()));
     m.insert("suite".into(), Json::Str("throughput".to_string()));
@@ -572,7 +690,11 @@ pub fn throughput_json(cells: &[ThroughputCell], scale: &[ScaleCell], quick: boo
              polling-dominated regime), heavy cells 1.0. scale_cells time \
              the (naive, light) M in {1e5, 1e6} cells per event-queue \
              backend (calendar vs binary-heap; identical popped events); \
-             quick runs omit M = 1e6. peak_rss_bytes = Linux VmHWM, reset \
+             quick runs omit M = 1e6. flip_cells (v4) time the (sda, \
+             light, M=4000) cell with the ON/OFF Markov slowdown flips \
+             running vs the static slowdown scenario; overhead = \
+             flips/static wall_secs (flip runs pop strictly more events). \
+             peak_rss_bytes = Linux VmHWM, reset \
              per run; null elsewhere. Regenerate: \
              cargo run --release -- bench"
                 .to_string(),
@@ -580,6 +702,7 @@ pub fn throughput_json(cells: &[ThroughputCell], scale: &[ScaleCell], quick: boo
     );
     m.insert("cells".into(), Json::Arr(cells.iter().map(|c| c.to_json()).collect()));
     m.insert("scale_cells".into(), Json::Arr(scale.iter().map(|c| c.to_json()).collect()));
+    m.insert("flip_cells".into(), Json::Arr(flips.iter().map(|c| c.to_json()).collect()));
     Json::Obj(m)
 }
 
@@ -657,7 +780,7 @@ mod tests {
         let md = throughput_markdown(std::slice::from_ref(&cell));
         assert!(md.starts_with("| policy |"));
         assert!(md.contains("| sda | light | 40 | 0.1 |"));
-        let doc = throughput_json(&[cell], &[], true);
+        let doc = throughput_json(&[cell], &[], &[], true);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
         assert_eq!(back.get("measured"), Some(&Json::Bool(true)));
@@ -678,6 +801,59 @@ mod tests {
             assert_eq!(rss, &Json::Null);
         }
         assert_eq!(back.get("scale_cells").unwrap().as_arr().unwrap().len(), 0);
+        // v4: the flip_cells array is always present
+        assert_eq!(back.get("flip_cells").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    /// The flip cell measures a genuinely different system from the
+    /// static one (the `SlowdownFlip` stream adds events) and its JSON /
+    /// markdown renderings carry the overhead ratio.
+    #[test]
+    fn flip_cell_measures_and_serializes() {
+        let mut base = SimConfig::default();
+        base.machines = 40;
+        base.horizon = 60.0;
+        base.use_runtime = false;
+        base.slot_dt = 0.1;
+        let wl_cfg = WorkloadConfig::paper(0.3);
+        let workload = generator::generate(&wl_cfg, base.horizon, 1);
+        let sd = SlowdownConfig::new(0.2, 3.0).with_rates(0.5, 1.0);
+        let mut flip_cfg = base.clone();
+        flip_cfg.slowdown = Some(sd);
+        let flips =
+            time_simulation(&flip_cfg, &wl_cfg, workload.clone(), SchedulerKind::Sda, true, true)
+                .unwrap();
+        let mut static_cfg = base;
+        static_cfg.slowdown = Some(SlowdownConfig::new(0.2, 3.0));
+        let static_run =
+            time_simulation(&static_cfg, &wl_cfg, workload, SchedulerKind::Sda, true, true)
+                .unwrap();
+        assert!(
+            flips.events > static_run.events,
+            "the flip process must add events: {} vs {}",
+            flips.events,
+            static_run.events
+        );
+        let cell = FlipCell {
+            policy: "sda".into(),
+            load: "light",
+            lambda: 0.3,
+            machines: 40,
+            slot_dt: 0.1,
+            slowdown: crate::cluster::machine::format_slowdown(&sd),
+            flips,
+            static_run,
+        };
+        assert!(cell.overhead() > 0.0);
+        let j = cell.to_json();
+        assert_eq!(j.get("machines").unwrap().as_usize(), Some(40));
+        assert!(j.path(&["flips", "events_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.path(&["static", "events"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("overhead").unwrap().as_f64().is_some());
+        assert_eq!(j.get("slowdown").unwrap().as_str(), Some("0.2x3.0@0.5,1.0"));
+        let md = flip_markdown(std::slice::from_ref(&cell));
+        assert!(md.starts_with("| policy |"));
+        assert!(md.contains("| sda | light | 40 | 0.2x3.0@0.5,1.0 |"));
     }
 
     /// Both event-queue backends simulate the identical system at the

@@ -166,6 +166,115 @@ fn slowdown_degrades_the_naive_baseline() {
     );
 }
 
+/// Satellite (ON/OFF flips): stage the exact degraded-then-recovered
+/// history the simulator pins in its `flip_retimes_running_copy_exactly`
+/// test — degrade 4x at t = 1, reveal on the re-timed checkpoint at
+/// t = 5, recover at t = 6 — and show the estimator crossover at the
+/// recovery flip's re-detect.  The advertised-speed SDA trusts the
+/// now-healthy host (5.75 work units remaining < threshold 10) and stays
+/// quiet; the observed-speed SDA projects by the host's measured
+/// lifetime throughput (0.375x advertised, so 15.33 units) and
+/// relaunches.  This is the in-flight rescheduling the flip axis buys.
+#[test]
+fn observed_speed_sda_relaunches_after_recovery_where_advertised_does_not() {
+    let base = {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 2;
+        cfg.detect_frac = 0.25;
+        cfg.sigma = Some(10.0); // threshold = 10 work units (E[x] = 1)
+        cfg.use_runtime = false;
+        // frac 0 + zero rates: nothing starts degraded and no dwell
+        // stream exists — the flips below are driven by hand
+        cfg.slowdown = Some(SlowdownConfig::new(0.0, 4.0));
+        cfg
+    };
+    let dist = Pareto::from_mean(1.0, 2.0);
+    let wl = Workload {
+        specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
+        first_durations: vec![vec![8.0]],
+    };
+    let sched = specsim::scheduler::build(&base, &WorkloadConfig::paper(1.0)).unwrap();
+    let mut driver = specsim::scheduler::build(&base, &WorkloadConfig::paper(1.0)).unwrap();
+    let mut cl = Simulator::new(base.clone(), wl, sched).cluster;
+    cl.advance_to(0.0, driver.as_mut()); // the arrival fires
+    assert!(cl.launch_copy(task0()));
+    cl.advance_to(1.0, driver.as_mut());
+    assert_eq!(cl.flip_machine(0), None, "unrevealed copies never re-detect");
+    cl.advance_to(5.0, driver.as_mut()); // the re-timed checkpoint reveals
+    assert!(cl.copy(task0(), 0).revealed);
+    cl.advance_to(6.0, driver.as_mut());
+    assert_eq!(
+        cl.flip_machine(0),
+        Some(task0()),
+        "the recovery flip must hand the revealed copy back to the detector"
+    );
+    let budget = CapBudget { copies: 2 };
+    let advertised = estimator::for_policy(&base, true);
+    assert_eq!(advertised.name(), "speed_aware");
+    let mut sda = Sda::new(&base, 2.0);
+    sda.on_reveal(&mut cl, advertised.as_ref(), &budget, task0());
+    assert_eq!(
+        (sda.detected, cl.n_copies(task0())),
+        (0, 1),
+        "advertised-speed SDA trusts the recovered host"
+    );
+    let mut obs_cfg = base.clone();
+    obs_cfg.observed_speed = true;
+    let observed = estimator::for_policy(&obs_cfg, true);
+    assert_eq!(observed.name(), "speed_aware_observed");
+    let mut sda = Sda::new(&obs_cfg, 2.0);
+    sda.on_reveal(&mut cl, observed.as_ref(), &budget, task0());
+    assert_eq!(
+        (sda.detected, cl.n_copies(task0())),
+        (1, 2),
+        "observed-speed SDA distrusts the host's track record and relaunches"
+    );
+    assert_eq!(sda.backups, 1);
+}
+
+/// Satellite (ON/OFF flips): at zero flip rates every estimator variant
+/// collapses onto the same run, bit for bit, on the paper's homogeneous
+/// healthy cluster — no dwell stream exists, every copy keeps epoch 0,
+/// the observed-throughput stamp equals the advertised speed exactly
+/// (eta = 1), and the blind/advertised distinction is vacuous at unit
+/// class speed.
+#[test]
+fn estimator_variants_coincide_at_zero_flip_rates() {
+    let run = |speed_aware: bool, observed: bool| {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 50;
+        cfg.horizon = 150.0;
+        cfg.seed = 11;
+        cfg.scheduler = SchedulerKind::Sda;
+        cfg.use_runtime = false;
+        cfg.speed_aware = speed_aware;
+        cfg.observed_speed = observed;
+        cfg.slowdown = Some(SlowdownConfig::new(0.0, 4.0)); // zero rates
+        let wl_cfg = WorkloadConfig::paper(0.5);
+        let wl = specsim::cluster::generator::generate(&wl_cfg, cfg.horizon, cfg.seed);
+        let sched = specsim::scheduler::build_for(&cfg, &wl_cfg, Some(&wl)).unwrap();
+        Simulator::new(cfg, wl, sched).run()
+    };
+    let blind_units = run(false, false); // the plain revealed estimator
+    let advertised = run(true, false);
+    let observed = run(true, true);
+    assert!(!advertised.completed.is_empty());
+    for (label, res) in [("blind", &blind_units), ("observed", &observed)] {
+        assert_eq!(res.completed.len(), advertised.completed.len(), "{label}");
+        assert_eq!(res.events_processed, advertised.events_processed, "{label}");
+        assert_eq!(res.speculative_launches, advertised.speculative_launches, "{label}");
+        assert_eq!(
+            res.total_machine_time.to_bits(),
+            advertised.total_machine_time.to_bits(),
+            "{label}"
+        );
+        for (a, b) in res.completed.iter().zip(&advertised.completed) {
+            assert_eq!(a.flowtime.to_bits(), b.flowtime.to_bits(), "{label}");
+            assert_eq!(a.resource.to_bits(), b.resource.to_bits(), "{label}");
+        }
+    }
+}
+
 /// On a heterogeneous cluster the `speed_aware` toggle changes ESE's
 /// speculation behaviour: unit-naive estimates read every slow-class copy
 /// as a straggler.

@@ -20,10 +20,19 @@
 //!    with a warning): commit the blessed file — CI uploads it as the
 //!    `sweep-snapshots` artifact — to arm the pin.
 //!
+//! 3. **Flip matrix** (the PR-7 tentpole bar) — with the ON/OFF Markov
+//!    slowdown process enabled (`SlowdownConfig::with_rates`), the
+//!    kill/re-insert traffic of `SlowdownFlip` events must leave every
+//!    mode pair byte-identical too: {wakeup} x {sched_index} x
+//!    {calendar, binary-heap} x worker counts, plus the guarantee that
+//!    rate-(0,0) runs are bitwise the static scenario (which is what
+//!    keeps the snapshot in (2) valid).
+//!
 //! Plus the pipeline-composition tests that never depended on the
 //! monoliths: novel compositions sweep end-to-end, and the est-srpt
 //! ordering genuinely diverges from mean-field SRPT.
 
+use specsim::cluster::event::EventQueueKind;
 use specsim::cluster::machine::{MachineClass, SlowdownConfig};
 use specsim::config::{SimConfig, WorkloadConfig};
 use specsim::experiment::{
@@ -187,6 +196,83 @@ fn canonical_sweep_matches_committed_snapshot() {
             );
         }
     }
+}
+
+/// The PR-7 tentpole bar: with the ON/OFF flip process churning hosts
+/// mid-copy (kill/re-insert of stale finishes + checkpoints, re-timed
+/// durations, re-fired reveals), every combination of
+/// {wakeup planner, polled loop} x {sched-index, naive scan} x
+/// {calendar, binary-heap} serializes the byte-identical sweep CSV, and
+/// the worker count doesn't leak into the bytes either.
+#[test]
+fn flip_sweeps_byte_identical_across_backend_wakeup_index_and_threads() {
+    let scenario = ClusterScenario::heterogeneous(vec![
+        MachineClass::new(60, 1.0),
+        MachineClass::new(40, 0.5),
+    ])
+    .with_slowdown(SlowdownConfig::new(0.2, 3.0).with_rates(0.5, 1.0));
+    let spec = equivalence_spec("flips", scenario, vec![LoadPoint::lambda(0.5)], 2);
+    let run = |queue: EventQueueKind, wakeup: bool, sched_index: bool, threads: usize| {
+        let mut s = spec.clone();
+        s.base.event_queue = queue;
+        s.base.wakeup = wakeup;
+        s.base.sched_index = sched_index;
+        s.threads = threads;
+        report::sweep_csv(&Runner::run(&s).unwrap())
+    };
+    let reference = run(EventQueueKind::Calendar, true, true, 2);
+    assert!(reference.lines().count() > spec.policies.len(), "empty flip sweep?");
+    for queue in [EventQueueKind::Calendar, EventQueueKind::BinaryHeap] {
+        for wakeup in [true, false] {
+            for sched_index in [true, false] {
+                if queue == EventQueueKind::Calendar && wakeup && sched_index {
+                    continue; // the reference itself
+                }
+                assert_eq!(
+                    run(queue, wakeup, sched_index, 2),
+                    reference,
+                    "{queue:?} wakeup={wakeup} sched_index={sched_index} diverged \
+                     from the calendar/planner/index reference under flips"
+                );
+            }
+        }
+    }
+    for threads in [1, 4] {
+        assert_eq!(
+            run(EventQueueKind::BinaryHeap, false, false, threads),
+            reference,
+            "worker count {threads} leaked into the flip sweep bytes"
+        );
+    }
+}
+
+/// Zero rates must be *exactly* the static slowdown scenario: the flip
+/// machinery (dedicated seed stream, per-machine dwell sampling, epoch
+/// columns) may not perturb a run in which no flip ever fires — this is
+/// what keeps the committed canonical snapshot valid across the PR.
+#[test]
+fn zero_flip_rates_are_byte_identical_to_the_static_slowdown_scenario() {
+    let loads = vec![LoadPoint::lambda(0.5)];
+    let static_spec = equivalence_spec(
+        "static-slowdown",
+        ClusterScenario::homogeneous().with_slowdown(SlowdownConfig::new(0.2, 3.0)),
+        loads.clone(),
+        2,
+    );
+    let zero_rate_spec = equivalence_spec(
+        "zero-rate-flips",
+        ClusterScenario::homogeneous()
+            .with_slowdown(SlowdownConfig::new(0.2, 3.0).with_rates(0.0, 0.0)),
+        loads,
+        2,
+    );
+    let static_csv = report::sweep_csv(&Runner::run(&static_spec).unwrap());
+    let zero_csv = report::sweep_csv(&Runner::run(&zero_rate_spec).unwrap());
+    assert!(static_csv.lines().count() > static_spec.policies.len());
+    assert_eq!(
+        zero_csv, static_csv,
+        "rate (0,0) flips must be indistinguishable from the static scenario"
+    );
 }
 
 /// Novel compositions — pipelines with no canonical name — run end-to-end
