@@ -1,15 +1,17 @@
-//! Live-serving demo: spin up the coordinator master (own thread, paced
-//! scheduling slots, watermark backpressure) and drive it with a bursty
-//! Poisson client — the deployable face of the library.  Python is nowhere
-//! on this path; with artifacts built, SCA's P2 solves go through PJRT.
+//! Live-serving demo: spin up a 2-shard coordinator deployment (one master
+//! thread per shard, paced scheduling slots, watermark backpressure, hash
+//! routing) and drive it with a bursty Poisson client — the deployable face
+//! of the library.  Python is nowhere on this path; with artifacts built,
+//! SCA's P2 solves go through PJRT.
 //!
 //!     cargo run --release --example serve
 
 use std::time::Duration;
 
-use specsim::config::SimConfig;
+use specsim::config::{RoutePolicy, ServeConfig, SimConfig};
 use specsim::coordinator::backpressure::Backpressure;
-use specsim::coordinator::master::{Master, Submission};
+use specsim::coordinator::master::{Submission, SubmitResult};
+use specsim::coordinator::shard::ShardedMaster;
 use specsim::scheduler::SchedulerKind;
 use specsim::stats::Pcg64;
 
@@ -20,54 +22,68 @@ fn main() -> Result<(), String> {
     cfg.scheduler = SchedulerKind::Sda;
     cfg.use_runtime = false;
 
-    let mut master = Master::new(cfg);
-    master.tick = Duration::from_millis(1); // 1 ms of wall time per slot
-    master.backpressure = Backpressure::from_capacity(128, 4.0, 12.0);
-    let metrics = master.metrics.clone();
-    let handle = master.spawn()?;
+    let serve = ServeConfig { shards: 2, route: RoutePolicy::Hash, ..Default::default() };
+    let mut sharded = ShardedMaster::new(cfg, serve);
+    sharded.tick = Duration::from_millis(1); // 1 ms of wall time per slot
+    sharded.backpressure = Some(Backpressure::from_capacity(64, 4.0, 12.0));
+    sharded.sample_every = Some(Duration::from_millis(50));
+    let handle = sharded.spawn()?;
 
-    println!("master up: 128 machines, SDA policy, 1ms slots");
+    println!("deployment up: 2 shards x 64 machines, SDA policy, hash routing, 1ms slots");
     let mut rng = Pcg64::new(7, 0);
     let (mut accepted, mut throttled, mut rejected) = (0u32, 0u32, 0u32);
     // two phases: steady trickle, then a burst that trips backpressure
     for phase in 0..2 {
         let (jobs, pause_ms) = if phase == 0 { (150, 2.0) } else { (400, 0.05) };
         for _ in 0..jobs {
-            std::thread::sleep(Duration::from_secs_f64(
-                rng.exponential(1000.0 / pause_ms) ,
-            ));
+            std::thread::sleep(Duration::from_secs_f64(rng.exponential(1000.0 / pause_ms)));
             let sub = Submission {
                 num_tasks: rng.uniform_u64(1, 40) as u32,
                 mean_duration: rng.uniform_f64(1.0, 4.0),
                 alpha: 2.0,
             };
             match handle.submit(sub)? {
-                specsim::coordinator::master::SubmitResult::Accepted { throttled: t, .. } => {
+                (_, SubmitResult::Accepted { throttled: t, .. }) => {
                     accepted += 1;
                     throttled += t as u32;
                 }
-                specsim::coordinator::master::SubmitResult::Rejected => rejected += 1,
+                (_, SubmitResult::Rejected) => rejected += 1,
             }
         }
+        let queued: i64 =
+            (0..handle.shards()).map(|s| handle.metrics(s).gauge("queued_tasks").get()).sum();
+        let busy: i64 =
+            (0..handle.shards()).map(|s| handle.metrics(s).gauge("busy_machines").get()).sum();
         println!(
             "phase {phase}: accepted={accepted} throttled={throttled} rejected={rejected} \
-             queued_tasks={} busy={}",
-            metrics.gauge("queued_tasks").get(),
-            metrics.gauge("busy_machines").get()
+             queued_tasks={queued} busy={busy}"
         );
     }
     println!("draining...");
     let report = handle.shutdown()?;
     println!(
         "completed {} jobs over {} slots; utilization {:.3}; rejected {}",
-        report.completed.len(),
-        report.slots,
-        report.utilization,
-        report.rejected
+        report.completed(),
+        report.slots(),
+        report.utilization(),
+        report.rejected()
     );
-    let mean_flow = report.completed.iter().map(|r| r.flowtime).sum::<f64>()
-        / report.completed.len().max(1) as f64;
+    let n_done: usize = report.shards.iter().map(|r| r.completed.len()).sum();
+    let mean_flow = report
+        .shards
+        .iter()
+        .flat_map(|r| r.completed.iter())
+        .map(|r| r.flowtime)
+        .sum::<f64>()
+        / n_done.max(1) as f64;
     println!("mean flowtime: {mean_flow:.2} virtual time units");
-    println!("\n--- final metrics ---\n{}", metrics.render());
+    print!("\n--- per-shard breakdown ---\n{}", report.table());
+    if let Some(series) = &report.series {
+        println!("\nsampled {} metric snapshots; aggregate at shutdown:", series.len());
+        let agg = series.aggregate_latest();
+        for (name, v) in &agg.counters {
+            println!("  {name:<24} {v}");
+        }
+    }
     Ok(())
 }

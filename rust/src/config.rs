@@ -343,6 +343,74 @@ impl SimConfig {
     }
 }
 
+/// How the sharded serve plane routes submissions across shard masters
+/// (see `coordinator::shard`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Seeded modulo hash of the submission's shape: identical submissions
+    /// always land on the same shard (deterministic, stateless).
+    #[default]
+    Hash,
+    /// Power-of-two-choices on the per-shard `queued_tasks` gauge: draw two
+    /// shards, send to the less loaded (spreads hot spots).
+    P2c,
+}
+
+impl std::str::FromStr for RoutePolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "hash" => Ok(RoutePolicy::Hash),
+            "p2c" => Ok(RoutePolicy::P2c),
+            other => Err(format!("unknown route policy '{other}' (expected hash|p2c)")),
+        }
+    }
+}
+
+impl std::fmt::Display for RoutePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RoutePolicy::Hash => "hash",
+            RoutePolicy::P2c => "p2c",
+        })
+    }
+}
+
+/// Sharded serve-plane configuration (`serve --shards N --route hash|p2c`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Number of shard masters; each owns a disjoint machine partition.
+    pub shards: usize,
+    /// Submission routing policy across shards.
+    pub route: RoutePolicy,
+    /// Seed for the routing hash / p2c draws (independent of the
+    /// simulation seed so routing never perturbs per-shard workloads).
+    pub route_seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { shards: 1, route: RoutePolicy::Hash, route_seed: 0x5eed5 }
+    }
+}
+
+impl ServeConfig {
+    /// Validate against the deployment's machine count: every shard must
+    /// own at least one machine.
+    pub fn validate(&self, machines: usize) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("shards must be >= 1".to_string());
+        }
+        if self.shards > machines {
+            return Err(format!(
+                "shards = {} exceeds machines = {machines}: every shard needs >= 1 machine",
+                self.shards
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// What arrives at the cluster.
 #[derive(Clone, Debug)]
 pub enum WorkloadConfig {
@@ -616,6 +684,29 @@ mod tests {
         let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
         assert_eq!(back.event_queue, EventQueueKind::BinaryHeap);
         assert!(SimConfig::from_toml("event_queue = \"splay\"").is_err());
+    }
+
+    #[test]
+    fn route_policy_parses_and_displays() {
+        assert_eq!("hash".parse::<RoutePolicy>().unwrap(), RoutePolicy::Hash);
+        assert_eq!("p2c".parse::<RoutePolicy>().unwrap(), RoutePolicy::P2c);
+        assert!("rendezvous".parse::<RoutePolicy>().is_err());
+        assert_eq!(RoutePolicy::Hash.to_string(), "hash");
+        assert_eq!(RoutePolicy::P2c.to_string(), "p2c");
+        assert_eq!(RoutePolicy::default(), RoutePolicy::Hash);
+    }
+
+    #[test]
+    fn serve_config_validates_shard_bounds() {
+        let d = ServeConfig::default();
+        assert_eq!(d.shards, 1);
+        d.validate(1).unwrap();
+        let mut s = ServeConfig::default();
+        s.shards = 0;
+        assert!(s.validate(100).is_err());
+        s.shards = 4;
+        s.validate(4).unwrap();
+        assert!(s.validate(3).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::metrics::JobRecord;
 use crate::scheduler::{self, Scheduler};
 
 use super::backpressure::{Admission, Backpressure};
-use super::metrics::MetricsRegistry;
+use super::metrics::{Counter, MetricsRegistry};
 
 /// A live job submission.
 #[derive(Clone, Copy, Debug)]
@@ -42,6 +42,9 @@ impl SubmitResult {
 
 enum Msg {
     Submit(Submission, mpsc::Sender<SubmitResult>),
+    /// A submission burst: admitted in order, answered with one reply —
+    /// the per-job channel round trip amortized across the whole batch.
+    SubmitBatch(Vec<Submission>, mpsc::Sender<Vec<SubmitResult>>),
     Shutdown,
 }
 
@@ -50,6 +53,9 @@ enum Msg {
 pub struct Report {
     pub completed: Vec<JobRecord>,
     pub rejected: u64,
+    /// Machines this master owned (a shard's partition size; see
+    /// `coordinator::shard`).
+    pub machines: usize,
     pub slots: u64,
     /// Slots whose `on_slot` actually ran vs. slots the demand-driven
     /// wakeup planner proved to be no-ops (`cfg.wakeup`; skipped slots
@@ -74,6 +80,37 @@ impl MasterHandle {
             .send(Msg::Submit(sub, tx))
             .map_err(|_| "master gone".to_string())?;
         rx.recv().map_err(|_| "master dropped reply".to_string())
+    }
+
+    /// Submit a burst of jobs with one channel round trip; results come
+    /// back in submission order.  Admission is identical to submitting the
+    /// jobs one by one — batching changes wakeup cost, never decisions.
+    pub fn submit_batch(&self, subs: Vec<Submission>) -> Result<Vec<SubmitResult>, String> {
+        let rx = self.send_batch(subs)?;
+        rx.recv().map_err(|_| "master dropped reply".to_string())
+    }
+
+    /// Send a burst without waiting for the reply; the returned channel
+    /// yields the in-order results when the master drains the burst.  The
+    /// sharded handle uses this to keep every shard admitting in parallel
+    /// before collecting any replies.
+    pub fn send_batch(
+        &self,
+        subs: Vec<Submission>,
+    ) -> Result<mpsc::Receiver<Vec<SubmitResult>>, String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::SubmitBatch(subs, tx))
+            .map_err(|_| "master gone".to_string())?;
+        Ok(rx)
+    }
+
+    /// Start draining without joining, so a multi-shard shutdown can put
+    /// every shard into drain before blocking on any of them.  A later
+    /// `shutdown()` sends a second `Shutdown`, which the drained loop
+    /// never reads — harmless.
+    pub fn begin_shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
     }
 
     /// Stop accepting work, let the cluster drain, and return the report.
@@ -125,8 +162,54 @@ impl Master {
     }
 }
 
+/// Admit one submission against the watermarks; shared by the single and
+/// batched message arms so batching can never change a decision.
+fn admit_one(
+    cluster: &mut Cluster,
+    bp: &Backpressure,
+    jobs_in: &Counter,
+    jobs_rejected: &Counter,
+    sub: &Submission,
+) -> SubmitResult {
+    let admission = bp.admit(cluster.queued_tasks(), sub.num_tasks as usize);
+    if admission == Admission::Reject {
+        jobs_rejected.inc();
+        SubmitResult::Rejected
+    } else {
+        jobs_in.inc();
+        let job = cluster.add_job(sub.mean_duration, sub.alpha, sub.num_tasks);
+        SubmitResult::Accepted { job, throttled: admission == Admission::Throttle }
+    }
+}
+
+fn handle_msg(
+    msg: Msg,
+    cluster: &mut Cluster,
+    bp: &Backpressure,
+    jobs_in: &Counter,
+    jobs_rejected: &Counter,
+    draining: &mut bool,
+) {
+    match msg {
+        Msg::Submit(sub, reply) => {
+            let result = admit_one(cluster, bp, jobs_in, jobs_rejected, &sub);
+            let _ = reply.send(result);
+        }
+        Msg::SubmitBatch(subs, reply) => {
+            // preallocated ticket buffer: one reply send for the burst
+            let mut results = Vec::with_capacity(subs.len());
+            for sub in &subs {
+                results.push(admit_one(cluster, bp, jobs_in, jobs_rejected, sub));
+            }
+            let _ = reply.send(results);
+        }
+        Msg::Shutdown => *draining = true,
+    }
+}
+
 fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Msg>) -> Report {
     let slot_dt = master.cfg.slot_dt;
+    let bp = master.backpressure;
     let mut gate = SlotGate::new(master.cfg.wakeup);
     let mut cluster = Cluster::new_live(master.cfg);
     let metrics = master.metrics.clone();
@@ -148,23 +231,28 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
                 break;
             }
             match rx.recv_timeout(next_tick - now) {
-                Ok(Msg::Submit(sub, reply)) => {
-                    let admission = master
-                        .backpressure
-                        .admit(cluster.queued_tasks(), sub.num_tasks as usize);
-                    let result = if admission == Admission::Reject {
-                        jobs_rejected.inc();
-                        SubmitResult::Rejected
-                    } else {
-                        jobs_in.inc();
-                        let job = cluster.add_job(sub.mean_duration, sub.alpha, sub.num_tasks);
-                        SubmitResult::Accepted { job, throttled: admission == Admission::Throttle }
-                    };
-                    let _ = reply.send(result);
+                Ok(msg) => {
+                    handle_msg(msg, &mut cluster, &bp, &jobs_in, &jobs_rejected, &mut draining)
                 }
-                Ok(Msg::Shutdown) => draining = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => draining = true,
+            }
+            // burst drain: everything already queued rides the same wakeup,
+            // re-checking the slot boundary so a flood can't starve the
+            // scheduler of its tick
+            while !draining && Instant::now() < next_tick {
+                match rx.try_recv() {
+                    Ok(msg) => handle_msg(
+                        msg,
+                        &mut cluster,
+                        &bp,
+                        &jobs_in,
+                        &jobs_rejected,
+                        &mut draining,
+                    ),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => draining = true,
+                }
             }
         }
         // slot boundary: events first (a slot observes its instant fully),
@@ -187,6 +275,7 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
                 return Report {
                     utilization: cluster.total_machine_time
                         / (cluster.machines.total() as f64 * cluster.clock.max(1e-9)),
+                    machines: cluster.machines.total(),
                     completed: std::mem::take(&mut cluster.completed),
                     rejected: jobs_rejected.get(),
                     slots,
@@ -238,6 +327,44 @@ mod tests {
         for r in &report.completed {
             assert!(r.flowtime > 0.0);
         }
+    }
+
+    #[test]
+    fn batch_admission_matches_sequential() {
+        // hour-long tick: no slot boundary fires while submitting, so the
+        // queue never drains mid-sequence and admission is a pure function
+        // of the submission order — batched and sequential must agree
+        let subs: Vec<Submission> = (0..40)
+            .map(|_| Submission { num_tasks: 4, mean_duration: 5.0, alpha: 2.0 })
+            .collect();
+        let run = |batched: bool| -> Vec<bool> {
+            let mut master = Master::new(cfg(4));
+            master.tick = Duration::from_secs(3600);
+            master.drain_slots = 50;
+            master.backpressure = Backpressure::new(8, 16);
+            let handle = master.spawn().unwrap();
+            let results: Vec<SubmitResult> = if batched {
+                handle.submit_batch(subs.clone()).unwrap()
+            } else {
+                subs.iter().map(|s| handle.submit(*s).unwrap()).collect()
+            };
+            let _ = handle.shutdown();
+            results.iter().map(|r| r.is_accepted()).collect()
+        };
+        let sequential = run(false);
+        let batch = run(true);
+        assert_eq!(sequential, batch, "batching must not change admission decisions");
+        let accepted = batch.iter().filter(|&&a| a).count();
+        assert_eq!(accepted, 4, "4 jobs x 4 tasks reach high watermark 16, rest reject");
+    }
+
+    #[test]
+    fn report_records_partition_size() {
+        let mut master = Master::new(cfg(8));
+        master.tick = Duration::from_micros(200);
+        let handle = master.spawn().unwrap();
+        let report = handle.shutdown().unwrap();
+        assert_eq!(report.machines, 8);
     }
 
     #[test]

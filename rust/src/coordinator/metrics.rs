@@ -1,9 +1,13 @@
 //! Lightweight metrics registry for the live master: atomic counters and
-//! gauges with a Prometheus-style text exposition (no external deps).
+//! gauges with a Prometheus-style text exposition (no external deps), plus
+//! the time-series sampler the sharded serve plane uses to turn per-shard
+//! registries into dashboard-ready CSV.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
 
 /// Shared registry handle.
 #[derive(Clone, Default)]
@@ -59,6 +63,29 @@ impl MetricsRegistry {
         Gauge(map.entry(name.to_string()).or_default().clone())
     }
 
+    /// A point-in-time copy of every counter and gauge.  Reads are Relaxed
+    /// (same as the live accessors): the snapshot is a dashboard sample,
+    /// not a consistency barrier.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        MetricsSnapshot { counters, gauges }
+    }
+
     /// Prometheus-style text exposition.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -75,6 +102,154 @@ impl MetricsRegistry {
             ));
         }
         out
+    }
+}
+
+/// A point-in-time copy of a registry's counters and gauges.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+}
+
+/// One sampled point: which shard's registry, when (seconds since the
+/// sampler started), and what it read.
+#[derive(Clone, Debug)]
+pub struct SamplePoint {
+    pub t_secs: f64,
+    pub shard: usize,
+    pub snap: MetricsSnapshot,
+}
+
+/// A bounded ring of [`SamplePoint`]s — the fixed-interval snapshot history
+/// the serve plane aggregates and serializes.  Pushing past `cap` evicts
+/// the oldest point, so a long-running deployment holds a sliding window.
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    cap: usize,
+    points: VecDeque<SamplePoint>,
+}
+
+impl TimeSeries {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "time series capacity must be > 0");
+        TimeSeries { cap, points: VecDeque::with_capacity(cap.min(1024)) }
+    }
+
+    pub fn push(&mut self, point: SamplePoint) {
+        if self.points.len() == self.cap {
+            self.points.pop_front();
+        }
+        self.points.push_back(point);
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn points(&self) -> impl Iterator<Item = &SamplePoint> {
+        self.points.iter()
+    }
+
+    /// Long-format CSV: `t_secs,shard,kind,name,value` — one row per metric
+    /// per sample, trivially pivotable by any dashboard tool.
+    pub fn csv(&self) -> String {
+        let mut out = String::from("t_secs,shard,kind,name,value\n");
+        for p in &self.points {
+            for (name, v) in &p.snap.counters {
+                out.push_str(&format!("{:.6},{},counter,{name},{v}\n", p.t_secs, p.shard));
+            }
+            for (name, v) in &p.snap.gauges {
+                out.push_str(&format!("{:.6},{},gauge,{name},{v}\n", p.t_secs, p.shard));
+            }
+        }
+        out
+    }
+
+    /// Merge the latest sample of every shard into one aggregate snapshot
+    /// (counters and gauges summed across shards) — the cross-shard totals
+    /// a `ServeReport` exposes.
+    pub fn aggregate_latest(&self) -> MetricsSnapshot {
+        let mut latest: BTreeMap<usize, &SamplePoint> = BTreeMap::new();
+        for p in &self.points {
+            latest.insert(p.shard, p); // iteration is oldest-first: last write wins
+        }
+        let mut agg = MetricsSnapshot::default();
+        for p in latest.values() {
+            for (name, v) in &p.snap.counters {
+                *agg.counters.entry(name.clone()).or_insert(0) += v;
+            }
+            for (name, v) in &p.snap.gauges {
+                *agg.gauges.entry(name.clone()).or_insert(0) += v;
+            }
+        }
+        agg
+    }
+}
+
+/// A background thread sampling a set of registries (one per shard) at a
+/// fixed interval into a bounded [`TimeSeries`].  `stop()` joins the thread
+/// and returns the series with one final sample per registry appended, so
+/// even a sampler stopped before its first interval yields a deterministic,
+/// non-empty series.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    series: Arc<Mutex<TimeSeries>>,
+    registries: Vec<MetricsRegistry>,
+    t0: Instant,
+    join: thread::JoinHandle<()>,
+}
+
+impl Sampler {
+    pub fn spawn(
+        registries: Vec<MetricsRegistry>,
+        every: Duration,
+        cap: usize,
+    ) -> Result<Sampler, String> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let series = Arc::new(Mutex::new(TimeSeries::new(cap)));
+        let t0 = Instant::now();
+        let thread_stop = stop.clone();
+        let thread_series = series.clone();
+        let thread_regs = registries.clone();
+        let join = thread::Builder::new()
+            .name("specsim-metrics-sampler".into())
+            .spawn(move || {
+                let mut next = every;
+                // short sleeps bound stop() latency regardless of interval
+                let nap = every.min(Duration::from_millis(10));
+                while !thread_stop.load(Ordering::Relaxed) {
+                    let elapsed = t0.elapsed();
+                    if elapsed >= next {
+                        let t_secs = elapsed.as_secs_f64();
+                        let mut s = thread_series.lock().unwrap();
+                        for (shard, reg) in thread_regs.iter().enumerate() {
+                            s.push(SamplePoint { t_secs, shard, snap: reg.snapshot() });
+                        }
+                        next = elapsed + every;
+                    }
+                    thread::sleep(nap);
+                }
+            })
+            .map_err(|e| e.to_string())?;
+        Ok(Sampler { stop, series, registries, t0, join })
+    }
+
+    /// Stop sampling, join the thread, and return the series with a final
+    /// sample of every registry appended.
+    pub fn stop(self) -> TimeSeries {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.join.join();
+        let mut series = self.series.lock().unwrap().clone();
+        let t_secs = self.t0.elapsed().as_secs_f64();
+        for (shard, reg) in self.registries.iter().enumerate() {
+            series.push(SamplePoint { t_secs, shard, snap: reg.snapshot() });
+        }
+        series
     }
 }
 
@@ -117,5 +292,80 @@ mod tests {
         let reg2 = reg.clone();
         reg.counter("x").inc();
         assert_eq!(reg2.counter("x").get(), 1);
+    }
+
+    #[test]
+    fn snapshot_copies_current_values() {
+        let reg = MetricsRegistry::new();
+        reg.counter("jobs").add(3);
+        reg.gauge("depth").set(-7);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.get("jobs"), Some(&3));
+        assert_eq!(snap.gauges.get("depth"), Some(&-7));
+        // later mutation doesn't retroactively change the snapshot
+        reg.counter("jobs").inc();
+        assert_eq!(snap.counters.get("jobs"), Some(&3));
+    }
+
+    fn point(t_secs: f64, shard: usize, jobs: u64, depth: i64) -> SamplePoint {
+        let mut snap = MetricsSnapshot::default();
+        snap.counters.insert("jobs".to_string(), jobs);
+        snap.gauges.insert("depth".to_string(), depth);
+        SamplePoint { t_secs, shard, snap }
+    }
+
+    #[test]
+    fn time_series_ring_evicts_oldest() {
+        let mut ts = TimeSeries::new(2);
+        assert!(ts.is_empty());
+        ts.push(point(0.0, 0, 1, 0));
+        ts.push(point(1.0, 0, 2, 0));
+        ts.push(point(2.0, 0, 3, 0));
+        assert_eq!(ts.len(), 2);
+        let times: Vec<f64> = ts.points().map(|p| p.t_secs).collect();
+        assert_eq!(times, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn time_series_csv_long_format() {
+        let mut ts = TimeSeries::new(8);
+        ts.push(point(0.5, 1, 10, -2));
+        let csv = ts.csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("t_secs,shard,kind,name,value"));
+        assert_eq!(lines.next(), Some("0.500000,1,counter,jobs,10"));
+        assert_eq!(lines.next(), Some("0.500000,1,gauge,depth,-2"));
+        assert_eq!(lines.next(), None);
+    }
+
+    #[test]
+    fn aggregate_latest_sums_newest_point_per_shard() {
+        let mut ts = TimeSeries::new(8);
+        ts.push(point(0.0, 0, 1, 5));
+        ts.push(point(0.0, 1, 2, 7));
+        ts.push(point(1.0, 0, 4, 3)); // supersedes shard 0's first point
+        let agg = ts.aggregate_latest();
+        assert_eq!(agg.counters.get("jobs"), Some(&6)); // 4 + 2
+        assert_eq!(agg.gauges.get("depth"), Some(&10)); // 3 + 7
+    }
+
+    #[test]
+    fn sampler_final_sample_always_present() {
+        let reg_a = MetricsRegistry::new();
+        let reg_b = MetricsRegistry::new();
+        reg_a.counter("jobs").add(2);
+        reg_b.counter("jobs").add(5);
+        // hour-long interval: only the stop() sample can fire
+        let sampler = Sampler::spawn(
+            vec![reg_a.clone(), reg_b.clone()],
+            Duration::from_secs(3600),
+            16,
+        )
+        .unwrap();
+        reg_b.counter("jobs").inc();
+        let series = sampler.stop();
+        assert_eq!(series.len(), 2, "one final sample per registry");
+        let agg = series.aggregate_latest();
+        assert_eq!(agg.counters.get("jobs"), Some(&8)); // 2 + 6
     }
 }

@@ -1,13 +1,16 @@
-//! Async streaming coordinator (the deployable L3 front-end): a tokio-based
-//! master that accepts live job submissions, applies admission control, and
-//! drives the same scheduler/cluster machinery the simulator exercises.
+//! Streaming coordinator (the deployable L3 front-end): thread-per-shard
+//! live masters that accept job submissions over channels, apply admission
+//! control, and drive the same scheduler/cluster machinery the simulator
+//! exercises — single-master (`master`) or N-shard (`shard`) deployments.
 
 pub mod backpressure;
 pub mod master;
 pub mod metrics;
 pub mod router;
+pub mod shard;
 
 pub use backpressure::Backpressure;
 pub use master::{Master, MasterHandle, Submission};
 pub use metrics::MetricsRegistry;
 pub use router::Router;
+pub use shard::{ServeReport, ShardRouter, ShardedHandle, ShardedMaster};

@@ -34,14 +34,18 @@ impl Router {
     /// Pick an index into `idle` (a slice of idle machine ids) for a copy of
     /// `task`, avoiding `exclude` (machines already running copies of it)
     /// when possible.
+    ///
+    /// Allocation-free: a counting pass sizes the viable pool, the policy
+    /// picks a rank into it, and a second pass walks to that rank — the
+    /// same choices the old `Vec<usize>`-materializing implementation made
+    /// (identical RNG draws and cursor motion), pinned by the
+    /// `alloc_free_pick_matches_reference_sequence` test.
     pub fn pick(&mut self, idle: &[u32], exclude: &[u32], _task: TaskRef) -> Option<usize> {
         if idle.is_empty() {
             return None;
         }
-        let viable: Vec<usize> = (0..idle.len())
-            .filter(|&i| !exclude.contains(&idle[i]))
-            .collect();
-        let pool: &[usize] = if viable.is_empty() {
+        let viable = idle.iter().filter(|m| !exclude.contains(m)).count();
+        if viable == 0 {
             // anti-affinity impossible; fall back to any idle machine
             return Some(match self.policy {
                 Policy::FirstFree => idle.len() - 1,
@@ -51,17 +55,17 @@ impl Router {
                     self.next
                 }
             });
-        } else {
-            &viable
-        };
-        Some(match self.policy {
-            Policy::FirstFree => pool[pool.len() - 1],
-            Policy::Random => pool[self.rng.uniform_u64(0, pool.len() as u64 - 1) as usize],
+        }
+        let k = match self.policy {
+            Policy::FirstFree => viable - 1,
+            Policy::Random => self.rng.uniform_u64(0, viable as u64 - 1) as usize,
             Policy::RoundRobin => {
-                self.next = (self.next + 1) % pool.len();
-                pool[self.next]
+                self.next = (self.next + 1) % viable;
+                self.next
             }
-        })
+        };
+        // k < viable, so the walk always yields Some
+        (0..idle.len()).filter(|&i| !exclude.contains(&idle[i])).nth(k)
     }
 }
 
@@ -103,5 +107,68 @@ mod tests {
         let idle = [1, 2, 3];
         let picks: Vec<usize> = (0..6).map(|_| r.pick(&idle, &[], t()).unwrap()).collect();
         assert_eq!(picks, vec![1, 2, 0, 1, 2, 0]);
+    }
+
+    /// The pre-optimization implementation, kept verbatim as the oracle:
+    /// it materializes the viable pool as a `Vec<usize>` on every call.
+    struct ReferenceRouter {
+        policy: Policy,
+        rng: Pcg64,
+        next: usize,
+    }
+
+    impl ReferenceRouter {
+        fn new(policy: Policy, seed: u64) -> Self {
+            ReferenceRouter { policy, rng: Pcg64::new(seed, 0x7011), next: 0 }
+        }
+
+        fn pick(&mut self, idle: &[u32], exclude: &[u32]) -> Option<usize> {
+            if idle.is_empty() {
+                return None;
+            }
+            let viable: Vec<usize> =
+                (0..idle.len()).filter(|&i| !exclude.contains(&idle[i])).collect();
+            let pool: &[usize] = if viable.is_empty() {
+                return Some(match self.policy {
+                    Policy::FirstFree => idle.len() - 1,
+                    Policy::Random => self.rng.uniform_u64(0, idle.len() as u64 - 1) as usize,
+                    Policy::RoundRobin => {
+                        self.next = (self.next + 1) % idle.len();
+                        self.next
+                    }
+                });
+            } else {
+                &viable
+            };
+            Some(match self.policy {
+                Policy::FirstFree => pool[pool.len() - 1],
+                Policy::Random => pool[self.rng.uniform_u64(0, pool.len() as u64 - 1) as usize],
+                Policy::RoundRobin => {
+                    self.next = (self.next + 1) % pool.len();
+                    pool[self.next]
+                }
+            })
+        }
+    }
+
+    #[test]
+    fn alloc_free_pick_matches_reference_sequence() {
+        for policy in [Policy::FirstFree, Policy::Random, Policy::RoundRobin] {
+            let mut new = Router::new(policy, 99);
+            let mut oracle = ReferenceRouter::new(policy, 99);
+            let mut seq = Pcg64::new(7, 1234);
+            for _ in 0..500 {
+                let n = seq.uniform_u64(0, 8) as usize;
+                let idle: Vec<u32> = (0..n).map(|_| seq.uniform_u64(0, 9) as u32).collect();
+                let n_ex = seq.uniform_u64(0, 4) as usize;
+                let exclude: Vec<u32> =
+                    (0..n_ex).map(|_| seq.uniform_u64(0, 9) as u32).collect();
+                assert_eq!(
+                    new.pick(&idle, &exclude, t()),
+                    oracle.pick(&idle, &exclude),
+                    "pick diverged for idle={idle:?} exclude={exclude:?}"
+                );
+            }
+        }
     }
 }

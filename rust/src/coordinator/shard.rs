@@ -1,0 +1,425 @@
+//! The sharded serve plane: N live masters, each owning a disjoint machine
+//! partition with its own scheduler, `SchedIndex`, and event queue, behind
+//! a [`ShardRouter`] that spreads submissions across them and a
+//! [`ShardedHandle`] exposing the same submit/shutdown surface as a single
+//! [`MasterHandle`].
+//!
+//! Shards share **no** cluster state: a submission is admitted, scheduled,
+//! and completed entirely inside one shard, so the only cross-shard
+//! artifacts are the router's load reads (the per-shard `queued_tasks`
+//! gauge) and the aggregated [`ServeReport`].  See DESIGN.md §15.
+
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+use crate::config::{RoutePolicy, ServeConfig, SimConfig};
+use crate::stats::Pcg64;
+
+use super::backpressure::Backpressure;
+use super::master::{Master, MasterHandle, Report, Submission, SubmitResult};
+use super::metrics::{Gauge, MetricsRegistry, Sampler, TimeSeries};
+
+/// Split `machines` into `shards` disjoint partitions: `machines / shards`
+/// each, with the remainder spread one-per-shard from the front, so
+/// partition sizes differ by at most one.
+pub fn partition_machines(machines: usize, shards: usize) -> Vec<usize> {
+    assert!(shards >= 1, "at least one shard");
+    assert!(shards <= machines, "every shard needs >= 1 machine");
+    let q = machines / shards;
+    let r = machines % shards;
+    (0..shards).map(|i| q + usize::from(i < r)).collect()
+}
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mix, so any field of the
+/// submission flips every output bit with probability ~1/2.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Routes submissions to shards.
+///
+/// * [`RoutePolicy::Hash`]: seeded modulo hash of the submission's shape
+///   (task count, mean duration, alpha) — stateless and deterministic, so
+///   identical submissions always land on the same shard.
+/// * [`RoutePolicy::P2c`]: power of two choices — draw two shards from a
+///   seeded RNG (exactly two draws per submission) and send to the one
+///   whose `queued_tasks` gauge reads lower, first draw winning ties.
+pub struct ShardRouter {
+    policy: RoutePolicy,
+    seed: u64,
+    rng: Pcg64,
+    loads: Vec<Gauge>,
+}
+
+impl ShardRouter {
+    /// `loads[i]` must be shard i's `queued_tasks` gauge (shared with the
+    /// shard's registry, so reads see the live backlog).
+    pub fn new(policy: RoutePolicy, seed: u64, loads: Vec<Gauge>) -> Self {
+        assert!(!loads.is_empty(), "router needs >= 1 shard");
+        ShardRouter { policy, seed, rng: Pcg64::new(seed, 0x70c2), loads }
+    }
+
+    /// Pick the shard for `sub`.
+    pub fn route(&mut self, sub: &Submission) -> usize {
+        let n = self.loads.len();
+        if n == 1 {
+            return 0;
+        }
+        match self.policy {
+            RoutePolicy::Hash => {
+                let h = mix64(
+                    self.seed
+                        ^ mix64(sub.num_tasks as u64)
+                        ^ mix64(sub.mean_duration.to_bits()).rotate_left(17)
+                        ^ mix64(sub.alpha.to_bits()).rotate_left(31),
+                );
+                (h % n as u64) as usize
+            }
+            RoutePolicy::P2c => {
+                let a = self.rng.uniform_u64(0, n as u64 - 1) as usize;
+                let b = self.rng.uniform_u64(0, n as u64 - 1) as usize;
+                // strict <: ties (including frozen gauges) keep the first
+                // draw, so an unloaded deployment degrades to uniform
+                if self.loads[b].get() < self.loads[a].get() {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+}
+
+/// Configuration + spawner for a sharded deployment — the N-master
+/// counterpart of [`Master`].
+pub struct ShardedMaster {
+    cfg: SimConfig,
+    pub serve: ServeConfig,
+    /// Wall-clock duration of one scheduling slot (every shard ticks at
+    /// the same rate).
+    pub tick: Duration,
+    /// Max slots each shard runs after shutdown while draining.
+    pub drain_slots: u64,
+    /// Per-shard backpressure override; `None` sizes watermarks from each
+    /// shard's own partition (the [`Master::new`] default).
+    pub backpressure: Option<Backpressure>,
+    /// Fixed-interval metrics sampling across all shard registries;
+    /// `None` disables the sampler thread.
+    pub sample_every: Option<Duration>,
+    /// Ring capacity of the sampled time series.
+    pub sample_cap: usize,
+}
+
+impl ShardedMaster {
+    pub fn new(cfg: SimConfig, serve: ServeConfig) -> Self {
+        ShardedMaster {
+            cfg,
+            serve,
+            tick: Duration::from_millis(5),
+            drain_slots: 5000,
+            backpressure: None,
+            sample_every: None,
+            sample_cap: 4096,
+        }
+    }
+
+    /// Spawn one master thread per shard.  Shard i gets partition size
+    /// `partition_machines(machines, shards)[i]` and seed
+    /// `base.wrapping_add(i)` — shard 0 keeps the base seed, so a 1-shard
+    /// deployment is bit-identical to a plain [`Master`].
+    pub fn spawn(self) -> Result<ShardedHandle, String> {
+        self.serve.validate(self.cfg.machines)?;
+        if self.serve.shards > 1 && !self.cfg.machine_classes.is_empty() {
+            return Err(
+                "sharding a heterogeneous machine-class layout is not supported: \
+                 class counts cannot be split across disjoint partitions yet"
+                    .to_string(),
+            );
+        }
+        let parts = partition_machines(self.cfg.machines, self.serve.shards);
+        let mut shards = Vec::with_capacity(parts.len());
+        let mut metrics = Vec::with_capacity(parts.len());
+        for (i, &m) in parts.iter().enumerate() {
+            let mut cfg = self.cfg.clone();
+            cfg.machines = m;
+            cfg.seed = self.cfg.seed.wrapping_add(i as u64);
+            let mut master = Master::new(cfg);
+            master.tick = self.tick;
+            master.drain_slots = self.drain_slots;
+            if let Some(bp) = self.backpressure {
+                master.backpressure = bp;
+            }
+            metrics.push(master.metrics.clone());
+            shards.push(master.spawn()?);
+        }
+        let loads = metrics.iter().map(|m| m.gauge("queued_tasks")).collect();
+        let router = ShardRouter::new(self.serve.route, self.serve.route_seed, loads);
+        let sampler = match self.sample_every {
+            Some(every) => Some(Sampler::spawn(metrics.clone(), every, self.sample_cap)?),
+            None => None,
+        };
+        Ok(ShardedHandle { router: Mutex::new(router), shards, metrics, sampler })
+    }
+}
+
+/// Client handle over the whole deployment: routes submissions, fans
+/// batches out to all shards in parallel, and aggregates shutdown reports.
+pub struct ShardedHandle {
+    router: Mutex<ShardRouter>,
+    shards: Vec<MasterHandle>,
+    metrics: Vec<MetricsRegistry>,
+    sampler: Option<Sampler>,
+}
+
+impl ShardedHandle {
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard i's metrics registry (shared with its master thread).
+    pub fn metrics(&self, shard: usize) -> &MetricsRegistry {
+        &self.metrics[shard]
+    }
+
+    /// Route one submission and submit it; returns `(shard, result)`.
+    pub fn submit(&self, sub: Submission) -> Result<(usize, SubmitResult), String> {
+        let shard = self.router.lock().unwrap().route(&sub);
+        let result = self.shards[shard].submit(sub)?;
+        Ok((shard, result))
+    }
+
+    /// Route a burst: one router pass, then one batched channel round trip
+    /// per shard — every shard's batch is **sent before any reply is
+    /// awaited**, so admission runs on all shards concurrently.  Results
+    /// come back in submission order, tagged with the serving shard.
+    pub fn submit_batch(
+        &self,
+        subs: &[Submission],
+    ) -> Result<Vec<(usize, SubmitResult)>, String> {
+        let n = self.shards.len();
+        let mut routed = Vec::with_capacity(subs.len());
+        let mut per_shard: Vec<Vec<Submission>> = vec![Vec::new(); n];
+        {
+            let mut router = self.router.lock().unwrap();
+            for sub in subs {
+                let shard = router.route(sub);
+                routed.push(shard);
+                per_shard[shard].push(*sub);
+            }
+        }
+        let mut pending: Vec<Option<mpsc::Receiver<Vec<SubmitResult>>>> = Vec::with_capacity(n);
+        for (shard, batch) in per_shard.into_iter().enumerate() {
+            if batch.is_empty() {
+                pending.push(None);
+            } else {
+                pending.push(Some(self.shards[shard].send_batch(batch)?));
+            }
+        }
+        let mut replies: Vec<std::vec::IntoIter<SubmitResult>> = Vec::with_capacity(n);
+        for rx in pending {
+            replies.push(match rx {
+                Some(rx) => rx
+                    .recv()
+                    .map_err(|_| "master dropped reply".to_string())?
+                    .into_iter(),
+                None => Vec::new().into_iter(),
+            });
+        }
+        Ok(routed
+            .into_iter()
+            .map(|shard| {
+                let r = replies[shard].next().expect("per-shard reply count matches routing");
+                (shard, r)
+            })
+            .collect())
+    }
+
+    /// Put **every** shard into drain before joining any (so shards drain
+    /// concurrently), then aggregate the per-shard reports and stop the
+    /// sampler.
+    pub fn shutdown(self) -> Result<ServeReport, String> {
+        for s in &self.shards {
+            s.begin_shutdown();
+        }
+        let mut reports = Vec::with_capacity(self.shards.len());
+        for s in self.shards {
+            reports.push(s.shutdown()?);
+        }
+        let series = self.sampler.map(|s| s.stop());
+        Ok(ServeReport { shards: reports, series })
+    }
+}
+
+/// Aggregate shutdown report: the per-shard [`Report`]s plus the sampled
+/// metrics time series (when sampling was enabled).
+#[derive(Debug)]
+pub struct ServeReport {
+    pub shards: Vec<Report>,
+    pub series: Option<TimeSeries>,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> usize {
+        self.shards.iter().map(|r| r.completed.len()).sum()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.shards.iter().map(|r| r.rejected).sum()
+    }
+
+    pub fn slots(&self) -> u64 {
+        self.shards.iter().map(|r| r.slots).sum()
+    }
+
+    /// Machine-weighted mean utilization across shards (each shard's
+    /// utilization is already normalized by its own partition size).
+    pub fn utilization(&self) -> f64 {
+        let total: usize = self.shards.iter().map(|r| r.machines).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.shards.iter().map(|r| r.utilization * r.machines as f64).sum::<f64>()
+            / total as f64
+    }
+
+    /// Plain-text per-shard breakdown for the CLI.
+    pub fn table(&self) -> String {
+        let mut out = String::from("shard  machines  completed  rejected  utilization\n");
+        for (i, r) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "{i:>5}  {:>8}  {:>9}  {:>8}  {:>11.4}\n",
+                r.machines,
+                r.completed.len(),
+                r.rejected,
+                r.utilization
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SchedulerKind;
+
+    fn sub(num_tasks: u32, mean_duration: f64) -> Submission {
+        Submission { num_tasks, mean_duration, alpha: 2.0 }
+    }
+
+    #[test]
+    fn partition_spreads_remainder() {
+        assert_eq!(partition_machines(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(partition_machines(8, 2), vec![4, 4]);
+        assert_eq!(partition_machines(7, 1), vec![7]);
+        assert_eq!(partition_machines(5, 5), vec![1, 1, 1, 1, 1]);
+        for (m, s) in [(1000, 3), (17, 4), (64, 5)] {
+            let p = partition_machines(m, s);
+            assert_eq!(p.iter().sum::<usize>(), m);
+            assert!(p.iter().max().unwrap() - p.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_rejects_more_shards_than_machines() {
+        partition_machines(2, 3);
+    }
+
+    fn loads(n: usize) -> Vec<Gauge> {
+        let reg = MetricsRegistry::new();
+        (0..n).map(|i| reg.gauge(&format!("q{i}"))).collect()
+    }
+
+    #[test]
+    fn hash_routing_is_deterministic_and_shape_keyed() {
+        let mut r1 = ShardRouter::new(RoutePolicy::Hash, 7, loads(4));
+        let mut r2 = ShardRouter::new(RoutePolicy::Hash, 7, loads(4));
+        let s = sub(42, 2.5);
+        let shard = r1.route(&s);
+        for _ in 0..10 {
+            assert_eq!(r1.route(&s), shard, "identical submissions pin one shard");
+            assert_eq!(r2.route(&s), shard, "routing is stateless");
+        }
+        // different shapes spread: at least two distinct shards among many
+        let mut seen = std::collections::BTreeSet::new();
+        for t in 1..=64 {
+            seen.insert(r1.route(&sub(t, 1.0)));
+        }
+        assert!(seen.len() > 1, "hash must not collapse to one shard");
+    }
+
+    #[test]
+    fn single_shard_routes_to_zero() {
+        let mut r = ShardRouter::new(RoutePolicy::P2c, 9, loads(1));
+        assert_eq!(r.route(&sub(3, 1.0)), 0);
+    }
+
+    #[test]
+    fn p2c_prefers_less_loaded_shard() {
+        let ls = loads(2);
+        ls[0].set(1000);
+        ls[1].set(0);
+        let mut r = ShardRouter::new(RoutePolicy::P2c, 1, ls);
+        let mut counts = [0usize; 2];
+        for t in 0u32..200 {
+            counts[r.route(&sub(t % 7 + 1, 1.0))] += 1;
+        }
+        assert!(
+            counts[1] > counts[0],
+            "p2c must favor the unloaded shard: {counts:?}"
+        );
+        // shard 0 is still reachable (both draws landing on it)
+        assert!(counts[0] > 0, "double-draw collisions keep the hot shard reachable");
+    }
+
+    #[test]
+    fn serve_report_aggregates() {
+        let mk = |machines: usize, rejected: u64, utilization: f64| Report {
+            completed: Vec::new(),
+            rejected,
+            machines,
+            slots: 10,
+            slots_fired: 10,
+            slots_skipped: 0,
+            utilization,
+        };
+        let rep = ServeReport { shards: vec![mk(30, 2, 0.5), mk(10, 3, 0.9)], series: None };
+        assert_eq!(rep.completed(), 0);
+        assert_eq!(rep.rejected(), 5);
+        assert_eq!(rep.slots(), 20);
+        assert!((rep.utilization() - 0.6).abs() < 1e-12); // (30*0.5 + 10*0.9)/40
+        assert!(rep.table().lines().count() == 3);
+    }
+
+    #[test]
+    fn two_shards_complete_submissions() {
+        let mut cfg = SimConfig::default();
+        cfg.machines = 32;
+        cfg.horizon = f64::INFINITY;
+        cfg.use_runtime = false;
+        cfg.scheduler = SchedulerKind::Sda;
+        let mut sm = ShardedMaster::new(cfg, ServeConfig { shards: 2, ..Default::default() });
+        sm.tick = Duration::from_micros(200);
+        sm.sample_every = Some(Duration::from_secs(3600));
+        let handle = sm.spawn().unwrap();
+        assert_eq!(handle.shards(), 2);
+        let subs: Vec<Submission> = (1..=10).map(|i| sub(i, 1.0)).collect();
+        let results = handle.submit_batch(&subs).unwrap();
+        assert_eq!(results.len(), 10);
+        assert!(results.iter().all(|(_, r)| r.is_accepted()));
+        let report = handle.shutdown().unwrap();
+        assert_eq!(report.completed(), 10, "every accepted job drains somewhere");
+        assert_eq!(report.shards.len(), 2);
+        assert_eq!(report.shards.iter().map(|r| r.machines).sum::<usize>(), 32);
+        let series = report.series.as_ref().unwrap();
+        assert_eq!(series.len(), 2, "stop() samples each shard once");
+        assert_eq!(
+            series.aggregate_latest().counters.get("jobs_submitted"),
+            Some(&10)
+        );
+    }
+}

@@ -17,8 +17,9 @@ use std::time::Duration;
 
 use specsim::cluster::machine;
 use specsim::cluster::trace;
-use specsim::config::{SimConfig, WorkloadConfig};
-use specsim::coordinator::master::{Master, Submission};
+use specsim::config::{RoutePolicy, ServeConfig, SimConfig, WorkloadConfig};
+use specsim::coordinator::master::Submission;
+use specsim::coordinator::shard::ShardedMaster;
 use specsim::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
 use specsim::figures::{self, Scale};
 use specsim::metrics::report::{self, SummaryRow};
@@ -42,7 +43,7 @@ COMMANDS
              [--threads N]
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
   bench      [--quick] [--out FILE] [--md FILE] [--check-wakeup]
-             [--check-scale]
+             [--check-scale] [--serve] [--check-serve] [--serve-csv FILE]
              standardized throughput suite: every policy (7 canonical +
              2 composed pipelines) x {light lambda=0.3, heavy
              lambda~0.9*lambda^U} x M in {500, 4000}, each cell on the
@@ -57,10 +58,16 @@ COMMANDS
              tables; --check-wakeup fails unless the (naive, light,
              M=4000) cell skips >= 50% of slots at >= 2x wall speedup;
              --check-scale fails unless the calendar backend at least
-             matches the heap on the (naive, light, M=1e5) cell
+             matches the heap on the (naive, light, M=1e5) cell;
+             --serve adds the sharded-coordinator cells (sustained
+             submissions/sec + submit latency at shards in {1, 2, 4},
+             time-series CSV to --serve-csv, default serve_metrics.csv)
+             and --check-serve fails unless 2 shards reach >= 1.4x the
+             1-shard throughput
   trace      --out FILE [--lambda L] [--horizon T] [--seed S]
-  serve      [--machines N] [--rate R] [--jobs J] [--policy spec]
-             [--artifacts-dir DIR]
+  serve      [--shards N] [--route hash|p2c] [--machines N] [--rate R]
+             [--jobs J] [--policy spec] [--route-seed S] [--sample-ms MS]
+             [--serve-csv FILE] [--artifacts-dir DIR]
 
 WORKLOAD / CLUSTER SCENARIO FLAGS
   --workload poisson|bursty|trace   arrival process (default poisson)
@@ -280,6 +287,8 @@ fn run() -> Result<(), String> {
             "quick",
             "check-wakeup",
             "check-scale",
+            "serve",
+            "check-serve",
             "help",
         ],
     )?;
@@ -434,22 +443,54 @@ fn run() -> Result<(), String> {
                     c.slowdown,
                 );
             })?;
-            let doc = specsim::util::bench::throughput_json(&cells, &scale, &flips, quick);
+            let mut serve_cells = Vec::new();
+            let mut serve_csv = String::new();
+            if args.has("serve") || args.has("check-serve") {
+                println!(
+                    "serve cells: shards in {:?}, hash routing, M={}, fixed workload",
+                    specsim::util::bench::SERVE_SHARDS,
+                    specsim::util::bench::SERVE_MACHINES,
+                );
+                let (sc, csv) = specsim::util::bench::run_serve_suite(quick, |c| {
+                    println!(
+                        "shards={:<2} {:>8} subs {:>12.0} subs/s  p50 {:>8.1}us  p99 {:>8.1}us",
+                        c.shards,
+                        c.submissions,
+                        c.submissions_per_sec,
+                        c.p50_submit_secs * 1e6,
+                        c.p99_submit_secs * 1e6,
+                    );
+                })?;
+                serve_cells = sc;
+                serve_csv = csv;
+            }
+            let doc =
+                specsim::util::bench::throughput_json(&cells, &scale, &flips, &serve_cells, quick);
             report::write_file(&out, &format!("{doc}\n")).map_err(|e| e.to_string())?;
+            if !serve_csv.is_empty() {
+                let csv_path = args.string("serve-csv", "serve_metrics.csv");
+                report::write_file(&csv_path, &serve_csv).map_err(|e| e.to_string())?;
+                println!("wrote the serve metrics time series to {csv_path}");
+            }
             if let Some(md) = args.str("md") {
                 let mut table = specsim::util::bench::throughput_markdown(&cells);
                 table.push('\n');
                 table.push_str(&specsim::util::bench::scale_markdown(&scale));
                 table.push('\n');
                 table.push_str(&specsim::util::bench::flip_markdown(&flips));
+                if !serve_cells.is_empty() {
+                    table.push('\n');
+                    table.push_str(&specsim::util::bench::serve_markdown(&serve_cells));
+                }
                 report::write_file(md, &table).map_err(|e| e.to_string())?;
                 println!("wrote the EXPERIMENTS.md-ready tables to {md}");
             }
             println!(
-                "wrote {} cells (+{} scale, +{} flip) to {out}",
+                "wrote {} cells (+{} scale, +{} flip, +{} serve) to {out}",
                 cells.len(),
                 scale.len(),
-                flips.len()
+                flips.len(),
+                serve_cells.len(),
             );
             if args.has("check-wakeup") {
                 specsim::util::bench::check_wakeup_gate(&cells)?;
@@ -458,6 +499,10 @@ fn run() -> Result<(), String> {
             if args.has("check-scale") {
                 specsim::util::bench::check_scale_gate(&scale)?;
                 println!("scale gate passed: calendar >= heap on (naive, light, M=1e5)");
+            }
+            if args.has("check-serve") {
+                specsim::util::bench::check_serve_gate(&serve_cells)?;
+                println!("serve gate passed: 2-shard throughput >= 1.4x 1-shard");
             }
         }
         "trace" => {
@@ -480,9 +525,14 @@ fn run() -> Result<(), String> {
             cfg.validate()?;
             let rate = args.f64("rate", 50.0)?;
             let jobs = args.u64("jobs", 500)?;
-            let master = Master::new(cfg);
-            let metrics = master.metrics.clone();
-            let handle = master.spawn()?;
+            let mut serve_cfg = ServeConfig::default();
+            serve_cfg.shards = args.usize("shards", 1)?;
+            serve_cfg.route = args.string("route", "hash").parse::<RoutePolicy>()?;
+            serve_cfg.route_seed = args.u64("route-seed", serve_cfg.route_seed)?;
+            serve_cfg.validate(cfg.machines)?;
+            let mut sharded = ShardedMaster::new(cfg, serve_cfg);
+            sharded.sample_every = Some(Duration::from_millis(args.u64("sample-ms", 250)?.max(1)));
+            let handle = sharded.spawn()?;
             let mut rng = Pcg64::new(42, 0);
             let mut accepted = 0u64;
             for _ in 0..jobs {
@@ -492,19 +542,44 @@ fn run() -> Result<(), String> {
                     mean_duration: rng.uniform_f64(1.0, 4.0),
                     alpha: 2.0,
                 };
-                if handle.submit(sub)?.is_accepted() {
+                let (_shard, result) = handle.submit(sub)?;
+                if result.is_accepted() {
                     accepted += 1;
                 }
             }
-            let report = handle.shutdown()?;
+            let rep = handle.shutdown()?;
             println!(
-                "submitted {jobs}, accepted {accepted}, completed {}",
-                report.completed.len()
+                "submitted {jobs} across {} shard(s) ({} routing), accepted \
+                 {accepted}, completed {}, rejected {}",
+                rep.shards.len(),
+                serve_cfg.route,
+                rep.completed(),
+                rep.rejected(),
             );
-            let mean_flow = report.completed.iter().map(|r| r.flowtime).sum::<f64>()
-                / report.completed.len().max(1) as f64;
+            let n_done: usize = rep.shards.iter().map(|r| r.completed.len()).sum();
+            let mean_flow = rep
+                .shards
+                .iter()
+                .flat_map(|r| r.completed.iter())
+                .map(|r| r.flowtime)
+                .sum::<f64>()
+                / n_done.max(1) as f64;
             println!("mean flowtime (virtual units): {mean_flow:.3}");
-            println!("--- metrics ---\n{}", metrics.render());
+            print!("{}", rep.table());
+            if let Some(series) = &rep.series {
+                if let Some(path) = args.str("serve-csv") {
+                    report::write_file(path, &series.csv()).map_err(|e| e.to_string())?;
+                    println!("wrote the metrics time series to {path}");
+                }
+                let agg = series.aggregate_latest();
+                println!("--- aggregate metrics (latest sample per shard) ---");
+                for (name, v) in &agg.counters {
+                    println!("{name:<24} {v}");
+                }
+                for (name, v) in &agg.gauges {
+                    println!("{name:<24} {v}");
+                }
+            }
         }
         "help" | "--help" | "-h" => println!("{USAGE}"),
         other => return Err(format!("unknown command '{other}'\n\n{USAGE}")),

@@ -27,8 +27,12 @@ use crate::cluster::event::EventQueueKind;
 use crate::cluster::generator;
 use crate::cluster::machine::SlowdownConfig;
 use crate::cluster::sim::{SimResult, Simulator, Workload};
-use crate::config::{SimConfig, WorkloadConfig};
+use crate::config::{RoutePolicy, ServeConfig, SimConfig, WorkloadConfig};
+use crate::coordinator::backpressure::Backpressure;
+use crate::coordinator::shard::{ShardedHandle, ShardedMaster};
+use crate::coordinator::Submission;
 use crate::scheduler::{self, SchedulerKind};
+use crate::stats::Pcg64;
 
 use super::json::Json;
 
@@ -93,7 +97,10 @@ pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Meas
 /// v4: the `flip_cells` array — the (sda, light, M = 4000) cell with the
 /// ON/OFF Markov slowdown process enabled vs the static slowdown
 /// scenario, pricing the `SlowdownFlip` kill/re-insert traffic.
-pub const BENCH_SCHEMA: &str = "specsim-bench-v4";
+/// v5: the `serve_cells` array — sustained submissions/sec and submit
+/// latency percentiles of the sharded live coordinator at
+/// shards ∈ {1, 2, 4} on a fixed submission workload (`bench --serve`).
+pub const BENCH_SCHEMA: &str = "specsim-bench-v5";
 
 /// The suite's machine-count axis.
 pub const SUITE_MACHINES: [usize; 2] = [500, 4000];
@@ -634,6 +641,239 @@ pub fn scale_markdown(cells: &[ScaleCell]) -> String {
     out
 }
 
+// ----- the sharded serve-plane suite --------------------------------------
+
+/// The serve suite's shard-count axis.
+pub const SERVE_SHARDS: [usize; 3] = [1, 2, 4];
+
+/// Machines per serve deployment (divisible by every shard count).
+pub const SERVE_MACHINES: usize = 64;
+
+/// One serve cell: a fresh N-shard deployment fed the fixed submission
+/// workload through batched submits, timed client-side.
+#[derive(Clone, Debug)]
+pub struct ServeCell {
+    pub shards: usize,
+    /// Routing policy label (`"hash"` in the standard suite).
+    pub route: String,
+    pub machines: usize,
+    /// Bulk submissions per pass.
+    pub submissions: usize,
+    /// Submissions per batched round trip.
+    pub batch: usize,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// Best-of-N wall-clock of the bulk phase.
+    pub wall_secs: f64,
+    /// `submissions / wall_secs` — the headline serve-plane metric.
+    pub submissions_per_sec: f64,
+    /// Median single-submit round-trip latency (dedicated probe phase on
+    /// an unloaded deployment).
+    pub p50_submit_secs: f64,
+    /// 99th-percentile single-submit round-trip latency.
+    pub p99_submit_secs: f64,
+    /// Jobs drained before the capped shutdown cut the drain short.
+    pub completed_jobs: usize,
+}
+
+impl ServeCell {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("shards".into(), Json::Num(self.shards as f64));
+        m.insert("route".into(), Json::Str(self.route.clone()));
+        m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("submissions".into(), Json::Num(self.submissions as f64));
+        m.insert("batch".into(), Json::Num(self.batch as f64));
+        m.insert("accepted".into(), Json::Num(self.accepted as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        m.insert("submissions_per_sec".into(), Json::Num(self.submissions_per_sec));
+        m.insert("p50_submit_secs".into(), Json::Num(self.p50_submit_secs));
+        m.insert("p99_submit_secs".into(), Json::Num(self.p99_submit_secs));
+        m.insert("completed_jobs".into(), Json::Num(self.completed_jobs as f64));
+        Json::Obj(m)
+    }
+}
+
+/// The fixed serve workload: `n` submissions from a dedicated seeded
+/// stream (task count ~ U{1..100}, mean duration ~ U[1, 4], α = 2 — the
+/// paper's job mix), identical across shard counts so every cell admits
+/// the same jobs.
+fn serve_workload(n: usize, seed: u64) -> Vec<Submission> {
+    let mut rng = Pcg64::new(seed, 0xbe9c);
+    (0..n)
+        .map(|_| Submission {
+            num_tasks: rng.uniform_u64(1, 100) as u32,
+            mean_duration: rng.uniform_f64(1.0, 4.0),
+            alpha: 2.0,
+        })
+        .collect()
+}
+
+/// A fresh deployment for one serve measurement.  Hour-long tick: no slot
+/// boundary fires during the measurement, so the cell times the pure
+/// submission path (routing, channel, admission, `add_job`) rather than
+/// racing the scheduler for the shard threads.  Watermarks sit far above
+/// the bulk backlog so nothing rejects — a reject skips `add_job`, which
+/// would let a rejecting cell look faster than an admitting one.  The
+/// capped drain (`drain_slots`) keeps shutdown bounded despite the huge
+/// undrained backlog.
+fn spawn_serve_deployment(shards: usize, sample: bool) -> Result<ShardedHandle, String> {
+    let mut cfg = SimConfig::default();
+    cfg.machines = SERVE_MACHINES;
+    cfg.horizon = f64::INFINITY;
+    cfg.use_runtime = false;
+    cfg.scheduler = SchedulerKind::Sda;
+    let serve = ServeConfig { shards, route: RoutePolicy::Hash, ..Default::default() };
+    let mut sm = ShardedMaster::new(cfg, serve);
+    sm.tick = Duration::from_secs(3600);
+    sm.drain_slots = 50;
+    sm.backpressure = Some(Backpressure::new(usize::MAX / 4, usize::MAX / 2));
+    if sample {
+        sm.sample_every = Some(Duration::from_millis(20));
+    }
+    sm.spawn()
+}
+
+/// Measure one serve cell: a probe phase (single submits on a fresh,
+/// unloaded deployment → p50/p99 round-trip latency), then `passes` bulk
+/// phases on fresh deployments (batched submits, best wall-clock kept).
+/// Returns the cell plus the best pass's sampled metrics CSV.
+fn measure_serve_cell(
+    shards: usize,
+    subs: &[Submission],
+    batch: usize,
+    passes: u32,
+    probes: usize,
+) -> Result<(ServeCell, String), String> {
+    assert!(passes >= 1 && probes >= 1);
+    // latency probes: fresh deployment, no sampler, no backlog
+    let mut lat = Vec::with_capacity(probes);
+    {
+        let handle = spawn_serve_deployment(shards, false)?;
+        for sub in serve_workload(probes, 0x960be) {
+            let t0 = Instant::now();
+            handle.submit(sub)?;
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        let _ = handle.shutdown()?;
+    }
+    lat.sort_by(f64::total_cmp);
+    let p50 = lat[lat.len() / 2];
+    let p99 = lat[(lat.len() * 99) / 100];
+    // bulk passes: best-of-N against scheduler noise
+    let mut best: Option<(f64, u64, u64, usize, String)> = None;
+    for _ in 0..passes {
+        let handle = spawn_serve_deployment(shards, true)?;
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        let t0 = Instant::now();
+        for chunk in subs.chunks(batch) {
+            for (_, r) in handle.submit_batch(chunk)? {
+                if r.is_accepted() {
+                    accepted += 1;
+                } else {
+                    rejected += 1;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let report = handle.shutdown()?;
+        let csv = report.series.map(|s| s.csv()).unwrap_or_default();
+        let completed = report.shards.iter().map(|r| r.completed.len()).sum();
+        let better = match &best {
+            None => true,
+            Some((w, ..)) => wall < *w,
+        };
+        if better {
+            best = Some((wall, accepted, rejected, completed, csv));
+        }
+    }
+    let (wall, accepted, rejected, completed, csv) = best.expect("passes >= 1");
+    let cell = ServeCell {
+        shards,
+        route: RoutePolicy::Hash.to_string(),
+        machines: SERVE_MACHINES,
+        submissions: subs.len(),
+        batch,
+        accepted,
+        rejected,
+        wall_secs: wall,
+        submissions_per_sec: subs.len() as f64 / wall.max(1e-12),
+        p50_submit_secs: p50,
+        p99_submit_secs: p99,
+        completed_jobs: completed,
+    };
+    Ok((cell, csv))
+}
+
+/// Run the serve suite: [`SERVE_SHARDS`] cells on the identical fixed
+/// workload.  Returns the cells plus the concatenated per-cell metrics
+/// time-series CSV (cells separated by `# serve cell:` comment lines).
+pub fn run_serve_suite(
+    quick: bool,
+    mut progress: impl FnMut(&ServeCell),
+) -> Result<(Vec<ServeCell>, String), String> {
+    let submissions = if quick { 30_000 } else { 120_000 };
+    let subs = serve_workload(submissions, 0x5e7e);
+    let mut cells = Vec::new();
+    let mut csv = String::new();
+    for &shards in &SERVE_SHARDS {
+        let (cell, cell_csv) = measure_serve_cell(shards, &subs, 256, 3, 200)?;
+        csv.push_str(&format!("# serve cell: shards={} route={}\n", cell.shards, cell.route));
+        csv.push_str(&cell_csv);
+        progress(&cell);
+        cells.push(cell);
+    }
+    Ok((cells, csv))
+}
+
+/// The serve acceptance gate CI enforces (`bench --serve --check-serve`):
+/// 2-shard sustained throughput must reach at least 1.4× the 1-shard cell.
+pub fn check_serve_gate(cells: &[ServeCell]) -> Result<(), String> {
+    let find = |n: usize| {
+        cells
+            .iter()
+            .find(|c| c.shards == n && c.route == "hash")
+            .ok_or_else(|| format!("serve gate: the {n}-shard hash cell is missing"))
+    };
+    let one = find(1)?;
+    let two = find(2)?;
+    let ratio = two.submissions_per_sec / one.submissions_per_sec.max(1e-12);
+    if ratio < 1.4 {
+        return Err(format!(
+            "serve gate: 2-shard throughput at {ratio:.2}x the 1-shard cell (< 1.4x) — \
+             {:.0} vs {:.0} submissions/sec",
+            two.submissions_per_sec, one.submissions_per_sec
+        ));
+    }
+    Ok(())
+}
+
+/// Render the serve cells as the EXPERIMENTS.md §Perf companion table.
+pub fn serve_markdown(cells: &[ServeCell]) -> String {
+    let mut out = String::from(
+        "| shards | route | M | submissions | batch | subs/sec | p50 submit | p99 submit \
+         | rejected |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.0} | {:.1} µs | {:.1} µs | {} |\n",
+            c.shards,
+            c.route,
+            c.machines,
+            c.submissions,
+            c.batch,
+            c.submissions_per_sec,
+            c.p50_submit_secs * 1e6,
+            c.p99_submit_secs * 1e6,
+            c.rejected
+        ));
+    }
+    out
+}
+
 /// Render a finished suite as the EXPERIMENTS.md §Perf markdown table —
 /// what CI appends to the job summary so the committed table can be
 /// refreshed from a real measured artifact by copy-paste.
@@ -662,12 +902,13 @@ pub fn throughput_markdown(cells: &[ThroughputCell]) -> String {
     out
 }
 
-/// Serialize a finished suite (throughput + scale + flip cells) to the
-/// `BENCH_sim.json` document.
+/// Serialize a finished suite (throughput + scale + flip + serve cells)
+/// to the `BENCH_sim.json` document.
 pub fn throughput_json(
     cells: &[ThroughputCell],
     scale: &[ScaleCell],
     flips: &[FlipCell],
+    serve: &[ServeCell],
     quick: bool,
 ) -> Json {
     let mut m = std::collections::BTreeMap::new();
@@ -694,15 +935,20 @@ pub fn throughput_json(
              light, M=4000) cell with the ON/OFF Markov slowdown flips \
              running vs the static slowdown scenario; overhead = \
              flips/static wall_secs (flip runs pop strictly more events). \
-             peak_rss_bytes = Linux VmHWM, reset \
+             serve_cells (v5) time the sharded live coordinator: sustained \
+             submissions/sec through batched submits and single-submit \
+             p50/p99 round-trip latency at shards in {1, 2, 4}, hash \
+             routing, on a fixed workload (empty unless bench ran with \
+             --serve). peak_rss_bytes = Linux VmHWM, reset \
              per run; null elsewhere. Regenerate: \
-             cargo run --release -- bench"
+             cargo run --release -- bench --serve"
                 .to_string(),
         ),
     );
     m.insert("cells".into(), Json::Arr(cells.iter().map(|c| c.to_json()).collect()));
     m.insert("scale_cells".into(), Json::Arr(scale.iter().map(|c| c.to_json()).collect()));
     m.insert("flip_cells".into(), Json::Arr(flips.iter().map(|c| c.to_json()).collect()));
+    m.insert("serve_cells".into(), Json::Arr(serve.iter().map(|c| c.to_json()).collect()));
     Json::Obj(m)
 }
 
@@ -780,7 +1026,7 @@ mod tests {
         let md = throughput_markdown(std::slice::from_ref(&cell));
         assert!(md.starts_with("| policy |"));
         assert!(md.contains("| sda | light | 40 | 0.1 |"));
-        let doc = throughput_json(&[cell], &[], &[], true);
+        let doc = throughput_json(&[cell], &[], &[], &[], true);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
         assert_eq!(back.get("measured"), Some(&Json::Bool(true)));
@@ -803,6 +1049,81 @@ mod tests {
         assert_eq!(back.get("scale_cells").unwrap().as_arr().unwrap().len(), 0);
         // v4: the flip_cells array is always present
         assert_eq!(back.get("flip_cells").unwrap().as_arr().unwrap().len(), 0);
+        // v5: the serve_cells array is always present
+        assert_eq!(back.get("serve_cells").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    fn synthetic_serve_cell(shards: usize, sps: f64) -> ServeCell {
+        ServeCell {
+            shards,
+            route: "hash".into(),
+            machines: SERVE_MACHINES,
+            submissions: 1000,
+            batch: 256,
+            accepted: 1000,
+            rejected: 0,
+            wall_secs: 1000.0 / sps,
+            submissions_per_sec: sps,
+            p50_submit_secs: 5e-6,
+            p99_submit_secs: 40e-6,
+            completed_jobs: 10,
+        }
+    }
+
+    #[test]
+    fn serve_cell_serializes_and_renders() {
+        let cell = synthetic_serve_cell(2, 50_000.0);
+        let j = cell.to_json();
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("route").unwrap().as_str(), Some("hash"));
+        assert!(j.get("submissions_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("p99_submit_secs").unwrap().as_f64().unwrap() > 0.0);
+        let md = serve_markdown(std::slice::from_ref(&cell));
+        assert!(md.starts_with("| shards |"));
+        assert!(md.contains("| 2 | hash | 64 | 1000 | 256 | 50000 |"));
+    }
+
+    #[test]
+    fn serve_gate_compares_one_and_two_shard_cells() {
+        let ok = vec![synthetic_serve_cell(1, 10_000.0), synthetic_serve_cell(2, 15_000.0)];
+        check_serve_gate(&ok).unwrap();
+        let flat = vec![synthetic_serve_cell(1, 10_000.0), synthetic_serve_cell(2, 12_000.0)];
+        let err = check_serve_gate(&flat).unwrap_err();
+        assert!(err.contains("serve gate"), "{err}");
+        assert!(check_serve_gate(&[synthetic_serve_cell(1, 10_000.0)]).is_err());
+        assert!(check_serve_gate(&[]).is_err());
+    }
+
+    /// A tiny end-to-end serve cell: the measurement machinery works
+    /// (deployment spawns, probes and bulk batches flow, CSV comes back).
+    /// Never asserts scaling — that's the CI gate's job on real hardware.
+    #[test]
+    fn measure_serve_cell_end_to_end() {
+        let subs = serve_workload(100, 0x5e7e);
+        let (cell, csv) = measure_serve_cell(2, &subs, 32, 1, 20).unwrap();
+        assert_eq!(cell.shards, 2);
+        assert_eq!(cell.submissions, 100);
+        assert_eq!(cell.accepted + cell.rejected, 100);
+        assert_eq!(cell.rejected, 0, "watermarks sit far above the bulk backlog");
+        assert!(cell.submissions_per_sec > 0.0);
+        assert!(cell.p50_submit_secs > 0.0 && cell.p50_submit_secs <= cell.p99_submit_secs);
+        assert!(csv.starts_with("t_secs,shard,kind,name,value"));
+        assert!(csv.contains("jobs_submitted"));
+    }
+
+    #[test]
+    fn serve_workload_is_deterministic_and_in_range() {
+        let a = serve_workload(50, 0x5e7e);
+        let b = serve_workload(50, 0x5e7e);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.num_tasks, y.num_tasks);
+            assert_eq!(x.mean_duration.to_bits(), y.mean_duration.to_bits());
+        }
+        for s in &a {
+            assert!((1..=100).contains(&s.num_tasks));
+            assert!((1.0..=4.0).contains(&s.mean_duration));
+            assert_eq!(s.alpha, 2.0);
+        }
     }
 
     /// The flip cell measures a genuinely different system from the

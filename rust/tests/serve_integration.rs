@@ -1,0 +1,147 @@
+//! Integration tests for the sharded serve plane (DESIGN.md §15):
+//! overload shedding under each routing policy, whole-deployment
+//! determinism, and bitwise 1-shard parity with the plain `Master`.
+//!
+//! Every test uses the long-tick trick: with an hour-long tick no slot
+//! boundary fires while submissions stream in, so the per-shard
+//! `queued_tasks` gauge stays frozen, admission is a pure function of the
+//! submission order, and the post-shutdown drain runs at full CPU.
+
+use std::time::Duration;
+
+use specsim::config::{RoutePolicy, ServeConfig, SimConfig};
+use specsim::coordinator::backpressure::Backpressure;
+use specsim::coordinator::master::{Master, Submission};
+use specsim::coordinator::shard::ShardedMaster;
+use specsim::scheduler::SchedulerKind;
+use specsim::stats::Pcg64;
+
+fn base_cfg(machines: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.machines = machines;
+    cfg.horizon = f64::INFINITY;
+    cfg.use_runtime = false;
+    cfg.scheduler = SchedulerKind::Sda;
+    cfg
+}
+
+/// A 2-shard deployment with tight watermarks and frozen slots, ready to
+/// be flooded.
+fn flood_deployment(route: RoutePolicy) -> ShardedMaster {
+    let mut sm = ShardedMaster::new(
+        base_cfg(8),
+        ServeConfig { shards: 2, route, ..Default::default() },
+    );
+    sm.tick = Duration::from_secs(3600);
+    sm.drain_slots = 50;
+    sm.backpressure = Some(Backpressure::new(8, 16));
+    sm
+}
+
+fn same_sub() -> Submission {
+    Submission { num_tasks: 4, mean_duration: 5.0, alpha: 2.0 }
+}
+
+#[test]
+fn hash_flood_confines_rejects_to_one_shard() {
+    // identical submissions hash to one shard, so the flood must trip that
+    // shard's high watermark while the other shard never sees traffic
+    let handle = flood_deployment(RoutePolicy::Hash).spawn().unwrap();
+    let subs = vec![same_sub(); 200];
+    let results = handle.submit_batch(&subs).unwrap();
+    let hot = results[0].0;
+    assert!(results.iter().all(|&(s, _)| s == hot), "hash pins one shard");
+    let accepted = results.iter().filter(|(_, r)| r.is_accepted()).count();
+    assert_eq!(accepted, 4, "4 jobs x 4 tasks reach high watermark 16");
+    let rep = handle.shutdown().unwrap();
+    assert_eq!(rep.rejected(), 196);
+    assert_eq!(rep.shards[hot].rejected, 196, "rejects stay on the hot shard");
+    let cold = 1 - hot;
+    assert_eq!(rep.shards[cold].rejected, 0);
+    assert_eq!(rep.shards[cold].completed.len(), 0, "cold shard saw nothing");
+}
+
+#[test]
+fn p2c_flood_spreads_rejects_across_shards() {
+    // with frozen gauges p2c ties on every comparison and degrades to a
+    // uniform first draw, so the same flood lands on both shards and both
+    // trip their watermarks
+    let handle = flood_deployment(RoutePolicy::P2c).spawn().unwrap();
+    let subs = vec![same_sub(); 300];
+    let results = handle.submit_batch(&subs).unwrap();
+    let to_shard_1 = results.iter().filter(|&&(s, _)| s == 1).count();
+    assert!(to_shard_1 > 0 && to_shard_1 < 300, "p2c spreads the flood");
+    let rep = handle.shutdown().unwrap();
+    assert!(rep.shards[0].rejected > 0, "shard 0 must shed load");
+    assert!(rep.shards[1].rejected > 0, "shard 1 must shed load");
+    let accepted = results.iter().filter(|(_, r)| r.is_accepted()).count();
+    assert_eq!(accepted as u64 + rep.rejected(), 300);
+}
+
+/// Varied workload for the determinism runs.
+fn varied_subs(n: usize) -> Vec<Submission> {
+    let mut rng = Pcg64::new(5, 77);
+    (0..n)
+        .map(|_| Submission {
+            num_tasks: rng.uniform_u64(1, 8) as u32,
+            mean_duration: rng.uniform_f64(1.0, 2.0),
+            alpha: 2.0,
+        })
+        .collect()
+}
+
+#[test]
+fn same_seed_and_policy_replays_identical_shard_decisions() {
+    for route in [RoutePolicy::Hash, RoutePolicy::P2c] {
+        let run = || -> Vec<(usize, bool)> {
+            let handle = flood_deployment(route).spawn().unwrap();
+            let results = handle.submit_batch(&varied_subs(60)).unwrap();
+            let out =
+                results.iter().map(|&(shard, r)| (shard, r.is_accepted())).collect();
+            let _ = handle.shutdown();
+            out
+        };
+        assert_eq!(
+            run(),
+            run(),
+            "same seed + {route} routing must replay the exact per-shard \
+             accept/reject sequence"
+        );
+    }
+}
+
+#[test]
+fn single_shard_is_bit_identical_to_plain_master() {
+    // same cfg, same seed, same frozen-slot submissions: the 1-shard
+    // deployment must produce the plain master's exact job records
+    let subs = varied_subs(20);
+    let mut master = Master::new(base_cfg(16));
+    master.tick = Duration::from_secs(3600);
+    master.drain_slots = 10_000;
+    let handle = master.spawn().unwrap();
+    let plain_results = handle.submit_batch(subs.clone()).unwrap();
+    let plain = handle.shutdown().unwrap();
+
+    let mut sm = ShardedMaster::new(base_cfg(16), ServeConfig::default());
+    sm.tick = Duration::from_secs(3600);
+    sm.drain_slots = 10_000;
+    let handle = sm.spawn().unwrap();
+    assert_eq!(handle.shards(), 1);
+    let sharded_results = handle.submit_batch(&subs).unwrap();
+    let sharded = handle.shutdown().unwrap();
+
+    assert_eq!(
+        plain_results,
+        sharded_results.iter().map(|&(_, r)| r).collect::<Vec<_>>(),
+        "admission decisions must match"
+    );
+    assert!(sharded_results.iter().all(|&(s, _)| s == 0));
+    assert_eq!(sharded.shards.len(), 1);
+    assert_eq!(plain.machines, sharded.shards[0].machines);
+    assert_eq!(plain.rejected, sharded.shards[0].rejected);
+    assert_eq!(
+        plain.completed, sharded.shards[0].completed,
+        "1-shard deployment must replay the plain master's job records bitwise"
+    );
+    assert!(!plain.completed.is_empty(), "the parity set must be non-trivial");
+}
