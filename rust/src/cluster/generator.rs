@@ -35,7 +35,7 @@ pub fn generate(cfg: &WorkloadConfig, horizon: f64, seed: u64) -> Workload {
             seed,
         ),
         WorkloadConfig::SingleJob { tasks, mean, alpha } => single_job(*tasks, *mean, *alpha, seed),
-        WorkloadConfig::Trace { path } => {
+        WorkloadConfig::Trace { path, .. } => {
             trace::load(path).unwrap_or_else(|e| panic!("trace {path}: {e}"))
         }
     }

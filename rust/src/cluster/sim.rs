@@ -20,9 +20,10 @@
 use std::collections::BTreeSet;
 
 use crate::config::SimConfig;
-use crate::metrics::JobRecord;
+use crate::metrics::{JobRecord, StreamedJobStats};
 use crate::scheduler::Scheduler;
 use crate::stats::{Cdf, Pcg64};
+use crate::workload::{JobSource, Lookahead, SourcedJob};
 
 use super::event::{Event, EventQueue};
 use super::index::SchedIndex;
@@ -31,7 +32,7 @@ use super::machine::{Assignment, MachinePool, SlowdownConfig};
 
 /// Pre-sampled workload: the job specs plus the first-copy duration of every
 /// task (policy-independent).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Workload {
     pub specs: Vec<JobSpec>,
     pub first_durations: Vec<Vec<f64>>,
@@ -195,12 +196,34 @@ impl Cluster {
         id
     }
 
-    /// Live-path arena hygiene: reuse the task/copy rows of completed
-    /// jobs once no event-queue entry references them any more
-    /// (`stranded == 0` — killed copies' dead entries either popped as
-    /// no-ops or were compacted away).  Batch runs never call this, so
-    /// the trace path keeps every row — and stays bit-identical to the
-    /// per-job layout by construction.
+    /// Streaming replay: admit a sourced job at its arrival instant.
+    ///
+    /// Mirrors the eager construction exactly — `root` is the same
+    /// `Pcg64::new(seed, stream)` RNG `Cluster::new` splits per job, the
+    /// splits happen in the same dense-id order, and arena rows allocate
+    /// in the same order — so an uncapped streamed run is bit-identical
+    /// to materializing the workload up front (DESIGN.md §16).
+    pub(crate) fn admit_streamed(&mut self, job: SourcedJob, root: &mut Pcg64) {
+        let id = JobId(self.jobs.len() as u32);
+        debug_assert_eq!(job.spec.id, id, "streamed jobs must carry dense ids");
+        self.job_rngs.push(root.split(id.0 as u64 + 1));
+        let base = self.arena.alloc_tasks(job.spec.num_tasks);
+        self.first_durations.push(job.durations);
+        self.jobs.push(JobState::new(JobSpec { id, ..job.spec }, base));
+        self.index.push_job();
+        self.arrive(id);
+    }
+
+    /// Arena hygiene: reuse the task/copy rows (and drop the first-copy
+    /// duration buffers) of completed jobs once no event-queue entry
+    /// references them any more (`stranded == 0` — killed copies' dead
+    /// entries either popped as no-ops or were compacted away).  Called by
+    /// the live path's `add_job` and by `--max-resident-jobs`-capped batch
+    /// runs; uncapped batch runs never call this, so the trace path keeps
+    /// every row — and stays bit-identical to the per-job layout by
+    /// construction.  (Recycling reorders only which arena rows back which
+    /// tasks, never any sampled value or event order, so capped and
+    /// uncapped runs simulate identical dynamics.)
     fn recycle_retired(&mut self) {
         let mut i = 0;
         while i < self.pending_recycle.len() {
@@ -208,10 +231,26 @@ impl Cluster {
             let job = &self.jobs[id.0 as usize];
             if job.stranded == 0 {
                 self.arena.recycle_tasks(job.base, job.spec.num_tasks);
+                self.first_durations[id.0 as usize] = Vec::new();
                 self.pending_recycle.swap_remove(i);
             } else {
                 i += 1;
             }
+        }
+    }
+
+    /// Capped-mode record hygiene: once `completed` reaches
+    /// `cfg.max_resident_jobs`, absorb every retained record into the
+    /// streaming sketches and recycle the finished jobs' arena rows and
+    /// duration buffers.  Memory then scales with the cap, not the
+    /// workload.  No-op below the cap; panics if called uncapped.
+    pub(crate) fn drain_completed_into(&mut self, sink: &mut StreamedJobStats) {
+        let cap = self.cfg.max_resident_jobs.expect("drain only runs when capped");
+        if self.completed.len() >= cap {
+            for r in self.completed.drain(..) {
+                sink.absorb(&r);
+            }
+            self.recycle_retired();
         }
     }
 
@@ -802,6 +841,11 @@ pub struct SimResult {
     /// O(everything) scans used to live.  Timing only; never fed back
     /// into the simulation.
     pub slot_hook_secs: f64,
+    /// Bounded-memory aggregation from a `--max-resident-jobs`-capped run:
+    /// the records drained out of `completed` mid-run live on here as
+    /// Welford moments + P² percentile sketches.  `None` on uncapped runs
+    /// (every record retained in `completed`).
+    pub streamed: Option<StreamedJobStats>,
 }
 
 impl SimResult {
@@ -932,6 +976,18 @@ impl SlotGate {
 pub struct Simulator {
     pub cluster: Cluster,
     scheduler: Box<dyn Scheduler>,
+    /// Lazy arrival feed for streaming replay (`Simulator::from_source`):
+    /// jobs are pulled through the bounded lookahead window and admitted
+    /// exactly where the eager loop would pop their `Arrival` events.
+    /// `None` = eager mode (every arrival pre-pushed into the queue).
+    stream: Option<StreamFeed>,
+}
+
+struct StreamFeed {
+    pending: Lookahead,
+    /// The per-job RNG root `Cluster::new` would have split eagerly;
+    /// `admit_streamed` splits it at admission time in the same order.
+    root: Pcg64,
 }
 
 impl Simulator {
@@ -941,7 +997,35 @@ impl Simulator {
             let t = job.spec.arrival;
             cluster.events.push(t, Event::Arrival(JobId(i as u32)));
         }
-        Simulator { cluster, scheduler }
+        Simulator { cluster, scheduler, stream: None }
+    }
+
+    /// Streaming replay: pull arrivals lazily from `source` as the clock
+    /// advances, holding at most `window` un-admitted jobs resident
+    /// (`0` selects [`crate::workload::DEFAULT_WINDOW`]).
+    ///
+    /// An uncapped streamed run is bit-identical to `Simulator::new` over
+    /// the materialized workload: the cluster starts from the same empty
+    /// construction (same seed-stream RNG layout), and each admission
+    /// replays the eager per-job RNG split in dense-id order.  The one
+    /// measure-zero exception: a job arriving at the exact instant of a
+    /// machine's *initial* `SlowdownFlip` event admits before the flip
+    /// here but after it eagerly (DESIGN.md §16).
+    pub fn from_source(
+        cfg: SimConfig,
+        source: Box<dyn JobSource>,
+        window: usize,
+        scheduler: Box<dyn Scheduler>,
+    ) -> Self {
+        let root = Pcg64::new(cfg.seed, 0x5eed);
+        let cluster =
+            Cluster::new(cfg, Workload { specs: Vec::new(), first_durations: Vec::new() }, 0x5eed);
+        let window = if window == 0 { crate::workload::DEFAULT_WINDOW } else { window };
+        Simulator {
+            cluster,
+            scheduler,
+            stream: Some(StreamFeed { pending: Lookahead::new(source, window), root }),
+        }
     }
 
     /// Run to the horizon and aggregate.
@@ -953,6 +1037,8 @@ impl Simulator {
     pub fn run(mut self) -> SimResult {
         let horizon = self.cluster.cfg.horizon;
         let slot_dt = self.cluster.cfg.slot_dt;
+        let cap = self.cluster.cfg.max_resident_jobs;
+        let mut sink = cap.map(|_| StreamedJobStats::new());
         let mut gate = SlotGate::new(self.cluster.cfg.wakeup);
         let mut next_slot = 0.0_f64;
         let mut events_processed: u64 = 0;
@@ -961,6 +1047,31 @@ impl Simulator {
             // events strictly before the grid head — and at exactly the
             // grid head — go first (a slot observes its instant fully)
             let next_event = self.cluster.events.peek_time();
+            // a streamed arrival is admitted exactly where the eager loop
+            // would pop its Arrival event: it loses ties to nothing (the
+            // eager event was pushed at t = 0 with the lowest sequence
+            // numbers) and defers to the grid head like any event
+            let next_arrival = self.stream.as_mut().and_then(|f| f.pending.peek_arrival());
+            if let Some(feed) = &self.stream {
+                if next_arrival.is_none() {
+                    if let Some(e) = feed.pending.error() {
+                        panic!("trace replay failed: {e}");
+                    }
+                }
+            }
+            let take_arrival = next_arrival.is_some_and(|at| {
+                at <= horizon
+                    && next_event.is_none_or(|et| at <= et)
+                    && (!slot_pending || at <= next_slot)
+            });
+            if take_arrival {
+                let feed = self.stream.as_mut().expect("arrival implies a stream");
+                let job = feed.pending.take().expect("peeked arrival");
+                self.cluster.clock = job.spec.arrival;
+                events_processed += 1;
+                self.cluster.admit_streamed(job, &mut feed.root);
+                continue;
+            }
             let take_event = next_event.is_some_and(|et| !slot_pending || et <= next_slot);
             if take_event {
                 let (time, event) = self.cluster.events.pop().unwrap();
@@ -973,6 +1084,9 @@ impl Simulator {
                     Event::Arrival(id) => self.cluster.arrive(id),
                     Event::CopyFinish { task, copy, epoch } => {
                         self.cluster.copy_finished(task, copy, epoch);
+                        if let Some(sink) = &mut sink {
+                            self.cluster.drain_completed_into(sink);
+                        }
                     }
                     Event::Checkpoint { task, copy, epoch } => {
                         if self.cluster.reveal_copy(task, copy, epoch) {
@@ -989,15 +1103,23 @@ impl Simulator {
                 gate.slot(&mut self.cluster, self.scheduler.as_mut(), next_slot);
                 next_slot += slot_dt;
             } else {
-                break; // no events left, no slots within the horizon
+                break; // no arrivals or events left, no slots within the horizon
             }
         }
-        let cl = self.cluster;
+        let mut cl = self.cluster;
         let incomplete = cl
             .jobs
             .iter()
             .filter(|j| j.spec.arrival <= horizon && j.phase != JobPhase::Done)
             .count() as u64;
+        let streamed = sink.map(|mut s| {
+            // final drain: sketch the records still resident so capped
+            // aggregates cover every completed job
+            for r in cl.completed.drain(..) {
+                s.absorb(&r);
+            }
+            s
+        });
         SimResult {
             scheduler: self.scheduler.name().to_string(),
             utilization: cl.total_machine_time / (cl.machines.total() as f64 * horizon),
@@ -1011,9 +1133,11 @@ impl Simulator {
             ticks_skipped: gate.skipped,
             peak_event_queue: cl.events.peak_len(),
             slot_hook_secs: gate.hook.as_secs_f64(),
+            streamed,
         }
     }
 }
+
 
 #[cfg(test)]
 mod tests {

@@ -6,17 +6,42 @@
 //! Format (header line, then one line per job):
 //!   job,arrival,mu,alpha,num_tasks,durations...
 //! where `durations...` is `num_tasks` semicolon-separated floats.
+//!
+//! Parsing delegates to the streaming [`TraceReader`] in
+//! [`crate::workload`], so the whole-file and streaming paths share one
+//! grammar and report identical [`TraceError`] diagnostics.  These loaders
+//! still materialize the full [`Workload`]; for bounded-memory replay use
+//! [`crate::workload::StreamSource`].
 
 use std::fmt::Write as _;
 use std::fs;
+use std::io::Read;
 use std::path::Path;
 
-use crate::stats::Pareto;
+use crate::workload::{TraceError, TraceFormat, TraceReader};
 
-use super::job::{JobId, JobSpec};
+use super::job::JobSpec;
 use super::sim::Workload;
 
 pub const HEADER: &str = "job,arrival,mu,alpha,num_tasks,durations";
+
+/// Append one native-format row (no header) to `out` — the exact shape
+/// [`TraceReader`] parses back.  Shared by [`to_string`] and the CLI's
+/// streaming trace synthesis, which writes rows as it generates them.
+pub fn format_row(spec: &JobSpec, durs: &[f64], out: &mut String) {
+    let _ = write!(
+        out,
+        "{},{},{},{},{},",
+        spec.id.0, spec.arrival, spec.dist.mu, spec.dist.alpha, spec.num_tasks
+    );
+    for (i, d) in durs.iter().enumerate() {
+        if i > 0 {
+            out.push(';');
+        }
+        let _ = write!(out, "{d}");
+    }
+    out.push('\n');
+}
 
 /// Serialize a workload to the trace format.
 pub fn to_string(wl: &Workload) -> String {
@@ -24,81 +49,35 @@ pub fn to_string(wl: &Workload) -> String {
     out.push_str(HEADER);
     out.push('\n');
     for (spec, durs) in wl.specs.iter().zip(&wl.first_durations) {
-        let _ = write!(
-            out,
-            "{},{},{},{},{},",
-            spec.id.0, spec.arrival, spec.dist.mu, spec.dist.alpha, spec.num_tasks
-        );
-        for (i, d) in durs.iter().enumerate() {
-            if i > 0 {
-                out.push(';');
-            }
-            let _ = write!(out, "{d}");
-        }
-        out.push('\n');
+        format_row(spec, durs, &mut out);
     }
     out
 }
 
-/// Parse the trace format.
-pub fn from_string(text: &str) -> Result<Workload, String> {
-    let mut lines = text.lines();
-    match lines.next() {
-        Some(h) if h.trim() == HEADER => {}
-        other => return Err(format!("bad header: {other:?}")),
-    }
+fn collect<R: Read>(reader: TraceReader<R>) -> Result<Workload, TraceError> {
     let mut specs = Vec::new();
     let mut first_durations = Vec::new();
-    for (lineno, line) in lines.enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        let fields: Vec<&str> = line.splitn(6, ',').collect();
-        if fields.len() != 6 {
-            return Err(format!("line {}: expected 6 fields", lineno + 2));
-        }
-        let parse = |s: &str| -> Result<f64, String> {
-            s.parse().map_err(|e| format!("line {}: {e}", lineno + 2))
-        };
-        let id: u32 = fields[0]
-            .parse()
-            .map_err(|e| format!("line {}: {e}", lineno + 2))?;
-        let arrival = parse(fields[1])?;
-        let mu = parse(fields[2])?;
-        let alpha = parse(fields[3])?;
-        let num_tasks: u32 = fields[4]
-            .parse()
-            .map_err(|e| format!("line {}: {e}", lineno + 2))?;
-        let durs: Result<Vec<f64>, String> = fields[5].split(';').map(parse).collect();
-        let durs = durs?;
-        if durs.len() != num_tasks as usize {
-            return Err(format!(
-                "line {}: {} durations for {} tasks",
-                lineno + 2,
-                durs.len(),
-                num_tasks
-            ));
-        }
-        if id as usize != specs.len() {
-            return Err(format!("line {}: non-dense job id {id}", lineno + 2));
-        }
-        specs.push(JobSpec {
-            id: JobId(id),
-            arrival,
-            dist: Pareto::new(mu, alpha),
-            num_tasks,
-        });
-        first_durations.push(durs);
+    for row in reader {
+        let row = row?;
+        specs.push(row.spec);
+        first_durations.push(row.durations);
     }
     Ok(Workload { specs, first_durations })
+}
+
+/// Parse the trace format (native schema, header required).
+pub fn from_string(text: &str) -> Result<Workload, TraceError> {
+    collect(TraceReader::new(text.as_bytes(), "<string>", TraceFormat::Native))
 }
 
 pub fn save(wl: &Workload, path: impl AsRef<Path>) -> Result<(), String> {
     fs::write(path.as_ref(), to_string(wl)).map_err(|e| e.to_string())
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<Workload, String> {
-    from_string(&fs::read_to_string(path.as_ref()).map_err(|e| e.to_string())?)
+/// Materialize a whole trace file (any [`TraceFormat::Auto`]-detectable
+/// schema) into memory.
+pub fn load(path: impl AsRef<Path>) -> Result<Workload, TraceError> {
+    collect(TraceReader::open(path, TraceFormat::Auto)?)
 }
 
 #[cfg(test)]
@@ -130,13 +109,16 @@ mod tests {
     #[test]
     fn rejects_duration_mismatch() {
         let text = format!("{HEADER}\n0,0.0,1.0,2.0,3,1.5;2.5\n");
-        assert!(from_string(&text).unwrap_err().contains("durations"));
+        let err = from_string(&text).unwrap_err();
+        assert!(err.to_string().contains("durations"), "{err}");
+        assert_eq!(err.line(), Some(2));
     }
 
     #[test]
     fn rejects_non_dense_ids() {
         let text = format!("{HEADER}\n5,0.0,1.0,2.0,1,1.5\n");
-        assert!(from_string(&text).unwrap_err().contains("non-dense"));
+        let err = from_string(&text).unwrap_err();
+        assert!(err.to_string().contains("non-dense"), "{err}");
     }
 
     #[test]

@@ -89,6 +89,15 @@ pub struct SimConfig {
     pub p2_batch: usize,
     /// Collect a per-job record stream (disable for huge sweeps).
     pub record_jobs: bool,
+    /// Bounded-memory job accounting: once this many completed-job records
+    /// are retained, the simulator drains them into streaming sketches
+    /// (`metrics::StreamedJobStats` — Welford moments + P² percentile
+    /// markers) and recycles their task-arena rows and duration buffers.
+    /// `None` (the default) retains every record, the exact-percentile
+    /// path.  With a cap, a million-job trace replays in O(cap) memory;
+    /// the simulated dynamics are bit-identical either way — only the
+    /// metric aggregation switches from exact to sketched.
+    pub max_resident_jobs: Option<usize>,
     /// Demand-driven scheduler wakeups (the default): grid slots that are
     /// provably no-ops — no cluster mutation since the last fired slot
     /// and no time-dependent rule predicate due (`Scheduler::
@@ -141,6 +150,7 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".to_string(),
             p2_batch: 64,
             record_jobs: true,
+            max_resident_jobs: None,
             wakeup: true,
             sched_index: true,
             // SPECSIM_EVENT_QUEUE lets CI re-run the whole suite on the
@@ -203,6 +213,9 @@ impl SimConfig {
         }
         if self.clone_copies < 2 {
             errs.push("clone_copies must be >= 2 (cloning means extra copies)".to_string());
+        }
+        if self.max_resident_jobs == Some(0) {
+            errs.push("max_resident_jobs must be > 0".to_string());
         }
         if errs.is_empty() {
             Ok(())
@@ -274,6 +287,10 @@ impl SimConfig {
                 }
                 "p2_batch" => cfg.p2_batch = doc.i64(key).ok_or("p2_batch: int")? as usize,
                 "record_jobs" => cfg.record_jobs = doc.bool(key).ok_or("record_jobs: bool")?,
+                "max_resident_jobs" => {
+                    cfg.max_resident_jobs =
+                        Some(doc.i64(key).ok_or("max_resident_jobs: int")? as usize)
+                }
                 "wakeup" => cfg.wakeup = doc.bool(key).ok_or("wakeup: bool")?,
                 "sched_index" => cfg.sched_index = doc.bool(key).ok_or("sched_index: bool")?,
                 "event_queue" => {
@@ -336,6 +353,9 @@ impl SimConfig {
         let _ = writeln!(s, "artifacts_dir = \"{}\"", self.artifacts_dir);
         let _ = writeln!(s, "p2_batch = {}", self.p2_batch);
         let _ = writeln!(s, "record_jobs = {}", self.record_jobs);
+        if let Some(cap) = self.max_resident_jobs {
+            let _ = writeln!(s, "max_resident_jobs = {cap}");
+        }
         let _ = writeln!(s, "wakeup = {}", self.wakeup);
         let _ = writeln!(s, "sched_index = {}", self.sched_index);
         let _ = writeln!(s, "event_queue = \"{}\"", self.event_queue);
@@ -446,8 +466,24 @@ pub enum WorkloadConfig {
     },
     /// The Fig. 5 workload: one job with `tasks` tasks.
     SingleJob { tasks: u32, mean: f64, alpha: f64 },
-    /// Replay a recorded trace (see `cluster::trace`).
-    Trace { path: String },
+    /// Replay a recorded trace — whole-file via `cluster::trace::load`, or
+    /// streamed in bounded memory through `workload::StreamSource`.
+    Trace {
+        path: String,
+        /// On-disk schema; `Auto` sniffs the first line (native header /
+        /// JSONL object / `arrival,duration,tasks` CSV).
+        format: crate::workload::TraceFormat,
+        /// Streaming lookahead window: the max number of un-admitted jobs
+        /// resident while the simulator pulls arrivals.
+        window: usize,
+        /// Stop after this many jobs (`None` = the whole trace).
+        max_jobs: Option<u64>,
+        /// Override for `mean_tasks()`; when `None` the moment is derived
+        /// by a streaming pre-pass over the trace (`workload::scan`).
+        mean_tasks_hint: Option<f64>,
+        /// Override for `mean_duration()`; same pre-pass fallback.
+        mean_duration_hint: Option<f64>,
+    },
 }
 
 impl WorkloadConfig {
@@ -482,23 +518,54 @@ impl WorkloadConfig {
         }
     }
 
+    /// A trace workload with default streaming settings: autodetected
+    /// format, the default lookahead window, no job cap, moments derived
+    /// on demand from the pre-pass.
+    pub fn trace(path: impl Into<String>) -> Self {
+        WorkloadConfig::Trace {
+            path: path.into(),
+            format: crate::workload::TraceFormat::Auto,
+            window: crate::workload::DEFAULT_WINDOW,
+            max_jobs: None,
+            mean_tasks_hint: None,
+            mean_duration_hint: None,
+        }
+    }
+
     /// Mean tasks per job `E[m_i]`.
+    ///
+    /// For traces this is the explicit hint when present, otherwise one
+    /// streaming pre-pass over the file (each call re-scans — cache the
+    /// value or set the hint on hot paths); NaN only if the trace is
+    /// unreadable.
     pub fn mean_tasks(&self) -> f64 {
         match self {
             WorkloadConfig::Poisson { m_lo, m_hi, .. }
             | WorkloadConfig::Bursty { m_lo, m_hi, .. } => 0.5 * (*m_lo as f64 + *m_hi as f64),
             WorkloadConfig::SingleJob { tasks, .. } => *tasks as f64,
-            WorkloadConfig::Trace { .. } => f64::NAN,
+            WorkloadConfig::Trace { path, format, mean_tasks_hint, .. } => mean_tasks_hint
+                .unwrap_or_else(|| {
+                    crate::workload::scan(path, *format)
+                        .map(|s| s.tasks.mean())
+                        .unwrap_or(f64::NAN)
+                }),
         }
     }
 
     /// Mean task duration `E[s]`.
+    ///
+    /// Same hint-then-pre-pass contract as [`WorkloadConfig::mean_tasks`].
     pub fn mean_duration(&self) -> f64 {
         match self {
             WorkloadConfig::Poisson { mean_lo, mean_hi, .. }
             | WorkloadConfig::Bursty { mean_lo, mean_hi, .. } => 0.5 * (mean_lo + mean_hi),
             WorkloadConfig::SingleJob { mean, .. } => *mean,
-            WorkloadConfig::Trace { .. } => f64::NAN,
+            WorkloadConfig::Trace { path, format, mean_duration_hint, .. } => mean_duration_hint
+                .unwrap_or_else(|| {
+                    crate::workload::scan(path, *format)
+                        .map(|s| s.duration.mean())
+                        .unwrap_or(f64::NAN)
+                }),
         }
     }
 }
@@ -570,6 +637,45 @@ mod tests {
         assert!(!back.wakeup);
         // the policy-pipeline equivalence flag is gone with the monoliths
         assert!(SimConfig::from_toml("legacy_sched = true").is_err());
+    }
+
+    #[test]
+    fn max_resident_jobs_roundtrips_and_validates() {
+        assert_eq!(SimConfig::default().max_resident_jobs, None);
+        let cfg = SimConfig::from_toml("max_resident_jobs = 4096").unwrap();
+        assert_eq!(cfg.max_resident_jobs, Some(4096));
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.max_resident_jobs, Some(4096));
+        assert!(SimConfig::from_toml("max_resident_jobs = 0").is_err());
+    }
+
+    #[test]
+    fn trace_moments_use_hints_without_touching_disk() {
+        let mut w = WorkloadConfig::trace("/nonexistent/trace.csv");
+        // unreadable trace and no hints: NaN, but no panic
+        assert!(w.mean_tasks().is_nan());
+        assert!(w.mean_duration().is_nan());
+        if let WorkloadConfig::Trace { mean_tasks_hint, mean_duration_hint, .. } = &mut w {
+            *mean_tasks_hint = Some(50.5);
+            *mean_duration_hint = Some(2.5);
+        }
+        assert!((w.mean_tasks() - 50.5).abs() < 1e-12);
+        assert!((w.mean_duration() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_moments_derive_from_pre_pass() {
+        let dir = std::env::temp_dir().join("specsim_config_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("moments.csv");
+        let text = "job,arrival,mu,alpha,num_tasks,durations\n\
+                    0,0,1,2,2,1.5;2.5\n\
+                    1,1,2,2,4,2;2;2;2\n";
+        std::fs::write(&path, text).unwrap();
+        let w = WorkloadConfig::trace(path.to_str().unwrap());
+        assert!((w.mean_tasks() - 3.0).abs() < 1e-12);
+        // mean_duration averages dist.mean() = mu * alpha / (alpha - 1)
+        assert!((w.mean_duration() - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 use crate::cluster::job::JobId;
 use crate::cluster::sim::{Cluster, SlotGate};
 use crate::config::{SimConfig, WorkloadConfig};
-use crate::metrics::JobRecord;
+use crate::metrics::{JobRecord, StreamedJobStats};
 use crate::scheduler::{self, Scheduler};
 
 use super::backpressure::{Admission, Backpressure};
@@ -64,6 +64,11 @@ pub struct Report {
     pub slots_fired: u64,
     pub slots_skipped: u64,
     pub utilization: f64,
+    /// Streaming aggregates when the master ran with
+    /// `cfg.max_resident_jobs`: completed records were recycled into these
+    /// sketches as they drained, so `completed` above stays empty and
+    /// resident memory scales with the cap, not the submission volume.
+    pub streamed: Option<StreamedJobStats>,
 }
 
 /// Client handle: submit jobs, then shut down and collect the report.
@@ -211,6 +216,7 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
     let slot_dt = master.cfg.slot_dt;
     let bp = master.backpressure;
     let mut gate = SlotGate::new(master.cfg.wakeup);
+    let mut sink = master.cfg.max_resident_jobs.map(|_| StreamedJobStats::new());
     let mut cluster = Cluster::new_live(master.cfg);
     let metrics = master.metrics.clone();
     let jobs_in = metrics.counter("jobs_submitted");
@@ -263,7 +269,14 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
         cluster.advance_to(now, sched.as_mut());
         gate.slot(&mut cluster, sched.as_mut(), now);
         slots += 1;
-        jobs_done.add(cluster.completed.len() as u64 - jobs_done.get());
+        if let Some(sink) = &mut sink {
+            cluster.drain_completed_into(sink);
+        }
+        // completion gauge counts drained + resident so capped recycling
+        // never walks it backwards
+        let done_total =
+            sink.as_ref().map_or(0, |s| s.drained) + cluster.completed.len() as u64;
+        jobs_done.add(done_total - jobs_done.get());
         // O(1) reads: queued_tasks comes off the SchedIndex counter, and
         // stale-entry compaction keeps the event heap tracking live copies
         q_depth.set(cluster.queued_tasks() as i64);
@@ -272,6 +285,14 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
         if draining {
             let drained = cluster.running.is_empty() && cluster.queued.is_empty();
             if drained || drain_left == 0 {
+                let streamed = sink.map(|mut s| {
+                    // final drain: sketch the records still resident so
+                    // capped aggregates cover every completed job
+                    for r in cluster.completed.drain(..) {
+                        s.absorb(&r);
+                    }
+                    s
+                });
                 return Report {
                     utilization: cluster.total_machine_time
                         / (cluster.machines.total() as f64 * cluster.clock.max(1e-9)),
@@ -281,6 +302,7 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
                     slots,
                     slots_fired: gate.fired,
                     slots_skipped: gate.skipped,
+                    streamed,
                 };
             }
             drain_left -= 1;
@@ -356,6 +378,28 @@ mod tests {
         assert_eq!(sequential, batch, "batching must not change admission decisions");
         let accepted = batch.iter().filter(|&&a| a).count();
         assert_eq!(accepted, 4, "4 jobs x 4 tasks reach high watermark 16, rest reject");
+    }
+
+    #[test]
+    fn capped_master_streams_completions_into_sketches() {
+        let mut c = cfg(64);
+        c.max_resident_jobs = Some(4);
+        let mut master = Master::new(c);
+        master.tick = Duration::from_micros(200);
+        let metrics = master.metrics.clone();
+        let handle = master.spawn().unwrap();
+        for _ in 0..20 {
+            let r = handle
+                .submit(Submission { num_tasks: 5, mean_duration: 1.0, alpha: 2.0 })
+                .unwrap();
+            assert!(r.is_accepted());
+        }
+        let report = handle.shutdown().unwrap();
+        let s = report.streamed.as_ref().expect("capped run reports sketches");
+        assert_eq!(s.drained, 20, "every completion lands in the sketches");
+        assert!(report.completed.is_empty(), "records recycled, not retained");
+        assert!(s.flowtime.mean() > 0.0);
+        assert_eq!(metrics.counter("jobs_completed").get(), 20);
     }
 
     #[test]

@@ -262,8 +262,15 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Jobs completed across all shards — retained records plus any the
+    /// capped (`max_resident_jobs`) masters drained into their sketches.
     pub fn completed(&self) -> usize {
-        self.shards.iter().map(|r| r.completed.len()).sum()
+        self.shards
+            .iter()
+            .map(|r| {
+                r.completed.len() + r.streamed.as_ref().map_or(0, |s| s.drained as usize)
+            })
+            .sum()
     }
 
     pub fn rejected(&self) -> u64 {
@@ -289,12 +296,11 @@ impl ServeReport {
     pub fn table(&self) -> String {
         let mut out = String::from("shard  machines  completed  rejected  utilization\n");
         for (i, r) in self.shards.iter().enumerate() {
+            let done =
+                r.completed.len() + r.streamed.as_ref().map_or(0, |s| s.drained as usize);
             out.push_str(&format!(
                 "{i:>5}  {:>8}  {:>9}  {:>8}  {:>11.4}\n",
-                r.machines,
-                r.completed.len(),
-                r.rejected,
-                r.utilization
+                r.machines, done, r.rejected, r.utilization
             ));
         }
         out
@@ -386,6 +392,7 @@ mod tests {
             slots_fired: 10,
             slots_skipped: 0,
             utilization,
+            streamed: None,
         };
         let rep = ServeReport { shards: vec![mk(30, 2, 0.5), mk(10, 3, 0.9)], series: None };
         assert_eq!(rep.completed(), 0);

@@ -17,7 +17,9 @@ use std::sync::Mutex;
 
 use crate::cluster::generator;
 use crate::cluster::sim::{Simulator, Workload};
+use crate::config::WorkloadConfig;
 use crate::scheduler;
+use crate::workload;
 
 use super::result::{CellResult, SweepResult};
 use super::spec::ExperimentSpec;
@@ -76,9 +78,23 @@ impl Runner {
         base.validate()?;
         let (np, nl, ns) = (spec.policies.len(), spec.loads.len(), spec.seeds.len());
 
+        // A trace load point streams through the bounded-window source
+        // unless the spec asks for up-front materialization (the
+        // equivalence-test reference path).  Both paths are bit-identical;
+        // see `workload::source` and DESIGN.md §16.
+        let streams = |li: usize| {
+            matches!(spec.loads[li].workload, WorkloadConfig::Trace { .. })
+                && !spec.materialize_traces
+        };
+
         // Pre-sample each (load, seed) workload exactly once; generation is
-        // itself seed-deterministic, so it parallelizes safely.
+        // itself seed-deterministic, so it parallelizes safely.  Streamed
+        // trace load points get an empty placeholder: their jobs never
+        // materialize in memory.
         let cache: Vec<Workload> = run_parallel(nl * ns, spec.threads, |i| {
+            if streams(i / ns) {
+                return Workload::default();
+            }
             generator::generate(&spec.loads[i / ns].workload, base.horizon, spec.seeds[i % ns])
         });
 
@@ -88,16 +104,30 @@ impl Runner {
             run_parallel(np * nl * ns, spec.threads, |i| {
                 let (pi, li, si) = (i / (nl * ns), (i / ns) % nl, i % ns);
                 let policy = &spec.policies[pi];
+                let wl_cfg = &spec.loads[li].workload;
                 let mut cfg = base.clone();
                 cfg.scheduler = policy.scheduler;
                 cfg.seed = spec.seeds[si];
                 if let Some(patch) = &policy.patch {
                     patch(&mut cfg);
                 }
-                let workload = cache[li * ns + si].clone();
-                // built here, inside the worker: Scheduler is !Send
-                let sched = scheduler::build_for(&cfg, &spec.loads[li].workload, Some(&workload))?;
-                let result = Simulator::new(cfg, workload, sched).run();
+                let result = if streams(li) {
+                    // built here, inside the worker: Scheduler is !Send.
+                    // With no sampled workload, build_for derives the tail
+                    // index from the same single-pass trace scan the
+                    // materialized path's estimator reproduces bit-for-bit.
+                    let sched = scheduler::build_for(&cfg, wl_cfg, None)?;
+                    let source = workload::source_for(wl_cfg, cfg.horizon, cfg.seed)?;
+                    let window = match wl_cfg {
+                        WorkloadConfig::Trace { window, .. } => *window,
+                        _ => unreachable!("streams() only matches traces"),
+                    };
+                    Simulator::from_source(cfg, source, window, sched).run()
+                } else {
+                    let workload = cache[li * ns + si].clone();
+                    let sched = scheduler::build_for(&cfg, wl_cfg, Some(&workload))?;
+                    Simulator::new(cfg, workload, sched).run()
+                };
                 Ok(CellResult { policy: pi, load: li, seed: spec.seeds[si], result })
             });
 

@@ -187,6 +187,13 @@ pub struct ExperimentSpec {
     pub seeds: Vec<u64>,
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
+    /// Materialize trace workloads up front (`cluster::trace::load`)
+    /// instead of streaming them through the bounded-window
+    /// `workload::StreamSource` path.  `false` — the default — keeps a
+    /// million-job trace's resident footprint at the lookahead window;
+    /// both settings produce byte-identical sweep CSVs (pinned by
+    /// `tests/trace_replay.rs`).  Synthetic workloads are unaffected.
+    pub materialize_traces: bool,
 }
 
 impl ExperimentSpec {
@@ -200,6 +207,7 @@ impl ExperimentSpec {
             loads: Vec::new(),
             seeds,
             threads: 0,
+            materialize_traces: false,
         }
     }
 

@@ -31,6 +31,11 @@
 //!   slot loop, routing, backpressure and metrics export.
 //! * [`metrics`] — per-job flowtime/resource accounting and the per-figure
 //!   report writers used by the benchmark harness.
+//! * [`workload`] — streaming trace replay: chunked zero-dep CSV/JSONL
+//!   trace reading with structured diagnostics, the pull-based
+//!   [`workload::JobSource`] contract unifying generators / materialized
+//!   workloads / streamed traces, and the bounded lookahead window that
+//!   lets million-job traces run in O(window) workload memory.
 //! * [`experiment`] — the parallel sweep engine: declarative
 //!   scheduler x load x seed grids on homogeneous or heterogeneous
 //!   cluster scenarios, fanned out across scoped worker threads with a
@@ -52,6 +57,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod stats;
 pub mod util;
+pub mod workload;
 
 pub use config::{SimConfig, WorkloadConfig};
 pub use cluster::sim::{SimResult, Simulator};

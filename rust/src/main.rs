@@ -6,6 +6,7 @@
 //!              parallel, one worker per scheduler)
 //!   sweep      run a scheduler x lambda x seed grid through the
 //!              experiment engine and write the cell table as CSV
+//!   replay     stream a recorded trace into the live serve plane
 //!   figure     regenerate a paper figure's data series (fig1..fig6,
 //!              threshold, crossover, or `all`)
 //!   threshold  print the analytic cutoff lambda^U for a cluster
@@ -37,7 +38,10 @@ COMMANDS
              [--artifacts-dir DIR] [--no-runtime] [workload/cluster flags]
   compare    [--policies a,b,c] [--threads N] [same flags as simulate]
   sweep      [--policies a,b,c] [--lambdas 2,4,6] [--seeds 1,2,3]
-             [--threads N] [--out FILE] [same flags as simulate]
+             [--threads N] [--out FILE] [--rss-budget-mb MB]
+             [same flags as simulate]; --rss-budget-mb fails the run
+             when peak RSS (VmHWM) exceeds the budget — the CI memory
+             gate for streamed trace replays
   figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|crossover|all>
              [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
              [--threads N]
@@ -64,7 +68,19 @@ COMMANDS
              time-series CSV to --serve-csv, default serve_metrics.csv)
              and --check-serve fails unless 2 shards reach >= 1.4x the
              1-shard throughput
-  trace      --out FILE [--lambda L] [--horizon T] [--seed S]
+  trace      --out FILE [--lambda L] [--horizon T] [--seed S] [--jobs N]
+             with --jobs the trace is synthesized *streaming*: exactly N
+             jobs are generated and written through a buffered writer
+             (horizon defaults to unbounded), so a 10^6-job trace never
+             materializes in memory
+  replay     --trace FILE [--trace-format F] [--speedup X]
+             [--as-fast-as-possible] [--batch B] [--shards N]
+             [--route hash|p2c] [--machines N] [--policy spec]
+             [--route-seed S] [--sample-ms MS] [--serve-csv FILE]
+             pump a recorded trace through the sharded live masters,
+             pacing batches by recorded inter-arrival gaps scaled by
+             --speedup (default 1.0); --as-fast-as-possible drops the
+             pacing entirely
   serve      [--shards N] [--route hash|p2c] [--machines N] [--rate R]
              [--jobs J] [--policy spec] [--route-seed S] [--sample-ms MS]
              [--serve-csv FILE] [--artifacts-dir DIR]
@@ -73,7 +89,21 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
   --workload poisson|bursty|trace   arrival process (default poisson)
   --burst B --on-frac F --cycle C   bursty (MMPP) shape: ON rate = B*lambda,
                                     ON fraction F, mean cycle C time units
-  --trace FILE                      trace replay (with --workload trace)
+  --trace FILE                      trace replay (with --workload trace);
+                                    streamed through a bounded lookahead
+                                    window, never materialized
+  --trace-format auto|native|simple|jsonl
+                                    trace schema (default auto-detect;
+                                    simple = arrival,duration,tasks[,alpha])
+  --trace-window N                  streaming lookahead window in jobs
+                                    (default 1024)
+  --trace-max-jobs N                replay only the first N trace jobs
+                                    (0 = all)
+  --max-resident-jobs N             recycle completed job records into
+                                    streaming sketches once N are resident,
+                                    bounding memory for long replays
+                                    (0 = keep every record; identical
+                                    dynamics either way)
   --machine-classes \"2000x1.0,1000x0.5\"
                                     heterogeneous cluster: COUNTxSPEED groups
                                     (machine count is derived from the sum)
@@ -146,12 +176,19 @@ fn build_workload(args: &Args, lambda: f64) -> Result<WorkloadConfig, String> {
             }
             Ok(wl)
         }
-        "trace" => Ok(WorkloadConfig::Trace {
-            path: args
-                .str("trace")
-                .ok_or("--trace FILE required with --workload trace")?
-                .to_string(),
-        }),
+        "trace" => {
+            let mut wl = WorkloadConfig::trace(
+                args.str("trace")
+                    .ok_or("--trace FILE required with --workload trace")?,
+            );
+            if let WorkloadConfig::Trace { format, window, max_jobs, .. } = &mut wl {
+                *format = args.string("trace-format", "auto").parse()?;
+                *window = args.usize("trace-window", *window)?;
+                let cap = args.u64("trace-max-jobs", 0)?;
+                *max_jobs = (cap > 0).then_some(cap);
+            }
+            Ok(wl)
+        }
         other => Err(format!("unknown workload '{other}' (poisson|bursty|trace)")),
     }
 }
@@ -198,6 +235,10 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
         cfg.slot_dt = dt;
     }
     cfg.clone_copies = args.usize("clone-copies", cfg.clone_copies as usize)? as u32;
+    let cap = args.usize("max-resident-jobs", 0)?;
+    if cap > 0 {
+        cfg.max_resident_jobs = Some(cap);
+    }
     Ok(())
 }
 
@@ -257,6 +298,43 @@ fn run_kinds(
         .collect())
 }
 
+/// How long `replay` should sleep before submitting the batch that starts
+/// at recorded arrival `arrival`: the batch's wall-clock target is its
+/// offset from the trace's first arrival divided by `speedup`, measured
+/// from replay `start` — drift-free by construction.  `None` when pacing
+/// is off or the target is already behind.
+fn pacing_wait(
+    afap: bool,
+    arrival: f64,
+    first_arrival: f64,
+    speedup: f64,
+    start: std::time::Instant,
+) -> Option<Duration> {
+    if afap || !first_arrival.is_finite() {
+        return None;
+    }
+    Duration::from_secs_f64(((arrival - first_arrival) / speedup).max(0.0))
+        .checked_sub(start.elapsed())
+}
+
+/// Submit one replay batch (after an optional pacing sleep) and count the
+/// accepted jobs; clears the batch for reuse.
+fn replay_flush(
+    handle: &specsim::coordinator::shard::ShardedHandle,
+    batch: &mut Vec<Submission>,
+    wait: Option<Duration>,
+) -> Result<u64, String> {
+    if batch.is_empty() {
+        return Ok(0);
+    }
+    if let Some(w) = wait {
+        std::thread::sleep(w);
+    }
+    let results = handle.submit_batch(batch)?;
+    batch.clear();
+    Ok(results.iter().filter(|(_, r)| r.is_accepted()).count() as u64)
+}
+
 fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> Result<Vec<T>, String> {
     s.split(',')
         .map(|p| p.trim().parse().map_err(|_| format!("{what}: bad value '{p}'")))
@@ -289,6 +367,7 @@ fn run() -> Result<(), String> {
             "check-scale",
             "serve",
             "check-serve",
+            "as-fast-as-possible",
             "help",
         ],
     )?;
@@ -330,6 +409,18 @@ fn run() -> Result<(), String> {
             let out = args.string("out", "results/sweep.csv");
             report::write_file(&out, &report::sweep_csv(&sweep)).map_err(|e| e.to_string())?;
             println!("wrote {} cells to {out}", sweep.cells.len());
+            if let Some(budget_mb) = args.f64_opt("rss-budget-mb")? {
+                let peak = specsim::util::bench::peak_rss_bytes()
+                    .ok_or("--rss-budget-mb: VmHWM not readable on this platform")?;
+                let peak_mb = peak as f64 / (1024.0 * 1024.0);
+                println!("peak RSS {peak_mb:.1} MiB (budget {budget_mb} MiB)");
+                if peak_mb > budget_mb {
+                    return Err(format!(
+                        "peak RSS {peak_mb:.1} MiB exceeds the --rss-budget-mb {budget_mb} \
+                         MiB budget"
+                    ));
+                }
+            }
             for (label, pts) in sweep.series_over_loads(|r| r.mean_flowtime()) {
                 let series: Vec<String> =
                     pts.iter().map(|(x, y)| format!("{x}:{y:.3}")).collect();
@@ -443,6 +534,22 @@ fn run() -> Result<(), String> {
                     c.slowdown,
                 );
             })?;
+            println!(
+                "trace cell (naive, light): materialized vs streamed vs capped replay (cap {})",
+                specsim::util::bench::TRACE_RESIDENT_CAP,
+            );
+            let trace_cells = specsim::util::bench::run_trace_suite(quick, |c| {
+                println!(
+                    "{:<10} {:>5} {:>8} jobs {:>13.0} {:>13.0} {:>13.0} ev/s  overhead {:>5.2}x",
+                    c.policy,
+                    c.machines,
+                    c.jobs,
+                    c.materialized.events_per_sec,
+                    c.streamed.events_per_sec,
+                    c.capped.events_per_sec,
+                    c.stream_overhead(),
+                );
+            })?;
             let mut serve_cells = Vec::new();
             let mut serve_csv = String::new();
             if args.has("serve") || args.has("check-serve") {
@@ -464,8 +571,14 @@ fn run() -> Result<(), String> {
                 serve_cells = sc;
                 serve_csv = csv;
             }
-            let doc =
-                specsim::util::bench::throughput_json(&cells, &scale, &flips, &serve_cells, quick);
+            let doc = specsim::util::bench::throughput_json(
+                &cells,
+                &scale,
+                &flips,
+                &serve_cells,
+                &trace_cells,
+                quick,
+            );
             report::write_file(&out, &format!("{doc}\n")).map_err(|e| e.to_string())?;
             if !serve_csv.is_empty() {
                 let csv_path = args.string("serve-csv", "serve_metrics.csv");
@@ -478,6 +591,8 @@ fn run() -> Result<(), String> {
                 table.push_str(&specsim::util::bench::scale_markdown(&scale));
                 table.push('\n');
                 table.push_str(&specsim::util::bench::flip_markdown(&flips));
+                table.push('\n');
+                table.push_str(&specsim::util::bench::trace_markdown(&trace_cells));
                 if !serve_cells.is_empty() {
                     table.push('\n');
                     table.push_str(&specsim::util::bench::serve_markdown(&serve_cells));
@@ -486,10 +601,11 @@ fn run() -> Result<(), String> {
                 println!("wrote the EXPERIMENTS.md-ready tables to {md}");
             }
             println!(
-                "wrote {} cells (+{} scale, +{} flip, +{} serve) to {out}",
+                "wrote {} cells (+{} scale, +{} flip, +{} trace, +{} serve) to {out}",
                 cells.len(),
                 scale.len(),
                 flips.len(),
+                trace_cells.len(),
                 serve_cells.len(),
             );
             if args.has("check-wakeup") {
@@ -507,13 +623,123 @@ fn run() -> Result<(), String> {
         }
         "trace" => {
             let out = PathBuf::from(args.str("out").ok_or("trace: --out FILE required")?);
-            let wl = specsim::cluster::generator::generate(
-                &build_workload(&args, args.f64("lambda", 6.0)?)?,
-                args.f64("horizon", 100.0)?,
-                args.u64("seed", 1)?,
+            let wl_cfg = build_workload(&args, args.f64("lambda", 6.0)?)?;
+            let seed = args.u64("seed", 1)?;
+            let jobs = args.u64("jobs", 0)?;
+            if jobs > 0 {
+                // streaming synthesis: pull one job at a time from the
+                // generator source and write it straight through a buffered
+                // writer — the trace never materializes in memory, so the
+                // CI's million-job input costs O(1) resident
+                use specsim::workload::JobSource;
+                use std::io::Write as _;
+                let horizon = args.f64("horizon", f64::INFINITY)?;
+                let mut src = specsim::workload::GeneratorSource::new(&wl_cfg, horizon, seed)?;
+                let file = std::fs::File::create(&out).map_err(|e| e.to_string())?;
+                let mut w = std::io::BufWriter::new(file);
+                w.write_all(trace::HEADER.as_bytes()).map_err(|e| e.to_string())?;
+                w.write_all(b"\n").map_err(|e| e.to_string())?;
+                let mut row = String::new();
+                let mut n = 0u64;
+                while n < jobs {
+                    match src.next_arrival() {
+                        Some(Ok(job)) => {
+                            row.clear();
+                            trace::format_row(&job.spec, &job.durations, &mut row);
+                            w.write_all(row.as_bytes()).map_err(|e| e.to_string())?;
+                            n += 1;
+                        }
+                        Some(Err(e)) => return Err(e.to_string()),
+                        None => break,
+                    }
+                }
+                w.flush().map_err(|e| e.to_string())?;
+                println!("wrote {n} jobs to {} (streaming)", out.display());
+            } else {
+                let wl = specsim::cluster::generator::generate(
+                    &wl_cfg,
+                    args.f64("horizon", 100.0)?,
+                    seed,
+                );
+                trace::save(&wl, &out)?;
+                println!("wrote {} jobs to {}", wl.specs.len(), out.display());
+            }
+        }
+        "replay" => {
+            use specsim::workload::{TraceFormat, TraceReader};
+            let path = args.str("trace").ok_or("replay: --trace FILE required")?;
+            let format: TraceFormat = args.string("trace-format", "auto").parse()?;
+            let speedup = args.f64("speedup", 1.0)?;
+            if !(speedup > 0.0) {
+                return Err("--speedup must be > 0".to_string());
+            }
+            let afap = args.has("as-fast-as-possible");
+            let batch_size = args.usize("batch", 256)?.max(1);
+            let mut cfg = SimConfig::default();
+            cfg.machines = args.usize("machines", 200)?;
+            cfg.horizon = f64::INFINITY;
+            cfg.scheduler = policy_arg(&args, "sda").parse()?;
+            cfg.artifacts_dir = args.string("artifacts-dir", "artifacts");
+            apply_scenario_flags(&mut cfg, &args)?;
+            cfg.validate()?;
+            let mut serve_cfg = ServeConfig::default();
+            serve_cfg.shards = args.usize("shards", 1)?;
+            serve_cfg.route = args.string("route", "hash").parse::<RoutePolicy>()?;
+            serve_cfg.route_seed = args.u64("route-seed", serve_cfg.route_seed)?;
+            serve_cfg.validate(cfg.machines)?;
+            let mut sharded = ShardedMaster::new(cfg, serve_cfg);
+            sharded.sample_every =
+                Some(Duration::from_millis(args.u64("sample-ms", 250)?.max(1)));
+            let handle = sharded.spawn()?;
+            // Pump the trace through the serve plane in batches.  Pacing is
+            // drift-free: each batch's wall-clock target is its first
+            // recorded arrival (relative to the trace's first job) divided
+            // by --speedup, measured from replay start.
+            let reader = TraceReader::open(path, format).map_err(|e| e.to_string())?;
+            let start = std::time::Instant::now();
+            let mut first_arrival = f64::NAN;
+            let mut batch: Vec<Submission> = Vec::with_capacity(batch_size);
+            let mut batch_arrival = 0.0f64;
+            let mut submitted = 0u64;
+            let mut accepted = 0u64;
+            for row in reader {
+                let row = row.map_err(|e| e.to_string())?;
+                if submitted == 0 {
+                    first_arrival = row.spec.arrival;
+                }
+                if batch.is_empty() {
+                    batch_arrival = row.spec.arrival;
+                }
+                batch.push(Submission {
+                    num_tasks: row.spec.num_tasks,
+                    mean_duration: row.spec.dist.mean(),
+                    alpha: row.spec.dist.alpha,
+                });
+                submitted += 1;
+                if batch.len() >= batch_size {
+                    let wait =
+                        pacing_wait(afap, batch_arrival, first_arrival, speedup, start);
+                    accepted += replay_flush(&handle, &mut batch, wait)?;
+                }
+            }
+            let wait = pacing_wait(afap, batch_arrival, first_arrival, speedup, start);
+            accepted += replay_flush(&handle, &mut batch, wait)?;
+            let wall = start.elapsed().as_secs_f64();
+            let rep = handle.shutdown()?;
+            println!(
+                "replayed {submitted} jobs in {wall:.2}s wall across {} shard(s), \
+                 accepted {accepted}, completed {}, rejected {}",
+                rep.shards.len(),
+                rep.completed(),
+                rep.rejected(),
             );
-            trace::save(&wl, &out)?;
-            println!("wrote {} jobs to {}", wl.specs.len(), out.display());
+            print!("{}", rep.table());
+            if let Some(series) = &rep.series {
+                if let Some(path) = args.str("serve-csv") {
+                    report::write_file(path, &series.csv()).map_err(|e| e.to_string())?;
+                    println!("wrote the metrics time series to {path}");
+                }
+            }
         }
         "serve" => {
             let mut cfg = SimConfig::default();

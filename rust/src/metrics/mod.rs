@@ -25,6 +25,54 @@ impl JobRecord {
     }
 }
 
+/// Bounded-memory aggregation of completed-job records: Welford moments
+/// plus P² quantile sketches for the percentiles the sweep CSV reports.
+///
+/// This is what a `--max-resident-jobs`-capped run keeps instead of the
+/// full `Vec<JobRecord>`: each drained record is absorbed here and dropped,
+/// so a million-job replay's metric state is O(1).
+#[derive(Clone, Debug)]
+pub struct StreamedJobStats {
+    pub flowtime: crate::stats::Summary,
+    pub resource: crate::stats::Summary,
+    pub net_utility: crate::stats::Summary,
+    pub flow_p80: crate::stats::P2Quantile,
+    pub flow_p90: crate::stats::P2Quantile,
+    pub res_p80: crate::stats::P2Quantile,
+    /// Records absorbed (and recycled) so far.
+    pub drained: u64,
+}
+
+impl StreamedJobStats {
+    pub fn new() -> Self {
+        StreamedJobStats {
+            flowtime: crate::stats::Summary::new(),
+            resource: crate::stats::Summary::new(),
+            net_utility: crate::stats::Summary::new(),
+            flow_p80: crate::stats::P2Quantile::new(0.8),
+            flow_p90: crate::stats::P2Quantile::new(0.9),
+            res_p80: crate::stats::P2Quantile::new(0.8),
+            drained: 0,
+        }
+    }
+
+    pub fn absorb(&mut self, r: &JobRecord) {
+        self.flowtime.push(r.flowtime);
+        self.resource.push(r.resource);
+        self.net_utility.push(r.net_utility());
+        self.flow_p80.push(r.flowtime);
+        self.flow_p90.push(r.flowtime);
+        self.res_p80.push(r.resource);
+        self.drained += 1;
+    }
+}
+
+impl Default for StreamedJobStats {
+    fn default() -> Self {
+        StreamedJobStats::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -27,6 +27,24 @@ pub struct SummaryRow {
 
 impl SummaryRow {
     pub fn from_result(res: &SimResult) -> Self {
+        // A capped run (`max_resident_jobs`) drains completed records into
+        // streaming sketches instead of retaining them; report from those.
+        // Below the P² warm-up (5 samples) the sketch interpolates exactly
+        // like `Cdf::quantile`, so tiny capped runs still match.
+        if let Some(s) = &res.streamed {
+            return SummaryRow {
+                scheduler: res.scheduler.clone(),
+                jobs: s.drained as usize,
+                mean_flowtime: s.flowtime.mean(),
+                p80_flowtime: s.flow_p80.quantile(),
+                p90_flowtime: s.flow_p90.quantile(),
+                mean_resource: s.resource.mean(),
+                p80_resource: s.res_p80.quantile(),
+                mean_net_utility: s.net_utility.mean(),
+                utilization: res.utilization,
+                speculative_launches: res.speculative_launches,
+            };
+        }
         let mut ft = res.flowtime_cdf();
         let mut rs = res.resource_cdf();
         SummaryRow {
@@ -189,6 +207,7 @@ mod tests {
             ticks_skipped: 5,
             peak_event_queue: 7,
             slot_hook_secs: 0.0,
+            streamed: None,
         };
         let sweep = SweepResult {
             name: "t".into(),

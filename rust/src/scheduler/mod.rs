@@ -224,18 +224,20 @@ pub fn build_for(
 }
 
 /// The workload's Pareto tail index.  Trace workloads estimate it from
-/// the pre-sampled durations when available; otherwise the trace file is
-/// loaded, and a load failure is a hard error — a silently assumed
-/// alpha = 2.0 would mis-derive every analysis threshold.
+/// the pre-sampled durations when available; otherwise one streaming
+/// pre-pass over the trace file fits it (`workload::scan` runs the exact
+/// `estimate_alpha` accumulation, so both routes agree bitwise), and a
+/// read failure is a hard error — a silently assumed alpha = 2.0 would
+/// mis-derive every analysis threshold.
 fn tail_alpha(workload: &WorkloadConfig, sampled: Option<&Workload>) -> Result<f64, String> {
     match workload {
         WorkloadConfig::Poisson { alpha, .. }
         | WorkloadConfig::Bursty { alpha, .. }
         | WorkloadConfig::SingleJob { alpha, .. } => Ok(*alpha),
-        WorkloadConfig::Trace { path } => match sampled {
+        WorkloadConfig::Trace { path, format, .. } => match sampled {
             Some(wl) => Ok(crate::cluster::generator::estimate_alpha(wl)),
-            None => crate::cluster::trace::load(path)
-                .map(|wl| crate::cluster::generator::estimate_alpha(&wl))
+            None => crate::workload::scan(path, *format)
+                .map(|stats| stats.alpha)
                 .map_err(|e| format!("cannot derive the tail index from trace '{path}': {e}")),
         },
     }
@@ -274,7 +276,7 @@ mod tests {
         let wl = crate::cluster::generator::generate(&WorkloadConfig::paper(2.0), 50.0, 3);
         // with a pre-sampled workload the trace file is never touched, so a
         // bogus path must not fail the build
-        let trace_cfg = WorkloadConfig::Trace { path: "/nonexistent/trace.csv".to_string() };
+        let trace_cfg = WorkloadConfig::trace("/nonexistent/trace.csv");
         let s = build_for(&cfg, &trace_cfg, Some(&wl)).unwrap();
         assert_eq!(s.name(), "sda");
         // without one, an unreadable trace is a hard error (satellite: no

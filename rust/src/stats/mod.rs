@@ -9,4 +9,4 @@ pub mod summary;
 pub use dist::{Distribution, Exponential, Uniform};
 pub use pareto::Pareto;
 pub use rng::Pcg64;
-pub use summary::{Cdf, Summary};
+pub use summary::{Cdf, P2Quantile, Summary};

@@ -100,7 +100,11 @@ pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Meas
 /// v5: the `serve_cells` array — sustained submissions/sec and submit
 /// latency percentiles of the sharded live coordinator at
 /// shards ∈ {1, 2, 4} on a fixed submission workload (`bench --serve`).
-pub const BENCH_SCHEMA: &str = "specsim-bench-v5";
+/// v6: the `trace_cells` array — one frozen workload replayed three ways
+/// (materialized up front, streamed through the bounded-window trace
+/// reader, streamed with `max_resident_jobs` record recycling), all three
+/// simulating bit-identical dynamics, with per-run peak RSS.
+pub const BENCH_SCHEMA: &str = "specsim-bench-v6";
 
 /// The suite's machine-count axis.
 pub const SUITE_MACHINES: [usize; 2] = [500, 4000];
@@ -183,7 +187,12 @@ impl ThroughputRun {
             ticks_skipped: res.ticks_skipped,
             slot_hook_secs: res.slot_hook_secs,
             peak_event_queue: res.peak_event_queue,
-            completed_jobs: res.completed.len(),
+            // capped runs recycle records into the streaming sketches;
+            // count completions from there so the column stays honest
+            completed_jobs: res
+                .streamed
+                .as_ref()
+                .map_or(res.completed.len(), |s| s.drained as usize),
             peak_rss_bytes,
         }
     }
@@ -641,6 +650,153 @@ pub fn scale_markdown(cells: &[ScaleCell]) -> String {
     out
 }
 
+// ----- the trace-replay cells ---------------------------------------------
+
+/// Resident-record cap for the capped trace run (PR 9): small enough that
+/// the recycling path runs many times per suite, large enough that the
+/// drain amortizes.
+pub const TRACE_RESIDENT_CAP: usize = 256;
+
+/// One frozen workload replayed three ways on the identical config: the
+/// materialized reference (`Simulator::new` on the up-front workload), the
+/// streamed bounded-window path (`Simulator::from_source`), and the
+/// streamed path with `max_resident_jobs` record recycling.  All three
+/// simulate bit-identical dynamics (`tests/trace_replay.rs` pins this), so
+/// the columns compare pure wall-clock and peak RSS.
+#[derive(Clone, Debug)]
+pub struct TraceCell {
+    pub policy: String,
+    pub lambda: f64,
+    pub machines: usize,
+    /// Jobs in the frozen trace.
+    pub jobs: usize,
+    /// Streaming lookahead window (jobs).
+    pub window: usize,
+    /// `max_resident_jobs` of the capped run.
+    pub resident_cap: usize,
+    pub materialized: ThroughputRun,
+    pub streamed: ThroughputRun,
+    pub capped: ThroughputRun,
+}
+
+impl TraceCell {
+    /// Wall-clock cost of streaming over materializing (1.0 = free).
+    pub fn stream_overhead(&self) -> f64 {
+        self.streamed.wall_secs / self.materialized.wall_secs.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("policy".into(), Json::Str(self.policy.clone()));
+        m.insert("lambda".into(), Json::Num(self.lambda));
+        m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("jobs".into(), Json::Num(self.jobs as f64));
+        m.insert("window".into(), Json::Num(self.window as f64));
+        m.insert("resident_cap".into(), Json::Num(self.resident_cap as f64));
+        m.insert("materialized".into(), self.materialized.to_json());
+        m.insert("streamed".into(), self.streamed.to_json());
+        m.insert("capped".into(), self.capped.to_json());
+        m.insert("stream_overhead".into(), Json::Num(self.stream_overhead()));
+        Json::Obj(m)
+    }
+}
+
+/// One timed streamed replay of a trace workload config; `cap` switches on
+/// `max_resident_jobs` record recycling.
+fn time_streamed(
+    base: &SimConfig,
+    wl_cfg: &WorkloadConfig,
+    cap: Option<usize>,
+) -> Result<ThroughputRun, String> {
+    let mut cfg = base.clone();
+    cfg.max_resident_jobs = cap;
+    let sched = scheduler::build_for(&cfg, wl_cfg, None)?;
+    let source = crate::workload::source_for(wl_cfg, cfg.horizon, cfg.seed)?;
+    let window = match wl_cfg {
+        WorkloadConfig::Trace { window, .. } => *window,
+        _ => crate::workload::DEFAULT_WINDOW,
+    };
+    reset_peak_rss();
+    let t0 = Instant::now();
+    let res = Simulator::from_source(cfg, source, window, sched).run();
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(ThroughputRun::from_result(&res, wall, peak_rss_bytes()))
+}
+
+/// Run the trace-replay cell: generate the (naive, light, M = 500)
+/// workload once, freeze it to a temp trace file, and replay it through
+/// all three paths.  The temp file is removed afterwards.
+pub fn run_trace_suite(
+    quick: bool,
+    mut progress: impl FnMut(&TraceCell),
+) -> Result<Vec<TraceCell>, String> {
+    let horizon = suite_horizon(quick);
+    let machines = SUITE_MACHINES[0];
+    let mut base = SimConfig::default();
+    base.machines = machines;
+    base.horizon = horizon;
+    base.use_runtime = false;
+    base.scheduler = SchedulerKind::Naive;
+    let gen_cfg = WorkloadConfig::paper(LIGHT_LAMBDA);
+    let workload = generator::generate(&gen_cfg, horizon, base.seed);
+    let jobs = workload.specs.len();
+    let path = std::env::temp_dir()
+        .join(format!("specsim_bench_trace_{}.csv", std::process::id()));
+    crate::cluster::trace::save(&workload, &path)?;
+    let wl_cfg = WorkloadConfig::trace(path.to_string_lossy().into_owned());
+    let window = match &wl_cfg {
+        WorkloadConfig::Trace { window, .. } => *window,
+        _ => unreachable!(),
+    };
+    let materialized =
+        time_simulation(&base, &wl_cfg, workload, SchedulerKind::Naive, true, true)?;
+    let streamed = time_streamed(&base, &wl_cfg, None)?;
+    let capped = time_streamed(&base, &wl_cfg, Some(TRACE_RESIDENT_CAP))?;
+    let _ = std::fs::remove_file(&path);
+    let cell = TraceCell {
+        policy: SchedulerKind::Naive.to_string(),
+        lambda: LIGHT_LAMBDA,
+        machines,
+        jobs,
+        window,
+        resident_cap: TRACE_RESIDENT_CAP,
+        materialized,
+        streamed,
+        capped,
+    };
+    progress(&cell);
+    Ok(vec![cell])
+}
+
+/// Render the trace cells as the EXPERIMENTS.md §Perf companion table.
+pub fn trace_markdown(cells: &[TraceCell]) -> String {
+    let rss = |r: &ThroughputRun| match r.peak_rss_bytes {
+        Some(b) => format!("{:.0} MiB", b as f64 / (1024.0 * 1024.0)),
+        None => "n/a".to_string(),
+    };
+    let mut out = String::from(
+        "| policy | M | jobs | window | cap | materialized ev/s | streamed ev/s \
+         | capped ev/s | stream overhead | capped peak RSS |\n\
+         |---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.0} | {:.0} | {:.0} | {:.2}x | {} |\n",
+            c.policy,
+            c.machines,
+            c.jobs,
+            c.window,
+            c.resident_cap,
+            c.materialized.events_per_sec,
+            c.streamed.events_per_sec,
+            c.capped.events_per_sec,
+            c.stream_overhead(),
+            rss(&c.capped)
+        ));
+    }
+    out
+}
+
 // ----- the sharded serve-plane suite --------------------------------------
 
 /// The serve suite's shard-count axis.
@@ -902,13 +1058,14 @@ pub fn throughput_markdown(cells: &[ThroughputCell]) -> String {
     out
 }
 
-/// Serialize a finished suite (throughput + scale + flip + serve cells)
-/// to the `BENCH_sim.json` document.
+/// Serialize a finished suite (throughput + scale + flip + serve + trace
+/// cells) to the `BENCH_sim.json` document.
 pub fn throughput_json(
     cells: &[ThroughputCell],
     scale: &[ScaleCell],
     flips: &[FlipCell],
     serve: &[ServeCell],
+    trace: &[TraceCell],
     quick: bool,
 ) -> Json {
     let mut m = std::collections::BTreeMap::new();
@@ -939,7 +1096,12 @@ pub fn throughput_json(
              submissions/sec through batched submits and single-submit \
              p50/p99 round-trip latency at shards in {1, 2, 4}, hash \
              routing, on a fixed workload (empty unless bench ran with \
-             --serve). peak_rss_bytes = Linux VmHWM, reset \
+             --serve). trace_cells (v6) replay one frozen workload three \
+             ways — materialized up front, streamed through the \
+             bounded-window trace reader, and streamed with \
+             max_resident_jobs record recycling — all three simulating \
+             bit-identical dynamics; stream_overhead = streamed/\
+             materialized wall_secs. peak_rss_bytes = Linux VmHWM, reset \
              per run; null elsewhere. Regenerate: \
              cargo run --release -- bench --serve"
                 .to_string(),
@@ -949,6 +1111,7 @@ pub fn throughput_json(
     m.insert("scale_cells".into(), Json::Arr(scale.iter().map(|c| c.to_json()).collect()));
     m.insert("flip_cells".into(), Json::Arr(flips.iter().map(|c| c.to_json()).collect()));
     m.insert("serve_cells".into(), Json::Arr(serve.iter().map(|c| c.to_json()).collect()));
+    m.insert("trace_cells".into(), Json::Arr(trace.iter().map(|c| c.to_json()).collect()));
     Json::Obj(m)
 }
 
@@ -1026,7 +1189,7 @@ mod tests {
         let md = throughput_markdown(std::slice::from_ref(&cell));
         assert!(md.starts_with("| policy |"));
         assert!(md.contains("| sda | light | 40 | 0.1 |"));
-        let doc = throughput_json(&[cell], &[], &[], &[], true);
+        let doc = throughput_json(&[cell], &[], &[], &[], &[], true);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
         assert_eq!(back.get("measured"), Some(&Json::Bool(true)));
@@ -1051,6 +1214,60 @@ mod tests {
         assert_eq!(back.get("flip_cells").unwrap().as_arr().unwrap().len(), 0);
         // v5: the serve_cells array is always present
         assert_eq!(back.get("serve_cells").unwrap().as_arr().unwrap().len(), 0);
+        // v6: the trace_cells array is always present
+        assert_eq!(back.get("trace_cells").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    /// The trace cell's three paths simulate the identical system — same
+    /// events popped, same completions — and the JSON/markdown renderings
+    /// carry the overhead ratio.  Runs on a tiny horizon via the same
+    /// machinery the suite uses, minus the suite-scale workload.
+    #[test]
+    fn trace_cell_paths_agree_and_serialize() {
+        let mut base = SimConfig::default();
+        base.machines = 40;
+        base.horizon = 60.0;
+        base.use_runtime = false;
+        base.scheduler = SchedulerKind::Naive;
+        let gen_cfg = WorkloadConfig::paper(0.3);
+        let workload = generator::generate(&gen_cfg, base.horizon, base.seed);
+        let jobs = workload.specs.len();
+        let path = std::env::temp_dir()
+            .join(format!("specsim_trace_cell_test_{}.csv", std::process::id()));
+        crate::cluster::trace::save(&workload, &path).unwrap();
+        let wl_cfg = WorkloadConfig::trace(path.to_string_lossy().into_owned());
+        let materialized =
+            time_simulation(&base, &wl_cfg, workload, SchedulerKind::Naive, true, true).unwrap();
+        let streamed = time_streamed(&base, &wl_cfg, None).unwrap();
+        let capped = time_streamed(&base, &wl_cfg, Some(8)).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(materialized.events, streamed.events, "streaming is bit-identical");
+        assert_eq!(materialized.events, capped.events, "recycling never changes dynamics");
+        assert_eq!(materialized.completed_jobs, streamed.completed_jobs);
+        assert_eq!(materialized.completed_jobs, capped.completed_jobs);
+        // Eager mode pre-pushes every arrival into the heap; the streamed
+        // path admits them outside it, so its peak can only be smaller.
+        assert!(streamed.peak_event_queue <= materialized.peak_event_queue);
+        let cell = TraceCell {
+            policy: "naive".into(),
+            lambda: 0.3,
+            machines: 40,
+            jobs,
+            window: crate::workload::DEFAULT_WINDOW,
+            resident_cap: 8,
+            materialized,
+            streamed,
+            capped,
+        };
+        assert!(cell.stream_overhead() > 0.0);
+        let j = cell.to_json();
+        assert_eq!(j.get("machines").unwrap().as_usize(), Some(40));
+        assert_eq!(j.get("jobs").unwrap().as_usize(), Some(jobs));
+        assert!(j.path(&["streamed", "events_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.path(&["capped", "completed_jobs"]).unwrap().as_usize().unwrap() > 0);
+        let md = trace_markdown(std::slice::from_ref(&cell));
+        assert!(md.starts_with("| policy |"));
+        assert!(md.contains("| naive | 40 |"));
     }
 
     fn synthetic_serve_cell(shards: usize, sps: f64) -> ServeCell {

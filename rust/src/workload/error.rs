@@ -1,0 +1,70 @@
+//! Structured trace diagnostics.
+//!
+//! Every failure in the trace pipeline — whole-file loads in
+//! [`crate::cluster::trace`], the streaming [`super::TraceReader`], and the
+//! [`super::JobSource`] adapters — reports through one enum carrying the
+//! file path plus, for parse failures, the 1-based line and column of the
+//! offending field.  Both consumption paths therefore produce identical
+//! messages for identical input, which the round-trip tests pin.
+
+use std::fmt;
+
+/// A trace read/parse failure with enough position information to open the
+/// file at the offending byte.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceError {
+    /// The underlying file could not be opened or read.
+    Io { path: String, message: String },
+    /// The first line is neither a recognized header nor (under
+    /// autodetection) a recognizable data row.
+    BadHeader { path: String, found: Option<String> },
+    /// The file contains no lines at all.
+    Empty { path: String },
+    /// A data row failed validation.  `line` counts physical lines from 1
+    /// (the header, when present, is line 1); `column` is the 1-based byte
+    /// offset of the offending field within the line.
+    Parse { path: String, line: u64, column: u32, message: String },
+}
+
+impl TraceError {
+    /// The path of the trace the error was raised for.
+    pub fn path(&self) -> &str {
+        match self {
+            TraceError::Io { path, .. }
+            | TraceError::BadHeader { path, .. }
+            | TraceError::Empty { path }
+            | TraceError::Parse { path, .. } => path,
+        }
+    }
+
+    /// The 1-based physical line number, when the error is positional.
+    pub fn line(&self) -> Option<u64> {
+        match self {
+            TraceError::Parse { line, .. } => Some(*line),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Io { path, message } => write!(f, "{path}: {message}"),
+            TraceError::BadHeader { path, found } => {
+                write!(f, "{path}: bad header: {found:?}")
+            }
+            TraceError::Empty { path } => write!(f, "{path}: empty trace"),
+            TraceError::Parse { path, line, column, message } => {
+                write!(f, "{path}: line {line}, column {column}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+impl From<TraceError> for String {
+    fn from(e: TraceError) -> String {
+        e.to_string()
+    }
+}

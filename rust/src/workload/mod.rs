@@ -1,0 +1,31 @@
+//! Streaming trace replay: feed million-job datacenter traces to the
+//! simulator and the live serve plane without ever materializing the
+//! workload.
+//!
+//! Three layers (DESIGN.md §16):
+//!
+//! * [`TraceReader`] — a zero-dependency chunked CSV/JSONL reader that
+//!   yields one [`TraceRow`] per line, autodetects the on-disk schema
+//!   ([`TraceFormat`]), and reports every failure as a structured
+//!   [`TraceError`] with path, line, and column.
+//! * [`JobSource`] — the pull-based `next_arrival()` interface unifying
+//!   materialized workloads ([`MaterializedSource`]), the synthetic
+//!   generators ([`GeneratorSource`], bit-identical to
+//!   `generator::generate`), and streamed traces ([`StreamSource`]).
+//! * [`Lookahead`] — the bounded buffer the simulator pulls arrivals
+//!   through, capping resident un-admitted jobs at the configured window.
+//!
+//! [`scan`] is the single-pass moment pre-pass ([`TraceStats`]) that gives
+//! trace workloads real `mean_tasks()`/`mean_duration()` values and the
+//! schedulers their tail index, all in bounded memory.
+
+mod error;
+mod reader;
+mod source;
+
+pub use error::TraceError;
+pub use reader::{TraceFormat, TraceReader, TraceRow, CHUNK, DEFAULT_ALPHA};
+pub use source::{
+    scan, source_for, GeneratorSource, JobSource, Lookahead, MaterializedSource, SourcedJob,
+    StreamSource, TraceStats, DEFAULT_WINDOW,
+};

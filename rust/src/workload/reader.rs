@@ -1,0 +1,482 @@
+//! Chunked, zero-dependency trace reader.
+//!
+//! [`TraceReader`] pulls fixed-size chunks (64 KiB) from any [`Read`]
+//! source, splits them into physical lines across chunk boundaries, and
+//! parses each line into a [`TraceRow`] — a [`JobSpec`] plus its
+//! pre-sampled first-copy durations.  Memory is bounded by the longest
+//! single line, never by the trace length.
+//!
+//! Three on-disk formats are supported, autodetected from the first line
+//! (see [`TraceFormat`]):
+//!
+//! | format   | shape                                              |
+//! |----------|----------------------------------------------------|
+//! | `native` | `job,arrival,mu,alpha,num_tasks,durations` header, then one CSV row per job with `;`-joined durations |
+//! | `simple` | Google/Alibaba-style `arrival,duration,tasks[,alpha]` CSV (optional header) |
+//! | `jsonl`  | one JSON object per line: `{"arrival":…,"duration":…,"tasks":…[,"alpha":…]}` |
+//!
+//! `simple` and `jsonl` rows carry one duration per job; the reader expands
+//! it to all `tasks` copies and derives the Pareto parameters via
+//! [`Pareto::from_mean`] (default tail index α = 2, the paper's baseline).
+//! Every failure is a structured [`TraceError`] with path, 1-based line,
+//! and the 1-based byte column of the offending field.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use crate::cluster::job::{JobId, JobSpec};
+use crate::cluster::trace::HEADER;
+use crate::stats::Pareto;
+use crate::util::Json;
+
+use super::error::TraceError;
+
+/// Chunk size for buffered reads.  A single row larger than this (e.g. a
+/// wide `durations` field) is handled by growing the carry buffer until its
+/// newline arrives.
+pub const CHUNK: usize = 64 * 1024;
+
+/// Tail index assumed for `simple`/`jsonl` rows that do not carry one.
+pub const DEFAULT_ALPHA: f64 = 2.0;
+
+/// On-disk trace format selector.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Sniff the first line: the native header, a `{`-opening JSON object,
+    /// or an `arrival,duration,tasks[,alpha]` header.
+    #[default]
+    Auto,
+    /// The crate's own `trace::to_string` format (exact durations).
+    Native,
+    /// `arrival,duration,tasks[,alpha]` CSV; the header line is optional.
+    Simple,
+    /// One JSON object per line.
+    Jsonl,
+}
+
+impl TraceFormat {
+    /// Stable lowercase name (CLI value / `Display`).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceFormat::Auto => "auto",
+            TraceFormat::Native => "native",
+            TraceFormat::Simple => "simple",
+            TraceFormat::Jsonl => "jsonl",
+        }
+    }
+}
+
+impl std::fmt::Display for TraceFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for TraceFormat {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(TraceFormat::Auto),
+            "native" => Ok(TraceFormat::Native),
+            "simple" => Ok(TraceFormat::Simple),
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            other => Err(format!("unknown trace format {other:?} (auto|native|simple|jsonl)")),
+        }
+    }
+}
+
+/// One parsed trace row: the job spec, its first-copy durations
+/// (`spec.num_tasks` entries), and the physical line it came from.
+#[derive(Clone, Debug)]
+pub struct TraceRow {
+    pub spec: JobSpec,
+    pub durations: Vec<f64>,
+    pub line: u64,
+}
+
+/// Streaming trace parser over any [`Read`] source.
+///
+/// Iterator of `Result<TraceRow, TraceError>`; fuses after the first error
+/// (subsequent `next()` calls return `None`).  Job ids are dense: `native`
+/// rows must carry `0, 1, 2, …` and the other formats assign them.
+pub struct TraceReader<R: Read> {
+    src: R,
+    path: String,
+    requested: TraceFormat,
+    resolved: Option<TraceFormat>,
+    buf: Vec<u8>,
+    start: usize,
+    eof: bool,
+    line: u64,
+    next_id: u32,
+    started: bool,
+    failed: bool,
+}
+
+impl TraceReader<File> {
+    /// Open a trace file for streaming.
+    pub fn open(path: impl AsRef<Path>, format: TraceFormat) -> Result<Self, TraceError> {
+        let p = path.as_ref();
+        let display = p.display().to_string();
+        let file = File::open(p)
+            .map_err(|e| TraceError::Io { path: display.clone(), message: e.to_string() })?;
+        Ok(TraceReader::new(file, display, format))
+    }
+}
+
+impl<R: Read> TraceReader<R> {
+    /// Wrap an arbitrary byte source.  `path` labels error messages only.
+    pub fn new(src: R, path: impl Into<String>, format: TraceFormat) -> Self {
+        TraceReader {
+            src,
+            path: path.into(),
+            requested: format,
+            resolved: None,
+            buf: Vec::new(),
+            start: 0,
+            eof: false,
+            line: 0,
+            next_id: 0,
+            started: false,
+            failed: false,
+        }
+    }
+
+    /// The path label used in diagnostics.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// The format actually in effect: the requested one, or the sniffed
+    /// result once the first line has been read under [`TraceFormat::Auto`].
+    pub fn format(&self) -> TraceFormat {
+        self.resolved.unwrap_or(self.requested)
+    }
+
+    fn io_err(&self, e: std::io::Error) -> TraceError {
+        TraceError::Io { path: self.path.clone(), message: e.to_string() }
+    }
+
+    /// Pull one more chunk into the carry buffer, compacting consumed bytes
+    /// first so resident memory stays proportional to the longest line.
+    fn fill(&mut self) -> Result<(), TraceError> {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        let old = self.buf.len();
+        self.buf.resize(old + CHUNK, 0);
+        let n = self.src.read(&mut self.buf[old..]).map_err(|e| self.io_err(e))?;
+        self.buf.truncate(old + n);
+        if n == 0 {
+            self.eof = true;
+        }
+        Ok(())
+    }
+
+    fn take_line(&mut self, end: usize, consume: usize) -> Result<String, TraceError> {
+        self.line += 1;
+        let mut bytes = &self.buf[self.start..end];
+        if bytes.last() == Some(&b'\r') {
+            bytes = &bytes[..bytes.len() - 1];
+        }
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| TraceError::Parse {
+                path: self.path.clone(),
+                line: self.line,
+                column: e.valid_up_to() as u32 + 1,
+                message: "invalid UTF-8".to_string(),
+            })?
+            .to_string();
+        self.start = consume;
+        Ok(text)
+    }
+
+    /// Next physical line with the terminator (LF or CRLF) stripped; a
+    /// truncated final line (no trailing newline) is still returned.
+    fn next_line(&mut self) -> Result<Option<String>, TraceError> {
+        loop {
+            if let Some(pos) = self.buf[self.start..].iter().position(|&b| b == b'\n') {
+                let end = self.start + pos;
+                return self.take_line(end, end + 1).map(Some);
+            }
+            if self.eof {
+                if self.start >= self.buf.len() {
+                    return Ok(None);
+                }
+                let end = self.buf.len();
+                return self.take_line(end, end).map(Some);
+            }
+            self.fill()?;
+        }
+    }
+
+    /// Consume the header (when the format has one) and fix `resolved`.
+    /// Returns the first *data* line, if any arrived in the process.
+    fn resolve(&mut self) -> Result<Option<String>, TraceError> {
+        let Some(first) = self.next_line()? else {
+            return Err(TraceError::Empty { path: self.path.clone() });
+        };
+        match self.requested {
+            TraceFormat::Auto => {
+                if first.trim() == HEADER {
+                    self.resolved = Some(TraceFormat::Native);
+                    Ok(None)
+                } else if first.trim_start().starts_with('{') {
+                    self.resolved = Some(TraceFormat::Jsonl);
+                    Ok(Some(first))
+                } else if is_simple_header(&first) {
+                    self.resolved = Some(TraceFormat::Simple);
+                    Ok(None)
+                } else {
+                    Err(TraceError::BadHeader { path: self.path.clone(), found: Some(first) })
+                }
+            }
+            TraceFormat::Native => {
+                if first.trim() == HEADER {
+                    self.resolved = Some(TraceFormat::Native);
+                    Ok(None)
+                } else {
+                    Err(TraceError::BadHeader { path: self.path.clone(), found: Some(first) })
+                }
+            }
+            TraceFormat::Simple => {
+                self.resolved = Some(TraceFormat::Simple);
+                if is_simple_header(&first) { Ok(None) } else { Ok(Some(first)) }
+            }
+            TraceFormat::Jsonl => {
+                self.resolved = Some(TraceFormat::Jsonl);
+                Ok(Some(first))
+            }
+        }
+    }
+
+    fn advance(&mut self) -> Result<Option<TraceRow>, TraceError> {
+        let mut pending: Option<String> = None;
+        if !self.started {
+            self.started = true;
+            pending = self.resolve()?;
+        }
+        loop {
+            let line = match pending.take() {
+                Some(l) => l,
+                None => match self.next_line()? {
+                    Some(l) => l,
+                    None => return Ok(None),
+                },
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let lineno = self.line;
+            let row = match self.resolved.expect("format resolved before data rows") {
+                TraceFormat::Native => self.parse_native(&line, lineno)?,
+                TraceFormat::Simple => self.parse_simple(&line, lineno)?,
+                TraceFormat::Jsonl => self.parse_jsonl(&line, lineno)?,
+                TraceFormat::Auto => unreachable!("Auto is resolved on the first line"),
+            };
+            self.next_id += 1;
+            return Ok(Some(row));
+        }
+    }
+
+    fn parse_err(&self, line: u64, column: usize, message: String) -> TraceError {
+        TraceError::Parse { path: self.path.clone(), line, column: column as u32, message }
+    }
+
+    /// `job,arrival,mu,alpha,num_tasks,dur;dur;…` — the exact row shape
+    /// `trace::to_string` writes.
+    fn parse_native(&self, line: &str, lineno: u64) -> Result<TraceRow, TraceError> {
+        let mut fields: Vec<(usize, &str)> = Vec::with_capacity(6);
+        let mut rest = line;
+        let mut off = 0usize;
+        for _ in 0..5 {
+            match rest.find(',') {
+                Some(i) => {
+                    fields.push((off, &rest[..i]));
+                    off += i + 1;
+                    rest = &rest[i + 1..];
+                }
+                None => break,
+            }
+        }
+        fields.push((off, rest));
+        if fields.len() != 6 {
+            return Err(self.parse_err(lineno, 1, "expected 6 fields".to_string()));
+        }
+        let num = |&(col, text): &(usize, &str), what: &str| -> Result<f64, TraceError> {
+            text.parse::<f64>()
+                .map_err(|e| self.parse_err(lineno, col + 1, format!("{what}: {e}")))
+        };
+        let id: u32 = fields[0]
+            .1
+            .parse()
+            .map_err(|e| self.parse_err(lineno, fields[0].0 + 1, format!("job: {e}")))?;
+        if id != self.next_id {
+            return Err(self.parse_err(
+                lineno,
+                fields[0].0 + 1,
+                format!("non-dense job id {id} (expected {})", self.next_id),
+            ));
+        }
+        let arrival = num(&fields[1], "arrival")?;
+        let mu = num(&fields[2], "mu")?;
+        let alpha = num(&fields[3], "alpha")?;
+        if !(mu > 0.0) {
+            return Err(self.parse_err(lineno, fields[2].0 + 1, format!("mu must be > 0, got {mu}")));
+        }
+        if !(alpha > 1.0) {
+            return Err(self.parse_err(
+                lineno,
+                fields[3].0 + 1,
+                format!("alpha must be > 1, got {alpha}"),
+            ));
+        }
+        let num_tasks: u32 = fields[4]
+            .1
+            .parse()
+            .map_err(|e| self.parse_err(lineno, fields[4].0 + 1, format!("num_tasks: {e}")))?;
+        let (dcol, dfield) = fields[5];
+        let mut durations = Vec::with_capacity(num_tasks as usize);
+        let mut doff = dcol;
+        for part in dfield.split(';') {
+            let d: f64 = part
+                .parse()
+                .map_err(|e| self.parse_err(lineno, doff + 1, format!("duration: {e}")))?;
+            durations.push(d);
+            doff += part.len() + 1;
+        }
+        if durations.len() != num_tasks as usize {
+            return Err(self.parse_err(
+                lineno,
+                dcol + 1,
+                format!("{} durations for {} tasks", durations.len(), num_tasks),
+            ));
+        }
+        let spec = JobSpec {
+            id: JobId(id),
+            arrival,
+            dist: Pareto::new(mu, alpha),
+            num_tasks,
+        };
+        Ok(TraceRow { spec, durations, line: lineno })
+    }
+
+    /// `arrival,duration,tasks[,alpha]` — duration is the per-task mean;
+    /// the row expands to `tasks` identical first-copy durations.
+    fn parse_simple(&self, line: &str, lineno: u64) -> Result<TraceRow, TraceError> {
+        let mut fields: Vec<(usize, &str)> = Vec::with_capacity(4);
+        let mut off = 0usize;
+        for part in line.split(',') {
+            fields.push((off, part.trim()));
+            off += part.len() + 1;
+        }
+        if !(3..=4).contains(&fields.len()) {
+            return Err(self.parse_err(
+                lineno,
+                1,
+                format!("expected 3 or 4 fields (arrival,duration,tasks[,alpha]), got {}", fields.len()),
+            ));
+        }
+        let arrival: f64 = fields[0]
+            .1
+            .parse()
+            .map_err(|e| self.parse_err(lineno, fields[0].0 + 1, format!("arrival: {e}")))?;
+        let duration: f64 = fields[1]
+            .1
+            .parse()
+            .map_err(|e| self.parse_err(lineno, fields[1].0 + 1, format!("duration: {e}")))?;
+        let tasks: u32 = fields[2]
+            .1
+            .parse()
+            .map_err(|e| self.parse_err(lineno, fields[2].0 + 1, format!("tasks: {e}")))?;
+        let alpha = match fields.get(3) {
+            None => DEFAULT_ALPHA,
+            Some(&(col, text)) => text
+                .parse::<f64>()
+                .map_err(|e| self.parse_err(lineno, col + 1, format!("alpha: {e}")))?,
+        };
+        self.build_mean_row(lineno, arrival, duration, tasks, alpha, fields[1].0, fields[2].0)
+    }
+
+    /// `{"arrival":…,"duration":…,"tasks":…[,"alpha":…]}`.
+    fn parse_jsonl(&self, line: &str, lineno: u64) -> Result<TraceRow, TraceError> {
+        let v = Json::parse(line).map_err(|m| self.parse_err(lineno, 1, m))?;
+        let field = |name: &str| -> Result<f64, TraceError> {
+            v.get(name)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| self.parse_err(lineno, 1, format!("missing numeric {name:?}")))
+        };
+        let arrival = field("arrival")?;
+        let duration = field("duration")?;
+        let tasks_f = field("tasks")?;
+        if !(tasks_f >= 0.0) || tasks_f.fract() != 0.0 || tasks_f > u32::MAX as f64 {
+            return Err(self.parse_err(lineno, 1, format!("tasks must be a non-negative integer, got {tasks_f}")));
+        }
+        let alpha = match v.get("alpha") {
+            None => DEFAULT_ALPHA,
+            Some(j) => j
+                .as_f64()
+                .ok_or_else(|| self.parse_err(lineno, 1, "alpha must be numeric".to_string()))?,
+        };
+        self.build_mean_row(lineno, arrival, duration, tasks_f as u32, alpha, 1, 1)
+    }
+
+    fn build_mean_row(
+        &self,
+        lineno: u64,
+        arrival: f64,
+        duration: f64,
+        tasks: u32,
+        alpha: f64,
+        dur_col: usize,
+        tasks_col: usize,
+    ) -> Result<TraceRow, TraceError> {
+        if !(duration > 0.0) {
+            return Err(self.parse_err(
+                lineno,
+                dur_col + 1,
+                format!("duration must be > 0, got {duration}"),
+            ));
+        }
+        if tasks == 0 {
+            return Err(self.parse_err(lineno, tasks_col + 1, "tasks must be >= 1".to_string()));
+        }
+        if !(alpha > 1.0) {
+            return Err(self.parse_err(lineno, 1, format!("alpha must be > 1, got {alpha}")));
+        }
+        let spec = JobSpec {
+            id: JobId(self.next_id),
+            arrival,
+            dist: Pareto::from_mean(duration, alpha),
+            num_tasks: tasks,
+        };
+        Ok(TraceRow { spec, durations: vec![duration; tasks as usize], line: lineno })
+    }
+}
+
+impl<R: Read> Iterator for TraceReader<R> {
+    type Item = Result<TraceRow, TraceError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.failed {
+            return None;
+        }
+        match self.advance() {
+            Ok(row) => row.map(Ok),
+            Err(e) => {
+                self.failed = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+/// Recognize the `simple` header with whitespace/case slack.
+fn is_simple_header(line: &str) -> bool {
+    let norm: String =
+        line.chars().filter(|c| !c.is_whitespace()).collect::<String>().to_ascii_lowercase();
+    norm == "arrival,duration,tasks" || norm == "arrival,duration,tasks,alpha"
+}

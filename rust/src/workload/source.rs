@@ -1,0 +1,479 @@
+//! Pull-based workload sources.
+//!
+//! [`JobSource`] unifies the three ways a workload reaches the simulator —
+//! pre-materialized [`Workload`]s, the synthetic generators, and streamed
+//! trace files — behind one `next_arrival()` interface that yields jobs in
+//! arrival order.  [`Lookahead`] wraps any source in a bounded buffer so
+//! the simulator never holds more than `window` un-admitted jobs, and
+//! [`scan`] runs the single streaming pre-pass that derives workload
+//! moments (job count, task/duration means, tail index) without
+//! materializing anything.
+//!
+//! [`GeneratorSource`] replays the exact RNG draw sequence of
+//! [`crate::cluster::generator::generate`] — same seed streams, same draw
+//! order — so pulling a generated workload one job at a time is
+//! bit-identical to materializing it up front.
+
+use std::collections::VecDeque;
+use std::fs::File;
+
+use crate::cluster::generator::Mmpp;
+use crate::cluster::job::{JobId, JobSpec};
+use crate::cluster::sim::Workload;
+use crate::config::WorkloadConfig;
+use crate::stats::{Pareto, Pcg64, Summary};
+
+use super::error::TraceError;
+use super::reader::{TraceFormat, TraceReader};
+
+/// Default lookahead window (max un-admitted jobs resident in a streaming
+/// run).
+pub const DEFAULT_WINDOW: usize = 1024;
+
+/// One job as delivered by a source: the spec plus its pre-sampled
+/// first-copy durations (`spec.num_tasks` entries).
+#[derive(Clone, Debug)]
+pub struct SourcedJob {
+    pub spec: JobSpec,
+    pub durations: Vec<f64>,
+}
+
+/// A pull-based stream of jobs in non-decreasing arrival order with dense
+/// ids `0, 1, 2, …`.  `None` means the source is exhausted; an `Err` is
+/// terminal (implementations fuse after it).
+pub trait JobSource {
+    fn next_arrival(&mut self) -> Option<Result<SourcedJob, TraceError>>;
+}
+
+/// Drains a fully-materialized [`Workload`].
+pub struct MaterializedSource {
+    specs: std::vec::IntoIter<JobSpec>,
+    durations: std::vec::IntoIter<Vec<f64>>,
+}
+
+impl MaterializedSource {
+    pub fn new(wl: Workload) -> Self {
+        MaterializedSource {
+            specs: wl.specs.into_iter(),
+            durations: wl.first_durations.into_iter(),
+        }
+    }
+}
+
+impl JobSource for MaterializedSource {
+    fn next_arrival(&mut self) -> Option<Result<SourcedJob, TraceError>> {
+        let spec = self.specs.next()?;
+        let durations = self.durations.next().unwrap_or_default();
+        Some(Ok(SourcedJob { spec, durations }))
+    }
+}
+
+/// Streams a trace file through [`TraceReader`], enforcing the
+/// non-decreasing-arrival contract replay depends on.
+pub struct StreamSource {
+    reader: TraceReader<File>,
+    last_arrival: f64,
+    yielded: u64,
+    max_jobs: Option<u64>,
+}
+
+impl StreamSource {
+    pub fn open(
+        path: &str,
+        format: TraceFormat,
+        max_jobs: Option<u64>,
+    ) -> Result<Self, TraceError> {
+        Ok(StreamSource {
+            reader: TraceReader::open(path, format)?,
+            last_arrival: f64::NEG_INFINITY,
+            yielded: 0,
+            max_jobs,
+        })
+    }
+}
+
+impl JobSource for StreamSource {
+    fn next_arrival(&mut self) -> Option<Result<SourcedJob, TraceError>> {
+        if self.max_jobs.is_some_and(|cap| self.yielded >= cap) {
+            return None;
+        }
+        let row = match self.reader.next()? {
+            Ok(r) => r,
+            Err(e) => return Some(Err(e)),
+        };
+        if row.spec.arrival < self.last_arrival {
+            return Some(Err(TraceError::Parse {
+                path: self.reader.path().to_string(),
+                line: row.line,
+                column: 1,
+                message: format!(
+                    "arrival {} is before the previous job's {} (streaming replay needs a time-ordered trace)",
+                    row.spec.arrival, self.last_arrival
+                ),
+            }));
+        }
+        self.last_arrival = row.spec.arrival;
+        self.yielded += 1;
+        Some(Ok(SourcedJob { spec: row.spec, durations: row.durations }))
+    }
+}
+
+/// Pull-based form of the synthetic generators.  The per-state RNGs are
+/// constructed and advanced in exactly the order `generator::generate`
+/// uses, so the emitted job sequence is bit-identical to the materialized
+/// workload for the same `(cfg, horizon, seed)`.
+pub struct GeneratorSource {
+    state: GenState,
+}
+
+enum GenState {
+    Poisson {
+        arr_rng: Pcg64,
+        job_rng: Pcg64,
+        dur_rng: Pcg64,
+        t: f64,
+        horizon: f64,
+        lambda: f64,
+        m_lo: u32,
+        m_hi: u32,
+        mean_lo: f64,
+        mean_hi: f64,
+        alpha: f64,
+        next_id: u32,
+    },
+    Bursty {
+        arr_rng: Pcg64,
+        job_rng: Pcg64,
+        dur_rng: Pcg64,
+        state_rng: Pcg64,
+        t: f64,
+        on: bool,
+        phase_end: f64,
+        horizon: f64,
+        mmpp: Mmpp,
+        m_lo: u32,
+        m_hi: u32,
+        mean_lo: f64,
+        mean_hi: f64,
+        alpha: f64,
+        next_id: u32,
+    },
+    Single { tasks: u32, mean: f64, alpha: f64, seed: u64 },
+    Done,
+}
+
+impl GeneratorSource {
+    /// Build a pull-based generator for any synthetic [`WorkloadConfig`].
+    /// Trace configs are not generators; route them to [`StreamSource`].
+    pub fn new(cfg: &WorkloadConfig, horizon: f64, seed: u64) -> Result<Self, String> {
+        let state = match cfg {
+            WorkloadConfig::Poisson { lambda, m_lo, m_hi, mean_lo, mean_hi, alpha } => {
+                GenState::Poisson {
+                    arr_rng: Pcg64::new(seed, 101),
+                    job_rng: Pcg64::new(seed, 202),
+                    dur_rng: Pcg64::new(seed, 303),
+                    t: 0.0,
+                    horizon,
+                    lambda: *lambda,
+                    m_lo: *m_lo,
+                    m_hi: *m_hi,
+                    mean_lo: *mean_lo,
+                    mean_hi: *mean_hi,
+                    alpha: *alpha,
+                    next_id: 0,
+                }
+            }
+            WorkloadConfig::Bursty {
+                lambda,
+                burst,
+                on_frac,
+                cycle,
+                m_lo,
+                m_hi,
+                mean_lo,
+                mean_hi,
+                alpha,
+            } => {
+                let mmpp = Mmpp::from_mean(*lambda, *burst, *on_frac, *cycle);
+                let mut state_rng = Pcg64::new(seed, 404);
+                let phase_end = state_rng.exponential(1.0 / mmpp.dwell_on);
+                GenState::Bursty {
+                    arr_rng: Pcg64::new(seed, 101),
+                    job_rng: Pcg64::new(seed, 202),
+                    dur_rng: Pcg64::new(seed, 303),
+                    state_rng,
+                    t: 0.0,
+                    on: true,
+                    phase_end,
+                    horizon,
+                    mmpp,
+                    m_lo: *m_lo,
+                    m_hi: *m_hi,
+                    mean_lo: *mean_lo,
+                    mean_hi: *mean_hi,
+                    alpha: *alpha,
+                    next_id: 0,
+                }
+            }
+            WorkloadConfig::SingleJob { tasks, mean, alpha } => GenState::Single {
+                tasks: *tasks,
+                mean: *mean,
+                alpha: *alpha,
+                seed,
+            },
+            WorkloadConfig::Trace { path, .. } => {
+                return Err(format!(
+                    "trace workload '{path}' is not a generator; stream it with StreamSource"
+                ));
+            }
+        };
+        Ok(GeneratorSource { state })
+    }
+}
+
+/// Draw one job at arrival `t` with the generators' shared draw order:
+/// task count, mean, then `m` first-copy durations.
+#[allow(clippy::too_many_arguments)]
+fn draw_job(
+    job_rng: &mut Pcg64,
+    dur_rng: &mut Pcg64,
+    id: u32,
+    t: f64,
+    m_lo: u32,
+    m_hi: u32,
+    mean_lo: f64,
+    mean_hi: f64,
+    alpha: f64,
+) -> SourcedJob {
+    let m = job_rng.uniform_u64(m_lo as u64, m_hi as u64) as u32;
+    let mean = job_rng.uniform_f64(mean_lo, mean_hi);
+    let dist = Pareto::from_mean(mean, alpha);
+    let durations: Vec<f64> = (0..m).map(|_| dist.sample(dur_rng)).collect();
+    SourcedJob {
+        spec: JobSpec { id: JobId(id), arrival: t, dist, num_tasks: m },
+        durations,
+    }
+}
+
+impl JobSource for GeneratorSource {
+    fn next_arrival(&mut self) -> Option<Result<SourcedJob, TraceError>> {
+        match &mut self.state {
+            GenState::Poisson {
+                arr_rng,
+                job_rng,
+                dur_rng,
+                t,
+                horizon,
+                lambda,
+                m_lo,
+                m_hi,
+                mean_lo,
+                mean_hi,
+                alpha,
+                next_id,
+            } => {
+                *t += arr_rng.exponential(*lambda);
+                if *t > *horizon {
+                    self.state = GenState::Done;
+                    return None;
+                }
+                let job = draw_job(
+                    job_rng, dur_rng, *next_id, *t, *m_lo, *m_hi, *mean_lo, *mean_hi, *alpha,
+                );
+                *next_id += 1;
+                Some(Ok(job))
+            }
+            GenState::Bursty {
+                arr_rng,
+                job_rng,
+                dur_rng,
+                state_rng,
+                t,
+                on,
+                phase_end,
+                horizon,
+                mmpp,
+                m_lo,
+                m_hi,
+                mean_lo,
+                mean_hi,
+                alpha,
+                next_id,
+            } => {
+                loop {
+                    let rate = if *on { mmpp.rate_on } else { mmpp.rate_off };
+                    let candidate =
+                        if rate > 0.0 { *t + arr_rng.exponential(rate) } else { f64::INFINITY };
+                    if candidate > *phase_end {
+                        *t = *phase_end;
+                        if *t > *horizon {
+                            self.state = GenState::Done;
+                            return None;
+                        }
+                        *on = !*on;
+                        let dwell = if *on { mmpp.dwell_on } else { mmpp.dwell_off };
+                        *phase_end = *t + state_rng.exponential(1.0 / dwell);
+                        continue;
+                    }
+                    *t = candidate;
+                    if *t > *horizon {
+                        self.state = GenState::Done;
+                        return None;
+                    }
+                    let job = draw_job(
+                        job_rng, dur_rng, *next_id, *t, *m_lo, *m_hi, *mean_lo, *mean_hi, *alpha,
+                    );
+                    *next_id += 1;
+                    return Some(Ok(job));
+                }
+            }
+            GenState::Single { tasks, mean, alpha, seed } => {
+                let mut dur_rng = Pcg64::new(*seed, 303);
+                let dist = Pareto::from_mean(*mean, *alpha);
+                let durations: Vec<f64> = (0..*tasks).map(|_| dist.sample(&mut dur_rng)).collect();
+                let job = SourcedJob {
+                    spec: JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: *tasks },
+                    durations,
+                };
+                self.state = GenState::Done;
+                Some(Ok(job))
+            }
+            GenState::Done => None,
+        }
+    }
+}
+
+/// Build the right source for a workload config: traces stream, everything
+/// else generates on demand.
+pub fn source_for(
+    cfg: &WorkloadConfig,
+    horizon: f64,
+    seed: u64,
+) -> Result<Box<dyn JobSource>, String> {
+    match cfg {
+        WorkloadConfig::Trace { path, format, max_jobs, .. } => {
+            let src = StreamSource::open(path, *format, *max_jobs).map_err(|e| e.to_string())?;
+            Ok(Box::new(src))
+        }
+        other => Ok(Box::new(GeneratorSource::new(other, horizon, seed)?)),
+    }
+}
+
+/// Bounded lookahead buffer over any [`JobSource`].
+///
+/// At most `window` un-admitted jobs are resident at once; the buffer
+/// refills only when it runs empty, so a streaming run's memory is
+/// `O(window + resident jobs)` regardless of trace length.  A source error
+/// is held back until every job buffered before it has been drained, then
+/// surfaced via [`Lookahead::error`].
+pub struct Lookahead {
+    src: Box<dyn JobSource>,
+    buf: VecDeque<SourcedJob>,
+    window: usize,
+    err: Option<TraceError>,
+    exhausted: bool,
+}
+
+impl Lookahead {
+    pub fn new(src: Box<dyn JobSource>, window: usize) -> Self {
+        Lookahead {
+            src,
+            buf: VecDeque::new(),
+            window: window.max(1),
+            err: None,
+            exhausted: false,
+        }
+    }
+
+    fn refill(&mut self) {
+        while !self.exhausted && self.err.is_none() && self.buf.len() < self.window {
+            match self.src.next_arrival() {
+                None => self.exhausted = true,
+                Some(Ok(job)) => self.buf.push_back(job),
+                Some(Err(e)) => self.err = Some(e),
+            }
+        }
+    }
+
+    /// Arrival time of the next pending job, if any.
+    pub fn peek_arrival(&mut self) -> Option<f64> {
+        if self.buf.is_empty() {
+            self.refill();
+        }
+        self.buf.front().map(|j| j.spec.arrival)
+    }
+
+    /// Take the next pending job.
+    pub fn take(&mut self) -> Option<SourcedJob> {
+        if self.buf.is_empty() {
+            self.refill();
+        }
+        self.buf.pop_front()
+    }
+
+    /// The terminal source error, visible once all jobs buffered before it
+    /// have been drained.
+    pub fn error(&self) -> Option<&TraceError> {
+        if self.buf.is_empty() { self.err.as_ref() } else { None }
+    }
+
+    /// Jobs currently resident in the buffer.
+    pub fn resident(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// The configured window.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+/// Streaming workload moments from one pre-pass over a trace.
+#[derive(Clone, Debug)]
+pub struct TraceStats {
+    /// Total jobs in the trace.
+    pub jobs: u64,
+    /// Per-job task counts.
+    pub tasks: Summary,
+    /// Per-job mean task durations (`dist.mean()`).
+    pub duration: Summary,
+    /// Pareto tail index fitted exactly as
+    /// `generator::estimate_alpha` fits it on the materialized workload
+    /// (same iteration order, same accumulator ops — bit-identical).
+    pub alpha: f64,
+    /// Latest arrival time seen.
+    pub max_arrival: f64,
+}
+
+/// One bounded-memory pass over a trace: job count, task/duration moments,
+/// and the MLE tail index.
+pub fn scan(path: &str, format: TraceFormat) -> Result<TraceStats, TraceError> {
+    let reader = TraceReader::open(path, format)?;
+    let mut jobs = 0u64;
+    let mut tasks = Summary::new();
+    let mut duration = Summary::new();
+    let mut max_arrival = 0.0f64;
+    let mut log_sum = 0.0f64;
+    let mut n = 0u64;
+    for row in reader {
+        let row = row?;
+        jobs += 1;
+        tasks.push(row.spec.num_tasks as f64);
+        duration.push(row.spec.dist.mean());
+        max_arrival = max_arrival.max(row.spec.arrival);
+        // the exact accumulation `generator::estimate_alpha` runs on the
+        // materialized workload, in the same order
+        for &d in &row.durations {
+            if row.spec.dist.mu > 0.0 && d > row.spec.dist.mu {
+                log_sum += (d / row.spec.dist.mu).ln();
+                n += 1;
+            }
+        }
+    }
+    let alpha = if n == 0 || log_sum <= 0.0 {
+        2.0
+    } else {
+        (n as f64 / log_sum).clamp(1.1, 10.0)
+    };
+    Ok(TraceStats { jobs, tasks, duration, alpha, max_arrival })
+}

@@ -127,7 +127,7 @@ fn trace_replay_is_deterministic() {
     let replayed = {
         let mut cc = c.clone();
         cc.scheduler = SchedulerKind::Sda;
-        let wl2 = WorkloadConfig::Trace { path: path.to_string_lossy().into_owned() };
+        let wl2 = WorkloadConfig::trace(path.to_string_lossy().into_owned());
         let workload2 = generate(&wl2, c.horizon, 9);
         let sched = scheduler::build(&cc, &wl2).unwrap();
         Simulator::new(cc, workload2, sched).run()

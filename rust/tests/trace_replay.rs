@@ -1,0 +1,307 @@
+//! The streaming trace-replay acceptance suite (PR 9).
+//!
+//! The equivalence bar: a materialized workload frozen to a trace file and
+//! replayed through the streaming `JobSource` path must serialize the
+//! **byte-identical** sweep CSV — across both event-queue backends and
+//! both slot-loop modes — because the streamed simulator replays the eager
+//! constructor's RNG splits in the same dense-id order and admits each job
+//! exactly where its `Arrival` event would have popped.
+//!
+//! Around that bar: `TraceReader` edge cases (CRLF, truncated final line,
+//! empty file, rows wider than the 64 KiB chunk), structured error
+//! positions, `GeneratorSource` bit-equivalence with `generator::generate`,
+//! the scan-vs-`estimate_alpha` bitwise agreement the scheduler thresholds
+//! rely on, and the `--max-resident-jobs` recycling mode's sketched
+//! aggregates.
+
+use specsim::cluster::event::EventQueueKind;
+use specsim::cluster::generator::{estimate_alpha, generate};
+use specsim::cluster::sim::Simulator;
+use specsim::cluster::trace;
+use specsim::config::{SimConfig, WorkloadConfig};
+use specsim::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
+use specsim::metrics::report;
+use specsim::scheduler::{self, SchedulerKind};
+use specsim::workload::{
+    scan, source_for, GeneratorSource, JobSource, StreamSource, TraceError, TraceFormat,
+    TraceReader, CHUNK,
+};
+
+/// A per-test temp path (tests run concurrently; the name keeps them
+/// from clobbering each other).
+fn temp_trace(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("specsim_replay_{tag}_{}.csv", std::process::id()))
+}
+
+fn base_config() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.machines = 100;
+    cfg.horizon = 100.0;
+    cfg.use_runtime = false;
+    cfg
+}
+
+/// The tentpole bar: freeze a generated workload to a trace file, then
+/// sweep it twice — materialized up front (`materialize_traces = true`)
+/// and streamed through the bounded lookahead window — and require the
+/// two sweep CSVs byte-identical across {calendar, binary-heap} x
+/// {wakeup planner, polled loop}.  A shrunken window (4 jobs resident)
+/// must not change the bytes either: the window bounds memory, never
+/// admission order.
+#[test]
+fn streamed_sweep_byte_identical_to_materialized_across_backends() {
+    let path = temp_trace("sweep");
+    let wl = generate(&WorkloadConfig::paper(1.0), 100.0, 7);
+    assert!(wl.specs.len() > 20, "trace too small to be interesting");
+    trace::save(&wl, &path).unwrap();
+    let path_str = path.to_string_lossy().into_owned();
+
+    let spec_with = |materialize: bool, window: usize| {
+        let mut wl_cfg = WorkloadConfig::trace(path_str.clone());
+        if let WorkloadConfig::Trace { window: w, .. } = &mut wl_cfg {
+            *w = window;
+        }
+        let mut spec = ExperimentSpec::new("replay", base_config());
+        spec.policies = vec![
+            PolicyVariant::kind(SchedulerKind::Naive),
+            PolicyVariant::kind(SchedulerKind::Sda),
+            PolicyVariant::kind(SchedulerKind::Mantri),
+            PolicyVariant::policy("est-srpt+sda").unwrap(),
+        ];
+        spec.loads = vec![LoadPoint::new("trace", 1.0, wl_cfg)];
+        spec.seeds = vec![7];
+        spec.threads = 2;
+        spec.materialize_traces = materialize;
+        spec
+    };
+    let run = |materialize: bool, window: usize, queue: EventQueueKind, wakeup: bool| {
+        let mut spec = spec_with(materialize, window);
+        spec.base.event_queue = queue;
+        spec.base.wakeup = wakeup;
+        report::sweep_csv(&Runner::run(&spec).unwrap())
+    };
+
+    for queue in [EventQueueKind::Calendar, EventQueueKind::BinaryHeap] {
+        for wakeup in [true, false] {
+            let materialized = run(true, 0, queue, wakeup);
+            assert!(materialized.lines().count() > 4, "empty sweep?");
+            let streamed = run(false, 0, queue, wakeup);
+            assert_eq!(
+                streamed, materialized,
+                "{queue:?} wakeup={wakeup}: streaming replay diverged from the \
+                 materialized workload"
+            );
+            let tiny_window = run(false, 4, queue, wakeup);
+            assert_eq!(
+                tiny_window, materialized,
+                "{queue:?} wakeup={wakeup}: a 4-job lookahead window changed the bytes"
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Reader edge cases: CRLF terminators, a truncated final line (no
+/// trailing newline), an empty file, and a single native row whose
+/// durations field is wider than the 64 KiB read chunk.
+#[test]
+fn reader_handles_crlf_truncated_tail_empty_and_oversized_rows() {
+    // CRLF + truncated tail, simple format with header
+    let bytes = b"arrival,duration,tasks\r\n0.5,1.0,2\r\n1.5,2.0,3";
+    let rows: Vec<_> = TraceReader::new(&bytes[..], "mem", TraceFormat::Auto)
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].spec.arrival, 0.5);
+    assert_eq!(rows[0].durations, vec![1.0, 1.0]);
+    assert_eq!(rows[1].spec.arrival, 1.5);
+    assert_eq!(rows[1].spec.num_tasks, 3);
+    assert_eq!(rows[1].line, 3, "physical line numbers count the header");
+
+    // blank interior lines are skipped, not errors
+    let bytes = b"arrival,duration,tasks\n\n0.5,1.0,2\n\n";
+    let rows: Vec<_> = TraceReader::new(&bytes[..], "mem", TraceFormat::Auto)
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    assert_eq!(rows.len(), 1);
+
+    // empty file: a structured Empty error, then the iterator fuses
+    let mut reader = TraceReader::new(&b""[..], "mem", TraceFormat::Auto);
+    match reader.next() {
+        Some(Err(TraceError::Empty { path })) => assert_eq!(path, "mem"),
+        other => panic!("expected TraceError::Empty, got {other:?}"),
+    }
+    assert!(reader.next().is_none(), "the reader must fuse after an error");
+
+    // jsonl rows expand the per-job mean to all task copies
+    let bytes = br#"{"arrival":0.25,"duration":2.0,"tasks":3,"alpha":2.5}"#;
+    let rows: Vec<_> = TraceReader::new(&bytes[..], "mem", TraceFormat::Auto)
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].durations, vec![2.0, 2.0, 2.0]);
+    assert_eq!(rows[0].spec.dist.alpha, 2.5);
+
+    // one native row wider than the read chunk: the carry buffer grows
+    // until the newline arrives instead of splitting the line
+    let n = CHUNK / 4 + 1024; // "1.5;" is 4 bytes per duration
+    let mut text = String::from("job,arrival,mu,alpha,num_tasks,durations\n");
+    text.push_str(&format!("0,0.0,3.0,2.0,{n},"));
+    for i in 0..n {
+        if i > 0 {
+            text.push(';');
+        }
+        text.push_str("1.5");
+    }
+    text.push('\n');
+    assert!(text.len() > CHUNK, "the row must actually cross a chunk boundary");
+    let rows: Vec<_> = TraceReader::new(text.as_bytes(), "mem", TraceFormat::Auto)
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].durations.len(), n);
+    assert_eq!(rows[0].durations[0], 1.5);
+    assert_eq!(rows[0].durations[n - 1], 1.5);
+}
+
+/// Every parse failure carries the path, the 1-based physical line, and
+/// the 1-based byte column of the offending field — and the iterator
+/// fuses after reporting it.
+#[test]
+fn reader_errors_carry_path_line_and_column_and_fuse() {
+    let bytes = b"arrival,duration,tasks\n0.0,1.0,2\n0.5,oops,2\n1.0,1.0,2\n";
+    let mut reader = TraceReader::new(&bytes[..], "bad.csv", TraceFormat::Auto);
+    assert!(reader.next().unwrap().is_ok());
+    match reader.next() {
+        Some(Err(TraceError::Parse { path, line, column, message })) => {
+            assert_eq!(path, "bad.csv");
+            assert_eq!(line, 3);
+            assert_eq!(column, 5, "column points at the duration field");
+            assert!(message.contains("duration"), "unhelpful message: {message}");
+        }
+        other => panic!("expected a Parse error, got {other:?}"),
+    }
+    assert!(reader.next().is_none(), "row 4 must not be yielded after the error");
+
+    // native rows must carry dense ids
+    let bytes = b"job,arrival,mu,alpha,num_tasks,durations\n5,0.0,3.0,2.0,1,1.0\n";
+    let mut reader = TraceReader::new(&bytes[..], "dense.csv", TraceFormat::Native);
+    match reader.next() {
+        Some(Err(TraceError::Parse { line, message, .. })) => {
+            assert_eq!(line, 2);
+            assert!(message.contains("non-dense"), "{message}");
+        }
+        other => panic!("expected a dense-id error, got {other:?}"),
+    }
+}
+
+/// `StreamSource` enforces the non-decreasing-arrival contract replay
+/// depends on, and honors the `max_jobs` cap.
+#[test]
+fn stream_source_enforces_time_order_and_max_jobs() {
+    let path = temp_trace("order");
+    std::fs::write(&path, "arrival,duration,tasks\n5.0,1.0,1\n3.0,1.0,1\n").unwrap();
+    let path_str = path.to_string_lossy().into_owned();
+    let mut src = StreamSource::open(&path_str, TraceFormat::Auto, None).unwrap();
+    assert!(src.next_arrival().unwrap().is_ok());
+    match src.next_arrival() {
+        Some(Err(TraceError::Parse { line, message, .. })) => {
+            assert_eq!(line, 3);
+            assert!(message.contains("time-ordered"), "{message}");
+        }
+        other => panic!("expected an out-of-order error, got {other:?}"),
+    }
+
+    let mut capped = StreamSource::open(&path_str, TraceFormat::Auto, Some(1)).unwrap();
+    assert!(capped.next_arrival().unwrap().is_ok());
+    assert!(capped.next_arrival().is_none(), "max_jobs = 1 must stop after one row");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `GeneratorSource` replays the exact RNG draw order of
+/// `generator::generate`: same ids, same arrivals, same distributions,
+/// same first-copy durations, bit for bit, for every synthetic shape.
+#[test]
+fn generator_source_is_bit_identical_to_materialized_generation() {
+    let shapes = [
+        WorkloadConfig::paper(2.0),
+        WorkloadConfig::bursty_paper(1.0, 3.0),
+        WorkloadConfig::SingleJob { tasks: 12, mean: 1.5, alpha: 2.0 },
+    ];
+    for (si, wl_cfg) in shapes.iter().enumerate() {
+        let (horizon, seed) = (50.0, 11);
+        let wl = generate(wl_cfg, horizon, seed);
+        assert!(!wl.specs.is_empty(), "shape {si} generated nothing");
+        let mut src = GeneratorSource::new(wl_cfg, horizon, seed).unwrap();
+        let mut n = 0usize;
+        while let Some(next) = src.next_arrival() {
+            let job = next.unwrap();
+            let spec = &wl.specs[n];
+            assert_eq!(job.spec.id.0, spec.id.0, "shape {si} job {n}");
+            assert_eq!(job.spec.arrival.to_bits(), spec.arrival.to_bits(), "shape {si} job {n}");
+            assert_eq!(job.spec.num_tasks, spec.num_tasks, "shape {si} job {n}");
+            assert_eq!(job.spec.dist.mu.to_bits(), spec.dist.mu.to_bits(), "shape {si} job {n}");
+            assert_eq!(job.durations.len(), wl.first_durations[n].len());
+            for (a, b) in job.durations.iter().zip(&wl.first_durations[n]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "shape {si} job {n} duration");
+            }
+            n += 1;
+        }
+        assert_eq!(n, wl.specs.len(), "shape {si}: the source stopped early (or late)");
+    }
+}
+
+/// The streaming pre-pass fits the tail index with the exact accumulation
+/// `estimate_alpha` runs on the materialized workload — bitwise equal, so
+/// SDA/ESE thresholds cannot drift between the two paths.  (Hinges on
+/// `trace::save` writing shortest-round-trip floats.)
+#[test]
+fn scan_alpha_matches_estimate_alpha_bitwise() {
+    let path = temp_trace("alpha");
+    let wl = generate(&WorkloadConfig::paper(1.0), 80.0, 3);
+    trace::save(&wl, &path).unwrap();
+    let stats = scan(&path.to_string_lossy(), TraceFormat::Auto).unwrap();
+    assert_eq!(stats.jobs as usize, wl.specs.len());
+    assert_eq!(stats.alpha.to_bits(), estimate_alpha(&wl).to_bits());
+    assert!(stats.tasks.mean() > 0.0);
+    assert!(stats.duration.mean() > 0.0);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `--max-resident-jobs`: recycling completed records into the streaming
+/// sketches changes only where aggregates live, never the dynamics — the
+/// capped run completes exactly the jobs the uncapped run does, holds no
+/// materialized records at the end, and its Welford mean agrees with the
+/// exact mean.
+#[test]
+fn capped_replay_sketches_every_completed_job() {
+    let path = temp_trace("capped");
+    let wl = generate(&WorkloadConfig::paper(1.0), 100.0, 7);
+    trace::save(&wl, &path).unwrap();
+    let wl_cfg = WorkloadConfig::trace(path.to_string_lossy().into_owned());
+    let cfg = base_config();
+
+    let run_streamed = |cap: Option<usize>| {
+        let mut cfg = cfg.clone();
+        cfg.max_resident_jobs = cap;
+        let sched = scheduler::build(&cfg, &wl_cfg).unwrap();
+        let source = source_for(&wl_cfg, cfg.horizon, cfg.seed).unwrap();
+        Simulator::from_source(cfg, source, 0, sched).run()
+    };
+    let uncapped = run_streamed(None);
+    assert!(uncapped.streamed.is_none());
+    assert!(uncapped.completed.len() > 20);
+
+    let capped = run_streamed(Some(8));
+    let sink = capped.streamed.as_ref().expect("capped runs aggregate into sketches");
+    assert!(capped.completed.is_empty(), "capped runs must not retain records");
+    assert_eq!(sink.drained as usize, uncapped.completed.len());
+    let exact = uncapped.mean_flowtime();
+    let sketched = sink.flowtime.mean();
+    assert!(
+        (exact - sketched).abs() <= 1e-9 * exact.abs().max(1.0),
+        "Welford mean {sketched} drifted from the exact mean {exact}"
+    );
+    assert!(sink.flow_p90.quantile() >= sink.flow_p80.quantile() - 1e-12);
+    let _ = std::fs::remove_file(&path);
+}
