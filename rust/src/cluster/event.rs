@@ -66,6 +66,15 @@ pub enum Event {
     /// recovers).  The handler re-times every running copy on the machine
     /// and schedules the next flip; never stale, never compacted away.
     SlowdownFlip { machine: u32 },
+    /// Machine `machine` crashes: every resident copy is killed (work
+    /// lost, the paper's restart-from-zero model), the machine leaves the
+    /// allocatable pool, and tasks whose last running copy died are
+    /// re-queued for re-execution.  Never stale, never compacted away
+    /// (see `Cluster::fail_machine`).
+    MachineFail { machine: u32 },
+    /// Machine `machine` rejoins the pool after a crash.  Never stale,
+    /// never compacted away (see `Cluster::recover_machine`).
+    MachineRecover { machine: u32 },
 }
 
 /// Which data structure backs the [`EventQueue`].
@@ -512,6 +521,21 @@ mod tests {
                 }
                 other => panic!("unexpected {other:?}"),
             }
+        });
+    }
+
+    /// Churn events order and tie-break like any other entry on both
+    /// backends (they carry no epoch — never stale, never compacted).
+    #[test]
+    fn churn_events_pop_identically_on_both_backends() {
+        both(|mut q| {
+            q.push(2.0, Event::MachineFail { machine: 1 });
+            q.push(2.0, Event::MachineRecover { machine: 2 }); // tie: insertion order
+            q.push(0.5, Event::Arrival(JobId(0)));
+            assert_eq!(q.pop().unwrap(), (0.5, Event::Arrival(JobId(0))));
+            assert_eq!(q.pop().unwrap(), (2.0, Event::MachineFail { machine: 1 }));
+            assert_eq!(q.pop().unwrap(), (2.0, Event::MachineRecover { machine: 2 }));
+            assert!(q.pop().is_none());
         });
     }
 

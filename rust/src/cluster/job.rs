@@ -142,6 +142,14 @@ pub struct TaskArena {
     /// stale.  0 for copies never re-timed — the only value ever seen when
     /// ON/OFF flips are disabled.
     epoch: Vec<u32>,
+    /// The task's authoritative (non-speculative) attempt: chain position 0
+    /// at launch, and any relaunch pushed because a machine crash killed
+    /// the task's last surviving copy (`Cluster::fail_machine`).  The
+    /// "original vs backup" branch points (Mantri's stranded-entry rule,
+    /// checkpoint re-pushes, LATE's outstanding-backup gauge) key on this,
+    /// not on chain position — without churn the two are identical, which
+    /// is the zero-churn bitwise-identity argument.
+    primary: Vec<bool>,
     /// Next sibling copy id, or `NONE` at the chain tail.
     next: Vec<u32>,
     /// Recycled copy rows (filled by `recycle_tasks`).
@@ -286,6 +294,7 @@ impl TaskArena {
                 self.revealed[i] = false;
                 self.obs_speed[i] = f64::NAN;
                 self.epoch[i] = 0;
+                self.primary[i] = false;
                 self.next[i] = NONE;
                 c
             }
@@ -299,12 +308,16 @@ impl TaskArena {
                 self.revealed.push(false);
                 self.obs_speed.push(f64::NAN);
                 self.epoch.push(0);
+                self.primary.push(false);
                 self.next.push(NONE);
                 c
             }
         };
         let i = tid as usize;
         let k = self.n_copies[i];
+        // chain position 0 is the task's original attempt; crash relaunches
+        // (chain position > 0) re-mark themselves via `set_primary`
+        self.primary[cid as usize] = k == 0;
         if self.head[i] == NONE {
             self.head[i] = cid;
         } else {
@@ -413,6 +426,22 @@ impl TaskArena {
         self.epoch[i] += 1;
         self.epoch[i]
     }
+
+    /// Whether the copy is the task's authoritative attempt (see the
+    /// `primary` column doc).  Without churn this is exactly "chain
+    /// position 0".
+    #[inline]
+    pub fn primary(&self, cid: u32) -> bool {
+        self.primary[cid as usize]
+    }
+
+    /// Mark a crash relaunch as the task's new authoritative attempt
+    /// (`Cluster::fail_machine` relaunches after the last surviving copy
+    /// died, so the new copy inherits original-attempt semantics).
+    #[inline]
+    pub fn set_primary(&mut self, cid: u32) {
+        self.primary[cid as usize] = true;
+    }
 }
 
 /// Mutable per-job state.  Task/copy state lives in the cluster's
@@ -438,6 +467,13 @@ pub struct JobState {
     /// popping as no-ops or by compaction.  The arena-recycle guard: a
     /// `Done` job's rows may be reused only at zero.
     pub stranded: u32,
+    /// Copies of this job's tasks killed by machine crashes
+    /// (`Cluster::fail_machine`); 0 without churn.
+    pub copies_lost: u32,
+    /// Wall-clock already sunk into those crashed copies (the work the
+    /// paper's restart-from-zero failure model throws away).  Counted into
+    /// `machine_time` too — lost work still occupied a machine.
+    pub work_lost: f64,
 }
 
 impl JobState {
@@ -451,6 +487,8 @@ impl JobState {
             finish: None,
             machine_time: 0.0,
             stranded: 0,
+            copies_lost: 0,
+            work_lost: 0.0,
             spec,
         }
     }
@@ -566,6 +604,31 @@ mod tests {
         assert!(arena.obs_speed(cid).is_nan(), "no throughput stamp before reveal");
         arena.set_obs_speed(cid, 0.25);
         assert_eq!(arena.obs_speed(cid), 0.25);
+    }
+
+    #[test]
+    fn primary_tracks_original_then_relaunch() {
+        let mut arena = TaskArena::new();
+        let base = arena.alloc_tasks(1);
+        arena.push_copy(base, 0, 0.0, 5.0, 5.0);
+        arena.push_copy(base, 1, 1.0, 5.0, 5.0);
+        assert!(arena.primary(arena.copy_id(base, 0)), "chain head is the original");
+        assert!(!arena.primary(arena.copy_id(base, 1)), "backups are speculative");
+        // a crash relaunch is re-marked authoritative by the caller
+        arena.push_copy(base, 2, 2.0, 5.0, 5.0);
+        let relaunch = arena.copy_id(base, 2);
+        assert!(!arena.primary(relaunch));
+        arena.set_primary(relaunch);
+        assert!(arena.primary(relaunch));
+        // recycled rows never leak a stale primary mark
+        arena.set_done(base, 3.0);
+        arena.recycle_tasks(base, 1);
+        let again = arena.alloc_tasks(1);
+        assert_eq!(again, base);
+        arena.push_copy(again, 3, 4.0, 1.0, 1.0);
+        arena.push_copy(again, 4, 4.5, 1.0, 1.0);
+        assert!(arena.primary(arena.copy_id(again, 0)));
+        assert!(!arena.primary(arena.copy_id(again, 1)));
     }
 
     #[test]

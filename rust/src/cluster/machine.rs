@@ -153,6 +153,83 @@ pub fn format_slowdown(sd: &SlowdownConfig) -> String {
     }
 }
 
+/// Machine-churn scenario: machines crash and recover as independent
+/// alternating renewal processes (the paper's opening premise — failures
+/// are "the norm rather than the exception").  An up machine fails after
+/// Exp(1/`mttf`) time, killing every resident copy (work lost, restart
+/// from zero); a down machine rejoins after Exp(1/`mttr`) time.  Both
+/// means zero (the default spec `0,0`) disables the process entirely —
+/// no events scheduled, no RNG stream consumed — so zero-rate churn is
+/// bit-identical to the pre-churn simulator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnConfig {
+    /// Mean time to failure of an up machine (simulated time units).
+    pub mttf: f64,
+    /// Mean time to recovery of a down machine.
+    pub mttr: f64,
+}
+
+impl ChurnConfig {
+    pub fn new(mttf: f64, mttr: f64) -> Self {
+        ChurnConfig { mttf, mttr }
+    }
+
+    /// Whether the churn process is active (a positive MTTF).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.mttf > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.mttf >= 0.0 && self.mttf.is_finite()) {
+            return Err(format!("churn mttf must be finite and >= 0, got {}", self.mttf));
+        }
+        if !(self.mttr >= 0.0 && self.mttr.is_finite()) {
+            return Err(format!("churn mttr must be finite and >= 0, got {}", self.mttr));
+        }
+        // a failing machine must be able to come back: a zero MTTR with a
+        // positive MTTF would drain the cluster to nothing
+        if self.enabled() && !(self.mttr > 0.0) {
+            return Err(format!(
+                "churn mttr must be > 0 when mttf is (got mttf={}, mttr={})",
+                self.mttf, self.mttr
+            ));
+        }
+        if !self.enabled() && self.mttr > 0.0 {
+            return Err(format!(
+                "churn mttf must be > 0 when mttr is (got mttf={}, mttr={})",
+                self.mttf, self.mttr
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Parse a churn spec `MTTF,MTTR`, e.g. `"200,20"` (machines fail every
+/// 200 time units on average and stay down for 20).  `"0,0"` disables.
+pub fn parse_churn(s: &str) -> Result<ChurnConfig, String> {
+    let (mttf_s, mttr_s) = s
+        .split_once(',')
+        .ok_or_else(|| format!("churn '{s}': expected MTTF,MTTR, e.g. 200,20"))?;
+    let mttf: f64 = mttf_s
+        .trim()
+        .parse()
+        .map_err(|_| format!("churn '{s}': bad mttf '{mttf_s}'"))?;
+    let mttr: f64 = mttr_s
+        .trim()
+        .parse()
+        .map_err(|_| format!("churn '{s}': bad mttr '{mttr_s}'"))?;
+    let churn = ChurnConfig::new(mttf, mttr);
+    churn.validate()?;
+    Ok(churn)
+}
+
+/// Render a churn spec back to `MTTF,MTTR` (round-trips through
+/// [`parse_churn`]).
+pub fn format_churn(c: &ChurnConfig) -> String {
+    format!("{:?},{:?}", c.mttf, c.mttr)
+}
+
 /// Parse a cluster scenario spec: comma-separated `COUNTxSPEED` groups,
 /// e.g. `"2000x1.0,1000x0.5"`.  Bare `COUNT` means speed 1.0.
 pub fn parse_classes(s: &str) -> Result<Vec<MachineClass>, String> {
@@ -213,6 +290,8 @@ pub struct MachinePool {
     busy: Vec<Option<Assignment>>, // indexed by machine id
     speeds: Vec<f64>,              // indexed by machine id (advertised)
     slowdowns: Vec<f64>,           // indexed by machine id (hidden, >= 1)
+    up: Vec<bool>,                 // indexed by machine id (churn state)
+    down_count: usize,
 }
 
 impl MachinePool {
@@ -235,6 +314,8 @@ impl MachinePool {
             busy: vec![None; n],
             speeds,
             slowdowns: vec![1.0; n],
+            up: vec![true; n],
+            down_count: 0,
         }
     }
 
@@ -295,14 +376,18 @@ impl MachinePool {
 
     #[inline]
     pub fn busy_count(&self) -> usize {
-        self.busy.len() - self.free.len()
+        self.busy.len() - self.free.len() - self.down_count
     }
 
-    /// Allocate an idle machine for a task copy.
+    /// Allocate an idle machine for a task copy.  Down machines are never
+    /// returned — `mark_down` removed them from the free list — which is
+    /// what makes the estimators' down-host exclusion structural: no
+    /// running copy can ever sit on a crashed machine.
     #[inline]
     pub fn alloc(&mut self, asg: Assignment) -> Option<u32> {
         let id = self.free.pop()?;
         debug_assert!(self.busy[id as usize].is_none());
+        debug_assert!(self.up[id as usize], "allocated a down machine");
         self.busy[id as usize] = Some(asg);
         Some(id)
     }
@@ -319,6 +404,42 @@ impl MachinePool {
     #[inline]
     pub fn assignment(&self, id: u32) -> Option<Assignment> {
         self.busy[id as usize]
+    }
+
+    /// Is machine `id` up (not crashed)?  Always true without churn.
+    #[inline]
+    pub fn is_up(&self, id: u32) -> bool {
+        self.up[id as usize]
+    }
+
+    /// Machines currently down (crashed, awaiting recovery).
+    #[inline]
+    pub fn down(&self) -> usize {
+        self.down_count
+    }
+
+    /// Crash machine `id`: it leaves the allocatable pool until
+    /// [`mark_up`](Self::mark_up).  The caller (`Cluster::fail_machine`)
+    /// must have killed and released any resident copy first, so the
+    /// machine sits on the free list here; the removal preserves the free
+    /// list's order so a zero-churn run's allocation sequence is untouched
+    /// by the mere existence of this method.
+    pub fn mark_down(&mut self, id: u32) {
+        debug_assert!(self.up[id as usize], "machine {id} failed twice");
+        debug_assert!(self.busy[id as usize].is_none(), "machine {id} failed while busy");
+        self.up[id as usize] = false;
+        self.down_count += 1;
+        self.free.retain(|&m| m != id);
+    }
+
+    /// Recover machine `id`: push it back onto the LIFO free stack, so a
+    /// freshly recovered machine is the next one allocated (deterministic
+    /// and cache-friendly).
+    pub fn mark_up(&mut self, id: u32) {
+        debug_assert!(!self.up[id as usize], "machine {id} recovered while up");
+        self.up[id as usize] = true;
+        self.down_count -= 1;
+        self.free.push(id);
     }
 
     /// Iterate over (machine, assignment) for all busy machines.
@@ -500,6 +621,59 @@ mod tests {
         for id in 0..3 {
             assert_eq!(p.effective_speed(id), 1.0);
         }
+    }
+
+    #[test]
+    fn churn_spec_roundtrip_and_bounds() {
+        let c = parse_churn("200,20").unwrap();
+        assert_eq!(c, ChurnConfig::new(200.0, 20.0));
+        assert!(c.enabled());
+        assert_eq!(parse_churn(&format_churn(&c)).unwrap(), c);
+        let off = parse_churn("0,0").unwrap();
+        assert!(!off.enabled());
+        assert_eq!(format_churn(&off), "0.0,0.0");
+        assert!(parse_churn("200").is_err()); // missing mttr
+        assert!(parse_churn("a,b").is_err());
+        assert!(parse_churn("-1,5").is_err());
+        assert!(parse_churn("200,0").is_err()); // fail without recovery
+        assert!(parse_churn("0,20").is_err()); // recovery without failure
+        assert!(ChurnConfig::new(f64::NAN, 1.0).validate().is_err());
+        assert!(ChurnConfig::new(f64::INFINITY, 1.0).validate().is_err());
+    }
+
+    #[test]
+    fn mark_down_removes_from_allocation_until_recovery() {
+        let mut p = MachinePool::new(3);
+        assert!(p.is_up(1));
+        assert_eq!(p.down(), 0);
+        p.mark_down(1);
+        assert!(!p.is_up(1));
+        assert_eq!(p.down(), 1);
+        assert_eq!(p.idle(), 2);
+        assert_eq!(p.busy_count(), 0, "a down machine is not busy");
+        // the down machine is never allocated
+        let a = p.alloc(Assignment { task: tref(0, 0), copy: 0 }).unwrap();
+        let b = p.alloc(Assignment { task: tref(0, 1), copy: 0 }).unwrap();
+        assert_ne!(a, 1);
+        assert_ne!(b, 1);
+        assert!(p.alloc(Assignment { task: tref(0, 2), copy: 0 }).is_none());
+        // recovery pushes it to the top of the LIFO stack
+        p.mark_up(1);
+        assert!(p.is_up(1));
+        assert_eq!(p.down(), 0);
+        let c = p.alloc(Assignment { task: tref(0, 2), copy: 0 }).unwrap();
+        assert_eq!(c, 1, "a recovered machine allocates next");
+    }
+
+    #[test]
+    fn down_state_preserves_free_list_order() {
+        // failing and recovering an idle machine must not reorder the
+        // *other* machines' allocation sequence
+        let mut p = MachinePool::new(4);
+        p.mark_down(2);
+        let a = p.alloc(Assignment { task: tref(0, 0), copy: 0 }).unwrap();
+        let b = p.alloc(Assignment { task: tref(0, 1), copy: 0 }).unwrap();
+        assert_eq!((a, b), (0, 1), "survivors keep their LIFO order");
     }
 
     #[test]

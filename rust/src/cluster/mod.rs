@@ -15,5 +15,5 @@ pub use event::{Event, EventQueue, EventQueueKind};
 pub use generator::generate;
 pub use index::SchedIndex;
 pub use job::{CopyPhase, CopyState, JobId, JobPhase, JobSpec, JobState, TaskArena, TaskRef};
-pub use machine::{MachineClass, MachinePool};
+pub use machine::{ChurnConfig, MachineClass, MachinePool};
 pub use sim::{Cluster, SimResult, Simulator};

@@ -75,6 +75,17 @@ pub struct Cluster {
     /// empty unless `cfg.slowdown` has flips enabled, so static-slowdown
     /// and healthy runs consume no draws and stay bit-identical.
     flip_rngs: Vec<Pcg64>,
+    /// Per-machine up-time/repair streams for the crash/recovery churn
+    /// process; empty unless `cfg.churn` is enabled, so churn-free runs
+    /// (and scripted machine-events replays) consume no draws and stay
+    /// bit-identical to pre-churn behavior.
+    churn_rngs: Vec<Pcg64>,
+    /// Tasks whose last surviving copy died in a machine crash, waiting to
+    /// relaunch (the paper's restart-from-zero failure model).  Drained
+    /// FIFO at the next fired slot (`SlotGate::slot`), ahead of the
+    /// scheduler's own launches; counted into `queued_tasks` so
+    /// backpressure sees the re-execution backlog.
+    requeued: Vec<TaskRef>,
     /// Completed jobs whose arena rows are not yet reusable (waiting on
     /// `stranded == 0`); drained by the live path's `add_job`.
     pending_recycle: Vec<JobId>,
@@ -84,6 +95,14 @@ pub struct Cluster {
     pub speculative_launches: u64,
     /// Currently-running backup copies (LATE's speculativeCap accounting).
     pub outstanding_backups: usize,
+    /// Copies killed by machine crashes across all jobs (churn volume).
+    pub copies_lost: u64,
+    /// Machine-time sunk into crashed copies — the work the
+    /// restart-from-zero failure model throws away.  Also counted in
+    /// `total_machine_time`: lost work still occupied a machine.
+    pub work_lost: f64,
+    /// Machine-crash events handled (recoveries are not counted).
+    pub machines_failed: u64,
     pub completed: Vec<JobRecord>,
     pub incomplete: u64,
 }
@@ -127,6 +146,16 @@ impl Cluster {
             }
             _ => Vec::new(),
         };
+        // crash/recovery draws get their own root too (enabling churn must
+        // not perturb any existing draw), split per machine so each
+        // machine's fail/repair sequence is independent of the others'
+        let churn_rngs: Vec<Pcg64> = match &cfg.churn {
+            Some(ch) if ch.enabled() => {
+                let mut root = Pcg64::new(cfg.seed, 0xfa11);
+                (0..machines.total()).map(|m| root.split(m as u64 + 1)).collect()
+            }
+            _ => Vec::new(),
+        };
         let mut index = SchedIndex::new(jobs.len());
         if cfg.sched_index && cfg.scheduler.uses_est_ordering() {
             // an est-srpt pipeline is active: maintain the est-keyed
@@ -151,10 +180,15 @@ impl Cluster {
             first_durations: workload.first_durations,
             job_rngs,
             flip_rngs,
+            churn_rngs,
+            requeued: Vec::new(),
             pending_recycle: Vec::new(),
             total_machine_time: 0.0,
             speculative_launches: 0,
             outstanding_backups: 0,
+            copies_lost: 0,
+            work_lost: 0.0,
+            machines_failed: 0,
             completed: Vec::new(),
             incomplete: 0,
         };
@@ -166,6 +200,14 @@ impl Cluster {
                 for m in 0..cl.machines.total() as u32 {
                     cl.schedule_flip(m, &sd);
                 }
+            }
+        }
+        // seed each machine's first crash from its up-time law (every
+        // machine starts up); the fail handler then schedules the
+        // recovery and the recovery the next crash
+        if cl.cfg.churn.is_some_and(|ch| ch.enabled()) {
+            for m in 0..cl.machines.total() as u32 {
+                cl.schedule_fail(m);
             }
         }
         cl
@@ -371,6 +413,8 @@ impl Cluster {
                         sched.on_reveal(self, task);
                     }
                 }
+                Event::MachineFail { machine } => self.fail_machine(machine),
+                Event::MachineRecover { machine } => self.recover_machine(machine),
             }
         }
         self.clock = t;
@@ -379,6 +423,8 @@ impl Cluster {
     /// Total queued (unlaunched) tasks — the backpressure signal.  O(1)
     /// from the index counter; the retained scan double-checks it in
     /// debug builds and serves as the `sched_index = false` reference.
+    /// The crash-relaunch backlog counts too: a requeued task is queued
+    /// work the cluster has yet to place.
     pub fn queued_tasks(&self) -> usize {
         let scan = || -> usize {
             self.queued
@@ -386,12 +432,13 @@ impl Cluster {
                 .map(|id| self.job(*id).spec.num_tasks as usize)
                 .sum()
         };
-        if self.cfg.sched_index {
+        let unlaunched = if self.cfg.sched_index {
             debug_assert_eq!(self.index.queued_task_count(), scan());
             self.index.queued_task_count()
         } else {
             scan()
-        }
+        };
+        unlaunched + self.requeued.len()
     }
 
     // ----- queries -------------------------------------------------------
@@ -584,14 +631,17 @@ impl Cluster {
         // the kill strands this copy's pending CopyFinish in the heap, and
         // its Checkpoint too if it had not revealed yet (checkpoints fire
         // strictly before finishes, so unrevealed == checkpoint pending);
-        // the job's `stranded` ledger mirrors the queue's stale counter so
-        // arena rows are only recycled once no queue entry references them
-        let stranded = if copy == 0 && !c.revealed { 2usize } else { 1 };
+        // primary copies — chain head or crash relaunch — are the ones
+        // carrying a checkpoint.  The job's `stranded` ledger mirrors the
+        // queue's stale counter so arena rows are only recycled once no
+        // queue entry references them
+        let primary = self.arena.primary(cid);
+        let stranded = if primary && !c.revealed { 2usize } else { 1 };
         let job = &mut self.jobs[t.job.0 as usize];
         job.machine_time += used;
         job.stranded += stranded as u32;
         self.total_machine_time += used;
-        if copy > 0 {
+        if !primary {
             self.outstanding_backups -= 1;
         }
         self.machines.release(c.machine);
@@ -656,11 +706,14 @@ impl Cluster {
         let finish = now + rem_work / v_new;
         self.arena.set_duration(cid, finish - c.start);
         let epoch = self.arena.bump_epoch(cid);
-        let superseded = if asg.copy == 0 && !c.revealed { 2usize } else { 1 };
+        // primary copies (chain head or crash relaunch) carry the pending
+        // checkpoint; without churn "primary" is exactly `asg.copy == 0`
+        let primary = self.arena.primary(cid);
+        let superseded = if primary && !c.revealed { 2usize } else { 1 };
         self.jobs[t.job.0 as usize].stranded += superseded as u32;
         self.events.note_stale(superseded);
         self.events.push(finish, Event::CopyFinish { task: t, copy: asg.copy, epoch });
-        if asg.copy == 0 && !c.revealed {
+        if primary && !c.revealed {
             // the pending checkpoint moves to where the `detect_frac` work
             // point now lands: work done so far is flip-invariant, so the
             // instant derives from the re-timed finish and the stored
@@ -668,7 +721,7 @@ impl Cluster {
             // <= finish always — the clamp only absorbs float round-off
             let w = self.arena.work(cid);
             let cp = finish - (1.0 - self.cfg.detect_frac) * w / v_new;
-            self.events.push(cp.max(now), Event::Checkpoint { task: t, copy: 0, epoch });
+            self.events.push(cp.max(now), Event::Checkpoint { task: t, copy: asg.copy, epoch });
         }
         if c.revealed {
             // refresh the observed-throughput stamp at this mutation point
@@ -705,6 +758,194 @@ impl Cluster {
         }
     }
 
+    /// Handle a `MachineFail` event: kill the resident copy (if any) as
+    /// crash loss, take the machine out of the allocatable pool, and
+    /// schedule its recovery.  A crashed-out task (no surviving copies)
+    /// joins the relaunch backlog — restart from zero, the paper's
+    /// failure model.  Tolerates a redundant crash of an already-down
+    /// machine as a no-op (scripted machine-events traces contain them).
+    /// Public so fault-injection tests can stage crashes deterministically
+    /// without running the event loop.
+    pub fn fail_machine(&mut self, machine: u32) {
+        if !self.machines.is_up(machine) {
+            return;
+        }
+        if let Some(asg) = self.machines.assignment(machine) {
+            self.crash_copy(asg);
+        }
+        self.machines.mark_down(machine);
+        self.machines_failed += 1;
+        // capacity shrank: any cached wakeup horizon is stale, and the
+        // scheduler must see the new idle count at the next slot
+        self.sched_dirty = true;
+        self.schedule_recover(machine);
+    }
+
+    /// Handle a `MachineRecover` event: the machine rejoins the
+    /// allocatable pool and its next crash is scheduled.  Tolerates a
+    /// redundant recovery of an up machine as a no-op (scripted traces).
+    pub fn recover_machine(&mut self, machine: u32) {
+        if self.machines.is_up(machine) {
+            return;
+        }
+        self.machines.mark_up(machine);
+        // capacity grew — queued work (including the relaunch backlog)
+        // can place again at the next fired slot
+        self.sched_dirty = true;
+        self.schedule_fail(machine);
+    }
+
+    /// Kill one copy because its host crashed.  The stranded-ledger
+    /// settlement is exactly `kill_copy`'s (the pending `CopyFinish` —
+    /// and the `Checkpoint` of an unrevealed primary — pop later as
+    /// settled no-ops or compact away); on top of it the loss is recorded
+    /// (`copies_lost` / `work_lost`, per job and cluster-wide) and a task
+    /// left with no surviving copy joins the relaunch backlog.
+    fn crash_copy(&mut self, asg: Assignment) {
+        let t = asg.task;
+        let now = self.clock;
+        let tid = self.tid(t);
+        let cid = self.arena.copy_id(tid, asg.copy);
+        debug_assert_eq!(self.arena.phase(cid), CopyPhase::Running);
+        self.arena.set_phase(cid, CopyPhase::Killed);
+        let c = self.arena.copy(cid);
+        let used = c.elapsed(now).min(c.duration);
+        let primary = self.arena.primary(cid);
+        let stranded = if primary && !c.revealed { 2usize } else { 1 };
+        let job = &mut self.jobs[t.job.0 as usize];
+        job.machine_time += used;
+        job.stranded += stranded as u32;
+        job.copies_lost += 1;
+        job.work_lost += used;
+        self.total_machine_time += used;
+        self.copies_lost += 1;
+        self.work_lost += used;
+        if !primary {
+            self.outstanding_backups -= 1;
+        }
+        self.machines.release(c.machine);
+        self.events.note_stale(stranded);
+        self.sched_dirty = true;
+        if self.cfg.sched_index {
+            self.index.sync_task(&self.jobs[t.job.0 as usize], &self.arena, t);
+            self.sync_est(t);
+        }
+        if !self.arena.done(tid) && self.arena.running_copies(tid) == 0 {
+            self.requeued.push(t);
+        }
+        self.maybe_compact_events();
+    }
+
+    /// Re-launch a crashed-out task on an idle machine: restart from zero
+    /// on the task's original sampled work (no RNG draw — churn never
+    /// perturbs the backup-duration streams), as a new *primary* copy
+    /// with its own detection checkpoint.  Re-execution is not
+    /// speculation: exempt from `r_max` and counted in neither
+    /// `speculative_launches` nor `outstanding_backups`; and because the
+    /// task now has >= 2 copies it leaves every rule's candidate set (the
+    /// scan and index paths agree on the `n_copies == 1` condition).
+    /// Returns false when no machine is idle.
+    fn relaunch_task(&mut self, t: TaskRef) -> bool {
+        let now = self.clock;
+        let ji = t.job.0 as usize;
+        let tid = self.tid(t);
+        if self.arena.done(tid) || self.arena.running_copies(tid) > 0 {
+            return true; // settled while queued: nothing to re-execute
+        }
+        let copy_idx = self.arena.n_copies(tid);
+        let Some(machine) = self.machines.alloc(Assignment { task: t, copy: copy_idx }) else {
+            return false;
+        };
+        let work = self.first_durations[ji][t.task as usize];
+        let duration = work / self.machines.effective_speed(machine);
+        let k = self.arena.push_copy(tid, machine, now, duration, work);
+        debug_assert_eq!(k, copy_idx);
+        let cid = self.arena.copy_id(tid, copy_idx);
+        self.arena.set_primary(cid);
+        self.events
+            .push(now + duration, Event::CopyFinish { task: t, copy: copy_idx, epoch: 0 });
+        // the relaunch is the task's new original attempt, so the
+        // monitoring model applies to it: a fresh detection checkpoint
+        self.events.push(
+            now + self.cfg.detect_frac * duration,
+            Event::Checkpoint { task: t, copy: copy_idx, epoch: 0 },
+        );
+        self.sched_dirty = true;
+        if self.cfg.sched_index {
+            self.index.sync_task(&self.jobs[ji], &self.arena, t);
+            self.sync_est(t);
+        }
+        true
+    }
+
+    /// Drain the crash-relaunch backlog onto idle machines, FIFO.  Called
+    /// by [`SlotGate::slot`] just before a fired slot's `on_slot`, so
+    /// re-execution takes priority over new launches and speculation at
+    /// the same instant; whatever cannot place (no idle machine) stays
+    /// queued for the next fired slot — and a slot always fires when
+    /// capacity returns, because releases and recoveries set
+    /// `sched_dirty`.
+    pub(crate) fn drain_requeued(&mut self) {
+        if self.requeued.is_empty() {
+            return;
+        }
+        let mut w = 0;
+        for r in 0..self.requeued.len() {
+            let t = self.requeued[r];
+            if !self.relaunch_task(t) {
+                self.requeued[w] = t;
+                w += 1;
+            }
+        }
+        self.requeued.truncate(w);
+    }
+
+    /// Draw the machine's next up-time from its dedicated churn stream and
+    /// push the crash event.  No stream exists when churn is disabled (or
+    /// under a scripted machine-events replay), so those runs push
+    /// nothing and draw nothing.
+    fn schedule_fail(&mut self, machine: u32) {
+        if self.churn_rngs.is_empty() {
+            return;
+        }
+        let ch = self.cfg.churn.expect("churn streams exist only when configured");
+        let up = self.churn_rngs[machine as usize].exponential(1.0 / ch.mttf);
+        self.events.push(self.clock + up, Event::MachineFail { machine });
+    }
+
+    /// Draw the machine's repair time and push the recovery event (same
+    /// stream discipline as [`Cluster::schedule_fail`]).
+    fn schedule_recover(&mut self, machine: u32) {
+        if self.churn_rngs.is_empty() {
+            return;
+        }
+        let ch = self.cfg.churn.expect("churn streams exist only when configured");
+        let repair = self.churn_rngs[machine as usize].exponential(1.0 / ch.mttr);
+        self.events.push(self.clock + repair, Event::MachineRecover { machine });
+    }
+
+    /// Scripted churn (trace replay): push one machine-crash or -recovery
+    /// event at an absolute instant.  `replay --machine-events` compiles a
+    /// recorded ADD/REMOVE schedule through this in place of sampled
+    /// MTTF/MTTR churn; with no `churn` config the handlers schedule no
+    /// follow-up draws, so the script alone drives each machine's up/down
+    /// trajectory.  Redundant events (REMOVE of a down machine, ADD of an
+    /// up one) are tolerated as no-ops, as real traces contain them.
+    pub fn inject_machine_event(&mut self, time: f64, machine: u32, fail: bool) {
+        assert!(
+            (machine as usize) < self.machines.total(),
+            "machine {machine} out of range (cluster has {})",
+            self.machines.total()
+        );
+        assert!(time >= self.clock, "machine event at {time} is in the past");
+        let ev = if fail {
+            Event::MachineFail { machine }
+        } else {
+            Event::MachineRecover { machine }
+        };
+        self.events.push(time, ev);
+    }
+
     /// Compact the event heap once stale (killed-copy) entries outnumber
     /// live ones.  Removes only events that would pop as no-ops, so the
     /// simulation is bit-identical with or without compaction; the heap
@@ -739,7 +980,10 @@ impl Cluster {
                 }
                 live
             }
-            Event::Arrival(_) | Event::SlowdownFlip { .. } => true,
+            Event::Arrival(_)
+            | Event::SlowdownFlip { .. }
+            | Event::MachineFail { .. }
+            | Event::MachineRecover { .. } => true,
         });
     }
 
@@ -769,7 +1013,7 @@ impl Cluster {
         self.arena.set_done(tid, now);
         self.sched_dirty = true;
         self.machines.release(self.arena.machine(cid));
-        if copy > 0 {
+        if !self.arena.primary(cid) {
             self.outstanding_backups -= 1;
         }
         // kill sibling copies and free their machines
@@ -819,6 +1063,13 @@ pub struct SimResult {
     pub incomplete: u64,
     pub total_machine_time: f64,
     pub speculative_launches: u64,
+    /// Copies killed by machine crashes (0 without churn).
+    pub copies_lost: u64,
+    /// Machine-time sunk into crashed copies — thrown-away work under the
+    /// restart-from-zero failure model (0.0 without churn).
+    pub work_lost: f64,
+    /// Machine-crash events handled (0 without churn).
+    pub machines_failed: u64,
     /// Machine-time / (M * horizon).
     pub utilization: f64,
     pub horizon: f64,
@@ -957,6 +1208,9 @@ impl SlotGate {
         if self.due(cl, &*sched, t) {
             let t0 = std::time::Instant::now();
             cl.clock = t;
+            // crash re-execution places first: a lost task is older work
+            // than anything the scheduler would launch this slot
+            cl.drain_requeued();
             sched.on_slot(cl);
             self.hook += t0.elapsed();
             cl.sched_dirty = false;
@@ -1098,6 +1352,8 @@ impl Simulator {
                             self.scheduler.on_reveal(&mut self.cluster, task);
                         }
                     }
+                    Event::MachineFail { machine } => self.cluster.fail_machine(machine),
+                    Event::MachineRecover { machine } => self.cluster.recover_machine(machine),
                 }
             } else if slot_pending {
                 gate.slot(&mut self.cluster, self.scheduler.as_mut(), next_slot);
@@ -1127,6 +1383,9 @@ impl Simulator {
             incomplete,
             total_machine_time: cl.total_machine_time,
             speculative_launches: cl.speculative_launches,
+            copies_lost: cl.copies_lost,
+            work_lost: cl.work_lost,
+            machines_failed: cl.machines_failed,
             horizon,
             events_processed,
             ticks_fired: gate.fired,
@@ -1494,6 +1753,198 @@ mod tests {
         assert_eq!(cl.completed[0].flowtime, 11.75);
         assert_eq!(cl.job(JobId(0)).stranded, 0, "every stale entry settled");
         assert_eq!(cl.machines.idle(), 1);
+    }
+
+    /// Pin the crash/recovery machinery end to end on one copy: the crash
+    /// kills the resident copy (work lost, loss ledgers updated), the
+    /// task joins the relaunch backlog (visible to backpressure), the
+    /// next fired slot relaunches it from zero as a new primary copy on a
+    /// surviving machine, and every crash-stranded queue entry settles.
+    #[test]
+    fn machine_crash_requeues_and_relaunches() {
+        let mut cfg = small_cfg();
+        cfg.machines = 2;
+        cfg.detect_frac = 0.25;
+        cfg.scheduler = scheduler::SchedulerKind::Naive;
+        cfg.use_runtime = false;
+        let dist = crate::stats::Pareto::from_mean(1.0, 2.0);
+        let wl = Workload {
+            specs: vec![JobSpec { id: JobId(0), arrival: 0.0, dist, num_tasks: 1 }],
+            first_durations: vec![vec![8.0]],
+        };
+        let sched = scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let mut driver = scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let mut cl = Simulator::new(cfg, wl, sched).cluster;
+        let t = TaskRef { job: JobId(0), task: 0 };
+        cl.advance_to(0.0, driver.as_mut()); // the arrival fires
+        assert!(cl.launch_copy(t));
+        assert_eq!(cl.copy(t, 0).machine, 0);
+        // the machine crashes at t = 1: one wall unit of work is lost and
+        // the task (no surviving copy) queues for re-execution
+        cl.inject_machine_event(1.0, 0, true);
+        cl.advance_to(1.5, driver.as_mut());
+        assert!(!cl.machines.is_up(0));
+        assert_eq!(cl.machines.down(), 1);
+        assert_eq!(cl.idle(), 1, "the down machine is not idle capacity");
+        assert_eq!(cl.job(JobId(0)).copies_lost, 1);
+        assert_eq!(cl.job(JobId(0)).work_lost, 1.0);
+        assert_eq!(cl.copies_lost, 1);
+        assert_eq!(cl.work_lost, 1.0);
+        assert_eq!(cl.machines_failed, 1);
+        assert_eq!(cl.queued_tasks(), 1, "the relaunch backlog is queued work");
+        assert_eq!(
+            cl.job(JobId(0)).stranded,
+            2,
+            "crash strands the unrevealed primary's CopyFinish + Checkpoint"
+        );
+        assert!(cl.sched_dirty, "a crash must force the next slot");
+        // the stranded epoch-0 checkpoint (still at t = 2) settles as a
+        // no-op, then the slot at t = 2 drains the backlog before the
+        // scheduler runs: restart from zero on the same sampled work
+        cl.advance_to(2.0, driver.as_mut());
+        assert_eq!(cl.job(JobId(0)).stranded, 1);
+        let mut gate = SlotGate::new(true);
+        assert!(gate.slot(&mut cl, driver.as_mut(), 2.0));
+        assert_eq!(cl.n_copies(t), 2);
+        let relaunch = cl.arena.copy_id(cl.tid(t), 1);
+        assert!(cl.arena.primary(relaunch), "a relaunch is the task's new original");
+        assert_eq!(cl.copy(t, 1).machine, 1, "a down machine is never allocated");
+        assert_eq!(cl.copy(t, 1).duration, 8.0, "restart from zero, same work");
+        assert_eq!(cl.queued_tasks(), 0);
+        assert_eq!(cl.speculative_launches, 0, "re-execution is not speculation");
+        assert_eq!(cl.outstanding_backups, 0);
+        // recovery at t = 3 returns the machine to the pool; the relaunch
+        // reveals at 2 + 0.25*8 = 4 and finishes at 2 + 8 = 10
+        cl.inject_machine_event(3.0, 0, false);
+        cl.advance_to(20.0, driver.as_mut());
+        assert!(cl.machines.is_up(0));
+        assert_eq!(cl.completed.len(), 1);
+        assert_eq!(cl.completed[0].flowtime, 10.0);
+        assert!(cl.copy(t, 1).revealed, "the relaunch carries its own checkpoint");
+        assert_eq!(cl.job(JobId(0)).stranded, 0, "every crash-stranded entry settled");
+        assert_eq!(cl.idle(), 2);
+        // lost work still occupied a machine: 1 lost + 8 useful
+        assert_eq!(cl.total_machine_time, 9.0);
+    }
+
+    /// Redundant scripted events are no-ops: a second REMOVE of a down
+    /// machine and an ADD of an up machine change nothing (real
+    /// machine-events traces contain both).
+    #[test]
+    fn redundant_machine_events_are_noops() {
+        let mut cfg = small_cfg();
+        cfg.machines = 2;
+        cfg.scheduler = scheduler::SchedulerKind::Naive;
+        cfg.use_runtime = false;
+        let mut driver = scheduler::build(&cfg, &WorkloadConfig::paper(1.0)).unwrap();
+        let mut cl = Cluster::new_live(cfg);
+        cl.inject_machine_event(1.0, 0, false); // ADD while up: no-op
+        cl.inject_machine_event(2.0, 0, true);
+        cl.inject_machine_event(3.0, 0, true); // REMOVE while down: no-op
+        cl.inject_machine_event(4.0, 0, false);
+        cl.advance_to(10.0, driver.as_mut());
+        assert!(cl.machines.is_up(0));
+        assert_eq!(cl.machines.down(), 0);
+        assert_eq!(cl.machines_failed, 1, "only the first REMOVE counts");
+        assert_eq!(cl.idle(), 2);
+    }
+
+    /// The churn axis is real and its zero point is exact: enabling
+    /// crash/recovery adds events and loses work, while `None` and a
+    /// zero-rate spec produce bit-identical runs (no churn stream even
+    /// exists).
+    #[test]
+    fn churn_changes_the_run_and_zero_rates_do_not() {
+        use crate::cluster::machine::ChurnConfig;
+        let run = |churn: Option<ChurnConfig>| {
+            let mut cfg = small_cfg();
+            cfg.horizon = 120.0;
+            cfg.scheduler = scheduler::SchedulerKind::Sda;
+            cfg.use_runtime = false;
+            cfg.churn = churn;
+            let wl_cfg = WorkloadConfig::paper(0.3);
+            let wl = generator::generate(&wl_cfg, cfg.horizon, cfg.seed);
+            let sched = scheduler::build_for(&cfg, &wl_cfg, Some(&wl)).unwrap();
+            Simulator::new(cfg, wl, sched).run()
+        };
+        let still = run(None);
+        let zero = run(Some(ChurnConfig::new(0.0, 0.0)));
+        let churning = run(Some(ChurnConfig::new(40.0, 10.0)));
+        assert_eq!(still.copies_lost, 0);
+        assert_eq!(still.work_lost, 0.0);
+        assert_eq!(still.machines_failed, 0);
+        assert!(churning.machines_failed > 0, "MTTF 40 over 120 units must crash machines");
+        assert!(churning.copies_lost > 0, "crashes must catch running copies");
+        assert!(churning.work_lost > 0.0);
+        assert!(
+            churning.events_processed > still.events_processed,
+            "churn must add events: {} vs {}",
+            churning.events_processed,
+            still.events_processed
+        );
+        assert_ne!(
+            churning.total_machine_time.to_bits(),
+            still.total_machine_time.to_bits(),
+            "churn must move machine time"
+        );
+        // zero rates ARE the churn-free scenario, bit for bit
+        assert_eq!(zero.events_processed, still.events_processed);
+        assert_eq!(zero.total_machine_time.to_bits(), still.total_machine_time.to_bits());
+        assert_eq!(zero.completed.len(), still.completed.len());
+        for (a, b) in zero.completed.iter().zip(&still.completed) {
+            assert_eq!(a.flowtime.to_bits(), b.flowtime.to_bits());
+            assert_eq!(a.resource.to_bits(), b.resource.to_bits());
+        }
+    }
+
+    /// The equivalence matrix with churn enabled: crashes, repair draws
+    /// and relaunches are a pure function of the simulated system, so
+    /// every event-queue backend x wakeup x index combination produces
+    /// the same run, bit for bit.
+    #[test]
+    fn churn_runs_identical_across_backends_wakeup_and_index() {
+        use crate::cluster::event::EventQueueKind;
+        use crate::cluster::machine::ChurnConfig;
+        let run = |queue: EventQueueKind, wakeup: bool, sched_index: bool| {
+            let mut cfg = small_cfg();
+            cfg.horizon = 120.0;
+            cfg.scheduler = scheduler::SchedulerKind::Sda;
+            cfg.use_runtime = false;
+            cfg.churn = Some(ChurnConfig::new(40.0, 10.0));
+            cfg.event_queue = queue;
+            cfg.wakeup = wakeup;
+            cfg.sched_index = sched_index;
+            let wl_cfg = WorkloadConfig::paper(0.3);
+            let wl = generator::generate(&wl_cfg, cfg.horizon, cfg.seed);
+            let sched = scheduler::build_for(&cfg, &wl_cfg, Some(&wl)).unwrap();
+            Simulator::new(cfg, wl, sched).run()
+        };
+        let reference = run(EventQueueKind::Calendar, false, false);
+        assert!(!reference.completed.is_empty());
+        assert!(reference.copies_lost > 0, "the matrix must exercise crash kills");
+        for queue in [EventQueueKind::Calendar, EventQueueKind::BinaryHeap] {
+            for wakeup in [false, true] {
+                for sched_index in [false, true] {
+                    let res = run(queue, wakeup, sched_index);
+                    let tag = format!("{queue:?}/wakeup={wakeup}/index={sched_index}");
+                    assert_eq!(res.completed.len(), reference.completed.len(), "{tag}");
+                    assert_eq!(res.events_processed, reference.events_processed, "{tag}");
+                    assert_eq!(res.copies_lost, reference.copies_lost, "{tag}");
+                    assert_eq!(res.work_lost.to_bits(), reference.work_lost.to_bits(), "{tag}");
+                    assert_eq!(res.machines_failed, reference.machines_failed, "{tag}");
+                    assert_eq!(
+                        res.total_machine_time.to_bits(),
+                        reference.total_machine_time.to_bits(),
+                        "{tag}"
+                    );
+                    for (a, b) in res.completed.iter().zip(&reference.completed) {
+                        assert_eq!(a.job, b.job, "{tag}");
+                        assert_eq!(a.flowtime.to_bits(), b.flowtime.to_bits(), "{tag}");
+                        assert_eq!(a.resource.to_bits(), b.resource.to_bits(), "{tag}");
+                    }
+                }
+            }
+        }
     }
 
     /// The equivalence matrix with the ON/OFF flip process enabled: the

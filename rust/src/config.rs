@@ -6,7 +6,7 @@
 //! simulation set-up.
 
 use crate::cluster::event::EventQueueKind;
-use crate::cluster::machine::{self, MachineClass, SlowdownConfig};
+use crate::cluster::machine::{self, ChurnConfig, MachineClass, SlowdownConfig};
 use crate::scheduler::SchedulerKind;
 use crate::util::toml_lite;
 
@@ -25,6 +25,15 @@ pub struct SimConfig {
     /// its copies' wall-clock by `factor`.  The state is hidden from
     /// schedulers (see `estimator`).  `None` = all machines healthy.
     pub slowdown: Option<SlowdownConfig>,
+    /// Machine churn scenario ("failures are the norm rather than the
+    /// exception"): each machine independently crashes after an
+    /// Exp(1/MTTF) up-time — killing every resident copy (work lost,
+    /// restart from zero) and leaving the pool — then rejoins after an
+    /// Exp(1/MTTR) repair.  Spec string `MTTF,MTTR` (means, not rates);
+    /// `None` or zero rates = no churn, bit-identical to pre-churn
+    /// behavior (the dedicated seed stream is never touched).  See
+    /// `cluster::machine::ChurnConfig` and DESIGN.md §17.
+    pub churn: Option<ChurnConfig>,
     /// Let the schedulers' estimators divide by the running copy's
     /// advertised host speed (`estimator::SpeedAware`).  A no-op on
     /// homogeneous speed-1.0 clusters; `false` reproduces the unit-naive
@@ -127,6 +136,7 @@ impl Default for SimConfig {
             machines: 3000,
             machine_classes: Vec::new(),
             slowdown: None,
+            churn: None,
             speed_aware: true,
             observed_speed: false,
             horizon: 1500.0,
@@ -191,6 +201,11 @@ impl SimConfig {
                 errs.push(e);
             }
         }
+        if let Some(ch) = &self.churn {
+            if let Err(e) = ch.validate() {
+                errs.push(e);
+            }
+        }
         if !(self.horizon > 0.0) {
             errs.push("horizon must be > 0".to_string());
         }
@@ -247,6 +262,9 @@ impl SimConfig {
                 "slowdown" => {
                     cfg.slowdown =
                         Some(machine::parse_slowdown(doc.str(key).ok_or("slowdown: string")?)?)
+                }
+                "churn" => {
+                    cfg.churn = Some(machine::parse_churn(doc.str(key).ok_or("churn: string")?)?)
                 }
                 "speed_aware" => cfg.speed_aware = doc.bool(key).ok_or("speed_aware: bool")?,
                 "observed_speed" => {
@@ -327,6 +345,9 @@ impl SimConfig {
         }
         if let Some(sd) = &self.slowdown {
             let _ = writeln!(s, "slowdown = \"{}\"", machine::format_slowdown(sd));
+        }
+        if let Some(ch) = &self.churn {
+            let _ = writeln!(s, "churn = \"{}\"", machine::format_churn(ch));
         }
         let _ = writeln!(s, "speed_aware = {}", self.speed_aware);
         let _ = writeln!(s, "observed_speed = {}", self.observed_speed);
@@ -755,6 +776,28 @@ mod tests {
         // negative rates are rejected at validate() too
         let mut cfg = SimConfig::default();
         cfg.slowdown = Some(SlowdownConfig::new(0.2, 3.0).with_rates(-0.05, 0.1));
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn churn_key_roundtrips_and_validates() {
+        assert_eq!(SimConfig::default().churn, None, "no churn by default");
+        let mut cfg = SimConfig::default();
+        cfg.churn = Some(ChurnConfig::new(200.0, 20.0));
+        cfg.validate().unwrap();
+        let back = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.churn, cfg.churn);
+        assert!(back.churn.unwrap().enabled());
+        // reachable straight from TOML text; zero rates parse but disable
+        let cfg = SimConfig::from_toml("churn = \"100,10\"").unwrap();
+        assert_eq!(cfg.churn, Some(ChurnConfig::new(100.0, 10.0)));
+        let cfg = SimConfig::from_toml("churn = \"0,0\"").unwrap();
+        assert!(!cfg.churn.unwrap().enabled());
+        // malformed or one-sided specs fail loudly
+        assert!(SimConfig::from_toml("churn = \"100\"").is_err());
+        assert!(SimConfig::from_toml("churn = \"100,0\"").is_err());
+        let mut cfg = SimConfig::default();
+        cfg.churn = Some(ChurnConfig::new(-1.0, 10.0));
         assert!(cfg.validate().is_err());
     }
 

@@ -6,7 +6,9 @@
 //! Python never appears here: SCA's P2 solve goes through the PJRT runtime
 //! (or the rust fallback) exactly as in the batch path.
 
-use std::sync::mpsc;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -15,6 +17,7 @@ use crate::cluster::sim::{Cluster, SlotGate};
 use crate::config::{SimConfig, WorkloadConfig};
 use crate::metrics::{JobRecord, StreamedJobStats};
 use crate::scheduler::{self, Scheduler};
+use crate::workload::MachineEvent;
 
 use super::backpressure::{Admission, Backpressure};
 use super::metrics::{Counter, MetricsRegistry};
@@ -32,6 +35,11 @@ pub struct Submission {
 pub enum SubmitResult {
     Accepted { job: JobId, throttled: bool },
     Rejected,
+    /// Structured load-shed from the sharded serve plane: the submission
+    /// never reached a master — its routed shard was past the shed
+    /// watermark, or every restart/retry of a dead shard was exhausted.
+    /// A single [`Master`] never returns this.
+    Shed,
 }
 
 impl SubmitResult {
@@ -45,6 +53,9 @@ enum Msg {
     /// A submission burst: admitted in order, answered with one reply —
     /// the per-job channel round trip amortized across the whole batch.
     SubmitBatch(Vec<Submission>, mpsc::Sender<Vec<SubmitResult>>),
+    /// Chaos hook: panic the master loop as if a real fault unwound it,
+    /// exercising the sharded supervisor's restart path in tests and CI.
+    Crash,
     Shutdown,
 }
 
@@ -69,15 +80,35 @@ pub struct Report {
     /// sketches as they drained, so `completed` above stays empty and
     /// resident memory scales with the cap, not the submission volume.
     pub streamed: Option<StreamedJobStats>,
+    /// True when this is a placeholder report synthesized by the sharded
+    /// supervisor for a shard that died (and exhausted its restart budget)
+    /// before it could drain: counters come from the shard's registry,
+    /// per-job records are lost with the thread.
+    pub panicked: bool,
 }
 
 /// Client handle: submit jobs, then shut down and collect the report.
 pub struct MasterHandle {
     tx: mpsc::Sender<Msg>,
     join: thread::JoinHandle<Report>,
+    alive: Arc<AtomicBool>,
 }
 
 impl MasterHandle {
+    /// False once the master thread has exited for any reason — clean
+    /// drain or panic unwind (a drop guard inside the thread flips the
+    /// flag even when a panic skips every normal return path).
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Chaos hook: make the master loop panic as if a real fault killed
+    /// it.  Asynchronous — poll [`is_alive`](Self::is_alive) to observe
+    /// the death.  Errors only if the thread is already gone.
+    pub fn inject_crash(&self) -> Result<(), String> {
+        self.tx.send(Msg::Crash).map_err(|_| "master gone".to_string())
+    }
+
     /// Submit a job; blocks until the master replies (sub-millisecond).
     pub fn submit(&self, sub: Submission) -> Result<SubmitResult, String> {
         let (tx, rx) = mpsc::channel();
@@ -134,6 +165,16 @@ pub struct Master {
     pub drain_slots: u64,
     pub backpressure: Backpressure,
     pub metrics: MetricsRegistry,
+    /// Liveness flag shared with the spawned thread: true while the loop
+    /// runs, flipped false on any exit (drain or panic).  The sharded
+    /// supervisor injects the *same* `Arc` across respawns so its router
+    /// keeps one stable per-shard up/down view.
+    pub alive: Arc<AtomicBool>,
+    /// Scripted machine churn (`replay --machine-events`): staged into the
+    /// cluster's event queue before the loop starts, on top of — or without
+    /// — the stochastic `cfg.churn` process.  Machine ids are local to this
+    /// master's partition.
+    pub machine_events: Vec<MachineEvent>,
 }
 
 impl Master {
@@ -145,25 +186,53 @@ impl Master {
             drain_slots: 5000,
             backpressure,
             metrics: MetricsRegistry::new(),
+            alive: Arc::new(AtomicBool::new(true)),
+            machine_events: Vec::new(),
         }
     }
 
     /// Spawn the master loop on its own thread; returns the handle.  The
     /// scheduler is constructed *inside* the thread (SCA's PJRT executor is
     /// thread-pinned).
+    ///
+    /// The loop body runs under `catch_unwind`: a panic increments the
+    /// registry's `master_panics` counter and drops `alive` to false (the
+    /// supervisor's death signal) before the payload is rethrown, so
+    /// `shutdown()` on a crashed master still reports "master panicked".
     pub fn spawn(self) -> Result<MasterHandle, String> {
         // validate the scheduler config up-front so spawn fails loudly
         scheduler::build(&self.cfg, &WorkloadConfig::paper(1.0))?;
         let (tx, rx) = mpsc::channel();
+        let alive = self.alive.clone();
+        alive.store(true, Ordering::Relaxed);
+        let thread_alive = alive.clone();
+        let panics = self.metrics.counter("master_panics");
         let join = thread::Builder::new()
             .name("specsim-master".into())
             .spawn(move || {
-                let sched = scheduler::build(&self.cfg, &WorkloadConfig::paper(1.0))
-                    .expect("scheduler build validated before spawn");
-                run_loop(self, sched, rx)
+                // drop guard: flips liveness on ANY exit, unwind included
+                struct AliveGuard(Arc<AtomicBool>);
+                impl Drop for AliveGuard {
+                    fn drop(&mut self) {
+                        self.0.store(false, Ordering::Relaxed);
+                    }
+                }
+                let _guard = AliveGuard(thread_alive);
+                let result = std::panic::catch_unwind(AssertUnwindSafe(move || {
+                    let sched = scheduler::build(&self.cfg, &WorkloadConfig::paper(1.0))
+                        .expect("scheduler build validated before spawn");
+                    run_loop(self, sched, rx)
+                }));
+                match result {
+                    Ok(report) => report,
+                    Err(payload) => {
+                        panics.inc();
+                        std::panic::resume_unwind(payload)
+                    }
+                }
             })
             .map_err(|e| e.to_string())?;
-        Ok(MasterHandle { tx, join })
+        Ok(MasterHandle { tx, join, alive })
     }
 }
 
@@ -208,6 +277,7 @@ fn handle_msg(
             }
             let _ = reply.send(results);
         }
+        Msg::Crash => panic!("injected master crash (chaos hook)"),
         Msg::Shutdown => *draining = true,
     }
 }
@@ -218,9 +288,17 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
     let mut gate = SlotGate::new(master.cfg.wakeup);
     let mut sink = master.cfg.max_resident_jobs.map(|_| StreamedJobStats::new());
     let mut cluster = Cluster::new_live(master.cfg);
+    // stage the scripted churn schedule (replay --machine-events) before
+    // the first slot: the events sit in the queue like stochastic churn
+    for ev in &master.machine_events {
+        cluster.inject_machine_event(ev.time, ev.machine, ev.fail);
+    }
     let metrics = master.metrics.clone();
     let jobs_in = metrics.counter("jobs_submitted");
     let jobs_done = metrics.counter("jobs_completed");
+    // the registry outlives a supervisor respawn: completions counted by a
+    // previous incarnation stay in the counter, ours add on top
+    let done_base = jobs_done.get();
     let jobs_rejected = metrics.counter("jobs_rejected");
     let q_depth = metrics.gauge("queued_tasks");
     let busy = metrics.gauge("busy_machines");
@@ -275,8 +353,8 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
         // completion gauge counts drained + resident so capped recycling
         // never walks it backwards
         let done_total =
-            sink.as_ref().map_or(0, |s| s.drained) + cluster.completed.len() as u64;
-        jobs_done.add(done_total - jobs_done.get());
+            done_base + sink.as_ref().map_or(0, |s| s.drained) + cluster.completed.len() as u64;
+        jobs_done.add(done_total.saturating_sub(jobs_done.get()));
         // O(1) reads: queued_tasks comes off the SchedIndex counter, and
         // stale-entry compaction keeps the event heap tracking live copies
         q_depth.set(cluster.queued_tasks() as i64);
@@ -303,6 +381,7 @@ fn run_loop(master: Master, mut sched: Box<dyn Scheduler>, rx: mpsc::Receiver<Ms
                     slots_fired: gate.fired,
                     slots_skipped: gate.skipped,
                     streamed,
+                    panicked: false,
                 };
             }
             drain_left -= 1;
@@ -412,6 +491,24 @@ mod tests {
     }
 
     #[test]
+    fn injected_crash_flips_liveness_and_counts() {
+        let mut master = Master::new(cfg(4));
+        master.tick = Duration::from_micros(200);
+        let metrics = master.metrics.clone();
+        let handle = master.spawn().unwrap();
+        assert!(handle.is_alive());
+        handle.inject_crash().unwrap();
+        // the crash is asynchronous: wait for the drop guard to fire
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while handle.is_alive() && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!handle.is_alive(), "drop guard must flip liveness on unwind");
+        assert_eq!(metrics.counter("master_panics").get(), 1);
+        assert!(handle.shutdown().is_err(), "join on a crashed master reports the panic");
+    }
+
+    #[test]
     fn backpressure_rejects_floods() {
         let mut master = Master::new(cfg(4));
         master.tick = Duration::from_millis(50); // slow slots: queue builds up
@@ -424,7 +521,7 @@ mod tests {
                 .unwrap()
             {
                 SubmitResult::Rejected => rejected += 1,
-                SubmitResult::Accepted { .. } => {}
+                _ => {}
             }
         }
         assert!(rejected > 0, "flood must trip the high watermark");

@@ -8,12 +8,24 @@
 //! and completed entirely inside one shard, so the only cross-shard
 //! artifacts are the router's load reads (the per-shard `queued_tasks`
 //! gauge) and the aggregated [`ServeReport`].  See DESIGN.md §15.
+//!
+//! The plane is **self-healing** (DESIGN.md §17): every master thread runs
+//! under `catch_unwind` with a liveness flag, a supervisor embedded in
+//! [`ShardedHandle`] respawns a dead shard with a fresh master on the same
+//! derived seed and replays its un-acked submissions from a per-shard
+//! in-flight ledger, routed sends retry with capped exponential backoff +
+//! jitter, and the router excludes down shards from hash/p2c picks until
+//! they recover.  When the restart budget is exhausted — or a shard's
+//! backlog is past the shed watermark — submissions get a structured
+//! [`SubmitResult::Shed`] instead of an error or a hung call.
 
-use std::sync::{mpsc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::config::{RoutePolicy, ServeConfig, SimConfig};
 use crate::stats::Pcg64;
+use crate::workload::MachineEvent;
 
 use super::backpressure::Backpressure;
 use super::master::{Master, MasterHandle, Report, Submission, SubmitResult};
@@ -52,17 +64,37 @@ pub struct ShardRouter {
     seed: u64,
     rng: Pcg64,
     loads: Vec<Gauge>,
+    /// Per-shard liveness flags, shared with each master thread (flipped
+    /// false by its drop guard on any exit) and with the supervisor (set
+    /// true again on respawn).  Down shards are excluded from picks.
+    ups: Vec<Arc<AtomicBool>>,
 }
 
 impl ShardRouter {
     /// `loads[i]` must be shard i's `queued_tasks` gauge (shared with the
-    /// shard's registry, so reads see the live backlog).
-    pub fn new(policy: RoutePolicy, seed: u64, loads: Vec<Gauge>) -> Self {
+    /// shard's registry, so reads see the live backlog) and `ups[i]` its
+    /// liveness flag.
+    pub fn new(
+        policy: RoutePolicy,
+        seed: u64,
+        loads: Vec<Gauge>,
+        ups: Vec<Arc<AtomicBool>>,
+    ) -> Self {
         assert!(!loads.is_empty(), "router needs >= 1 shard");
-        ShardRouter { policy, seed, rng: Pcg64::new(seed, 0x70c2), loads }
+        assert_eq!(loads.len(), ups.len(), "one liveness flag per shard");
+        ShardRouter { policy, seed, rng: Pcg64::new(seed, 0x70c2), loads, ups }
     }
 
-    /// Pick the shard for `sub`.
+    fn up(&self, shard: usize) -> bool {
+        self.ups[shard].load(Ordering::Relaxed)
+    }
+
+    /// Pick the shard for `sub`.  Down shards are excluded while at least
+    /// one shard is up; with **every** shard down the router falls back to
+    /// the all-up pick so the delivery path still has a restart target
+    /// (the supervisor may resurrect it) instead of routing nowhere.
+    /// With all shards up the pick — and the p2c RNG draw count — is
+    /// bit-identical to the pre-supervisor router.
     pub fn route(&mut self, sub: &Submission) -> usize {
         let n = self.loads.len();
         if n == 1 {
@@ -76,17 +108,31 @@ impl ShardRouter {
                         ^ mix64(sub.mean_duration.to_bits()).rotate_left(17)
                         ^ mix64(sub.alpha.to_bits()).rotate_left(31),
                 );
-                (h % n as u64) as usize
+                let h = (h % n as u64) as usize;
+                // linear probe past down shards, wrapping once
+                (0..n).map(|i| (h + i) % n).find(|&s| self.up(s)).unwrap_or(h)
             }
             RoutePolicy::P2c => {
-                let a = self.rng.uniform_u64(0, n as u64 - 1) as usize;
-                let b = self.rng.uniform_u64(0, n as u64 - 1) as usize;
-                // strict <: ties (including frozen gauges) keep the first
-                // draw, so an unloaded deployment degrades to uniform
-                if self.loads[b].get() < self.loads[a].get() {
-                    b
-                } else {
-                    a
+                let up: Vec<usize> = (0..n).filter(|&s| self.up(s)).collect();
+                let pick2 = |rng: &mut Pcg64, loads: &[Gauge], pool: &[usize]| {
+                    let a = pool[rng.uniform_u64(0, pool.len() as u64 - 1) as usize];
+                    let b = pool[rng.uniform_u64(0, pool.len() as u64 - 1) as usize];
+                    // strict <: ties (including frozen gauges) keep the
+                    // first draw, so an unloaded deployment degrades to
+                    // uniform
+                    if loads[b].get() < loads[a].get() {
+                        b
+                    } else {
+                        a
+                    }
+                };
+                match up.len() {
+                    0 => {
+                        let all: Vec<usize> = (0..n).collect();
+                        pick2(&mut self.rng, &self.loads, &all)
+                    }
+                    1 => up[0], // no draw: a lone survivor needs no choice
+                    _ => pick2(&mut self.rng, &self.loads, &up),
                 }
             }
         }
@@ -111,6 +157,31 @@ pub struct ShardedMaster {
     pub sample_every: Option<Duration>,
     /// Ring capacity of the sampled time series.
     pub sample_cap: usize,
+    /// Supervisor budget: how many times a dead shard is respawned before
+    /// it is abandoned (later submissions routed to it are shed).
+    pub max_restarts: u32,
+    /// Retries of a routed send (restart + replay) before the in-flight
+    /// ledger is shed with structured rejects.
+    pub max_retries: u32,
+    /// First retry backoff; doubles per attempt up to [`retry_cap`]
+    /// (plus up to 50% seeded jitter).
+    ///
+    /// [`retry_cap`]: Self::retry_cap
+    pub retry_base: Duration,
+    pub retry_cap: Duration,
+    /// Front-door overload shedding: a submission routed to a shard whose
+    /// `queued_tasks` gauge reads above this many tasks gets
+    /// [`SubmitResult::Shed`] without a channel round trip — the sharded
+    /// tier above the per-master watermark [`Backpressure`], for callers
+    /// that prefer an instant structured reject over blocking on a
+    /// saturated shard.  `None` disables the fast path.
+    pub shed_watermark: Option<usize>,
+    /// Scripted machine churn (`replay --machine-events`): global machine
+    /// ids over the whole deployment, split across the contiguous shard
+    /// partitions at spawn (shard 0 owns machines `[0, p0)`, shard 1
+    /// `[p0, p0+p1)`, ...) and handed to each master as partition-local
+    /// events.  A supervisor respawn re-stages the shard's script.
+    pub machine_events: Vec<MachineEvent>,
 }
 
 impl ShardedMaster {
@@ -123,6 +194,12 @@ impl ShardedMaster {
             backpressure: None,
             sample_every: None,
             sample_cap: 4096,
+            max_restarts: 8,
+            max_retries: 4,
+            retry_base: Duration::from_millis(1),
+            retry_cap: Duration::from_millis(50),
+            shed_watermark: None,
+            machine_events: Vec::new(),
         }
     }
 
@@ -139,114 +216,334 @@ impl ShardedMaster {
                     .to_string(),
             );
         }
+        if let Some(bad) =
+            self.machine_events.iter().find(|e| e.machine as usize >= self.cfg.machines)
+        {
+            return Err(format!(
+                "--machine-events: machine {} out of range (cluster has {})",
+                bad.machine, self.cfg.machines
+            ));
+        }
         let parts = partition_machines(self.cfg.machines, self.serve.shards);
-        let mut shards = Vec::with_capacity(parts.len());
+        let mut slots = Vec::with_capacity(parts.len());
         let mut metrics = Vec::with_capacity(parts.len());
+        let mut ups = Vec::with_capacity(parts.len());
+        let mut offset = 0usize;
         for (i, &m) in parts.iter().enumerate() {
             let mut cfg = self.cfg.clone();
             cfg.machines = m;
             cfg.seed = self.cfg.seed.wrapping_add(i as u64);
-            let mut master = Master::new(cfg);
+            // this shard's slice of the churn script, rebased to local ids
+            let events: Vec<MachineEvent> = self
+                .machine_events
+                .iter()
+                .filter(|e| (offset..offset + m).contains(&(e.machine as usize)))
+                .map(|e| MachineEvent { machine: (e.machine as usize - offset) as u32, ..*e })
+                .collect();
+            offset += m;
+            let mut master = Master::new(cfg.clone());
             master.tick = self.tick;
             master.drain_slots = self.drain_slots;
             if let Some(bp) = self.backpressure {
                 master.backpressure = bp;
             }
+            master.machine_events = events.clone();
             metrics.push(master.metrics.clone());
-            shards.push(master.spawn()?);
+            ups.push(master.alive.clone());
+            let handle = master.spawn()?;
+            slots.push(Mutex::new(ShardSlot {
+                handle: Some(handle),
+                ledger: Vec::new(),
+                restarts: 0,
+                cfg,
+                events,
+            }));
         }
-        let loads = metrics.iter().map(|m| m.gauge("queued_tasks")).collect();
-        let router = ShardRouter::new(self.serve.route, self.serve.route_seed, loads);
+        let loads: Vec<Gauge> = metrics.iter().map(|m| m.gauge("queued_tasks")).collect();
+        let router =
+            ShardRouter::new(self.serve.route, self.serve.route_seed, loads.clone(), ups.clone());
         let sampler = match self.sample_every {
             Some(every) => Some(Sampler::spawn(metrics.clone(), every, self.sample_cap)?),
             None => None,
         };
-        Ok(ShardedHandle { router: Mutex::new(router), shards, metrics, sampler })
+        Ok(ShardedHandle {
+            router: Mutex::new(router),
+            slots,
+            metrics,
+            loads,
+            ups,
+            sampler,
+            tick: self.tick,
+            drain_slots: self.drain_slots,
+            backpressure: self.backpressure,
+            max_restarts: self.max_restarts,
+            max_retries: self.max_retries,
+            retry_base: self.retry_base,
+            retry_cap: self.retry_cap,
+            shed_watermark: self.shed_watermark,
+            jitter_rng: Mutex::new(Pcg64::new(self.serve.route_seed, 0xb0ff)),
+        })
     }
 }
 
+/// One shard's supervised state: the live handle (None only after a failed
+/// respawn), the in-flight ledger of submissions sent but not yet acked,
+/// the restart budget consumed so far, and the per-shard config a respawn
+/// reuses — same partition size, same derived seed, so a restarted shard
+/// is a "fresh seeded master" in exactly the [`ShardedMaster::spawn`]
+/// sense.
+struct ShardSlot {
+    handle: Option<MasterHandle>,
+    ledger: Vec<Submission>,
+    restarts: u32,
+    cfg: SimConfig,
+    /// Partition-local machine-events script, re-staged on every respawn.
+    events: Vec<MachineEvent>,
+}
+
 /// Client handle over the whole deployment: routes submissions, fans
-/// batches out to all shards in parallel, and aggregates shutdown reports.
+/// batches out to all shards in parallel, supervises shard death (respawn
+/// + ledger replay + backoff), and aggregates shutdown reports.
 pub struct ShardedHandle {
     router: Mutex<ShardRouter>,
-    shards: Vec<MasterHandle>,
+    slots: Vec<Mutex<ShardSlot>>,
     metrics: Vec<MetricsRegistry>,
+    /// `queued_tasks` gauge per shard — the shed-watermark fast path reads
+    /// these without touching the registry locks.
+    loads: Vec<Gauge>,
+    /// Liveness flag per shard, shared with the master threads and router.
+    ups: Vec<Arc<AtomicBool>>,
     sampler: Option<Sampler>,
+    tick: Duration,
+    drain_slots: u64,
+    backpressure: Option<Backpressure>,
+    max_restarts: u32,
+    max_retries: u32,
+    retry_base: Duration,
+    retry_cap: Duration,
+    shed_watermark: Option<usize>,
+    /// Seeded jitter for retry backoff (stream 0xb0ff off the route seed),
+    /// so chaos tests replay the same sleep schedule.
+    jitter_rng: Mutex<Pcg64>,
 }
 
 impl ShardedHandle {
     pub fn shards(&self) -> usize {
-        self.shards.len()
+        self.slots.len()
     }
 
-    /// Shard i's metrics registry (shared with its master thread).
+    /// Shard i's metrics registry (shared with its master thread; survives
+    /// supervisor respawns).
     pub fn metrics(&self, shard: usize) -> &MetricsRegistry {
         &self.metrics[shard]
     }
 
+    /// Is shard i's master thread currently running?  Flips false the
+    /// moment the thread exits (panic included) and true again when the
+    /// supervisor respawns it.
+    pub fn shard_alive(&self, shard: usize) -> bool {
+        self.ups[shard].load(Ordering::Relaxed)
+    }
+
+    /// Restarts consumed from shard i's supervisor budget.
+    pub fn restarts(&self, shard: usize) -> u32 {
+        self.slots[shard].lock().unwrap().restarts
+    }
+
+    /// Chaos hook: panic shard i's master thread (asynchronous — poll
+    /// [`shard_alive`](Self::shard_alive) to observe the death).  The next
+    /// routed send detects the corpse and triggers the supervisor.
+    pub fn inject_crash(&self, shard: usize) -> Result<(), String> {
+        match &self.slots[shard].lock().unwrap().handle {
+            Some(h) => h.inject_crash(),
+            None => Err("shard abandoned".to_string()),
+        }
+    }
+
     /// Route one submission and submit it; returns `(shard, result)`.
     pub fn submit(&self, sub: Submission) -> Result<(usize, SubmitResult), String> {
-        let shard = self.router.lock().unwrap().route(&sub);
-        let result = self.shards[shard].submit(sub)?;
-        Ok((shard, result))
+        Ok(self
+            .submit_batch(std::slice::from_ref(&sub))?
+            .pop()
+            .expect("one result per submission"))
     }
 
     /// Route a burst: one router pass, then one batched channel round trip
     /// per shard — every shard's batch is **sent before any reply is
     /// awaited**, so admission runs on all shards concurrently.  Results
     /// come back in submission order, tagged with the serving shard.
+    ///
+    /// Fault paths (each yields a structured per-submission result, never
+    /// a hung call):
+    /// * routed shard past the shed watermark → [`SubmitResult::Shed`]
+    ///   without a channel round trip;
+    /// * shard died before/while serving the batch → the supervisor
+    ///   respawns it and replays the un-acked ledger with capped
+    ///   exponential backoff + jitter;
+    /// * restart/retry budget exhausted → the ledger is shed.
     pub fn submit_batch(
         &self,
         subs: &[Submission],
     ) -> Result<Vec<(usize, SubmitResult)>, String> {
-        let n = self.shards.len();
-        let mut routed = Vec::with_capacity(subs.len());
+        let n = self.slots.len();
+        // (shard, shed-fast-path?) per submission, in submission order
+        let mut routed: Vec<(usize, bool)> = Vec::with_capacity(subs.len());
         let mut per_shard: Vec<Vec<Submission>> = vec![Vec::new(); n];
         {
             let mut router = self.router.lock().unwrap();
             for sub in subs {
                 let shard = router.route(sub);
-                routed.push(shard);
-                per_shard[shard].push(*sub);
+                let shed = self
+                    .shed_watermark
+                    .is_some_and(|w| self.loads[shard].get() > w as i64);
+                if shed {
+                    self.metrics[shard].counter("jobs_shed").inc();
+                } else {
+                    per_shard[shard].push(*sub);
+                }
+                routed.push((shard, shed));
             }
         }
-        let mut pending: Vec<Option<mpsc::Receiver<Vec<SubmitResult>>>> = Vec::with_capacity(n);
+        // first attempt: record each shard's batch in its in-flight ledger
+        // (under the slot lock, which we hold until its reply lands), then
+        // send to every shard before awaiting any reply
+        type Reply = mpsc::Receiver<Vec<SubmitResult>>;
+        let mut pending: Vec<Option<(MutexGuard<'_, ShardSlot>, Option<Reply>)>> =
+            Vec::with_capacity(n);
         for (shard, batch) in per_shard.into_iter().enumerate() {
             if batch.is_empty() {
                 pending.push(None);
-            } else {
-                pending.push(Some(self.shards[shard].send_batch(batch)?));
+                continue;
             }
+            let mut slot = self.slots[shard].lock().unwrap();
+            debug_assert!(slot.ledger.is_empty(), "every exit path settles the ledger");
+            slot.ledger = batch;
+            let replay = slot.ledger.clone();
+            let rx = slot.handle.as_ref().and_then(|h| h.send_batch(replay).ok());
+            pending.push(Some((slot, rx)));
         }
+        // collect: a failed send or dropped reply means the shard died —
+        // hand the ledger to the supervisor
         let mut replies: Vec<std::vec::IntoIter<SubmitResult>> = Vec::with_capacity(n);
-        for rx in pending {
-            replies.push(match rx {
-                Some(rx) => rx
-                    .recv()
-                    .map_err(|_| "master dropped reply".to_string())?
-                    .into_iter(),
-                None => Vec::new().into_iter(),
-            });
+        for (shard, entry) in pending.into_iter().enumerate() {
+            let Some((mut slot, rx)) = entry else {
+                replies.push(Vec::new().into_iter());
+                continue;
+            };
+            let results = match rx.and_then(|rx| rx.recv().ok()) {
+                Some(results) => results,
+                None => self.recover_and_replay(shard, &mut slot),
+            };
+            debug_assert_eq!(results.len(), slot.ledger.len());
+            slot.ledger.clear();
+            replies.push(results.into_iter());
         }
         Ok(routed
             .into_iter()
-            .map(|shard| {
-                let r = replies[shard].next().expect("per-shard reply count matches routing");
-                (shard, r)
+            .map(|(shard, shed)| {
+                if shed {
+                    (shard, SubmitResult::Shed)
+                } else {
+                    let r =
+                        replies[shard].next().expect("per-shard reply count matches routing");
+                    (shard, r)
+                }
             })
             .collect())
     }
 
+    /// The supervisor: shard `shard` is dead with `slot.ledger` un-acked.
+    /// Respawn it (same partition, same derived seed, same registry and
+    /// liveness flag) and replay the ledger, sleeping capped exponential
+    /// backoff + jitter between attempts so a flapping shard isn't
+    /// hammered.  Exhausting the restart or retry budget sheds the ledger
+    /// with structured rejects — the caller always gets one verdict per
+    /// submission.
+    fn recover_and_replay(&self, shard: usize, slot: &mut ShardSlot) -> Vec<SubmitResult> {
+        let mut backoff = self.retry_base;
+        for _ in 0..=self.max_retries {
+            if !self.shard_alive(shard) && !self.restart_shard(shard, slot) {
+                break;
+            }
+            std::thread::sleep(backoff + self.jitter(backoff));
+            backoff = (backoff * 2).min(self.retry_cap);
+            let sent = slot.handle.as_ref().and_then(|h| h.send_batch(slot.ledger.clone()).ok());
+            if let Some(results) = sent.and_then(|rx| rx.recv().ok()) {
+                return results;
+            }
+        }
+        let shed = self.metrics[shard].counter("jobs_shed");
+        shed.add(slot.ledger.len() as u64);
+        vec![SubmitResult::Shed; slot.ledger.len()]
+    }
+
+    /// Respawn shard `shard`'s master.  Reuses the slot's per-shard config
+    /// (fresh seeded master), the shard's registry (counters and the
+    /// router's load gauge survive), and the shared liveness flag (the
+    /// router re-includes the shard the moment `spawn` marks it up).
+    /// Returns false once the restart budget is exhausted or the spawn
+    /// itself fails — the shard is then abandoned.
+    fn restart_shard(&self, shard: usize, slot: &mut ShardSlot) -> bool {
+        if slot.restarts >= self.max_restarts {
+            return false;
+        }
+        slot.restarts += 1;
+        // reap the corpse: join returns the panic as Err, which is expected
+        if let Some(old) = slot.handle.take() {
+            let _ = old.shutdown();
+        }
+        let mut master = Master::new(slot.cfg.clone());
+        master.tick = self.tick;
+        master.drain_slots = self.drain_slots;
+        if let Some(bp) = self.backpressure {
+            master.backpressure = bp;
+        }
+        master.metrics = self.metrics[shard].clone();
+        master.alive = self.ups[shard].clone();
+        master.machine_events = slot.events.clone();
+        match master.spawn() {
+            Ok(handle) => {
+                self.metrics[shard].counter("master_restarts").inc();
+                slot.handle = Some(handle);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn jitter(&self, backoff: Duration) -> Duration {
+        let span = (backoff.as_micros() as u64 / 2).max(1);
+        Duration::from_micros(self.jitter_rng.lock().unwrap().uniform_u64(0, span))
+    }
+
     /// Put **every** shard into drain before joining any (so shards drain
     /// concurrently), then aggregate the per-shard reports and stop the
-    /// sampler.
+    /// sampler.  A shard that died and exhausted its budget contributes a
+    /// tombstone report (`panicked: true`) synthesized from its registry
+    /// instead of failing the whole shutdown.
     pub fn shutdown(self) -> Result<ServeReport, String> {
-        for s in &self.shards {
-            s.begin_shutdown();
+        let mut handles = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let mut slot = slot.lock().unwrap();
+            if let Some(h) = &slot.handle {
+                h.begin_shutdown();
+            }
+            handles.push((slot.handle.take(), slot.cfg.machines));
         }
-        let mut reports = Vec::with_capacity(self.shards.len());
-        for s in self.shards {
-            reports.push(s.shutdown()?);
+        let mut reports = Vec::with_capacity(handles.len());
+        for (shard, (handle, machines)) in handles.into_iter().enumerate() {
+            let report = handle.and_then(|h| h.shutdown().ok());
+            reports.push(report.unwrap_or_else(|| Report {
+                completed: Vec::new(),
+                rejected: self.metrics[shard].counter("jobs_rejected").get(),
+                machines,
+                slots: 0,
+                slots_fired: 0,
+                slots_skipped: 0,
+                utilization: 0.0,
+                streamed: None,
+                panicked: true,
+            }));
         }
         let series = self.sampler.map(|s| s.stop());
         Ok(ServeReport { shards: reports, series })
@@ -275,6 +572,12 @@ impl ServeReport {
 
     pub fn rejected(&self) -> u64 {
         self.shards.iter().map(|r| r.rejected).sum()
+    }
+
+    /// Shards that died (and exhausted their restart budget) before they
+    /// could drain — their reports are registry-derived tombstones.
+    pub fn panicked(&self) -> usize {
+        self.shards.iter().filter(|r| r.panicked).count()
     }
 
     pub fn slots(&self) -> u64 {
@@ -340,10 +643,14 @@ mod tests {
         (0..n).map(|i| reg.gauge(&format!("q{i}"))).collect()
     }
 
+    fn flags(n: usize) -> Vec<Arc<AtomicBool>> {
+        (0..n).map(|_| Arc::new(AtomicBool::new(true))).collect()
+    }
+
     #[test]
     fn hash_routing_is_deterministic_and_shape_keyed() {
-        let mut r1 = ShardRouter::new(RoutePolicy::Hash, 7, loads(4));
-        let mut r2 = ShardRouter::new(RoutePolicy::Hash, 7, loads(4));
+        let mut r1 = ShardRouter::new(RoutePolicy::Hash, 7, loads(4), flags(4));
+        let mut r2 = ShardRouter::new(RoutePolicy::Hash, 7, loads(4), flags(4));
         let s = sub(42, 2.5);
         let shard = r1.route(&s);
         for _ in 0..10 {
@@ -360,8 +667,49 @@ mod tests {
 
     #[test]
     fn single_shard_routes_to_zero() {
-        let mut r = ShardRouter::new(RoutePolicy::P2c, 9, loads(1));
+        let mut r = ShardRouter::new(RoutePolicy::P2c, 9, loads(1), flags(1));
         assert_eq!(r.route(&sub(3, 1.0)), 0);
+    }
+
+    #[test]
+    fn hash_routing_probes_past_down_shards_and_reincludes() {
+        let ups = flags(4);
+        let mut r = ShardRouter::new(RoutePolicy::Hash, 7, loads(4), ups.clone());
+        let mut baseline = Vec::new();
+        for t in 1..=64 {
+            baseline.push(r.route(&sub(t, 1.0)));
+        }
+        let down = baseline[0];
+        ups[down].store(false, Ordering::Relaxed);
+        for t in 1..=64 {
+            assert_ne!(r.route(&sub(t, 1.0)), down, "down shard must be excluded");
+        }
+        ups[down].store(true, Ordering::Relaxed);
+        let after: Vec<usize> = (1..=64).map(|t| r.route(&sub(t, 1.0))).collect();
+        assert_eq!(after, baseline, "recovery restores the original picks");
+    }
+
+    #[test]
+    fn p2c_routing_excludes_down_shard() {
+        let ups = flags(2);
+        ups[0].store(false, Ordering::Relaxed);
+        let mut r = ShardRouter::new(RoutePolicy::P2c, 1, loads(2), ups);
+        for t in 0u32..50 {
+            assert_eq!(r.route(&sub(t + 1, 1.0)), 1, "lone survivor takes everything");
+        }
+    }
+
+    #[test]
+    fn all_down_falls_back_to_all_up_pick() {
+        for policy in [RoutePolicy::Hash, RoutePolicy::P2c] {
+            let ups = flags(3);
+            for u in &ups {
+                u.store(false, Ordering::Relaxed);
+            }
+            let mut r = ShardRouter::new(policy, 5, loads(3), ups);
+            let shard = r.route(&sub(9, 2.0));
+            assert!(shard < 3, "a restart target is still picked when every shard is down");
+        }
     }
 
     #[test]
@@ -369,7 +717,7 @@ mod tests {
         let ls = loads(2);
         ls[0].set(1000);
         ls[1].set(0);
-        let mut r = ShardRouter::new(RoutePolicy::P2c, 1, ls);
+        let mut r = ShardRouter::new(RoutePolicy::P2c, 1, ls, flags(2));
         let mut counts = [0usize; 2];
         for t in 0u32..200 {
             counts[r.route(&sub(t % 7 + 1, 1.0))] += 1;
@@ -393,6 +741,7 @@ mod tests {
             slots_skipped: 0,
             utilization,
             streamed: None,
+            panicked: false,
         };
         let rep = ServeReport { shards: vec![mk(30, 2, 0.5), mk(10, 3, 0.9)], series: None };
         assert_eq!(rep.completed(), 0);

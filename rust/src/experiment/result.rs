@@ -75,6 +75,9 @@ impl SweepResult {
             acc.ticks_skipped += c.result.ticks_skipped;
             acc.peak_event_queue = acc.peak_event_queue.max(c.result.peak_event_queue);
             acc.slot_hook_secs += c.result.slot_hook_secs;
+            acc.copies_lost += c.result.copies_lost;
+            acc.work_lost += c.result.work_lost;
+            acc.machines_failed += c.result.machines_failed;
         }
         acc.utilization =
             cells.iter().map(|c| c.result.utilization).sum::<f64>() / cells.len() as f64;

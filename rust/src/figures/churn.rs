@@ -1,0 +1,120 @@
+//! Flowtime inflation under machine churn: mean flowtime of the seven
+//! canonical policies as the machine MTTF shrinks (failures become more
+//! frequent) at a fixed MTTR — the headline sweep for the crash/recovery
+//! fault model (DESIGN.md §17).
+//!
+//! The infinite-MTTF column is the no-churn anchor (`churn` unset, so it
+//! runs the bit-identical zero-churn path); every finite column loses the
+//! work of each crashed copy and pays the restart-from-zero relaunch, so
+//! the gap to the anchor is exactly the price of churn under each
+//! speculation policy.  Speculative policies hold backup copies of
+//! straggling tasks, which doubles as crash insurance — the sweep shows
+//! how much of that insurance each policy buys.
+
+use std::path::Path;
+
+use crate::cluster::machine::ChurnConfig;
+use crate::config::SimConfig;
+use crate::experiment::{ExperimentSpec, LoadPoint, PolicyVariant, Runner};
+use crate::metrics::report;
+use crate::scheduler::SchedulerKind;
+
+use super::Scale;
+
+/// The MTTF axis (mean machine up-time, seconds).  `INFINITY` is the
+/// no-churn anchor; finite values sweep from rare to frequent failure.
+pub const MTTFS: [f64; 4] = [f64::INFINITY, 400.0, 150.0, 60.0];
+
+/// Mean repair time, fixed across the axis so it isolates failure
+/// frequency, not repair capacity.
+pub const MTTR: f64 = 20.0;
+
+/// One MTTF column: the seven canonical policies on the identical cluster,
+/// workload, and (when finite) churn schedule.
+pub fn spec(scale: Scale, mttf: f64) -> ExperimentSpec {
+    let mut cfg = SimConfig::default();
+    let m = scale.machines(200);
+    cfg.machines = m;
+    cfg.horizon = scale.horizon(300.0);
+    cfg.use_runtime = false;
+    if mttf.is_finite() {
+        cfg.churn = Some(ChurnConfig::new(mttf, MTTR));
+    }
+    let mut spec = ExperimentSpec::new(format!("churn@{mttf}"), cfg);
+    spec.policies = SchedulerKind::all().iter().map(|&k| PolicyVariant::kind(k)).collect();
+    spec.loads = vec![LoadPoint::lambda(0.4 * m as f64 / 300.0)];
+    spec.seeds = vec![1, 2, 3];
+    spec
+}
+
+pub fn run(
+    out_dir: &Path,
+    artifacts_dir: &str,
+    scale: Scale,
+    threads: usize,
+) -> Result<(), String> {
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut lost = Vec::new();
+    for mttf in MTTFS {
+        let mut spec = spec(scale, mttf);
+        spec.base.artifacts_dir = artifacts_dir.to_string();
+        spec.threads = threads;
+        let sweep = Runner::run(&spec)?;
+        if series.is_empty() {
+            series = sweep
+                .policies
+                .iter()
+                .map(|(label, _)| (label.clone(), Vec::new()))
+                .collect();
+        }
+        print!("churn (mttf={mttf}):");
+        let mut col_lost = 0u64;
+        for (pi, (label, _)) in sweep.policies.iter().enumerate() {
+            let merged = sweep.merged(pi, 0);
+            series[pi].1.push((mttf, merged.mean_flowtime()));
+            col_lost += merged.copies_lost;
+            print!("  {label} {:.3}", merged.mean_flowtime());
+        }
+        println!();
+        lost.push((mttf, col_lost));
+    }
+    // acceptance telemetry: the anchor must lose nothing, and the most
+    // churned column must actually have killed copies for the inflation to
+    // mean anything
+    let anchor = lost.first().map_or(0, |&(_, n)| n);
+    let worst = lost.last().map_or(0, |&(_, n)| n);
+    println!(
+        "churn sweep: copies lost at mttf=inf {anchor} (must be 0), \
+         at mttf={} {worst} — churn {}",
+        MTTFS[MTTFS.len() - 1],
+        if anchor == 0 && worst > 0 { "active" } else { "NOT active" },
+    );
+    report::write_file(
+        out_dir.join("churn_flowtime_vs_mttf.csv"),
+        &report::xy_csv(&series),
+    )
+    .map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builds_all_mttf_columns() {
+        for mttf in MTTFS {
+            let spec = spec(Scale(0.1), mttf);
+            spec.validate().unwrap();
+            assert_eq!(spec.policies.len(), 7, "the seven canonical policies");
+            match spec.base.churn {
+                None => assert!(mttf.is_infinite(), "anchor column runs the no-churn path"),
+                Some(ch) => {
+                    assert_eq!(ch.mttf, mttf);
+                    assert_eq!(ch.mttr, MTTR);
+                    assert!(ch.enabled());
+                }
+            }
+        }
+    }
+}

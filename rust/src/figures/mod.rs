@@ -7,6 +7,7 @@
 //! fan their independent cells out with `run_parallel`.  `threads = 0`
 //! means one worker per core; any N > 0 produces identical output.
 
+pub mod churn;
 pub mod crossover;
 pub mod fig1;
 pub mod fig2;
@@ -51,5 +52,6 @@ pub fn run_all(
     fig6::run(out_dir, artifacts_dir, scale, threads)?;
     threshold::run(out_dir, artifacts_dir, scale, threads)?;
     crossover::run(out_dir, artifacts_dir, scale, threads)?;
+    churn::run(out_dir, artifacts_dir, scale, threads)?;
     Ok(())
 }

@@ -42,9 +42,10 @@ COMMANDS
              [same flags as simulate]; --rss-budget-mb fails the run
              when peak RSS (VmHWM) exceeds the budget — the CI memory
              gate for streamed trace replays
-  figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|crossover|all>
+  figure     <fig1|fig2|fig3|fig4|fig5|fig6|threshold|crossover|churn|all>
              [--out-dir results] [--artifacts-dir DIR] [--scale 1.0]
-             [--threads N]
+             [--threads N]; churn sweeps mean flowtime of the seven
+             canonical policies against the machine MTTF
   threshold  [--machines N] [--mean-tasks M] [--mean-duration S] [--alpha A]
   bench      [--quick] [--out FILE] [--md FILE] [--check-wakeup]
              [--check-scale] [--serve] [--check-serve] [--serve-csv FILE]
@@ -77,13 +78,24 @@ COMMANDS
              [--as-fast-as-possible] [--batch B] [--shards N]
              [--route hash|p2c] [--machines N] [--policy spec]
              [--route-seed S] [--sample-ms MS] [--serve-csv FILE]
+             [--machine-events FILE] [--max-restarts N]
+             [--shed-watermark N]
              pump a recorded trace through the sharded live masters,
              pacing batches by recorded inter-arrival gaps scaled by
              --speedup (default 1.0); --as-fast-as-possible drops the
-             pacing entirely
+             pacing entirely; --machine-events replays a recorded
+             `timestamp,machine_id,event{ADD,REMOVE}` churn schedule
+             into the shard clusters (global machine ids, split across
+             the shard partitions)
   serve      [--shards N] [--route hash|p2c] [--machines N] [--rate R]
              [--jobs J] [--policy spec] [--route-seed S] [--sample-ms MS]
-             [--serve-csv FILE] [--artifacts-dir DIR]
+             [--serve-csv FILE] [--artifacts-dir DIR] [--max-restarts N]
+             [--shed-watermark N]
+             a crashed shard master respawns (up to --max-restarts
+             times, default 8, capped exponential backoff) and replays
+             its un-acked submissions; --shed-watermark sheds new load
+             with a structured reject while a shard's backlog gauge
+             sits past N
 
 WORKLOAD / CLUSTER SCENARIO FLAGS
   --workload poisson|bursty|trace   arrival process (default poisson)
@@ -110,6 +122,12 @@ WORKLOAD / CLUSTER SCENARIO FLAGS
   --slowdown FRACxFACTOR            server-dependent slowdown: each machine
                                     degraded with prob FRAC runs FACTORx
                                     slower (hidden from schedulers)
+  --churn MTTF,MTTR                 machine crash/recovery churn: each
+                                    machine alternates exp(MTTF) up-time
+                                    and exp(MTTR) repair; a crash kills the
+                                    resident copy and a crashed-out task
+                                    restarts from zero (0,0 disables —
+                                    bit-identical to no churn)
   --slowdown-flip RATE_ON,RATE_OFF  ON/OFF Markov slowdown: healthy machines
                                     degrade at exp rate RATE_ON, degraded
                                     ones recover at RATE_OFF (needs a
@@ -201,6 +219,9 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
     if let Some(spec) = args.str("slowdown") {
         cfg.slowdown = Some(machine::parse_slowdown(spec)?);
     }
+    if let Some(spec) = args.str("churn") {
+        cfg.churn = Some(machine::parse_churn(spec)?);
+    }
     if let Some(spec) = args.str("slowdown-flip") {
         let rates: Vec<f64> = parse_list(spec, "--slowdown-flip")?;
         let [rate_on, rate_off] = rates[..] else {
@@ -238,6 +259,16 @@ fn apply_scenario_flags(cfg: &mut SimConfig, args: &Args) -> Result<(), String> 
     let cap = args.usize("max-resident-jobs", 0)?;
     if cap > 0 {
         cfg.max_resident_jobs = Some(cap);
+    }
+    Ok(())
+}
+
+/// Supervisor flags shared by `serve` and `replay`: the shard restart
+/// budget and the optional shed watermark (DESIGN.md §17).
+fn apply_supervisor_flags(sharded: &mut ShardedMaster, args: &Args) -> Result<(), String> {
+    sharded.max_restarts = args.usize("max-restarts", sharded.max_restarts as usize)? as u32;
+    if args.str("shed-watermark").is_some() {
+        sharded.shed_watermark = Some(args.usize("shed-watermark", 0)?);
     }
     Ok(())
 }
@@ -431,7 +462,7 @@ fn run() -> Result<(), String> {
             let id = args
                 .positional()
                 .first()
-                .ok_or("figure: which one? (fig1..fig6, threshold, crossover, all)")?
+                .ok_or("figure: which one? (fig1..fig6, threshold, crossover, churn, all)")?
                 .clone();
             let out_dir = PathBuf::from(args.string("out-dir", "results"));
             let artifacts_dir = args.string("artifacts-dir", "artifacts");
@@ -446,6 +477,7 @@ fn run() -> Result<(), String> {
                 "fig6" => figures::fig6::run(&out_dir, &artifacts_dir, scale, threads)?,
                 "threshold" => figures::threshold::run(&out_dir, &artifacts_dir, scale, threads)?,
                 "crossover" => figures::crossover::run(&out_dir, &artifacts_dir, scale, threads)?,
+                "churn" => figures::churn::run(&out_dir, &artifacts_dir, scale, threads)?,
                 "all" => figures::run_all(&out_dir, &artifacts_dir, scale, threads)?,
                 other => return Err(format!("unknown figure '{other}'")),
             }
@@ -550,6 +582,20 @@ fn run() -> Result<(), String> {
                     c.stream_overhead(),
                 );
             })?;
+            println!("churn cell (sda, light): machine crash/recovery vs churn-free baseline");
+            let churn_cells = specsim::util::bench::run_churn_suite(quick, |c| {
+                println!(
+                    "{:<10} {:>5} {:>8.3} {:>7} {:>13.0} {:>13.0} {:>7.2}x  ({})",
+                    c.policy,
+                    c.machines,
+                    c.lambda,
+                    c.load,
+                    c.churned.events_per_sec,
+                    c.baseline.events_per_sec,
+                    c.overhead(),
+                    c.churn,
+                );
+            })?;
             let mut serve_cells = Vec::new();
             let mut serve_csv = String::new();
             if args.has("serve") || args.has("check-serve") {
@@ -577,6 +623,7 @@ fn run() -> Result<(), String> {
                 &flips,
                 &serve_cells,
                 &trace_cells,
+                &churn_cells,
                 quick,
             );
             report::write_file(&out, &format!("{doc}\n")).map_err(|e| e.to_string())?;
@@ -593,6 +640,8 @@ fn run() -> Result<(), String> {
                 table.push_str(&specsim::util::bench::flip_markdown(&flips));
                 table.push('\n');
                 table.push_str(&specsim::util::bench::trace_markdown(&trace_cells));
+                table.push('\n');
+                table.push_str(&specsim::util::bench::churn_markdown(&churn_cells));
                 if !serve_cells.is_empty() {
                     table.push('\n');
                     table.push_str(&specsim::util::bench::serve_markdown(&serve_cells));
@@ -601,11 +650,12 @@ fn run() -> Result<(), String> {
                 println!("wrote the EXPERIMENTS.md-ready tables to {md}");
             }
             println!(
-                "wrote {} cells (+{} scale, +{} flip, +{} trace, +{} serve) to {out}",
+                "wrote {} cells (+{} scale, +{} flip, +{} trace, +{} churn, +{} serve) to {out}",
                 cells.len(),
                 scale.len(),
                 flips.len(),
                 trace_cells.len(),
+                churn_cells.len(),
                 serve_cells.len(),
             );
             if args.has("check-wakeup") {
@@ -687,7 +737,31 @@ fn run() -> Result<(), String> {
             serve_cfg.route = args.string("route", "hash").parse::<RoutePolicy>()?;
             serve_cfg.route_seed = args.u64("route-seed", serve_cfg.route_seed)?;
             serve_cfg.validate(cfg.machines)?;
+            // scripted churn: validate the schedule against the deployment
+            // size up-front so a bad file fails before any thread spawns
+            let machine_events = match args.str("machine-events") {
+                Some(p) => {
+                    let events = specsim::workload::read_machine_events(p)?;
+                    if let Some(max) = specsim::workload::max_machine(&events) {
+                        if max as usize >= cfg.machines {
+                            return Err(format!(
+                                "--machine-events {p}: machine {max} out of range \
+                                 (--machines {})",
+                                cfg.machines
+                            ));
+                        }
+                    }
+                    println!(
+                        "machine-events: replaying {} scripted churn events from {p}",
+                        events.len()
+                    );
+                    events
+                }
+                None => Vec::new(),
+            };
             let mut sharded = ShardedMaster::new(cfg, serve_cfg);
+            sharded.machine_events = machine_events;
+            apply_supervisor_flags(&mut sharded, &args)?;
             sharded.sample_every =
                 Some(Duration::from_millis(args.u64("sample-ms", 250)?.max(1)));
             let handle = sharded.spawn()?;
@@ -757,6 +831,7 @@ fn run() -> Result<(), String> {
             serve_cfg.route_seed = args.u64("route-seed", serve_cfg.route_seed)?;
             serve_cfg.validate(cfg.machines)?;
             let mut sharded = ShardedMaster::new(cfg, serve_cfg);
+            apply_supervisor_flags(&mut sharded, &args)?;
             sharded.sample_every = Some(Duration::from_millis(args.u64("sample-ms", 250)?.max(1)));
             let handle = sharded.spawn()?;
             let mut rng = Pcg64::new(42, 0);

@@ -113,16 +113,26 @@ pub fn cmf_csv(series: &mut [(&str, Cdf)], points: usize) -> String {
 /// Serialize a sweep's full grid, one row per (policy, load, seed) cell.
 /// The row order is fixed by the spec (policy-major), so the same spec
 /// always produces the identical file regardless of worker count.
+///
+/// The churn columns (`machines_failed,copies_lost,work_lost`) are
+/// appended **only when the sweep's base config has churn enabled** — a
+/// zero-churn sweep serializes byte-identically to the pre-churn format,
+/// which is what pins the canonical snapshot.
 pub fn sweep_csv(sweep: &SweepResult) -> String {
+    let churn = sweep.base.churn.is_some_and(|ch| ch.enabled());
     let mut out = String::from(
         "policy,load,x,seed,jobs,incomplete,mean_flowtime,p80_flowtime,p90_flowtime,\
-         mean_resource,p80_resource,net_utility,utilization,backups\n",
+         mean_resource,p80_resource,net_utility,utilization,backups",
     );
+    if churn {
+        out.push_str(",machines_failed,copies_lost,work_lost");
+    }
+    out.push('\n');
     for cell in &sweep.cells {
         let row = SummaryRow::from_result(&cell.result);
         let (policy, _) = &sweep.policies[cell.policy];
         let (load, x) = &sweep.loads[cell.load];
-        let _ = writeln!(
+        let _ = write!(
             out,
             "{policy},{load},{x},{},{},{},{},{},{},{},{},{},{},{}",
             cell.seed,
@@ -137,6 +147,14 @@ pub fn sweep_csv(sweep: &SweepResult) -> String {
             row.utilization,
             row.speculative_launches
         );
+        if churn {
+            let _ = write!(
+                out,
+                ",{},{},{}",
+                cell.result.machines_failed, cell.result.copies_lost, cell.result.work_lost
+            );
+        }
+        out.push('\n');
     }
     out
 }
@@ -207,6 +225,9 @@ mod tests {
             ticks_skipped: 5,
             peak_event_queue: 7,
             slot_hook_secs: 0.0,
+            copies_lost: 3,
+            work_lost: 1.5,
+            machines_failed: 2,
             streamed: None,
         };
         let sweep = SweepResult {
@@ -224,8 +245,20 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("policy,load,x,seed"));
+        assert!(
+            !lines[0].contains("copies_lost"),
+            "zero-churn sweeps keep the pre-churn column set byte-identical"
+        );
         assert!(lines[1].starts_with("naive,lambda2,2,1,"));
         assert!(lines[2].starts_with("naive,lambda2,2,2,"));
+
+        // with churn enabled on the base config the loss columns appear
+        let mut churned = sweep.clone();
+        churned.base.churn = Some(crate::cluster::machine::ChurnConfig::new(100.0, 10.0));
+        let csv = sweep_csv(&churned);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].ends_with("backups,machines_failed,copies_lost,work_lost"));
+        assert!(lines[1].ends_with(",2,3,1.5"), "machines_failed,copies_lost,work_lost: {}", lines[1]);
     }
 
     #[test]

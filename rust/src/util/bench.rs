@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 use crate::analysis::threshold;
 use crate::cluster::event::EventQueueKind;
 use crate::cluster::generator;
-use crate::cluster::machine::SlowdownConfig;
+use crate::cluster::machine::{ChurnConfig, SlowdownConfig};
 use crate::cluster::sim::{SimResult, Simulator, Workload};
 use crate::config::{RoutePolicy, ServeConfig, SimConfig, WorkloadConfig};
 use crate::coordinator::backpressure::Backpressure;
@@ -104,7 +104,11 @@ pub fn run<T>(name: &str, warmup: u32, iters: u32, f: impl FnMut() -> T) -> Meas
 /// (materialized up front, streamed through the bounded-window trace
 /// reader, streamed with `max_resident_jobs` record recycling), all three
 /// simulating bit-identical dynamics, with per-run peak RSS.
-pub const BENCH_SCHEMA: &str = "specsim-bench-v6";
+/// v7: the `churn_cells` array — the (sda, light, M = 4000) cell with the
+/// machine crash/recovery process enabled vs the churn-free baseline,
+/// pricing the fail/recover event traffic, stranded-copy settlement and
+/// task re-execution.
+pub const BENCH_SCHEMA: &str = "specsim-bench-v7";
 
 /// The suite's machine-count axis.
 pub const SUITE_MACHINES: [usize; 2] = [500, 4000];
@@ -603,6 +607,113 @@ pub fn flip_markdown(cells: &[FlipCell]) -> String {
     out
 }
 
+// ----- the churn-enabled cell --------------------------------------------
+
+/// The (sda, light) cell with the machine crash/recovery process running
+/// vs the churn-free baseline on the identical pre-sampled workload
+/// (PR 10).  Churn runs pop strictly more events (the fail/recover
+/// stream plus the re-queued copies it forces), so the honest overhead
+/// metric is the wall-clock ratio, not events/sec.
+#[derive(Clone, Debug)]
+pub struct ChurnCell {
+    pub policy: String,
+    pub load: &'static str,
+    pub lambda: f64,
+    pub machines: usize,
+    pub slot_dt: f64,
+    /// `MTTF,MTTR` of the churn run's scenario.
+    pub churn: String,
+    /// Hot path (indexed + wakeup) with churn enabled.
+    pub churned: ThroughputRun,
+    /// The same scenario with no churn process.
+    pub baseline: ThroughputRun,
+}
+
+impl ChurnCell {
+    /// Wall-clock cost of the churn machinery: `churned / baseline` (1.0 =
+    /// fault injection is free; expect a premium — lost work really is
+    /// re-executed).
+    pub fn overhead(&self) -> f64 {
+        self.churned.wall_secs / self.baseline.wall_secs.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("policy".into(), Json::Str(self.policy.clone()));
+        m.insert("load".into(), Json::Str(self.load.to_string()));
+        m.insert("lambda".into(), Json::Num(self.lambda));
+        m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("slot_dt".into(), Json::Num(self.slot_dt));
+        m.insert("churn".into(), Json::Str(self.churn.clone()));
+        m.insert("churned".into(), self.churned.to_json());
+        m.insert("baseline".into(), self.baseline.to_json());
+        m.insert("overhead".into(), Json::Num(self.overhead()));
+        Json::Obj(m)
+    }
+}
+
+/// Run the churn cell: (sda, light, M = 4000) under `40,10` machine
+/// churn vs the churn-free baseline.  SDA on purpose — crashes strand
+/// unrevealed primaries and force relaunches through its reveal hook, so
+/// the cell prices the full settlement + re-execution path, not just the
+/// extra queue traffic.
+pub fn run_churn_suite(
+    quick: bool,
+    mut progress: impl FnMut(&ChurnCell),
+) -> Result<Vec<ChurnCell>, String> {
+    let horizon = suite_horizon(quick);
+    let machines = SUITE_MACHINES[1];
+    let mut base = SimConfig::default();
+    base.machines = machines;
+    base.horizon = horizon;
+    base.use_runtime = false;
+    base.slot_dt = WAKEUP_SLOT_DT;
+    let wl_cfg = WorkloadConfig::paper(LIGHT_LAMBDA);
+    let workload = generator::generate(&wl_cfg, horizon, base.seed);
+    let ch = ChurnConfig::new(40.0, 10.0);
+    let mut churn_cfg = base.clone();
+    churn_cfg.churn = Some(ch);
+    let churned =
+        time_simulation(&churn_cfg, &wl_cfg, workload.clone(), SchedulerKind::Sda, true, true)?;
+    let baseline = time_simulation(&base, &wl_cfg, workload, SchedulerKind::Sda, true, true)?;
+    let cell = ChurnCell {
+        policy: SchedulerKind::Sda.to_string(),
+        load: "light",
+        lambda: LIGHT_LAMBDA,
+        machines,
+        slot_dt: WAKEUP_SLOT_DT,
+        churn: crate::cluster::machine::format_churn(&ch),
+        churned,
+        baseline,
+    };
+    progress(&cell);
+    Ok(vec![cell])
+}
+
+/// Render the churn cells as the EXPERIMENTS.md §Perf companion table.
+pub fn churn_markdown(cells: &[ChurnCell]) -> String {
+    let mut out = String::from(
+        "| policy | load | M | churn | churn ev/s | baseline ev/s | churn events \
+         | baseline events | wall overhead |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {:.0} | {:.0} | {} | {} | {:.2}x |\n",
+            c.policy,
+            c.load,
+            c.machines,
+            c.churn,
+            c.churned.events_per_sec,
+            c.baseline.events_per_sec,
+            c.churned.events,
+            c.baseline.events,
+            c.overhead()
+        ));
+    }
+    out
+}
+
 /// The scale acceptance gate CI enforces (`bench --check-scale`): on the
 /// (naive, light, M = 10^5) cell the calendar backend must at least match
 /// the heap reference's throughput.
@@ -1059,13 +1170,14 @@ pub fn throughput_markdown(cells: &[ThroughputCell]) -> String {
 }
 
 /// Serialize a finished suite (throughput + scale + flip + serve + trace
-/// cells) to the `BENCH_sim.json` document.
+/// + churn cells) to the `BENCH_sim.json` document.
 pub fn throughput_json(
     cells: &[ThroughputCell],
     scale: &[ScaleCell],
     flips: &[FlipCell],
     serve: &[ServeCell],
     trace: &[TraceCell],
+    churn: &[ChurnCell],
     quick: bool,
 ) -> Json {
     let mut m = std::collections::BTreeMap::new();
@@ -1101,7 +1213,12 @@ pub fn throughput_json(
              bounded-window trace reader, and streamed with \
              max_resident_jobs record recycling — all three simulating \
              bit-identical dynamics; stream_overhead = streamed/\
-             materialized wall_secs. peak_rss_bytes = Linux VmHWM, reset \
+             materialized wall_secs. churn_cells (v7) time the (sda, \
+             light, M=4000) cell with the machine crash/recovery process \
+             running (MTTF,MTTR = 40,10) vs the churn-free baseline; \
+             overhead = churned/baseline wall_secs (churn runs pop \
+             strictly more events and re-execute lost work). \
+             peak_rss_bytes = Linux VmHWM, reset \
              per run; null elsewhere. Regenerate: \
              cargo run --release -- bench --serve"
                 .to_string(),
@@ -1112,6 +1229,7 @@ pub fn throughput_json(
     m.insert("flip_cells".into(), Json::Arr(flips.iter().map(|c| c.to_json()).collect()));
     m.insert("serve_cells".into(), Json::Arr(serve.iter().map(|c| c.to_json()).collect()));
     m.insert("trace_cells".into(), Json::Arr(trace.iter().map(|c| c.to_json()).collect()));
+    m.insert("churn_cells".into(), Json::Arr(churn.iter().map(|c| c.to_json()).collect()));
     Json::Obj(m)
 }
 
@@ -1189,7 +1307,7 @@ mod tests {
         let md = throughput_markdown(std::slice::from_ref(&cell));
         assert!(md.starts_with("| policy |"));
         assert!(md.contains("| sda | light | 40 | 0.1 |"));
-        let doc = throughput_json(&[cell], &[], &[], &[], &[], true);
+        let doc = throughput_json(&[cell], &[], &[], &[], &[], &[], true);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
         assert_eq!(back.get("measured"), Some(&Json::Bool(true)));
@@ -1216,6 +1334,8 @@ mod tests {
         assert_eq!(back.get("serve_cells").unwrap().as_arr().unwrap().len(), 0);
         // v6: the trace_cells array is always present
         assert_eq!(back.get("trace_cells").unwrap().as_arr().unwrap().len(), 0);
+        // v7: the churn_cells array is always present
+        assert_eq!(back.get("churn_cells").unwrap().as_arr().unwrap().len(), 0);
     }
 
     /// The trace cell's three paths simulate the identical system — same
@@ -1392,6 +1512,54 @@ mod tests {
         let md = flip_markdown(std::slice::from_ref(&cell));
         assert!(md.starts_with("| policy |"));
         assert!(md.contains("| sda | light | 40 | 0.2x3.0@0.5,1.0 |"));
+    }
+
+    /// The churn cell measures a genuinely different system from the
+    /// churn-free one (the crash/recovery stream adds events) and its
+    /// JSON / markdown renderings carry the overhead ratio.
+    #[test]
+    fn churn_cell_measures_and_serializes() {
+        let mut base = SimConfig::default();
+        base.machines = 40;
+        base.horizon = 60.0;
+        base.use_runtime = false;
+        base.slot_dt = 0.1;
+        let wl_cfg = WorkloadConfig::paper(0.3);
+        let workload = generator::generate(&wl_cfg, base.horizon, 1);
+        let ch = ChurnConfig::new(20.0, 5.0);
+        let mut churn_cfg = base.clone();
+        churn_cfg.churn = Some(ch);
+        let churned =
+            time_simulation(&churn_cfg, &wl_cfg, workload.clone(), SchedulerKind::Sda, true, true)
+                .unwrap();
+        let baseline =
+            time_simulation(&base, &wl_cfg, workload, SchedulerKind::Sda, true, true).unwrap();
+        assert!(
+            churned.events > baseline.events,
+            "the churn process must add events: {} vs {}",
+            churned.events,
+            baseline.events
+        );
+        let cell = ChurnCell {
+            policy: "sda".into(),
+            load: "light",
+            lambda: 0.3,
+            machines: 40,
+            slot_dt: 0.1,
+            churn: crate::cluster::machine::format_churn(&ch),
+            churned,
+            baseline,
+        };
+        assert!(cell.overhead() > 0.0);
+        let j = cell.to_json();
+        assert_eq!(j.get("machines").unwrap().as_usize(), Some(40));
+        assert!(j.path(&["churned", "events_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.path(&["baseline", "events"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("overhead").unwrap().as_f64().is_some());
+        assert_eq!(j.get("churn").unwrap().as_str(), Some("20.0,5.0"));
+        let md = churn_markdown(std::slice::from_ref(&cell));
+        assert!(md.starts_with("| policy |"));
+        assert!(md.contains("| sda | light | 40 | 20.0,5.0 |"));
     }
 
     /// Both event-queue backends simulate the identical system at the

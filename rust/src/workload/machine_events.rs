@@ -1,0 +1,176 @@
+//! Google/Alibaba-style machine-events table: one `timestamp,machine_id,
+//! event` row per cluster membership change, with `event` ∈ {`ADD`,
+//! `REMOVE`} (case-insensitive).  The table compiles to a deterministic
+//! churn schedule — sorted by timestamp, input order breaking ties — that
+//! replays in place of sampled MTTF/MTTR via
+//! `Cluster::inject_machine_event` (`replay --machine-events FILE`).
+//!
+//! Semantics match the sampled churn process (DESIGN.md §17): `REMOVE`
+//! crashes the machine (resident copies lost, restart from zero), `ADD`
+//! returns it to the allocatable pool.  Redundant events — `REMOVE` while
+//! already down, `ADD` while already up — are no-ops, exactly as the
+//! public traces contain them.  Every parse failure is a structured
+//! [`TraceError`] with path, 1-based line, and 1-based byte column.
+
+use std::fs;
+use std::path::Path;
+
+use super::error::TraceError;
+
+/// One compiled machine membership change.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MachineEvent {
+    /// Simulation time of the change (seconds, >= 0).
+    pub time: f64,
+    /// Machine id in `0..machines`.
+    pub machine: u32,
+    /// True for `REMOVE` (crash), false for `ADD` (recover/join).
+    pub fail: bool,
+}
+
+/// Read and compile a machine-events file.
+pub fn read_machine_events(path: impl AsRef<Path>) -> Result<Vec<MachineEvent>, TraceError> {
+    let p = path.as_ref();
+    let label = p.display().to_string();
+    let text = fs::read_to_string(p)
+        .map_err(|e| TraceError::Io { path: label.clone(), message: e.to_string() })?;
+    parse_machine_events(&text, label)
+}
+
+/// Parse a machine-events table from text.  The header line
+/// `timestamp,machine_id,event` is optional (matched with whitespace/case
+/// slack); blank lines are skipped; the result is stably sorted by
+/// timestamp so equal-time events fire in input order.
+pub fn parse_machine_events(
+    text: &str,
+    path: impl Into<String>,
+) -> Result<Vec<MachineEvent>, TraceError> {
+    let path = path.into();
+    let mut events = Vec::new();
+    let mut saw_line = false;
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx as u64 + 1;
+        let line = raw.trim_end_matches('\r');
+        if line.trim().is_empty() {
+            continue;
+        }
+        if !saw_line {
+            saw_line = true;
+            if is_header(line) {
+                continue;
+            }
+        }
+        events.push(parse_row(line, &path, lineno)?);
+    }
+    if !saw_line {
+        return Err(TraceError::Empty { path });
+    }
+    // stable: equal timestamps keep input order, so the compiled schedule
+    // is deterministic regardless of how the source interleaved machines
+    events.sort_by(|a, b| a.time.partial_cmp(&b.time).expect("timestamps are finite"));
+    Ok(events)
+}
+
+/// Highest machine id referenced, for validating against a cluster size.
+pub fn max_machine(events: &[MachineEvent]) -> Option<u32> {
+    events.iter().map(|e| e.machine).max()
+}
+
+fn is_header(line: &str) -> bool {
+    let norm: String =
+        line.chars().filter(|c| !c.is_whitespace()).collect::<String>().to_ascii_lowercase();
+    norm == "timestamp,machine_id,event"
+}
+
+fn parse_row(line: &str, path: &str, lineno: u64) -> Result<MachineEvent, TraceError> {
+    let err = |column: usize, message: String| TraceError::Parse {
+        path: path.to_string(),
+        line: lineno,
+        column: column as u32 + 1,
+        message,
+    };
+    let mut fields: Vec<(usize, &str)> = Vec::with_capacity(3);
+    let mut off = 0usize;
+    for part in line.split(',') {
+        fields.push((off, part.trim()));
+        off += part.len() + 1;
+    }
+    if fields.len() != 3 {
+        return Err(err(
+            0,
+            format!("expected 3 fields (timestamp,machine_id,event), got {}", fields.len()),
+        ));
+    }
+    let time: f64 = fields[0]
+        .1
+        .parse()
+        .map_err(|e| err(fields[0].0, format!("timestamp: {e}")))?;
+    if !(time >= 0.0) || !time.is_finite() {
+        return Err(err(fields[0].0, format!("timestamp must be finite and >= 0, got {time}")));
+    }
+    let machine: u32 = fields[1]
+        .1
+        .parse()
+        .map_err(|e| err(fields[1].0, format!("machine_id: {e}")))?;
+    let fail = match fields[2].1.to_ascii_uppercase().as_str() {
+        "REMOVE" => true,
+        "ADD" => false,
+        other => return Err(err(fields[2].0, format!("event must be ADD or REMOVE, got {other:?}"))),
+    };
+    Ok(MachineEvent { time, machine, fail })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sorts_and_keeps_tie_order() {
+        let text = "timestamp,machine_id,event\n\
+                    5.0,2,REMOVE\n\
+                    \n\
+                    1.5,0,remove\n\
+                    5.0,1,Add\n\
+                    2.5,0,ADD\n";
+        let ev = parse_machine_events(text, "t.csv").unwrap();
+        assert_eq!(
+            ev,
+            vec![
+                MachineEvent { time: 1.5, machine: 0, fail: true },
+                MachineEvent { time: 2.5, machine: 0, fail: false },
+                MachineEvent { time: 5.0, machine: 2, fail: true },
+                MachineEvent { time: 5.0, machine: 1, fail: false },
+            ],
+            "sorted by time, equal times in input order, tokens case-insensitive"
+        );
+        assert_eq!(max_machine(&ev), Some(2));
+    }
+
+    #[test]
+    fn header_is_optional() {
+        let ev = parse_machine_events("3.0,4,REMOVE\n", "t.csv").unwrap();
+        assert_eq!(ev, vec![MachineEvent { time: 3.0, machine: 4, fail: true }]);
+        assert_eq!(max_machine(&[]), None);
+    }
+
+    #[test]
+    fn errors_carry_position() {
+        let e = parse_machine_events("timestamp,machine_id,event\n1.0,3,EVICT\n", "m.csv")
+            .unwrap_err();
+        match e {
+            TraceError::Parse { path, line, column, message } => {
+                assert_eq!(path, "m.csv");
+                assert_eq!(line, 2);
+                assert_eq!(column, 7, "column points at the event field");
+                assert!(message.contains("EVICT"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let e = parse_machine_events("-1.0,3,ADD\n", "m.csv").unwrap_err();
+        assert!(e.to_string().contains("timestamp must be finite"));
+        let e = parse_machine_events("1.0,3\n", "m.csv").unwrap_err();
+        assert!(e.to_string().contains("expected 3 fields"));
+        let e = parse_machine_events("", "m.csv").unwrap_err();
+        assert_eq!(e, TraceError::Empty { path: "m.csv".to_string() });
+    }
+}

@@ -18,12 +18,21 @@
 //! [`scan`] is the single-pass moment pre-pass ([`TraceStats`]) that gives
 //! trace workloads real `mean_tasks()`/`mean_duration()` values and the
 //! schedulers their tail index, all in bounded memory.
+//!
+//! [`read_machine_events`] compiles a Google/Alibaba-style machine-events
+//! table (`timestamp,machine_id,event{ADD,REMOVE}`) into the deterministic
+//! churn schedule `replay --machine-events` injects in place of sampled
+//! MTTF/MTTR (DESIGN.md §17).
 
 mod error;
+mod machine_events;
 mod reader;
 mod source;
 
 pub use error::TraceError;
+pub use machine_events::{
+    max_machine, parse_machine_events, read_machine_events, MachineEvent,
+};
 pub use reader::{TraceFormat, TraceReader, TraceRow, CHUNK, DEFAULT_ALPHA};
 pub use source::{
     scan, source_for, GeneratorSource, JobSource, Lookahead, MaterializedSource, SourcedJob,

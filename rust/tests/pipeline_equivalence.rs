@@ -28,12 +28,20 @@
 //!    rate-(0,0) runs are bitwise the static scenario (which is what
 //!    keeps the snapshot in (2) valid).
 //!
+//! 4. **Churn matrix** (the PR-10 tentpole bar) — same shape as (3) for
+//!    the crash/recovery fault model (`ChurnConfig`): machine crashes
+//!    kill resident copies, crashed-out tasks relaunch from zero, and
+//!    every {wakeup} x {sched_index} x {calendar, binary-heap} x worker
+//!    pair must still serialize the byte-identical sweep CSV; zero-rate
+//!    churn must be bitwise the no-churn run, which is what keeps the
+//!    committed snapshot in (2) valid across the churn PR.
+//!
 //! Plus the pipeline-composition tests that never depended on the
 //! monoliths: novel compositions sweep end-to-end, and the est-srpt
 //! ordering genuinely diverges from mean-field SRPT.
 
 use specsim::cluster::event::EventQueueKind;
-use specsim::cluster::machine::{MachineClass, SlowdownConfig};
+use specsim::cluster::machine::{ChurnConfig, MachineClass, SlowdownConfig};
 use specsim::config::{SimConfig, WorkloadConfig};
 use specsim::experiment::{
     ClusterScenario, ExperimentSpec, LoadPoint, PolicyVariant, Runner,
@@ -272,6 +280,91 @@ fn zero_flip_rates_are_byte_identical_to_the_static_slowdown_scenario() {
     assert_eq!(
         zero_csv, static_csv,
         "rate (0,0) flips must be indistinguishable from the static scenario"
+    );
+}
+
+/// The PR-10 tentpole bar: with machines crashing and recovering mid-run
+/// (killed resident copies, stranded-ledger settlement, restart-from-zero
+/// relaunches draining ahead of fired slots), every combination of
+/// {wakeup planner, polled loop} x {sched-index, naive scan} x
+/// {calendar, binary-heap} serializes the byte-identical sweep CSV —
+/// including the appended loss columns — and the worker count doesn't
+/// leak into the bytes either.
+#[test]
+fn churn_sweeps_byte_identical_across_backend_wakeup_index_and_threads() {
+    let mut spec = equivalence_spec(
+        "churn",
+        ClusterScenario::homogeneous(),
+        vec![LoadPoint::lambda(0.5)],
+        2,
+    );
+    spec.base.churn = Some(ChurnConfig::new(40.0, 10.0));
+    let run = |queue: EventQueueKind, wakeup: bool, sched_index: bool, threads: usize| {
+        let mut s = spec.clone();
+        s.base.event_queue = queue;
+        s.base.wakeup = wakeup;
+        s.base.sched_index = sched_index;
+        s.threads = threads;
+        report::sweep_csv(&Runner::run(&s).unwrap())
+    };
+    let reference = run(EventQueueKind::Calendar, true, true, 2);
+    assert!(reference.lines().count() > spec.policies.len(), "empty churn sweep?");
+    let header = reference.lines().next().unwrap();
+    assert!(
+        header.ends_with("machines_failed,copies_lost,work_lost"),
+        "churn-enabled sweeps must serialize the loss columns: {header}"
+    );
+    // the fault model must actually bite for the matrix to mean anything
+    let sweep = Runner::run(&spec).unwrap();
+    let total_lost: u64 =
+        (0..sweep.policies.len()).map(|pi| sweep.merged(pi, 0).copies_lost).sum();
+    assert!(total_lost > 0, "MTTF 40 over horizon 100 must kill running copies");
+    for queue in [EventQueueKind::Calendar, EventQueueKind::BinaryHeap] {
+        for wakeup in [true, false] {
+            for sched_index in [true, false] {
+                if queue == EventQueueKind::Calendar && wakeup && sched_index {
+                    continue; // the reference itself
+                }
+                assert_eq!(
+                    run(queue, wakeup, sched_index, 2),
+                    reference,
+                    "{queue:?} wakeup={wakeup} sched_index={sched_index} diverged \
+                     from the calendar/planner/index reference under churn"
+                );
+            }
+        }
+    }
+    for threads in [1, 4] {
+        assert_eq!(
+            run(EventQueueKind::BinaryHeap, false, false, threads),
+            reference,
+            "worker count {threads} leaked into the churn sweep bytes"
+        );
+    }
+}
+
+/// Zero-rate churn must be *exactly* the no-churn run: the churn machinery
+/// (dedicated seed stream, primary-copy column, relaunch backlog) may not
+/// perturb a run in which no machine ever fails — and the CSV keeps the
+/// pre-churn column set, which is what keeps the committed canonical
+/// snapshot valid across the churn PR.
+#[test]
+fn zero_rate_churn_is_byte_identical_to_the_no_churn_sweep() {
+    let loads = vec![LoadPoint::lambda(0.5)];
+    let plain =
+        equivalence_spec("no-churn", ClusterScenario::homogeneous(), loads.clone(), 2);
+    let mut zero = equivalence_spec("zero-churn", ClusterScenario::homogeneous(), loads, 2);
+    zero.base.churn = Some(ChurnConfig::new(0.0, 0.0));
+    let plain_csv = report::sweep_csv(&Runner::run(&plain).unwrap());
+    let zero_csv = report::sweep_csv(&Runner::run(&zero).unwrap());
+    assert!(plain_csv.lines().count() > plain.policies.len());
+    assert!(
+        !plain_csv.lines().next().unwrap().contains("copies_lost"),
+        "disabled churn keeps the pre-churn column set"
+    );
+    assert_eq!(
+        zero_csv, plain_csv,
+        "churn (0,0) must be indistinguishable from no churn, byte for byte"
     );
 }
 

@@ -1,20 +1,35 @@
 //! Integration tests for the sharded serve plane (DESIGN.md §15):
 //! overload shedding under each routing policy, whole-deployment
-//! determinism, and bitwise 1-shard parity with the plain `Master`.
+//! determinism, and bitwise 1-shard parity with the plain `Master` —
+//! plus the self-healing supervisor (DESIGN.md §17): crashed shards
+//! respawn and replay their in-flight ledger, down shards are excluded
+//! from routing until recovery, and exhausted budgets / shed watermarks
+//! yield structured `Shed` verdicts instead of errors or hangs.
 //!
 //! Every test uses the long-tick trick: with an hour-long tick no slot
 //! boundary fires while submissions stream in, so the per-shard
 //! `queued_tasks` gauge stays frozen, admission is a pure function of the
 //! submission order, and the post-shutdown drain runs at full CPU.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use specsim::config::{RoutePolicy, ServeConfig, SimConfig};
 use specsim::coordinator::backpressure::Backpressure;
-use specsim::coordinator::master::{Master, Submission};
-use specsim::coordinator::shard::ShardedMaster;
+use specsim::coordinator::master::{Master, Submission, SubmitResult};
+use specsim::coordinator::shard::{ShardedHandle, ShardedMaster};
 use specsim::scheduler::SchedulerKind;
 use specsim::stats::Pcg64;
+
+/// Crash shard `shard` and wait for its liveness flag to drop (the crash
+/// message is asynchronous).
+fn crash_and_wait(handle: &ShardedHandle, shard: usize) {
+    handle.inject_crash(shard).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while handle.shard_alive(shard) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(!handle.shard_alive(shard), "shard {shard} never died");
+}
 
 fn base_cfg(machines: usize) -> SimConfig {
     let mut cfg = SimConfig::default();
@@ -108,6 +123,131 @@ fn same_seed_and_policy_replays_identical_shard_decisions() {
              accept/reject sequence"
         );
     }
+}
+
+/// The headline fault-tolerance bar: a batch that lands on a crashed
+/// master is not lost — the supervisor respawns the shard, replays the
+/// in-flight ledger, and every submission is accepted and completes.
+#[test]
+fn crashed_shard_restarts_and_replays_the_inflight_ledger() {
+    let mut sm = ShardedMaster::new(base_cfg(16), ServeConfig::default());
+    sm.tick = Duration::from_micros(200);
+    let handle = sm.spawn().unwrap();
+    crash_and_wait(&handle, 0);
+    assert_eq!(handle.metrics(0).counter("master_panics").get(), 1);
+    // the next routed batch hits the corpse: the supervisor must respawn
+    // the shard and replay the ledger, never surfacing the crash
+    let subs: Vec<Submission> = (0..20)
+        .map(|_| Submission { num_tasks: 5, mean_duration: 1.0, alpha: 2.0 })
+        .collect();
+    let results = handle.submit_batch(&subs).unwrap();
+    assert_eq!(results.len(), 20);
+    assert!(
+        results.iter().all(|(_, r)| r.is_accepted()),
+        "the replayed ledger must be admitted in full: {results:?}"
+    );
+    assert!(handle.shard_alive(0), "the supervisor must have respawned the shard");
+    assert_eq!(handle.restarts(0), 1);
+    assert_eq!(handle.metrics(0).counter("master_restarts").get(), 1);
+    let rep = handle.shutdown().unwrap();
+    assert_eq!(rep.panicked(), 0, "the respawned shard drains cleanly");
+    assert_eq!(rep.completed(), 20, "no accepted submission is lost to the crash");
+}
+
+/// Routing degrades gracefully around a dead shard: picks that would land
+/// on it divert to live shards (no shed, no error), and the shard is only
+/// resurrected when the delivery path actually needs it — after which it
+/// is re-included in the picks.
+#[test]
+fn down_shard_is_excluded_from_routing_and_recovery_reincludes_it() {
+    let mut sm = ShardedMaster::new(
+        base_cfg(32),
+        ServeConfig { shards: 2, ..Default::default() },
+    );
+    sm.tick = Duration::from_secs(3600);
+    sm.drain_slots = 50;
+    let handle = sm.spawn().unwrap();
+    // identical submissions pin one shard under hash routing
+    let results = handle.submit_batch(&vec![same_sub(); 10]).unwrap();
+    let hot = results[0].0;
+    assert!(results.iter().all(|&(s, r)| s == hot && r.is_accepted()));
+    let cold = 1 - hot;
+
+    crash_and_wait(&handle, hot);
+    let diverted = handle.submit_batch(&vec![same_sub(); 10]).unwrap();
+    assert!(
+        diverted.iter().all(|&(s, r)| s == cold && r.is_accepted()),
+        "picks must probe past the dead shard to the live one: {diverted:?}"
+    );
+    assert_eq!(handle.restarts(hot), 0, "an excluded shard is not restarted");
+
+    // with *every* shard down the router falls back to the raw pick, which
+    // forces the supervisor to resurrect that shard and replay the batch
+    crash_and_wait(&handle, cold);
+    let (shard, result) = handle.submit(same_sub()).unwrap();
+    assert_eq!(shard, hot, "the raw hash pick is the restart target");
+    assert!(result.is_accepted(), "the resurrected shard admits the replay");
+    assert!(handle.shard_alive(hot));
+    assert_eq!(handle.restarts(hot), 1);
+    // recovery re-includes the shard: the same shape routes to it again
+    let again = handle.submit_batch(&vec![same_sub(); 5]).unwrap();
+    assert!(
+        again.iter().all(|&(s, r)| s == hot && r.is_accepted()),
+        "a recovered shard takes its hash traffic back: {again:?}"
+    );
+    let rep = handle.shutdown().unwrap();
+    assert_eq!(rep.panicked(), 1, "only the still-dead cold shard is a tombstone");
+}
+
+/// Exhausting the restart budget sheds the in-flight ledger with one
+/// structured verdict per submission — never an `Err`, never a hang.
+#[test]
+fn exhausted_restart_budget_sheds_the_ledger_with_structured_rejects() {
+    let mut sm = ShardedMaster::new(base_cfg(8), ServeConfig::default());
+    sm.tick = Duration::from_secs(3600);
+    sm.drain_slots = 50;
+    sm.max_restarts = 0;
+    let handle = sm.spawn().unwrap();
+    crash_and_wait(&handle, 0);
+    let results = handle.submit_batch(&vec![same_sub(); 7]).unwrap();
+    assert_eq!(results.len(), 7);
+    assert!(
+        results.iter().all(|&(_, r)| r == SubmitResult::Shed),
+        "an abandoned shard sheds, it does not error: {results:?}"
+    );
+    assert_eq!(handle.metrics(0).counter("jobs_shed").get(), 7);
+    assert!(!handle.shard_alive(0));
+    let rep = handle.shutdown().unwrap();
+    assert_eq!(rep.panicked(), 1, "the abandoned shard reports a tombstone");
+    assert_eq!(rep.completed(), 0);
+}
+
+/// The shed watermark is a front-door fast path: a shard whose backlog
+/// gauge reads past it sheds instantly (no channel round trip), and
+/// dropping back below the mark restores normal admission.
+#[test]
+fn shed_watermark_sheds_past_the_mark_and_readmits_below_it() {
+    let mut sm = ShardedMaster::new(base_cfg(8), ServeConfig::default());
+    sm.tick = Duration::from_secs(3600);
+    sm.drain_slots = 50;
+    sm.shed_watermark = Some(100);
+    let handle = sm.spawn().unwrap();
+    // freeze the backlog gauge above the mark (the long tick means the
+    // master never rewrites it mid-test)
+    handle.metrics(0).gauge("queued_tasks").set(1000);
+    let results = handle.submit_batch(&vec![same_sub(); 5]).unwrap();
+    assert!(
+        results.iter().all(|&(_, r)| r == SubmitResult::Shed),
+        "overload must shed with a structured verdict: {results:?}"
+    );
+    assert_eq!(handle.metrics(0).counter("jobs_shed").get(), 5);
+    handle.metrics(0).gauge("queued_tasks").set(0);
+    let results = handle.submit_batch(&vec![same_sub(); 3]).unwrap();
+    assert!(
+        results.iter().all(|(_, r)| r.is_accepted()),
+        "below the mark the front door reopens: {results:?}"
+    );
+    let _ = handle.shutdown();
 }
 
 #[test]
